@@ -1,0 +1,89 @@
+//! The Fig. 7 optimisation framework, end to end:
+//!
+//! 1. measure per-block shift scores over real denoising trajectories
+//!    (Eq. 1) with the calib artifact,
+//! 2. find the phase transition D* (Eq. 2) and the outlier blocks,
+//! 3. enumerate PAS configurations under user constraints ranked by
+//!    Eq. 3 MAC reduction,
+//! 4. validate the top candidates by generating and scoring the latent
+//!    PSNR proxy against full sampling.
+//!
+//! Writes artifacts/calibration.json (consumed by bench_fig4).
+//!
+//! Run: `make artifacts && cargo run --release --example calibrate_and_search`
+//! Env: SD_ACC_CALIB_STEPS (default 25), SD_ACC_CALIB_PROMPTS (default 2).
+
+use sd_acc::coordinator::Coordinator;
+use sd_acc::models::inventory::sd_tiny;
+use sd_acc::pas::calibrate::Calibrator;
+use sd_acc::pas::cost::CostModel;
+use sd_acc::pas::search::{SearchConstraints, Searcher};
+use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+use sd_acc::util::table::{f, ratio, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("no artifacts at {} — run `make artifacts` first", dir.display());
+    }
+    let steps: usize = std::env::var("SD_ACC_CALIB_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(25);
+    let n_prompts: usize = std::env::var("SD_ACC_CALIB_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+
+    let svc = RuntimeService::start(&dir)?;
+    let coord = Coordinator::new(svc.handle());
+
+    // Step 1+2: calibration (5%-style prompt subset, Sec. III-C).
+    let prompts: Vec<String> = [
+        "red circle x4 y4 blue square x11 y11",
+        "green stripe x8 y8",
+        "yellow circle x12 y3 magenta square x5 y10",
+    ]
+    .iter()
+    .take(n_prompts)
+    .map(|s| s.to_string())
+    .collect();
+    println!("calibrating on {} prompts x {steps} steps (complete U-Net trajectories)...", prompts.len());
+    let report = Calibrator::new(&coord).run(&prompts, steps, 7.5)?;
+    std::fs::write(dir.join("calibration.json"), report.to_json().to_string())?;
+    println!("D* = {} / {steps}   outlier blocks = {:?}", report.d_star, report.outliers);
+    println!("(full curves: cargo bench --bench bench_fig4_shift_scores)");
+
+    // Step 3: enumerate + rank under constraints.
+    let cons = SearchConstraints {
+        total_steps: steps,
+        min_mac_reduction: 1.6,
+        min_psnr_db: Some(13.0),
+        max_validate: 3,
+    };
+    println!(
+        "\nsearching: steps={}, min MAC reduction {:.1}x, min PSNR {:?} dB",
+        cons.total_steps, cons.min_mac_reduction, cons.min_psnr_db
+    );
+    let searcher = Searcher { coord: &coord, cost: CostModel::new(&sd_tiny()) };
+    let cands = searcher.search(&report, &cons, &prompts[..1.min(prompts.len())])?;
+
+    let mut t = Table::new(&["rank", "config", "MAC red.", "latent PSNR (dB)", "validated"]);
+    for (i, c) in cands.iter().take(8).enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            format!(
+                "T_sk={} T_cm={} T_sp={} L_sk={} L_rf={}",
+                c.cfg.t_sketch, c.cfg.t_complete, c.cfg.t_sparse, c.cfg.l_sketch, c.cfg.l_refine
+            ),
+            ratio(c.mac_reduction),
+            c.psnr_db.map(|p| f(p, 1)).unwrap_or_else(|| "-".into()),
+            if c.validated { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t.print();
+    if let Some(best) = cands.first() {
+        println!(
+            "\nselected solution: {} with {:.2}x MAC reduction (Fig. 7 output)",
+            best.cfg.label(),
+            best.mac_reduction
+        );
+    } else {
+        println!("\nno feasible solution — relax the constraints");
+    }
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! End-to-end serving driver (DESIGN.md's E2E validation run).
+//!
+//! Starts the full stack — PJRT runtime thread, coordinator, dynamic
+//! batcher, worker fleet — and pushes a synthetic prompt workload through
+//! it with a mix of original and phase-aware sampling requests. Reports
+//! latency percentiles, throughput, mean batch size, and the PAS quality
+//! proxy, and appends a JSON record consumed by EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! Env: SD_ACC_E2E_REQS (default 12), SD_ACC_E2E_STEPS (default 20).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::pas::plan::{PasConfig, SamplingPlan};
+use sd_acc::quality;
+use sd_acc::runtime::{default_artifacts_dir, Runtime, RuntimeService};
+use sd_acc::server::{Server, ServerConfig};
+use sd_acc::util::json::Json;
+use sd_acc::util::rng::Pcg32;
+use sd_acc::util::stats;
+
+const COLORS: [&str; 6] = ["red", "green", "blue", "yellow", "cyan", "magenta"];
+const SHAPES: [&str; 3] = ["circle", "square", "stripe"];
+
+fn synth_prompt(rng: &mut Pcg32) -> String {
+    let n = rng.gen_range(1, 2) as usize + 1;
+    (0..n)
+        .map(|_| {
+            format!(
+                "{} {} x{} y{}",
+                rng.choose(&COLORS),
+                rng.choose(&SHAPES),
+                rng.gen_range(2, 13),
+                rng.gen_range(2, 13)
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("no artifacts at {} — run `make artifacts` first", dir.display());
+    }
+    let n_reqs: usize = std::env::var("SD_ACC_E2E_REQS").ok().and_then(|v| v.parse().ok()).unwrap_or(12);
+    let steps: usize = std::env::var("SD_ACC_E2E_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+
+    let svc = RuntimeService::start(&dir)?;
+    // Warm the executable cache so serving latency excludes compiles.
+    let warm = [
+        Runtime::unet_full(1),
+        Runtime::unet_full(2),
+        Runtime::unet_partial(2, 1),
+        Runtime::unet_partial(2, 2),
+        Runtime::text_encoder(1),
+        Runtime::text_encoder(2),
+    ];
+    print!("compiling {} artifacts... ", warm.len());
+    let t0 = Instant::now();
+    svc.handle().preload(&warm)?;
+    println!("done in {:.1}s", t0.elapsed().as_secs_f64());
+
+    let coord = Arc::new(Coordinator::new(svc.handle()));
+    // One worker: PJRT submissions are serialised on the runtime thread
+    // anyway (runtime/service.rs), so a single worker gives clean
+    // per-plan latency numbers while batching still packs same-plan
+    // requests together.
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig { workers: 1, max_wait: Duration::from_millis(40) },
+    );
+    let client = server.client();
+
+    let mut rng = Pcg32::seeded(2026);
+    let pas = PasConfig { t_sketch: steps / 2, t_complete: 3, t_sparse: 4, l_sketch: 2, l_refine: 2 };
+
+    println!("submitting {n_reqs} requests ({steps} steps each, 50% PAS)...");
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_reqs {
+        let mut r = GenRequest::new(&synth_prompt(&mut rng), 4000 + i as u64);
+        r.steps = steps;
+        r.sampler = "pndm".into();
+        if i % 2 == 1 {
+            r.plan = SamplingPlan::Pas(pas);
+        }
+        rxs.push((r.clone(), client.submit(r)));
+    }
+
+    let mut lat_full = Vec::new();
+    let mut lat_pas = Vec::new();
+    let mut results = Vec::new();
+    for (req, rx) in rxs {
+        let res = rx.recv()??;
+        match req.plan {
+            SamplingPlan::Full => lat_full.push(res.stats.total_ms),
+            SamplingPlan::Pas(_) => lat_pas.push(res.stats.total_ms),
+        }
+        results.push((req, res));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics.summary();
+
+    println!("\n== serving report ==");
+    println!("completed {} requests in {:.1}s  ({:.2} img/min)", m.completed, wall, m.completed as f64 / wall * 60.0);
+    println!("queue+exec latency: p50 {:.0} ms, p95 {:.0} ms, mean {:.0} ms", m.p50_ms, m.p95_ms, m.mean_ms);
+    println!("mean executed batch size: {:.2}", m.mean_batch_size);
+    println!("mean generation ms: full {:.0}, PAS {:.0} ({:.2}x step-time reduction)",
+        stats::mean(&lat_full), stats::mean(&lat_pas), stats::mean(&lat_full) / stats::mean(&lat_pas).max(1.0));
+
+    // PAS quality proxy vs a matched full run for one sampled request.
+    let (req_pas, res_pas) = results.iter().find(|(r, _)| matches!(r.plan, SamplingPlan::Pas(_))).unwrap();
+    let mut matched = req_pas.clone();
+    matched.plan = SamplingPlan::Full;
+    let reference = coord.generate_one(&matched)?;
+    let psnr = quality::latent_psnr(&res_pas.latent, &reference.latent);
+    println!("PAS latent PSNR vs matched full run: {:.1} dB (MAC reduction {:.2}x)",
+        psnr, res_pas.stats.mac_reduction);
+
+    let record = Json::obj(vec![
+        ("requests", Json::num(n_reqs as f64)),
+        ("steps", Json::num(steps as f64)),
+        ("wall_s", Json::num(wall)),
+        ("throughput_img_per_min", Json::num(m.completed as f64 / wall * 60.0)),
+        ("p50_ms", Json::num(m.p50_ms)),
+        ("p95_ms", Json::num(m.p95_ms)),
+        ("mean_batch", Json::num(m.mean_batch_size)),
+        ("full_ms", Json::num(stats::mean(&lat_full))),
+        ("pas_ms", Json::num(stats::mean(&lat_pas))),
+        ("pas_psnr_db", Json::num(psnr)),
+        ("pas_mac_reduction", Json::num(res_pas.stats.mac_reduction)),
+    ]);
+    std::fs::write("e2e_serving_report.json", record.to_string())?;
+    println!("\nwrote e2e_serving_report.json");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: generate an image with the original sampler and with
+//! phase-aware sampling, compare cost + quality, save PPM images.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::pas::plan::{PasConfig, SamplingPlan};
+use sd_acc::quality;
+use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("no artifacts at {} — run `make artifacts` first", dir.display());
+    }
+    let svc = RuntimeService::start(&dir)?;
+    // Compile ahead of time so the reported step times are steady-state.
+    println!("compiling artifacts (one-time)...");
+    svc.handle().preload(&[
+        sd_acc::runtime::Runtime::text_encoder(1),
+        sd_acc::runtime::Runtime::unet_full(1),
+        sd_acc::runtime::Runtime::unet_partial(2, 1),
+        sd_acc::runtime::Runtime::vae_decoder(1),
+    ])?;
+    let coord = Coordinator::new(svc.handle());
+    let m = coord.runtime().manifest().model.clone();
+
+    let prompt = "red circle x4 y4 blue square x11 y11";
+    let steps = 30;
+    println!("prompt: {prompt:?}, {steps} steps, PNDM, guidance {}", m.guidance);
+
+    // Original sampling.
+    let mut req = GenRequest::new(prompt, 42);
+    req.steps = steps;
+    let full = coord.generate_one(&req)?;
+    println!(
+        "original : {:7.0} ms total, {:5.1} ms/step, MAC reduction {:.2}x",
+        full.stats.total_ms,
+        full.stats.total_ms / steps as f64,
+        full.stats.mac_reduction
+    );
+
+    // Phase-aware sampling.
+    let pas = PasConfig { t_sketch: steps / 2, t_complete: 3, t_sparse: 4, l_sketch: 2, l_refine: 2 };
+    req.plan = SamplingPlan::Pas(pas);
+    let fast = coord.generate_one(&req)?;
+    let psnr = quality::latent_psnr(&fast.latent, &full.latent);
+    println!(
+        "PAS      : {:7.0} ms total, {:5.1} ms/step avg, MAC reduction {:.2}x, latent PSNR {:.1} dB vs original",
+        fast.stats.total_ms,
+        fast.stats.total_ms / steps as f64,
+        fast.stats.mac_reduction,
+        psnr
+    );
+    println!(
+        "wall-clock speedup: {:.2}x",
+        full.stats.total_ms / fast.stats.total_ms
+    );
+
+    // Decode + save both.
+    let imgs = coord.decode(&[full.latent, fast.latent])?;
+    quality::write_ppm(&imgs[0], m.img_h, m.img_w, Path::new("quickstart_original.ppm"))?;
+    quality::write_ppm(&imgs[1], m.img_h, m.img_w, Path::new("quickstart_pas.ppm"))?;
+    println!("wrote quickstart_original.ppm / quickstart_pas.ppm ({}x{})", m.img_w, m.img_h);
+    Ok(())
+}

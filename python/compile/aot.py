@@ -1,0 +1,216 @@
+"""AOT pipeline: lower the L2 model (Pallas backend) to HLO-text artifacts.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  unet_full_b{B}.hlo.txt       (lat, t, ctx, g)        -> (eps, cache_l1..l3)
+  unet_partial_l{l}_b{B}.hlo.txt (lat, t, ctx, g, cache) -> eps
+  unet_calib_b{B}.hlo.txt      (lat, t, ctx, g)        -> (eps, up_in_1..12)
+  text_encoder_b{B}.hlo.txt    (tokens)                -> ctx
+  vae_decoder_b{B}.hlo.txt     (lat)                   -> img
+  weights_{unet,text,vae}.bin  raw little-endian f32 in lowering order
+  manifest.json                shapes, param tables, vocab, schedule
+  train_log.json               training loss curves (from compile.train)
+
+Weights are *parameters* of every artifact (never baked constants), so the
+rust runtime owns them: it loads each .bin once, builds PJRT literals, and
+prepends them to every execute call.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model as M, train
+from .backends import PALLAS
+from .config import BATCH_SIZES, CFG, DEFAULT_GUIDANCE
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_of(s):
+    return {"shape": list(s.shape), "dtype": "i32" if s.dtype == jnp.int32 else "f32"}
+
+
+def write_weights(params, path: str):
+    """Raw little-endian f32 blob in jax lowering (tree) order + table."""
+    flat = train.flatten_params(params)
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name, leaf in flat:
+            raw = leaf.astype("<f4").tobytes()
+            table.append({
+                "name": name,
+                "shape": list(leaf.shape),
+                "offset": offset,
+                "len": int(leaf.size),
+            })
+            f.write(raw)
+            offset += len(raw)
+    return table
+
+
+def lower_artifact(out_dir, name, fn, params, input_specs, manifest_entry):
+    """Lower fn(params, *inputs) and write <name>.hlo.txt."""
+    # keep_unused=True: partial-U-Net artifacts use only a subset of the
+    # parameter pytree, but every artifact must accept the SAME weight list
+    # so the rust runtime can prepend one cached literal set uniformly.
+    lowered = jax.jit(fn, keep_unused=True).lower(
+        params, *[spec(s, d) for s, d in input_specs]
+    )
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest_entry["artifacts"].append({
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "n_params": len(jax.tree_util.tree_leaves(params)),
+        "inputs": [
+            {"shape": list(s), "dtype": "i32" if d == I32 else "f32"}
+            for s, d in input_specs
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    })
+    print(f"[aot] {name}: {len(text)} chars")
+
+
+def ensure_trained(out_dir: str):
+    """Train (or reuse) parameters; returns (unet, text, vae) pytrees."""
+    key = jax.random.PRNGKey(CFG.seed)
+    ku, kt, kv = jax.random.split(key, 3)
+    unet_t = M.init_unet_params(ku)
+    text_t = M.init_text_params(kt)
+    vae_t = M.init_vae_params(kv)
+    paths = {n: os.path.join(out_dir, f"params_{n}.npz") for n in ("unet", "text", "vae")}
+    if not all(os.path.exists(p) for p in paths.values()):
+        if os.environ.get("SD_ACC_SKIP_TRAIN") == "1":
+            print("[aot] SD_ACC_SKIP_TRAIN=1 — using untrained parameters")
+            train.save_params(unet_t, paths["unet"])
+            train.save_params(text_t, paths["text"])
+            train.save_params(vae_t, paths["vae"])
+            with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+                json.dump({"unet": [], "vae": [], "unet_steps": 0, "vae_steps": 0}, f)
+        else:
+            train.main(out_dir)
+    return (
+        train.load_params(unet_t, paths["unet"]),
+        train.load_params(text_t, paths["text"]),
+        train.load_params(vae_t, paths["vae"]),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    unet_p, text_p, vae_p = ensure_trained(out_dir)
+
+    manifest = {
+        "model": {
+            "latent_h": CFG.latent_h,
+            "latent_w": CFG.latent_w,
+            "latent_c": CFG.latent_c,
+            "channels": list(CFG.channels),
+            "ctx_len": CFG.ctx_len,
+            "ctx_dim": CFG.ctx_dim,
+            "img_h": CFG.img_h,
+            "img_w": CFG.img_w,
+            "max_cut": CFG.max_cut,
+            "train_steps": CFG.train_steps,
+            "beta_start": CFG.beta_start,
+            "beta_end": CFG.beta_end,
+            "guidance": DEFAULT_GUIDANCE,
+            "seed": CFG.seed,
+        },
+        "batch_sizes": list(BATCH_SIZES),
+        "vocab": data.VOCAB,
+        "alpha_bar": [float(x) for x in train.diffusion_schedule()],
+        "weights": {},
+        "artifacts": [],
+    }
+
+    manifest["weights"]["unet"] = {
+        "file": "weights_unet.bin",
+        "table": write_weights(unet_p, os.path.join(out_dir, "weights_unet.bin")),
+    }
+    manifest["weights"]["text"] = {
+        "file": "weights_text.bin",
+        "table": write_weights(text_p, os.path.join(out_dir, "weights_text.bin")),
+    }
+    manifest["weights"]["vae"] = {
+        "file": "weights_vae.bin",
+        "table": write_weights(vae_p, os.path.join(out_dir, "weights_vae.bin")),
+    }
+
+    l_lat = CFG.latent_l
+    for b in BATCH_SIZES:
+        lat = ((b, l_lat, CFG.latent_c), F32)
+        t = ((b,), F32)
+        ctx = ((b, CFG.ctx_len, CFG.ctx_dim), F32)
+        g = ((), F32)
+        cache = ((2 * b, l_lat, CFG.channels[0]), F32)
+
+        lower_artifact(
+            out_dir, f"unet_full_b{b}",
+            lambda p, la, tt, cc, gg: M.unet_full(PALLAS, p, la, tt, cc, gg),
+            unet_p, [lat, t, ctx, g], manifest,
+        )
+        for l in range(1, CFG.max_cut + 1):
+            lower_artifact(
+                out_dir, f"unet_partial_l{l}_b{b}",
+                (lambda l_: lambda p, la, tt, cc, gg, ca:
+                    M.unet_partial(PALLAS, p, l_, la, tt, cc, gg, ca))(l),
+                unet_p, [lat, t, ctx, g, cache], manifest,
+            )
+        lower_artifact(
+            out_dir, f"unet_calib_b{b}",
+            lambda p, la, tt, cc, gg: M.unet_calib(PALLAS, p, la, tt, cc, gg),
+            unet_p, [lat, t, ctx, g], manifest,
+        )
+        lower_artifact(
+            out_dir, f"text_encoder_b{b}",
+            lambda p, tk: (M.text_encoder(PALLAS, p, tk),),
+            text_p, [((b, CFG.ctx_len), I32)], manifest,
+        )
+        lower_artifact(
+            out_dir, f"vae_decoder_b{b}",
+            lambda p, la: (M.vae_decoder(PALLAS, p, la),),
+            vae_p, [lat], manifest,
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    print(f"[aot] manifest + {len(manifest['artifacts'])} artifacts -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

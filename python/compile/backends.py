@@ -1,0 +1,87 @@
+"""Op backends for the L2 model.
+
+The same model code runs on two interchangeable op sets:
+
+- ``PALLAS``: the L1 Pallas kernels (interpret mode). Used by aot.py so the
+  kernels lower into the exported HLO.
+- ``REF``: the pure-jnp oracles from kernels/ref.py. Used by train.py
+  (fast jnp training) and by tests as the independent reference.
+
+python/tests/test_model.py asserts the two backends agree on the full
+U-Net forward pass, which transitively validates every kernel in context.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import mha as _pallas_mha
+from .kernels.elementwise import gelu as _pallas_gelu, silu as _pallas_silu
+from .kernels.norms import groupnorm as _pallas_gn, layernorm as _pallas_ln
+from .kernels.uni_conv import uni_conv as _pallas_conv
+
+
+class PallasOps:
+    """L1 Pallas kernels (lowered into the AOT artifacts)."""
+
+    name = "pallas"
+
+    @staticmethod
+    def conv(x, w, b, h, w_dim, stride=1):
+        return _pallas_conv(x, w, b, h=h, w_dim=w_dim, stride=stride)
+
+    @staticmethod
+    def mha(q, k, v):
+        return _pallas_mha(q, k, v)
+
+    @staticmethod
+    def layernorm(x, g, b):
+        return _pallas_ln(x, g, b)
+
+    @staticmethod
+    def groupnorm(x, g, b, groups):
+        return _pallas_gn(x, g, b, groups=groups)
+
+    @staticmethod
+    def gelu(x):
+        return _pallas_gelu(x)
+
+    @staticmethod
+    def silu(x):
+        return _pallas_silu(x)
+
+
+class RefOps:
+    """Pure-jnp oracle ops (training + independent reference)."""
+
+    name = "ref"
+
+    @staticmethod
+    def conv(x, w, b, h, w_dim, stride=1):
+        return ref.conv2d_same(x, w, b, h, w_dim, stride)
+
+    @staticmethod
+    def mha(q, k, v):
+        return jax.vmap(ref.attention)(q, k, v)
+
+    @staticmethod
+    def layernorm(x, g, b):
+        return ref.layernorm(x, g, b)
+
+    @staticmethod
+    def groupnorm(x, g, b, groups):
+        return ref.groupnorm(x, g, b, groups)
+
+    @staticmethod
+    def gelu(x):
+        return ref.gelu_sigmoid(x)
+
+    @staticmethod
+    def silu(x):
+        return ref.silu(x)
+
+
+PALLAS = PallasOps()
+REF = RefOps()

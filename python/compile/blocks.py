@@ -1,0 +1,201 @@
+"""U-Net building blocks (L2), written against an op backend (backends.py).
+
+Everything operates in the paper's address-centric storage format: a
+sample's activation is ``(L, C)`` with ``L = h * w`` (Sec. IV-B). Spatial
+sizes travel alongside as python ints, so downsample/upsample blocks are
+pure metadata changes plus a strided uni_conv / nearest repeat.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import CFG
+
+
+# ----------------------------------------------------------------- helpers
+
+
+def _init_linear(key, cin, cout, scale=1.0):
+    w = jax.random.normal(key, (cin, cout), jnp.float32) * (scale / cin**0.5)
+    return w
+
+
+def _init_conv(key, k, cin, cout, scale=1.0):
+    fan = k * k * cin
+    return jax.random.normal(key, (k * k, cin, cout), jnp.float32) * (scale / fan**0.5)
+
+
+def _keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------- time embedding
+
+
+def sinusoidal_embedding(t, dim: int):
+    """Sinusoidal timestep embedding. t: scalar f32 -> (dim,)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t * freqs
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)])
+
+
+def init_temb(key):
+    k1, k2 = _keys(key, 2)
+    return {
+        "w1": _init_linear(k1, CFG.time_dim, CFG.temb_dim),
+        "b1": jnp.zeros((CFG.temb_dim,)),
+        "w2": _init_linear(k2, CFG.temb_dim, CFG.temb_dim),
+        "b2": jnp.zeros((CFG.temb_dim,)),
+    }
+
+
+def apply_temb(ops, p, t):
+    """t: scalar raw timestep -> (temb_dim,)."""
+    e = sinusoidal_embedding(t, CFG.time_dim)
+    e = (e @ p["w1"] + p["b1"])[None, :]
+    e = ops.silu(e)
+    e = e @ p["w2"] + p["b2"]
+    return e[0]
+
+
+# ------------------------------------------------------------ resnet block
+
+
+def init_resnet(key, cin, cout):
+    ks = _keys(key, 4)
+    p = {
+        "gn1_g": jnp.ones((cin,)),
+        "gn1_b": jnp.zeros((cin,)),
+        "conv1_w": _init_conv(ks[0], 3, cin, cout),
+        "conv1_b": jnp.zeros((cout,)),
+        "temb_w": _init_linear(ks[1], CFG.temb_dim, cout),
+        "temb_b": jnp.zeros((cout,)),
+        "gn2_g": jnp.ones((cout,)),
+        "gn2_b": jnp.zeros((cout,)),
+        # Near-zero-init second conv: residual blocks start close to
+        # identity, the standard DDPM/SD initialisation.
+        "conv2_w": _init_conv(ks[2], 3, cout, cout, scale=1e-2),
+        "conv2_b": jnp.zeros((cout,)),
+    }
+    if cin != cout:
+        p["skip_w"] = _init_conv(ks[3], 1, cin, cout)
+        p["skip_b"] = jnp.zeros((cout,))
+    return p
+
+
+def apply_resnet(ops, p, x, temb, h, w):
+    """x: (L, cin) -> (L, cout). 3x3 convs via uni_conv, GN via Eq. 4."""
+    y = ops.groupnorm(x, p["gn1_g"], p["gn1_b"], CFG.groups)
+    y = ops.silu(y)
+    y = ops.conv(y, p["conv1_w"], p["conv1_b"], h, w)
+    y = y + (ops.silu((temb @ p["temb_w"] + p["temb_b"])[None, :]))
+    y = ops.groupnorm(y, p["gn2_g"], p["gn2_b"], CFG.groups)
+    y = ops.silu(y)
+    y = ops.conv(y, p["conv2_w"], p["conv2_b"], h, w)
+    if "skip_w" in p:
+        x = ops.conv(x, p["skip_w"], p["skip_b"], h, w)
+    return x + y
+
+
+# ------------------------------------------------------- transformer block
+
+
+def init_transformer(key, c):
+    ks = _keys(key, 12)
+    return {
+        "gn_g": jnp.ones((c,)),
+        "gn_b": jnp.zeros((c,)),
+        "proj_in_w": _init_conv(ks[0], 1, c, c),
+        "proj_in_b": jnp.zeros((c,)),
+        "ln1_g": jnp.ones((c,)),
+        "ln1_b": jnp.zeros((c,)),
+        "q_w": _init_linear(ks[1], c, c),
+        "k_w": _init_linear(ks[2], c, c),
+        "v_w": _init_linear(ks[3], c, c),
+        "o_w": _init_linear(ks[4], c, c, scale=1e-2),
+        "o_b": jnp.zeros((c,)),
+        "ln2_g": jnp.ones((c,)),
+        "ln2_b": jnp.zeros((c,)),
+        "cq_w": _init_linear(ks[5], c, c),
+        "ck_w": _init_linear(ks[6], CFG.ctx_dim, c),
+        "cv_w": _init_linear(ks[7], CFG.ctx_dim, c),
+        "co_w": _init_linear(ks[8], c, c, scale=1e-2),
+        "co_b": jnp.zeros((c,)),
+        "ln3_g": jnp.ones((c,)),
+        "ln3_b": jnp.zeros((c,)),
+        "ff1_w": _init_linear(ks[9], c, 4 * c),
+        "ff1_b": jnp.zeros((4 * c,)),
+        "ff2_w": _init_linear(ks[10], 4 * c, c, scale=1e-2),
+        "ff2_b": jnp.zeros((c,)),
+        "proj_out_w": _init_conv(ks[11], 1, c, c, scale=1e-2),
+        "proj_out_b": jnp.zeros((c,)),
+    }
+
+
+def _split_heads(x, heads):
+    l, c = x.shape
+    return x.reshape(l, heads, c // heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    heads, l, d = x.shape
+    return x.transpose(1, 0, 2).reshape(l, heads * d)
+
+
+def apply_transformer(ops, p, x, ctx, h, w):
+    """x: (L, C), ctx: (ctx_len, ctx_dim) -> (L, C).
+
+    GN + 1x1 conv in, self-attention, text cross-attention, GELU FFN,
+    1x1 conv out, residual — the SD Transformer block (Fig. 3).
+    """
+    heads = CFG.heads
+    res = x
+    y = ops.groupnorm(x, p["gn_g"], p["gn_b"], CFG.groups)
+    y = ops.conv(y, p["proj_in_w"], p["proj_in_b"], h, w)
+
+    # Self-attention (softmax via the online Eq. 5-6 kernel).
+    z = ops.layernorm(y, p["ln1_g"], p["ln1_b"])
+    q, k, v = z @ p["q_w"], z @ p["k_w"], z @ p["v_w"]
+    a = _merge_heads(ops.mha(*(_split_heads(m, heads) for m in (q, k, v))))
+    y = y + a @ p["o_w"] + p["o_b"]
+
+    # Cross-attention over the text context.
+    z = ops.layernorm(y, p["ln2_g"], p["ln2_b"])
+    q = z @ p["cq_w"]
+    k, v = ctx @ p["ck_w"], ctx @ p["cv_w"]
+    a = _merge_heads(ops.mha(*(_split_heads(m, heads) for m in (q, k, v))))
+    y = y + a @ p["co_w"] + p["co_b"]
+
+    # Feed-forward with the paper's sigmoid-GELU.
+    z = ops.layernorm(y, p["ln3_g"], p["ln3_b"])
+    z = ops.gelu(z @ p["ff1_w"] + p["ff1_b"]) @ p["ff2_w"] + p["ff2_b"]
+    y = y + z
+
+    y = ops.conv(y, p["proj_out_w"], p["proj_out_b"], h, w)
+    return y + res
+
+
+# --------------------------------------------------------- down / upsample
+
+
+def init_downsample(key, c):
+    return {"w": _init_conv(key, 3, c, c), "b": jnp.zeros((c,))}
+
+
+def apply_downsample(ops, p, x, h, w):
+    """3x3 stride-2 conv (the paper's downsampling op)."""
+    return ops.conv(x, p["w"], p["b"], h, w, stride=2)
+
+
+def upsample_nearest(x, h, w):
+    """Nearest-neighbour 2x upsample (the paper's upsampling op).
+
+    (h*w, C) -> (2h*2w, C); pure data movement, no parameters.
+    """
+    c = x.shape[-1]
+    img = x.reshape(h, w, c)
+    img = jnp.repeat(jnp.repeat(img, 2, axis=0), 2, axis=1)
+    return img.reshape(4 * h * w, c)

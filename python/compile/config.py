@@ -1,0 +1,58 @@
+"""sd-tiny model configuration.
+
+A structurally faithful miniature of the StableDiff v1.4 U-Net (DESIGN.md
+substitution table): same 12-down / middle / 12-up block topology with
+downsamples at blocks 4/7/10 and upsamples at up-blocks 10/7/4 (Fig. 3 of
+the paper), ResNet blocks with time embedding, Transformer blocks with
+text cross-attention, scaled to a 16x16x4 latent so the whole system runs
+under Pallas interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # Latent space (VAE downsamples the 64x64 RGB image by 4x).
+    latent_h: int = 16
+    latent_w: int = 16
+    latent_c: int = 4
+    # Channel schedule: levels at 16x16, 8x8, 4x4, 2x2.
+    channels: tuple = (32, 64, 128, 128)
+    groups: int = 8
+    heads: int = 4
+    # Text conditioning.
+    ctx_len: int = 16
+    ctx_dim: int = 64
+    vocab: int = 4096
+    text_layers: int = 2
+    # Time embedding.
+    time_dim: int = 64
+    temb_dim: int = 128
+    # Diffusion (training) schedule — SD's scaled-linear betas.
+    train_steps: int = 1000
+    beta_start: float = 0.00085
+    beta_end: float = 0.012
+    # Image output of the VAE decoder.
+    img_h: int = 64
+    img_w: int = 64
+    # Phase-aware-sampling cut points exported from the full U-Net: the
+    # main-branch inputs of up-blocks 1..MAX_CUT (all at 16x16, C=ch[0]).
+    max_cut: int = 3
+    seed: int = 42
+
+    @property
+    def latent_l(self) -> int:
+        return self.latent_h * self.latent_w
+
+
+CFG = ModelConfig()
+
+# Batch sizes for which artifacts are compiled (PJRT executables are
+# shape-specialised; the rust batcher groups requests to these sizes).
+BATCH_SIZES = (1, 2)
+
+# Classifier-free guidance default, matching the paper's setup (Sec. VI-A).
+DEFAULT_GUIDANCE = 7.5

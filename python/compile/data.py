@@ -1,0 +1,114 @@
+"""Procedural text-to-image dataset for sd-tiny.
+
+Stands in for MS-COCO/PartiPrompts (DESIGN.md substitution table): scenes
+of 1-3 coloured shapes on a gradient background, with captions drawn from
+a small closed vocabulary. The fixed analytic encoder maps 64x64 RGB to
+the 16x16x4 latent space (3 pooled colour channels + 1 high-frequency luma
+channel), so the VAE decoder has a learnable inverse.
+
+The vocabulary (word -> token id) is exported in the AOT manifest so the
+rust tokenizer reproduces it exactly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .config import CFG
+
+COLORS = {
+    "red": (0.9, 0.15, 0.1),
+    "green": (0.1, 0.8, 0.2),
+    "blue": (0.15, 0.25, 0.9),
+    "yellow": (0.95, 0.85, 0.1),
+    "magenta": (0.85, 0.1, 0.8),
+    "cyan": (0.1, 0.8, 0.85),
+    "white": (0.95, 0.95, 0.95),
+    "orange": (0.95, 0.55, 0.1),
+}
+SHAPES = ("circle", "square", "stripe")
+
+
+def build_vocab() -> dict:
+    """word -> token id; id 0 is <pad>."""
+    words = ["<pad>"]
+    words += list(COLORS)
+    words += list(SHAPES)
+    words += [f"x{i}" for i in range(16)]
+    words += [f"y{i}" for i in range(16)]
+    words += ["a", "and", "on", "dark", "light"]
+    return {w: i for i, w in enumerate(words)}
+
+
+VOCAB = build_vocab()
+
+
+def tokenize(caption: str) -> np.ndarray:
+    """Whitespace tokenizer over the closed vocabulary; pads/clips to ctx_len."""
+    ids = [VOCAB.get(w, 0) for w in caption.lower().split()]
+    ids = ids[: CFG.ctx_len]
+    return np.asarray(ids + [0] * (CFG.ctx_len - len(ids)), np.int32)
+
+
+def random_scene(rng: np.random.Generator):
+    """Sample a scene spec and its caption."""
+    n_obj = int(rng.integers(1, 4))
+    objs = []
+    words = []
+    for _ in range(n_obj):
+        color = list(COLORS)[rng.integers(len(COLORS))]
+        shape = SHAPES[rng.integers(len(SHAPES))]
+        cx, cy = int(rng.integers(2, 14)), int(rng.integers(2, 14))
+        size = float(rng.uniform(1.5, 4.0))
+        objs.append((shape, color, cx, cy, size))
+        words += [color, shape, f"x{cx}", f"y{cy}"]
+    return objs, " ".join(words)
+
+
+def render_scene(objs, rng: np.random.Generator) -> np.ndarray:
+    """Render to (img_h, img_w, 3) float32 in [0, 1]."""
+    h, w = CFG.img_h, CFG.img_w
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    base = rng.uniform(0.05, 0.25, size=3).astype(np.float32)
+    img = base[None, None, :] * (0.6 + 0.4 * (yy / h))[:, :, None]
+    scale = h / CFG.latent_h  # latent-grid coordinates -> pixels
+    for shape, color, cx, cy, size in objs:
+        px, py, pr = (cx + 0.5) * scale, (cy + 0.5) * scale, size * scale
+        rgb = np.asarray(COLORS[color], np.float32)
+        if shape == "circle":
+            d = np.sqrt((xx - px) ** 2 + (yy - py) ** 2)
+            mask = np.clip(pr - d, 0.0, 1.0)
+        elif shape == "square":
+            d = np.maximum(np.abs(xx - px), np.abs(yy - py))
+            mask = np.clip(pr - d, 0.0, 1.0)
+        else:  # stripe: horizontal band through (px, py)
+            mask = np.clip(pr / 2 - np.abs(yy - py), 0.0, 1.0)
+        img = img * (1 - mask[:, :, None]) + rgb[None, None, :] * mask[:, :, None]
+    return img.astype(np.float32)
+
+
+def encode_latent(img: np.ndarray) -> np.ndarray:
+    """Fixed analytic encoder: (img_h, img_w, 3) -> (L, latent_c) in ~[-1,1]."""
+    f = CFG.img_h // CFG.latent_h
+    h, w = CFG.latent_h, CFG.latent_w
+    pooled = img.reshape(h, f, w, f, 3).mean(axis=(1, 3))  # (h, w, 3)
+    luma = img.mean(axis=-1)
+    luma_pool = luma.reshape(h, f, w, f).mean(axis=(1, 3))
+    # High-frequency channel: pooled |residual| of luma inside each cell.
+    up = np.repeat(np.repeat(luma_pool, f, 0), f, 1)
+    hf = np.abs(luma - up).reshape(h, f, w, f).mean(axis=(1, 3))
+    lat = np.concatenate([pooled * 2 - 1, (hf * 8 - 1)[..., None]], axis=-1)
+    return lat.reshape(h * w, CFG.latent_c).astype(np.float32)
+
+
+def make_dataset(n: int, seed: int = 0):
+    """Returns (tokens (n,ctx_len) i32, latents (n,L,4) f32, images (n,HW,3))."""
+    rng = np.random.default_rng(seed)
+    toks, lats, imgs = [], [], []
+    for _ in range(n):
+        objs, caption = random_scene(rng)
+        img = render_scene(objs, rng)
+        toks.append(tokenize(caption))
+        lats.append(encode_latent(img))
+        imgs.append(img.reshape(-1, 3))
+    return (np.stack(toks), np.stack(lats), np.stack(imgs))

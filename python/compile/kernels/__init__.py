@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .attention import attention, mha  # noqa: F401
+from .elementwise import gelu, silu  # noqa: F401
+from .norms import groupnorm, layernorm  # noqa: F401
+from .uni_conv import uni_conv  # noqa: F401

@@ -1,0 +1,107 @@
+"""Attention with the paper's tile-decoupled online softmax (Eq. 5-6).
+
+Sec. IV-C: softmax needs a global maximum, which would stall the systolic
+array until the whole logit row exists. The paper instead keeps a running
+``(max, exp-sum)`` pair that is updated per tile (Eq. 5-6, after online
+softmax [40]) so the NCA stage rides the matmul's output stream. This is
+the same recurrence as flash-attention; here it is expressed as a Pallas
+kernel whose q-tile grid streams K/V tiles through VMEM, carrying the
+``(m, es, acc)`` statistics in scratch — the TPU analogue of the paper's
+VPU register stack (DESIGN.md §Hardware-Adaptation).
+
+interpret=True only — see uni_conv.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_TILE = 128
+DEFAULT_K_TILE = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bk, lk, lk_pad, scale):
+    """One q-tile grid step: stream K/V tiles, carry (m, es, acc)."""
+    q = q_ref[...] * scale  # (bq, d)
+    bq, d = q.shape
+    n_kt = lk_pad // bk
+
+    def body(i, carry):
+        acc, m_prev, es_prev = carry
+        k_tile = jax.lax.dynamic_slice(k_ref[...], (i * bk, 0), (bk, d))
+        v_tile = jax.lax.dynamic_slice(v_ref[...], (i * bk, 0), (bk, d))
+        logits = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32)
+        # Edge flag: mask out K rows beyond the true sequence length.
+        col = i * bk + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(col < lk, logits, NEG_INF)
+        # Eq. (5): tile statistics under the latest maximum.
+        new_max = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - new_max)
+        es_n = jnp.sum(p, axis=-1, keepdims=True)
+        # Eq. (6): rescale the running exp-sum and accumulator.
+        alpha = jnp.exp(m_prev - new_max)
+        es = es_prev * alpha + es_n
+        acc = acc * alpha + jnp.dot(p, v_tile, preferred_element_type=jnp.float32)
+        return acc, new_max, es
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    es0 = jnp.zeros((bq, 1), jnp.float32)
+    acc, _, es = jax.lax.fori_loop(0, n_kt, body, (acc0, m0, es0))
+    # Norm stage: division by the final exp-sum on the read-out stream.
+    o_ref[...] = acc / es
+
+
+def _pad_rows(x, mult):
+    l = x.shape[0]
+    lp = -(-l // mult) * mult
+    if lp != l:
+        x = jnp.pad(x, ((0, lp - l), (0, 0)))
+    return x, lp
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "k_tile"))
+def attention(q, k, v, *, q_tile: int = DEFAULT_Q_TILE, k_tile: int = DEFAULT_K_TILE):
+    """Single-head attention, online-softmax Pallas kernel.
+
+    q: ``(Lq, d)``, k/v: ``(Lk, d)`` -> ``(Lq, d)``. Scale = 1/sqrt(d).
+    """
+    lq, d = q.shape
+    lk = k.shape[0]
+    scale = 1.0 / float(d) ** 0.5
+    bq = min(q_tile, max(lq, 1))
+    bk = min(k_tile, max(lk, 1))
+    qp, lq_pad = _pad_rows(q, bq)
+    kp, lk_pad = _pad_rows(k, bk)
+    vp, _ = _pad_rows(v, bk)
+
+    kernel = functools.partial(_attn_kernel, bk=bk, lk=lk, lk_pad=lk_pad, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(lq_pad // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((lk_pad, d), lambda i: (0, 0)),
+            pl.BlockSpec((lk_pad, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lq_pad, d), jnp.float32),
+        interpret=True,
+    )(qp, kp, vp)
+    return out[:lq]
+
+
+def mha(q, k, v):
+    """Multi-head attention over ``(heads, L, d)`` tensors via vmap."""
+    return jax.vmap(attention)(q, k, v)
+
+
+def vmem_bytes(lq: int, lk: int, d: int, q_tile: int = DEFAULT_Q_TILE) -> int:
+    """Per-step VMEM estimate (f32) for DESIGN.md §Perf."""
+    bq = min(q_tile, lq)
+    return (bq * d + 2 * lk * d + bq * d + bq * 2) * 4

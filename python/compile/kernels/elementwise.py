@@ -1,0 +1,58 @@
+"""Elementwise nonlinearities on the reconfigurable VPU datapath.
+
+Sec. IV-D: GELU is implemented as the official sigmoid approximation [15]
+(``x * sigmoid(1.702 x)``), which the paper validates as accuracy-neutral
+for StableDiff; SiLU shares the same EXP/adder/divider arrays. These are
+trivially streaming (no NCA stage needed) and tile over rows.
+
+interpret=True only — see uni_conv.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 256
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    # sigmoid(t) built from the EXP + adder + divider arrays (Fig. 12c).
+    o_ref[...] = x / (1.0 + jnp.exp(-1.702 * x))
+
+
+def _silu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = x / (1.0 + jnp.exp(-x))
+
+
+def _rowwise(kernel, x, row_tile):
+    l, c = x.shape
+    bt = min(row_tile, l)
+    lp = -(-l // bt) * bt
+    xp = jnp.pad(x, ((0, lp - l), (0, 0))) if lp != l else x
+    out = pl.pallas_call(
+        kernel,
+        grid=(lp // bt,),
+        in_specs=[pl.BlockSpec((bt, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp, c), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:l]
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def gelu(x, *, row_tile: int = DEFAULT_ROW_TILE):
+    """Sigmoid-approximated GELU over ``(L, C)``."""
+    return _rowwise(_gelu_kernel, x, row_tile)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def silu(x, *, row_tile: int = DEFAULT_ROW_TILE):
+    """SiLU over ``(L, C)`` (ResNet blocks + time embedding)."""
+    return _rowwise(_silu_kernel, x, row_tile)

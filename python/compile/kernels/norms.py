@@ -1,0 +1,99 @@
+"""2-stage layernorm / groupnorm Pallas kernels (Eq. 4).
+
+Sec. IV-C inefficiency-(i): naive layernorm makes three passes (mean,
+variance, normalise). The paper's NCA stage accumulates ``sum`` and
+``square-sum`` while the preceding matmul streams out, then derives
+``mu = sum/N`` and ``sigma^2 = sqsum/N - mu^2`` (Eq. 4) — one pass over
+the data plus a cheap per-row epilogue. These kernels use exactly that
+formulation: statistics come from single-pass sum/sq-sum accumulation,
+never from a second data pass.
+
+interpret=True only — see uni_conv.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 128
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    n = x.shape[-1]
+    # NCA stage: single pass producing sum and square-sum (Eq. 4).
+    s = jnp.sum(x, axis=-1, keepdims=True)
+    sq = jnp.sum(x * x, axis=-1, keepdims=True)
+    mu = s / n
+    var = sq / n - mu * mu
+    # Norm stage: applied on the operand read-out stream.
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x - mu) * inv * g_ref[...][None, :] + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def layernorm(x, gamma, beta, *, eps: float = 1e-5, row_tile: int = DEFAULT_ROW_TILE):
+    """Layernorm over the last dim of ``(L, C)`` via Eq. 4 statistics."""
+    l, c = x.shape
+    bt = min(row_tile, l)
+    lp = -(-l // bt) * bt
+    xp = jnp.pad(x, ((0, lp - l), (0, 0))) if lp != l else x
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(lp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lp, c), jnp.float32),
+        interpret=True,
+    )(x if lp == l else xp, gamma, beta)
+    return out[:l]
+
+
+def _groupnorm_kernel(x_ref, g_ref, b_ref, o_ref, *, groups, eps):
+    x = x_ref[...]
+    l, c = x.shape
+    cg = c // groups
+    xg = x.reshape(l, groups, cg)
+    n = l * cg
+    # NCA: sum / square-sum per group, single pass.
+    s = jnp.sum(xg, axis=(0, 2))
+    sq = jnp.sum(xg * xg, axis=(0, 2))
+    mu = s / n
+    var = sq / n - mu * mu
+    inv = jax.lax.rsqrt(var + eps)
+    # Norm stage.
+    xn = ((xg - mu[None, :, None]) * inv[None, :, None]).reshape(l, c)
+    o_ref[...] = xn * g_ref[...][None, :] + b_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("groups",))
+def groupnorm(x, gamma, beta, *, groups: int, eps: float = 1e-5):
+    """Groupnorm over ``(L, C)`` address-centric activations.
+
+    The reduction spans the whole spatial dim, so the kernel holds the
+    full ``(L, C)`` block in VMEM — sized for the tiny model (L <= 256,
+    C <= 128: 128 KiB). The real accelerator streams this through the
+    VPU's NCA stage instead (modelled in rust/src/hwsim/streaming.rs).
+    """
+    l, c = x.shape
+    assert c % groups == 0
+    return pl.pallas_call(
+        functools.partial(_groupnorm_kernel, groups=groups, eps=eps),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((l, c), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((l, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, c), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every L1 kernel in this package is checked against these functions by
+``python/tests``. They use the *paper's* storage format: activations are
+``(L, C)`` with ``L = H * W`` (address-centric flattened spatial dim,
+Sec. IV-B), weights for conv are ``(F, C_in, C_out)`` with ``F = R * S``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_same(x, w, b, h: int, w_dim: int, stride: int = 1):
+    """Reference convolution in address-centric storage.
+
+    Args:
+      x: ``(L, C_in)`` activations, ``L = h * w_dim`` (row-major spatial).
+      w: ``(F, C_in, C_out)`` weights; ``F = k*k`` with k in {1, 3}; the
+         f index is ``r * k + s`` (kernel row-major).
+      b: ``(C_out,)`` bias.
+      h, w_dim: spatial height/width of ``x``.
+      stride: 1 or 2 (stride 2 implements the SD downsample conv).
+
+    Returns:
+      ``(L_out, C_out)`` with ``L_out = ceil(h/stride) * ceil(w_dim/stride)``.
+    """
+    f, c_in, c_out = w.shape
+    k = int(round(f**0.5))
+    assert k * k == f, f"non-square kernel F={f}"
+    img = x.reshape(h, w_dim, c_in).transpose(2, 0, 1)[None]  # NCHW
+    ker = w.reshape(k, k, c_in, c_out).transpose(3, 2, 0, 1)  # OIHW
+    pad = (k - 1) // 2
+    out = jax.lax.conv_general_dilated(
+        img,
+        ker,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    p, q = out.shape[1], out.shape[2]
+    return out.transpose(1, 2, 0).reshape(p * q, c_out) + b[None, :]
+
+
+def softmax(x, axis=-1):
+    """Numerically-stable softmax (global max, the multi-pass baseline)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention(q, k, v, scale=None):
+    """Single-head attention. q: (Lq, d), k/v: (Lk, d) -> (Lq, d)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = (q @ k.T) * scale
+    return softmax(logits, axis=-1) @ v
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """Layernorm over the last dim. x: (L, C)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma[None, :] + beta[None, :]
+
+
+def groupnorm(x, gamma, beta, groups: int, eps: float = 1e-5):
+    """Groupnorm in address-centric storage. x: (L, C).
+
+    Normalises over (L, C/groups) per group — the spatial dim and the
+    channels of the group, matching torch.nn.GroupNorm on (1, C, H, W).
+    """
+    l, c = x.shape
+    assert c % groups == 0
+    xg = x.reshape(l, groups, c // groups)
+    mu = jnp.mean(xg, axis=(0, 2), keepdims=True)
+    var = jnp.mean((xg - mu) ** 2, axis=(0, 2), keepdims=True)
+    xn = ((xg - mu) / jnp.sqrt(var + eps)).reshape(l, c)
+    return xn * gamma[None, :] + beta[None, :]
+
+
+def gelu_sigmoid(x):
+    """The paper's hardware GELU: sigmoid approximation [15]."""
+    return x * jax.nn.sigmoid(1.702 * x)
+
+
+def gelu_exact(x):
+    """Exact (erf) GELU, used only to report the approximation error."""
+    return jax.nn.gelu(x, approximate=False)
+
+
+def silu(x):
+    """SiLU / swish, used by SD ResNet blocks and time embedding."""
+    return x * jax.nn.sigmoid(x)
+
+
+def online_softmax_update(es, prev_max, xs_tile):
+    """One step of the paper's Eq. (5)-(6) running softmax statistics.
+
+    Given the running exponential sum ``es`` w.r.t. ``prev_max`` and a new
+    tile ``xs_tile``, returns ``(es', new_max)`` such that after consuming
+    all tiles, ``es' == sum(exp(x - max(x)))`` over everything seen.
+    """
+    tile_max = jnp.max(xs_tile)
+    new_max = jnp.maximum(prev_max, tile_max)
+    es_n = jnp.sum(jnp.exp(xs_tile - new_max))
+    es = es * jnp.exp(prev_max - new_max) + es_n
+    return es, new_max

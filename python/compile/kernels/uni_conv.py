@@ -1,0 +1,127 @@
+"""Uni-conv: the paper's address-centric convolution as a Pallas kernel.
+
+Sec. IV-A/IV-B: a K×K convolution is decomposed into F = K² separate 1×1
+kernels. Each 1×1 kernel is a plain ``(L, C_in) x (C_in, C_out)`` matmul
+(MXU-friendly), and its partial sums are routed to the output by a simple
+address map ``l -> l + δ(f)`` with edge flags. The outermost loop of the
+transformed four-layer loop nest (Fig. 10 right, Line 1) runs over the F
+kernel positions; here it is the slowest grid dimension, so each output
+block is accumulated in place across F sequential grid steps — the Pallas
+analogue of the paper's VPU partial-sum accumulation riding the systolic
+array's output stream.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): activations are stored in
+the paper's ``(L, C)`` format; the grid is ``(C_out tiles, F)`` so each
+VMEM-resident output tile is revisited F times while a fresh ``(1, C_in,
+C_out_tile)`` weight slice streams in — weight-stationary within a step,
+exactly the paper's SA mapping. Zero-padding of the *partial sums* at the
+spatial border implements the paper's edge-validity flags (an out-of-range
+contribution is identically zero).
+
+The kernel MUST be lowered with ``interpret=True`` on this image: real TPU
+lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default C_out tile. 128 matches the MXU lane width; the tiny model's
+# channel counts are below this, so most layers run as a single tile.
+DEFAULT_COUT_TILE = 128
+
+
+def _uni_conv_kernel(x_ref, w_ref, b_ref, o_ref, *, h, w_dim, stride, k, pad, p, q):
+    """One (cout-tile, kernel-position) grid step."""
+    f = pl.program_id(1)
+    # Line 2-8 of the paper's loop nest: the 1x1-kernel matmul.
+    partial = jnp.dot(x_ref[...], w_ref[0], preferred_element_type=jnp.float32)
+    ct = partial.shape[-1]
+    # Line 1 + Line 9: partial-sum routing by the address map. Zero-pad the
+    # partial-sum image so out-of-range source addresses contribute zero
+    # (the paper's edge flag).
+    img = partial.reshape(h, w_dim, ct)
+    padded = jnp.pad(img, ((pad, pad), (pad, pad), (0, 0)))
+    r = f // k
+    s = f % k
+    size_h = (p - 1) * stride + 1
+    size_w = (q - 1) * stride + 1
+    window = jax.lax.dynamic_slice(padded, (r, s, 0), (size_h, size_w, ct))
+    contrib = window[::stride, ::stride].reshape(p * q, ct)
+
+    @pl.when(f == 0)
+    def _init():
+        o_ref[...] = contrib + b_ref[...][None, :]
+
+    @pl.when(f != 0)
+    def _accum():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w_dim", "stride", "cout_tile"))
+def uni_conv(x, w, b, *, h: int, w_dim: int, stride: int = 1,
+             cout_tile: int = DEFAULT_COUT_TILE):
+    """Address-centric convolution.
+
+    Args:
+      x: ``(L, C_in)`` activations, ``L = h * w_dim``.
+      w: ``(F, C_in, C_out)`` weights, ``F = k*k``, f index ``r*k + s``.
+      b: ``(C_out,)`` bias.
+      h, w_dim: spatial size of ``x``.
+      stride: 1 or 2 ('same' zero padding for k=3, none for k=1).
+      cout_tile: C_out tile width (VMEM sizing knob).
+
+    Returns:
+      ``(L_out, C_out)`` activations with ``L_out = ceil(h/s)*ceil(w/s)``.
+    """
+    l, c_in = x.shape
+    f, wc_in, c_out = w.shape
+    assert l == h * w_dim, f"L={l} != h*w={h * w_dim}"
+    assert wc_in == c_in, f"C_in mismatch {wc_in} vs {c_in}"
+    k = int(round(f**0.5))
+    assert k * k == f and k in (1, 3), f"unsupported kernel F={f}"
+    assert stride in (1, 2), f"unsupported stride {stride}"
+    pad = (k - 1) // 2
+    p = -(-h // stride)
+    q = -(-w_dim // stride)
+
+    ct = min(cout_tile, c_out)
+    # Pad C_out to a tile multiple; sliced off below.
+    c_out_pad = -(-c_out // ct) * ct
+    if c_out_pad != c_out:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, c_out_pad - c_out)))
+        b = jnp.pad(b, (0, c_out_pad - c_out))
+    n_tiles = c_out_pad // ct
+
+    kernel = functools.partial(
+        _uni_conv_kernel, h=h, w_dim=w_dim, stride=stride, k=k, pad=pad, p=p, q=q
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles, f),
+        in_specs=[
+            pl.BlockSpec((l, c_in), lambda j, f_: (0, 0)),
+            pl.BlockSpec((1, c_in, ct), lambda j, f_: (f_, 0, j)),
+            pl.BlockSpec((ct,), lambda j, f_: (j,)),
+        ],
+        out_specs=pl.BlockSpec((p * q, ct), lambda j, f_: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((p * q, c_out_pad), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+    return out[:, :c_out]
+
+
+def vmem_bytes(l: int, c_in: int, c_out: int, cout_tile: int = DEFAULT_COUT_TILE,
+               stride: int = 1) -> int:
+    """Estimated per-step VMEM footprint (f32) for DESIGN.md §Perf."""
+    ct = min(cout_tile, c_out)
+    lo = l // (stride * stride)
+    x_b = l * c_in * 4
+    w_b = c_in * ct * 4
+    o_b = lo * ct * 4
+    partial_b = l * ct * 4
+    return x_b + w_b + o_b + partial_b

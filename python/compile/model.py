@@ -1,0 +1,342 @@
+"""sd-tiny: the L2 model — U-Net, text encoder, VAE decoder.
+
+Structurally faithful to the paper's Fig. 3: 12 downsampling blocks
+(block 1 = single 3x3 conv; blocks 4/7/10 = stride-2 downsample; ResNet +
+Transformer elsewhere, plain ResNet at the deepest level), a middle block,
+and 12 upsampling blocks (up-blocks 10/7/4 carry the nearest-interpolation
+upsample) joined by skip-connection concatenation.
+
+Phase-aware sampling hooks:
+- ``unet_full``   also returns the main-branch inputs of up-blocks
+  1..CFG.max_cut (the reusable "entry point" features, Fig. 5 bottom).
+- ``unet_partial(l)`` runs only down-blocks 1..l and up-blocks l..1,
+  consuming a cached entry-point feature.
+- ``unet_calib``  additionally returns all 12 up-block main-branch inputs
+  (the ``A_t^i`` of Eq. 1) for shift-score calibration.
+
+Classifier-free guidance is folded inside each entry point: the batch is
+doubled internally (cond ‖ uncond with a learned null context), and
+``eps = eps_u + g * (eps_c - eps_u)``. Cached features are returned for
+the doubled batch so partial steps reproduce both branches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as B
+from .config import CFG
+
+# Down-block schedule, 1-based index -> (kind, cin, cout, h_in).
+# kind: CI = conv_in, RT = ResNet+Transformer, R = ResNet, D = downsample.
+C0, C1, C2, C3 = CFG.channels
+H0 = CFG.latent_h
+DOWN_SCHEDULE = [
+    (1, "CI", CFG.latent_c, C0, H0),
+    (2, "RT", C0, C0, H0),
+    (3, "RT", C0, C0, H0),
+    (4, "D", C0, C0, H0),
+    (5, "RT", C0, C1, H0 // 2),
+    (6, "RT", C1, C1, H0 // 2),
+    (7, "D", C1, C1, H0 // 2),
+    (8, "RT", C1, C2, H0 // 4),
+    (9, "RT", C2, C2, H0 // 4),
+    (10, "D", C2, C2, H0 // 4),
+    (11, "R", C2, C3, H0 // 8),
+    (12, "R", C3, C3, H0 // 8),
+]
+
+# Up-block schedule, 1-based index -> (kind, c_main, c_skip, cout, h, upsample_after).
+UP_SCHEDULE = [
+    (1, "R", C0, C0, C0, H0, False),
+    (2, "RT", C0, C0, C0, H0, False),
+    (3, "RT", C0, C0, C0, H0, False),
+    (4, "R", C1, C0, C0, H0 // 2, True),
+    (5, "RT", C1, C1, C1, H0 // 2, False),
+    (6, "RT", C1, C1, C1, H0 // 2, False),
+    (7, "R", C2, C1, C1, H0 // 4, True),
+    (8, "RT", C2, C2, C2, H0 // 4, False),
+    (9, "RT", C2, C2, C2, H0 // 4, False),
+    (10, "R", C3, C2, C2, H0 // 8, True),
+    (11, "R", C3, C3, C3, H0 // 8, False),
+    (12, "R", C3, C3, C3, H0 // 8, False),
+]
+
+
+# ------------------------------------------------------------------- init
+
+
+def init_unet_params(key):
+    """Initialise the full U-Net parameter pytree (deterministic)."""
+    keys = jax.random.split(key, 64)
+    ki = iter(keys)
+    params = {"temb": B.init_temb(next(ki)), "down": [], "up": []}
+    for _i, kind, cin, cout, _h in DOWN_SCHEDULE:
+        if kind == "CI":
+            params["down"].append({
+                "w": B._init_conv(next(ki), 3, cin, cout),
+                "b": jnp.zeros((cout,)),
+            })
+        elif kind == "D":
+            params["down"].append(B.init_downsample(next(ki), cout))
+        elif kind == "R":
+            params["down"].append({"res": B.init_resnet(next(ki), cin, cout)})
+        else:  # RT
+            params["down"].append({
+                "res": B.init_resnet(next(ki), cin, cout),
+                "attn": B.init_transformer(next(ki), cout),
+            })
+    params["mid"] = {
+        "res1": B.init_resnet(next(ki), C3, C3),
+        "attn": B.init_transformer(next(ki), C3),
+        "res2": B.init_resnet(next(ki), C3, C3),
+    }
+    for _i, kind, cm, cs, cout, _h, _up in UP_SCHEDULE:
+        blk = {"res": B.init_resnet(next(ki), cm + cs, cout)}
+        if kind == "RT":
+            blk["attn"] = B.init_transformer(next(ki), cout)
+        params["up"].append(blk)
+    params["out"] = {
+        "gn_g": jnp.ones((C0,)),
+        "gn_b": jnp.zeros((C0,)),
+        "w": B._init_conv(next(ki), 3, C0, CFG.latent_c, scale=1e-2),
+        "b": jnp.zeros((CFG.latent_c,)),
+    }
+    # Learned null context for classifier-free guidance.
+    params["null_ctx"] = (
+        jax.random.normal(next(ki), (CFG.ctx_len, CFG.ctx_dim), jnp.float32) * 0.02
+    )
+    return params
+
+
+# -------------------------------------------------------- single-sample fwd
+
+
+def _apply_down_block(ops, p, kind, x, temb, ctx, h, w):
+    if kind == "CI":
+        return ops.conv(x, p["w"], p["b"], h, w), h, w
+    if kind == "D":
+        return B.apply_downsample(ops, p, x, h, w), h // 2, w // 2
+    y = B.apply_resnet(ops, p["res"], x, temb, h, w)
+    if kind == "RT":
+        y = B.apply_transformer(ops, p["attn"], y, ctx, h, w)
+    return y, h, w
+
+
+def _apply_up_block(ops, p, sched, x, skip, temb, ctx):
+    _i, kind, _cm, _cs, _cout, h, up_after = sched
+    y = jnp.concatenate([x, skip], axis=-1)
+    y = B.apply_resnet(ops, p["res"], y, temb, h, h)
+    if kind == "RT":
+        y = B.apply_transformer(ops, p["attn"], y, ctx, h, h)
+    if up_after:
+        y = B.upsample_nearest(y, h, h)
+    return y
+
+
+def unet_single(ops, params, lat, t, ctx, n_up_inputs: int = 0):
+    """One conditional forward pass of the full U-Net.
+
+    lat: (L, latent_c), t: scalar, ctx: (ctx_len, ctx_dim).
+    Returns (eps, up_inputs) with up_inputs[i-1] = main-branch input of
+    up-block i (the A_t^i of Eq. 1), for i = 1..n_up_inputs.
+    """
+    temb = B.apply_temb(ops, params["temb"], t)
+    h = w = CFG.latent_h
+    x = lat
+    skips = []
+    for (idx, kind, _ci, _co, _h), p in zip(DOWN_SCHEDULE, params["down"]):
+        x, h, w = _apply_down_block(ops, p, kind, x, temb, ctx, h, w)
+        skips.append(x)
+
+    x = B.apply_resnet(ops, params["mid"]["res1"], x, temb, h, w)
+    x = B.apply_transformer(ops, params["mid"]["attn"], x, ctx, h, w)
+    x = B.apply_resnet(ops, params["mid"]["res2"], x, temb, h, w)
+
+    up_inputs = [None] * 12
+    for i in range(12, 0, -1):
+        up_inputs[i - 1] = x
+        x = _apply_up_block(ops, params["up"][i - 1], UP_SCHEDULE[i - 1],
+                            x, skips[i - 1], temb, ctx)
+
+    y = ops.groupnorm(x, params["out"]["gn_g"], params["out"]["gn_b"], CFG.groups)
+    y = ops.silu(y)
+    eps = ops.conv(y, params["out"]["w"], params["out"]["b"], CFG.latent_h, CFG.latent_w)
+    return eps, up_inputs[:n_up_inputs]
+
+
+def unet_partial_single(ops, params, l: int, lat, t, ctx, cached):
+    """Partial U-Net: down-blocks 1..l, cached entry point, up-blocks l..1.
+
+    Only valid for l <= CFG.max_cut (all retained blocks are at the top
+    16x16 resolution — the paper's retained top blocks, Fig. 5).
+    cached: (L, C0) — the main-branch input of up-block l from the most
+    recent complete timestep.
+    """
+    assert 1 <= l <= CFG.max_cut
+    temb = B.apply_temb(ops, params["temb"], t)
+    h = w = CFG.latent_h
+    x = lat
+    skips = []
+    for (idx, kind, _ci, _co, _h), p in zip(DOWN_SCHEDULE[:l], params["down"][:l]):
+        x, h, w = _apply_down_block(ops, p, kind, x, temb, ctx, h, w)
+        skips.append(x)
+
+    x = cached
+    for i in range(l, 0, -1):
+        x = _apply_up_block(ops, params["up"][i - 1], UP_SCHEDULE[i - 1],
+                            x, skips[i - 1], temb, ctx)
+
+    y = ops.groupnorm(x, params["out"]["gn_g"], params["out"]["gn_b"], CFG.groups)
+    y = ops.silu(y)
+    return ops.conv(y, params["out"]["w"], params["out"]["b"], CFG.latent_h, CFG.latent_w)
+
+
+# ------------------------------------------------- batched + CFG entry points
+
+
+def _double_batch(params, lat, ctx):
+    b = lat.shape[0]
+    null = jnp.broadcast_to(params["null_ctx"][None], (b, CFG.ctx_len, CFG.ctx_dim))
+    lat2 = jnp.concatenate([lat, lat], axis=0)
+    ctx2 = jnp.concatenate([ctx, null], axis=0)
+    return lat2, ctx2
+
+
+def _guide(eps2, b, g):
+    eps_c, eps_u = eps2[:b], eps2[b:]
+    return eps_u + g * (eps_c - eps_u)
+
+
+def unet_full(ops, params, lat, t, ctx, g):
+    """Full U-Net step with CFG.
+
+    lat: (B, L, latent_c), t: (B,), ctx: (B, ctx_len, ctx_dim), g: scalar.
+    Returns (eps: (B, L, latent_c), caches: tuple of CFG.max_cut tensors
+    shaped (2B, L, C0) — cond‖uncond entry points for cuts l = 1..max_cut).
+    """
+    b = lat.shape[0]
+    lat2, ctx2 = _double_batch(params, lat, ctx)
+    t2 = jnp.concatenate([t, t], axis=0)
+    eps2, ups = jax.vmap(
+        lambda la, tt, cc: unet_single(ops, params, la, tt, cc, CFG.max_cut)
+    )(lat2, t2, ctx2)
+    return _guide(eps2, b, g), tuple(ups)
+
+
+def unet_partial(ops, params, l: int, lat, t, ctx, g, cached):
+    """Partial U-Net step with CFG. cached: (2B, L, C0)."""
+    b = lat.shape[0]
+    lat2, ctx2 = _double_batch(params, lat, ctx)
+    t2 = jnp.concatenate([t, t], axis=0)
+    eps2 = jax.vmap(
+        lambda la, tt, cc, ca: unet_partial_single(ops, params, l, la, tt, cc, ca)
+    )(lat2, t2, ctx2, cached)
+    return _guide(eps2, b, g)
+
+
+def unet_calib(ops, params, lat, t, ctx, g):
+    """Calibration step: eps + all 12 up-block inputs (cond branch only)."""
+    b = lat.shape[0]
+    lat2, ctx2 = _double_batch(params, lat, ctx)
+    t2 = jnp.concatenate([t, t], axis=0)
+    eps2, ups = jax.vmap(
+        lambda la, tt, cc: unet_single(ops, params, la, tt, cc, 12)
+    )(lat2, t2, ctx2)
+    return _guide(eps2, b, g), tuple(u[:b] for u in ups)
+
+
+# ------------------------------------------------------------ text encoder
+
+
+def init_text_params(key):
+    keys = iter(jax.random.split(key, 32))
+    d = CFG.ctx_dim
+    p = {
+        "embed": jax.random.normal(next(keys), (CFG.vocab, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(next(keys), (CFG.ctx_len, d), jnp.float32) * 0.02,
+        "layers": [],
+        "lnf_g": jnp.ones((d,)),
+        "lnf_b": jnp.zeros((d,)),
+    }
+    for _ in range(CFG.text_layers):
+        p["layers"].append({
+            "ln1_g": jnp.ones((d,)),
+            "ln1_b": jnp.zeros((d,)),
+            "q_w": B._init_linear(next(keys), d, d),
+            "k_w": B._init_linear(next(keys), d, d),
+            "v_w": B._init_linear(next(keys), d, d),
+            "o_w": B._init_linear(next(keys), d, d),
+            "o_b": jnp.zeros((d,)),
+            "ln2_g": jnp.ones((d,)),
+            "ln2_b": jnp.zeros((d,)),
+            "ff1_w": B._init_linear(next(keys), d, 4 * d),
+            "ff1_b": jnp.zeros((4 * d,)),
+            "ff2_w": B._init_linear(next(keys), 4 * d, d),
+            "ff2_b": jnp.zeros((d,)),
+        })
+    return p
+
+
+def text_encoder_single(ops, p, tokens):
+    """tokens: (ctx_len,) i32 -> (ctx_len, ctx_dim)."""
+    x = p["embed"][tokens] + p["pos"]
+    heads = 4
+    for lp in p["layers"]:
+        z = ops.layernorm(x, lp["ln1_g"], lp["ln1_b"])
+        q, k, v = z @ lp["q_w"], z @ lp["k_w"], z @ lp["v_w"]
+        a = B._merge_heads(ops.mha(*(B._split_heads(m, heads) for m in (q, k, v))))
+        x = x + a @ lp["o_w"] + lp["o_b"]
+        z = ops.layernorm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + ops.gelu(z @ lp["ff1_w"] + lp["ff1_b"]) @ lp["ff2_w"] + lp["ff2_b"]
+    return ops.layernorm(x, p["lnf_g"], p["lnf_b"])
+
+
+def text_encoder(ops, p, tokens):
+    """tokens: (B, ctx_len) i32 -> (B, ctx_len, ctx_dim)."""
+    return jax.vmap(lambda tk: text_encoder_single(ops, p, tk))(tokens)
+
+
+# ------------------------------------------------------------- VAE decoder
+
+
+def init_vae_params(key):
+    keys = iter(jax.random.split(key, 8))
+    return {
+        "conv_in_w": B._init_conv(next(keys), 3, CFG.latent_c, 48),
+        "conv_in_b": jnp.zeros((48,)),
+        "gn1_g": jnp.ones((48,)),
+        "gn1_b": jnp.zeros((48,)),
+        "conv1_w": B._init_conv(next(keys), 3, 48, 24),
+        "conv1_b": jnp.zeros((24,)),
+        "gn2_g": jnp.ones((24,)),
+        "gn2_b": jnp.zeros((24,)),
+        "conv2_w": B._init_conv(next(keys), 3, 24, 16),
+        "conv2_b": jnp.zeros((16,)),
+        "gn3_g": jnp.ones((16,)),
+        "gn3_b": jnp.zeros((16,)),
+        "conv_out_w": B._init_conv(next(keys), 3, 16, 3),
+        "conv_out_b": jnp.zeros((3,)),
+    }
+
+
+def vae_decoder_single(ops, p, lat):
+    """lat: (L, latent_c) @16x16 -> (img_h*img_w, 3) @64x64 RGB."""
+    h = w = CFG.latent_h
+    x = ops.conv(lat, p["conv_in_w"], p["conv_in_b"], h, w)
+    x = ops.silu(ops.groupnorm(x, p["gn1_g"], p["gn1_b"], CFG.groups))
+    x = B.upsample_nearest(x, h, w)
+    h, w = 2 * h, 2 * w
+    x = ops.conv(x, p["conv1_w"], p["conv1_b"], h, w)
+    x = ops.silu(ops.groupnorm(x, p["gn2_g"], p["gn2_b"], CFG.groups))
+    x = B.upsample_nearest(x, h, w)
+    h, w = 2 * h, 2 * w
+    x = ops.conv(x, p["conv2_w"], p["conv2_b"], h, w)
+    x = ops.silu(ops.groupnorm(x, p["gn3_g"], p["gn3_b"], CFG.groups))
+    return ops.conv(x, p["conv_out_w"], p["conv_out_b"], h, w)
+
+
+def vae_decoder(ops, p, lat):
+    """lat: (B, L, latent_c) -> (B, img_h*img_w, 3)."""
+    return jax.vmap(lambda la: vae_decoder_single(ops, p, la))(lat)

@@ -1,0 +1,186 @@
+"""Build-time training of sd-tiny (REF backend: pure jnp, fast on CPU).
+
+Gives the U-Net real denoiser dynamics so phase-aware sampling calibration
+(Fig. 4 / Eq. 2) measures a trained model rather than noise, and trains
+the VAE decoder so generated latents decode to recognisable images. The
+training loss curve is logged to artifacts/train_log.json and summarised
+in EXPERIMENTS.md (end-to-end validation requirement).
+
+Run via ``python -m compile.train`` or implicitly from ``compile.aot``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model as M
+from .backends import REF
+from .config import CFG
+
+
+def diffusion_schedule():
+    """SD's scaled-linear beta schedule -> cumulative alpha-bar (T,)."""
+    betas = (
+        np.linspace(CFG.beta_start**0.5, CFG.beta_end**0.5, CFG.train_steps) ** 2
+    )
+    return np.cumprod(1.0 - betas).astype(np.float32)
+
+
+# ------------------------------------------------------------------- adam
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------- training
+
+
+def train_unet(params, text_params, steps: int, batch: int = 8, lr: float = 2e-4,
+               seed: int = 0, log_every: int = 20):
+    """eps-prediction MSE training with 10% context dropout (CFG-style)."""
+    toks, lats, _ = data.make_dataset(256, seed=seed)
+    ctx_all = np.asarray(M.text_encoder(REF, text_params, jnp.asarray(toks)))
+    alpha_bar = jnp.asarray(diffusion_schedule())
+    n = lats.shape[0]
+
+    def loss_fn(p, lat0, ctx, t, noise, drop):
+        ab = alpha_bar[t][:, None, None]
+        x_t = jnp.sqrt(ab) * lat0 + jnp.sqrt(1 - ab) * noise
+        null = jnp.broadcast_to(p["null_ctx"][None], ctx.shape)
+        ctx_eff = jnp.where(drop[:, None, None], null, ctx)
+        eps = jax.vmap(lambda la, tt, cc: M.unet_single(REF, p, la, tt, cc, 0)[0])(
+            x_t, t.astype(jnp.float32), ctx_eff
+        )
+        return jnp.mean((eps - noise) ** 2)
+
+    @jax.jit
+    def step_fn(p, opt, lat0, ctx, t, noise, drop):
+        loss, grads = jax.value_and_grad(loss_fn)(p, lat0, ctx, t, noise, drop)
+        p, opt = adam_update(p, grads, opt, lr)
+        return p, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+    log = []
+    t0 = time.time()
+    for it in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        t = jnp.asarray(rng.integers(0, CFG.train_steps, size=batch))
+        noise = jnp.asarray(rng.standard_normal((batch, CFG.latent_l, CFG.latent_c),
+                                                dtype=np.float32))
+        drop = jnp.asarray(rng.random(batch) < 0.1)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(lats[idx]),
+                                    jnp.asarray(ctx_all[idx]), t, noise, drop)
+        if it % log_every == 0 or it == steps - 1:
+            log.append({"step": it, "loss": float(loss),
+                        "elapsed_s": round(time.time() - t0, 2)})
+            print(f"[train-unet] step {it:4d} loss {float(loss):.4f}")
+    return params, log
+
+
+def train_vae(params, steps: int, batch: int = 8, lr: float = 1e-3, seed: int = 3,
+              log_every: int = 20):
+    """Train the VAE decoder to invert the analytic encoder (MSE)."""
+    _, lats, imgs = data.make_dataset(192, seed=seed)
+    n = lats.shape[0]
+
+    def loss_fn(p, lat, img):
+        out = M.vae_decoder(REF, p, lat)
+        return jnp.mean((out - img) ** 2)
+
+    @jax.jit
+    def step_fn(p, opt, lat, img):
+        loss, grads = jax.value_and_grad(loss_fn)(p, lat, img)
+        p, opt = adam_update(p, grads, opt, lr)
+        return p, opt, loss
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 1)
+    log = []
+    for it in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(lats[idx]),
+                                    jnp.asarray(imgs[idx]))
+        if it % log_every == 0 or it == steps - 1:
+            log.append({"step": it, "loss": float(loss)})
+            print(f"[train-vae]  step {it:4d} loss {float(loss):.4f}")
+    return params, log
+
+
+# ------------------------------------------------------------ (de)serialise
+
+
+def flatten_params(params):
+    """Deterministic (path, leaf) list matching jax's lowering order."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        out.append((name, np.asarray(leaf, np.float32)))
+    return out
+
+
+def save_params(params, path: str):
+    np.savez(path, **{name: leaf for name, leaf in flatten_params(params)})
+
+
+def load_params(template, path: str):
+    """Load leaves saved by save_params back into the template's structure."""
+    stored = np.load(path)
+    flat = flatten_params(template)
+    leaves = [jnp.asarray(stored[name]) for name, _ in flat]
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def main(out_dir: str = "../artifacts", unet_steps: int | None = None,
+         vae_steps: int | None = None):
+    os.makedirs(out_dir, exist_ok=True)
+    unet_steps = unet_steps if unet_steps is not None else int(
+        os.environ.get("SD_ACC_TRAIN_STEPS", "300"))
+    vae_steps = vae_steps if vae_steps is not None else int(
+        os.environ.get("SD_ACC_VAE_STEPS", "200"))
+
+    key = jax.random.PRNGKey(CFG.seed)
+    ku, kt, kv = jax.random.split(key, 3)
+    unet = M.init_unet_params(ku)
+    text = M.init_text_params(kt)
+    vae = M.init_vae_params(kv)
+
+    unet, unet_log = train_unet(unet, text, steps=unet_steps)
+    vae, vae_log = train_vae(vae, steps=vae_steps)
+
+    save_params(unet, os.path.join(out_dir, "params_unet.npz"))
+    save_params(text, os.path.join(out_dir, "params_text.npz"))
+    save_params(vae, os.path.join(out_dir, "params_vae.npz"))
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump({"unet": unet_log, "vae": vae_log,
+                   "unet_steps": unet_steps, "vae_steps": vae_steps}, f, indent=1)
+    print(f"[train] params + log written to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

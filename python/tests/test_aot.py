@@ -1,0 +1,119 @@
+"""AOT pipeline invariants: weight serialisation round-trips, manifest
+consistency, scheduler table, dataset/tokeniser determinism."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, train
+from compile.config import CFG
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_flatten_params_deterministic_order():
+    key = jax.random.PRNGKey(0)
+    p = {"b": {"x": jnp.ones((2,)), "a": jnp.zeros((3,))},
+         "a": [jnp.ones((1,)), jnp.full((2, 2), 2.0)]}
+    f1 = train.flatten_params(p)
+    f2 = train.flatten_params(p)
+    assert [n for n, _ in f1] == [n for n, _ in f2]
+    # Lowering order == tree_leaves order.
+    leaves = jax.tree_util.tree_leaves(p)
+    for (_, a), b in zip(f1, leaves):
+        assert np.array_equal(a, np.asarray(b))
+    del key
+
+
+def test_save_load_roundtrip(tmp_path):
+    key = jax.random.PRNGKey(3)
+    template = {"w": jax.random.normal(key, (4, 5)), "b": jnp.zeros((5,))}
+    path = str(tmp_path / "p.npz")
+    train.save_params(template, path)
+    loaded = train.load_params(
+        {"w": jnp.zeros((4, 5)), "b": jnp.ones((5,))}, path
+    )
+    assert np.allclose(np.asarray(loaded["w"]), np.asarray(template["w"]))
+    assert np.allclose(np.asarray(loaded["b"]), 0.0)
+
+
+def test_diffusion_schedule_monotone():
+    ab = train.diffusion_schedule()
+    assert ab.shape == (CFG.train_steps,)
+    assert np.all(np.diff(ab) < 0)
+    assert ab[0] > 0.99 and ab[-1] < 0.02
+
+
+def test_vocab_stable_and_padded_tokenizer():
+    v = data.build_vocab()
+    assert v["<pad>"] == 0
+    assert v == data.VOCAB
+    toks = data.tokenize("red circle x3 y4")
+    assert toks.shape == (CFG.ctx_len,)
+    assert toks[0] == v["red"]
+    assert toks[-1] == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_dataset_deterministic_and_bounded(seed):
+    t1, l1, i1 = data.make_dataset(4, seed=seed)
+    t2, l2, i2 = data.make_dataset(4, seed=seed)
+    assert np.array_equal(t1, t2)
+    assert np.array_equal(l1, l2)
+    assert i1.min() >= 0.0 and i1.max() <= 1.0
+    assert np.abs(l1).max() <= 3.0
+    del i2, l2
+
+
+def test_encoder_latent_shape_and_channels():
+    rng = np.random.default_rng(0)
+    objs, _ = data.random_scene(rng)
+    img = data.render_scene(objs, rng)
+    lat = data.encode_latent(img)
+    assert lat.shape == (CFG.latent_l, CFG.latent_c)
+    # Colour channels track the pooled image.
+    pooled = img.reshape(CFG.latent_h, 4, CFG.latent_w, 4, 3).mean(axis=(1, 3))
+    assert np.allclose(lat[:, :3].reshape(CFG.latent_h, CFG.latent_w, 3),
+                       pooled * 2 - 1, atol=1e-5)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_consistent_with_weight_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["model"]["latent_h"] == CFG.latent_h
+    assert set(man["weights"]) == {"unet", "text", "vae"}
+    for name, ws in man["weights"].items():
+        blob = os.path.getsize(os.path.join(ART, ws["file"]))
+        total = sum(e["len"] for e in ws["table"]) * 4
+        assert blob == total, f"{name}: file {blob} != table {total}"
+        # Offsets are contiguous.
+        off = 0
+        for e in ws["table"]:
+            assert e["offset"] == off
+            off += e["len"] * 4
+    # Every artifact file exists and n_params matches its weight set.
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(ART, a["file"])), a["file"]
+        wset = "unet" if a["name"].startswith("unet") else (
+            "text" if a["name"].startswith("text") else "vae")
+        assert a["n_params"] == len(man["weights"][wset]["table"])
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_hlo_artifacts_are_parseable_text():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for a in man["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        with open(path) as fh:
+            head = fh.read(4096)
+        assert "HloModule" in head, f"{a['file']} lacks HloModule header"

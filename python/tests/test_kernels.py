@@ -1,0 +1,220 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/strides/tiles; assert_allclose against ref.py.
+This is the core correctness signal for everything the AOT artifacts
+compute (DESIGN.md S1).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.attention import attention, mha
+from compile.kernels.uni_conv import uni_conv
+from compile.kernels import elementwise, norms, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- uni_conv
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.integers(2, 9),
+    w=st.integers(2, 9),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_uni_conv_matches_ref(seed, h, w, cin, cout, k, stride):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (h * w, cin))
+    wt = _arr(rng, (k * k, cin, cout))
+    b = _arr(rng, (cout,))
+    got = uni_conv(x, wt, b, h=h, w_dim=w, stride=stride)
+    want = ref.conv2d_same(x, wt, b, h, w, stride)
+    assert got.shape == want.shape
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), cout_tile=st.sampled_from([2, 3, 8, 128]))
+def test_uni_conv_cout_tiling_invariant(seed, cout_tile):
+    """C_out tiling is a pure scheduling knob: results must not change."""
+    rng = np.random.default_rng(seed)
+    h, w, cin, cout = 5, 4, 3, 7
+    x = _arr(rng, (h * w, cin))
+    wt = _arr(rng, (9, cin, cout))
+    b = _arr(rng, (cout,))
+    base = uni_conv(x, wt, b, h=h, w_dim=w, cout_tile=128)
+    tiled = uni_conv(x, wt, b, h=h, w_dim=w, cout_tile=cout_tile)
+    assert_allclose(np.asarray(tiled), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+def test_uni_conv_identity_kernel():
+    """A 3x3 kernel with only the centre tap set is the identity map."""
+    rng = np.random.default_rng(0)
+    h, w, c = 6, 6, 4
+    x = _arr(rng, (h * w, c))
+    wt = np.zeros((9, c, c), np.float32)
+    wt[4] = np.eye(c)
+    got = uni_conv(x, jnp.asarray(wt), jnp.zeros((c,)), h=h, w_dim=w)
+    assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-6)
+
+
+def test_uni_conv_edge_flags_zero_padding():
+    """Ones-input, ones-kernel: corner outputs see only 4 taps, centre 9."""
+    h = w = 5
+    x = jnp.ones((h * w, 1))
+    wt = jnp.ones((9, 1, 1))
+    out = np.asarray(uni_conv(x, wt, jnp.zeros((1,)), h=h, w_dim=w)).reshape(h, w)
+    assert out[0, 0] == pytest.approx(4.0)
+    assert out[0, 2] == pytest.approx(6.0)
+    assert out[2, 2] == pytest.approx(9.0)
+
+
+def test_uni_conv_stride2_shape():
+    rng = np.random.default_rng(1)
+    for h, w in [(8, 8), (6, 4), (5, 5), (7, 3)]:
+        x = _arr(rng, (h * w, 2))
+        wt = _arr(rng, (9, 2, 3))
+        got = uni_conv(x, wt, jnp.zeros((3,)), h=h, w_dim=w, stride=2)
+        assert got.shape == (-(-h // 2) * -(-w // 2), 3)
+
+
+# --------------------------------------------------------------- attention
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    lq=st.integers(1, 70),
+    lk=st.integers(1, 70),
+    d=st.sampled_from([4, 8, 16]),
+    tile=st.sampled_from([8, 16, 128]),
+)
+def test_attention_matches_ref(seed, lq, lk, d, tile):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_arr(rng, (n, d)) for n in (lq, lk, lk))
+    got = attention(q, k, v, q_tile=tile, k_tile=tile)
+    want = ref.attention(q, k, v)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_attention_tile_size_invariant():
+    rng = np.random.default_rng(3)
+    q, k, v = (_arr(rng, (40, 8)) for _ in range(3))
+    a = attention(q, k, v, q_tile=8, k_tile=8)
+    b = attention(q, k, v, q_tile=128, k_tile=128)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_attention_large_logits_stable():
+    """Online softmax (Eq. 5-6) must survive logits far above exp range."""
+    rng = np.random.default_rng(4)
+    q = _arr(rng, (8, 4)) * 100.0
+    k = _arr(rng, (32, 4)) * 100.0
+    v = _arr(rng, (32, 4))
+    got = np.asarray(attention(q, k, v, k_tile=8))
+    assert np.all(np.isfinite(got))
+    assert_allclose(got, np.asarray(ref.attention(q, k, v)), rtol=1e-3, atol=1e-4)
+
+
+def test_mha_heads_independent():
+    rng = np.random.default_rng(5)
+    q, k, v = (_arr(rng, (3, 20, 8)) for _ in range(3))
+    got = np.asarray(mha(q, k, v))
+    for hd in range(3):
+        want = np.asarray(ref.attention(q[hd], k[hd], v[hd]))
+        assert_allclose(got[hd], want, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), n_tiles=st.integers(1, 8), tile=st.integers(1, 16))
+def test_online_softmax_update_rule(seed, n_tiles, tile):
+    """Eq. (5)-(6): streaming exp-sum equals the global-max exp-sum."""
+    rng = np.random.default_rng(seed)
+    xs = _arr(rng, (n_tiles * tile,)) * 10.0
+    es, m = jnp.float32(0.0), jnp.float32(-1e30)
+    for i in range(n_tiles):
+        es, m = ref.online_softmax_update(es, m, xs[i * tile:(i + 1) * tile])
+    want_m = jnp.max(xs)
+    want_es = jnp.sum(jnp.exp(xs - want_m))
+    assert m == pytest.approx(float(want_m))
+    assert float(es) == pytest.approx(float(want_es), rel=1e-5)
+
+
+# ------------------------------------------------------------------- norms
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    l=st.integers(1, 60),
+    c=st.sampled_from([4, 8, 32]),
+    row_tile=st.sampled_from([4, 16, 128]),
+)
+def test_layernorm_matches_ref(seed, l, c, row_tile):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (l, c))
+    g, b = _arr(rng, (c,)), _arr(rng, (c,))
+    got = norms.layernorm(x, g, b, row_tile=row_tile)
+    want = ref.layernorm(x, g, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    l=st.integers(1, 60),
+    groups=st.sampled_from([1, 2, 4]),
+    cg=st.integers(1, 8),
+)
+def test_groupnorm_matches_ref(seed, l, groups, cg):
+    rng = np.random.default_rng(seed)
+    c = groups * cg
+    x = _arr(rng, (l, c))
+    g, b = _arr(rng, (c,)), _arr(rng, (c,))
+    got = norms.groupnorm(x, g, b, groups=groups)
+    want = ref.groupnorm(x, g, b, groups)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-4)
+
+
+def test_layernorm_output_statistics():
+    """With unit gamma / zero beta each row is ~N(0,1)-normalised."""
+    rng = np.random.default_rng(6)
+    x = _arr(rng, (10, 64)) * 5.0 + 3.0
+    out = np.asarray(norms.layernorm(x, jnp.ones((64,)), jnp.zeros((64,))))
+    assert_allclose(out.mean(axis=1), np.zeros(10), atol=1e-5)
+    assert_allclose(out.std(axis=1), np.ones(10), atol=1e-2)
+
+
+# ------------------------------------------------------------- elementwise
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), l=st.integers(1, 80), c=st.integers(1, 16))
+def test_gelu_silu_match_ref(seed, l, c):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (l, c)) * 4.0
+    assert_allclose(np.asarray(elementwise.gelu(x)),
+                    np.asarray(ref.gelu_sigmoid(x)), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(elementwise.silu(x)),
+                    np.asarray(ref.silu(x)), rtol=1e-5, atol=1e-6)
+
+
+def test_gelu_sigmoid_close_to_exact():
+    """Paper Sec. IV-D: sigmoid GELU is accuracy-neutral — bound its error."""
+    x = jnp.linspace(-6.0, 6.0, 1001).reshape(-1, 1)
+    approx = np.asarray(elementwise.gelu(x))
+    exact = np.asarray(ref.gelu_exact(x))
+    assert np.abs(approx - exact).max() < 0.021

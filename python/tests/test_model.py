@@ -1,0 +1,99 @@
+"""L2 model correctness: Pallas backend vs pure-jnp REF backend on the
+full U-Net, partial-U-Net consistency, CFG semantics, text encoder and
+VAE shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.backends import PALLAS, REF
+from compile.config import CFG
+
+
+@pytest.fixture(scope="module")
+def params():
+    key = jax.random.PRNGKey(CFG.seed)
+    ku, kt, kv = jax.random.split(key, 3)
+    return {
+        "unet": M.init_unet_params(ku),
+        "text": M.init_text_params(kt),
+        "vae": M.init_vae_params(kv),
+    }
+
+
+@pytest.fixture(scope="module")
+def inputs():
+    k = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(k)
+    return {
+        "lat": jax.random.normal(k1, (1, CFG.latent_l, CFG.latent_c)),
+        "t": jnp.array([321.0]),
+        "ctx": jax.random.normal(k2, (1, CFG.ctx_len, CFG.ctx_dim)),
+    }
+
+
+def test_pallas_backend_matches_ref_on_full_unet(params, inputs):
+    """The decisive L1-in-context check: the entire U-Net forward under
+    the Pallas kernels must match the pure-jnp oracle composition."""
+    ep, cp = M.unet_full(PALLAS, params["unet"], inputs["lat"], inputs["t"], inputs["ctx"], 7.5)
+    er, cr = M.unet_full(REF, params["unet"], inputs["lat"], inputs["t"], inputs["ctx"], 7.5)
+    assert_allclose(np.asarray(ep), np.asarray(er), rtol=5e-3, atol=5e-4)
+    for a, b in zip(cp, cr):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-4)
+
+
+def test_partial_equals_full_with_fresh_cache(params, inputs):
+    eps, caches = M.unet_full(REF, params["unet"], inputs["lat"], inputs["t"], inputs["ctx"], 7.5)
+    for l in range(1, CFG.max_cut + 1):
+        pe = M.unet_partial(REF, params["unet"], l, inputs["lat"], inputs["t"],
+                            inputs["ctx"], 7.5, caches[l - 1])
+        assert_allclose(np.asarray(pe), np.asarray(eps), rtol=1e-5, atol=1e-6)
+
+
+def test_cfg_guidance_semantics(params, inputs):
+    """g=0 must equal the unconditional prediction; g=1 the conditional."""
+    u = params["unet"]
+    lat1 = inputs["lat"][0]
+    t1 = inputs["t"][0]
+    null = u["null_ctx"]
+    eps_c, _ = M.unet_single(REF, u, lat1, t1, inputs["ctx"][0], 0)
+    eps_u, _ = M.unet_single(REF, u, lat1, t1, null, 0)
+    g0 = M.unet_full(REF, u, inputs["lat"], inputs["t"], inputs["ctx"], 0.0)[0][0]
+    g1 = M.unet_full(REF, u, inputs["lat"], inputs["t"], inputs["ctx"], 1.0)[0][0]
+    assert_allclose(np.asarray(g0), np.asarray(eps_u), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(g1), np.asarray(eps_c), rtol=1e-5, atol=1e-6)
+
+
+def test_calib_exposes_12_block_inputs(params, inputs):
+    _, ups = M.unet_calib(REF, params["unet"], inputs["lat"], inputs["t"], inputs["ctx"], 7.5)
+    assert len(ups) == 12
+    # Top three blocks share the (L, C0) shape used by the caches.
+    for u in ups[:3]:
+        assert u.shape == (1, CFG.latent_l, CFG.channels[0])
+
+
+def test_text_encoder_shape_and_padding(params):
+    toks = jnp.zeros((2, CFG.ctx_len), jnp.int32)
+    out = M.text_encoder(REF, params["text"], toks)
+    assert out.shape == (2, CFG.ctx_len, CFG.ctx_dim)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_vae_decoder_shape(params, inputs):
+    out = M.vae_decoder(REF, params["vae"], inputs["lat"])
+    assert out.shape == (1, CFG.img_h * CFG.img_w, 3)
+
+
+def test_unet_deterministic(params, inputs):
+    a, _ = M.unet_full(REF, params["unet"], inputs["lat"], inputs["t"], inputs["ctx"], 7.5)
+    b, _ = M.unet_full(REF, params["unet"], inputs["lat"], inputs["t"], inputs["ctx"], 7.5)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_timestep_changes_output(params, inputs):
+    a, _ = M.unet_full(REF, params["unet"], inputs["lat"], jnp.array([100.0]), inputs["ctx"], 7.5)
+    b, _ = M.unet_full(REF, params["unet"], inputs["lat"], jnp.array([900.0]), inputs["ctx"], 7.5)
+    assert float(jnp.abs(a - b).max()) > 1e-6

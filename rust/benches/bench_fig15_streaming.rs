@@ -1,0 +1,72 @@
+//! Fig. 15 — latency reduction by 2-stage streaming computing on isolated
+//! SD v1.4 transformer layers (self-attention and FFN at sequence lengths
+//! 4096 / 1024 / 256). Paper: softmax savings 39/24/14 %, FFN 25/14/8 %.
+
+use sd_acc::hwsim::arch::{AccelConfig, NonlinearMode};
+use sd_acc::hwsim::dataflow::matmul_cycles;
+use sd_acc::hwsim::streaming::nonlinear_visible_cycles;
+use sd_acc::models::inventory::OpKind;
+use sd_acc::util::table::{f, Table};
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let layers = [(4096usize, 320usize, "-1"), (1024, 640, "-2"), (256, 1280, "-3")];
+
+    println!("== Fig. 15 (left): self-attention ==");
+    let mut t = Table::new(&["layer", "seq", "matmul (Mcyc)", "softmax base (Mcyc)", "reduction", "paper"]);
+    let paper_attn = [0.39, 0.24, 0.14];
+    for (i, (seq, c, tag)) in layers.iter().enumerate() {
+        let mm = matmul_cycles(&cfg, *seq, *seq, *c).cycles
+            + matmul_cycles(&cfg, *seq, *c, *seq).cycles;
+        let sm = OpKind::Softmax { rows: *seq, cols: *seq };
+        let base = nonlinear_visible_cycles(&cfg, NonlinearMode::StoreThenCompute, &sm);
+        let stream = nonlinear_visible_cycles(&cfg, NonlinearMode::Streaming2Stage, &sm);
+        let red = 1.0 - (mm + stream) / (mm + base);
+        t.row(vec![
+            format!("attn{tag}"),
+            seq.to_string(),
+            f(mm / 1e6, 2),
+            f(base / 1e6, 2),
+            format!("{:.1}%", red * 100.0),
+            format!("{:.0}%", paper_attn[i] * 100.0),
+        ]);
+        assert!((red - paper_attn[i]).abs() < 0.05, "attn{tag} off paper band");
+    }
+    t.print();
+
+    println!("\n== Fig. 15 (right): FFN ==");
+    let paper_ffn = [0.25, 0.14, 0.08];
+    let mut t = Table::new(&["layer", "seq", "matmul (Mcyc)", "nonlinear base (Mcyc)", "reduction", "paper"]);
+    for (i, (seq, c, tag)) in layers.iter().enumerate() {
+        let inner = 4 * c;
+        let mm = matmul_cycles(&cfg, *seq, 2 * inner, *c).cycles
+            + matmul_cycles(&cfg, *seq, *c, inner).cycles;
+        let base = nonlinear_visible_cycles(
+            &cfg,
+            NonlinearMode::StoreThenCompute,
+            &OpKind::Layernorm { rows: *seq, cols: *c },
+        ) + nonlinear_visible_cycles(
+            &cfg,
+            NonlinearMode::StoreThenCompute,
+            &OpKind::Gelu { n: seq * inner },
+        );
+        let stream = 2.0
+            * nonlinear_visible_cycles(
+                &cfg,
+                NonlinearMode::Streaming2Stage,
+                &OpKind::Gelu { n: seq * inner },
+            );
+        let red = 1.0 - (mm + stream) / (mm + base);
+        t.row(vec![
+            format!("ffn{tag}"),
+            seq.to_string(),
+            f(mm / 1e6, 2),
+            f(base / 1e6, 2),
+            format!("{:.1}%", red * 100.0),
+            format!("{:.0}%", paper_ffn[i] * 100.0),
+        ]);
+        assert!((red - paper_ffn[i]).abs() < 0.06, "ffn{tag} off paper band");
+    }
+    t.print();
+    println!("\nall reductions within the paper's bands");
+}

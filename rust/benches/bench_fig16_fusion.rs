@@ -1,0 +1,62 @@
+//! Fig. 16 — adaptive fusion per-layer traffic gains (left) and the
+//! global-buffer size exploration (right; 2 MB is the paper's sweet spot).
+
+use sd_acc::hwsim::arch::{AccelConfig, Policy};
+use sd_acc::hwsim::engine::simulate;
+use sd_acc::hwsim::fusion::{plan_fusion, FusionKind};
+use sd_acc::hwsim::memory::{op_traffic, FusionTag};
+use sd_acc::models::inventory::{conv3x3_layers, sd_v14, unet_ops};
+use sd_acc::util::table::{f, Table};
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let ops = unet_ops(&sd_v14());
+    let convs = conv3x3_layers(&ops);
+    let plan = plan_fusion(&cfg, &convs);
+
+    println!("== Fig. 16 (left): per-conv-layer fusion decision and traffic ==");
+    let mut t = Table::new(&["layer", "name", "kind", "traffic no-fuse (MB)", "traffic fused (MB)", "saving"]);
+    let mut p_nofuse = Policy::optimized();
+    p_nofuse.fusion = false;
+    let p_fuse = Policy::optimized();
+    for (i, op) in convs.iter().enumerate() {
+        let base = op_traffic(&cfg, p_nofuse, &op.kind, FusionTag { weight_refetch: 1.0, ..Default::default() });
+        let fused = op_traffic(&cfg, p_fuse, &op.kind, plan.tags[i]);
+        let save = 1.0 - fused.total() / base.total().max(1.0);
+        t.row(vec![
+            i.to_string(),
+            op.name.clone(),
+            format!("{:?}", plan.kinds[i]),
+            f(base.total() / 1e6, 2),
+            f(fused.total() / 1e6, 2),
+            format!("{:.0}%", save * 100.0),
+        ]);
+    }
+    t.print();
+
+    let cross: Vec<usize> = plan
+        .kinds
+        .iter()
+        .enumerate()
+        .filter(|(_, &k)| k == FusionKind::CrossLayer)
+        .map(|(i, _)| i)
+        .collect();
+    println!("\ncross-layer fused layers: {cross:?} (paper: 0~5 and 44~51)");
+
+    println!("\n== Fig. 16 (right): global-buffer size sweep ==");
+    let mut t = Table::new(&["GB size", "off-chip traffic (GB)", "normalised (256KB=1)"]);
+    let mut norm = None;
+    for kb in [256usize, 512, 1024, 2048, 4096, 8192] {
+        let mut c = cfg.clone();
+        c.gb_bytes = kb << 10;
+        let traffic = simulate(&c, Policy::optimized(), &ops).traffic_bytes;
+        let n = *norm.get_or_insert(traffic);
+        t.row(vec![
+            format!("{} KB", kb),
+            f(traffic / 1e9, 3),
+            f(traffic / n, 3),
+        ]);
+    }
+    t.print();
+    println!("\npaper: 2 MB is the sweet spot (diminishing returns beyond)");
+}

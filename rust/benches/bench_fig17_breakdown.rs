@@ -1,0 +1,154 @@
+//! Fig. 17 — technique breakdown on SD v1.4:
+//! (a) roofline position, (b-left) hardware ablation AC -> AD -> SC,
+//! (b-right) phase-aware-sampling speedup on the optimised hardware,
+//! (c) energy breakdown. Also prints the Table I configuration.
+
+use sd_acc::hwsim::arch::{AccelConfig, Policy};
+use sd_acc::hwsim::engine::{simulate, simulate_unet_step};
+use sd_acc::models::inventory::{partial_unet_ops, sd_v14, unet_ops};
+use sd_acc::pas::cost::CostModel;
+use sd_acc::pas::plan::{PasConfig, StepAction};
+use sd_acc::util::table::{f, ratio, Table};
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let arch = sd_v14();
+    let ops = unet_ops(&arch);
+
+    println!("== Table I configuration ==");
+    println!(
+        "SA {}x{} @ {:.0} MHz, VPU {}-parallel, GB {} KB, DDR {:.1} GB/s, {:.2} W on-chip, peak {:.1} GMAC/s",
+        cfg.sa_rows,
+        cfg.sa_cols,
+        cfg.freq_hz / 1e6,
+        cfg.vpu_lanes,
+        cfg.gb_bytes >> 10,
+        cfg.dram_bw / 1e9,
+        cfg.onchip_power_w(),
+        cfg.peak_macs() / 1e9,
+    );
+
+    // ---------------------------------------------------------- (a) roofline
+    let opt = simulate(&cfg, Policy::optimized(), &ops);
+    let knee = cfg.peak_flops() / cfg.dram_bw;
+    println!("\n== Fig. 17a: roofline ==");
+    println!(
+        "operational intensity {:.0} FLOP/B vs knee {:.1} FLOP/B -> {}",
+        opt.operational_intensity(),
+        knee,
+        if opt.operational_intensity() > knee { "COMPUTE-BOUND (as in the paper)" } else { "memory-bound" }
+    );
+    println!(
+        "achieved {:.1} GMAC/s of {:.1} peak ({:.1}% of theoretical; paper ~95%)",
+        opt.macs / opt.seconds(&cfg) / 1e9,
+        cfg.peak_macs() / 1e9,
+        100.0 * opt.utilization(&cfg)
+    );
+
+    // --------------------------------------------- (b-left) hardware ablation
+    println!("\n== Fig. 17b (left): hardware ablation (one U-Net pass) ==");
+    let mut t = Table::new(&["config", "SA", "im2col", "nonlinear", "mem stall", "total (Mcyc)", "speedup", "paper"]);
+    let base_total = simulate(&cfg, Policy::baseline(), &ops).total_cycles();
+    for (name, p, paper) in [
+        ("baseline (im2col)", Policy::baseline(), "1.00x"),
+        ("+AC", Policy::with_ac(), "1.24x"),
+        ("+AC+AD", Policy::with_ac_ad(), "1.37x"),
+        ("+AC+AD+SC", Policy::optimized(), "1.65x"),
+    ] {
+        let r = simulate(&cfg, p, &ops);
+        t.row(vec![
+            name.into(),
+            f(r.sa_cycles / 1e6, 1),
+            f(r.conversion_cycles / 1e6, 1),
+            f(r.nonlinear_cycles / 1e6, 1),
+            f(r.mem_stall_cycles / 1e6, 1),
+            f(r.total_cycles() / 1e6, 1),
+            ratio(base_total / r.total_cycles()),
+            paper.into(),
+        ]);
+    }
+    t.print();
+
+    // ------------------------------------- (b-right) PAS speedup on the HW
+    println!("\n== Fig. 17b (right): PAS speedup on the optimised hardware ==");
+    let cm = CostModel::new(&arch);
+    let full_step = simulate_unet_step(&cfg, Policy::optimized(), &ops);
+    let partial_secs: Vec<f64> = (1..=3)
+        .map(|l| {
+            simulate_unet_step(&cfg, Policy::optimized(), &partial_unet_ops(&arch, l))
+                .seconds(&cfg)
+        })
+        .collect();
+    let mut t = Table::new(&["config", "theoretical (Eq.3)", "HW speedup", "HW/theory", "paper"]);
+    let paper_speedups = ["2.31x", "2.58x", "2.69x", "3.10x"];
+    for (i, sparse) in [2usize, 3, 4, 5].iter().enumerate() {
+        let pas = PasConfig::pas25(*sparse);
+        let plan = pas.plan(50);
+        let theory = cm.mac_reduction(&plan);
+        let t_full = full_step.seconds(&cfg) * 50.0;
+        let t_pas: f64 = plan
+            .iter()
+            .map(|a| match a {
+                StepAction::Full => full_step.seconds(&cfg),
+                StepAction::Partial(l) => partial_secs[*l - 1],
+            })
+            .sum();
+        let hw = t_full / t_pas;
+        t.row(vec![
+            pas.label(),
+            ratio(theory),
+            ratio(hw),
+            format!("{:.0}%", 100.0 * hw / theory),
+            paper_speedups[i].into(),
+        ]);
+        assert!(hw / theory > 0.80, "HW must realise most of the theoretical gain");
+    }
+    t.print();
+
+    // --------------------------------------------------- (c) energy breakdown
+    println!("\n== Fig. 17c: energy (one image, 50 steps) ==");
+    let mut t = Table::new(&["config", "time (s)", "on-chip (J)", "DRAM (J)", "total (J)", "saving"]);
+    let base_e = {
+        let r = simulate_unet_step(&cfg, Policy::baseline(), &ops);
+        r.energy_j(&cfg) * 50.0
+    };
+    for (name, p, plan) in [
+        ("baseline", Policy::baseline(), None),
+        ("hw-optimized", Policy::optimized(), None),
+        ("hw-opt + PAS-25/4", Policy::optimized(), Some(PasConfig::pas25(4))),
+    ] {
+        let (secs, energy) = match plan {
+            None => {
+                let r = simulate_unet_step(&cfg, p, &ops);
+                (r.seconds(&cfg) * 50.0, r.energy_j(&cfg) * 50.0)
+            }
+            Some(pas) => {
+                let full = simulate_unet_step(&cfg, p, &ops);
+                let mut secs = 0.0;
+                let mut e = 0.0;
+                for a in pas.plan(50) {
+                    let r = match a {
+                        StepAction::Full => full.clone(),
+                        StepAction::Partial(l) => {
+                            simulate_unet_step(&cfg, p, &partial_unet_ops(&arch, l))
+                        }
+                    };
+                    secs += r.seconds(&cfg);
+                    e += r.energy_j(&cfg);
+                }
+                (secs, e)
+            }
+        };
+        let onchip = cfg.onchip_power_w() * secs;
+        t.row(vec![
+            name.into(),
+            f(secs, 1),
+            f(onchip, 0),
+            f(energy - onchip, 1),
+            f(energy, 0),
+            ratio(base_e / energy),
+        ]);
+    }
+    t.print();
+    println!("\npaper: hardware opts ~1.73x energy, +PAS ~2.63x more; on-chip dominates");
+}

@@ -1,0 +1,64 @@
+//! Fig. 19 — energy saving of the (unscaled, VCU118-config) accelerator
+//! with PAS over the original model on AMD 6800H / Intel 5220R / V100.
+//! Paper: 14.7~37.3x, 18.3~44.9x, 2.7~6.0x across the three models.
+
+use sd_acc::hwsim::arch::{AccelConfig, Policy};
+use sd_acc::hwsim::baselines::{amd_6800h, intel_5220r, v100};
+use sd_acc::hwsim::engine::simulate_unet_step;
+use sd_acc::models::inventory::*;
+use sd_acc::pas::cost::CostModel;
+use sd_acc::pas::plan::{PasConfig, StepAction};
+use sd_acc::util::table::{ratio, Table};
+
+fn accel_image_energy(cfg: &AccelConfig, arch: &UNetArch, pas: PasConfig) -> f64 {
+    let full = simulate_unet_step(cfg, Policy::optimized(), &unet_ops(arch));
+    let mut e = 0.0;
+    for a in pas.plan(50) {
+        e += match a {
+            StepAction::Full => full.energy_j(cfg),
+            StepAction::Partial(l) => {
+                simulate_unet_step(cfg, Policy::optimized(), &partial_unet_ops(arch, l))
+                    .energy_j(cfg)
+            }
+        };
+    }
+    e
+}
+
+fn main() {
+    let cfg = AccelConfig::default();
+    let plats = [amd_6800h(), intel_5220r(), v100()];
+
+    let mut t = Table::new(&["model", "PAS", "ours (kJ)", "vs AMD", "vs Intel", "vs V100"]);
+    let mut v100_savings = Vec::new();
+    for arch in [sd_v14(), sd_v21_base(), sd_xl()] {
+        let ops = unet_ops(&arch);
+        let cm = CostModel::new(&arch);
+        for sparse in [2usize, 5] {
+            let pas = PasConfig::pas25(sparse);
+            let _red = cm.mac_reduction(&pas.plan(50));
+            let ours = accel_image_energy(&cfg, &arch, pas);
+            let mut row = vec![arch.name.to_string(), pas.label(), format!("{:.2}", ours / 1e3)];
+            for p in &plats {
+                // Original model on the platform: 50 CFG-doubled steps.
+                let base = p.energy_j(&ops) * 100.0;
+                let save = base / ours;
+                row.push(ratio(save));
+                if p.name == "V100" {
+                    v100_savings.push(save);
+                }
+            }
+            t.row(row);
+        }
+    }
+    t.print();
+
+    println!("\npaper bands: 14.7~37.3x (AMD), 18.3~44.9x (Intel), 2.7~6.0x (V100)");
+    // v1.4 / v2.1 must land inside the paper's 2.7~6.0x; XL may exceed it
+    // because our Table-II MAC reduction on XL (up to 5.7x) is larger.
+    for s in &v100_savings[..4] {
+        assert!((2.4..6.5).contains(s), "V100 energy saving {s}");
+    }
+    assert!(v100_savings[4..].iter().all(|s| *s > 3.0));
+    println!("V100 savings in band: {v100_savings:?}");
+}

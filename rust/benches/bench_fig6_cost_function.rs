@@ -1,0 +1,32 @@
+//! Fig. 6 — per-block MAC breakdown of the U-Net and the cost function
+//! f(l) (cumulative MAC ratio of the first l down+up blocks).
+
+use sd_acc::models::inventory::*;
+use sd_acc::pas::cost::CostModel;
+use sd_acc::util::table::{f, Table};
+
+fn main() {
+    for arch in [sd_v14(), sd_v21_base(), sd_xl()] {
+        let cm = CostModel::new(&arch);
+        println!("== Fig. 6 — {} (total {:.1} GMAC/step) ==", arch.name, cm.total as f64 / 1e9);
+        let mut t = Table::new(&["block l", "down MACs (G)", "up MACs (G)", "f(l)"]);
+        for l in 1..=cm.n_blocks {
+            t.row(vec![
+                l.to_string(),
+                f(cm.down[l] as f64 / 1e9, 2),
+                f(cm.up[l] as f64 / 1e9, 2),
+                f(cm.f(l), 4),
+            ]);
+        }
+        t.row(vec![
+            format!("{} (full+mid)", cm.n_blocks + 1),
+            "-".into(),
+            f(cm.mid as f64 / 1e9, 2),
+            f(cm.f(cm.n_blocks + 1), 4),
+        ]);
+        t.print();
+        println!();
+        // Shape check: f is increasing and top blocks are cheap.
+        assert!(cm.f(2) < 0.4, "retaining 2 blocks must be cheap");
+    }
+}

@@ -1,0 +1,110 @@
+//! §Perf — hot-path micro-benchmarks for the whole stack (used by the
+//! EXPERIMENTS.md §Perf before/after log).
+//!
+//! Always runs the L3 simulator/substrate benches; runtime benches
+//! (PJRT execute, coordinator step) run when artifacts are present.
+
+use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::hwsim::arch::{AccelConfig, Policy};
+use sd_acc::hwsim::engine::simulate;
+use sd_acc::models::inventory::{sd_v14, unet_ops};
+use sd_acc::pas::cost::CostModel;
+use sd_acc::pas::plan::PasConfig;
+use sd_acc::runtime::{default_artifacts_dir, Input, Runtime, RuntimeService, Tensor};
+use sd_acc::scheduler::{NoiseSchedule, Pndm, Sampler};
+use sd_acc::util::bench::Bench;
+use sd_acc::util::json::Json;
+use sd_acc::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::default();
+
+    // --- L3 simulator throughput -----------------------------------------
+    let cfg = AccelConfig::default();
+    let ops = unet_ops(&sd_v14());
+    println!("hwsim inventory: {} ops", ops.len());
+    b.run("hwsim/simulate_sd14_optimized", || {
+        std::hint::black_box(simulate(&cfg, Policy::optimized(), &ops));
+    });
+    b.run("hwsim/simulate_sd14_baseline", || {
+        std::hint::black_box(simulate(&cfg, Policy::baseline(), &ops));
+    });
+
+    // --- PAS search space --------------------------------------------------
+    let cm = CostModel::new(&sd_v14());
+    b.run("pas/cost_model_build", || {
+        std::hint::black_box(CostModel::new(&sd_v14()));
+    });
+    b.run("pas/plan_eval_50steps", || {
+        let plan = PasConfig::pas25(4).plan(50);
+        std::hint::black_box(cm.mac_reduction(&plan));
+    });
+
+    // --- scheduler ----------------------------------------------------------
+    let sched = NoiseSchedule::scaled_linear(1000, 0.00085, 0.012);
+    let mut rng = Pcg32::seeded(3);
+    let latent: Vec<f32> = rng.gaussian_vec(256 * 4);
+    let eps: Vec<f32> = rng.gaussian_vec(256 * 4);
+    b.run("scheduler/pndm_step_1k_elems", || {
+        let mut p = Pndm::new(sched.clone(), 50);
+        for i in 0..4 {
+            std::hint::black_box(p.step(i, &latent, &eps));
+        }
+    });
+
+    // --- json codec ----------------------------------------------------------
+    let blob = Json::Arr((0..2000).map(|i| Json::Num(i as f64 * 0.5)).collect()).to_string();
+    b.run("util/json_parse_2k_floats", || {
+        std::hint::black_box(Json::parse(&blob).unwrap());
+    });
+
+    // --- runtime hot path (needs artifacts) -----------------------------------
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let svc = RuntimeService::start(&dir).expect("runtime");
+        let h = svc.handle();
+        let m = h.manifest().model.clone();
+        // warm compile outside timing
+        h.preload(&[Runtime::unet_full(1), Runtime::unet_partial(2, 1)]).expect("preload");
+
+        let mut rng = Pcg32::seeded(5);
+        let lat = Tensor::new(vec![1, m.latent_l(), m.latent_c], rng.gaussian_vec(m.latent_elems())).unwrap();
+        let t = Tensor::new(vec![1], vec![400.0]).unwrap();
+        let ctx = Tensor::new(vec![1, m.ctx_len, m.ctx_dim], rng.gaussian_vec(m.ctx_len * m.ctx_dim)).unwrap();
+        let g = Tensor::scalar(7.5);
+        let inputs = vec![
+            Input::F32(lat.clone()),
+            Input::F32(t.clone()),
+            Input::F32(ctx.clone()),
+            Input::F32(g.clone()),
+        ];
+        let mut bench_rt = Bench::new(1, 5);
+        bench_rt.run("runtime/unet_full_b1_execute", || {
+            std::hint::black_box(h.execute(&Runtime::unet_full(1), &inputs).unwrap());
+        });
+        let full = h.execute(&Runtime::unet_full(1), &inputs).unwrap();
+        let partial_inputs = vec![
+            Input::F32(lat),
+            Input::F32(t),
+            Input::F32(ctx),
+            Input::F32(g),
+            Input::F32(full[2].clone()),
+        ];
+        bench_rt.run("runtime/unet_partial_l2_b1_execute", || {
+            std::hint::black_box(h.execute(&Runtime::unet_partial(2, 1), &partial_inputs).unwrap());
+        });
+
+        let coord = Coordinator::new(h);
+        let mut req = GenRequest::new("red circle x3 y3", 11);
+        req.steps = 4;
+        req.sampler = "ddim".into();
+        bench_rt.run("coordinator/generate_4step_b1", || {
+            std::hint::black_box(coord.generate_one(&req).unwrap());
+        });
+        bench_rt.emit_json();
+    } else {
+        println!("(artifacts not built — runtime hot-path benches skipped)");
+    }
+
+    b.emit_json();
+}

@@ -1,0 +1,280 @@
+//! Generation coordinator (L3): owns the denoising loop.
+//!
+//! For each batch of requests the coordinator tokenises prompts, runs the
+//! text encoder once, initialises seeded Gaussian latents, then walks the
+//! scheduler timesteps executing either the full U-Net artifact (which
+//! refreshes the feature cache) or a partial artifact (which consumes it)
+//! according to the phase-aware sampling plan. Python is never invoked:
+//! every compute step is a PJRT execution of an AOT artifact.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::models::inventory::sd_tiny;
+use crate::pas::cost::CostModel;
+use crate::pas::plan::{plan_is_executable, SamplingPlan, StepAction};
+use crate::runtime::{Input, Runtime, RuntimeHandle, Tensor, TensorI32};
+use crate::scheduler::{make_sampler, NoiseSchedule};
+use crate::util::rng::Pcg32;
+
+/// One text-to-image generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub seed: u64,
+    pub steps: usize,
+    pub guidance: f32,
+    /// "ddim" | "pndm".
+    pub sampler: String,
+    pub plan: SamplingPlan,
+}
+
+impl GenRequest {
+    pub fn new(prompt: &str, seed: u64) -> GenRequest {
+        GenRequest {
+            prompt: prompt.to_string(),
+            seed,
+            steps: 50,
+            guidance: 7.5,
+            sampler: "pndm".into(),
+            plan: SamplingPlan::Full,
+        }
+    }
+
+    /// Batching key: requests sharing it can run lockstep.
+    pub fn batch_key(&self) -> String {
+        format!("{}|{}|{:?}|{}", self.steps, self.sampler, self.plan, self.guidance)
+    }
+}
+
+/// Per-request generation outcome.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    /// Final denoised latent, (L, latent_c).
+    pub latent: Tensor,
+    pub stats: GenStats,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenStats {
+    pub actions: Vec<StepAction>,
+    pub step_ms: Vec<f64>,
+    /// Eq. 3 MAC reduction of the executed plan (sd-tiny cost model).
+    pub mac_reduction: f64,
+    pub total_ms: f64,
+}
+
+/// The coordinator: runtime handle + schedule + cost accounting.
+pub struct Coordinator {
+    runtime: RuntimeHandle,
+    cost_tiny: CostModel,
+}
+
+impl Coordinator {
+    pub fn new(runtime: RuntimeHandle) -> Coordinator {
+        Coordinator { runtime, cost_tiny: CostModel::new(&sd_tiny()) }
+    }
+
+    pub fn runtime(&self) -> &RuntimeHandle {
+        &self.runtime
+    }
+
+    /// Batch sizes with compiled artifacts, ascending.
+    pub fn supported_batches(&self) -> Vec<usize> {
+        let mut b = self.runtime.manifest().batch_sizes.clone();
+        b.sort_unstable();
+        b
+    }
+
+    /// Split `n` requests into supported batch sizes, largest first.
+    pub fn chunk_sizes(&self, mut n: usize) -> Vec<usize> {
+        let supported = self.supported_batches();
+        let mut out = Vec::new();
+        while n > 0 {
+            let take = supported
+                .iter()
+                .rev()
+                .find(|&&b| b <= n)
+                .copied()
+                .unwrap_or(*supported.first().expect("no batch sizes"));
+            let take = take.min(n).max(1);
+            // If even the smallest artifact is bigger than n, we must pad —
+            // handled by the caller; here we just emit the smallest.
+            out.push(take);
+            n -= take.min(n);
+        }
+        out
+    }
+
+    /// Encode prompts (one text-encoder execution).
+    pub fn encode_prompts(&self, prompts: &[String]) -> Result<Tensor> {
+        let b = prompts.len();
+        let m = &self.runtime.manifest().model;
+        let mut toks = Vec::with_capacity(b * m.ctx_len);
+        for p in prompts {
+            toks.extend(self.runtime.manifest().tokenize(p));
+        }
+        let t = TensorI32::new(vec![b, m.ctx_len], toks)?;
+        let name = Runtime::text_encoder(b);
+        let out = self.runtime.execute(&name, &[Input::I32(t)])?;
+        Ok(out.into_iter().next().ok_or_else(|| anyhow!("empty text output"))?)
+    }
+
+    /// Seeded N(0,1) initial latent for one request, (L, latent_c).
+    pub fn init_latent(&self, seed: u64) -> Tensor {
+        let m = &self.runtime.manifest().model;
+        let mut rng = Pcg32::new(seed, 0x1a7e47);
+        Tensor {
+            dims: vec![m.latent_l(), m.latent_c],
+            data: rng.gaussian_vec(m.latent_elems()),
+        }
+    }
+
+    /// Run one lockstep batch. All requests must share `batch_key()` and
+    /// the batch size must have compiled artifacts.
+    pub fn generate_batch(&self, reqs: &[GenRequest]) -> Result<Vec<GenResult>> {
+        let b = reqs.len();
+        if b == 0 {
+            bail!("empty batch");
+        }
+        if !self.supported_batches().contains(&b) {
+            bail!("no artifacts for batch size {b} (have {:?})", self.supported_batches());
+        }
+        let key = reqs[0].batch_key();
+        if reqs.iter().any(|r| r.batch_key() != key) {
+            bail!("generate_batch: requests are not batch-compatible");
+        }
+        let m = self.runtime.manifest().model.clone();
+        let steps = reqs[0].steps;
+        let plan = reqs[0].plan.actions(steps);
+        if !plan_is_executable(&plan) {
+            bail!("plan is not executable (partial step before any full step)");
+        }
+        let max_cut = m.max_cut;
+        if let Some(StepAction::Partial(l)) =
+            plan.iter().find(|a| matches!(a, StepAction::Partial(l) if *l > max_cut))
+        {
+            bail!("plan uses cut {l} > compiled max_cut {max_cut}");
+        }
+
+        let sched = NoiseSchedule::new(self.runtime.manifest().alpha_bar.clone());
+        let mut sampler = make_sampler(&reqs[0].sampler, sched, steps);
+        let ts = sampler.timesteps().to_vec();
+
+        // Text conditioning (one batched execution).
+        let prompts: Vec<String> = reqs.iter().map(|r| r.prompt.clone()).collect();
+        let ctx = self.encode_prompts(&prompts)?;
+
+        // Stacked latents.
+        let lat_parts: Vec<Tensor> = reqs.iter().map(|r| self.init_latent(r.seed)).collect();
+        let mut latent = Tensor::stack(&lat_parts)?;
+        let g = Tensor::scalar(reqs[0].guidance);
+
+        // Feature caches per cut level (refreshed by full steps).
+        let mut caches: Vec<Option<Tensor>> = vec![None; max_cut + 1];
+        let mut step_ms = Vec::with_capacity(steps);
+        let t_start = Instant::now();
+
+        for (i, &action) in plan.iter().enumerate() {
+            let t0 = Instant::now();
+            let t_in = Tensor::new(vec![b], vec![ts[i] as f32; b])?;
+            let eps = match action {
+                StepAction::Full => {
+                    let out = self.runtime.execute(
+                        &Runtime::unet_full(b),
+                        &[
+                            Input::F32(latent.clone()),
+                            Input::F32(t_in),
+                            Input::F32(ctx.clone()),
+                            Input::F32(g.clone()),
+                        ],
+                    )?;
+                    let mut it = out.into_iter();
+                    let eps = it.next().ok_or_else(|| anyhow!("missing eps"))?;
+                    for (l, cache) in it.enumerate() {
+                        caches[l + 1] = Some(cache);
+                    }
+                    eps
+                }
+                StepAction::Partial(l) => {
+                    let cache = caches[l]
+                        .clone()
+                        .ok_or_else(|| anyhow!("partial step {i} without cache at cut {l}"))?;
+                    let out = self.runtime.execute(
+                        &Runtime::unet_partial(l, b),
+                        &[
+                            Input::F32(latent.clone()),
+                            Input::F32(t_in),
+                            Input::F32(ctx.clone()),
+                            Input::F32(g.clone()),
+                            Input::F32(cache),
+                        ],
+                    )?;
+                    out.into_iter().next().ok_or_else(|| anyhow!("missing eps"))?
+                }
+            };
+            // Scheduler update (same t for every batch lane).
+            let new_data = sampler.step(i, &latent.data, &eps.data);
+            latent.data = new_data;
+            step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+
+        let total_ms = t_start.elapsed().as_secs_f64() * 1e3;
+        let stats = GenStats {
+            actions: plan.clone(),
+            step_ms,
+            mac_reduction: self.cost_tiny.mac_reduction(&plan),
+            total_ms,
+        };
+        Ok((0..b)
+            .map(|i| GenResult { latent: latent.index0(i), stats: stats.clone() })
+            .collect())
+    }
+
+    /// Convenience wrapper for a single request.
+    pub fn generate_one(&self, req: &GenRequest) -> Result<GenResult> {
+        Ok(self.generate_batch(std::slice::from_ref(req))?.remove(0))
+    }
+
+    /// Decode latents to RGB images, (B, img_h*img_w, 3) in [0, 1]-ish.
+    pub fn decode(&self, latents: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut out = Vec::with_capacity(latents.len());
+        for chunk_size in self.chunk_sizes(latents.len()) {
+            let start = out.len();
+            let batch = Tensor::stack(&latents[start..start + chunk_size])?;
+            let img = self
+                .runtime
+                .execute(&Runtime::vae_decoder(chunk_size), &[Input::F32(batch)])?
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("missing image output"))?;
+            for i in 0..chunk_size {
+                out.push(img.index0(i));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_key_separates_incompatible_requests() {
+        let a = GenRequest::new("x", 1);
+        let mut b = GenRequest::new("y", 2);
+        assert_eq!(a.batch_key(), b.batch_key());
+        b.steps = 25;
+        assert_ne!(a.batch_key(), b.batch_key());
+    }
+
+    #[test]
+    fn request_defaults() {
+        let r = GenRequest::new("red circle", 7);
+        assert_eq!(r.steps, 50);
+        assert_eq!(r.sampler, "pndm");
+        assert!(matches!(r.plan, SamplingPlan::Full));
+    }
+}

@@ -1,0 +1,205 @@
+//! Accelerator configuration (Table I) and derived constants.
+
+/// The SD-Acc accelerator configuration (Sec. VI-A / Table I).
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// Systolic array height/width (weight-stationary).
+    pub sa_rows: usize,
+    pub sa_cols: usize,
+    /// VPU parallel lanes (H-parallel, Fig. 10).
+    pub vpu_lanes: usize,
+    pub freq_hz: f64,
+    /// fp16 arithmetic.
+    pub dtype_bytes: usize,
+    /// Global buffer capacity (bytes).
+    pub gb_bytes: usize,
+    /// Dedicated input/weight/output buffers (bytes each).
+    pub small_buf_bytes: usize,
+    /// Off-chip bandwidth (bytes/s).
+    pub dram_bw: f64,
+    // --- power (Table I) ----------------------------------------------
+    pub p_sa_w: f64,
+    pub p_vpu_w: f64,
+    pub p_gb_w: f64,
+    pub p_small_buf_w: f64,
+    /// Off-chip access energy (J per byte), HMC-class memory [45].
+    pub dram_j_per_byte: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            sa_rows: 32,
+            sa_cols: 32,
+            vpu_lanes: 32,
+            freq_hz: 200e6,
+            dtype_bytes: 2,
+            gb_bytes: 2 << 20,
+            small_buf_bytes: 64 << 10,
+            dram_bw: 38.4e9,
+            p_sa_w: 11.30,
+            p_vpu_w: 0.98,
+            p_gb_w: 0.91,
+            p_small_buf_w: 0.14,
+            dram_j_per_byte: 30e-12,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Total on-chip power (Table I: 15.98 W incl. misc.).
+    pub fn onchip_power_w(&self) -> f64 {
+        // The 2.65 W residual (clocking, control, IO) from Table I's
+        // total is folded in as a constant.
+        self.p_sa_w + self.p_vpu_w + self.p_gb_w + self.p_small_buf_w + 2.65
+    }
+
+    /// MACs retired per cycle at full PE utilisation.
+    pub fn macs_per_cycle(&self) -> f64 {
+        (self.sa_rows * self.sa_cols) as f64
+    }
+
+    /// Peak MAC/s — the paper's "GFLOPS" counts 1 add + 1 mul as one MAC
+    /// (Fig. 2 caption), so Table I's 204.8 GFLOPS is peak_macs here.
+    pub fn peak_macs(&self) -> f64 {
+        self.macs_per_cycle() * self.freq_hz
+    }
+
+    /// Peak throughput in conventional FLOP/s (1 MAC = 2 FLOP) — used
+    /// when comparing against CPU/GPU datasheet numbers.
+    pub fn peak_flops(&self) -> f64 {
+        2.0 * self.peak_macs()
+    }
+
+    pub fn cycles_to_seconds(&self, cycles: f64) -> f64 {
+        cycles / self.freq_hz
+    }
+
+    /// Sec. VI-F scaling for the speed comparison: 1 GHz, 4096 MACs
+    /// (64x64 array), keeping everything else.
+    pub fn scaled_1ghz_4096(&self) -> AccelConfig {
+        AccelConfig {
+            sa_rows: 64,
+            sa_cols: 64,
+            vpu_lanes: 64,
+            freq_hz: 1e9,
+            // Bandwidth scales with the MAC count to keep the balance
+            // point (consistent with prior accelerators [35], [42]).
+            dram_bw: self.dram_bw * 4.0,
+            ..self.clone()
+        }
+    }
+
+    /// Iso-peak-throughput scaling for Fig. 18 comparisons.
+    pub fn scaled_to_peak(&self, peak_flops: f64) -> AccelConfig {
+        let ratio = peak_flops / self.peak_flops();
+        let dim_scale = ratio.sqrt();
+        let rows = ((self.sa_rows as f64 * dim_scale).round() as usize).max(1);
+        AccelConfig {
+            sa_rows: rows,
+            sa_cols: rows,
+            vpu_lanes: rows,
+            dram_bw: self.dram_bw * ratio,
+            ..self.clone()
+        }
+    }
+}
+
+/// Simulator policy switches (the ablation axes of Fig. 17b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Policy {
+    pub dataflow: Dataflow,
+    pub nonlinear: NonlinearMode,
+    pub reuse: ReuseMode,
+    pub fusion: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Baseline: conv lowered by a dedicated im2col module ([11], [18]).
+    Im2col,
+    /// The paper's address-centric Uni-conv (Sec. IV-A/B).
+    AddressCentric,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NonlinearMode {
+    /// Baseline: store-then-compute, multi-pass VPU, serialised with SA.
+    StoreThenCompute,
+    /// The paper's 2-stage streaming computing (Sec. IV-C).
+    Streaming2Stage,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseMode {
+    /// Baseline: no cross-tile operand pinning — the streamed operand is
+    /// re-fetched per output-tile group.
+    Fixed,
+    /// Adaptive input/weight reuse (Sec. V-B): pin the smaller operand
+    /// in the global buffer, single-pass the rest.
+    Adaptive,
+}
+
+impl Policy {
+    /// Fig. 17b's four configurations.
+    pub fn baseline() -> Policy {
+        Policy {
+            dataflow: Dataflow::Im2col,
+            nonlinear: NonlinearMode::StoreThenCompute,
+            reuse: ReuseMode::Fixed,
+            fusion: false,
+        }
+    }
+
+    pub fn with_ac() -> Policy {
+        Policy { dataflow: Dataflow::AddressCentric, ..Policy::baseline() }
+    }
+
+    pub fn with_ac_ad() -> Policy {
+        Policy { reuse: ReuseMode::Adaptive, fusion: true, ..Policy::with_ac() }
+    }
+
+    /// Fully optimised (AC + AD + SC).
+    pub fn optimized() -> Policy {
+        Policy { nonlinear: NonlinearMode::Streaming2Stage, ..Policy::with_ac_ad() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_constants() {
+        let c = AccelConfig::default();
+        assert_eq!(c.macs_per_cycle() as u64, 1024);
+        // 204.8 "GFLOPS" peak in the paper's MAC counting (Sec. VI-D).
+        assert!((c.peak_macs() - 204.8e9).abs() < 1e6);
+        assert!((c.onchip_power_w() - 15.98).abs() < 0.01);
+        assert_eq!(c.gb_bytes, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn scaled_config_matches_sec6f() {
+        let s = AccelConfig::default().scaled_1ghz_4096();
+        assert_eq!(s.macs_per_cycle() as u64, 4096);
+        // 4.096 TMAC/s = 8.192 TFLOPS after scaling.
+        assert!((s.peak_flops() - 8.192e12).abs() < 1e9);
+    }
+
+    #[test]
+    fn iso_peak_scaling() {
+        let c = AccelConfig::default();
+        let s = c.scaled_to_peak(4.0 * c.peak_flops());
+        assert_eq!(s.sa_rows, 64);
+        assert!((s.peak_flops() / c.peak_flops() - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn policy_ladder() {
+        assert_eq!(Policy::baseline().dataflow, Dataflow::Im2col);
+        assert_eq!(Policy::with_ac().dataflow, Dataflow::AddressCentric);
+        assert!(Policy::with_ac_ad().fusion);
+        assert_eq!(Policy::optimized().nonlinear, NonlinearMode::Streaming2Stage);
+    }
+}

@@ -1,0 +1,191 @@
+//! Systolic-array timing for linear operators under both dataflows.
+
+use super::arch::{AccelConfig, Dataflow};
+use crate::models::inventory::OpKind;
+
+/// Cost of a linear op on the SA.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SaCost {
+    pub cycles: f64,
+    /// Extra cycles visible before the SA can stream (im2col conversion).
+    pub conversion_cycles: f64,
+    pub macs: f64,
+}
+
+impl SaCost {
+    pub fn utilization(&self, cfg: &AccelConfig) -> f64 {
+        if self.cycles == 0.0 {
+            return 0.0;
+        }
+        self.macs / (self.cycles * cfg.macs_per_cycle())
+    }
+}
+
+/// Weight-stationary matmul (m, k) x (k, n): the SA processes one
+/// (sa_rows x sa_cols) weight tile at a time, streaming m rows through
+/// it, with fill/drain and weight-load overheads per tile.
+///
+/// `double_buffered`: the adaptive dataflow prefetches the next weight
+/// tile while the current one streams (Sec. V-B), shrinking the per-tile
+/// fill overhead; the fixed baseline reloads serially.
+pub fn matmul_cycles_db(
+    cfg: &AccelConfig,
+    m: usize,
+    n: usize,
+    k: usize,
+    double_buffered: bool,
+) -> SaCost {
+    let kt = k.div_ceil(cfg.sa_rows) as f64;
+    let nt = n.div_ceil(cfg.sa_cols) as f64;
+    let fill = (cfg.sa_rows + cfg.sa_cols) as f64;
+    // Double-buffered: weight prefetch overlaps the previous tile's
+    // stream, leaving only the output drain visible.
+    let per_tile = m as f64 + if double_buffered { cfg.sa_cols as f64 } else { 1.5 * fill };
+    SaCost {
+        cycles: kt * nt * per_tile,
+        conversion_cycles: 0.0,
+        macs: (m as f64) * (n as f64) * (k as f64),
+    }
+}
+
+/// Double-buffered matmul (the optimised design's default).
+pub fn matmul_cycles(cfg: &AccelConfig, m: usize, n: usize, k: usize) -> SaCost {
+    matmul_cycles_db(cfg, m, n, k, true)
+}
+
+/// im2col bank-conflict inflation on the converted stream (Sec. I / [53]).
+pub const IM2COL_CONFLICT_FACTOR: f64 = 1.30;
+/// im2col module write throughput (elements/cycle).
+pub const IM2COL_ELEMS_PER_CYCLE: f64 = 32.0;
+/// Fraction of the conversion latency NOT hidden behind SA compute
+/// (explicit latency, varying kernel/stride breaks overlap — Sec. IV).
+pub const IM2COL_VISIBLE_FRACTION: f64 = 0.5;
+
+/// Convolution cost under the chosen dataflow.
+pub fn conv_cycles(
+    cfg: &AccelConfig,
+    dataflow: Dataflow,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+) -> SaCost {
+    conv_cycles_db(cfg, dataflow, h, w, cin, cout, k, stride, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn conv_cycles_db(
+    cfg: &AccelConfig,
+    dataflow: Dataflow,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    double_buffered: bool,
+) -> SaCost {
+    let p = h.div_ceil(stride);
+    let q = w.div_ceil(stride);
+    let macs = (p * q * cin * cout * k * k) as f64;
+    match dataflow {
+        Dataflow::AddressCentric => {
+            // Uni-conv (Fig. 10): F independent 1x1 matmuls; stride is an
+            // input-address stride, so only the needed rows stream in.
+            // Partial-sum routing runs on the VPU in parallel (hidden).
+            let per_kernel = matmul_cycles_db(cfg, p * q, cout, cin, double_buffered);
+            SaCost {
+                cycles: (k * k) as f64 * per_kernel.cycles,
+                conversion_cycles: 0.0,
+                macs,
+            }
+        }
+        Dataflow::Im2col => {
+            // One big matmul (PQ, k^2*Cin) x (k^2*Cin, Cout) after the
+            // im2col transform: conversion latency + bank conflicts.
+            let mm = matmul_cycles_db(cfg, p * q, cout, cin * k * k, double_buffered);
+            let conversion =
+                (p * q * cin * k * k) as f64 / IM2COL_ELEMS_PER_CYCLE * IM2COL_VISIBLE_FRACTION;
+            SaCost {
+                cycles: mm.cycles * IM2COL_CONFLICT_FACTOR,
+                conversion_cycles: conversion,
+                macs,
+            }
+        }
+    }
+}
+
+/// SA cost for any linear OpKind (nonlinears cost 0 here).
+pub fn op_sa_cost(
+    cfg: &AccelConfig,
+    dataflow: Dataflow,
+    double_buffered: bool,
+    kind: &OpKind,
+) -> SaCost {
+    match *kind {
+        OpKind::Conv { h, w, cin, cout, k, stride } => {
+            conv_cycles_db(cfg, dataflow, h, w, cin, cout, k, stride, double_buffered)
+        }
+        OpKind::Matmul { m, n, k } | OpKind::MatmulAct { m, n, k } => {
+            matmul_cycles_db(cfg, m, n, k, double_buffered)
+        }
+        _ => SaCost::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::default()
+    }
+
+    #[test]
+    fn large_matmul_is_near_peak_utilization() {
+        let c = matmul_cycles(&cfg(), 4096, 1024, 1024);
+        let u = c.utilization(&cfg());
+        assert!(u > 0.95, "util {u}");
+    }
+
+    #[test]
+    fn tiny_matmul_underutilizes() {
+        let c = matmul_cycles(&cfg(), 8, 8, 8);
+        assert!(c.utilization(&cfg()) < 0.1);
+    }
+
+    #[test]
+    fn address_centric_conv_matches_decomposition() {
+        // 9 x (L, Cin)x(Cin, Cout) matmuls.
+        let c = conv_cycles(&cfg(), Dataflow::AddressCentric, 64, 64, 320, 320, 3, 1);
+        let per = matmul_cycles(&cfg(), 64 * 64, 320, 320);
+        assert!((c.cycles - 9.0 * per.cycles).abs() < 1e-6);
+        assert!(c.utilization(&cfg()) > 0.9);
+    }
+
+    #[test]
+    fn im2col_conv_slower_than_address_centric() {
+        let ac = conv_cycles(&cfg(), Dataflow::AddressCentric, 64, 64, 320, 320, 3, 1);
+        let im = conv_cycles(&cfg(), Dataflow::Im2col, 64, 64, 320, 320, 3, 1);
+        let ac_t = ac.cycles + ac.conversion_cycles;
+        let im_t = im.cycles + im.conversion_cycles;
+        assert!(im_t > 1.1 * ac_t, "im2col {im_t} vs ac {ac_t}");
+    }
+
+    #[test]
+    fn stride2_conv_quarter_work() {
+        let s1 = conv_cycles(&cfg(), Dataflow::AddressCentric, 64, 64, 320, 320, 3, 1);
+        let s2 = conv_cycles(&cfg(), Dataflow::AddressCentric, 64, 64, 320, 320, 3, 2);
+        let ratio = s1.cycles / s2.cycles;
+        assert!((3.0..4.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn conv1x1_equals_plain_matmul() {
+        let c = conv_cycles(&cfg(), Dataflow::AddressCentric, 32, 32, 640, 640, 1, 1);
+        let mm = matmul_cycles(&cfg(), 1024, 640, 640);
+        assert!((c.cycles - mm.cycles).abs() < 1e-9);
+    }
+}

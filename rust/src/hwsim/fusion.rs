@@ -1,0 +1,208 @@
+//! Adaptive fusion planner (Sec. V-B, Fig. 14c / Fig. 16).
+//!
+//! Decides per 3x3-conv layer: no fusion, layer-by-layer fusion (both
+//! activations co-resident in the global buffer — the middle layers), or
+//! cross-layer fusion (weight-resident groups streaming partial
+//! activations — the shallowest/deepest layers).
+
+use super::arch::AccelConfig;
+use super::memory::{choose_reuse, FusionTag, ReuseChoice};
+use crate::models::inventory::{LayerOp, OpKind};
+
+/// Per-layer fusion decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionKind {
+    None,
+    LayerByLayer,
+    CrossLayer,
+}
+
+/// The plan: one entry per conv layer, aligned with the input slice.
+#[derive(Debug, Clone)]
+pub struct FusionPlan {
+    pub kinds: Vec<FusionKind>,
+    pub tags: Vec<FusionTag>,
+}
+
+fn conv_sizes(cfg: &AccelConfig, kind: &OpKind) -> (f64, f64, f64) {
+    let b = cfg.dtype_bytes as f64;
+    match *kind {
+        OpKind::Conv { h, w, cin, cout, k, stride } => {
+            let (p, q) = (h.div_ceil(stride), w.div_ceil(stride));
+            (
+                (h * w * cin) as f64 * b,
+                (cin * cout * k * k) as f64 * b,
+                (p * q * cout) as f64 * b,
+            )
+        }
+        _ => (0.0, 0.0, 0.0),
+    }
+}
+
+/// Build the fusion plan for a sequence of conv layers (Fig. 13's 0..51
+/// indexing for SD v1.4). Decision procedure from Sec. V-B:
+///
+/// 1. choose input- vs weight-reuse per layer (least traffic);
+/// 2. input-reuse layers: layer-by-layer fusion if this layer's input AND
+///    output both fit the global buffer together;
+/// 3. weight-reuse layers: greedy cross-layer groups while the group's
+///    weights stay within the buffer;
+/// 4. otherwise no fusion (weight-access increase would exceed the
+///    activation saving).
+pub fn plan_fusion(cfg: &AccelConfig, convs: &[&LayerOp]) -> FusionPlan {
+    let n = convs.len();
+    let gb = cfg.gb_bytes as f64;
+    let sizes: Vec<(f64, f64, f64)> = convs.iter().map(|o| conv_sizes(cfg, &o.kind)).collect();
+    let reuse: Vec<ReuseChoice> =
+        sizes.iter().map(|&(i, w, _)| choose_reuse(cfg, i, w)).collect();
+
+    let mut kinds = vec![FusionKind::None; n];
+    let mut refetch = vec![1.0f64; n];
+    // Step 2: layer-by-layer for input-reuse layers whose input + output
+    // activations are co-resident in the global buffer.
+    for i in 0..n {
+        if reuse[i] == ReuseChoice::InputReuse {
+            let (inp, _, out) = sizes[i];
+            if inp + out <= gb {
+                kinds[i] = FusionKind::LayerByLayer;
+            }
+        }
+    }
+    // Step 3: cross-layer groups over weight-reuse layers. Weights of a
+    // group may exceed the buffer — activations then stream in strips
+    // and the group's weights are re-fetched per strip; fuse only while
+    // the activation saving exceeds the weight re-read penalty
+    // ("carefully selected", Sec. V-B).
+    let mut i = 0;
+    while i < n {
+        if reuse[i] == ReuseChoice::InputReuse || kinds[i] != FusionKind::None {
+            i += 1;
+            continue;
+        }
+        // Maximal run of non-input-reuse layers starting at i. Layers
+        // whose weights exceed the buffer may still join a group — their
+        // weights stream per strip, which the penalty term prices in
+        // ("may exceed buffer capacity and result in more weight
+        // access", Sec. V-B).
+        let mut j = i;
+        while j < n && reuse[j] != ReuseChoice::InputReuse && kinds[j] == FusionKind::None {
+            j += 1;
+        }
+        // Pick the most profitable sub-window [s, e) of the run: partial
+        // activations stream in strips sized by the group's working
+        // activation; group weights are re-fetched once per extra strip.
+        let mut best: Option<(usize, usize, f64, f64)> = None; // (s, e, net, strips)
+        for s in i..j {
+            for e in (s + 2)..=j {
+                let wsum: f64 = sizes[s..e].iter().map(|x| x.1).sum();
+                let strips = ((sizes[s].2 * 2.0) / gb).ceil().max(1.0);
+                let penalty = wsum * (strips - 1.0);
+                let saving: f64 = (s..e - 1).map(|k| sizes[k].2 + sizes[k + 1].0).sum();
+                let net = saving - penalty;
+                if net > 0.0 && best.map_or(true, |(_, _, b, _)| net > b) {
+                    best = Some((s, e, net, strips));
+                }
+            }
+        }
+        if let Some((s, e, _, strips)) = best {
+            for k in s..e {
+                kinds[k] = FusionKind::CrossLayer;
+                refetch[k] = strips;
+            }
+        }
+        i = j.max(i + 1);
+    }
+
+    // Translate to boundary tags: a boundary between consecutive layers
+    // is fused if both sides participate in some fusion scheme.
+    let fused_boundary = |a: FusionKind, b: FusionKind| {
+        a != FusionKind::None && b != FusionKind::None
+    };
+    let mut tags = vec![FusionTag { weight_refetch: 1.0, ..Default::default() }; n];
+    for idx in 0..n {
+        if idx > 0 && fused_boundary(kinds[idx - 1], kinds[idx]) {
+            tags[idx].input_fused = true;
+        }
+        if idx + 1 < n && fused_boundary(kinds[idx], kinds[idx + 1]) {
+            tags[idx].output_fused = true;
+        }
+        tags[idx].weight_refetch = refetch[idx];
+    }
+    FusionPlan { kinds, tags }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::inventory::{conv3x3_layers, sd_v14, unet_ops};
+
+    #[test]
+    fn fig16_pattern_cross_layer_at_ends_layerwise_in_middle() {
+        let cfg = AccelConfig::default();
+        let ops = unet_ops(&sd_v14());
+        let convs = conv3x3_layers(&ops);
+        assert_eq!(convs.len(), 52);
+        let plan = plan_fusion(&cfg, &convs);
+
+        // Paper (Fig. 16): cross-layer fusion on layers 0~5 and 44~51.
+        for i in [0usize, 1, 2, 3, 4] {
+            assert_eq!(plan.kinds[i], FusionKind::CrossLayer, "layer {i}: {:?}", plan.kinds[i]);
+        }
+        for i in [46usize, 48, 50, 51] {
+            assert_eq!(plan.kinds[i], FusionKind::CrossLayer, "layer {i}: {:?}", plan.kinds[i]);
+        }
+        // Layer-by-layer in the middle (6~36).
+        let mid_lbl = (10..35)
+            .filter(|&i| plan.kinds[i] == FusionKind::LayerByLayer)
+            .count();
+        assert!(mid_lbl > 15, "only {mid_lbl} middle layers layer-by-layer");
+        // No cross-layer fusion deep in the middle.
+        assert!(
+            (12..34).all(|i| plan.kinds[i] != FusionKind::CrossLayer),
+            "cross-layer leaked into the middle"
+        );
+    }
+
+    #[test]
+    fn tags_mark_interior_boundaries_only() {
+        let cfg = AccelConfig::default();
+        let ops = unet_ops(&sd_v14());
+        let convs = conv3x3_layers(&ops);
+        let plan = plan_fusion(&cfg, &convs);
+        // First layer of a fused chain never has a fused input.
+        assert!(!plan.tags[0].input_fused);
+        // A fused boundary sets output on the left and input on the right.
+        for i in 1..convs.len() {
+            if plan.tags[i].input_fused {
+                assert!(plan.tags[i - 1].output_fused, "boundary {i} asymmetric");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_gb_kills_fusion() {
+        let mut cfg = AccelConfig::default();
+        cfg.gb_bytes = 4 << 10; // 4 KB: nothing fits
+        let ops = unet_ops(&sd_v14());
+        let convs = conv3x3_layers(&ops);
+        let plan = plan_fusion(&cfg, &convs);
+        assert!(plan.kinds.iter().all(|&k| k == FusionKind::None));
+    }
+
+    #[test]
+    fn bigger_gb_fuses_no_less() {
+        let ops = unet_ops(&sd_v14());
+        let convs = conv3x3_layers(&ops);
+        let count = |gb: usize| {
+            let mut cfg = AccelConfig::default();
+            cfg.gb_bytes = gb;
+            plan_fusion(&cfg, &convs)
+                .kinds
+                .iter()
+                .filter(|&&k| k != FusionKind::None)
+                .count()
+        };
+        assert!(count(8 << 20) >= count(2 << 20));
+        assert!(count(2 << 20) >= count(256 << 10));
+    }
+}

@@ -1,0 +1,207 @@
+//! Off-chip traffic model: reuse policies + fusion effects (Sec. V).
+
+use super::arch::{AccelConfig, Dataflow, Policy, ReuseMode};
+use crate::models::inventory::OpKind;
+
+/// How a layer participates in fusion (Sec. V-B, Fig. 14c).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FusionTag {
+    /// Input arrives on-chip from the previous layer (no DRAM read).
+    pub input_fused: bool,
+    /// Output is forwarded on-chip to the next layer (no DRAM write).
+    pub output_fused: bool,
+    /// Cross-layer fusion group: weights of the group are co-resident,
+    /// counted once but possibly re-fetched if the group overflows.
+    pub weight_refetch: f64,
+}
+
+/// Which operand the adaptive policy pins in the global buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseChoice {
+    InputReuse,
+    WeightReuse,
+    /// Neither fits: tiled with the larger operand streamed repeatedly.
+    Tiled,
+}
+
+/// Pick the reuse strategy for a layer (Sec. V-B: "consistently select
+/// the reuse method with less memory access").
+pub fn choose_reuse(cfg: &AccelConfig, in_bytes: f64, w_bytes: f64) -> ReuseChoice {
+    let gb = cfg.gb_bytes as f64;
+    let in_fits = in_bytes <= gb;
+    let w_fits = w_bytes <= gb;
+    match (in_fits, w_fits) {
+        (true, true) => {
+            if in_bytes <= w_bytes {
+                ReuseChoice::InputReuse
+            } else {
+                ReuseChoice::WeightReuse
+            }
+        }
+        (true, false) => ReuseChoice::InputReuse,
+        (false, true) => ReuseChoice::WeightReuse,
+        (false, false) => ReuseChoice::Tiled,
+    }
+}
+
+/// Traffic of one linear op in bytes (weights + input + output), given
+/// the policy and the layer's fusion tag.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Traffic {
+    pub input: f64,
+    pub weight: f64,
+    pub output: f64,
+}
+
+impl Traffic {
+    pub fn total(&self) -> f64 {
+        self.input + self.weight + self.output
+    }
+}
+
+pub fn op_traffic(cfg: &AccelConfig, policy: Policy, kind: &OpKind, tag: FusionTag) -> Traffic {
+    let b = cfg.dtype_bytes as f64;
+    let (mut in_b, w_b, out_b, n_dim) = match *kind {
+        OpKind::Conv { h, w, cin, cout, k, stride } => {
+            let (p, q) = (h.div_ceil(stride), w.div_ceil(stride));
+            (
+                (h * w * cin) as f64 * b,
+                (cin * cout * k * k) as f64 * b,
+                (p * q * cout) as f64 * b,
+                cout,
+            )
+        }
+        OpKind::Matmul { m, n, k } => ((m * k) as f64 * b, (k * n) as f64 * b, (m * n) as f64 * b, n),
+        // Activation-activation matmul: "weight" side is the second
+        // activation operand (K^T / V) — streamed like weights.
+        OpKind::MatmulAct { m, n, k } => {
+            ((m * k) as f64 * b, (k * n) as f64 * b, (m * n) as f64 * b, n)
+        }
+        // Nonlinears ride the streams (their data is counted by the
+        // producing/consuming matmuls); no extra DRAM traffic.
+        _ => return Traffic::default(),
+    };
+
+    // im2col duplicates the input window-wise before the SA (Sec. I:
+    // "significant increase in memory access").
+    if policy.dataflow == Dataflow::Im2col {
+        if let OpKind::Conv { k, .. } = *kind {
+            in_b *= (k * k) as f64;
+        }
+    }
+
+    let gb = cfg.gb_bytes as f64;
+    let (mut input, mut weight) = match policy.reuse {
+        ReuseMode::Fixed => {
+            // No cross-tile pinning: the streamed input is re-fetched per
+            // output-column tile group (bounded by the DMA's burst
+            // batching), softened by whatever fraction of it the global
+            // buffer happens to retain.
+            let rereads = (n_dim as f64 / cfg.sa_cols as f64).ceil().clamp(1.0, 6.0);
+            let miss = (1.0 - gb / in_b).clamp(0.0, 1.0);
+            (in_b * (1.0 + (rereads - 1.0) * miss), w_b)
+        }
+        ReuseMode::Adaptive => match choose_reuse(cfg, in_b, w_b) {
+            ReuseChoice::InputReuse | ReuseChoice::WeightReuse => (in_b, w_b),
+            ReuseChoice::Tiled => {
+                // Both exceed GB: stream the larger once per GB-sized
+                // chunk of the smaller.
+                let chunks = (in_b.min(w_b) / gb).ceil().max(1.0);
+                if in_b > w_b {
+                    (in_b * chunks, w_b)
+                } else {
+                    (in_b, w_b * chunks)
+                }
+            }
+        },
+    };
+    let mut output = out_b;
+
+    if tag.input_fused {
+        input = 0.0;
+    }
+    if tag.output_fused {
+        output = 0.0;
+    }
+    weight *= tag.weight_refetch.max(1.0);
+    Traffic { input, weight, output }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AccelConfig {
+        AccelConfig::default()
+    }
+
+    fn conv64() -> OpKind {
+        OpKind::Conv { h: 64, w: 64, cin: 320, cout: 320, k: 3, stride: 1 }
+    }
+
+    fn mid_conv() -> OpKind {
+        OpKind::Conv { h: 8, w: 8, cin: 1280, cout: 1280, k: 3, stride: 1 }
+    }
+
+    #[test]
+    fn reuse_choice_follows_fig13() {
+        let c = cfg();
+        // Shallow layer: activations 2.6 MB (> GB), weights 1.8 MB (fit)
+        // -> weight reuse.
+        assert_eq!(choose_reuse(&c, 2.6e6, 1.8e6), ReuseChoice::WeightReuse);
+        // Middle layer: activations 160 KB, weights 29 MB -> input reuse.
+        assert_eq!(choose_reuse(&c, 0.16e6, 29e6), ReuseChoice::InputReuse);
+        // Both huge -> tiled.
+        assert_eq!(choose_reuse(&c, 40e6, 40e6), ReuseChoice::Tiled);
+    }
+
+    #[test]
+    fn adaptive_single_passes_everything() {
+        let t = op_traffic(&cfg(), Policy::optimized(), &mid_conv(), FusionTag::default());
+        let b = 2.0;
+        assert!((t.input - 8.0 * 8.0 * 1280.0 * b).abs() < 1.0);
+        assert!((t.weight - 1280.0 * 1280.0 * 9.0 * b).abs() < 1.0);
+    }
+
+    #[test]
+    fn fixed_reuse_refetches_streamed_input() {
+        let fixed = op_traffic(&cfg(), Policy::with_ac(), &conv64(), FusionTag::default());
+        let adaptive = op_traffic(&cfg(), Policy::optimized(), &conv64(), FusionTag::default());
+        assert!(
+            fixed.input > 1.5 * adaptive.input,
+            "fixed {} vs adaptive {}",
+            fixed.input,
+            adaptive.input
+        );
+        assert_eq!(fixed.weight, adaptive.weight);
+    }
+
+    #[test]
+    fn im2col_duplicates_conv_input() {
+        let im = op_traffic(&cfg(), Policy::baseline(), &conv64(), FusionTag::default());
+        let mut p = Policy::baseline();
+        p.dataflow = Dataflow::AddressCentric;
+        let ac = op_traffic(&cfg(), p, &conv64(), FusionTag::default());
+        assert!(im.input > 5.0 * ac.input, "im2col {} ac {}", im.input, ac.input);
+    }
+
+    #[test]
+    fn fusion_removes_boundary_traffic() {
+        let tag = FusionTag { input_fused: true, output_fused: true, weight_refetch: 1.0 };
+        let t = op_traffic(&cfg(), Policy::optimized(), &mid_conv(), tag);
+        assert_eq!(t.input, 0.0);
+        assert_eq!(t.output, 0.0);
+        assert!(t.weight > 0.0);
+    }
+
+    #[test]
+    fn nonlinears_are_traffic_free() {
+        let t = op_traffic(
+            &cfg(),
+            Policy::baseline(),
+            &OpKind::Softmax { rows: 4096, cols: 4096 },
+            FusionTag::default(),
+        );
+        assert_eq!(t.total(), 0.0);
+    }
+}

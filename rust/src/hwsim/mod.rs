@@ -1,0 +1,25 @@
+//! SD-Acc hardware simulator (S10): the paper's cycle-accurate
+//! performance model (Sec. VI-A) rebuilt in rust.
+//!
+//! - [`arch`]: Table I configuration + the Fig. 17b policy ladder.
+//! - [`dataflow`]: weight-stationary SA timing; address-centric Uni-conv
+//!   vs the im2col baseline.
+//! - [`streaming`]: store-then-compute vs 2-stage streaming nonlinears
+//!   (calibrated to Fig. 15).
+//! - [`memory`]: reuse policies + traffic accounting (Sec. V).
+//! - [`fusion`]: the adaptive fusion planner (Fig. 16's pattern).
+//! - [`engine`]: per-op assembly into cycles/traffic/energy reports.
+//! - [`baselines`]: CPU/GPU analytic models, Cambricon-D and SDP
+//!   simulators (Sec. VI-E/F).
+
+pub mod arch;
+pub mod baselines;
+pub mod dataflow;
+pub mod engine;
+pub mod fusion;
+pub mod memory;
+mod proptests;
+pub mod streaming;
+
+pub use arch::{AccelConfig, Dataflow, NonlinearMode, Policy, ReuseMode};
+pub use engine::{simulate, simulate_unet_step, Report};

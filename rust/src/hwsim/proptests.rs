@@ -1,0 +1,187 @@
+//! Property tests over simulator invariants (in-tree framework,
+//! rust/src/testing): randomized op shapes and configurations must never
+//! violate the physical sanity of the model.
+
+#![cfg(test)]
+
+use super::arch::{AccelConfig, Dataflow, Policy};
+use super::dataflow::{conv_cycles, matmul_cycles, op_sa_cost};
+use super::engine::simulate;
+use super::memory::{op_traffic, FusionTag};
+use crate::models::inventory::{unet_ops, LayerOp, OpKind, UNetArch};
+use crate::testing::{check_no_shrink, gen_usize};
+
+fn gen_conv(rng: &mut crate::util::rng::Pcg32) -> OpKind {
+    let k = if rng.bernoulli(0.5) { 3 } else { 1 };
+    OpKind::Conv {
+        h: gen_usize(rng, 2, 64),
+        w: gen_usize(rng, 2, 64),
+        cin: gen_usize(rng, 1, 512),
+        cout: gen_usize(rng, 1, 512),
+        k,
+        stride: if rng.bernoulli(0.25) { 2 } else { 1 },
+    }
+}
+
+#[test]
+fn sa_cycles_bound_macs_from_above() {
+    // No op may retire MACs faster than the array's peak.
+    let cfg = AccelConfig::default();
+    check_no_shrink("sa-cycles-lower-bound", gen_conv, |kind| {
+        for df in [Dataflow::AddressCentric, Dataflow::Im2col] {
+            for db in [true, false] {
+                let c = op_sa_cost(&cfg, df, db, kind);
+                if c.cycles * cfg.macs_per_cycle() < c.macs - 1e-6 {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn im2col_never_faster_than_address_centric_on_aligned_channels() {
+    // For SA-aligned channel counts (every real SD layer: multiples of
+    // 32), the im2col path always costs at least as much as Uni-conv.
+    // (Unaligned channels can tip the tile-padding balance either way —
+    // the whole-network ladder test covers the aggregate claim.)
+    let cfg = AccelConfig::default();
+    check_no_shrink(
+        "im2col-slower-aligned",
+        |rng| OpKind::Conv {
+            h: gen_usize(rng, 2, 64),
+            w: gen_usize(rng, 2, 64),
+            cin: 32 * gen_usize(rng, 1, 16),
+            cout: 32 * gen_usize(rng, 1, 16),
+            k: 3,
+            stride: if rng.bernoulli(0.25) { 2 } else { 1 },
+        },
+        |kind| {
+            if let OpKind::Conv { h, w, cin, cout, k, stride } = *kind {
+                let ac = conv_cycles(&cfg, Dataflow::AddressCentric, h, w, cin, cout, k, stride);
+                let im = conv_cycles(&cfg, Dataflow::Im2col, h, w, cin, cout, k, stride);
+                im.cycles + im.conversion_cycles + 1e-6 >= ac.cycles
+            } else {
+                true
+            }
+        },
+    );
+}
+
+#[test]
+fn traffic_non_negative_and_adaptive_never_worse_when_pinnable() {
+    // Whenever one operand fits the global buffer (every real SD layer
+    // except the rare doubly-oversized ones), the adaptive single-pass
+    // policy cannot move more bytes than the fixed re-streaming policy.
+    let cfg = AccelConfig::default();
+    let tag = FusionTag { weight_refetch: 1.0, ..Default::default() };
+    check_no_shrink("adaptive-traffic-min", gen_conv, |kind| {
+        let fixed = op_traffic(&cfg, Policy::with_ac(), kind, tag);
+        let adaptive = op_traffic(&cfg, Policy::optimized(), kind, tag);
+        if fixed.total() < 0.0 || adaptive.total() < 0.0 {
+            return false;
+        }
+        let pinnable = adaptive.input.min(adaptive.weight) <= cfg.gb_bytes as f64;
+        !pinnable || adaptive.total() <= fixed.total() + 1e-6
+    });
+}
+
+#[test]
+fn matmul_cycles_monotone_in_each_dim() {
+    let cfg = AccelConfig::default();
+    check_no_shrink(
+        "matmul-monotone",
+        |rng| {
+            (
+                gen_usize(rng, 1, 1024),
+                gen_usize(rng, 1, 1024),
+                gen_usize(rng, 1, 1024),
+            )
+        },
+        |&(m, n, k)| {
+            let c = matmul_cycles(&cfg, m, n, k).cycles;
+            matmul_cycles(&cfg, m + 32, n, k).cycles >= c
+                && matmul_cycles(&cfg, m, n + 32, k).cycles >= c
+                && matmul_cycles(&cfg, m, n, k + 32).cycles >= c
+        },
+    );
+}
+
+#[test]
+fn policy_ladder_is_monotone_for_random_arch_scales() {
+    // Shrinking/growing the model must preserve baseline >= AC >= AD >= opt.
+    check_no_shrink(
+        "ladder-monotone",
+        |rng| {
+            let mult = match gen_usize(rng, 0, 2) {
+                0 => vec![1, 2, 4, 4],
+                1 => vec![1, 2, 4],
+                _ => vec![1, 1, 2, 2],
+            };
+            let tf: Vec<usize> = mult.iter().map(|_| gen_usize(rng, 0, 2)).collect();
+            UNetArch {
+                name: "rand",
+                latent: 16 << gen_usize(rng, 0, 2),
+                latent_c: 4,
+                model_channels: 32 << gen_usize(rng, 0, 3),
+                mult,
+                tf_depth: tf,
+                ctx_len: 77,
+                ctx_dim: 768,
+                temb_dim: 1280,
+                geglu: true,
+            }
+        },
+        |arch| {
+            let cfg = AccelConfig::default();
+            let ops = unet_ops(arch);
+            let t = |p: Policy| simulate(&cfg, p, &ops).total_cycles();
+            let (b, ac, ad, opt) = (
+                t(Policy::baseline()),
+                t(Policy::with_ac()),
+                t(Policy::with_ac_ad()),
+                t(Policy::optimized()),
+            );
+            b + 1e-6 >= ac && ac + 1e-6 >= ad && ad + 1e-6 >= opt
+        },
+    );
+}
+
+#[test]
+fn simulate_scales_linearly_with_duplicated_ops() {
+    let cfg = AccelConfig::default();
+    check_no_shrink(
+        "simulate-linear",
+        |rng| gen_usize(rng, 1, 5),
+        |&n| {
+            let op = LayerOp {
+                name: "m".into(),
+                block: crate::models::inventory::Block::Mid,
+                kind: OpKind::Matmul { m: 256, n: 256, k: 256 },
+            };
+            let ops: Vec<LayerOp> = (0..n).map(|_| op.clone()).collect();
+            let one = simulate(&cfg, Policy::optimized(), std::slice::from_ref(&op));
+            let many = simulate(&cfg, Policy::optimized(), &ops);
+            (many.sa_cycles - n as f64 * one.sa_cycles).abs() < 1e-6
+        },
+    );
+}
+
+#[test]
+fn bigger_buffer_never_increases_traffic() {
+    let ops = unet_ops(&crate::models::inventory::sd_v14());
+    check_no_shrink(
+        "gb-monotone",
+        |rng| gen_usize(rng, 8, 12), // 256KB..4MB as powers of two
+        |&pow| {
+            let mut small = AccelConfig::default();
+            small.gb_bytes = 1 << (pow + 10);
+            let mut big = small.clone();
+            big.gb_bytes = 2 << (pow + 10);
+            let ts = simulate(&small, Policy::optimized(), &ops).traffic_bytes;
+            let tb = simulate(&big, Policy::optimized(), &ops).traffic_bytes;
+            tb <= ts * 1.0001
+        },
+    );
+}

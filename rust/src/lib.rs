@@ -1,0 +1,22 @@
+//! # SD-Acc — full-system reproduction
+//!
+//! Rust coordinator (Layer 3) for the SD-Acc paper: phase-aware sampling
+//! for Stable Diffusion plus a cycle-accurate model of the paper's
+//! accelerator (address-centric dataflow, 2-stage streaming computing,
+//! adaptive reuse & fusion).
+//!
+//! The compute path (Layer 2 JAX U-Net built on Layer 1 Pallas kernels) is
+//! AOT-lowered to HLO text by `python/compile/aot.py` and executed here
+//! through the PJRT CPU client (`runtime` module). Python never runs on
+//! the request path.
+
+pub mod coordinator;
+pub mod hwsim;
+pub mod models;
+pub mod pas;
+pub mod quality;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,228 @@
+//! `sd-acc` — leader entrypoint / CLI for the SD-Acc coordinator.
+//!
+//! Subcommands:
+//!   generate   text-to-image via the PJRT runtime (original or PAS)
+//!   calibrate  measure shift scores, D*, outliers (Fig. 4 / Eq. 1-2)
+//!   simulate   run the accelerator performance model on a real SD arch
+//!   info       artifact + manifest summary
+//!
+//! All compute goes through AOT artifacts; python never runs here.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::hwsim::arch::{AccelConfig, Policy};
+use sd_acc::hwsim::engine::simulate_unet_step;
+use sd_acc::models::inventory::{arch_by_name, unet_ops};
+use sd_acc::pas::calibrate::Calibrator;
+use sd_acc::pas::plan::{PasConfig, SamplingPlan};
+use sd_acc::quality;
+use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+use sd_acc::util::cli::{usage, Args, OptSpec};
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print_help();
+        return ExitCode::from(2);
+    };
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "simulate" => cmd_simulate(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "sd-acc {} — SD-Acc reproduction (phase-aware sampling + HW co-design)\n\n\
+         usage: sd-acc <generate|calibrate|simulate|info> [options]\n\
+         run a subcommand with --help for its options",
+        sd_acc::util::VERSION
+    );
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts_dir)
+}
+
+fn need_artifacts(dir: &Path) -> Result<(), String> {
+    if dir.join("manifest.json").exists() {
+        Ok(())
+    } else {
+        Err(format!("no artifacts at {} — run `make artifacts`", dir.display()))
+    }
+}
+
+// ----------------------------------------------------------------- generate
+
+fn cmd_generate(raw: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec { name: "prompt", help: "text prompt (closed vocabulary)", takes_value: true, default: Some("red circle x4 y4 blue square x11 y11") },
+        OptSpec { name: "seed", help: "generation seed", takes_value: true, default: Some("42") },
+        OptSpec { name: "steps", help: "denoising steps", takes_value: true, default: Some("30") },
+        OptSpec { name: "sampler", help: "ddim | pndm", takes_value: true, default: Some("pndm") },
+        OptSpec { name: "pas", help: "enable phase-aware sampling", takes_value: false, default: None },
+        OptSpec { name: "t-sparse", help: "PAS sparse period", takes_value: true, default: Some("4") },
+        OptSpec { name: "out", help: "output PPM path", takes_value: true, default: Some("out.ppm") },
+        OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    if args.flag("help") {
+        print!("{}", usage("sd-acc generate", "text-to-image generation", &spec));
+        return Ok(());
+    }
+    let dir = artifacts_dir(&args);
+    need_artifacts(&dir)?;
+    let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
+    let coord = Coordinator::new(svc.handle());
+    let m = coord.runtime().manifest().model.clone();
+
+    let steps = args.get_usize("steps")?.unwrap();
+    let mut req = GenRequest::new(args.get("prompt").unwrap(), args.get_usize("seed")?.unwrap() as u64);
+    req.steps = steps;
+    req.sampler = args.get("sampler").unwrap().to_string();
+    if args.flag("pas") {
+        req.plan = SamplingPlan::Pas(PasConfig {
+            t_sketch: steps / 2,
+            t_complete: 3.min(steps / 2),
+            t_sparse: args.get_usize("t-sparse")?.unwrap().max(2),
+            l_sketch: 2,
+            l_refine: 2,
+        });
+    }
+    let res = coord.generate_one(&req).map_err(|e| format!("{e:#}"))?;
+    println!(
+        "generated in {:.0} ms ({} steps, MAC reduction {:.2}x)",
+        res.stats.total_ms,
+        steps,
+        res.stats.mac_reduction
+    );
+    let imgs = coord.decode(std::slice::from_ref(&res.latent)).map_err(|e| format!("{e:#}"))?;
+    let out = PathBuf::from(args.get("out").unwrap());
+    quality::write_ppm(&imgs[0], m.img_h, m.img_w, &out).map_err(|e| format!("{e:#}"))?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------- calibrate
+
+fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec { name: "steps", help: "timesteps per trajectory", takes_value: true, default: Some("25") },
+        OptSpec { name: "prompts", help: "number of calibration prompts", takes_value: true, default: Some("2") },
+        OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    if args.flag("help") {
+        print!("{}", usage("sd-acc calibrate", "shift-score calibration (Fig. 4)", &spec));
+        return Ok(());
+    }
+    let dir = artifacts_dir(&args);
+    need_artifacts(&dir)?;
+    let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
+    let coord = Coordinator::new(svc.handle());
+    let prompts: Vec<String> = [
+        "red circle x4 y4 blue square x11 y11",
+        "green stripe x8 y8",
+        "yellow circle x12 y3",
+    ]
+    .iter()
+    .take(args.get_usize("prompts")?.unwrap().clamp(1, 3))
+    .map(|s| s.to_string())
+    .collect();
+    let steps = args.get_usize("steps")?.unwrap();
+    let rep = Calibrator::new(&coord)
+        .run(&prompts, steps, 7.5)
+        .map_err(|e| format!("{e:#}"))?;
+    std::fs::write(dir.join("calibration.json"), rep.to_json().to_string())
+        .map_err(|e| e.to_string())?;
+    println!("D* = {} / {steps}, outliers = {:?}", rep.d_star, rep.outliers);
+    println!("wrote {}/calibration.json", dir.display());
+    Ok(())
+}
+
+// ----------------------------------------------------------------- simulate
+
+fn cmd_simulate(raw: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec { name: "model", help: "sd-v1.4 | sd-v2.1-base | sd-xl | sd-tiny", takes_value: true, default: Some("sd-v1.4") },
+        OptSpec { name: "policy", help: "baseline | ac | ad | optimized", takes_value: true, default: Some("optimized") },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    if args.flag("help") {
+        print!("{}", usage("sd-acc simulate", "accelerator performance model", &spec));
+        return Ok(());
+    }
+    let arch = arch_by_name(args.get("model").unwrap())
+        .ok_or_else(|| format!("unknown model '{}'", args.get("model").unwrap()))?;
+    let policy = match args.get("policy").unwrap() {
+        "baseline" => Policy::baseline(),
+        "ac" => Policy::with_ac(),
+        "ad" => Policy::with_ac_ad(),
+        "optimized" => Policy::optimized(),
+        p => return Err(format!("unknown policy '{p}'")),
+    };
+    let cfg = AccelConfig::default();
+    let ops = unet_ops(&arch);
+    let r = simulate_unet_step(&cfg, policy, &ops);
+    println!("model {} | policy {:?}", arch.name, args.get("policy").unwrap());
+    println!("  ops                 : {}", r.layers);
+    println!("  U-Net step (CFG x2) : {:.3} s @ {:.0} MHz", r.seconds(&cfg), cfg.freq_hz / 1e6);
+    println!("  PE utilisation      : {:.1}%", 100.0 * r.utilization(&cfg));
+    println!("  off-chip traffic    : {:.2} GB/step", r.traffic_bytes / 1e9);
+    println!("  op intensity        : {:.0} FLOP/B (knee {:.1})", r.operational_intensity(), cfg.peak_flops() / cfg.dram_bw);
+    println!("  energy              : {:.1} J/step, {:.2} kJ per 50-step image", r.energy_j(&cfg), r.energy_j(&cfg) * 50.0 / 1e3);
+    Ok(())
+}
+
+// --------------------------------------------------------------------- info
+
+fn cmd_info(raw: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    if args.flag("help") {
+        print!("{}", usage("sd-acc info", "artifact summary", &spec));
+        return Ok(());
+    }
+    let dir = artifacts_dir(&args);
+    need_artifacts(&dir)?;
+    let manifest = sd_acc::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+    println!("artifacts dir : {}", dir.display());
+    println!("model         : sd-tiny latent {}x{}x{}, ctx {}x{}, max_cut {}",
+        manifest.model.latent_h, manifest.model.latent_w, manifest.model.latent_c,
+        manifest.model.ctx_len, manifest.model.ctx_dim, manifest.model.max_cut);
+    println!("batch sizes   : {:?}", manifest.batch_sizes);
+    println!("vocab         : {} words", manifest.vocab.len());
+    println!("alpha_bar     : {} train steps", manifest.alpha_bar.len());
+    println!("artifacts     : {}", manifest.artifacts.len());
+    for (name, a) in &manifest.artifacts {
+        println!("  {:22} {} inputs, {} params", name, a.inputs.len(), a.n_params);
+    }
+    for (set, w) in &manifest.weights {
+        let elems: usize = w.table.iter().map(|e| e.len).sum();
+        println!("weights[{set:4}] : {} leaves, {:.1} MB", w.table.len(), elems as f64 * 4.0 / 1e6);
+    }
+    Ok(())
+}

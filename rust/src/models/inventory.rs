@@ -1,0 +1,559 @@
+//! Operator inventory builder for StableDiff U-Nets (+ text encoder, VAE).
+
+use std::collections::BTreeMap;
+
+/// Paper block indexing (Fig. 3): 12 down blocks, middle, 12 up blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Block {
+    Down(usize),
+    Mid,
+    Up(usize),
+    TextEncoder,
+    Vae,
+}
+
+impl Block {
+    pub fn label(&self) -> String {
+        match self {
+            Block::Down(i) => format!("down{i}"),
+            Block::Mid => "mid".into(),
+            Block::Up(i) => format!("up{i}"),
+            Block::TextEncoder => "text".into(),
+            Block::Vae => "vae".into(),
+        }
+    }
+}
+
+/// A single operator with exact shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// KxK convolution on an HxW feature map (stride 1 or 2, same pad).
+    Conv { h: usize, w: usize, cin: usize, cout: usize, k: usize, stride: usize },
+    /// Dense matmul (m, k) x (k, n) with learned weights.
+    Matmul { m: usize, n: usize, k: usize },
+    /// Activation-activation matmul (attention logits / values) — no weights.
+    MatmulAct { m: usize, n: usize, k: usize },
+    Softmax { rows: usize, cols: usize },
+    Layernorm { rows: usize, cols: usize },
+    Groupnorm { rows: usize, cols: usize },
+    Gelu { n: usize },
+    Silu { n: usize },
+    /// Residual adds, concats, nearest upsampling — pure data movement.
+    Elementwise { n: usize },
+}
+
+/// An inventory entry: one operator inside one paper block.
+#[derive(Debug, Clone)]
+pub struct LayerOp {
+    pub name: String,
+    pub block: Block,
+    pub kind: OpKind,
+}
+
+impl OpKind {
+    /// Multiply-accumulate count (1 MAC = 1 mul + 1 add, Fig. 2 caption).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            OpKind::Conv { h, w, cin, cout, k, stride } => {
+                let (p, q) = (h.div_ceil(stride), w.div_ceil(stride));
+                (p * q * cin * cout * k * k) as u64
+            }
+            OpKind::Matmul { m, n, k } | OpKind::MatmulAct { m, n, k } => (m * n * k) as u64,
+            // Nonlinears counted as ~0 MACs (they bottleneck latency, not
+            // MACs — Sec. IV-C); elementwise likewise.
+            _ => 0,
+        }
+    }
+
+    /// Learned parameter count.
+    pub fn params(&self) -> u64 {
+        match *self {
+            OpKind::Conv { cin, cout, k, .. } => (cin * cout * k * k + cout) as u64,
+            OpKind::Matmul { n, k, .. } => (k * n) as u64,
+            OpKind::Layernorm { cols, .. } | OpKind::Groupnorm { cols, .. } => 2 * cols as u64,
+            _ => 0,
+        }
+    }
+
+    /// Input activation element count.
+    pub fn input_elems(&self) -> u64 {
+        match *self {
+            OpKind::Conv { h, w, cin, .. } => (h * w * cin) as u64,
+            OpKind::Matmul { m, k, .. } | OpKind::MatmulAct { m, k, .. } => (m * k) as u64,
+            OpKind::Softmax { rows, cols }
+            | OpKind::Layernorm { rows, cols }
+            | OpKind::Groupnorm { rows, cols } => (rows * cols) as u64,
+            OpKind::Gelu { n } | OpKind::Silu { n } | OpKind::Elementwise { n } => n as u64,
+        }
+    }
+
+    /// Output activation element count.
+    pub fn output_elems(&self) -> u64 {
+        match *self {
+            OpKind::Conv { h, w, cout, stride, .. } => {
+                (h.div_ceil(stride) * w.div_ceil(stride) * cout) as u64
+            }
+            OpKind::Matmul { m, n, .. } | OpKind::MatmulAct { m, n, .. } => (m * n) as u64,
+            _ => self.input_elems(),
+        }
+    }
+
+    pub fn is_conv3x3(&self) -> bool {
+        matches!(self, OpKind::Conv { k: 3, .. })
+    }
+}
+
+/// U-Net architecture description (real model scale).
+#[derive(Debug, Clone)]
+pub struct UNetArch {
+    pub name: &'static str,
+    pub latent: usize,
+    pub latent_c: usize,
+    pub model_channels: usize,
+    pub mult: Vec<usize>,
+    /// Transformer depth per level (0 = no attention at that level).
+    pub tf_depth: Vec<usize>,
+    pub ctx_len: usize,
+    pub ctx_dim: usize,
+    pub temb_dim: usize,
+    /// true: GEGLU feed-forward (SD practice), inner dim 4c.
+    pub geglu: bool,
+}
+
+/// StableDiff v1.4 (also v1.5): 860M-param U-Net, latent 64x64.
+pub fn sd_v14() -> UNetArch {
+    UNetArch {
+        name: "sd-v1.4",
+        latent: 64,
+        latent_c: 4,
+        model_channels: 320,
+        mult: vec![1, 2, 4, 4],
+        tf_depth: vec![1, 1, 1, 0],
+        ctx_len: 77,
+        ctx_dim: 768,
+        temb_dim: 1280,
+        geglu: true,
+    }
+}
+
+/// StableDiff v2.1-base: same topology, OpenCLIP ctx_dim 1024.
+pub fn sd_v21_base() -> UNetArch {
+    UNetArch { name: "sd-v2.1-base", ctx_dim: 1024, ..sd_v14() }
+}
+
+/// StableDiff XL: latent 128x128, 3 levels, deep transformers.
+pub fn sd_xl() -> UNetArch {
+    UNetArch {
+        name: "sd-xl",
+        latent: 128,
+        latent_c: 4,
+        model_channels: 320,
+        mult: vec![1, 2, 4],
+        tf_depth: vec![0, 2, 10],
+        ctx_len: 77,
+        ctx_dim: 2048,
+        temb_dim: 1280,
+        geglu: true,
+    }
+}
+
+/// The runnable sd-tiny model (matches python/compile/config.py), used to
+/// cross-check the cost function against actually-measured step times.
+pub fn sd_tiny() -> UNetArch {
+    UNetArch {
+        name: "sd-tiny",
+        latent: 16,
+        latent_c: 4,
+        model_channels: 32,
+        mult: vec![1, 2, 4, 4],
+        tf_depth: vec![1, 1, 1, 0],
+        ctx_len: 16,
+        ctx_dim: 64,
+        temb_dim: 128,
+        geglu: false,
+    }
+}
+
+pub fn arch_by_name(name: &str) -> Option<UNetArch> {
+    match name {
+        "sd-v1.4" | "v1.4" | "sd14" => Some(sd_v14()),
+        "sd-v2.1-base" | "v2.1" | "sd21" => Some(sd_v21_base()),
+        "sd-xl" | "xl" | "sdxl" => Some(sd_xl()),
+        "sd-tiny" | "tiny" => Some(sd_tiny()),
+        _ => None,
+    }
+}
+
+// --------------------------------------------------------------- builders
+
+struct Builder {
+    ops: Vec<LayerOp>,
+    block: Block,
+}
+
+impl Builder {
+    fn push(&mut self, name: impl Into<String>, kind: OpKind) {
+        self.ops.push(LayerOp { name: name.into(), block: self.block, kind });
+    }
+
+    fn resnet(&mut self, tag: &str, r: usize, cin: usize, cout: usize, temb: usize) {
+        let l = r * r;
+        self.push(format!("{tag}.gn1"), OpKind::Groupnorm { rows: l, cols: cin });
+        self.push(format!("{tag}.silu1"), OpKind::Silu { n: l * cin });
+        self.push(format!("{tag}.conv1"), OpKind::Conv { h: r, w: r, cin, cout, k: 3, stride: 1 });
+        self.push(format!("{tag}.temb"), OpKind::Matmul { m: 1, n: cout, k: temb });
+        self.push(format!("{tag}.gn2"), OpKind::Groupnorm { rows: l, cols: cout });
+        self.push(format!("{tag}.silu2"), OpKind::Silu { n: l * cout });
+        self.push(format!("{tag}.conv2"), OpKind::Conv { h: r, w: r, cin: cout, cout, k: 3, stride: 1 });
+        if cin != cout {
+            self.push(format!("{tag}.skip"), OpKind::Conv { h: r, w: r, cin, cout, k: 1, stride: 1 });
+        }
+        self.push(format!("{tag}.add"), OpKind::Elementwise { n: l * cout });
+    }
+
+    fn transformer(&mut self, tag: &str, r: usize, c: usize, depth: usize, arch: &UNetArch) {
+        let l = r * r;
+        self.push(format!("{tag}.gn"), OpKind::Groupnorm { rows: l, cols: c });
+        self.push(format!("{tag}.proj_in"), OpKind::Conv { h: r, w: r, cin: c, cout: c, k: 1, stride: 1 });
+        for d in 0..depth {
+            let t = format!("{tag}.d{d}");
+            // Self-attention.
+            self.push(format!("{t}.ln1"), OpKind::Layernorm { rows: l, cols: c });
+            self.push(format!("{t}.qkv"), OpKind::Matmul { m: l, n: 3 * c, k: c });
+            self.push(format!("{t}.logits"), OpKind::MatmulAct { m: l, n: l, k: c });
+            self.push(format!("{t}.softmax"), OpKind::Softmax { rows: l, cols: l });
+            self.push(format!("{t}.attnv"), OpKind::MatmulAct { m: l, n: c, k: l });
+            self.push(format!("{t}.proj"), OpKind::Matmul { m: l, n: c, k: c });
+            // Cross-attention over the text context.
+            self.push(format!("{t}.ln2"), OpKind::Layernorm { rows: l, cols: c });
+            self.push(format!("{t}.cq"), OpKind::Matmul { m: l, n: c, k: c });
+            self.push(format!("{t}.ckv"), OpKind::Matmul { m: arch.ctx_len, n: 2 * c, k: arch.ctx_dim });
+            self.push(format!("{t}.clogits"), OpKind::MatmulAct { m: l, n: arch.ctx_len, k: c });
+            self.push(format!("{t}.csoftmax"), OpKind::Softmax { rows: l, cols: arch.ctx_len });
+            self.push(format!("{t}.cattnv"), OpKind::MatmulAct { m: l, n: c, k: arch.ctx_len });
+            self.push(format!("{t}.cproj"), OpKind::Matmul { m: l, n: c, k: c });
+            // Feed-forward (GEGLU doubles the first projection).
+            let inner = 4 * c;
+            let ff1_out = if arch.geglu { 2 * inner } else { inner };
+            self.push(format!("{t}.ln3"), OpKind::Layernorm { rows: l, cols: c });
+            self.push(format!("{t}.ff1"), OpKind::Matmul { m: l, n: ff1_out, k: c });
+            self.push(format!("{t}.gelu"), OpKind::Gelu { n: l * inner });
+            self.push(format!("{t}.ff2"), OpKind::Matmul { m: l, n: c, k: inner });
+        }
+        self.push(format!("{tag}.proj_out"), OpKind::Conv { h: r, w: r, cin: c, cout: c, k: 1, stride: 1 });
+    }
+}
+
+/// Build the full U-Net inventory with paper block tags.
+///
+/// Topology (Fig. 3): block 1 = conv_in; blocks 4/7/10 = stride-2
+/// downsample convs; ResNet+Transformer pairs elsewhere (plain ResNet on
+/// levels with tf_depth 0); middle = R+T+R; 12 up blocks mirrored, with
+/// up-blocks 4/7/10 carrying nearest-upsample + 3x3 conv, and conv_out
+/// attached to up-block 1. For 3-level arches (SDXL) the deepest level's
+/// slots collapse analogously (blocks 7-12 at the two deep levels).
+pub fn unet_ops(arch: &UNetArch) -> Vec<LayerOp> {
+    let nlv = arch.mult.len();
+    assert!(nlv == 3 || nlv == 4, "3- or 4-level U-Nets supported");
+    let ch: Vec<usize> = arch.mult.iter().map(|m| m * arch.model_channels).collect();
+    let res: Vec<usize> = (0..nlv).map(|l| arch.latent >> l).collect();
+    let mut b = Builder { ops: Vec::new(), block: Block::Down(1) };
+
+    // --- down path -------------------------------------------------------
+    b.block = Block::Down(1);
+    b.push("conv_in", OpKind::Conv {
+        h: res[0], w: res[0], cin: arch.latent_c, cout: ch[0], k: 3, stride: 1,
+    });
+    // Skip-connection channel list, in push order.
+    let mut skips: Vec<usize> = vec![ch[0]];
+    let mut idx = 2;
+    let mut cin = ch[0];
+    for lv in 0..nlv {
+        for _ in 0..2 {
+            b.block = Block::Down(idx);
+            let tag = format!("down{idx}");
+            b.resnet(&tag, res[lv], cin, ch[lv], arch.temb_dim);
+            if arch.tf_depth[lv] > 0 {
+                b.transformer(&format!("{tag}.tf"), res[lv], ch[lv], arch.tf_depth[lv], arch);
+            }
+            cin = ch[lv];
+            skips.push(cin);
+            idx += 1;
+        }
+        if lv + 1 < nlv {
+            b.block = Block::Down(idx);
+            b.push(
+                format!("down{idx}.downsample"),
+                OpKind::Conv { h: res[lv], w: res[lv], cin, cout: cin, k: 3, stride: 2 },
+            );
+            skips.push(cin);
+            idx += 1;
+        }
+    }
+    let n_down = idx - 1; // 12 for 4 levels, 8 for 3 levels
+
+    // --- middle ----------------------------------------------------------
+    b.block = Block::Mid;
+    let deep = *ch.last().unwrap();
+    let rdeep = *res.last().unwrap();
+    b.resnet("mid.res1", rdeep, deep, deep, arch.temb_dim);
+    let mid_depth = *arch.tf_depth.last().unwrap();
+    b.transformer("mid.tf", rdeep, deep, mid_depth.max(1), arch);
+    b.resnet("mid.res2", rdeep, deep, deep, arch.temb_dim);
+
+    // --- up path (indexed top-down; executed bottom-up) -------------------
+    // Up block i consumes skip i (down block i's output). Each level has 3
+    // up resnets; the first block of each non-top level group (top-down
+    // order) carries upsample + conv.
+    let mut up_specs: Vec<(usize, usize, usize, usize, bool)> = Vec::new();
+    // (index, level, c_main, c_skip, upsample_after_group)
+    {
+        let mut i = 1usize;
+        for lv in 0..nlv {
+            let group = if lv + 1 < nlv { 3 } else { n_down + 1 - i };
+            for j in 0..group {
+                // Main-branch channels entering this block: the output of
+                // the block below (or mid for the deepest-first block).
+                let c_main = if j == group - 1 && lv + 1 < nlv {
+                    ch[lv + 1] // arrives upsampled from the deeper level
+                } else if i == n_down && lv + 1 == nlv {
+                    deep // from mid
+                } else {
+                    ch[lv]
+                };
+                let c_skip = skips[i - 1];
+                let upsample = lv > 0 && j == 0; // blocks 4/7/10 top-down
+                up_specs.push((i, lv, c_main, c_skip, upsample));
+                i += 1;
+            }
+        }
+    }
+    // Emit in execution order (bottom-up: up12 first, up1 last) so the
+    // flat 3x3-conv index matches Fig. 13/16's layer numbering 0..51.
+    for &(i, lv, c_main, c_skip, upsample) in up_specs.iter().rev() {
+        b.block = Block::Up(i);
+        let tag = format!("up{i}");
+        b.resnet(&tag, res[lv], c_main + c_skip, ch[lv], arch.temb_dim);
+        if arch.tf_depth[lv] > 0 {
+            b.transformer(&format!("{tag}.tf"), res[lv], ch[lv], arch.tf_depth[lv], arch);
+        }
+        if upsample {
+            // nearest x2 + 3x3 conv (SD upsampler), executed after this
+            // group's last resnet, on the upsampled resolution.
+            b.push(
+                format!("{tag}.upsample_conv"),
+                OpKind::Conv {
+                    h: res[lv - 1], w: res[lv - 1], cin: ch[lv], cout: ch[lv], k: 3, stride: 1,
+                },
+            );
+        }
+    }
+    // conv_out belongs to the topmost up block.
+    b.block = Block::Up(1);
+    b.push("conv_out", OpKind::Conv {
+        h: res[0], w: res[0], cin: ch[0], cout: arch.latent_c, k: 3, stride: 1,
+    });
+
+    b.ops
+}
+
+/// CLIP-style text encoder inventory (Fig. 2 profiling).
+pub fn text_encoder_ops(arch: &UNetArch) -> Vec<LayerOp> {
+    // v1.4: CLIP ViT-L/14 text tower (12 layers, d=768); v2.1: OpenCLIP-H
+    // (23 layers, d=1024); XL: both towers ~ modelled as one d=2048 tower.
+    let (layers, d) = match arch.ctx_dim {
+        768 => (12usize, 768usize),
+        1024 => (23, 1024),
+        _ => (32, 1280),
+    };
+    let l = arch.ctx_len;
+    let mut b = Builder { ops: Vec::new(), block: Block::TextEncoder };
+    for i in 0..layers {
+        let t = format!("text.l{i}");
+        b.push(format!("{t}.ln1"), OpKind::Layernorm { rows: l, cols: d });
+        b.push(format!("{t}.qkv"), OpKind::Matmul { m: l, n: 3 * d, k: d });
+        b.push(format!("{t}.logits"), OpKind::MatmulAct { m: l, n: l, k: d });
+        b.push(format!("{t}.softmax"), OpKind::Softmax { rows: l, cols: l });
+        b.push(format!("{t}.attnv"), OpKind::MatmulAct { m: l, n: d, k: l });
+        b.push(format!("{t}.proj"), OpKind::Matmul { m: l, n: d, k: d });
+        b.push(format!("{t}.ln2"), OpKind::Layernorm { rows: l, cols: d });
+        b.push(format!("{t}.ff1"), OpKind::Matmul { m: l, n: 4 * d, k: d });
+        b.push(format!("{t}.gelu"), OpKind::Gelu { n: l * 4 * d });
+        b.push(format!("{t}.ff2"), OpKind::Matmul { m: l, n: d, k: 4 * d });
+    }
+    b.ops
+}
+
+/// VAE decoder inventory (Fig. 2 profiling): latent -> 8x upsampled RGB.
+pub fn vae_decoder_ops(arch: &UNetArch) -> Vec<LayerOp> {
+    let mut b = Builder { ops: Vec::new(), block: Block::Vae };
+    let chs = [512usize, 512, 256, 128];
+    let mut r = arch.latent;
+    b.push("vae.conv_in", OpKind::Conv { h: r, w: r, cin: arch.latent_c, cout: 512, k: 3, stride: 1 });
+    let mut cin = 512;
+    for (lv, &c) in chs.iter().enumerate() {
+        for j in 0..3 {
+            b.resnet(&format!("vae.l{lv}.res{j}"), r, cin, c, 0);
+            cin = c;
+        }
+        if lv + 1 < chs.len() {
+            r *= 2;
+            b.push(format!("vae.l{lv}.upconv"), OpKind::Conv { h: r, w: r, cin, cout: cin, k: 3, stride: 1 });
+        }
+    }
+    b.push("vae.conv_out", OpKind::Conv { h: r, w: r, cin, cout: 3, k: 3, stride: 1 });
+    b.ops
+}
+
+/// Ops executed by a phase-aware *partial* step retaining the top `l`
+/// block pairs: down blocks 1..=l and up blocks l..=1, no middle.
+pub fn partial_unet_ops(arch: &UNetArch, l: usize) -> Vec<LayerOp> {
+    unet_ops(arch)
+        .into_iter()
+        .filter(|o| match o.block {
+            Block::Down(i) | Block::Up(i) => i <= l,
+            _ => false,
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------ aggregation
+
+/// Total MACs of an op list.
+pub fn total_macs(ops: &[LayerOp]) -> u64 {
+    ops.iter().map(|o| o.kind.macs()).sum()
+}
+
+/// Total learned parameters.
+pub fn total_params(ops: &[LayerOp]) -> u64 {
+    ops.iter().map(|o| o.kind.params()).sum()
+}
+
+/// MACs per paper block.
+pub fn block_macs(ops: &[LayerOp]) -> BTreeMap<Block, u64> {
+    let mut m = BTreeMap::new();
+    for o in ops {
+        *m.entry(o.block).or_insert(0) += o.kind.macs();
+    }
+    m
+}
+
+/// The 3x3 convolution layers in inventory order (Fig. 13's index 0..51).
+pub fn conv3x3_layers(ops: &[LayerOp]) -> Vec<&LayerOp> {
+    ops.iter().filter(|o| o.kind.is_conv3x3()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sd14_unet_params_near_860m() {
+        let ops = unet_ops(&sd_v14());
+        let p = total_params(&ops);
+        // Paper (Fig. 2): ~860M. Inventory omits time-embedding MLP and
+        // per-head minutiae; accept 780-900M.
+        assert!(
+            (780_000_000..900_000_000).contains(&p),
+            "sd1.4 params {p}"
+        );
+    }
+
+    #[test]
+    fn sd14_has_52_conv3x3_layers() {
+        // Fig. 13: the 3x3 convs of the SD v1.4 U-Net are indexed 0..51.
+        let ops = unet_ops(&sd_v14());
+        assert_eq!(conv3x3_layers(&ops).len(), 52);
+    }
+
+    #[test]
+    fn sd14_block_structure() {
+        let ops = unet_ops(&sd_v14());
+        let bm = block_macs(&ops);
+        // 12 down + mid + 12 up.
+        assert_eq!(bm.keys().filter(|b| matches!(b, Block::Down(_))).count(), 12);
+        assert_eq!(bm.keys().filter(|b| matches!(b, Block::Up(_))).count(), 12);
+        assert!(bm.contains_key(&Block::Mid));
+        // Downsample-only blocks are cheap relative to content blocks.
+        assert!(bm[&Block::Down(4)] < bm[&Block::Down(2)]);
+        // Top blocks (high resolution) are MAC-heavy (Fig. 6's shape).
+        assert!(bm[&Block::Up(1)] > bm[&Block::Up(12)]);
+    }
+
+    #[test]
+    fn sd14_step_macs_plausible() {
+        // One U-Net pass of SD1.x at 512x512 is ~340-410 GMAC
+        // (thop/diffusers report ~680 GFLOPs = ~340 GMAC; CFG doubles it
+        // at runtime).
+        let macs = total_macs(&unet_ops(&sd_v14()));
+        assert!(
+            (300e9 as u64..500e9 as u64).contains(&macs),
+            "sd1.4 step macs {macs}"
+        );
+    }
+
+    #[test]
+    fn sdxl_transformer_share_exceeds_sd14() {
+        // Sec. VI-E: Transformers occupy a larger proportion in XL.
+        let share = |arch: &UNetArch| {
+            let ops = unet_ops(arch);
+            let tf: u64 = ops
+                .iter()
+                .filter(|o| o.name.contains(".tf") || o.name.contains(".d"))
+                .map(|o| o.kind.macs())
+                .sum();
+            tf as f64 / total_macs(&ops) as f64
+        };
+        let s14 = share(&sd_v14());
+        let sxl = share(&sd_xl());
+        assert!(sxl > s14 + 0.15, "tf share v1.4={s14:.2} xl={sxl:.2}");
+    }
+
+    #[test]
+    fn text_encoder_params_scale() {
+        let p = total_params(&text_encoder_ops(&sd_v14()));
+        // CLIP ViT-L/14 text tower ~85M (sans embeddings).
+        assert!((60_000_000..130_000_000).contains(&p), "text params {p}");
+    }
+
+    #[test]
+    fn vae_decoder_macs_dwarfed_by_50_unet_steps() {
+        // Fig. 2: U-Net (x50 steps, x2 CFG) >> VAE (x1).
+        let unet = total_macs(&unet_ops(&sd_v14())) * 50 * 2;
+        let vae = total_macs(&vae_decoder_ops(&sd_v14()));
+        assert!(unet > 20 * vae, "unet {unet} vae {vae}");
+    }
+
+    #[test]
+    fn tiny_arch_block_count_matches_paper_indexing() {
+        let ops = unet_ops(&sd_tiny());
+        let bm = block_macs(&ops);
+        assert_eq!(bm.keys().filter(|b| matches!(b, Block::Down(_))).count(), 12);
+        assert_eq!(bm.keys().filter(|b| matches!(b, Block::Up(_))).count(), 12);
+    }
+
+    #[test]
+    fn conv_macs_formula() {
+        let c = OpKind::Conv { h: 8, w: 8, cin: 4, cout: 16, k: 3, stride: 1 };
+        assert_eq!(c.macs(), 8 * 8 * 4 * 16 * 9);
+        let s2 = OpKind::Conv { h: 8, w: 8, cin: 4, cout: 16, k: 3, stride: 2 };
+        assert_eq!(s2.macs(), 4 * 4 * 4 * 16 * 9);
+    }
+
+    #[test]
+    fn weights_vs_activations_inverted_between_shallow_and_middle() {
+        // Fig. 13's observation: shallow/deep layers have big activations
+        // and small weights; middle layers the reverse.
+        let ops = unet_ops(&sd_v14());
+        let convs = conv3x3_layers(&ops);
+        let first = convs[1]; // a top-level resnet conv
+        let mid = convs
+            .iter()
+            .find(|o| matches!(o.kind, OpKind::Conv { cin: 1280, cout: 1280, .. }))
+            .unwrap();
+        let act = |o: &LayerOp| o.kind.input_elems();
+        let wts = |o: &LayerOp| o.kind.params();
+        assert!(act(first) > wts(first) / 4, "shallow: activations comparable/larger");
+        assert!(wts(mid) > 4 * act(mid), "middle: weights dominate");
+    }
+}

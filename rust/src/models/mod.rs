@@ -1,0 +1,16 @@
+//! Real StableDiff layer inventories (S9).
+//!
+//! All MAC/parameter/traffic accounting for the paper's tables uses the
+//! *real* SD v1.4 / v2.1-base / SDXL U-Net architectures encoded here
+//! (the runnable sd-tiny model is only the functional substitute — see
+//! DESIGN.md). The inventory enumerates every operator with its exact
+//! shape, tagged by the paper's block indexing (12 down / mid / 12 up,
+//! Fig. 3), which drives:
+//!
+//! - Fig. 2 (component profiling), Fig. 6 (per-block MACs + cost fn),
+//! - Table II/III MAC-reduction columns (via pas::cost),
+//! - Fig. 13/15/16/17/18 hardware simulations (via hwsim).
+
+pub mod inventory;
+
+pub use inventory::*;

@@ -1,0 +1,254 @@
+//! Calibration: shift scores (Eq. 1), phase division (Eq. 2), outliers.
+//!
+//! Drives the `unet_calib` artifact over a calibration prompt set and a
+//! real denoising trajectory, measuring the main-branch input of every
+//! up-block at every timestep — the A_t^i of Eq. 1. This reproduces the
+//! measurement behind Fig. 4 and feeds D* and the outlier set to the
+//! Fig. 7 search framework.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Coordinator;
+use crate::runtime::{Input, Runtime, Tensor};
+use crate::scheduler::{make_sampler, NoiseSchedule};
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Output of a calibration run.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    /// Normalised shift scores: `scores[i][t]` for up-block i+1 at step
+    /// transition t (length steps-1), min-max scaled per block.
+    pub scores: Vec<Vec<f64>>,
+    /// Normalised predicted-noise magnitude curve (Fig. 4's noise line).
+    pub noise: Vec<f64>,
+    /// Eq. 2 phase-transition step D*.
+    pub d_star: usize,
+    /// Up-block indices (1-based) whose late-phase variation stays high.
+    pub outliers: Vec<usize>,
+    pub steps: usize,
+    pub prompts: usize,
+}
+
+impl CalibrationReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("d_star", Json::num(self.d_star as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("prompts", Json::num(self.prompts as f64)),
+            (
+                "outliers",
+                Json::Arr(self.outliers.iter().map(|&i| Json::num(i as f64)).collect()),
+            ),
+            ("noise", Json::arr_f64(&self.noise)),
+            (
+                "scores",
+                Json::Arr(self.scores.iter().map(|s| Json::arr_f64(s)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CalibrationReport> {
+        let arr_f64 = |v: &Json| -> Vec<f64> {
+            v.as_arr().unwrap_or(&[]).iter().filter_map(Json::as_f64).collect()
+        };
+        Ok(CalibrationReport {
+            scores: j
+                .get("scores")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing scores"))?
+                .iter()
+                .map(arr_f64)
+                .collect(),
+            noise: j.get("noise").map(arr_f64).unwrap_or_default(),
+            d_star: j.get_usize("d_star").ok_or_else(|| anyhow!("missing d_star"))?,
+            outliers: j
+                .get("outliers")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            steps: j.get_usize("steps").unwrap_or(0),
+            prompts: j.get_usize("prompts").unwrap_or(0),
+        })
+    }
+}
+
+/// Runs calibration trajectories through the calib artifact.
+pub struct Calibrator<'a> {
+    coord: &'a Coordinator,
+}
+
+impl<'a> Calibrator<'a> {
+    pub fn new(coord: &'a Coordinator) -> Self {
+        Calibrator { coord }
+    }
+
+    /// Measure shift scores over `prompts`, each a full `steps`-step
+    /// denoising run of the complete U-Net (calib artifact, batch 1).
+    pub fn run(&self, prompts: &[String], steps: usize, guidance: f32) -> Result<CalibrationReport> {
+        let rt = self.coord.runtime();
+        let n_blocks = 12usize;
+        // raw[i][t] accumulated over prompts.
+        let mut raw = vec![vec![0.0f64; steps - 1]; n_blocks];
+        let mut noise_raw = vec![0.0f64; steps];
+
+        for (pi, prompt) in prompts.iter().enumerate() {
+            let ctx = self.coord.encode_prompts(std::slice::from_ref(prompt))?;
+            let mut latent = Tensor::stack(&[self.coord.init_latent(1000 + pi as u64)])?;
+            let sched = NoiseSchedule::new(rt.manifest().alpha_bar.clone());
+            let mut sampler = make_sampler("ddim", sched, steps);
+            let ts = sampler.timesteps().to_vec();
+            let g = Tensor::scalar(guidance);
+            let mut prev_ups: Option<Vec<Tensor>> = None;
+
+            for (i, &t) in ts.iter().enumerate() {
+                let t_in = Tensor::new(vec![1], vec![t as f32])?;
+                let out = rt.execute(
+                    &Runtime::unet_calib(1),
+                    &[
+                        Input::F32(latent.clone()),
+                        Input::F32(t_in),
+                        Input::F32(ctx.clone()),
+                        Input::F32(g.clone()),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                let eps = it.next().ok_or_else(|| anyhow!("missing eps"))?;
+                let ups: Vec<Tensor> = it.collect();
+                if ups.len() != n_blocks {
+                    anyhow::bail!("calib artifact returned {} block inputs", ups.len());
+                }
+                noise_raw[i] += stats::l2_norm(&eps.data);
+                if let Some(prev) = &prev_ups {
+                    for b in 0..n_blocks {
+                        raw[b][i - 1] += stats::shift_score(&ups[b].data, &prev[b].data);
+                    }
+                }
+                prev_ups = Some(ups);
+                latent.data = sampler.step(i, &latent.data, &eps.data);
+            }
+        }
+
+        let inv = 1.0 / prompts.len() as f64;
+        for row in raw.iter_mut() {
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        for v in noise_raw.iter_mut() {
+            *v *= inv;
+        }
+        Ok(analyse(raw, noise_raw, steps, prompts.len()))
+    }
+}
+
+/// Pure analysis half (unit-testable without a runtime): normalise,
+/// detect outliers, split phases.
+pub fn analyse(
+    raw: Vec<Vec<f64>>,
+    noise_raw: Vec<f64>,
+    steps: usize,
+    prompts: usize,
+) -> CalibrationReport {
+    let scores: Vec<Vec<f64>> = raw.iter().map(|r| stats::min_max_scale(r)).collect();
+    let noise = stats::min_max_scale(&noise_raw);
+
+    // Outliers (Sec. III-A key observation 2): blocks whose normalised
+    // shift score stays high in the late phase. The paper notes a slight
+    // terminal rise for every block (min-max scaling pins it to 1), so
+    // the late window is [60%, 90%) — the refinement body, final spike
+    // excluded.
+    let t1 = scores[0].len();
+    let late_start = (t1 * 3) / 5;
+    let late_end = (t1 * 9 / 10).max(late_start + 1).min(t1);
+    let late_means: Vec<f64> =
+        scores.iter().map(|s| stats::mean(&s[late_start..late_end])).collect();
+    let med = stats::percentile(&late_means, 50.0);
+    let outliers: Vec<usize> = late_means
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m > (2.0 * med).max(0.25))
+        .map(|(i, _)| i + 1)
+        .collect();
+
+    // Averaged curve excluding outliers (Eq. 2's S-bar).
+    let mut avg = vec![0.0f64; t1];
+    let mut cnt = 0usize;
+    for (i, s) in scores.iter().enumerate() {
+        if outliers.contains(&(i + 1)) {
+            continue;
+        }
+        for (t, v) in s.iter().enumerate() {
+            avg[t] += v;
+        }
+        cnt += 1;
+    }
+    let cnt = cnt.max(1);
+    for v in avg.iter_mut() {
+        *v /= cnt as f64;
+    }
+    // Eq. 2 over the main body (terminal transition excluded — see above).
+    let body = &avg[..avg.len().saturating_sub(1).max(3)];
+    let d_star = stats::kmeans2_split(body);
+
+    CalibrationReport { scores, noise, d_star, outliers, steps, prompts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic Fig. 4-shaped curves: most blocks decay after a knee,
+    /// blocks 1-2 stay active late.
+    fn synthetic_raw(steps: usize) -> Vec<Vec<f64>> {
+        let t1 = steps - 1;
+        (0..12)
+            .map(|b| {
+                (0..t1)
+                    .map(|t| {
+                        let x = t as f64 / t1 as f64;
+                        let early = (-6.0 * (x - 0.12) * (x - 0.12)).exp();
+                        let late = if b < 2 { 0.55 + 0.3 * (8.0 * x).sin().abs() } else { 0.04 };
+                        if x < 0.45 {
+                            0.6 + 0.4 * early
+                        } else {
+                            late
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn analysis_finds_top_block_outliers_and_midpoint() {
+        let steps = 50;
+        let raw = synthetic_raw(steps);
+        let noise: Vec<f64> = (0..steps).map(|t| 1.0 / (1.0 + t as f64)).collect();
+        let rep = analyse(raw, noise, steps, 1);
+        assert!(rep.outliers.contains(&1), "outliers {:?}", rep.outliers);
+        assert!(rep.outliers.contains(&2));
+        assert!(!rep.outliers.contains(&7));
+        // The knee sits at x=0.45 of 49 transitions ~ step 22.
+        assert!((15..=30).contains(&rep.d_star), "D*={}", rep.d_star);
+    }
+
+    #[test]
+    fn scores_normalised_to_unit_range() {
+        let rep = analyse(synthetic_raw(30), vec![1.0; 30], 30, 1);
+        for s in &rep.scores {
+            assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let rep = analyse(synthetic_raw(20), vec![0.5; 20], 20, 2);
+        let j = rep.to_json();
+        let back = CalibrationReport::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.d_star, rep.d_star);
+        assert_eq!(back.outliers, rep.outliers);
+        assert_eq!(back.scores.len(), rep.scores.len());
+        assert!((back.scores[3][5] - rep.scores[3][5]).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,148 @@
+//! The cost function f(l) and Eq. 3 MAC reduction.
+//!
+//! f(l) = MACs of running the first l downsampling + upsampling blocks,
+//! normalised by the full U-Net (Fig. 6, purple curve). l = n_blocks + 1
+//! (13 for 4-level U-Nets) denotes the entire network incl. the middle
+//! block.
+
+use crate::models::inventory::{block_macs, unet_ops, Block, UNetArch};
+use crate::pas::plan::StepAction;
+
+/// Per-architecture cost model derived from the real layer inventory.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// MACs of down-block i (1-based index 0 unused).
+    pub down: Vec<u64>,
+    /// MACs of up-block i (1-based).
+    pub up: Vec<u64>,
+    pub mid: u64,
+    pub total: u64,
+    pub n_blocks: usize,
+}
+
+impl CostModel {
+    pub fn new(arch: &UNetArch) -> CostModel {
+        let ops = unet_ops(arch);
+        let bm = block_macs(&ops);
+        let n_blocks = bm.keys().filter(|b| matches!(b, Block::Down(_))).count();
+        let mut down = vec![0u64; n_blocks + 1];
+        let mut up = vec![0u64; n_blocks + 1];
+        let mut mid = 0;
+        for (b, macs) in &bm {
+            match b {
+                Block::Down(i) => down[*i] = *macs,
+                Block::Up(i) => up[*i] = *macs,
+                Block::Mid => mid = *macs,
+                _ => {}
+            }
+        }
+        let total = down.iter().sum::<u64>() + up.iter().sum::<u64>() + mid;
+        CostModel { down, up, mid, total, n_blocks }
+    }
+
+    /// Absolute MACs of running the first `l` down + up blocks; `l` =
+    /// n_blocks + 1 means the full network (middle included).
+    pub fn macs_at(&self, l: usize) -> u64 {
+        assert!(l >= 1 && l <= self.n_blocks + 1, "l={l} out of range");
+        if l == self.n_blocks + 1 {
+            return self.total;
+        }
+        self.down[1..=l].iter().sum::<u64>() + self.up[1..=l].iter().sum::<u64>()
+    }
+
+    /// Normalised cost f(l) in (0, 1].
+    pub fn f(&self, l: usize) -> f64 {
+        self.macs_at(l) as f64 / self.total as f64
+    }
+
+    /// MACs of one timestep under a step action.
+    pub fn step_macs(&self, action: StepAction) -> u64 {
+        match action {
+            StepAction::Full => self.total,
+            StepAction::Partial(l) => self.macs_at(l),
+        }
+    }
+
+    /// Eq. 3: MAC reduction of a whole plan, T / sum_t f(l_t).
+    pub fn mac_reduction(&self, plan: &[StepAction]) -> f64 {
+        let spent: f64 = plan.iter().map(|&a| self.f(match a {
+            StepAction::Full => self.n_blocks + 1,
+            StepAction::Partial(l) => l,
+        })).sum();
+        plan.len() as f64 / spent
+    }
+
+    /// Average MACs per step under a plan.
+    pub fn plan_macs(&self, plan: &[StepAction]) -> u64 {
+        plan.iter().map(|&a| self.step_macs(a)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::inventory::{sd_tiny, sd_v14};
+    use crate::pas::plan::StepAction::{Full, Partial};
+
+    #[test]
+    fn f_monotone_increasing_and_capped() {
+        let cm = CostModel::new(&sd_v14());
+        assert_eq!(cm.n_blocks, 12);
+        let mut prev = 0.0;
+        for l in 1..=13 {
+            let f = cm.f(l);
+            assert!(f > prev, "f({l})={f} not increasing");
+            prev = f;
+        }
+        assert!((cm.f(13) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn top_blocks_are_cheap_fraction() {
+        // Fig. 6: the first two block pairs are a small share of MACs —
+        // that is why retaining only them is so profitable.
+        let cm = CostModel::new(&sd_v14());
+        assert!(cm.f(2) < 0.40, "f(2)={}", cm.f(2));
+        assert!(cm.f(2) > 0.05);
+    }
+
+    #[test]
+    fn eq3_reduces_to_one_for_all_full() {
+        let cm = CostModel::new(&sd_v14());
+        let plan = vec![Full; 50];
+        assert!((cm.mac_reduction(&plan) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_matches_hand_computation() {
+        let cm = CostModel::new(&sd_v14());
+        let plan = vec![Full, Partial(2), Partial(2), Full];
+        let expect = 4.0 / (1.0 + cm.f(2) + cm.f(2) + 1.0);
+        assert!((cm.mac_reduction(&plan) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_config_reduction_in_table2_band() {
+        // PAS-25/4 on v1.4 must land near the paper's 2.84x (Table II).
+        let cm = CostModel::new(&sd_v14());
+        let cfg = crate::pas::plan::PasConfig {
+            t_sketch: 25, t_complete: 4, t_sparse: 4, l_sketch: 2, l_refine: 2,
+        };
+        let plan = cfg.plan(50);
+        let red = cm.mac_reduction(&plan);
+        assert!((2.3..3.4).contains(&red), "PAS-25/4 reduction {red}");
+    }
+
+    #[test]
+    fn tiny_model_cost_model_works() {
+        let cm = CostModel::new(&sd_tiny());
+        assert_eq!(cm.n_blocks, 12);
+        assert!(cm.f(1) < cm.f(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn l_zero_rejected() {
+        CostModel::new(&sd_tiny()).macs_at(0);
+    }
+}

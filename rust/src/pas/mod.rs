@@ -1,0 +1,23 @@
+//! Phase-aware sampling (PAS) — the paper's algorithmic contribution
+//! (Sec. III).
+//!
+//! - [`cost`]: the block cost function f(l) and Eq. 3 MAC reduction,
+//!   computed from the real model inventories (models::inventory).
+//! - [`plan`]: the {T_sketch, T_complete, T_sparse, L_sketch, L_refine}
+//!   hyper-parameter set expanded into a per-timestep action plan.
+//! - [`calibrate`]: shift-score measurement (Eq. 1), phase division
+//!   (Eq. 2) and outlier detection over real denoising trajectories.
+//! - [`search`]: the Fig. 7 optimisation framework — enumerate feasible
+//!   configurations under user constraints, rank by MAC reduction.
+//! - [`baselines`]: DeepCache-style uniform skipping and BK-SDM-style
+//!   static pruning for Table III.
+
+pub mod baselines;
+pub mod calibrate;
+pub mod cost;
+pub mod plan;
+pub mod search;
+
+pub use calibrate::{CalibrationReport, Calibrator};
+pub use cost::CostModel;
+pub use plan::{PasConfig, SamplingPlan, StepAction};

@@ -1,0 +1,209 @@
+//! Phase-aware sampling plans (Sec. III-B, Fig. 5).
+
+/// What to execute at one denoising timestep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepAction {
+    /// Complete U-Net; refreshes the feature cache.
+    Full,
+    /// Only the top `l` block pairs, consuming the cached entry point.
+    Partial(usize),
+}
+
+/// The paper's hyper-parameter set (Fig. 5 top).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PasConfig {
+    /// Duration of the sketching phase (must be >= D*).
+    pub t_sketch: usize,
+    /// Leading timesteps always running the complete U-Net.
+    pub t_complete: usize,
+    /// Sampling period of the complete U-Net within the sketching phase.
+    pub t_sparse: usize,
+    /// Top blocks kept during sketching-phase partial steps.
+    pub l_sketch: usize,
+    /// Top blocks kept during the refinement phase.
+    pub l_refine: usize,
+}
+
+impl PasConfig {
+    /// Paper's default flavour "PAS-25/s" for 50-step SD v1.4-style runs.
+    pub fn pas25(t_sparse: usize) -> PasConfig {
+        PasConfig { t_sketch: 25, t_complete: 4, t_sparse, l_sketch: 2, l_refine: 2 }
+    }
+
+    /// Validity rules from Sec. III-B.
+    pub fn validate(&self, total_steps: usize, d_star: usize, max_cut: usize) -> Result<(), String> {
+        if self.t_sketch < d_star {
+            return Err(format!("t_sketch {} < D* {d_star}", self.t_sketch));
+        }
+        if self.t_sketch > total_steps {
+            return Err(format!("t_sketch {} > total {total_steps}", self.t_sketch));
+        }
+        if self.t_complete < 1 || self.t_complete > self.t_sketch {
+            return Err(format!("t_complete {} out of range", self.t_complete));
+        }
+        if self.t_sparse < 2 {
+            return Err("t_sparse must be >= 2 (1 would mean no compression)".into());
+        }
+        if self.l_refine < 1 || self.l_sketch < self.l_refine {
+            return Err(format!(
+                "need l_sketch {} >= l_refine {} >= 1",
+                self.l_sketch, self.l_refine
+            ));
+        }
+        if self.l_sketch > max_cut {
+            return Err(format!("l_sketch {} > artifact max cut {max_cut}", self.l_sketch));
+        }
+        Ok(())
+    }
+
+    /// Expand into the per-timestep action plan (Fig. 5 bottom):
+    /// - steps [0, t_complete): Full,
+    /// - steps [t_complete, t_sketch): Full every t_sparse steps,
+    ///   Partial(l_sketch) otherwise,
+    /// - steps [t_sketch, total): Partial(l_refine).
+    pub fn plan(&self, total_steps: usize) -> Vec<StepAction> {
+        (0..total_steps)
+            .map(|i| {
+                if i < self.t_complete {
+                    StepAction::Full
+                } else if i < self.t_sketch {
+                    if (i - self.t_complete) % self.t_sparse == self.t_sparse - 1 {
+                        StepAction::Full
+                    } else {
+                        StepAction::Partial(self.l_sketch)
+                    }
+                } else {
+                    StepAction::Partial(self.l_refine)
+                }
+            })
+            .collect()
+    }
+
+    pub fn label(&self) -> String {
+        format!("PAS-{}/{}", self.t_sketch, self.t_sparse)
+    }
+}
+
+/// What a generation request asks the coordinator to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplingPlan {
+    /// Original model: complete U-Net every step.
+    Full,
+    /// Phase-aware sampling with the given config.
+    Pas(PasConfig),
+}
+
+impl SamplingPlan {
+    pub fn actions(&self, total_steps: usize) -> Vec<StepAction> {
+        match self {
+            SamplingPlan::Full => vec![StepAction::Full; total_steps],
+            SamplingPlan::Pas(cfg) => cfg.plan(total_steps),
+        }
+    }
+}
+
+/// A plan is executable only if every partial step is preceded by some
+/// full step (the cache must exist). True for all valid PasConfigs since
+/// t_complete >= 1; checked as a defensive invariant by the coordinator.
+pub fn plan_is_executable(plan: &[StepAction]) -> bool {
+    let mut have_cache = false;
+    for a in plan {
+        match a {
+            StepAction::Full => have_cache = true,
+            StepAction::Partial(_) if !have_cache => return false,
+            _ => {}
+        }
+    }
+    !plan.is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use StepAction::{Full, Partial};
+
+    #[test]
+    fn plan_structure_matches_fig5() {
+        let cfg = PasConfig { t_sketch: 10, t_complete: 2, t_sparse: 3, l_sketch: 3, l_refine: 2 };
+        let plan = cfg.plan(14);
+        assert_eq!(plan[0], Full);
+        assert_eq!(plan[1], Full);
+        // Sketching: every 3rd step (after t_complete) is Full.
+        assert_eq!(plan[2], Partial(3));
+        assert_eq!(plan[3], Partial(3));
+        assert_eq!(plan[4], Full);
+        assert_eq!(plan[5], Partial(3));
+        assert_eq!(plan[7], Full);
+        // Refinement from step 10.
+        assert!(plan[10..].iter().all(|&a| a == Partial(2)));
+    }
+
+    #[test]
+    fn pas25_label() {
+        assert_eq!(PasConfig::pas25(4).label(), "PAS-25/4");
+    }
+
+    #[test]
+    fn validation_rules() {
+        let ok = PasConfig::pas25(4);
+        assert!(ok.validate(50, 20, 3).is_ok());
+        assert!(ok.validate(50, 30, 3).is_err(), "t_sketch below D*");
+        assert!(ok.validate(20, 10, 3).is_err(), "t_sketch beyond total");
+        let bad = PasConfig { l_sketch: 1, l_refine: 2, ..ok };
+        assert!(bad.validate(50, 20, 3).is_err());
+        let bad2 = PasConfig { t_sparse: 1, ..ok };
+        assert!(bad2.validate(50, 20, 3).is_err());
+        let bad3 = PasConfig { l_sketch: 9, l_refine: 2, ..ok };
+        assert!(bad3.validate(50, 20, 3).is_err(), "exceeds artifact cuts");
+    }
+
+    #[test]
+    fn all_valid_plans_are_executable() {
+        testing::check_no_shrink(
+            "valid-pas-plans-executable",
+            |rng| {
+                let total = testing::gen_usize(rng, 8, 100);
+                let t_sketch = testing::gen_usize(rng, 2, total);
+                let t_complete = testing::gen_usize(rng, 1, t_sketch);
+                let t_sparse = testing::gen_usize(rng, 2, 8);
+                let l_refine = testing::gen_usize(rng, 1, 3);
+                let l_sketch = testing::gen_usize(rng, l_refine, 3);
+                (total, PasConfig { t_sketch, t_complete, t_sparse, l_sketch, l_refine })
+            },
+            |&(total, cfg)| {
+                if cfg.validate(total, 1, 3).is_err() {
+                    return true; // rejected configs are out of scope
+                }
+                let plan = cfg.plan(total);
+                plan.len() == total && plan_is_executable(&plan)
+            },
+        );
+    }
+
+    #[test]
+    fn more_sparse_means_fewer_full_steps() {
+        let count_full = |s| {
+            PasConfig::pas25(s)
+                .plan(50)
+                .iter()
+                .filter(|&&a| a == Full)
+                .count()
+        };
+        assert!(count_full(2) > count_full(3));
+        assert!(count_full(3) > count_full(5));
+    }
+
+    #[test]
+    fn full_plan_sampling() {
+        let p = SamplingPlan::Full.actions(5);
+        assert_eq!(p, vec![Full; 5]);
+    }
+
+    #[test]
+    fn partial_without_cache_flagged() {
+        assert!(!plan_is_executable(&[Partial(2), Full]));
+        assert!(plan_is_executable(&[Full, Partial(2)]));
+        assert!(!plan_is_executable(&[]));
+    }
+}

@@ -1,0 +1,219 @@
+//! The Fig. 7 optimisation framework: enumerate PAS configurations under
+//! user constraints, rank by Eq. 3 MAC reduction, optionally validate
+//! image quality against the full-sampling reference trajectory.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, GenRequest};
+use crate::pas::calibrate::CalibrationReport;
+use crate::pas::cost::CostModel;
+use crate::pas::plan::{PasConfig, SamplingPlan};
+use crate::util::stats;
+
+/// User requirements (Fig. 7, step 1).
+#[derive(Debug, Clone)]
+pub struct SearchConstraints {
+    pub total_steps: usize,
+    /// Reject configurations below this MAC reduction.
+    pub min_mac_reduction: f64,
+    /// Latent-PSNR floor vs. the full-sampling reference (quality proxy —
+    /// DESIGN.md substitution for CLIP/FID). None = skip validation.
+    pub min_psnr_db: Option<f64>,
+    /// How many top candidates to validate by actually generating.
+    pub max_validate: usize,
+}
+
+impl Default for SearchConstraints {
+    fn default() -> Self {
+        SearchConstraints {
+            total_steps: 50,
+            min_mac_reduction: 1.5,
+            min_psnr_db: None,
+            max_validate: 3,
+        }
+    }
+}
+
+/// A feasible configuration with its predicted/measured scores.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub cfg: PasConfig,
+    pub mac_reduction: f64,
+    /// Filled by validation (latent PSNR vs full reference, dB).
+    pub psnr_db: Option<f64>,
+    pub validated: bool,
+}
+
+/// Enumerate all valid configurations (Fig. 7, step 3) sorted by
+/// descending MAC reduction. Spatial params are bounded by the artifact
+/// cut levels and the outlier count (L_refine >= #outliers, Sec. III-B).
+pub fn enumerate_candidates(
+    report: &CalibrationReport,
+    cost: &CostModel,
+    cons: &SearchConstraints,
+    max_cut: usize,
+) -> Vec<Candidate> {
+    let t = cons.total_steps;
+    let l_min = report.outliers.len().max(1).min(max_cut);
+    let mut out = Vec::new();
+    for t_sketch in report.d_star..=t {
+        for t_complete in 1..=4usize {
+            for t_sparse in 2..=6usize {
+                for l_refine in l_min..=max_cut {
+                    for l_sketch in l_refine..=max_cut {
+                        let cfg = PasConfig { t_sketch, t_complete, t_sparse, l_sketch, l_refine };
+                        if cfg.validate(t, report.d_star, max_cut).is_err() {
+                            continue;
+                        }
+                        let red = cost.mac_reduction(&cfg.plan(t));
+                        if red >= cons.min_mac_reduction {
+                            out.push(Candidate {
+                                cfg,
+                                mac_reduction: red,
+                                psnr_db: None,
+                                validated: false,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| b.mac_reduction.partial_cmp(&a.mac_reduction).unwrap());
+    out
+}
+
+/// Full search pipeline (Fig. 7, steps 3-4).
+pub struct Searcher<'a> {
+    pub coord: &'a Coordinator,
+    pub cost: CostModel,
+}
+
+impl<'a> Searcher<'a> {
+    /// Validate the top candidates by generating with PAS and comparing
+    /// the final latent to the full-sampling reference (same seeds).
+    pub fn search(
+        &self,
+        report: &CalibrationReport,
+        cons: &SearchConstraints,
+        validation_prompts: &[String],
+    ) -> Result<Vec<Candidate>> {
+        let max_cut = self.coord.runtime().manifest().model.max_cut;
+        let mut cands = enumerate_candidates(report, &self.cost, cons, max_cut);
+        let Some(min_psnr) = cons.min_psnr_db else {
+            return Ok(cands);
+        };
+
+        // Reference latents (full sampling).
+        let refs: Vec<_> = validation_prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut r = GenRequest::new(p, 9000 + i as u64);
+                r.steps = cons.total_steps;
+                self.coord.generate_one(&r)
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut validated = Vec::new();
+        for cand in cands.iter_mut().take(cons.max_validate) {
+            let mut psnrs = Vec::new();
+            for (i, p) in validation_prompts.iter().enumerate() {
+                let mut r = GenRequest::new(p, 9000 + i as u64);
+                r.steps = cons.total_steps;
+                r.plan = SamplingPlan::Pas(cand.cfg);
+                let out = self.coord.generate_one(&r)?;
+                psnrs.push(stats::psnr(&out.latent.data, &refs[i].latent.data, 2.0));
+            }
+            cand.psnr_db = Some(stats::mean(&psnrs));
+            cand.validated = true;
+            if cand.psnr_db.unwrap() >= min_psnr {
+                validated.push(cand.clone());
+            }
+        }
+        if validated.is_empty() {
+            // Nothing passed quality: return the (unvalidated) ranking so
+            // the caller can relax constraints.
+            return Ok(cands);
+        }
+        validated.sort_by(|a, b| b.mac_reduction.partial_cmp(&a.mac_reduction).unwrap());
+        Ok(validated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::inventory::sd_v14;
+    use crate::pas::calibrate::analyse;
+
+    fn fake_report(d_star_target: usize, steps: usize) -> CalibrationReport {
+        // Build raw curves with a knee at d_star_target.
+        let t1 = steps - 1;
+        let raw: Vec<Vec<f64>> = (0..12)
+            .map(|b| {
+                (0..t1)
+                    .map(|t| {
+                        if t < d_star_target {
+                            0.8
+                        } else if b < 2 {
+                            0.6
+                        } else {
+                            0.05
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        analyse(raw, vec![1.0; steps], steps, 1)
+    }
+
+    #[test]
+    fn enumeration_respects_constraints() {
+        let rep = fake_report(20, 50);
+        let cost = CostModel::new(&sd_v14());
+        let cons = SearchConstraints { min_mac_reduction: 2.0, ..Default::default() };
+        let cands = enumerate_candidates(&rep, &cost, &cons, 3);
+        assert!(!cands.is_empty());
+        for c in &cands {
+            assert!(c.mac_reduction >= 2.0);
+            assert!(c.cfg.t_sketch >= rep.d_star);
+            assert!(c.cfg.l_refine >= rep.outliers.len().min(3));
+            assert!(c.cfg.l_sketch >= c.cfg.l_refine);
+        }
+        // Sorted descending.
+        assert!(cands.windows(2).all(|w| w[0].mac_reduction >= w[1].mac_reduction));
+    }
+
+    #[test]
+    fn tighter_constraint_shrinks_the_set() {
+        let rep = fake_report(20, 50);
+        let cost = CostModel::new(&sd_v14());
+        let loose = enumerate_candidates(
+            &rep,
+            &cost,
+            &SearchConstraints { min_mac_reduction: 1.2, ..Default::default() },
+            3,
+        );
+        let tight = enumerate_candidates(
+            &rep,
+            &cost,
+            &SearchConstraints { min_mac_reduction: 2.8, ..Default::default() },
+            3,
+        );
+        assert!(loose.len() > tight.len());
+    }
+
+    #[test]
+    fn impossible_constraint_yields_empty() {
+        let rep = fake_report(20, 50);
+        let cost = CostModel::new(&sd_v14());
+        let cands = enumerate_candidates(
+            &rep,
+            &cost,
+            &SearchConstraints { min_mac_reduction: 50.0, ..Default::default() },
+            3,
+        );
+        assert!(cands.is_empty());
+    }
+}

@@ -1,0 +1,134 @@
+//! Image-quality proxies + image I/O (S14).
+//!
+//! Real CLIP/FID/IS need pretrained evaluation networks that cannot run
+//! here (DESIGN.md substitution table). The proxies used across Table
+//! II/III benches:
+//!
+//! - latent PSNR vs. the full-sampling reference trajectory (same seed) —
+//!   monotone in approximation aggressiveness, like CLIP/FID are used;
+//! - a diagonal-covariance Fréchet distance between pooled image-feature
+//!   statistics of two batches ("FID-proxy").
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+use crate::util::stats;
+
+/// Latent-space PSNR (dB) against a reference, dynamic range ~[-2, 2].
+pub fn latent_psnr(latent: &Tensor, reference: &Tensor) -> f64 {
+    stats::psnr(&latent.data, &reference.data, 4.0)
+}
+
+/// Pooled feature vector of an RGB image tensor (HW, 3): 4x4 grid of
+/// per-cell channel means + global channel stds -> 51 dims.
+pub fn image_features(img: &Tensor, h: usize, w: usize) -> Vec<f64> {
+    assert_eq!(img.dims, vec![h * w, 3], "expect (HW, 3) image");
+    let cells = 4usize;
+    let (ch, cw) = (h / cells, w / cells);
+    let mut feats = Vec::with_capacity(cells * cells * 3 + 3);
+    for cy in 0..cells {
+        for cx in 0..cells {
+            let mut sum = [0.0f64; 3];
+            for y in cy * ch..(cy + 1) * ch {
+                for x in cx * cw..(cx + 1) * cw {
+                    let base = (y * w + x) * 3;
+                    for c in 0..3 {
+                        sum[c] += img.data[base + c] as f64;
+                    }
+                }
+            }
+            let n = (ch * cw) as f64;
+            feats.extend(sum.iter().map(|s| s / n));
+        }
+    }
+    for c in 0..3 {
+        let vals: Vec<f64> = img.data[c..].iter().step_by(3).map(|&v| v as f64).collect();
+        feats.push(stats::stddev(&vals));
+    }
+    feats
+}
+
+/// FID-proxy between two image batches.
+pub fn frechet_proxy(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    stats::frechet_diag(a, b)
+}
+
+/// Write an RGB image tensor (HW, 3), values ~[0,1], as binary PPM.
+pub fn write_ppm(img: &Tensor, h: usize, w: usize, path: &Path) -> Result<()> {
+    if img.dims != vec![h * w, 3] {
+        bail!("write_ppm: shape {:?} != ({}, 3)", img.dims, h * w);
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = img
+        .data
+        .iter()
+        .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+        .collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_image(h: usize, w: usize, rgb: [f32; 3]) -> Tensor {
+        let mut data = Vec::with_capacity(h * w * 3);
+        for _ in 0..h * w {
+            data.extend_from_slice(&rgb);
+        }
+        Tensor::new(vec![h * w, 3], data).unwrap()
+    }
+
+    #[test]
+    fn psnr_monotone_in_noise() {
+        let a = Tensor::new(vec![8, 2], vec![0.1; 16]).unwrap();
+        let mut b_small = a.clone();
+        let mut b_big = a.clone();
+        for (i, (s, l)) in b_small.data.iter_mut().zip(b_big.data.iter_mut()).enumerate() {
+            let delta = if i % 2 == 0 { 1.0 } else { -1.0 };
+            *s += 0.01 * delta;
+            *l += 0.3 * delta;
+        }
+        assert!(latent_psnr(&b_small, &a) > latent_psnr(&b_big, &a));
+    }
+
+    #[test]
+    fn features_have_expected_len_and_values() {
+        let img = flat_image(16, 16, [0.25, 0.5, 0.75]);
+        let f = image_features(&img, 16, 16);
+        assert_eq!(f.len(), 4 * 4 * 3 + 3);
+        assert!((f[0] - 0.25).abs() < 1e-6);
+        assert!((f[1] - 0.5).abs() < 1e-6);
+        // Flat image -> zero std.
+        assert!(f[48].abs() < 1e-9);
+    }
+
+    #[test]
+    fn frechet_separates_distinct_batches() {
+        let a: Vec<Vec<f64>> = (0..8)
+            .map(|i| image_features(&flat_image(16, 16, [0.2 + 0.01 * i as f32, 0.4, 0.6]), 16, 16))
+            .collect();
+        let b: Vec<Vec<f64>> = (0..8)
+            .map(|i| image_features(&flat_image(16, 16, [0.8, 0.1 + 0.01 * i as f32, 0.3]), 16, 16))
+            .collect();
+        assert!(frechet_proxy(&a, &a) < 1e-9);
+        assert!(frechet_proxy(&a, &b) > 0.5);
+    }
+
+    #[test]
+    fn ppm_roundtrip_header() {
+        let img = flat_image(4, 4, [1.0, 0.0, 0.5]);
+        let path = std::env::temp_dir().join("sdacc_test.ppm");
+        write_ppm(&img, 4, 4, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n4 4\n255\n"));
+        assert_eq!(bytes.len(), 11 + 4 * 4 * 3);
+        assert_eq!(&bytes[11..14], &[255, 0, 128]);
+    }
+}

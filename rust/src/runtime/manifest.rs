@@ -1,0 +1,288 @@
+//! AOT manifest parsing (artifacts/manifest.json, written by aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model-level metadata exported by the compile path.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub latent_h: usize,
+    pub latent_w: usize,
+    pub latent_c: usize,
+    pub channels: Vec<usize>,
+    pub ctx_len: usize,
+    pub ctx_dim: usize,
+    pub img_h: usize,
+    pub img_w: usize,
+    pub max_cut: usize,
+    pub train_steps: usize,
+    pub guidance: f32,
+    pub seed: u64,
+}
+
+impl ModelMeta {
+    pub fn latent_l(&self) -> usize {
+        self.latent_h * self.latent_w
+    }
+
+    pub fn latent_elems(&self) -> usize {
+        self.latent_l() * self.latent_c
+    }
+}
+
+/// One entry of a weights table: a named leaf in the flattened pytree.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// A weight set (unet/text/vae): file + leaf table, in lowering order.
+#[derive(Debug, Clone)]
+pub struct WeightSet {
+    pub file: String,
+    pub table: Vec<WeightEntry>,
+}
+
+/// One AOT artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub n_params: usize,
+    /// Input specs, excluding weights: (shape, is_i32).
+    pub inputs: Vec<(Vec<usize>, bool)>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub batch_sizes: Vec<usize>,
+    pub vocab: BTreeMap<String, i32>,
+    pub alpha_bar: Vec<f32>,
+    pub weights: BTreeMap<String, WeightSet>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get_usize(key).ok_or_else(|| anyhow!("manifest: missing usize '{key}'"))
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let m = j.req("model").map_err(|e| anyhow!("{e}"))?;
+        let model = ModelMeta {
+            latent_h: req_usize(m, "latent_h")?,
+            latent_w: req_usize(m, "latent_w")?,
+            latent_c: req_usize(m, "latent_c")?,
+            channels: m
+                .req("channels")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            ctx_len: req_usize(m, "ctx_len")?,
+            ctx_dim: req_usize(m, "ctx_dim")?,
+            img_h: req_usize(m, "img_h")?,
+            img_w: req_usize(m, "img_w")?,
+            max_cut: req_usize(m, "max_cut")?,
+            train_steps: req_usize(m, "train_steps")?,
+            guidance: m.get_f64("guidance").unwrap_or(7.5) as f32,
+            seed: m.get_f64("seed").unwrap_or(42.0) as u64,
+        };
+
+        let batch_sizes = j
+            .req("batch_sizes")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+
+        let vocab = j
+            .get("vocab")
+            .and_then(Json::as_obj)
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_i64().map(|id| (k.clone(), id as i32)))
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let alpha_bar: Vec<f32> = j
+            .get("alpha_bar")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|x| x.as_f64().map(|f| f as f32)).collect())
+            .unwrap_or_default();
+
+        let mut weights = BTreeMap::new();
+        if let Some(w) = j.get("weights").and_then(Json::as_obj) {
+            for (name, ws) in w {
+                let table = ws
+                    .get("table")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .map(|e| WeightEntry {
+                                name: e.get_str("name").unwrap_or("").to_string(),
+                                shape: e
+                                    .get("shape")
+                                    .and_then(Json::as_arr)
+                                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                                    .unwrap_or_default(),
+                                offset: e.get_usize("offset").unwrap_or(0),
+                                len: e.get_usize("len").unwrap_or(0),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                weights.insert(
+                    name.clone(),
+                    WeightSet {
+                        file: ws.get_str("file").unwrap_or("").to_string(),
+                        table,
+                    },
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(arts) = j.get("artifacts").and_then(Json::as_arr) {
+            for a in arts {
+                let name = a.get_str("name").unwrap_or("").to_string();
+                let inputs = a
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .map(|xs| {
+                        xs.iter()
+                            .map(|i| {
+                                let shape = i
+                                    .get("shape")
+                                    .and_then(Json::as_arr)
+                                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                                    .unwrap_or_default();
+                                (shape, i.get_str("dtype") == Some("i32"))
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactMeta {
+                        file: a.get_str("file").unwrap_or("").to_string(),
+                        n_params: a.get_usize("n_params").unwrap_or(0),
+                        name,
+                        inputs,
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            batch_sizes,
+            vocab,
+            alpha_bar,
+            weights,
+            artifacts,
+        })
+    }
+
+    /// Weight-set name an artifact draws its parameters from.
+    pub fn weight_set_for(artifact: &str) -> &'static str {
+        if artifact.starts_with("unet") {
+            "unet"
+        } else if artifact.starts_with("text") {
+            "text"
+        } else {
+            "vae"
+        }
+    }
+
+    /// Tokenise a prompt with the exported closed vocabulary (whitespace
+    /// split, unknown words -> pad id 0), padded/clipped to ctx_len.
+    pub fn tokenize(&self, prompt: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = prompt
+            .to_lowercase()
+            .split_whitespace()
+            .map(|w| self.vocab.get(w).copied().unwrap_or(0))
+            .take(self.model.ctx_len)
+            .collect();
+        ids.resize(self.model.ctx_len, 0);
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+          "model": {"latent_h":16,"latent_w":16,"latent_c":4,
+            "channels":[32,64,128,128],"ctx_len":4,"ctx_dim":64,
+            "img_h":64,"img_w":64,"max_cut":3,"train_steps":1000,
+            "beta_start":0.00085,"beta_end":0.012,"guidance":7.5,"seed":42},
+          "batch_sizes":[1,2],
+          "vocab":{"<pad>":0,"red":1,"circle":9},
+          "alpha_bar":[0.999,0.99],
+          "weights":{"unet":{"file":"weights_unet.bin","table":[
+            {"name":"a/b","shape":[2,2],"offset":0,"len":4}]}},
+          "artifacts":[{"name":"unet_full_b1","file":"unet_full_b1.hlo.txt",
+            "n_params":1,"inputs":[{"shape":[1,256,4],"dtype":"f32"},
+            {"shape":[1,4],"dtype":"i32"}],"sha256":"x"}]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("sdacc_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), tiny_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.latent_l(), 256);
+        assert_eq!(m.batch_sizes, vec![1, 2]);
+        assert_eq!(m.vocab["red"], 1);
+        assert_eq!(m.alpha_bar.len(), 2);
+        assert_eq!(m.weights["unet"].table[0].shape, vec![2, 2]);
+        let a = &m.artifacts["unet_full_b1"];
+        assert_eq!(a.inputs.len(), 2);
+        assert!(a.inputs[1].1, "second input is i32");
+    }
+
+    #[test]
+    fn tokenizer_pads_and_maps() {
+        let dir = std::env::temp_dir().join("sdacc_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), tiny_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.tokenize("RED circle"), vec![1, 9, 0, 0]);
+        assert_eq!(m.tokenize("unknown words here everywhere extra"), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn weight_set_mapping() {
+        assert_eq!(Manifest::weight_set_for("unet_full_b1"), "unet");
+        assert_eq!(Manifest::weight_set_for("text_encoder_b2"), "text");
+        assert_eq!(Manifest::weight_set_for("vae_decoder_b1"), "vae");
+    }
+}

@@ -1,0 +1,243 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute` (pattern from /opt/xla-example/load_hlo).
+//! Weights are loaded once per weight set from `weights_*.bin` (raw f32 in
+//! jax lowering order, per the manifest table) and prepended to every
+//! execute call, so python never runs at request time.
+
+pub mod manifest;
+pub mod service;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactMeta, Manifest, ModelMeta};
+pub use service::{RuntimeHandle, RuntimeService};
+pub use tensor::{Tensor, TensorI32};
+
+/// An input value for an artifact execution.
+#[derive(Debug, Clone)]
+pub enum Input {
+    F32(Tensor),
+    I32(TensorI32),
+}
+
+impl Input {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Input::F32(t) => t.to_literal(),
+            Input::I32(t) => t.to_literal(),
+        }
+    }
+
+    fn dims(&self) -> &[usize] {
+        match self {
+            Input::F32(t) => &t.dims,
+            Input::I32(t) => &t.dims,
+        }
+    }
+}
+
+/// A compiled artifact plus its cached parameter literals.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// Weight literals are built once per weight set and passed to every
+    /// execute call *by reference* — EXPERIMENTS.md §Perf: the first
+    /// implementation deep-copied ~600 literals (~28 MB) per call.
+    /// (Device-resident PjRtBuffers + execute_b would avoid the
+    /// host->device copy too, but xla_extension 0.5.1's execute_b path
+    /// trips an internal size check on this executable set.)
+    weights: Arc<Vec<xla::Literal>>,
+}
+
+impl LoadedArtifact {
+    /// Execute with the given non-weight inputs; returns output tensors
+    /// (the lowered computation always returns a tuple).
+    pub fn execute(&self, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (inp, (shape, _))) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if inp.dims() != &shape[..] {
+                bail!(
+                    "artifact {} input {i}: shape {:?} != manifest {:?}",
+                    self.meta.name,
+                    inp.dims(),
+                    shape
+                );
+            }
+        }
+        // Weights are borrowed from the shared cache; only the (small)
+        // per-call inputs are materialised as fresh literals.
+        let input_lits: Vec<xla::Literal> =
+            inputs.iter().map(|inp| inp.to_literal()).collect::<Result<_>>()?;
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(self.weights.len() + input_lits.len());
+        args.extend(self.weights.iter());
+        args.extend(input_lits.iter());
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("decomposing result tuple")?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// The PJRT runtime: client + artifact/weight caches.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    weight_sets: Mutex<HashMap<String, Arc<Vec<xla::Literal>>>>,
+    artifacts: Mutex<HashMap<String, Arc<LoadedArtifact>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (needs manifest.json).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            weight_sets: Mutex::new(HashMap::new()),
+            artifacts: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load (or fetch cached) weight literals for a set.
+    fn weight_buffers(&self, set: &str) -> Result<Arc<Vec<xla::Literal>>> {
+        if let Some(w) = self.weight_sets.lock().unwrap().get(set) {
+            return Ok(Arc::clone(w));
+        }
+        let ws = self
+            .manifest
+            .weights
+            .get(set)
+            .ok_or_else(|| anyhow!("unknown weight set '{set}'"))?;
+        let path = self.manifest.dir.join(&ws.file);
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut bufs = Vec::with_capacity(ws.table.len());
+        for e in &ws.table {
+            let end = e.offset / 4 + e.len;
+            if end > floats.len() {
+                bail!("weight entry {} out of range", e.name);
+            }
+            let slice = &floats[e.offset / 4..end];
+            let t = Tensor::new(e.shape.clone(), slice.to_vec())
+                .with_context(|| format!("weight {}", e.name))?;
+            bufs.push(t.to_literal()?);
+        }
+        let arc = Arc::new(bufs);
+        self.weight_sets
+            .lock()
+            .unwrap()
+            .insert(set.to_string(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedArtifact>> {
+        if let Some(a) = self.artifacts.lock().unwrap().get(name) {
+            return Ok(Arc::clone(a));
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", name))?;
+        let weights = self.weight_buffers(Manifest::weight_set_for(name))?;
+        if weights.len() != meta.n_params {
+            bail!(
+                "artifact {name}: weight count {} != manifest n_params {}",
+                weights.len(),
+                meta.n_params
+            );
+        }
+        let loaded = Arc::new(LoadedArtifact { meta, exe, weights });
+        self.artifacts
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&loaded));
+        Ok(loaded)
+    }
+
+    /// Convenience: load + execute in one call.
+    pub fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        self.load(name)?.execute(inputs)
+    }
+
+    /// Artifact name helpers matching aot.py's naming scheme.
+    pub fn unet_full(b: usize) -> String {
+        format!("unet_full_b{b}")
+    }
+
+    pub fn unet_partial(l: usize, b: usize) -> String {
+        format!("unet_partial_l{l}_b{b}")
+    }
+
+    pub fn unet_calib(b: usize) -> String {
+        format!("unet_calib_b{b}")
+    }
+
+    pub fn text_encoder(b: usize) -> String {
+        format!("text_encoder_b{b}")
+    }
+
+    pub fn vae_decoder(b: usize) -> String {
+        format!("vae_decoder_b{b}")
+    }
+}
+
+/// Default artifacts directory: $SD_ACC_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("SD_ACC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(Runtime::unet_full(1), "unet_full_b1");
+        assert_eq!(Runtime::unet_partial(2, 4), "unet_partial_l2_b4");
+        assert_eq!(Runtime::vae_decoder(2), "vae_decoder_b2");
+    }
+}

@@ -1,0 +1,129 @@
+//! Runtime service: a dedicated thread owning the PJRT client.
+//!
+//! The `xla` crate's client/executable/literal wrappers are `!Send`
+//! (Rc + raw pointers), so all PJRT work is serialised onto one owner
+//! thread; the rest of the system talks to it through a cloneable,
+//! thread-safe [`RuntimeHandle`]. PJRT-CPU parallelises *inside* an
+//! execution (Eigen pool), so serialising submissions costs little and
+//! batching recovers the rest — the measured trade-off is recorded in
+//! EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use super::{Input, Manifest, Runtime, Tensor};
+
+enum Cmd {
+    Execute {
+        name: String,
+        inputs: Vec<Input>,
+        resp: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    /// Compile artifacts ahead of time (warm the executable cache).
+    Preload {
+        names: Vec<String>,
+        resp: mpsc::Sender<Result<()>>,
+    },
+    Stop,
+}
+
+/// Cloneable, Send + Sync handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Cmd>>>,
+    manifest: Arc<Manifest>,
+}
+
+impl RuntimeHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact on the runtime thread (blocking).
+    pub fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Execute { name: name.to_string(), inputs: inputs.to_vec(), resp })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped the request"))?
+    }
+
+    /// Warm the executable cache (compiles are the slow part).
+    pub fn preload(&self, names: &[String]) -> Result<()> {
+        let (resp, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Preload { names: names.to_vec(), resp })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped the request"))?
+    }
+}
+
+/// Owns the runtime thread; dropping stops it.
+pub struct RuntimeService {
+    handle: RuntimeHandle,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Start the owner thread over an artifacts directory.
+    pub fn start(dir: &Path) -> Result<RuntimeService> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let dir = dir.to_path_buf();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = thread::Builder::new()
+            .name("sd-acc-runtime".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Execute { name, inputs, resp } => {
+                            let _ = resp.send(rt.execute(&name, &inputs));
+                        }
+                        Cmd::Preload { names, resp } => {
+                            let r = names.iter().try_for_each(|n| rt.load(n).map(|_| ()));
+                            let _ = resp.send(r);
+                        }
+                        Cmd::Stop => break,
+                    }
+                }
+            })
+            .expect("spawn runtime thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during init"))??;
+        Ok(RuntimeService {
+            handle: RuntimeHandle { tx: Arc::new(Mutex::new(tx)), manifest },
+            thread: Some(thread),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.lock().unwrap().send(Cmd::Stop);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Host-side tensors and conversions to/from PJRT literals.
+
+use anyhow::{bail, Context, Result};
+
+/// Dense row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("tensor shape {dims:?} needs {n} elems, got {}", data.len());
+        }
+        Ok(Tensor { dims, data })
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor { dims: vec![], data: vec![x] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Convert to an XLA literal of the same shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).context("tensor reshape to literal")
+    }
+
+    /// Read back from an XLA literal (f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal to_vec f32")?;
+        Tensor::new(dims, data)
+    }
+
+    /// Leading-axis slice [i] (drops the first dim).
+    pub fn index0(&self, i: usize) -> Tensor {
+        assert!(!self.dims.is_empty() && i < self.dims[0]);
+        let inner: usize = self.dims[1..].iter().product();
+        Tensor {
+            dims: self.dims[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Stack tensors of identical shape along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack of zero tensors");
+        }
+        let inner = &parts[0].dims;
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            if &p.dims != inner {
+                bail!("stack shape mismatch: {:?} vs {:?}", p.dims, inner);
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut dims = vec![parts.len()];
+        dims.extend_from_slice(inner);
+        Ok(Tensor { dims, data })
+    }
+}
+
+/// Dense row-major i32 tensor (token ids).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(dims: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("tensor shape {dims:?} needs {n} elems, got {}", data.len());
+        }
+        Ok(TensorI32 { dims, data })
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).context("i32 tensor reshape")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn index0_slices_rows() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.index0(1).data, vec![3.0, 4.0, 5.0]);
+        assert_eq!(t.index0(0).dims, vec![3]);
+    }
+
+    #[test]
+    fn stack_roundtrip() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
+        let s = Tensor::stack(&[a.clone(), b]).unwrap();
+        assert_eq!(s.dims, vec![2, 2]);
+        assert_eq!(s.index0(0), a);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let t = Tensor::scalar(7.5);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(Tensor::from_literal(&lit).unwrap().data, vec![7.5]);
+    }
+}

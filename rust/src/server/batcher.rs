@@ -1,0 +1,186 @@
+//! Dynamic batcher: group compatible requests, flush on size or age.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Generic over the pending item; the server instantiates P = Pending.
+pub struct Batcher<P: BatchItem> {
+    /// Supported batch sizes, ascending.
+    sizes: Vec<usize>,
+    max_wait: Duration,
+    queues: BTreeMap<String, Vec<(Instant, P)>>,
+}
+
+/// Anything with a batching key.
+pub trait BatchItem {
+    fn key(&self) -> String;
+}
+
+impl BatchItem for super::Pending {
+    fn key(&self) -> String {
+        self.req.batch_key()
+    }
+}
+
+impl<P: BatchItem> Batcher<P> {
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
+        sizes.sort_unstable();
+        assert!(!sizes.is_empty(), "need at least one batch size");
+        Batcher { sizes, max_wait, queues: BTreeMap::new() }
+    }
+
+    pub fn push(&mut self, item: P) {
+        self.queues
+            .entry(item.key())
+            .or_default()
+            .push((Instant::now(), item));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(Vec::len).sum()
+    }
+
+    fn max_size(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Largest supported size <= n (falls back to smallest).
+    fn best_size(&self, n: usize) -> usize {
+        self.sizes
+            .iter()
+            .rev()
+            .find(|&&s| s <= n)
+            .copied()
+            .unwrap_or(self.sizes[0])
+    }
+
+    /// Emit batches that are full, or whose oldest member exceeded
+    /// max_wait (aged batches flush at the best available size).
+    pub fn flush_ready(&mut self, now: Instant) -> Vec<Vec<P>> {
+        let max_size = self.max_size();
+        let max_wait = self.max_wait;
+        let sizes = self.sizes.clone();
+        let best_size = |n: usize| -> usize {
+            sizes.iter().rev().find(|&&s| s <= n).copied().unwrap_or(sizes[0])
+        };
+        let mut out = Vec::new();
+        for q in self.queues.values_mut() {
+            loop {
+                if q.is_empty() {
+                    break;
+                }
+                let full = q.len() >= max_size;
+                let aged = now.duration_since(q[0].0) >= max_wait;
+                if !full && !aged {
+                    break;
+                }
+                let take = best_size(q.len()).min(q.len());
+                out.push(q.drain(..take).map(|(_, p)| p).collect());
+                // Leftovers smaller than the smallest supported size wait
+                // for company unless they age out on a later call (the
+                // coordinator requires exact artifact batch sizes).
+                if q.len() < sizes[0] {
+                    break;
+                }
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+        out
+    }
+
+    /// Flush everything (shutdown), best-effort sizes.
+    pub fn flush_all(&mut self) -> Vec<Vec<P>> {
+        let mut out = Vec::new();
+        for (_, mut q) in std::mem::take(&mut self.queues) {
+            while !q.is_empty() {
+                let take = self.best_size(q.len()).min(q.len());
+                out.push(q.drain(..take).map(|(_, p)| p).collect());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone)]
+    struct Item(String);
+
+    impl BatchItem for Item {
+        fn key(&self) -> String {
+            self.0.clone()
+        }
+    }
+
+    fn mk(key: &str) -> Item {
+        Item(key.to_string())
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = Batcher::new(vec![1, 2], Duration::from_secs(10));
+        b.push(mk("a"));
+        b.push(mk("a"));
+        let out = b.flush_ready(Instant::now());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn incompatible_keys_never_mix() {
+        let mut b = Batcher::new(vec![1, 2], Duration::from_secs(0));
+        b.push(mk("a"));
+        b.push(mk("b"));
+        let out = b.flush_ready(Instant::now());
+        assert_eq!(out.len(), 2);
+        for batch in out {
+            assert_eq!(batch.len(), 1);
+        }
+    }
+
+    #[test]
+    fn aged_requests_flush_small() {
+        let mut b = Batcher::new(vec![1, 2], Duration::from_millis(0));
+        b.push(mk("a"));
+        let out = b.flush_ready(Instant::now() + Duration::from_millis(1));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 1);
+    }
+
+    #[test]
+    fn young_partial_batch_waits() {
+        let mut b = Batcher::new(vec![1, 2], Duration::from_secs(5));
+        b.push(mk("a"));
+        let out = b.flush_ready(Instant::now());
+        assert!(out.is_empty());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn big_queue_splits_into_supported_sizes() {
+        let mut b = Batcher::new(vec![1, 2], Duration::from_secs(10));
+        for _ in 0..5 {
+            b.push(mk("a"));
+        }
+        let out = b.flush_ready(Instant::now());
+        let total: usize = out.iter().map(Vec::len).sum();
+        assert!(out.iter().all(|x| x.len() == 2 || x.len() == 1));
+        // At least the two full batches of 2 must have flushed.
+        assert!(total >= 4, "flushed {total}");
+    }
+
+    #[test]
+    fn flush_all_drains_everything() {
+        let mut b = Batcher::new(vec![1, 2], Duration::from_secs(10));
+        for k in ["a", "a", "b"] {
+            b.push(mk(k));
+        }
+        let out = b.flush_all();
+        let total: usize = out.iter().map(Vec::len).sum();
+        assert_eq!(total, 3);
+        assert_eq!(b.pending(), 0);
+    }
+}

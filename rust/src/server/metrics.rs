@@ -1,0 +1,95 @@
+//! Serving metrics: counters + latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats;
+
+/// Lock-light metrics shared across server threads.
+#[derive(Default)]
+pub struct Metrics {
+    enqueued: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    batched_requests: AtomicU64,
+    batches: AtomicU64,
+    latencies_ms: Mutex<Vec<f64>>,
+}
+
+/// A point-in-time summary.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub enqueued: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub mean_batch_size: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl Metrics {
+    pub fn on_enqueue(&self) {
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_done(&self, latency_ms: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies_ms.lock().unwrap().push(latency_ms);
+    }
+
+    /// Record one executed batch (called once per batch, not per request).
+    pub fn on_batch(&self, batch_size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn summary(&self) -> Summary {
+        let lats = self.latencies_ms.lock().unwrap().clone();
+        Summary {
+            enqueued: self.enqueued.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_batch_size: {
+                let b = self.batches.load(Ordering::Relaxed);
+                if b == 0 {
+                    0.0
+                } else {
+                    self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+                }
+            },
+            p50_ms: stats::percentile(&lats, 50.0),
+            p95_ms: stats::percentile(&lats, 95.0),
+            mean_ms: stats::mean(&lats),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_aggregates() {
+        let m = Metrics::default();
+        for i in 0..10 {
+            m.on_enqueue();
+            m.on_done(10.0 + i as f64);
+        }
+        for _ in 0..5 {
+            m.on_batch(2);
+        }
+        m.on_error();
+        let s = m.summary();
+        assert_eq!(s.enqueued, 10);
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.errors, 1);
+        assert!(s.p50_ms >= 10.0 && s.p50_ms <= 19.0);
+        assert!(s.p95_ms >= s.p50_ms);
+        assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+    }
+}

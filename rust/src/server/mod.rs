@@ -1,0 +1,191 @@
+//! Serving layer (S8): request queue, dynamic batcher, worker fleet,
+//! metrics — std threads + channels (offline build: no tokio).
+//!
+//! Requests are grouped by `GenRequest::batch_key()` (steps/sampler/plan/
+//! guidance must match to run lockstep) and flushed to workers either
+//! when a full batch of the largest compiled size is available or when
+//! the oldest queued request exceeds `max_wait`. This is the vLLM-router
+//! pattern scaled to PJRT-CPU executables.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, GenRequest, GenResult};
+use batcher::Batcher;
+use metrics::Metrics;
+
+/// A queued request with its response channel.
+struct Pending {
+    req: GenRequest,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<GenResult>>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    /// Max time the batcher holds a request hoping to fill a batch.
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { workers: 2, max_wait: Duration::from_millis(50) }
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Pending>,
+}
+
+impl Client {
+    /// Submit a request; returns a receiver for the result.
+    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<Result<GenResult>> {
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Pending { req, enqueued: Instant::now(), resp: tx });
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResult> {
+        self.submit(req)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server shut down"))?
+    }
+}
+
+/// The serving loop: batcher thread + worker threads over one
+/// coordinator (the PJRT executables are shared and thread-safe behind
+/// the runtime's caches).
+pub struct Server {
+    client: Client,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    pub fn start(coord: Arc<Coordinator>, cfg: ServerConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<Pending>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::default());
+        let (work_tx, work_rx) = mpsc::channel::<Vec<Pending>>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        // Batcher thread: drain queue, group, flush.
+        let mut threads = Vec::new();
+        {
+            let rx = Arc::clone(&rx);
+            let shutdown = Arc::clone(&shutdown);
+            let metrics = Arc::clone(&metrics);
+            let sizes = coord.supported_batches();
+            let max_wait = cfg.max_wait;
+            threads.push(
+                thread::Builder::new()
+                    .name("sd-acc-batcher".into())
+                    .spawn(move || {
+                        let mut batcher = Batcher::new(sizes, max_wait);
+                        loop {
+                            if shutdown.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            // Pull with a small timeout so aging batches
+                            // still flush under low load.
+                            let pulled =
+                                rx.lock().unwrap().recv_timeout(Duration::from_millis(5));
+                            match pulled {
+                                Ok(p) => {
+                                    metrics.on_enqueue();
+                                    batcher.push(p);
+                                }
+                                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            }
+                            for batch in batcher.flush_ready(Instant::now()) {
+                                let _ = work_tx.send(batch);
+                            }
+                        }
+                        // Final drain.
+                        for batch in batcher.flush_all() {
+                            let _ = work_tx.send(batch);
+                        }
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // Workers: run generation batches.
+        for i in 0..cfg.workers.max(1) {
+            let work_rx = Arc::clone(&work_rx);
+            let coord = Arc::clone(&coord);
+            let metrics = Arc::clone(&metrics);
+            threads.push(
+                thread::Builder::new()
+                    .name(format!("sd-acc-gen-{i}"))
+                    .spawn(move || loop {
+                        let batch = {
+                            let rx = work_rx.lock().unwrap();
+                            rx.recv()
+                        };
+                        let Ok(batch) = batch else { break };
+                        let t0 = Instant::now();
+                        let reqs: Vec<GenRequest> =
+                            batch.iter().map(|p| p.req.clone()).collect();
+                        let queue_ms: Vec<f64> = batch
+                            .iter()
+                            .map(|p| p.enqueued.elapsed().as_secs_f64() * 1e3)
+                            .collect();
+                        match coord.generate_batch(&reqs) {
+                            Ok(results) => {
+                                let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
+                                metrics.on_batch(reqs.len());
+                                for ((p, r), q_ms) in
+                                    batch.into_iter().zip(results).zip(queue_ms)
+                                {
+                                    metrics.on_done(batch_ms + q_ms);
+                                    let _ = p.resp.send(Ok(r));
+                                }
+                            }
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                for p in batch {
+                                    metrics.on_error();
+                                    let _ = p.resp.send(Err(anyhow::anyhow!(msg.clone())));
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        Server { client: Client { tx }, shutdown, threads, metrics }
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Stop accepting work, finish the queue, join the threads.
+    pub fn shutdown(mut self) {
+        // Dropping our client sender closes the queue once clones die;
+        // signal the batcher explicitly and join.
+        self.shutdown.store(true, Ordering::Relaxed);
+        let Client { tx } = self.client;
+        drop(tx);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}

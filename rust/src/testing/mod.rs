@@ -1,0 +1,146 @@
+//! In-tree property-testing framework (offline build: no proptest).
+//!
+//! A deliberately small QuickCheck-style harness: seeded [`Pcg32`]
+//! generators, N cases per property, and on failure a bounded greedy
+//! shrink via user-provided shrinking candidates. Used across the
+//! coordinator/simulator tests for routing, batching, tiling, fusion and
+//! scheduler invariants.
+
+use crate::util::rng::Pcg32;
+
+/// Number of cases per property (override with SD_ACC_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SD_ACC_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run a property over `cases` random inputs produced by `gen`.
+///
+/// On failure, tries to shrink using `shrink` (candidate smaller inputs)
+/// for up to 200 steps, then panics with the minimal failing case.
+pub fn check<T, G, S, P>(name: &str, gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Pcg32) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let cases = default_cases();
+    let mut rng = Pcg32::new(0x5eed_cafe, hash_name(name));
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &shrink, &prop);
+            panic!(
+                "property '{name}' failed on case {case}/{cases}; minimal input: {minimal:?}"
+            );
+        }
+    }
+}
+
+/// `check` without shrinking.
+pub fn check_no_shrink<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Pcg32) -> T,
+    P: Fn(&T) -> bool,
+{
+    check(name, gen, |_| Vec::new(), prop);
+}
+
+fn shrink_loop<T, S, P>(mut failing: T, shrink: &S, prop: &P) -> T
+where
+    T: Clone,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ------------------------------------------------------ common generators
+
+/// Uniform usize in [lo, hi].
+pub fn gen_usize(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+    rng.gen_range(lo as u64, hi as u64) as usize
+}
+
+/// Vector of f32 in [-scale, scale].
+pub fn gen_f32_vec(rng: &mut Pcg32, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+/// Shrink a usize toward lo: halving candidates.
+pub fn shrink_usize(x: usize, lo: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > lo {
+        out.push(lo);
+        let mid = lo + (x - lo) / 2;
+        if mid != lo && mid != x {
+            out.push(mid);
+        }
+        out.push(x - 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_clean() {
+        check(
+            "add-commutes",
+            |rng| (gen_usize(rng, 0, 100), gen_usize(rng, 0, 100)),
+            |_| Vec::new(),
+            |&(a, b)| a + b == b + a,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 10")]
+    fn failing_property_shrinks_to_boundary() {
+        check(
+            "le-9",
+            |rng| gen_usize(rng, 0, 1000),
+            |&x| shrink_usize(x, 0),
+            |&x| x < 10,
+        );
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..1000 {
+            let v = gen_usize(&mut rng, 5, 9);
+            assert!((5..=9).contains(&v));
+        }
+        let xs = gen_f32_vec(&mut rng, 100, 2.0);
+        assert!(xs.iter().all(|x| x.abs() <= 2.0));
+    }
+}

@@ -1,0 +1,143 @@
+//! In-tree micro-benchmark harness (offline build: no criterion).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`]
+//! for timed sections: warmup, fixed-count timed iterations, mean/stddev/
+//! p50 reporting, plus a JSON line per benchmark so EXPERIMENTS.md §Perf
+//! can be regenerated mechanically.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("stddev_ns", Json::num(self.stddev_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+        ])
+    }
+
+    pub fn human(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (p50 {}, sd {}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.stddev_ns),
+            self.iters
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner with global warmup/iteration policy.
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // SD_ACC_BENCH_ITERS trims CI time; default favours stable numbers.
+        let iters = std::env::var("SD_ACC_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(20);
+        Bench { warmup: 3, iters, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters, results: Vec::new() }
+    }
+
+    /// Time `f` and record/print the result. Returns mean ns.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: stats::mean(&samples),
+            stddev_ns: stats::stddev(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!("bench: {}", res.human());
+        let mean = res.mean_ns;
+        self.results.push(res);
+        mean
+    }
+
+    /// Emit one JSON line per result (machine-readable trailer).
+    pub fn emit_json(&self) {
+        for r in &self.results {
+            println!("BENCH_JSON {}", r.to_json().to_string());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_positive_timings() {
+        let mut b = Bench::new(1, 5);
+        let mut acc = 0u64;
+        b.run("spin", || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns > 0.0);
+        assert!(b.results[0].min_ns <= b.results[0].mean_ns + 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 us");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

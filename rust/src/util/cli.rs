@@ -1,0 +1,163 @@
+//! Hand-rolled CLI argument parser (offline build: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option specification for usage/validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]) against a spec. Unknown `--opts`
+    /// are rejected so typos fail fast.
+    pub fn parse(raw: &[String], spec: &[OptSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let s = spec
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if s.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?
+                            .clone(),
+                    };
+                    out.opts.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        // Fill defaults.
+        for s in spec {
+            if s.takes_value && !out.opts.contains_key(s.name) {
+                if let Some(d) = s.default {
+                    out.opts.insert(s.name.to_string(), d.to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name}: expected number, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[OptSpec]) -> String {
+    let mut out = format!("{cmd} — {about}\n\noptions:\n");
+    for s in spec {
+        let val = if s.takes_value { " <value>" } else { "" };
+        let def = s
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        out.push_str(&format!("  --{}{val}\n      {}{def}\n", s.name, s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "steps", help: "", takes_value: true, default: Some("50") },
+            OptSpec { name: "verbose", help: "", takes_value: false, default: None },
+            OptSpec { name: "out", help: "", takes_value: true, default: None },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&sv(&["--steps", "10", "--verbose", "pos1"]), &spec()).unwrap();
+        assert_eq!(a.get("steps"), Some("10"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn inline_equals() {
+        let a = Args::parse(&sv(&["--steps=25"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), Some(25));
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = Args::parse(&sv(&[]), &spec()).unwrap();
+        assert_eq!(a.get("steps"), Some("50"));
+        assert_eq!(a.get("out"), None);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--out"]), &spec()).is_err());
+        assert!(Args::parse(&sv(&["--verbose=1"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&sv(&["--steps", "abc"]), &spec()).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+}

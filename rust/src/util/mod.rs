@@ -1,0 +1,13 @@
+//! Substrate utilities implemented in-tree (offline build: no serde, no
+//! clap, no rand, no criterion — see Cargo.toml).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+
+/// Crate version string used by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,206 @@
+//! Small numeric/statistics helpers shared by PAS analysis, the quality
+//! proxies, and the bench harness.
+
+/// Arithmetic mean. Returns 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// L2 norm of an f32 slice (accumulated in f64).
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// L2 distance between two equal-length slices.
+pub fn l2_dist(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "l2_dist: length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// The paper's shift score (Eq. 1): ||a - b||_2 / ||b||_2.
+pub fn shift_score(curr: &[f32], prev: &[f32]) -> f64 {
+    let denom = l2_norm(prev);
+    if denom == 0.0 {
+        return 0.0;
+    }
+    l2_dist(curr, prev) / denom
+}
+
+/// Min-max scaling to [0, 1] (Sec. III-A normalisation). Constant series
+/// map to all-zeros.
+pub fn min_max_scale(xs: &[f64]) -> Vec<f64> {
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !lo.is_finite() || hi - lo < 1e-12 {
+        return vec![0.0; xs.len()];
+    }
+    xs.iter().map(|x| (x - lo) / (hi - lo)).collect()
+}
+
+/// Percentile via linear interpolation, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Eq. (2): optimal 2-means split point of an ordered series.
+///
+/// Returns D* in [1, T-2] minimising the within-cluster variance sum of
+/// the prefix [0..=D] and suffix [D+1..T-1]. This is the paper's phase
+/// transition timestep.
+pub fn kmeans2_split(series: &[f64]) -> usize {
+    let t = series.len();
+    assert!(t >= 3, "kmeans2_split needs >= 3 points");
+    let mut best_d = 1;
+    let mut best_cost = f64::INFINITY;
+    for d in 1..=t - 2 {
+        let (a, b) = series.split_at(d + 1);
+        let cost = variance(a) * a.len() as f64 + variance(b) * b.len() as f64;
+        if cost < best_cost {
+            best_cost = cost;
+            best_d = d;
+        }
+    }
+    best_d
+}
+
+/// PSNR in dB between two signals with the given dynamic range.
+pub fn psnr(a: &[f32], b: &[f32], range: f64) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mse = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (range * range / mse).log10()
+}
+
+/// Fréchet distance between two Gaussians fitted per-dimension
+/// (diagonal-covariance FID proxy — DESIGN.md substitution table).
+pub fn frechet_diag(feats_a: &[Vec<f64>], feats_b: &[Vec<f64>]) -> f64 {
+    assert!(!feats_a.is_empty() && !feats_b.is_empty());
+    let d = feats_a[0].len();
+    let (mut dist, mut _tr) = (0.0, 0.0);
+    for j in 0..d {
+        let xa: Vec<f64> = feats_a.iter().map(|f| f[j]).collect();
+        let xb: Vec<f64> = feats_b.iter().map(|f| f[j]).collect();
+        let (ma, mb) = (mean(&xa), mean(&xb));
+        let (va, vb) = (variance(&xa), variance(&xb));
+        dist += (ma - mb) * (ma - mb) + va + vb - 2.0 * (va * vb).sqrt();
+        _tr += va + vb;
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shift_score_matches_eq1() {
+        let prev = [3.0f32, 4.0]; // norm 5
+        let curr = [3.0f32, 4.0 + 5.0];
+        assert!((shift_score(&curr, &prev) - 1.0).abs() < 1e-9);
+        assert_eq!(shift_score(&curr, &[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn min_max_scale_bounds() {
+        let s = min_max_scale(&[2.0, 4.0, 3.0]);
+        assert_eq!(s, vec![0.0, 1.0, 0.5]);
+        assert_eq!(min_max_scale(&[5.0, 5.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kmeans2_finds_obvious_split() {
+        // 10 high values then 10 low: D* must be 9.
+        let mut s = vec![1.0; 10];
+        s.extend(vec![0.0; 10]);
+        assert_eq!(kmeans2_split(&s), 9);
+    }
+
+    #[test]
+    fn kmeans2_split_noisy() {
+        // Decaying series: split should land in the knee region.
+        let s: Vec<f64> = (0..50)
+            .map(|t| if t < 22 { 0.8 - 0.01 * t as f64 } else { 0.1 })
+            .collect();
+        let d = kmeans2_split(&s);
+        assert!((15..=25).contains(&d), "D*={d}");
+    }
+
+    #[test]
+    fn psnr_identical_is_inf() {
+        let a = [0.5f32; 16];
+        assert!(psnr(&a, &a, 1.0).is_infinite());
+        let b = [0.6f32; 16];
+        let p = psnr(&a, &b, 1.0);
+        assert!((p - 20.0).abs() < 1e-4, "{p}");
+    }
+
+    #[test]
+    fn frechet_zero_for_same_distribution() {
+        let a: Vec<Vec<f64>> = (0..64).map(|i| vec![(i % 7) as f64, i as f64]).collect();
+        assert!(frechet_diag(&a, &a).abs() < 1e-9);
+        let b: Vec<Vec<f64>> = (0..64).map(|i| vec![(i % 7) as f64 + 3.0, i as f64]).collect();
+        assert!(frechet_diag(&a, &b) > 8.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Integration: full generation pipeline — coordinator + PAS + quality.
+//!
+//! Uses short step counts to keep CI time sane; the full-length runs live
+//! in examples/ and the bench harness.
+
+use std::sync::OnceLock;
+
+use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::pas::plan::{PasConfig, SamplingPlan, StepAction};
+use sd_acc::quality;
+use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+
+static SERVICE: OnceLock<Option<RuntimeService>> = OnceLock::new();
+
+fn coord_or_skip() -> Option<Coordinator> {
+    let svc = SERVICE.get_or_init(|| {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(RuntimeService::start(&dir).expect("runtime service"))
+    });
+    svc.as_ref().map(|s| Coordinator::new(s.handle()))
+}
+
+fn short_req(prompt: &str, seed: u64, steps: usize) -> GenRequest {
+    let mut r = GenRequest::new(prompt, seed);
+    r.steps = steps;
+    r.sampler = "ddim".into();
+    r
+}
+
+fn pas_cfg(steps: usize, t_sparse: usize) -> PasConfig {
+    PasConfig {
+        t_sketch: steps / 2,
+        t_complete: 2,
+        t_sparse,
+        l_sketch: 2,
+        l_refine: 2,
+    }
+}
+
+#[test]
+fn full_generation_is_deterministic_and_finite() {
+    let Some(c) = coord_or_skip() else { return };
+    let r = short_req("red circle x3 y4", 42, 8);
+    let a = c.generate_one(&r).unwrap();
+    let b = c.generate_one(&r).unwrap();
+    assert_eq!(a.latent.data, b.latent.data, "same seed => same latent");
+    assert!(a.latent.data.iter().all(|x| x.is_finite()));
+    assert_eq!(a.stats.actions.len(), 8);
+    assert!(a.stats.mac_reduction == 1.0);
+}
+
+#[test]
+fn different_seeds_give_different_images() {
+    let Some(c) = coord_or_skip() else { return };
+    let a = c.generate_one(&short_req("blue square x8 y8", 1, 6)).unwrap();
+    let b = c.generate_one(&short_req("blue square x8 y8", 2, 6)).unwrap();
+    let d = sd_acc::util::stats::l2_dist(&a.latent.data, &b.latent.data);
+    assert!(d > 0.5, "seeds should decorrelate latents, d={d}");
+}
+
+#[test]
+fn pas_close_to_full_and_monotone_in_sparsity() {
+    let Some(c) = coord_or_skip() else { return };
+    let steps = 12;
+    let reference = c.generate_one(&short_req("green circle x5 y9", 7, steps)).unwrap();
+
+    let mut psnrs = Vec::new();
+    for t_sparse in [2usize, 4] {
+        let mut r = short_req("green circle x5 y9", 7, steps);
+        r.plan = SamplingPlan::Pas(pas_cfg(steps, t_sparse));
+        let out = c.generate_one(&r).unwrap();
+        assert!(out.stats.mac_reduction > 1.2);
+        let p = quality::latent_psnr(&out.latent, &reference.latent);
+        psnrs.push(p);
+    }
+    // PAS approximates full sampling decently at low sparsity...
+    assert!(psnrs[0] > 14.0, "psnr@sparse2 {}", psnrs[0]);
+    // ...and more aggressive sparsity can't be *better* than gentler one
+    // by a large margin (allow small non-monotonic wiggle).
+    assert!(psnrs[1] <= psnrs[0] + 2.0, "psnrs {psnrs:?}");
+}
+
+#[test]
+fn pas_runs_faster_than_full() {
+    let Some(c) = coord_or_skip() else { return };
+    let steps = 12;
+    let full = c.generate_one(&short_req("red stripe x2 y2", 3, steps)).unwrap();
+    let mut r = short_req("red stripe x2 y2", 3, steps);
+    r.plan = SamplingPlan::Pas(pas_cfg(steps, 4));
+    let pas = c.generate_one(&r).unwrap();
+    // Partial steps must actually be cheaper in wall clock.
+    let full_mean = full.stats.step_ms.iter().sum::<f64>() / full.stats.step_ms.len() as f64;
+    let partial_ms: Vec<f64> = pas
+        .stats
+        .actions
+        .iter()
+        .zip(&pas.stats.step_ms)
+        .filter(|(a, _)| matches!(a, StepAction::Partial(_)))
+        .map(|(_, &ms)| ms)
+        .collect();
+    let partial_mean = partial_ms.iter().sum::<f64>() / partial_ms.len() as f64;
+    assert!(
+        partial_mean < 0.8 * full_mean,
+        "partial {partial_mean:.1}ms vs full {full_mean:.1}ms"
+    );
+}
+
+#[test]
+fn batch2_generation_matches_single() {
+    let Some(c) = coord_or_skip() else { return };
+    if !c.supported_batches().contains(&2) {
+        return;
+    }
+    let r1 = short_req("yellow circle x4 y4", 21, 6);
+    let r2 = short_req("cyan square x10 y10", 22, 6);
+    let batch = c.generate_batch(&[r1.clone(), r2.clone()]).unwrap();
+    let solo = c.generate_one(&r1).unwrap();
+    let d = sd_acc::util::stats::l2_dist(&batch[0].latent.data, &solo.latent.data);
+    let n = sd_acc::util::stats::l2_norm(&solo.latent.data);
+    assert!(d / n < 2e-3, "batched lane != solo: rel {}", d / n);
+}
+
+#[test]
+fn decode_produces_plausible_images() {
+    let Some(c) = coord_or_skip() else { return };
+    let m = c.runtime().manifest().model.clone();
+    let out = c.generate_one(&short_req("red circle x8 y8", 5, 8)).unwrap();
+    let imgs = c.decode(&[out.latent]).unwrap();
+    assert_eq!(imgs[0].dims, vec![m.img_h * m.img_w, 3]);
+    // Trained VAE output lives roughly in [0,1]; an 8-step latent is far
+    // from converged, so allow generous slack — this is a sanity bound,
+    // not a calibration (full-length runs live in examples/).
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in &imgs[0].data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    assert!(lo > -3.0 && hi < 5.0, "decoded range [{lo}, {hi}]");
+    let feats = quality::image_features(&imgs[0], m.img_h, m.img_w);
+    assert_eq!(feats.len(), 51);
+}
+
+#[test]
+fn incompatible_batch_rejected() {
+    let Some(c) = coord_or_skip() else { return };
+    let a = short_req("red circle", 1, 6);
+    let b = short_req("red circle", 2, 8); // different steps
+    assert!(c.generate_batch(&[a, b]).is_err());
+}

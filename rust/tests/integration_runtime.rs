@@ -1,0 +1,204 @@
+//! Integration: PJRT runtime over the real AOT artifacts.
+//!
+//! Requires `make artifacts` (or SD_ACC_ARTIFACTS pointing at a built
+//! artifacts dir); tests are skipped with a notice otherwise. One
+//! RuntimeService is shared across the whole binary so each artifact is
+//! compiled exactly once.
+
+use std::sync::OnceLock;
+
+use sd_acc::runtime::{default_artifacts_dir, Input, Runtime, RuntimeHandle, RuntimeService, Tensor, TensorI32};
+use sd_acc::util::rng::Pcg32;
+
+static SERVICE: OnceLock<Option<RuntimeService>> = OnceLock::new();
+
+fn handle_or_skip() -> Option<RuntimeHandle> {
+    SERVICE
+        .get_or_init(|| {
+            let dir = default_artifacts_dir();
+            if !dir.join("manifest.json").exists() {
+                eprintln!(
+                    "skipping: no artifacts at {} (run `make artifacts`)",
+                    dir.display()
+                );
+                return None;
+            }
+            Some(RuntimeService::start(&dir).expect("runtime service"))
+        })
+        .as_ref()
+        .map(|s| s.handle())
+}
+
+fn gaussian_tensor(rng: &mut Pcg32, dims: Vec<usize>) -> Tensor {
+    let n = dims.iter().product();
+    Tensor::new(dims, rng.gaussian_vec(n)).unwrap()
+}
+
+#[test]
+fn text_encoder_runs_and_is_deterministic() {
+    let Some(rt) = handle_or_skip() else { return };
+    let m = rt.manifest().model.clone();
+    let toks = TensorI32::new(vec![1, m.ctx_len], vec![1; m.ctx_len]).unwrap();
+    let out1 = rt.execute("text_encoder_b1", &[Input::I32(toks.clone())]).unwrap();
+    let out2 = rt.execute("text_encoder_b1", &[Input::I32(toks)]).unwrap();
+    assert_eq!(out1.len(), 1);
+    assert_eq!(out1[0].dims, vec![1, m.ctx_len, m.ctx_dim]);
+    assert_eq!(out1[0].data, out2[0].data, "execution must be deterministic");
+    assert!(out1[0].data.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn unet_full_shapes_and_caches() {
+    let Some(rt) = handle_or_skip() else { return };
+    let m = rt.manifest().model.clone();
+    let mut rng = Pcg32::seeded(7);
+    let lat = gaussian_tensor(&mut rng, vec![1, m.latent_l(), m.latent_c]);
+    let t = Tensor::new(vec![1], vec![500.0]).unwrap();
+    let ctx = gaussian_tensor(&mut rng, vec![1, m.ctx_len, m.ctx_dim]);
+    let g = Tensor::scalar(7.5);
+    let out = rt
+        .execute(
+            "unet_full_b1",
+            &[Input::F32(lat), Input::F32(t), Input::F32(ctx), Input::F32(g)],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1 + m.max_cut, "eps + max_cut caches");
+    assert_eq!(out[0].dims, vec![1, m.latent_l(), m.latent_c]);
+    for cache in &out[1..] {
+        assert_eq!(cache.dims, vec![2, m.latent_l(), m.channels[0]]);
+        assert!(cache.data.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn unet_partial_consumes_full_cache() {
+    let Some(rt) = handle_or_skip() else { return };
+    let m = rt.manifest().model.clone();
+    let mut rng = Pcg32::seeded(8);
+    let lat = gaussian_tensor(&mut rng, vec![1, m.latent_l(), m.latent_c]);
+    let t = Tensor::new(vec![1], vec![400.0]).unwrap();
+    let ctx = gaussian_tensor(&mut rng, vec![1, m.ctx_len, m.ctx_dim]);
+    let g = Tensor::scalar(7.5);
+    let full = rt
+        .execute(
+            "unet_full_b1",
+            &[
+                Input::F32(lat.clone()),
+                Input::F32(t.clone()),
+                Input::F32(ctx.clone()),
+                Input::F32(g.clone()),
+            ],
+        )
+        .unwrap();
+    for l in 1..=m.max_cut {
+        let cache = full[l].clone();
+        let eps = rt
+            .execute(
+                &Runtime::unet_partial(l, 1),
+                &[
+                    Input::F32(lat.clone()),
+                    Input::F32(t.clone()),
+                    Input::F32(ctx.clone()),
+                    Input::F32(g.clone()),
+                    Input::F32(cache),
+                ],
+            )
+            .unwrap();
+        assert_eq!(eps[0].dims, vec![1, m.latent_l(), m.latent_c]);
+        assert!(eps[0].data.iter().all(|x| x.is_finite()));
+        // With the *fresh* cache from the same timestep, the partial U-Net
+        // re-runs the top blocks exactly => eps matches full eps closely.
+        let d = sd_acc::util::stats::l2_dist(&eps[0].data, &full[0].data);
+        let n = sd_acc::util::stats::l2_norm(&full[0].data).max(1e-6);
+        assert!(d / n < 1e-3, "partial l={l} diverged: rel {}", d / n);
+    }
+}
+
+#[test]
+fn vae_decoder_outputs_image() {
+    let Some(rt) = handle_or_skip() else { return };
+    let m = rt.manifest().model.clone();
+    let mut rng = Pcg32::seeded(9);
+    let lat = gaussian_tensor(&mut rng, vec![1, m.latent_l(), m.latent_c]);
+    let out = rt.execute("vae_decoder_b1", &[Input::F32(lat)]).unwrap();
+    assert_eq!(out[0].dims, vec![1, m.img_h * m.img_w, 3]);
+}
+
+#[test]
+fn batch2_artifacts_match_manifest() {
+    let Some(rt) = handle_or_skip() else { return };
+    if !rt.manifest().batch_sizes.contains(&2) {
+        return;
+    }
+    let m = rt.manifest().model.clone();
+    let mut rng = Pcg32::seeded(10);
+    let lat = gaussian_tensor(&mut rng, vec![2, m.latent_l(), m.latent_c]);
+    let t = Tensor::new(vec![2], vec![300.0, 600.0]).unwrap();
+    let ctx = gaussian_tensor(&mut rng, vec![2, m.ctx_len, m.ctx_dim]);
+    let g = Tensor::scalar(5.0);
+    let out = rt
+        .execute(
+            "unet_full_b2",
+            &[Input::F32(lat), Input::F32(t), Input::F32(ctx), Input::F32(g)],
+        )
+        .unwrap();
+    assert_eq!(out[0].dims, vec![2, m.latent_l(), m.latent_c]);
+}
+
+#[test]
+fn batch_lanes_are_independent() {
+    // Lane 0 of a b2 execution must equal the same request at b1.
+    let Some(rt) = handle_or_skip() else { return };
+    if !rt.manifest().batch_sizes.contains(&2) {
+        return;
+    }
+    let m = rt.manifest().model.clone();
+    let mut rng = Pcg32::seeded(11);
+    let lat0 = gaussian_tensor(&mut rng, vec![m.latent_l(), m.latent_c]);
+    let lat1 = gaussian_tensor(&mut rng, vec![m.latent_l(), m.latent_c]);
+    let ctx0 = gaussian_tensor(&mut rng, vec![m.ctx_len, m.ctx_dim]);
+    let ctx1 = gaussian_tensor(&mut rng, vec![m.ctx_len, m.ctx_dim]);
+    let g = Tensor::scalar(7.5);
+
+    let out2 = rt
+        .execute(
+            "unet_full_b2",
+            &[
+                Input::F32(Tensor::stack(&[lat0.clone(), lat1]).unwrap()),
+                Input::F32(Tensor::new(vec![2], vec![350.0, 350.0]).unwrap()),
+                Input::F32(Tensor::stack(&[ctx0.clone(), ctx1]).unwrap()),
+                Input::F32(g.clone()),
+            ],
+        )
+        .unwrap();
+    let out1 = rt
+        .execute(
+            "unet_full_b1",
+            &[
+                Input::F32(Tensor::stack(&[lat0]).unwrap()),
+                Input::F32(Tensor::new(vec![1], vec![350.0]).unwrap()),
+                Input::F32(Tensor::stack(&[ctx0]).unwrap()),
+                Input::F32(g),
+            ],
+        )
+        .unwrap();
+    let lane0 = out2[0].index0(0);
+    let single = out1[0].index0(0);
+    let d = sd_acc::util::stats::l2_dist(&lane0.data, &single.data);
+    let n = sd_acc::util::stats::l2_norm(&single.data).max(1e-6);
+    assert!(d / n < 1e-3, "batch lane diverged: rel {}", d / n);
+}
+
+#[test]
+fn wrong_shape_rejected() {
+    let Some(rt) = handle_or_skip() else { return };
+    let bad = Tensor::zeros(vec![1, 3, 3]);
+    let res = rt.execute("unet_full_b1", &[Input::F32(bad)]);
+    assert!(res.is_err());
+}
+
+#[test]
+fn unknown_artifact_rejected() {
+    let Some(rt) = handle_or_skip() else { return };
+    assert!(rt.execute("unet_full_b99", &[]).is_err());
+}

@@ -1,0 +1,98 @@
+//! Integration: serving layer over the real runtime — dynamic batching,
+//! concurrent clients, metrics.
+
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+use sd_acc::server::{Server, ServerConfig};
+
+static SERVICE: OnceLock<Option<RuntimeService>> = OnceLock::new();
+
+fn coord_or_skip() -> Option<Arc<Coordinator>> {
+    let svc = SERVICE.get_or_init(|| {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(RuntimeService::start(&dir).expect("runtime service"))
+    });
+    svc.as_ref().map(|s| Arc::new(Coordinator::new(s.handle())))
+}
+
+fn req(prompt: &str, seed: u64) -> GenRequest {
+    let mut r = GenRequest::new(prompt, seed);
+    r.steps = 6;
+    r.sampler = "ddim".into();
+    r
+}
+
+#[test]
+fn serves_concurrent_requests_with_batching() {
+    let Some(coord) = coord_or_skip() else { return };
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig { workers: 2, max_wait: Duration::from_millis(30) },
+    );
+    let client = server.client();
+
+    // Submit 5 compatible requests at once; the batcher should form
+    // some batches of 2 (the largest compiled size).
+    let rxs: Vec<_> = (0..5)
+        .map(|i| client.submit(req(&format!("red circle x{i} y{i}"), 100 + i as u64)))
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        let res = rx.recv().expect("server alive").expect("generation ok");
+        assert!(res.latent.data.iter().all(|x| x.is_finite()));
+        ok += 1;
+    }
+    assert_eq!(ok, 5);
+
+    let m = server.metrics.summary();
+    assert_eq!(m.completed, 5);
+    assert_eq!(m.errors, 0);
+    assert!(m.p50_ms > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn server_result_matches_direct_coordinator() {
+    let Some(coord) = coord_or_skip() else { return };
+    let direct = coord.generate_one(&req("blue square x3 y9", 55)).unwrap();
+
+    let server = Server::start(Arc::clone(&coord), ServerConfig::default());
+    let served = server.client().generate(req("blue square x3 y9", 55)).unwrap();
+    server.shutdown();
+
+    let d = sd_acc::util::stats::l2_dist(&served.latent.data, &direct.latent.data);
+    let n = sd_acc::util::stats::l2_norm(&direct.latent.data);
+    assert!(d / n < 2e-3, "served != direct: rel {}", d / n);
+}
+
+#[test]
+fn mixed_plans_are_not_batched_together() {
+    let Some(coord) = coord_or_skip() else { return };
+    let server = Server::start(Arc::clone(&coord), ServerConfig::default());
+    let client = server.client();
+
+    let mut pas = req("green circle x5 y5", 77);
+    pas.plan = sd_acc::pas::plan::SamplingPlan::Pas(sd_acc::pas::plan::PasConfig {
+        t_sketch: 3,
+        t_complete: 1,
+        t_sparse: 2,
+        l_sketch: 2,
+        l_refine: 2,
+    });
+    let full = req("green circle x5 y5", 77);
+
+    let rx1 = client.submit(pas);
+    let rx2 = client.submit(full.clone());
+    let r1 = rx1.recv().unwrap().unwrap();
+    let r2 = rx2.recv().unwrap().unwrap();
+    assert!(r1.stats.mac_reduction > 1.0);
+    assert!((r2.stats.mac_reduction - 1.0).abs() < 1e-9);
+    server.shutdown();
+}

@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command: build, tests, formatting, lints.
+#
+# Usage: ./ci.sh [--no-clippy] [--no-fmt]
+#   SD_ACC_PROP_CASES=16 ./ci.sh     # trim property-test cases for speed
+#
+# The crate builds fully offline: external deps are vendored under
+# rust/vendor (anyhow subset + backend-less xla stub), so no network or
+# crates.io cache is required. Integration tests that need AOT artifacts
+# skip themselves when artifacts/manifest.json is absent.
+
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+run_clippy=1
+run_fmt=1
+for arg in "$@"; do
+    case "$arg" in
+        --no-clippy) run_clippy=0 ;;
+        --no-fmt) run_fmt=0 ;;
+        *) echo "unknown flag: $arg" >&2; exit 2 ;;
+    esac
+done
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "$run_fmt" = 1 ]; then
+    echo "== cargo fmt --check =="
+    # Formatting drift fails CI only when rustfmt is installed.
+    if cargo fmt --version >/dev/null 2>&1; then
+        cargo fmt --check
+    else
+        echo "rustfmt not installed — skipping"
+    fi
+fi
+
+if [ "$run_clippy" = 1 ]; then
+    echo "== cargo clippy -D warnings =="
+    if cargo clippy --version >/dev/null 2>&1; then
+        cargo clippy --all-targets -- -D warnings
+    else
+        echo "clippy not installed — skipping"
+    fi
+fi
+
+echo "== ci.sh: all checks passed =="

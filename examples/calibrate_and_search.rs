@@ -8,11 +8,18 @@
 //! 4. validate the top candidates by generating and scoring the latent
 //!    PSNR proxy against full sampling.
 //!
-//! Writes artifacts/calibration.json (consumed by bench_fig4).
+//! Writes artifacts/calibration.json (consumed by bench_fig4) and
+//! memoizes both phases in the persistent cache: a warm start (second
+//! run with the same artifacts + settings) skips the trajectories and
+//! the search entirely and replays the stored results.
 //!
 //! Run: `make artifacts && cargo run --release --example calibrate_and_search`
-//! Env: SD_ACC_CALIB_STEPS (default 25), SD_ACC_CALIB_PROMPTS (default 2).
+//! Env: SD_ACC_CALIB_STEPS (default 25), SD_ACC_CALIB_PROMPTS (default 2),
+//!      SD_ACC_CACHE (cache dir, default ./cache).
 
+use std::time::Instant;
+
+use sd_acc::cache::{default_cache_dir, Cache, StoreConfig};
 use sd_acc::coordinator::Coordinator;
 use sd_acc::models::inventory::sd_tiny;
 use sd_acc::pas::calibrate::Calibrator;
@@ -31,6 +38,7 @@ fn main() -> anyhow::Result<()> {
 
     let svc = RuntimeService::start(&dir)?;
     let coord = Coordinator::new(svc.handle());
+    let cache = Cache::open(StoreConfig::new(default_cache_dir()), coord.manifest_hash())?;
 
     // Step 1+2: calibration (5%-style prompt subset, Sec. III-C).
     let prompts: Vec<String> = [
@@ -43,7 +51,13 @@ fn main() -> anyhow::Result<()> {
     .map(|s| s.to_string())
     .collect();
     println!("calibrating on {} prompts x {steps} steps (complete U-Net trajectories)...", prompts.len());
-    let report = Calibrator::new(&coord).run(&prompts, steps, 7.5)?;
+    let t0 = Instant::now();
+    let (report, calib_hit) = Calibrator::new(&coord).run_cached(&cache, &prompts, steps, 7.5)?;
+    println!(
+        "calibration {} in {:.2}s",
+        if calib_hit { "cache hit (trajectories skipped)" } else { "computed" },
+        t0.elapsed().as_secs_f64()
+    );
     std::fs::write(dir.join("calibration.json"), report.to_json().to_string())?;
     println!("D* = {} / {steps}   outlier blocks = {:?}", report.d_star, report.outliers);
     println!("(full curves: cargo bench --bench bench_fig4_shift_scores)");
@@ -60,7 +74,14 @@ fn main() -> anyhow::Result<()> {
         cons.total_steps, cons.min_mac_reduction, cons.min_psnr_db
     );
     let searcher = Searcher { coord: &coord, cost: CostModel::new(&sd_tiny()) };
-    let cands = searcher.search(&report, &cons, &prompts[..1.min(prompts.len())])?;
+    let t0 = Instant::now();
+    let (cands, search_hit) =
+        searcher.search_cached(&cache, &report, &cons, &prompts[..1.min(prompts.len())])?;
+    println!(
+        "search {} in {:.2}s",
+        if search_hit { "cache hit (validation generations skipped)" } else { "computed" },
+        t0.elapsed().as_secs_f64()
+    );
 
     let mut t = Table::new(&["rank", "config", "MAC red.", "latent PSNR (dB)", "validated"]);
     for (i, c) in cands.iter().take(8).enumerate() {

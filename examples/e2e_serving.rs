@@ -12,6 +12,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use sd_acc::cache::{Cache, StoreConfig};
 use sd_acc::coordinator::{Coordinator, GenRequest};
 use sd_acc::pas::plan::{PasConfig, SamplingPlan};
 use sd_acc::quality;
@@ -64,13 +65,19 @@ fn main() -> anyhow::Result<()> {
     println!("done in {:.1}s", t0.elapsed().as_secs_f64());
 
     let coord = Arc::new(Coordinator::new(svc.handle()));
+    // Optional persistent cache: set SD_ACC_E2E_CACHE to a directory and
+    // a second run of this driver is served from the request cache.
+    let cache = match std::env::var("SD_ACC_E2E_CACHE") {
+        Ok(dir) => Some(Arc::new(Cache::open(StoreConfig::new(dir), coord.manifest_hash())?)),
+        Err(_) => None,
+    };
     // One worker: PJRT submissions are serialised on the runtime thread
     // anyway (runtime/service.rs), so a single worker gives clean
     // per-plan latency numbers while batching still packs same-plan
     // requests together.
     let server = Server::start(
         Arc::clone(&coord),
-        ServerConfig { workers: 1, max_wait: Duration::from_millis(40) },
+        ServerConfig { workers: 1, max_wait: Duration::from_millis(40), cache },
     );
     let client = server.client();
 
@@ -96,7 +103,7 @@ fn main() -> anyhow::Result<()> {
     for (req, rx) in rxs {
         let res = rx.recv()??;
         match req.plan {
-            SamplingPlan::Full => lat_full.push(res.stats.total_ms),
+            SamplingPlan::Full | SamplingPlan::Auto => lat_full.push(res.stats.total_ms),
             SamplingPlan::Pas(_) => lat_pas.push(res.stats.total_ms),
         }
         results.push((req, res));
@@ -108,6 +115,9 @@ fn main() -> anyhow::Result<()> {
     println!("completed {} requests in {:.1}s  ({:.2} img/min)", m.completed, wall, m.completed as f64 / wall * 60.0);
     println!("queue+exec latency: p50 {:.0} ms, p95 {:.0} ms, mean {:.0} ms", m.p50_ms, m.p95_ms, m.mean_ms);
     println!("mean executed batch size: {:.2}", m.mean_batch_size);
+    if m.cache_hits + m.cache_misses > 0 {
+        println!("request cache: {} hits, {} misses, {} evictions", m.cache_hits, m.cache_misses, m.cache_evictions);
+    }
     println!("mean generation ms: full {:.0}, PAS {:.0} ({:.2}x step-time reduction)",
         stats::mean(&lat_full), stats::mean(&lat_pas), stats::mean(&lat_full) / stats::mean(&lat_pas).max(1.0));
 

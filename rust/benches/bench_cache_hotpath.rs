@@ -1,0 +1,127 @@
+//! Cache hot path: cold calibrate-and-search vs warm store lookup, and
+//! request-cache hit latency.
+//!
+//! Needs no AOT artifacts — the cold path times the CPU side of the
+//! Fig. 7 pipeline (Eq. 2 analysis + candidate enumeration + store
+//! population) against the warm path (content-addressed lookup + decode).
+//! The acceptance bar for the cache subsystem is warm >= 10x faster than
+//! cold; the bench asserts it.
+//!
+//! Run: `cargo bench --bench bench_cache_hotpath`
+
+use sd_acc::cache::{Cache, PlanFront, StoreConfig};
+use sd_acc::coordinator::{GenRequest, GenResult, GenStats};
+use sd_acc::models::inventory::sd_v14;
+use sd_acc::pas::calibrate::analyse;
+use sd_acc::pas::cost::CostModel;
+use sd_acc::pas::plan::StepAction;
+use sd_acc::pas::search::{enumerate_candidates, SearchConstraints};
+use sd_acc::runtime::Tensor;
+use sd_acc::util::bench::Bench;
+
+/// Fig. 4-shaped synthetic shift-score curves (knee at 45%).
+fn synthetic_raw(steps: usize) -> Vec<Vec<f64>> {
+    let t1 = steps - 1;
+    (0..12)
+        .map(|b| {
+            (0..t1)
+                .map(|t| {
+                    let x = t as f64 / t1 as f64;
+                    if x < 0.45 {
+                        0.7 + 0.3 * (-5.0 * (x - 0.1) * (x - 0.1)).exp()
+                    } else if b < 2 {
+                        0.5 + 0.3 * (9.0 * x).sin().abs()
+                    } else {
+                        0.05
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("sdacc_bench_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = Cache::open(StoreConfig::new(&dir), 0xbe9c).expect("open cache");
+
+    let steps = 50usize;
+    let prompts: Vec<String> =
+        vec!["red circle x4 y4".into(), "green stripe x8 y8".into()];
+    let raw = synthetic_raw(steps);
+    let noise: Vec<f64> = (0..steps).map(|t| 1.0 / (1.0 + t as f64)).collect();
+    let cost = CostModel::new(&sd_v14());
+    let cons = SearchConstraints { total_steps: steps, ..Default::default() };
+
+    let mut b = Bench::default();
+
+    // Cold: the full CPU-side calibrate-and-search pipeline + store
+    // population (what a first run pays, minus the runtime trajectories
+    // which only make the ratio larger).
+    let cold_ns = b.run("cold: analyse + enumerate + populate store", || {
+        let report = analyse(raw.clone(), noise.clone(), steps, prompts.len());
+        let cands = enumerate_candidates(&report, &cost, &cons, 3);
+        let front = PlanFront {
+            total_steps: cons.total_steps,
+            min_mac_reduction: cons.min_mac_reduction,
+            min_psnr_db: cons.min_psnr_db,
+            d_star: report.d_star,
+            candidates: cands.into_iter().take(32).collect(),
+        };
+        cache.put_calibration(steps, &prompts, 7.5, &report).expect("put calib");
+        cache
+            .put_plan_front(&cons, &prompts, report.d_star, &report.outliers, &front)
+            .expect("put front");
+    });
+
+    // Warm: what every later process start pays instead.
+    let report = cache.get_calibration(steps, &prompts, 7.5).expect("populated");
+    let warm_ns = b.run("warm: calibration + plan front lookup", || {
+        let rep = cache.get_calibration(steps, &prompts, 7.5).expect("calib hit");
+        let front = cache
+            .get_plan_front(&cons, &prompts, rep.d_star, &rep.outliers)
+            .expect("front hit");
+        std::hint::black_box(front.candidates.len());
+    });
+
+    b.run("warm: Auto plan resolution (best_plan)", || {
+        std::hint::black_box(cache.best_plan(steps));
+    });
+
+    // Request cache: sd-tiny-sized latent (16x16x4).
+    let mut req = GenRequest::new("blue square x3 y9 red circle x12 y2", 4242);
+    req.steps = steps;
+    let result = GenResult {
+        latent: Tensor::new(vec![256, 4], (0..1024).map(|i| (i as f32 * 0.37).sin()).collect())
+            .expect("latent"),
+        stats: GenStats {
+            actions: vec![StepAction::Full; steps],
+            step_ms: vec![10.0; steps],
+            mac_reduction: 1.0,
+            total_ms: 500.0,
+        },
+    };
+    cache.put_result(&req, &result).expect("put result");
+    b.run("request cache hit (1024-elem latent)", || {
+        let hit = cache.get_result(&req).expect("request hit");
+        std::hint::black_box(hit.latent.data.len());
+    });
+    let absent = GenRequest::new("never generated", 1);
+    b.run("request cache miss (key absent)", || {
+        std::hint::black_box(cache.get_result(&absent).is_none());
+    });
+
+    b.emit_json();
+
+    let ratio = cold_ns / warm_ns.max(1.0);
+    println!(
+        "\ncold/warm ratio: {ratio:.1}x (D*={} outliers={:?})",
+        report.d_star, report.outliers
+    );
+    assert!(
+        ratio >= 10.0,
+        "acceptance: warm lookup must be >= 10x faster than cold (got {ratio:.1}x)"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

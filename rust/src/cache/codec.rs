@@ -1,0 +1,331 @@
+//! Codec layer: typed values <-> `util::json::Json` payloads.
+//!
+//! One impl per cached namespace: calibration reports, searched plan
+//! fronts, and request-level generation results. Encoding uses only
+//! finite numbers (JSON has no inf/nan; the store never receives
+//! non-finite latents because the coordinator rejects them upstream),
+//! and `Json`'s shortest-roundtrip float formatting makes
+//! `decode(encode(x)) == x` exact — property-tested in `proptests.rs`.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{GenResult, GenStats};
+use crate::pas::calibrate::CalibrationReport;
+use crate::pas::plan::{PasConfig, StepAction};
+use crate::pas::search::Candidate;
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+
+use super::namespaces::{NS_CALIB, NS_PLAN, NS_REQUEST};
+
+/// A value that can live in the store under a fixed namespace.
+pub trait Codec: Sized {
+    /// Namespace (subdirectory + key salt) this type is stored under.
+    const NAMESPACE: &'static str;
+
+    fn encode(&self) -> Json;
+    fn decode(j: &Json) -> Result<Self>;
+}
+
+// ------------------------------------------------------------ calibration
+
+impl Codec for CalibrationReport {
+    const NAMESPACE: &'static str = NS_CALIB;
+
+    fn encode(&self) -> Json {
+        self.to_json()
+    }
+
+    fn decode(j: &Json) -> Result<CalibrationReport> {
+        CalibrationReport::from_json(j)
+    }
+}
+
+// -------------------------------------------------------------- plan front
+
+/// A searched Pareto front for one (model, steps, quality target) cell:
+/// the ranked candidates plus the search inputs that produced them.
+#[derive(Debug, Clone)]
+pub struct PlanFront {
+    pub total_steps: usize,
+    pub min_mac_reduction: f64,
+    pub min_psnr_db: Option<f64>,
+    /// D* of the calibration report the search ran against.
+    pub d_star: usize,
+    pub candidates: Vec<Candidate>,
+}
+
+impl PlanFront {
+    /// Best configuration of the front (rank 0), if any.
+    pub fn best(&self) -> Option<&Candidate> {
+        self.candidates.first()
+    }
+}
+
+fn pas_config_json(cfg: &PasConfig) -> Json {
+    Json::obj(vec![
+        ("t_sketch", Json::num(cfg.t_sketch as f64)),
+        ("t_complete", Json::num(cfg.t_complete as f64)),
+        ("t_sparse", Json::num(cfg.t_sparse as f64)),
+        ("l_sketch", Json::num(cfg.l_sketch as f64)),
+        ("l_refine", Json::num(cfg.l_refine as f64)),
+    ])
+}
+
+fn pas_config_from_json(j: &Json) -> Result<PasConfig> {
+    let field = |k: &str| j.get_usize(k).ok_or_else(|| anyhow!("plan config: missing '{k}'"));
+    Ok(PasConfig {
+        t_sketch: field("t_sketch")?,
+        t_complete: field("t_complete")?,
+        t_sparse: field("t_sparse")?,
+        l_sketch: field("l_sketch")?,
+        l_refine: field("l_refine")?,
+    })
+}
+
+impl Codec for PlanFront {
+    const NAMESPACE: &'static str = NS_PLAN;
+
+    fn encode(&self) -> Json {
+        Json::obj(vec![
+            ("total_steps", Json::num(self.total_steps as f64)),
+            ("min_mac_reduction", Json::num(self.min_mac_reduction)),
+            (
+                "min_psnr_db",
+                self.min_psnr_db.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("d_star", Json::num(self.d_star as f64)),
+            (
+                "candidates",
+                Json::Arr(
+                    self.candidates
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("cfg", pas_config_json(&c.cfg)),
+                                ("mac_reduction", Json::num(c.mac_reduction)),
+                                ("psnr_db", c.psnr_db.map(Json::num).unwrap_or(Json::Null)),
+                                ("validated", Json::Bool(c.validated)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn decode(j: &Json) -> Result<PlanFront> {
+        let candidates = j
+            .get("candidates")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("plan front: missing candidates"))?
+            .iter()
+            .map(|c| {
+                Ok(Candidate {
+                    cfg: pas_config_from_json(c.req("cfg").map_err(|e| anyhow!("{e}"))?)?,
+                    mac_reduction: c
+                        .get_f64("mac_reduction")
+                        .ok_or_else(|| anyhow!("candidate: missing mac_reduction"))?,
+                    psnr_db: c.get_f64("psnr_db"),
+                    validated: c.get("validated").and_then(Json::as_bool).unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PlanFront {
+            total_steps: j
+                .get_usize("total_steps")
+                .ok_or_else(|| anyhow!("plan front: missing total_steps"))?,
+            min_mac_reduction: j
+                .get_f64("min_mac_reduction")
+                .ok_or_else(|| anyhow!("plan front: missing min_mac_reduction"))?,
+            min_psnr_db: j.get_f64("min_psnr_db"),
+            d_star: j.get_usize("d_star").unwrap_or(0),
+            candidates,
+        })
+    }
+}
+
+// --------------------------------------------------------- request results
+
+fn actions_json(actions: &[StepAction]) -> Json {
+    // Full -> 0, Partial(l) -> l (valid plans have l >= 1).
+    Json::Arr(
+        actions
+            .iter()
+            .map(|a| match a {
+                StepAction::Full => Json::num(0.0),
+                StepAction::Partial(l) => Json::num(*l as f64),
+            })
+            .collect(),
+    )
+}
+
+fn actions_from_json(j: &Json) -> Result<Vec<StepAction>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("gen result: actions not an array"))?
+        .iter()
+        .map(|v| {
+            let l = v.as_usize().ok_or_else(|| anyhow!("gen result: bad action"))?;
+            Ok(if l == 0 { StepAction::Full } else { StepAction::Partial(l) })
+        })
+        .collect()
+}
+
+impl Codec for GenResult {
+    const NAMESPACE: &'static str = NS_REQUEST;
+
+    fn encode(&self) -> Json {
+        Json::obj(vec![
+            (
+                "dims",
+                Json::Arr(self.latent.dims.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            (
+                "latent",
+                Json::Arr(self.latent.data.iter().map(|&x| Json::num(x as f64)).collect()),
+            ),
+            ("actions", actions_json(&self.stats.actions)),
+            ("step_ms", Json::arr_f64(&self.stats.step_ms)),
+            ("mac_reduction", Json::num(self.stats.mac_reduction)),
+            ("total_ms", Json::num(self.stats.total_ms)),
+        ])
+    }
+
+    fn decode(j: &Json) -> Result<GenResult> {
+        let dims: Vec<usize> = j
+            .get("dims")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("gen result: missing dims"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let data: Vec<f32> = j
+            .get("latent")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("gen result: missing latent"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|x| x as f32)
+                    .ok_or_else(|| anyhow!("gen result: non-numeric latent element"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let latent = Tensor::new(dims, data)?;
+        let step_ms = j
+            .get("step_ms")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_f64).collect())
+            .unwrap_or_default();
+        Ok(GenResult {
+            latent,
+            stats: GenStats {
+                actions: actions_from_json(
+                    j.get("actions").ok_or_else(|| anyhow!("gen result: missing actions"))?,
+                )?,
+                step_ms,
+                mac_reduction: j.get_f64("mac_reduction").unwrap_or(1.0),
+                total_ms: j.get_f64("total_ms").unwrap_or(0.0),
+            },
+        })
+    }
+}
+
+/// Encode straight to the compact on-disk text form.
+pub fn encode_text<T: Codec>(value: &T) -> String {
+    value.encode().to_string()
+}
+
+/// Parse + decode the on-disk text form.
+pub fn decode_text<T: Codec>(text: &str) -> Result<T> {
+    let j = Json::parse(text).map_err(|e| anyhow!("cache payload: {e}"))?;
+    T::decode(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pas::calibrate::analyse;
+
+    #[test]
+    fn calibration_text_roundtrip() {
+        let raw: Vec<Vec<f64>> = (0..12)
+            .map(|b| (0..19).map(|t| ((b * 19 + t) as f64).sin().abs()).collect())
+            .collect();
+        let rep = analyse(raw, vec![0.25; 20], 20, 3);
+        let back: CalibrationReport = decode_text(&encode_text(&rep)).unwrap();
+        assert_eq!(back.d_star, rep.d_star);
+        assert_eq!(back.outliers, rep.outliers);
+        assert_eq!(back.scores, rep.scores);
+        assert_eq!(back.noise, rep.noise);
+    }
+
+    #[test]
+    fn plan_front_roundtrip_exact() {
+        let front = PlanFront {
+            total_steps: 50,
+            min_mac_reduction: 1.6,
+            min_psnr_db: Some(13.0),
+            d_star: 21,
+            candidates: vec![
+                Candidate {
+                    cfg: PasConfig { t_sketch: 25, t_complete: 4, t_sparse: 4, l_sketch: 2, l_refine: 2 },
+                    mac_reduction: 2.84,
+                    psnr_db: Some(14.25),
+                    validated: true,
+                },
+                Candidate {
+                    cfg: PasConfig { t_sketch: 30, t_complete: 2, t_sparse: 3, l_sketch: 3, l_refine: 1 },
+                    mac_reduction: 2.1,
+                    psnr_db: None,
+                    validated: false,
+                },
+            ],
+        };
+        let back: PlanFront = decode_text(&encode_text(&front)).unwrap();
+        assert_eq!(back.total_steps, front.total_steps);
+        assert_eq!(back.min_psnr_db, front.min_psnr_db);
+        assert_eq!(back.candidates.len(), 2);
+        assert_eq!(back.candidates[0].cfg, front.candidates[0].cfg);
+        assert_eq!(back.candidates[0].psnr_db, Some(14.25));
+        assert!(back.candidates[0].validated);
+        assert_eq!(back.candidates[1].psnr_db, None);
+        assert_eq!(back.best().unwrap().cfg.t_sketch, 25);
+    }
+
+    #[test]
+    fn gen_result_roundtrip_exact() {
+        let res = GenResult {
+            latent: Tensor::new(vec![4, 2], vec![0.5, -1.25, 3.0, 0.1, -0.0, 7.5e-3, 2.0, 9.9])
+                .unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full, StepAction::Partial(2), StepAction::Partial(1)],
+                step_ms: vec![12.5, 3.25, 3.0],
+                mac_reduction: 2.5,
+                total_ms: 18.75,
+            },
+        };
+        let back: GenResult = decode_text(&encode_text(&res)).unwrap();
+        assert_eq!(back.latent.dims, res.latent.dims);
+        assert_eq!(back.latent.data, res.latent.data);
+        assert_eq!(back.stats.actions, res.stats.actions);
+        assert_eq!(back.stats.step_ms, res.stats.step_ms);
+        assert_eq!(back.stats.mac_reduction, res.stats.mac_reduction);
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error_not_a_panic() {
+        let res = GenResult {
+            latent: Tensor::new(vec![2], vec![1.0, 2.0]).unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full],
+                step_ms: vec![1.0],
+                mac_reduction: 1.0,
+                total_ms: 1.0,
+            },
+        };
+        let text = encode_text(&res);
+        for cut in [0, 1, text.len() / 2, text.len() - 1] {
+            assert!(decode_text::<GenResult>(&text[..cut]).is_err());
+        }
+    }
+}

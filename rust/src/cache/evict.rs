@@ -1,0 +1,87 @@
+//! Eviction policy: LRU ordering under a byte cap and an entry cap.
+//!
+//! Pure planning logic, separated from the store so the invariants are
+//! property-testable without touching the filesystem: after applying the
+//! returned evictions, the retained set never exceeds either cap, and no
+//! retained entry is older (by last-use clock) than any evicted one.
+
+use super::key::CacheKey;
+
+/// Index-entry view the planner works over.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EvictEntry {
+    pub key: CacheKey,
+    pub bytes: u64,
+    /// Logical last-use clock (monotonically increasing, larger = newer).
+    pub last_used: u64,
+}
+
+/// Plan which entries to evict so the retained set satisfies
+/// `total_bytes <= max_bytes` and `count <= max_entries`.
+///
+/// Returns indices into `entries`, least-recently-used first. A single
+/// entry larger than `max_bytes` is itself evicted — the byte cap is a
+/// hard invariant, never "cap plus one oversized entry".
+pub fn plan_evictions(entries: &[EvictEntry], max_bytes: u64, max_entries: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..entries.len()).collect();
+    // Oldest first; key as tiebreaker keeps the plan deterministic.
+    order.sort_by_key(|&i| (entries[i].last_used, entries[i].key));
+
+    let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
+    let mut count = entries.len();
+    let mut evict = Vec::new();
+    for &i in &order {
+        if total <= max_bytes && count <= max_entries {
+            break;
+        }
+        total -= entries[i].bytes;
+        count -= 1;
+        evict.push(i);
+    }
+    evict
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(key: u64, bytes: u64, last_used: u64) -> EvictEntry {
+        EvictEntry { key: CacheKey(key), bytes, last_used }
+    }
+
+    #[test]
+    fn under_caps_evicts_nothing() {
+        let entries = vec![e(1, 10, 1), e(2, 20, 2)];
+        assert!(plan_evictions(&entries, 100, 10).is_empty());
+        assert!(plan_evictions(&entries, 30, 2).is_empty(), "exactly at cap is fine");
+    }
+
+    #[test]
+    fn evicts_lru_first_until_under_byte_cap() {
+        // Oldest is key 3 (last_used 1), then 1, then 2.
+        let entries = vec![e(1, 40, 5), e(2, 40, 9), e(3, 40, 1)];
+        let ev = plan_evictions(&entries, 80, 10);
+        assert_eq!(ev, vec![2], "only the oldest needs to go");
+        let ev = plan_evictions(&entries, 50, 10);
+        assert_eq!(ev, vec![2, 0], "two oldest go, newest stays");
+    }
+
+    #[test]
+    fn entry_cap_enforced() {
+        let entries = vec![e(1, 1, 3), e(2, 1, 1), e(3, 1, 2)];
+        let ev = plan_evictions(&entries, 1000, 1);
+        assert_eq!(ev, vec![1, 2], "oldest two evicted, newest kept");
+    }
+
+    #[test]
+    fn oversized_single_entry_is_evicted() {
+        let entries = vec![e(1, 500, 1)];
+        assert_eq!(plan_evictions(&entries, 100, 10), vec![0]);
+    }
+
+    #[test]
+    fn zero_cap_clears_everything() {
+        let entries = vec![e(1, 10, 1), e(2, 10, 2)];
+        assert_eq!(plan_evictions(&entries, 0, 10).len(), 2);
+    }
+}

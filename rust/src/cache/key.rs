@@ -1,0 +1,207 @@
+//! Content-addressed cache keys: a structured FNV-1a 64-bit hasher.
+//!
+//! Keys are built by feeding *typed, length-delimited* fields into the
+//! hasher — never by formatting values into strings — so two different
+//! field sequences cannot collide by concatenation (e.g. `("ab", "c")`
+//! vs `("a", "bc")`) and float fields hash their exact bit patterns.
+//! Every key is salted with the namespace name and the cache format
+//! version, so a codec change invalidates old entries instead of
+//! misreading them.
+
+use std::fmt;
+
+/// Bump when any namespace's on-disk encoding changes shape.
+pub const CACHE_VERSION: u32 = 1;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1_0000_0001_b3;
+
+/// Raw FNV-1a over a byte slice (also used for the manifest digest).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// A 64-bit content-addressed key. The hex form names the payload file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey(pub u64);
+
+impl CacheKey {
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    pub fn from_hex(s: &str) -> Option<CacheKey> {
+        if s.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok().map(CacheKey)
+    }
+}
+
+impl fmt::Display for CacheKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+/// Structured field hasher. Field order matters; each field is tagged by
+/// its type and (for variable-length data) its length.
+#[derive(Debug, Clone)]
+pub struct KeyHasher {
+    state: u64,
+}
+
+impl KeyHasher {
+    /// Start a key for `namespace` under the current cache version.
+    pub fn new(namespace: &str) -> KeyHasher {
+        let mut h = KeyHasher { state: FNV_OFFSET };
+        h.raw(&CACHE_VERSION.to_le_bytes());
+        h.str(namespace);
+        h
+    }
+
+    fn raw(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    /// Length-prefixed string field.
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.raw(&(s.len() as u64).to_le_bytes());
+        self.raw(s.as_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.raw(&v.to_le_bytes());
+        self
+    }
+
+    pub fn usize(&mut self, v: usize) -> &mut Self {
+        self.u64(v as u64)
+    }
+
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.raw(&[v as u8]);
+        self
+    }
+
+    /// Exact bit pattern — no lossy decimal formatting.
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.raw(&v.to_bits().to_le_bytes());
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.raw(&v.to_bits().to_le_bytes());
+        self
+    }
+
+    /// Optional field: presence tag then the value.
+    pub fn opt_f64(&mut self, v: Option<f64>) -> &mut Self {
+        match v {
+            Some(x) => self.bool(true).f64(x),
+            None => self.bool(false),
+        }
+    }
+
+    /// Length-prefixed list of strings.
+    pub fn str_list(&mut self, xs: &[String]) -> &mut Self {
+        self.raw(&(xs.len() as u64).to_le_bytes());
+        for s in xs {
+            self.str(s);
+        }
+        self
+    }
+
+    /// Length-prefixed list of usize.
+    pub fn usize_list(&mut self, xs: &[usize]) -> &mut Self {
+        self.raw(&(xs.len() as u64).to_le_bytes());
+        for &x in xs {
+            self.usize(x);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> CacheKey {
+        CacheKey(self.state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrip() {
+        let k = CacheKey(0x0123_4567_89ab_cdef);
+        assert_eq!(k.hex(), "0123456789abcdef");
+        assert_eq!(CacheKey::from_hex(&k.hex()), Some(k));
+        assert_eq!(CacheKey::from_hex("xyz"), None);
+        assert_eq!(CacheKey::from_hex("123"), None, "short hex rejected");
+    }
+
+    #[test]
+    fn field_order_and_type_matter() {
+        let a = KeyHasher::new("ns").str("ab").str("c").finish();
+        let b = KeyHasher::new("ns").str("a").str("bc").finish();
+        assert_ne!(a, b, "length prefixing prevents concat collisions");
+
+        let c = KeyHasher::new("ns").u64(1).u64(2).finish();
+        let d = KeyHasher::new("ns").u64(2).u64(1).finish();
+        assert_ne!(c, d);
+    }
+
+    #[test]
+    fn namespace_salts_the_key() {
+        let a = KeyHasher::new("calib").u64(7).finish();
+        let b = KeyHasher::new("plan").u64(7).finish();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn floats_hash_bit_patterns() {
+        let a = KeyHasher::new("ns").f32(7.5).finish();
+        let b = KeyHasher::new("ns").f32(7.500001).finish();
+        assert_ne!(a, b);
+        // -0.0 and 0.0 differ in bits — distinct keys by design.
+        assert_ne!(
+            KeyHasher::new("ns").f64(0.0).finish(),
+            KeyHasher::new("ns").f64(-0.0).finish()
+        );
+    }
+
+    #[test]
+    fn option_presence_is_tagged() {
+        let some0 = KeyHasher::new("ns").opt_f64(Some(0.0)).finish();
+        let none = KeyHasher::new("ns").opt_f64(None).finish();
+        assert_ne!(some0, none);
+    }
+
+    #[test]
+    fn deterministic_across_hashers() {
+        let mk = || {
+            KeyHasher::new("req")
+                .u64(0xdead_beef)
+                .str("red circle x4 y4")
+                .usize(50)
+                .f32(7.5)
+                .finish()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn fnv_reference_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+    }
+}

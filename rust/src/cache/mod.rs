@@ -1,0 +1,45 @@
+//! Persistent content-addressed plan & artifact cache (S11).
+//!
+//! SD-Acc's phase-aware sampling only pays off in serving if the
+//! expensive one-time work — calibration trajectories (Fig. 4 / Eq. 1-2),
+//! Pareto plan search (Fig. 7), and per-prompt generation — is computed
+//! once and reused across requests *and process restarts*. This module
+//! is that reuse layer:
+//!
+//! - [`key`]: structured FNV-1a keys over (manifest digest, model meta,
+//!   request/config fields) — never lossy string formatting.
+//! - [`codec`]: typed value <-> `util::json::Json` payloads for the three
+//!   namespaces (calibration reports, searched plan fronts, generation
+//!   results).
+//! - [`store`]: the on-disk store — atomic write-then-rename index,
+//!   crash/corruption recovery by payload scan, hit/miss/eviction
+//!   counters.
+//! - [`evict`]: LRU + byte-cap eviction planning (pure, property-tested).
+//! - [`namespaces`]: typed keys and the [`Cache`] facade; owns the
+//!   invalidation rule (manifest hash change ⇒ namespace flush).
+//!
+//! Consumers: `pas::calibrate`/`pas::search` memoize through it (warm
+//! starts of `examples/calibrate_and_search.rs` become lookups), the
+//! server consults the request namespace before enqueueing and feeds
+//! hit/miss/eviction counts into `server::metrics`, the coordinator
+//! resolves `SamplingPlan::Auto` from the plan namespace, and the
+//! `sd-acc cache` CLI subcommand exposes `stats`/`gc`/`clear`.
+
+pub mod codec;
+pub mod evict;
+pub mod key;
+pub mod namespaces;
+mod proptests;
+pub mod store;
+
+pub use codec::{Codec, PlanFront};
+pub use key::{CacheKey, KeyHasher, CACHE_VERSION};
+pub use namespaces::{Cache, NS_CALIB, NS_PLAN, NS_REQUEST};
+pub use store::{Store, StoreConfig, StoreStats};
+
+/// Default cache directory: `$SD_ACC_CACHE` or `./cache`.
+pub fn default_cache_dir() -> std::path::PathBuf {
+    std::env::var("SD_ACC_CACHE")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("cache"))
+}

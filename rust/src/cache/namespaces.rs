@@ -1,0 +1,393 @@
+//! Typed namespaces over the raw store, plus the [`Cache`] facade the
+//! rest of the system talks to.
+//!
+//! Key derivations (all content-addressed, all salted with the AOT
+//! manifest digest so artifact rebuilds can never serve stale data):
+//!
+//! - `calib`:   (manifest, steps, calibration prompts, guidance)
+//! - `plan`:    (manifest, total steps, quality target, report digest)
+//!              plus a "best plan" summary entry per (manifest, steps)
+//!              that `SamplingPlan::Auto` resolution reads
+//! - `request`: (manifest, prompt, seed, steps, sampler, guidance, plan)
+//!
+//! Invalidation rule: a manifest-hash change on open flushes every
+//! namespace (the store records the hash it was populated under).
+
+use anyhow::Result;
+
+use crate::coordinator::{GenRequest, GenResult};
+use crate::pas::calibrate::CalibrationReport;
+use crate::pas::plan::{PasConfig, SamplingPlan};
+use crate::pas::search::SearchConstraints;
+
+use super::codec::{decode_text, encode_text, Codec, PlanFront};
+use super::key::{CacheKey, KeyHasher};
+use super::store::{Store, StoreConfig, StoreStats};
+
+pub const NS_CALIB: &str = "calib";
+pub const NS_PLAN: &str = "plan";
+pub const NS_REQUEST: &str = "request";
+
+/// Store-meta key recording which manifest populated the cache.
+pub const META_MANIFEST_HASH: &str = "manifest_hash";
+
+// ------------------------------------------------------------------- keys
+
+fn hash_plan(h: &mut KeyHasher, plan: &SamplingPlan) {
+    match plan {
+        SamplingPlan::Full => {
+            h.u64(0);
+        }
+        SamplingPlan::Pas(cfg) => {
+            h.u64(1)
+                .usize(cfg.t_sketch)
+                .usize(cfg.t_complete)
+                .usize(cfg.t_sparse)
+                .usize(cfg.l_sketch)
+                .usize(cfg.l_refine);
+        }
+        SamplingPlan::Auto => {
+            // Auto is resolved to a concrete plan before cache lookup;
+            // hashing the discriminant keeps the function total.
+            h.u64(2);
+        }
+    }
+}
+
+/// Calibration-report key.
+pub fn calib_key(
+    manifest_hash: u64,
+    steps: usize,
+    prompts: &[String],
+    guidance: f32,
+) -> CacheKey {
+    KeyHasher::new(NS_CALIB)
+        .u64(manifest_hash)
+        .usize(steps)
+        .str_list(prompts)
+        .f32(guidance)
+        .finish()
+}
+
+/// Searched-front key: one cell per (model, steps, quality target,
+/// validation prompts, calibration outcome). The prompts matter because
+/// the stored `psnr_db`/`validated` fields were measured against them.
+pub fn plan_key(
+    manifest_hash: u64,
+    cons: &SearchConstraints,
+    validation_prompts: &[String],
+    d_star: usize,
+    outliers: &[usize],
+) -> CacheKey {
+    KeyHasher::new(NS_PLAN)
+        .u64(manifest_hash)
+        .usize(cons.total_steps)
+        .f64(cons.min_mac_reduction)
+        .opt_f64(cons.min_psnr_db)
+        .usize(cons.max_validate)
+        .str_list(validation_prompts)
+        .usize(d_star)
+        .usize_list(outliers)
+        .finish()
+}
+
+/// Summary entry consulted by `SamplingPlan::Auto` resolution.
+pub fn best_plan_key(manifest_hash: u64, total_steps: usize) -> CacheKey {
+    KeyHasher::new(NS_PLAN)
+        .u64(manifest_hash)
+        .str("best")
+        .usize(total_steps)
+        .finish()
+}
+
+/// Request-level result key: everything that determines the latent.
+pub fn request_key(manifest_hash: u64, req: &GenRequest) -> CacheKey {
+    let mut h = KeyHasher::new(NS_REQUEST);
+    h.u64(manifest_hash)
+        .str(&req.prompt)
+        .u64(req.seed)
+        .usize(req.steps)
+        .str(&req.sampler)
+        .f32(req.guidance);
+    hash_plan(&mut h, &req.plan);
+    h.finish()
+}
+
+// ------------------------------------------------------------------ facade
+
+/// The typed cache: a [`Store`] bound to one manifest generation.
+pub struct Cache {
+    store: Store,
+    manifest_hash: u64,
+}
+
+impl std::fmt::Debug for Cache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let hash = format!("{:016x}", self.manifest_hash);
+        f.debug_struct("Cache")
+            .field("dir", &self.store.dir())
+            .field("manifest_hash", &hash)
+            .finish()
+    }
+}
+
+impl Cache {
+    /// Open the cache for a given manifest digest. If the store was
+    /// populated under a different manifest, every namespace is flushed
+    /// before use (the invalidation rule).
+    pub fn open(cfg: StoreConfig, manifest_hash: u64) -> Result<Cache> {
+        let store = Store::open(cfg)?;
+        let hash_hex = format!("{manifest_hash:016x}");
+        if store.meta(META_MANIFEST_HASH).as_deref() != Some(hash_hex.as_str()) {
+            store.clear(None);
+            store.set_meta(META_MANIFEST_HASH, &hash_hex)?;
+        }
+        Ok(Cache { store, manifest_hash })
+    }
+
+    pub fn manifest_hash(&self) -> u64 {
+        self.manifest_hash
+    }
+
+    pub fn store(&self) -> &Store {
+        &self.store
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.store.stats()
+    }
+
+    /// Decode a stored payload; undecodable entries self-heal (removed).
+    fn get_typed<T: Codec>(&self, key: CacheKey) -> Option<T> {
+        let text = self.store.get(T::NAMESPACE, key)?;
+        match decode_text(&text) {
+            Ok(v) => Some(v),
+            Err(_) => {
+                self.store.remove(T::NAMESPACE, key);
+                None
+            }
+        }
+    }
+
+    fn put_typed<T: Codec>(&self, key: CacheKey, value: &T) -> Result<usize> {
+        self.store.put(T::NAMESPACE, key, &encode_text(value))
+    }
+
+    // ------------------------------------------------------------ calib
+
+    pub fn get_calibration(
+        &self,
+        steps: usize,
+        prompts: &[String],
+        guidance: f32,
+    ) -> Option<CalibrationReport> {
+        self.get_typed(calib_key(self.manifest_hash, steps, prompts, guidance))
+    }
+
+    pub fn put_calibration(
+        &self,
+        steps: usize,
+        prompts: &[String],
+        guidance: f32,
+        report: &CalibrationReport,
+    ) -> Result<usize> {
+        self.put_typed(calib_key(self.manifest_hash, steps, prompts, guidance), report)
+    }
+
+    // ------------------------------------------------------------- plan
+
+    pub fn get_plan_front(
+        &self,
+        cons: &SearchConstraints,
+        validation_prompts: &[String],
+        d_star: usize,
+        outliers: &[usize],
+    ) -> Option<PlanFront> {
+        self.get_typed(plan_key(self.manifest_hash, cons, validation_prompts, d_star, outliers))
+    }
+
+    /// Store a searched front; also refreshes the per-steps "best plan"
+    /// summary that [`Cache::best_plan`] serves. Callers only store
+    /// fronts that satisfied their quality target (see
+    /// `Searcher::search_cached`).
+    pub fn put_plan_front(
+        &self,
+        cons: &SearchConstraints,
+        validation_prompts: &[String],
+        d_star: usize,
+        outliers: &[usize],
+        front: &PlanFront,
+    ) -> Result<usize> {
+        let mut evicted = self.put_typed(
+            plan_key(self.manifest_hash, cons, validation_prompts, d_star, outliers),
+            front,
+        )?;
+        if !front.candidates.is_empty() {
+            let summary = PlanFront {
+                candidates: front.candidates.iter().take(1).cloned().collect(),
+                ..front.clone()
+            };
+            evicted += self.store.put(
+                NS_PLAN,
+                best_plan_key(self.manifest_hash, front.total_steps),
+                &encode_text(&summary),
+            )?;
+        }
+        Ok(evicted)
+    }
+
+    /// Best known PAS configuration for this (manifest, steps) cell —
+    /// what `SamplingPlan::Auto` resolves to.
+    pub fn best_plan(&self, total_steps: usize) -> Option<PasConfig> {
+        let front: PlanFront =
+            self.get_typed(best_plan_key(self.manifest_hash, total_steps))?;
+        front.best().map(|c| c.cfg)
+    }
+
+    // ---------------------------------------------------------- request
+
+    pub fn get_result(&self, req: &GenRequest) -> Option<GenResult> {
+        self.get_typed(request_key(self.manifest_hash, req))
+    }
+
+    pub fn put_result(&self, req: &GenRequest, result: &GenResult) -> Result<usize> {
+        self.put_typed(request_key(self.manifest_hash, req), result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenStats;
+    use crate::pas::calibrate::analyse;
+    use crate::pas::plan::StepAction;
+    use crate::pas::search::Candidate;
+    use crate::runtime::Tensor;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sdacc_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_report() -> CalibrationReport {
+        let raw: Vec<Vec<f64>> = (0..12)
+            .map(|b| (0..19).map(|t| ((b + t) as f64 * 0.37).cos().abs()).collect())
+            .collect();
+        analyse(raw, vec![0.5; 20], 20, 2)
+    }
+
+    fn sample_result() -> GenResult {
+        GenResult {
+            latent: Tensor::new(vec![2, 2], vec![0.25, -1.5, 3.75, 0.125]).unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full, StepAction::Partial(2)],
+                step_ms: vec![5.0, 2.5],
+                mac_reduction: 1.8,
+                total_ms: 7.5,
+            },
+        }
+    }
+
+    #[test]
+    fn request_key_separates_every_field() {
+        let base = GenRequest::new("red circle x4 y4", 42);
+        let k0 = request_key(1, &base);
+        let mut r = base.clone();
+        r.seed = 43;
+        assert_ne!(request_key(1, &r), k0, "seed");
+        let mut r = base.clone();
+        r.steps = 49;
+        assert_ne!(request_key(1, &r), k0, "steps");
+        let mut r = base.clone();
+        r.sampler = "ddim".into();
+        assert_ne!(request_key(1, &r), k0, "sampler");
+        let mut r = base.clone();
+        r.guidance = 7.0;
+        assert_ne!(request_key(1, &r), k0, "guidance");
+        let mut r = base.clone();
+        r.plan = SamplingPlan::Pas(PasConfig::pas25(4));
+        assert_ne!(request_key(1, &r), k0, "plan");
+        assert_ne!(request_key(2, &base), k0, "manifest hash");
+        assert_eq!(request_key(1, &base.clone()), k0, "identical request hits");
+    }
+
+    #[test]
+    fn all_three_namespaces_roundtrip_through_cache() {
+        let cache = Cache::open(StoreConfig::new(tmp_dir("ns3")), 0xabc).unwrap();
+
+        let prompts = vec!["red circle x4 y4".to_string()];
+        let rep = sample_report();
+        assert!(cache.get_calibration(20, &prompts, 7.5).is_none());
+        cache.put_calibration(20, &prompts, 7.5, &rep).unwrap();
+        let back = cache.get_calibration(20, &prompts, 7.5).unwrap();
+        assert_eq!(back.d_star, rep.d_star);
+        assert_eq!(back.scores, rep.scores);
+
+        let cons = SearchConstraints::default();
+        let front = PlanFront {
+            total_steps: cons.total_steps,
+            min_mac_reduction: cons.min_mac_reduction,
+            min_psnr_db: cons.min_psnr_db,
+            d_star: rep.d_star,
+            candidates: vec![Candidate {
+                cfg: PasConfig::pas25(4),
+                mac_reduction: 2.8,
+                psnr_db: None,
+                validated: false,
+            }],
+        };
+        cache.put_plan_front(&cons, &prompts, rep.d_star, &rep.outliers, &front).unwrap();
+        let back = cache.get_plan_front(&cons, &prompts, rep.d_star, &rep.outliers).unwrap();
+        assert_eq!(back.candidates[0].cfg, PasConfig::pas25(4));
+        assert_eq!(cache.best_plan(cons.total_steps), Some(PasConfig::pas25(4)));
+        assert_eq!(cache.best_plan(cons.total_steps + 1), None);
+        // Different validation prompts are a different front cell.
+        let other = vec!["blue square x2 y2".to_string()];
+        assert!(cache.get_plan_front(&cons, &other, rep.d_star, &rep.outliers).is_none());
+
+        let req = GenRequest::new("blue square x2 y2", 7);
+        let res = sample_result();
+        assert!(cache.get_result(&req).is_none());
+        cache.put_result(&req, &res).unwrap();
+        let back = cache.get_result(&req).unwrap();
+        assert_eq!(back.latent.data, res.latent.data);
+        assert_eq!(back.stats.actions, res.stats.actions);
+    }
+
+    #[test]
+    fn manifest_hash_change_flushes_all_namespaces() {
+        let dir = tmp_dir("flush");
+        {
+            let cache = Cache::open(StoreConfig::new(&dir), 1).unwrap();
+            cache.put_result(&GenRequest::new("x", 1), &sample_result()).unwrap();
+            cache
+                .put_calibration(20, &["p".to_string()], 7.5, &sample_report())
+                .unwrap();
+            assert_eq!(cache.stats().entries, 2);
+        }
+        // Same hash: entries survive the reopen.
+        {
+            let cache = Cache::open(StoreConfig::new(&dir), 1).unwrap();
+            assert_eq!(cache.stats().entries, 2);
+        }
+        // New hash: everything flushed.
+        let cache = Cache::open(StoreConfig::new(&dir), 2).unwrap();
+        assert_eq!(cache.stats().entries, 0);
+        assert!(cache.get_result(&GenRequest::new("x", 1)).is_none());
+    }
+
+    #[test]
+    fn corrupt_payload_self_heals() {
+        let cache = Cache::open(StoreConfig::new(tmp_dir("heal")), 5).unwrap();
+        let req = GenRequest::new("y", 9);
+        cache.put_result(&req, &sample_result()).unwrap();
+        // Clobber the payload with valid JSON that is not a GenResult.
+        let key = request_key(5, &req);
+        cache.store().put(NS_REQUEST, key, "{\"not\":\"a result\"}").unwrap();
+        assert!(cache.get_result(&req).is_none());
+        // Entry was dropped, not left poisoned.
+        assert!(cache.store().get(NS_REQUEST, key).is_none());
+    }
+}

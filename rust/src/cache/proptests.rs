@@ -1,0 +1,281 @@
+//! Property tests over cache invariants (in-tree framework,
+//! rust/src/testing): codec round-trips must be the identity for all
+//! three namespaces, eviction must never breach the byte cap and must
+//! respect LRU order, and no on-disk corruption may panic the store.
+
+#![cfg(test)]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::cache::codec::{decode_text, encode_text, PlanFront};
+use crate::cache::evict::{plan_evictions, EvictEntry};
+use crate::cache::key::CacheKey;
+use crate::cache::store::{Store, StoreConfig};
+use crate::coordinator::{GenResult, GenStats};
+use crate::pas::calibrate::CalibrationReport;
+use crate::pas::plan::{PasConfig, StepAction};
+use crate::pas::search::Candidate;
+use crate::runtime::Tensor;
+use crate::testing::{check_no_shrink, gen_usize};
+use crate::util::rng::Pcg32;
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Fresh scratch dir per property case.
+fn case_dir(tag: &str) -> PathBuf {
+    let n = DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir().join(format!(
+        "sdacc_cacheprop_{tag}_{}_{n}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ------------------------------------------------------- codec round-trips
+
+fn gen_report(rng: &mut Pcg32) -> CalibrationReport {
+    let steps = gen_usize(rng, 4, 40);
+    let t1 = steps - 1;
+    let blocks = gen_usize(rng, 1, 12);
+    CalibrationReport {
+        scores: (0..blocks)
+            .map(|_| (0..t1).map(|_| rng.next_f64()).collect())
+            .collect(),
+        noise: (0..steps).map(|_| rng.next_f64() * 10.0 - 5.0).collect(),
+        d_star: gen_usize(rng, 1, t1),
+        outliers: (0..gen_usize(rng, 0, 3)).map(|_| gen_usize(rng, 1, 12)).collect(),
+        steps,
+        prompts: gen_usize(rng, 1, 8),
+    }
+}
+
+#[test]
+fn calibration_codec_roundtrip_is_identity() {
+    check_no_shrink("cache-codec-calib", gen_report, |rep| {
+        let back: CalibrationReport = match decode_text(&encode_text(rep)) {
+            Ok(b) => b,
+            Err(_) => return false,
+        };
+        back.scores == rep.scores
+            && back.noise == rep.noise
+            && back.d_star == rep.d_star
+            && back.outliers == rep.outliers
+            && back.steps == rep.steps
+            && back.prompts == rep.prompts
+    });
+}
+
+fn gen_front(rng: &mut Pcg32) -> PlanFront {
+    let n = gen_usize(rng, 0, 6);
+    PlanFront {
+        total_steps: gen_usize(rng, 8, 100),
+        min_mac_reduction: rng.next_f64() * 3.0,
+        min_psnr_db: if rng.bernoulli(0.5) { Some(rng.next_f64() * 30.0) } else { None },
+        d_star: gen_usize(rng, 1, 50),
+        candidates: (0..n)
+            .map(|_| Candidate {
+                cfg: PasConfig {
+                    t_sketch: gen_usize(rng, 1, 100),
+                    t_complete: gen_usize(rng, 1, 8),
+                    t_sparse: gen_usize(rng, 2, 8),
+                    l_sketch: gen_usize(rng, 1, 4),
+                    l_refine: gen_usize(rng, 1, 4),
+                },
+                mac_reduction: rng.next_f64() * 4.0,
+                psnr_db: if rng.bernoulli(0.5) { Some(rng.next_f64() * 40.0) } else { None },
+                validated: rng.bernoulli(0.5),
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn plan_front_codec_roundtrip_is_identity() {
+    check_no_shrink("cache-codec-plan", gen_front, |front| {
+        let back: PlanFront = match decode_text(&encode_text(front)) {
+            Ok(b) => b,
+            Err(_) => return false,
+        };
+        back.total_steps == front.total_steps
+            && back.min_mac_reduction == front.min_mac_reduction
+            && back.min_psnr_db == front.min_psnr_db
+            && back.d_star == front.d_star
+            && back.candidates.len() == front.candidates.len()
+            && back.candidates.iter().zip(&front.candidates).all(|(a, b)| {
+                a.cfg == b.cfg
+                    && a.mac_reduction == b.mac_reduction
+                    && a.psnr_db == b.psnr_db
+                    && a.validated == b.validated
+            })
+    });
+}
+
+fn gen_result(rng: &mut Pcg32) -> GenResult {
+    let steps = gen_usize(rng, 1, 12);
+    let l = gen_usize(rng, 1, 32);
+    let c = gen_usize(rng, 1, 4);
+    GenResult {
+        latent: Tensor {
+            dims: vec![l, c],
+            data: (0..l * c).map(|_| (rng.next_f32() - 0.5) * 8.0).collect(),
+        },
+        stats: GenStats {
+            actions: (0..steps)
+                .map(|_| {
+                    if rng.bernoulli(0.4) {
+                        StepAction::Full
+                    } else {
+                        StepAction::Partial(gen_usize(rng, 1, 4))
+                    }
+                })
+                .collect(),
+            step_ms: (0..steps).map(|_| rng.next_f64() * 100.0).collect(),
+            mac_reduction: 1.0 + rng.next_f64() * 3.0,
+            total_ms: rng.next_f64() * 1000.0,
+        },
+    }
+}
+
+#[test]
+fn gen_result_codec_roundtrip_is_identity() {
+    check_no_shrink("cache-codec-genresult", gen_result, |res| {
+        let back: GenResult = match decode_text(&encode_text(res)) {
+            Ok(b) => b,
+            Err(_) => return false,
+        };
+        back.latent.dims == res.latent.dims
+            && back.latent.data == res.latent.data
+            && back.stats.actions == res.stats.actions
+            && back.stats.step_ms == res.stats.step_ms
+            && back.stats.mac_reduction == res.stats.mac_reduction
+            && back.stats.total_ms == res.stats.total_ms
+    });
+}
+
+// ----------------------------------------------------- eviction invariants
+
+fn gen_evict_case(rng: &mut Pcg32) -> (Vec<EvictEntry>, u64, usize) {
+    let n = gen_usize(rng, 0, 24);
+    // Distinct last_used clocks in random order.
+    let mut clocks: Vec<u64> = (1..=n as u64).collect();
+    rng.shuffle(&mut clocks);
+    let entries: Vec<EvictEntry> = (0..n)
+        .map(|i| EvictEntry {
+            key: CacheKey(rng.next_u64()),
+            bytes: gen_usize(rng, 0, 64) as u64,
+            last_used: clocks[i],
+        })
+        .collect();
+    let max_bytes = gen_usize(rng, 0, 600) as u64;
+    let max_entries = gen_usize(rng, 0, 30);
+    (entries, max_bytes, max_entries)
+}
+
+#[test]
+fn eviction_caps_and_lru_order_hold() {
+    check_no_shrink("cache-evict-invariants", gen_evict_case, |(entries, max_bytes, max_entries)| {
+        let plan = plan_evictions(entries, *max_bytes, *max_entries);
+        // No duplicate or out-of-range indices.
+        let mut seen = std::collections::BTreeSet::new();
+        for &i in &plan {
+            if i >= entries.len() || !seen.insert(i) {
+                return false;
+            }
+        }
+        let retained: Vec<&EvictEntry> = entries
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !seen.contains(i))
+            .map(|(_, e)| e)
+            .collect();
+        // Caps are hard invariants.
+        let total: u64 = retained.iter().map(|e| e.bytes).sum();
+        if total > *max_bytes || retained.len() > *max_entries {
+            return false;
+        }
+        // LRU order: every evicted entry is older than every retained one
+        // (clocks are distinct by construction).
+        let newest_evicted = plan.iter().map(|&i| entries[i].last_used).max();
+        let oldest_retained = retained.iter().map(|e| e.last_used).min();
+        if let (Some(ev), Some(ret)) = (newest_evicted, oldest_retained) {
+            if ev >= ret {
+                return false;
+            }
+        }
+        // Minimality: dropping the last eviction must re-violate a cap.
+        if let Some(&last) = plan.last() {
+            let total_with_last = total + entries[last].bytes;
+            if total_with_last <= *max_bytes && retained.len() + 1 <= *max_entries {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn store_byte_cap_never_exceeded_under_random_workload() {
+    check_no_shrink(
+        "cache-store-byte-cap",
+        |rng| {
+            let cap = gen_usize(rng, 8, 200) as u64;
+            let ops: Vec<(u64, usize)> = (0..gen_usize(rng, 1, 20))
+                .map(|_| (rng.gen_range(0, 6), gen_usize(rng, 2, 60)))
+                .collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let dir = case_dir("cap");
+            let store = Store::open(StoreConfig::new(&dir).with_max_bytes(*cap)).unwrap();
+            let mut ok = true;
+            for &(key, len) in ops {
+                // Valid JSON payload of exactly `len` bytes: "xxx...".
+                let payload = format!("\"{}\"", "x".repeat(len - 2));
+                store.put("request", CacheKey(key), &payload).unwrap();
+                if store.stats().bytes > *cap {
+                    ok = false;
+                    break;
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+            ok
+        },
+    );
+}
+
+// -------------------------------------------------- corruption recovery
+
+#[test]
+fn corrupt_or_truncated_index_never_panics_and_recovers_payloads() {
+    check_no_shrink(
+        "cache-index-corruption",
+        |rng| (gen_usize(rng, 0, 400), rng.bernoulli(0.3)),
+        |&(cut, scramble)| {
+            let dir = case_dir("corrupt");
+            {
+                let store = Store::open(StoreConfig::new(&dir)).unwrap();
+                store.put("calib", CacheKey(1), "{\"d_star\":5}").unwrap();
+                store.put("plan", CacheKey(2), "{\"candidates\":[]}").unwrap();
+                store.put("request", CacheKey(3), "{\"dims\":[1]}").unwrap();
+            }
+            let index = dir.join("index.json");
+            let text = std::fs::read(&index).unwrap();
+            let cut = cut.min(text.len());
+            let mut mangled = text[..cut].to_vec();
+            if scramble {
+                mangled.extend_from_slice(b"\x00\xffgarbage{{{");
+            }
+            std::fs::write(&index, &mangled).unwrap();
+
+            // Must open without panicking and recover all three payloads.
+            let store = Store::open(StoreConfig::new(&dir)).unwrap();
+            let ok = store.get("calib", CacheKey(1)).is_some()
+                && store.get("plan", CacheKey(2)).is_some()
+                && store.get("request", CacheKey(3)).is_some();
+            let _ = std::fs::remove_dir_all(&dir);
+            ok
+        },
+    );
+}

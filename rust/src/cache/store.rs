@@ -1,0 +1,699 @@
+//! The on-disk store: payload files + a single index with atomic
+//! write-then-rename updates.
+//!
+//! Layout under the cache directory:
+//!
+//! ```text
+//! <dir>/index.json           # {"version","clock","meta","entries":[..]}
+//! <dir>/<namespace>/<key-hex>.json   # one payload per entry
+//! ```
+//!
+//! The index is the source of truth for LRU state and byte accounting;
+//! payloads are content-addressed by [`CacheKey`] hex. Index updates go
+//! through a temp file + `rename`, so a crash leaves either the old or
+//! the new index — never a torn one. A missing, truncated or
+//! version-skewed index is recovered by scanning the payload directories
+//! (entries keep their bytes, LRU order resets), so no on-disk state can
+//! make [`Store::open`] panic.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::evict::{plan_evictions, EvictEntry};
+use super::key::{CacheKey, CACHE_VERSION};
+
+/// Default byte cap: plenty for plan fronts + calibration, bounded for
+/// request latents.
+pub const DEFAULT_MAX_BYTES: u64 = 256 * 1024 * 1024;
+pub const DEFAULT_MAX_ENTRIES: usize = 65_536;
+
+/// Puts between index persists. The index write is O(entries), and `put`
+/// runs per request on the serving path, so inserts buffer and the index
+/// catches up every N puts, on eviction, on structural ops, and on
+/// `flush`/`Drop`. A hard crash can orphan at most N-1 recent payloads —
+/// they are re-generated on miss and swept by `gc`, which the recovery
+/// path already tolerates.
+const PERSIST_EVERY: u32 = 16;
+
+/// Store configuration (the `ServerConfig`/CLI cache knobs map to this).
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    pub dir: PathBuf,
+    /// Hard cap on total payload bytes (the eviction invariant).
+    pub max_bytes: u64,
+    /// Hard cap on entry count.
+    pub max_entries: usize,
+}
+
+impl StoreConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> StoreConfig {
+        StoreConfig {
+            dir: dir.into(),
+            max_bytes: DEFAULT_MAX_BYTES,
+            max_entries: DEFAULT_MAX_ENTRIES,
+        }
+    }
+
+    pub fn with_max_bytes(mut self, max_bytes: u64) -> StoreConfig {
+        self.max_bytes = max_bytes;
+        self
+    }
+
+    pub fn with_max_entries(mut self, max_entries: usize) -> StoreConfig {
+        self.max_entries = max_entries;
+        self
+    }
+}
+
+#[derive(Debug, Clone)]
+struct EntryMeta {
+    bytes: u64,
+    last_used: u64,
+}
+
+struct Inner {
+    /// (namespace, key) -> meta. BTreeMap keeps stats/persist ordering
+    /// deterministic.
+    entries: BTreeMap<(String, CacheKey), EntryMeta>,
+    /// Logical LRU clock; bumped on every touch.
+    clock: u64,
+    /// Free-form persisted metadata (e.g. the manifest hash guarding the
+    /// namespaces — see `namespaces.rs`).
+    meta: BTreeMap<String, String>,
+    /// LRU touches and buffered puts are persisted lazily; structural
+    /// changes eagerly.
+    dirty: bool,
+    /// Puts since the last index persist (see [`PERSIST_EVERY`]).
+    pending_puts: u32,
+}
+
+/// Per-namespace usage summary.
+#[derive(Debug, Clone)]
+pub struct NamespaceStats {
+    pub namespace: String,
+    pub entries: usize,
+    pub bytes: u64,
+}
+
+/// Point-in-time store summary (CLI `cache stats`).
+#[derive(Debug, Clone)]
+pub struct StoreStats {
+    pub namespaces: Vec<NamespaceStats>,
+    pub entries: usize,
+    pub bytes: u64,
+    pub max_bytes: u64,
+    pub max_entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// What a `gc` pass cleaned up.
+#[derive(Debug, Clone, Default)]
+pub struct GcReport {
+    /// Index entries whose payload file had vanished.
+    pub dropped_missing: usize,
+    /// Payload files on disk that no index entry claimed.
+    pub removed_orphans: usize,
+    /// Entries evicted to re-enforce the caps.
+    pub evicted: usize,
+}
+
+/// Content-addressed persistent store with LRU + byte-cap eviction.
+pub struct Store {
+    cfg: StoreConfig,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Store {
+    /// Open (or create) a store. Corrupt/missing indexes recover by
+    /// scanning payload files; this never panics on bad on-disk state.
+    pub fn open(cfg: StoreConfig) -> Result<Store> {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating cache dir {}", cfg.dir.display()))?;
+        let inner = match load_index(&index_path(&cfg.dir)) {
+            Some(inner) => inner,
+            None => scan_payloads(&cfg.dir),
+        };
+        let store = Store {
+            cfg,
+            inner: Mutex::new(inner),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        };
+        {
+            // Re-enforce caps (the configured caps may have shrunk since
+            // the index was written) and persist the recovered state.
+            let mut inner = store.inner.lock().unwrap();
+            store.evict_locked(&mut inner);
+            store.persist_locked(&mut inner)?;
+        }
+        Ok(store)
+    }
+
+    pub fn config(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.cfg.dir
+    }
+
+    fn payload_path(&self, ns: &str, key: CacheKey) -> PathBuf {
+        self.cfg.dir.join(ns).join(format!("{}.json", key.hex()))
+    }
+
+    /// Fetch a payload; touches LRU state on hit.
+    pub fn get(&self, ns: &str, key: CacheKey) -> Option<String> {
+        let mut inner = self.inner.lock().unwrap();
+        let map_key = (ns.to_string(), key);
+        if !inner.entries.contains_key(&map_key) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        match std::fs::read_to_string(self.payload_path(ns, key)) {
+            Ok(text) => {
+                inner.clock += 1;
+                let clock = inner.clock;
+                if let Some(e) = inner.entries.get_mut(&map_key) {
+                    e.last_used = clock;
+                }
+                inner.dirty = true;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(text)
+            }
+            Err(_) => {
+                // Payload vanished underneath us: self-heal the index.
+                inner.entries.remove(&map_key);
+                inner.dirty = true;
+                let _ = self.persist_locked(&mut inner);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or replace) a payload. Returns how many entries were
+    /// evicted to stay under the caps.
+    pub fn put(&self, ns: &str, key: CacheKey, text: &str) -> Result<usize> {
+        if ns.is_empty() || ns.chars().any(|c| matches!(c, '/' | '\\' | '.')) {
+            bail!("invalid cache namespace '{ns}'");
+        }
+        // Hold the lock across the payload write too, so concurrent puts
+        // of the same key cannot race on the temp file.
+        let mut inner = self.inner.lock().unwrap();
+        let path = self.payload_path(ns, key);
+        let parent = path.parent().expect("payload path has a parent");
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+        write_atomic(&path, text.as_bytes())?;
+
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner
+            .entries
+            .insert((ns.to_string(), key), EntryMeta { bytes: text.len() as u64, last_used: clock });
+        let evicted = self.evict_locked(&mut inner);
+        inner.dirty = true;
+        inner.pending_puts += 1;
+        // The index write is O(entries); buffer it on the hot path and
+        // catch up periodically (and immediately after evictions, so the
+        // on-disk index never references deleted payloads for long).
+        if evicted > 0 || inner.pending_puts >= PERSIST_EVERY {
+            self.persist_locked(&mut inner)?;
+        }
+        Ok(evicted)
+    }
+
+    /// Drop one entry. Returns whether it existed.
+    pub fn remove(&self, ns: &str, key: CacheKey) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let existed = inner.entries.remove(&(ns.to_string(), key)).is_some();
+        let _ = std::fs::remove_file(self.payload_path(ns, key));
+        if existed {
+            inner.dirty = true;
+            let _ = self.persist_locked(&mut inner);
+        }
+        existed
+    }
+
+    /// Remove all entries, or all entries of one namespace. Also sweeps
+    /// the payload directory so orphaned files go too.
+    pub fn clear(&self, ns: Option<&str>) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.entries.len();
+        match ns {
+            Some(ns) => {
+                inner.entries.retain(|(n, _), _| n.as_str() != ns);
+                let _ = std::fs::remove_dir_all(self.cfg.dir.join(ns));
+            }
+            None => {
+                inner.entries.clear();
+                for d in namespace_dirs(&self.cfg.dir) {
+                    let _ = std::fs::remove_dir_all(d);
+                }
+            }
+        }
+        let removed = before - inner.entries.len();
+        inner.dirty = true;
+        let _ = self.persist_locked(&mut inner);
+        removed
+    }
+
+    /// Validate index<->disk agreement and re-enforce the caps.
+    pub fn gc(&self) -> Result<GcReport> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut report = GcReport::default();
+
+        // 1. Index entries whose payload is gone.
+        let missing: Vec<(String, CacheKey)> = inner
+            .entries
+            .keys()
+            .filter(|(ns, key)| !self.payload_path(ns, *key).exists())
+            .cloned()
+            .collect();
+        report.dropped_missing = missing.len();
+        for k in missing {
+            inner.entries.remove(&k);
+        }
+
+        // 2. Files on disk that the index does not claim.
+        for dir in namespace_dirs(&self.cfg.dir) {
+            let ns = dir.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+            for (path, key) in payload_files(&dir) {
+                if !inner.entries.contains_key(&(ns.clone(), key)) {
+                    let _ = std::fs::remove_file(path);
+                    report.removed_orphans += 1;
+                }
+            }
+        }
+
+        // 3. Caps.
+        report.evicted = self.evict_locked(&mut inner);
+
+        inner.dirty = true;
+        self.persist_locked(&mut inner)?;
+        Ok(report)
+    }
+
+    /// Persisted metadata lookup (e.g. the manifest hash).
+    pub fn meta(&self, k: &str) -> Option<String> {
+        self.inner.lock().unwrap().meta.get(k).cloned()
+    }
+
+    /// Set persisted metadata.
+    pub fn set_meta(&self, k: &str, v: &str) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.meta.insert(k.to_string(), v.to_string());
+        inner.dirty = true;
+        self.persist_locked(&mut inner)
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.inner.lock().unwrap();
+        let mut per_ns: BTreeMap<&str, (usize, u64)> = BTreeMap::new();
+        for ((ns, _), meta) in &inner.entries {
+            let slot = per_ns.entry(ns.as_str()).or_default();
+            slot.0 += 1;
+            slot.1 += meta.bytes;
+        }
+        StoreStats {
+            namespaces: per_ns
+                .into_iter()
+                .map(|(ns, (entries, bytes))| NamespaceStats {
+                    namespace: ns.to_string(),
+                    entries,
+                    bytes,
+                })
+                .collect(),
+            entries: inner.entries.len(),
+            bytes: inner.entries.values().map(|e| e.bytes).sum(),
+            max_bytes: self.cfg.max_bytes,
+            max_entries: self.cfg.max_entries,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Persist any lazily-buffered LRU touches.
+    pub fn flush(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        self.persist_locked(&mut inner)
+    }
+
+    // ------------------------------------------------------------ internals
+
+    /// Enforce the caps; returns number of entries evicted.
+    fn evict_locked(&self, inner: &mut Inner) -> usize {
+        let keys: Vec<(String, CacheKey)> = inner.entries.keys().cloned().collect();
+        let view: Vec<EvictEntry> = keys
+            .iter()
+            .map(|k| {
+                let m = &inner.entries[k];
+                EvictEntry { key: k.1, bytes: m.bytes, last_used: m.last_used }
+            })
+            .collect();
+        let plan = plan_evictions(&view, self.cfg.max_bytes, self.cfg.max_entries);
+        for &i in &plan {
+            let (ns, key) = &keys[i];
+            inner.entries.remove(&(ns.clone(), *key));
+            let _ = std::fs::remove_file(self.payload_path(ns, *key));
+        }
+        if !plan.is_empty() {
+            inner.dirty = true;
+        }
+        self.evictions.fetch_add(plan.len() as u64, Ordering::Relaxed);
+        plan.len()
+    }
+
+    fn persist_locked(&self, inner: &mut Inner) -> Result<()> {
+        if !inner.dirty {
+            return Ok(());
+        }
+        let entries = Json::Arr(
+            inner
+                .entries
+                .iter()
+                .map(|((ns, key), m)| {
+                    Json::obj(vec![
+                        ("ns", Json::str(ns)),
+                        ("key", Json::str(&key.hex())),
+                        ("bytes", Json::num(m.bytes as f64)),
+                        ("last_used", Json::num(m.last_used as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let meta = Json::Obj(
+            inner.meta.iter().map(|(k, v)| (k.clone(), Json::str(v))).collect(),
+        );
+        let index = Json::obj(vec![
+            ("version", Json::num(CACHE_VERSION as f64)),
+            ("clock", Json::num(inner.clock as f64)),
+            ("meta", meta),
+            ("entries", entries),
+        ]);
+        write_atomic(&index_path(&self.cfg.dir), index.to_string().as_bytes())?;
+        inner.dirty = false;
+        inner.pending_puts = 0;
+        Ok(())
+    }
+}
+
+impl Drop for Store {
+    fn drop(&mut self) {
+        // Best-effort: flush buffered LRU touches.
+        if let Ok(mut inner) = self.inner.lock() {
+            let _ = self.persist_locked(&mut inner);
+        }
+    }
+}
+
+fn index_path(dir: &Path) -> PathBuf {
+    dir.join("index.json")
+}
+
+/// Write-then-rename so readers never observe a torn file.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+/// Parse the index; `None` means "unusable — fall back to a scan".
+fn load_index(path: &Path) -> Option<Inner> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get_usize("version") != Some(CACHE_VERSION as usize) {
+        return None;
+    }
+    let mut entries = BTreeMap::new();
+    for e in j.get("entries")?.as_arr()? {
+        let ns = e.get_str("ns")?.to_string();
+        let key = CacheKey::from_hex(e.get_str("key")?)?;
+        entries.insert(
+            (ns, key),
+            EntryMeta {
+                bytes: e.get_usize("bytes")? as u64,
+                last_used: e.get_usize("last_used").unwrap_or(0) as u64,
+            },
+        );
+    }
+    let meta = j
+        .get("meta")
+        .and_then(Json::as_obj)
+        .map(|o| {
+            o.iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect()
+        })
+        .unwrap_or_default();
+    Some(Inner {
+        entries,
+        clock: j.get_usize("clock").unwrap_or(0) as u64,
+        meta,
+        dirty: false,
+        pending_puts: 0,
+    })
+}
+
+/// Rebuild an index by scanning payload directories (recovery path).
+/// Payloads that fail to parse as JSON are deleted; LRU order resets.
+fn scan_payloads(dir: &Path) -> Inner {
+    let mut entries = BTreeMap::new();
+    let mut clock = 0;
+    for ns_dir in namespace_dirs(dir) {
+        let ns = ns_dir.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+        for (path, key) in payload_files(&ns_dir) {
+            let valid = std::fs::read_to_string(&path)
+                .ok()
+                .map(|t| Json::parse(&t).is_ok())
+                .unwrap_or(false);
+            if !valid {
+                let _ = std::fs::remove_file(&path);
+                continue;
+            }
+            let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            clock += 1;
+            entries.insert((ns.clone(), key), EntryMeta { bytes, last_used: clock });
+        }
+    }
+    Inner { entries, clock, meta: BTreeMap::new(), dirty: true, pending_puts: 0 }
+}
+
+/// Subdirectories of the cache dir (one per namespace).
+fn namespace_dirs(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// `<16-hex>.json` payload files inside one namespace directory.
+fn payload_files(ns_dir: &Path) -> Vec<(PathBuf, CacheKey)> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(ns_dir) {
+        for e in rd.flatten() {
+            let p = e.path();
+            let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+            if p.extension().and_then(|s| s.to_str()) == Some("json") {
+                if let Some(key) = CacheKey::from_hex(stem) {
+                    out.push((p, key));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sdacc_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_counters() {
+        let store = Store::open(StoreConfig::new(tmp_dir("roundtrip"))).unwrap();
+        let k = CacheKey(42);
+        assert_eq!(store.get("req", k), None);
+        store.put("req", k, "{\"a\":1}").unwrap();
+        assert_eq!(store.get("req", k).as_deref(), Some("{\"a\":1}"));
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, 7);
+    }
+
+    #[test]
+    fn survives_reopen() {
+        let dir = tmp_dir("reopen");
+        {
+            let store = Store::open(StoreConfig::new(&dir)).unwrap();
+            store.put("plan", CacheKey(1), "{\"x\":[1,2]}").unwrap();
+            store.put("calib", CacheKey(2), "{\"y\":3}").unwrap();
+        }
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        assert_eq!(store.get("plan", CacheKey(1)).as_deref(), Some("{\"x\":[1,2]}"));
+        assert_eq!(store.get("calib", CacheKey(2)).as_deref(), Some("{\"y\":3}"));
+        assert_eq!(store.stats().entries, 2);
+    }
+
+    #[test]
+    fn byte_cap_never_exceeded() {
+        let cfg = StoreConfig::new(tmp_dir("cap")).with_max_bytes(30);
+        let store = Store::open(cfg).unwrap();
+        for i in 0..10u64 {
+            store.put("req", CacheKey(i), "{\"v\":1234567}").unwrap(); // 13 bytes
+            assert!(store.stats().bytes <= 30, "cap breached at i={i}");
+        }
+        let s = store.stats();
+        assert!(s.evictions >= 8, "evictions {}", s.evictions);
+        assert_eq!(s.entries, 2);
+        // Newest entries survive.
+        assert!(store.get("req", CacheKey(9)).is_some());
+        assert!(store.get("req", CacheKey(0)).is_none());
+    }
+
+    #[test]
+    fn lru_respects_touches() {
+        let cfg = StoreConfig::new(tmp_dir("lru")).with_max_entries(2).with_max_bytes(1 << 20);
+        let store = Store::open(cfg).unwrap();
+        store.put("req", CacheKey(1), "{}").unwrap();
+        store.put("req", CacheKey(2), "{}").unwrap();
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(store.get("req", CacheKey(1)).is_some());
+        store.put("req", CacheKey(3), "{}").unwrap();
+        assert!(store.get("req", CacheKey(1)).is_some());
+        assert!(store.get("req", CacheKey(2)).is_none());
+        assert!(store.get("req", CacheKey(3)).is_some());
+    }
+
+    #[test]
+    fn buffered_puts_flush_every_n_and_orphans_are_gc_able() {
+        // Crash (no Drop flush) right after one buffered put: the payload
+        // is an orphan — not served, but cleanly reclaimed by gc.
+        let dir = tmp_dir("crash1");
+        {
+            let store = Store::open(StoreConfig::new(&dir)).unwrap();
+            store.put("req", CacheKey(1), "{\"v\":1}").unwrap();
+            std::mem::forget(store); // simulated hard crash
+        }
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        assert!(store.get("req", CacheKey(1)).is_none(), "buffered put lost on crash");
+        assert_eq!(store.gc().unwrap().removed_orphans, 1);
+        drop(store);
+
+        // After PERSIST_EVERY puts the index has caught up, so a crash
+        // loses nothing.
+        let dir = tmp_dir("crash2");
+        {
+            let store = Store::open(StoreConfig::new(&dir)).unwrap();
+            for i in 0..super::PERSIST_EVERY as u64 {
+                store.put("req", CacheKey(i), "{}").unwrap();
+            }
+            std::mem::forget(store);
+        }
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        assert_eq!(store.stats().entries, super::PERSIST_EVERY as usize);
+    }
+
+    #[test]
+    fn corrupt_index_recovers_by_scanning() {
+        let dir = tmp_dir("corrupt");
+        {
+            let store = Store::open(StoreConfig::new(&dir)).unwrap();
+            store.put("req", CacheKey(7), "{\"keep\":true}").unwrap();
+        }
+        std::fs::write(dir.join("index.json"), "{\"version\":1,\"entr").unwrap();
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        assert_eq!(store.get("req", CacheKey(7)).as_deref(), Some("{\"keep\":true}"));
+    }
+
+    #[test]
+    fn version_skew_recovers_by_scanning() {
+        let dir = tmp_dir("version");
+        {
+            let store = Store::open(StoreConfig::new(&dir)).unwrap();
+            store.put("req", CacheKey(9), "{\"v\":9}").unwrap();
+        }
+        std::fs::write(dir.join("index.json"), "{\"version\":999,\"entries\":[]}").unwrap();
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        assert_eq!(store.get("req", CacheKey(9)).as_deref(), Some("{\"v\":9}"));
+    }
+
+    #[test]
+    fn gc_reconciles_disk_and_index() {
+        let dir = tmp_dir("gc");
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        store.put("req", CacheKey(1), "{\"a\":1}").unwrap();
+        store.put("req", CacheKey(2), "{\"b\":2}").unwrap();
+        // Vanish one payload; drop one orphan file in.
+        std::fs::remove_file(dir.join("req").join(format!("{}.json", CacheKey(1).hex()))).unwrap();
+        std::fs::write(dir.join("req").join(format!("{}.json", CacheKey(99).hex())), "{}").unwrap();
+        let report = store.gc().unwrap();
+        assert_eq!(report.dropped_missing, 1);
+        assert_eq!(report.removed_orphans, 1);
+        assert_eq!(store.stats().entries, 1);
+        assert!(store.get("req", CacheKey(2)).is_some());
+    }
+
+    #[test]
+    fn clear_namespace_only_hits_that_namespace() {
+        let store = Store::open(StoreConfig::new(tmp_dir("clearns"))).unwrap();
+        store.put("req", CacheKey(1), "{}").unwrap();
+        store.put("plan", CacheKey(2), "{}").unwrap();
+        assert_eq!(store.clear(Some("req")), 1);
+        assert!(store.get("req", CacheKey(1)).is_none());
+        assert!(store.get("plan", CacheKey(2)).is_some());
+        assert_eq!(store.clear(None), 1);
+        assert_eq!(store.stats().entries, 0);
+    }
+
+    #[test]
+    fn meta_persists_across_reopen() {
+        let dir = tmp_dir("meta");
+        {
+            let store = Store::open(StoreConfig::new(&dir)).unwrap();
+            store.set_meta("manifest_hash", "abc123").unwrap();
+        }
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        assert_eq!(store.meta("manifest_hash").as_deref(), Some("abc123"));
+    }
+
+    #[test]
+    fn replacing_an_entry_does_not_double_count() {
+        let store = Store::open(StoreConfig::new(tmp_dir("replace"))).unwrap();
+        store.put("req", CacheKey(5), "{\"v\":1}").unwrap();
+        store.put("req", CacheKey(5), "{\"v\":22}").unwrap();
+        let s = store.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.bytes, 8);
+        assert_eq!(store.get("req", CacheKey(5)).as_deref(), Some("{\"v\":22}"));
+    }
+}

@@ -11,6 +11,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cache::Cache;
 use crate::models::inventory::sd_tiny;
 use crate::pas::cost::CostModel;
 use crate::pas::plan::{plan_is_executable, SamplingPlan, StepAction};
@@ -43,9 +44,28 @@ impl GenRequest {
     }
 
     /// Batching key: requests sharing it can run lockstep.
-    pub fn batch_key(&self) -> String {
-        format!("{}|{}|{:?}|{}", self.steps, self.sampler, self.plan, self.guidance)
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey {
+            steps: self.steps,
+            sampler: self.sampler.clone(),
+            plan: self.plan,
+            guidance_bits: self.guidance.to_bits(),
+        }
     }
+}
+
+/// Structured batching key (steps/sampler/plan/guidance must match to
+/// run lockstep). A real `Hash + Ord` type rather than a lossy
+/// `format!("{:?}")` string, so the batcher can use it as a map key
+/// directly and the cache key derivation hashes the same fields without
+/// re-parsing. Guidance is carried as its exact f32 bit pattern
+/// (`f32` itself has no `Eq`/`Hash`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub steps: usize,
+    pub sampler: String,
+    pub plan: SamplingPlan,
+    pub guidance_bits: u32,
 }
 
 /// Per-request generation outcome.
@@ -78,6 +98,28 @@ impl Coordinator {
 
     pub fn runtime(&self) -> &RuntimeHandle {
         &self.runtime
+    }
+
+    /// Digest of the loaded AOT manifest — the cache invalidation anchor.
+    pub fn manifest_hash(&self) -> u64 {
+        self.runtime.manifest().hash
+    }
+
+    /// Resolve a `SamplingPlan::Auto` request against the plan cache:
+    /// the best searched configuration for this (manifest, steps) cell,
+    /// or `Full` when nothing has been searched yet. Non-Auto plans pass
+    /// through untouched. Called by the server before batching so cache
+    /// keys and batch keys always see a concrete plan.
+    pub fn resolve_plan(&self, req: &GenRequest, cache: Option<&Cache>) -> GenRequest {
+        if !matches!(req.plan, SamplingPlan::Auto) {
+            return req.clone();
+        }
+        let mut out = req.clone();
+        out.plan = cache
+            .and_then(|c| c.best_plan(req.steps))
+            .map(SamplingPlan::Pas)
+            .unwrap_or(SamplingPlan::Full);
+        out
     }
 
     /// Batch sizes with compiled artifacts, ascending.
@@ -268,6 +310,21 @@ mod tests {
         assert_eq!(a.batch_key(), b.batch_key());
         b.steps = 25;
         assert_ne!(a.batch_key(), b.batch_key());
+    }
+
+    #[test]
+    fn batch_key_is_a_real_map_key() {
+        use std::collections::HashMap;
+        let mut m: HashMap<BatchKey, usize> = HashMap::new();
+        m.insert(GenRequest::new("a", 1).batch_key(), 1);
+        let mut b = GenRequest::new("b", 2);
+        // Same parameters, different prompt/seed: same batch key.
+        *m.entry(b.batch_key()).or_insert(0) += 1;
+        assert_eq!(m.len(), 1);
+        // Guidance participates via its exact bit pattern.
+        b.guidance = 7.0;
+        m.insert(b.batch_key(), 2);
+        assert_eq!(m.len(), 2);
     }
 
     #[test]

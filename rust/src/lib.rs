@@ -9,7 +9,25 @@
 //! AOT-lowered to HLO text by `python/compile/aot.py` and executed here
 //! through the PJRT CPU client (`runtime` module). Python never runs on
 //! the request path.
+//!
+//! ## Persistent cache ([`cache`])
+//!
+//! Expensive one-time work is memoized in a versioned, content-addressed
+//! on-disk store with three namespaces: calibration reports
+//! (Fig. 4 / Eq. 1-2), searched sampling-plan fronts (Fig. 7), and
+//! request-level generation results. Keys are structured FNV-1a hashes
+//! over the AOT manifest digest plus the defining fields
+//! (`(prompt, seed, steps, sampler, guidance, plan)` for requests), so a
+//! manifest rebuild flushes every namespace rather than serving stale
+//! latents. The store survives process restarts, enforces an LRU byte
+//! cap, and recovers from corrupt/truncated indexes by rescanning its
+//! payload files. Consumers: `pas::calibrate`/`pas::search` (warm starts
+//! become lookups), the serving layer (request cache consulted before
+//! enqueueing, hit/miss/eviction counters in `server::metrics`), the
+//! coordinator (`SamplingPlan::Auto` resolution), and the `sd-acc cache`
+//! CLI (`stats`/`gc`/`clear`).
 
+pub mod cache;
 pub mod coordinator;
 pub mod hwsim;
 pub mod models;

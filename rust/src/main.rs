@@ -4,6 +4,7 @@
 //!   generate   text-to-image via the PJRT runtime (original or PAS)
 //!   calibrate  measure shift scores, D*, outliers (Fig. 4 / Eq. 1-2)
 //!   simulate   run the accelerator performance model on a real SD arch
+//!   cache      persistent cache maintenance (stats | gc | clear)
 //!   info       artifact + manifest summary
 //!
 //! All compute goes through AOT artifacts; python never runs here.
@@ -11,6 +12,7 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
+use sd_acc::cache::{default_cache_dir, Cache, Store, StoreConfig};
 use sd_acc::coordinator::{Coordinator, GenRequest};
 use sd_acc::hwsim::arch::{AccelConfig, Policy};
 use sd_acc::hwsim::engine::simulate_unet_step;
@@ -20,6 +22,7 @@ use sd_acc::pas::plan::{PasConfig, SamplingPlan};
 use sd_acc::quality;
 use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
 use sd_acc::util::cli::{usage, Args, OptSpec};
+use sd_acc::util::table::Table;
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -32,6 +35,7 @@ fn main() -> ExitCode {
         "generate" => cmd_generate(rest),
         "calibrate" => cmd_calibrate(rest),
         "simulate" => cmd_simulate(rest),
+        "cache" => cmd_cache(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
             print_help();
@@ -51,7 +55,7 @@ fn main() -> ExitCode {
 fn print_help() {
     println!(
         "sd-acc {} — SD-Acc reproduction (phase-aware sampling + HW co-design)\n\n\
-         usage: sd-acc <generate|calibrate|simulate|info> [options]\n\
+         usage: sd-acc <generate|calibrate|simulate|cache|info> [options]\n\
          run a subcommand with --help for its options",
         sd_acc::util::VERSION
     );
@@ -69,6 +73,26 @@ fn need_artifacts(dir: &Path) -> Result<(), String> {
     }
 }
 
+/// Open the persistent cache when `--cache-dir` is given.
+fn open_cache(args: &Args, coord: &Coordinator) -> Result<Option<Cache>, String> {
+    match args.get("cache-dir") {
+        Some(d) => Cache::open(StoreConfig::new(d), coord.manifest_hash())
+            .map(Some)
+            .map_err(|e| format!("{e:#}")),
+        None => Ok(None),
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    if b < 1024 {
+        format!("{b} B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else {
+        format!("{:.1} MiB", b as f64 / (1024.0 * 1024.0))
+    }
+}
+
 // ----------------------------------------------------------------- generate
 
 fn cmd_generate(raw: &[String]) -> Result<(), String> {
@@ -81,6 +105,8 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "t-sparse", help: "PAS sparse period", takes_value: true, default: Some("4") },
         OptSpec { name: "out", help: "output PPM path", takes_value: true, default: Some("out.ppm") },
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
+        OptSpec { name: "auto", help: "resolve the best cached PAS plan (SamplingPlan::Auto)", takes_value: false, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -93,6 +119,7 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
     let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
     let coord = Coordinator::new(svc.handle());
     let m = coord.runtime().manifest().model.clone();
+    let cache = open_cache(&args, &coord)?;
 
     let steps = args.get_usize("steps")?.unwrap();
     let mut req = GenRequest::new(args.get("prompt").unwrap(), args.get_usize("seed")?.unwrap() as u64);
@@ -106,8 +133,23 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
             l_sketch: 2,
             l_refine: 2,
         });
+    } else if args.flag("auto") {
+        req.plan = SamplingPlan::Auto;
     }
-    let res = coord.generate_one(&req).map_err(|e| format!("{e:#}"))?;
+    let req = coord.resolve_plan(&req, cache.as_ref());
+    let res = match cache.as_ref().and_then(|c| c.get_result(&req)) {
+        Some(hit) => {
+            println!("request cache hit — reusing stored latent");
+            hit
+        }
+        None => {
+            let res = coord.generate_one(&req).map_err(|e| format!("{e:#}"))?;
+            if let Some(c) = &cache {
+                let _ = c.put_result(&req, &res);
+            }
+            res
+        }
+    };
     println!(
         "generated in {:.0} ms ({} steps, MAC reduction {:.2}x)",
         res.stats.total_ms,
@@ -128,6 +170,7 @@ fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "steps", help: "timesteps per trajectory", takes_value: true, default: Some("25") },
         OptSpec { name: "prompts", help: "number of calibration prompts", takes_value: true, default: Some("2") },
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        OptSpec { name: "cache-dir", help: "persistent cache dir (warm starts skip the trajectories)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -139,6 +182,7 @@ fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
     need_artifacts(&dir)?;
     let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
     let coord = Coordinator::new(svc.handle());
+    let cache = open_cache(&args, &coord)?;
     let prompts: Vec<String> = [
         "red circle x4 y4 blue square x11 y11",
         "green stripe x8 y8",
@@ -149,13 +193,98 @@ fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
     .map(|s| s.to_string())
     .collect();
     let steps = args.get_usize("steps")?.unwrap();
-    let rep = Calibrator::new(&coord)
-        .run(&prompts, steps, 7.5)
-        .map_err(|e| format!("{e:#}"))?;
+    let calibrator = Calibrator::new(&coord);
+    let rep = match &cache {
+        Some(c) => {
+            let (rep, hit) = calibrator
+                .run_cached(c, &prompts, steps, 7.5)
+                .map_err(|e| format!("{e:#}"))?;
+            if hit {
+                println!("calibration cache hit — trajectories skipped");
+            }
+            rep
+        }
+        None => calibrator.run(&prompts, steps, 7.5).map_err(|e| format!("{e:#}"))?,
+    };
     std::fs::write(dir.join("calibration.json"), rep.to_json().to_string())
         .map_err(|e| e.to_string())?;
     println!("D* = {} / {steps}, outliers = {:?}", rep.d_star, rep.outliers);
     println!("wrote {}/calibration.json", dir.display());
+    Ok(())
+}
+
+// -------------------------------------------------------------------- cache
+
+fn cmd_cache(raw: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec { name: "dir", help: "cache directory ($SD_ACC_CACHE or ./cache)", takes_value: true, default: None },
+        OptSpec { name: "max-bytes", help: "byte cap enforced on open/gc", takes_value: true, default: None },
+        OptSpec { name: "max-entries", help: "entry cap enforced on open/gc", takes_value: true, default: None },
+        OptSpec { name: "namespace", help: "restrict clear to one namespace (calib|plan|request)", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    let action = args.positional().first().map(String::as_str).unwrap_or("stats");
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage("sd-acc cache <stats|gc|clear>", "persistent cache maintenance", &spec)
+        );
+        return Ok(());
+    }
+    let mut cfg =
+        StoreConfig::new(args.get("dir").map(PathBuf::from).unwrap_or_else(default_cache_dir));
+    let requested_max_bytes = args.get_u64("max-bytes")?;
+    if let Some(b) = requested_max_bytes {
+        cfg.max_bytes = b;
+    }
+    if let Some(n) = args.get_usize("max-entries")? {
+        cfg.max_entries = n;
+    }
+    if action == "stats" {
+        // Inspection must be read-only: opening with finite caps would
+        // evict on the spot. The caps shown come from the flags/defaults.
+        cfg.max_bytes = u64::MAX;
+        cfg.max_entries = usize::MAX;
+    }
+    let store = Store::open(cfg).map_err(|e| format!("{e:#}"))?;
+    match action {
+        "stats" => {
+            let s = store.stats();
+            println!("cache dir : {}", store.dir().display());
+            if let Some(h) = store.meta("manifest_hash") {
+                println!("manifest  : {h}");
+            }
+            let mut t = Table::new(&["namespace", "entries", "bytes"]);
+            for ns in &s.namespaces {
+                t.row(vec![ns.namespace.clone(), ns.entries.to_string(), fmt_bytes(ns.bytes)]);
+            }
+            t.row(vec![
+                "total".into(),
+                s.entries.to_string(),
+                match requested_max_bytes {
+                    Some(cap) => format!("{} (cap {})", fmt_bytes(s.bytes), fmt_bytes(cap)),
+                    None => fmt_bytes(s.bytes),
+                },
+            ]);
+            t.print();
+        }
+        "gc" => {
+            let r = store.gc().map_err(|e| format!("{e:#}"))?;
+            println!(
+                "gc: dropped {} missing entries, removed {} orphan files, evicted {} to caps",
+                r.dropped_missing, r.removed_orphans, r.evicted
+            );
+        }
+        "clear" => {
+            let n = store.clear(args.get("namespace"));
+            match args.get("namespace") {
+                Some(ns) => println!("cleared {n} entries from namespace '{ns}'"),
+                None => println!("cleared {n} entries"),
+            }
+        }
+        other => return Err(format!("unknown cache action '{other}' (stats|gc|clear)")),
+    }
     Ok(())
 }
 

@@ -8,6 +8,7 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::cache::Cache;
 use crate::coordinator::Coordinator;
 use crate::runtime::{Input, Runtime, Tensor};
 use crate::scheduler::{make_sampler, NoiseSchedule};
@@ -139,6 +140,26 @@ impl<'a> Calibrator<'a> {
             *v *= inv;
         }
         Ok(analyse(raw, noise_raw, steps, prompts.len()))
+    }
+
+    /// Cache-aware calibration: a warm start returns the stored report
+    /// (content-addressed on manifest digest + steps + prompts +
+    /// guidance) without running a single trajectory; a cold start runs
+    /// [`Calibrator::run`] and populates the store. The boolean is true
+    /// on a cache hit.
+    pub fn run_cached(
+        &self,
+        cache: &Cache,
+        prompts: &[String],
+        steps: usize,
+        guidance: f32,
+    ) -> Result<(CalibrationReport, bool)> {
+        if let Some(rep) = cache.get_calibration(steps, prompts, guidance) {
+            return Ok((rep, true));
+        }
+        let rep = self.run(prompts, steps, guidance)?;
+        cache.put_calibration(steps, prompts, guidance, &rep)?;
+        Ok((rep, false))
     }
 }
 

@@ -1,7 +1,7 @@
 //! Phase-aware sampling plans (Sec. III-B, Fig. 5).
 
 /// What to execute at one denoising timestep.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StepAction {
     /// Complete U-Net; refreshes the feature cache.
     Full,
@@ -10,7 +10,7 @@ pub enum StepAction {
 }
 
 /// The paper's hyper-parameter set (Fig. 5 top).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PasConfig {
     /// Duration of the sketching phase (must be >= D*).
     pub t_sketch: usize,
@@ -85,18 +85,27 @@ impl PasConfig {
 }
 
 /// What a generation request asks the coordinator to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// Derives `Hash`/`Ord` so it can sit inside the structured
+/// `coordinator::BatchKey` and feed cache-key derivation directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum SamplingPlan {
     /// Original model: complete U-Net every step.
     Full,
     /// Phase-aware sampling with the given config.
     Pas(PasConfig),
+    /// "Pick the best known plan for me": resolved against the persistent
+    /// plan cache (`cache::Cache::best_plan`) by
+    /// `Coordinator::resolve_plan` before batching/keying. An Auto plan
+    /// that reaches execution unresolved degrades to `Full` — correct,
+    /// just without the MAC savings.
+    Auto,
 }
 
 impl SamplingPlan {
     pub fn actions(&self, total_steps: usize) -> Vec<StepAction> {
         match self {
-            SamplingPlan::Full => vec![StepAction::Full; total_steps],
+            SamplingPlan::Full | SamplingPlan::Auto => vec![StepAction::Full; total_steps],
             SamplingPlan::Pas(cfg) => cfg.plan(total_steps),
         }
     }
@@ -198,6 +207,11 @@ mod tests {
     fn full_plan_sampling() {
         let p = SamplingPlan::Full.actions(5);
         assert_eq!(p, vec![Full; 5]);
+    }
+
+    #[test]
+    fn unresolved_auto_degrades_to_full() {
+        assert_eq!(SamplingPlan::Auto.actions(4), vec![Full; 4]);
     }
 
     #[test]

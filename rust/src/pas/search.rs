@@ -4,6 +4,7 @@
 
 use anyhow::Result;
 
+use crate::cache::{Cache, PlanFront};
 use crate::coordinator::{Coordinator, GenRequest};
 use crate::pas::calibrate::CalibrationReport;
 use crate::pas::cost::CostModel;
@@ -138,6 +139,55 @@ impl<'a> Searcher<'a> {
         }
         validated.sort_by(|a, b| b.mac_reduction.partial_cmp(&a.mac_reduction).unwrap());
         Ok(validated)
+    }
+
+    /// Cache-aware search: the searched front for this (manifest, steps,
+    /// quality target, validation prompts, calibration outcome) cell is
+    /// reused on warm starts; cold starts run the Fig. 7 pipeline and —
+    /// only when the result actually satisfies the quality floor — store
+    /// the front plus the per-steps best-plan summary that
+    /// `SamplingPlan::Auto` resolution reads. The fallback ranking that
+    /// [`Searcher::search`] returns when nothing passes validation is
+    /// deliberately NOT cached: it exists so the caller can relax
+    /// constraints, and publishing it would hand quality-failed configs
+    /// to every future `Auto` request. The boolean is true on a cache
+    /// hit.
+    pub fn search_cached(
+        &self,
+        cache: &Cache,
+        report: &CalibrationReport,
+        cons: &SearchConstraints,
+        validation_prompts: &[String],
+    ) -> Result<(Vec<Candidate>, bool)> {
+        if let Some(front) =
+            cache.get_plan_front(cons, validation_prompts, report.d_star, &report.outliers)
+        {
+            return Ok((front.candidates, true));
+        }
+        let cands = self.search(report, cons, validation_prompts)?;
+        let passed_quality = match cons.min_psnr_db {
+            // No floor requested: the MAC-ranked enumeration is the answer.
+            None => true,
+            // With a floor, `search` returns either the all-passing
+            // validated set or the unvalidated fallback ranking.
+            Some(floor) => {
+                !cands.is_empty()
+                    && cands
+                        .iter()
+                        .all(|c| c.validated && c.psnr_db.map_or(false, |p| p >= floor))
+            }
+        };
+        if passed_quality {
+            let front = PlanFront {
+                total_steps: cons.total_steps,
+                min_mac_reduction: cons.min_mac_reduction,
+                min_psnr_db: cons.min_psnr_db,
+                d_star: report.d_star,
+                candidates: cands.clone(),
+            };
+            cache.put_plan_front(cons, validation_prompts, report.d_star, &report.outliers, &front)?;
+        }
+        Ok((cands, false))
     }
 }
 

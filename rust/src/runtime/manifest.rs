@@ -64,6 +64,10 @@ pub struct ArtifactMeta {
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// FNV-1a digest of the raw manifest text. Anchors every cache key:
+    /// rebuilding artifacts changes the digest, which flushes the cache
+    /// namespaces instead of serving stale plans/latents.
+    pub hash: u64,
     pub model: ModelMeta,
     pub batch_sizes: Vec<usize>,
     pub vocab: BTreeMap<String, i32>,
@@ -82,6 +86,7 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
+        let hash = crate::cache::key::fnv1a(text.as_bytes());
         let j = Json::parse(&text).context("parsing manifest.json")?;
 
         let m = j.req("model").map_err(|e| anyhow!("{e}"))?;
@@ -197,6 +202,7 @@ impl Manifest {
 
         Ok(Manifest {
             dir: dir.to_path_buf(),
+            hash,
             model,
             batch_sizes,
             vocab,
@@ -277,6 +283,23 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.tokenize("RED circle"), vec![1, 9, 0, 0]);
         assert_eq!(m.tokenize("unknown words here everywhere extra"), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn manifest_hash_tracks_content() {
+        let dir = std::env::temp_dir().join("sdacc_manifest_hash_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), tiny_manifest_json()).unwrap();
+        let h1 = Manifest::load(&dir).unwrap().hash;
+        let h1_again = Manifest::load(&dir).unwrap().hash;
+        assert_eq!(h1, h1_again, "digest is deterministic");
+        // Any byte change (e.g. a retrained seed) moves the digest.
+        std::fs::write(
+            dir.join("manifest.json"),
+            tiny_manifest_json().replace("\"seed\":42", "\"seed\":43"),
+        )
+        .unwrap();
+        assert_ne!(Manifest::load(&dir).unwrap().hash, h1);
     }
 
     #[test]

@@ -8,16 +8,21 @@ pub struct Batcher<P: BatchItem> {
     /// Supported batch sizes, ascending.
     sizes: Vec<usize>,
     max_wait: Duration,
-    queues: BTreeMap<String, Vec<(Instant, P)>>,
+    queues: BTreeMap<P::Key, Vec<(Instant, P)>>,
 }
 
-/// Anything with a batching key.
+/// Anything with a batching key. The key is a structured `Ord` type
+/// (the server uses `coordinator::BatchKey`), not a formatted string.
 pub trait BatchItem {
-    fn key(&self) -> String;
+    type Key: Ord + Clone;
+
+    fn key(&self) -> Self::Key;
 }
 
 impl BatchItem for super::Pending {
-    fn key(&self) -> String {
+    type Key = crate::coordinator::BatchKey;
+
+    fn key(&self) -> Self::Key {
         self.req.batch_key()
     }
 }
@@ -109,6 +114,8 @@ mod tests {
     struct Item(String);
 
     impl BatchItem for Item {
+        type Key = String;
+
         fn key(&self) -> String {
             self.0.clone()
         }

@@ -13,6 +13,9 @@ pub struct Metrics {
     errors: AtomicU64,
     batched_requests: AtomicU64,
     batches: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
     latencies_ms: Mutex<Vec<f64>>,
 }
 
@@ -26,6 +29,12 @@ pub struct Summary {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub mean_ms: f64,
+    /// Requests served straight from the persistent request cache.
+    pub cache_hits: u64,
+    /// Requests that consulted the cache and missed (generated normally).
+    pub cache_misses: u64,
+    /// Entries evicted from the cache while this server was inserting.
+    pub cache_evictions: u64,
 }
 
 impl Metrics {
@@ -48,6 +57,20 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Request served from the persistent cache (no generation ran).
+    pub fn on_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record evictions performed by a cache insert.
+    pub fn on_cache_evictions(&self, n: usize) {
+        self.cache_evictions.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     pub fn summary(&self) -> Summary {
         let lats = self.latencies_ms.lock().unwrap().clone();
         Summary {
@@ -65,6 +88,9 @@ impl Metrics {
             p50_ms: stats::percentile(&lats, 50.0),
             p95_ms: stats::percentile(&lats, 95.0),
             mean_ms: stats::mean(&lats),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
         }
     }
 }
@@ -91,5 +117,19 @@ mod tests {
         assert!(s.p50_ms >= 10.0 && s.p50_ms <= 19.0);
         assert!(s.p95_ms >= s.p50_ms);
         assert!((s.mean_batch_size - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_counters_aggregate() {
+        let m = Metrics::default();
+        m.on_cache_hit();
+        m.on_cache_hit();
+        m.on_cache_miss();
+        m.on_cache_evictions(3);
+        m.on_cache_evictions(0);
+        let s = m.summary();
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.cache_evictions, 3);
     }
 }

@@ -6,6 +6,12 @@
 //! when a full batch of the largest compiled size is available or when
 //! the oldest queued request exceeds `max_wait`. This is the vLLM-router
 //! pattern scaled to PJRT-CPU executables.
+//!
+//! With a [`cache::Cache`](crate::cache::Cache) configured, `Auto` plans
+//! are resolved against the plan store and the request cache is consulted
+//! *before* enqueueing: a repeated identical request returns its stored
+//! latent without touching the batcher or a worker, and hit/miss/eviction
+//! counters surface in [`metrics::Metrics`].
 
 pub mod batcher;
 pub mod metrics;
@@ -17,6 +23,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::cache::Cache;
 use crate::coordinator::{Coordinator, GenRequest, GenResult};
 use batcher::Batcher;
 use metrics::Metrics;
@@ -34,11 +41,13 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Max time the batcher holds a request hoping to fill a batch.
     pub max_wait: Duration,
+    /// Persistent result/plan cache; `None` disables caching.
+    pub cache: Option<Arc<Cache>>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { workers: 2, max_wait: Duration::from_millis(50) }
+        ServerConfig { workers: 2, max_wait: Duration::from_millis(50), cache: None }
     }
 }
 
@@ -46,12 +55,28 @@ impl Default for ServerConfig {
 #[derive(Clone)]
 pub struct Client {
     tx: mpsc::Sender<Pending>,
+    coord: Arc<Coordinator>,
+    cache: Option<Arc<Cache>>,
+    metrics: Arc<Metrics>,
 }
 
 impl Client {
     /// Submit a request; returns a receiver for the result.
+    ///
+    /// `Auto` plans are resolved against the plan store first (so batch
+    /// and cache keys see a concrete plan), then the request cache is
+    /// checked: a hit answers immediately without enqueueing.
     pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<Result<GenResult>> {
         let (tx, rx) = mpsc::channel();
+        let req = self.coord.resolve_plan(&req, self.cache.as_deref());
+        if let Some(cache) = &self.cache {
+            if let Some(hit) = cache.get_result(&req) {
+                self.metrics.on_cache_hit();
+                let _ = tx.send(Ok(hit));
+                return rx;
+            }
+            self.metrics.on_cache_miss();
+        }
         let _ = self.tx.send(Pending { req, enqueued: Instant::now(), resp: tx });
         rx
     }
@@ -130,6 +155,7 @@ impl Server {
             let work_rx = Arc::clone(&work_rx);
             let coord = Arc::clone(&coord);
             let metrics = Arc::clone(&metrics);
+            let cache = cfg.cache.clone();
             threads.push(
                 thread::Builder::new()
                     .name(format!("sd-acc-gen-{i}"))
@@ -150,6 +176,15 @@ impl Server {
                             Ok(results) => {
                                 let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
                                 metrics.on_batch(reqs.len());
+                                // Populate the request cache (best-effort;
+                                // a full disk must not fail the request).
+                                if let Some(cache) = &cache {
+                                    for (req, r) in reqs.iter().zip(&results) {
+                                        if let Ok(evicted) = cache.put_result(req, r) {
+                                            metrics.on_cache_evictions(evicted);
+                                        }
+                                    }
+                                }
                                 for ((p, r), q_ms) in
                                     batch.into_iter().zip(results).zip(queue_ms)
                                 {
@@ -170,7 +205,13 @@ impl Server {
             );
         }
 
-        Server { client: Client { tx }, shutdown, threads, metrics }
+        let client = Client {
+            tx,
+            coord,
+            cache: cfg.cache.clone(),
+            metrics: Arc::clone(&metrics),
+        };
+        Server { client, shutdown, threads, metrics }
     }
 
     pub fn client(&self) -> Client {
@@ -182,7 +223,7 @@ impl Server {
         // Dropping our client sender closes the queue once clones die;
         // signal the batcher explicitly and join.
         self.shutdown.store(true, Ordering::Relaxed);
-        let Client { tx } = self.client;
+        let Client { tx, .. } = self.client;
         drop(tx);
         for t in self.threads.drain(..) {
             let _ = t.join();

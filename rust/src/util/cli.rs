@@ -88,6 +88,13 @@ impl Args {
             .transpose()
     }
 
+    /// u64 accessor (byte counts — e.g. the cache `--max-bytes` knob).
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")))
+            .transpose()
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -159,5 +166,13 @@ mod tests {
     fn bad_number_is_error() {
         let a = Args::parse(&sv(&["--steps", "abc"]), &spec()).unwrap();
         assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn u64_accessor_parses_byte_counts() {
+        let a = Args::parse(&sv(&["--steps", "268435456"]), &spec()).unwrap();
+        assert_eq!(a.get_u64("steps").unwrap(), Some(268_435_456));
+        let bad = Args::parse(&sv(&["--steps", "-1"]), &spec()).unwrap();
+        assert!(bad.get_u64("steps").is_err());
     }
 }

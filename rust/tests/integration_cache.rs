@@ -1,0 +1,158 @@
+//! Integration: the persistent cache across process-lifecycle events.
+//!
+//! Unlike the serving tests these need no AOT artifacts — the store and
+//! codecs are pure host code — so they always run: write all three
+//! namespaces, drop the store, reopen, read everything back; verify the
+//! byte cap holds under pressure; verify a manifest change flushes.
+
+use std::path::PathBuf;
+
+use sd_acc::cache::{Cache, PlanFront, Store, StoreConfig};
+use sd_acc::coordinator::{GenRequest, GenResult, GenStats};
+use sd_acc::pas::calibrate::analyse;
+use sd_acc::pas::plan::{PasConfig, SamplingPlan, StepAction};
+use sd_acc::pas::search::{Candidate, SearchConstraints};
+use sd_acc::runtime::Tensor;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sdacc_itcache_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sample_result(seed: f32) -> GenResult {
+    GenResult {
+        latent: Tensor::new(vec![8, 4], (0..32).map(|i| seed + i as f32 * 0.25).collect())
+            .unwrap(),
+        stats: GenStats {
+            actions: vec![StepAction::Full, StepAction::Partial(2), StepAction::Partial(2)],
+            step_ms: vec![20.0, 6.5, 6.25],
+            mac_reduction: 2.2,
+            total_ms: 32.75,
+        },
+    }
+}
+
+#[test]
+fn all_three_namespaces_survive_restart() {
+    let dir = tmp_dir("restart");
+    const MANIFEST: u64 = 0x5d_acc;
+
+    let prompts = vec!["red circle x4 y4".to_string(), "green stripe x8 y8".to_string()];
+    let raw: Vec<Vec<f64>> = (0..12)
+        .map(|b| (0..24).map(|t| ((b * 7 + t) as f64 * 0.31).sin().abs()).collect())
+        .collect();
+    let report = analyse(raw, vec![0.4; 25], 25, 2);
+
+    let cons = SearchConstraints { total_steps: 25, ..Default::default() };
+    let front = PlanFront {
+        total_steps: 25,
+        min_mac_reduction: cons.min_mac_reduction,
+        min_psnr_db: cons.min_psnr_db,
+        d_star: report.d_star,
+        candidates: vec![Candidate {
+            cfg: PasConfig { t_sketch: 13, t_complete: 3, t_sparse: 4, l_sketch: 2, l_refine: 2 },
+            mac_reduction: 2.6,
+            psnr_db: Some(15.5),
+            validated: true,
+        }],
+    };
+
+    let mut req = GenRequest::new("blue square x3 y9", 55);
+    req.steps = 25;
+    let result = sample_result(1.5);
+
+    // Session 1: populate, then drop (flushes the index).
+    {
+        let cache = Cache::open(StoreConfig::new(&dir), MANIFEST).unwrap();
+        cache.put_calibration(25, &prompts, 7.5, &report).unwrap();
+        cache
+            .put_plan_front(&cons, &prompts, report.d_star, &report.outliers, &front)
+            .unwrap();
+        cache.put_result(&req, &result).unwrap();
+    }
+
+    // Session 2 (fresh process state): everything reads back.
+    let cache = Cache::open(StoreConfig::new(&dir), MANIFEST).unwrap();
+    let rep = cache.get_calibration(25, &prompts, 7.5).expect("calibration survives");
+    assert_eq!(rep.d_star, report.d_star);
+    assert_eq!(rep.scores, report.scores);
+
+    let got = cache
+        .get_plan_front(&cons, &prompts, report.d_star, &report.outliers)
+        .expect("plan front survives");
+    assert_eq!(got.candidates.len(), 1);
+    assert_eq!(got.candidates[0].cfg, front.candidates[0].cfg);
+    assert_eq!(got.candidates[0].psnr_db, Some(15.5));
+
+    // The Auto-resolution summary survives too.
+    assert_eq!(cache.best_plan(25), Some(front.candidates[0].cfg));
+
+    let res = cache.get_result(&req).expect("gen result survives");
+    assert_eq!(res.latent.data, result.latent.data);
+    assert_eq!(res.stats.actions, result.stats.actions);
+
+    // Requests that differ in any key field stay distinct.
+    let mut other = req.clone();
+    other.plan = SamplingPlan::Pas(front.candidates[0].cfg);
+    assert!(cache.get_result(&other).is_none());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn eviction_respects_byte_cap_and_reopen_keeps_it() {
+    let dir = tmp_dir("cap");
+    let cap: u64 = 4096;
+    {
+        let cache = Cache::open(StoreConfig::new(&dir).with_max_bytes(cap), 1).unwrap();
+        for seed in 0..40 {
+            let mut req = GenRequest::new("prompt under pressure", seed);
+            req.steps = 25;
+            cache.put_result(&req, &sample_result(seed as f32)).unwrap();
+            assert!(cache.stats().bytes <= cap, "cap breached at seed {seed}");
+        }
+        let s = cache.stats();
+        assert!(s.evictions > 0, "byte cap must have forced evictions");
+        assert!(s.entries > 0, "some entries retained");
+    }
+    // Reopen under the same cap: still within it, newest entries present.
+    let cache = Cache::open(StoreConfig::new(&dir).with_max_bytes(cap), 1).unwrap();
+    assert!(cache.stats().bytes <= cap);
+    let mut newest = GenRequest::new("prompt under pressure", 39);
+    newest.steps = 25;
+    assert!(cache.get_result(&newest).is_some(), "most recent entry survives");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_rebuild_flushes_but_same_manifest_keeps() {
+    let dir = tmp_dir("manifest");
+    let req = GenRequest::new("x", 1);
+    {
+        let cache = Cache::open(StoreConfig::new(&dir), 100).unwrap();
+        cache.put_result(&req, &sample_result(0.0)).unwrap();
+    }
+    {
+        let cache = Cache::open(StoreConfig::new(&dir), 100).unwrap();
+        assert!(cache.get_result(&req).is_some(), "same manifest: warm");
+    }
+    let cache = Cache::open(StoreConfig::new(&dir), 101).unwrap();
+    assert!(cache.get_result(&req).is_none(), "new manifest: flushed");
+    assert_eq!(cache.stats().entries, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn raw_store_recovers_from_index_loss() {
+    let dir = tmp_dir("indexloss");
+    {
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        store.put("request", sd_acc::cache::CacheKey(77), "{\"dims\":[1],\"latent\":[0]}")
+            .unwrap();
+    }
+    std::fs::remove_file(dir.join("index.json")).unwrap();
+    let store = Store::open(StoreConfig::new(&dir)).unwrap();
+    assert!(store.get("request", sd_acc::cache::CacheKey(77)).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -34,7 +34,7 @@ fn serves_concurrent_requests_with_batching() {
     let Some(coord) = coord_or_skip() else { return };
     let server = Server::start(
         Arc::clone(&coord),
-        ServerConfig { workers: 2, max_wait: Duration::from_millis(30) },
+        ServerConfig { workers: 2, max_wait: Duration::from_millis(30), ..Default::default() },
     );
     let client = server.client();
 
@@ -70,6 +70,51 @@ fn server_result_matches_direct_coordinator() {
     let d = sd_acc::util::stats::l2_dist(&served.latent.data, &direct.latent.data);
     let n = sd_acc::util::stats::l2_norm(&direct.latent.data);
     assert!(d / n < 2e-3, "served != direct: rel {}", d / n);
+}
+
+#[test]
+fn repeated_request_served_from_request_cache() {
+    let Some(coord) = coord_or_skip() else { return };
+    let dir = std::env::temp_dir()
+        .join(format!("sdacc_server_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = Arc::new(
+        sd_acc::cache::Cache::open(sd_acc::cache::StoreConfig::new(&dir), coord.manifest_hash())
+            .unwrap(),
+    );
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig { cache: Some(Arc::clone(&cache)), ..Default::default() },
+    );
+    let client = server.client();
+
+    let first = client.generate(req("cyan stripe x6 y6", 321)).unwrap();
+    let again = client.generate(req("cyan stripe x6 y6", 321)).unwrap();
+    assert_eq!(first.latent.data, again.latent.data, "hit replays the stored latent");
+
+    let m = server.metrics.summary();
+    assert_eq!(m.cache_hits, 1, "second submission hits");
+    assert_eq!(m.cache_misses, 1, "first submission misses");
+    assert_eq!(m.completed, 1, "only one generation actually ran");
+
+    // A different seed is a different key.
+    let _ = client.generate(req("cyan stripe x6 y6", 322)).unwrap();
+    let m = server.metrics.summary();
+    assert_eq!(m.cache_hits, 1);
+    assert_eq!(m.cache_misses, 2);
+    server.shutdown();
+
+    // The cache outlives the server: a fresh server over the same store
+    // starts warm.
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig { cache: Some(cache), ..Default::default() },
+    );
+    let warm = server.client().generate(req("cyan stripe x6 y6", 321)).unwrap();
+    assert_eq!(warm.latent.data, first.latent.data);
+    assert_eq!(server.metrics.summary().cache_hits, 1);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,164 @@
+//! Minimal in-tree stand-in for the `anyhow` crate (offline build: the
+//! container has no crates.io access, so external deps are vendored as
+//! API-compatible subsets — see rust/Cargo.toml).
+//!
+//! Implements exactly the surface this repo uses: [`Error`] (a boxed
+//! message with a context chain), [`Result`], the [`anyhow!`] / [`bail!`]
+//! format macros, and the [`Context`] extension trait for `Result` and
+//! `Option`. Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error`, which is what allows the blanket
+//! `From<E: std::error::Error>` conversion to coexist with the reflexive
+//! `From<Error>` used by `?`.
+
+use std::fmt;
+
+/// A type-erased error: a message plus the chain of contexts wrapped
+/// around it, rendered innermost-last ("ctx: cause").
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The real anyhow prints the full chain under `{:#}`; our chain
+        // is pre-joined, so both forms render identically.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string or any displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($msg:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($msg, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        assert_eq!(format!("{e:#}"), "bad value 42");
+        assert_eq!(format!("{e:?}"), "bad value 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading weights").unwrap_err();
+        assert_eq!(e.to_string(), "reading weights: disk on fire");
+        let r2: Result<(), Error> = Err(e);
+        let e2 = r2.with_context(|| "loading artifact").unwrap_err();
+        assert_eq!(e2.to_string(), "loading artifact: reading weights: disk on fire");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing key").unwrap_err().to_string(), "missing key");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn expression_form_accepts_non_literals() {
+        let msg = String::from("owned message");
+        assert_eq!(anyhow!(msg.clone()).to_string(), "owned message");
+        assert_eq!(anyhow!(msg).to_string(), "owned message");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope ({fail})");
+            }
+            Ok(1)
+        }
+        assert!(inner(false).is_ok());
+        assert_eq!(inner(true).unwrap_err().to_string(), "nope (true)");
+    }
+}

@@ -28,6 +28,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== quant bench (smoke) =="
+# Cheap precision-sweep pass: asserts the precision-scaled cost model's
+# acceptance bands (W8A8 >= 3x energy vs fp32, monotone quality/traffic)
+# so regressions fail CI, not just the full bench run.
+cargo bench --bench bench_quant -- --smoke
+
 if [ "$run_fmt" = 1 ]; then
     echo "== cargo fmt --check =="
     # Formatting drift fails CI only when rustfmt is installed.

@@ -1,0 +1,73 @@
+//! Mixed-precision walkthrough: calibrate -> search -> report, mirroring
+//! `hwsim_explore.rs`. Runs without artifacts (synthetic calibration +
+//! pure simulator).
+//!
+//! Run: `cargo run --release --example quant_explore`
+
+use sd_acc::hwsim::arch::{AccelConfig, Policy};
+use sd_acc::hwsim::engine::simulate_unet_step_quant;
+use sd_acc::models::inventory::{sd_v14, unet_ops};
+use sd_acc::quant::{
+    assign, predicted_psnr_db, search, synthetic_profile, QuantConstraints, QuantScheme,
+};
+use sd_acc::util::table::{f, ratio, Table};
+
+fn main() {
+    let arch = sd_v14();
+    let ops = unet_ops(&arch);
+    let cfg = AccelConfig::default();
+    let policy = Policy::optimized();
+
+    // 1. Calibrate: deterministic activation ranges per paper block.
+    println!("== 1. calibrate (synthetic ranges, {} ops -> per-block entries) ==", ops.len());
+    let profile = synthetic_profile(&arch, 50);
+    let mut t = Table::new(&["tensor", "absmax", "p99", "drf"]);
+    for name in ["down2", "down2.tf", "mid", "mid.tf", "up1"] {
+        let r = profile.range_for(name).expect(name);
+        t.row(vec![
+            name.to_string(),
+            f(r.absmax as f64, 2),
+            f(r.p99 as f64, 2),
+            f(profile.drf(name), 2),
+        ]);
+    }
+    t.print();
+    println!("(attention `.tf` tensors carry heavy tails -> high dynamic-range factor)\n");
+
+    // 2. Search: quality-gated Pareto front over bit-width schemes.
+    for target in [30.0, 15.0] {
+        println!("== 2. search (quality target {target} dB) ==");
+        let cons = QuantConstraints { min_psnr_db: target, pin_fragile: true };
+        let front = search(&ops, &cfg, policy, &cons, Some(&profile));
+        let mut t = Table::new(&["scheme", "PSNR proxy (dB)", "energy/step (J)", "vs fp32", "pinned"]);
+        for c in &front {
+            t.row(vec![
+                c.scheme.label(),
+                f(c.psnr_db, 1),
+                f(c.energy_j, 2),
+                ratio(c.energy_reduction),
+                c.pinned.to_string(),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    // 3. Report: the chosen precision in full hwsim detail.
+    let scheme = QuantScheme::w8a8();
+    println!("== 3. report ({} at the optimized policy) ==", scheme.label());
+    let base = simulate_unet_step_quant(&cfg, policy, &ops, &assign(&ops, QuantScheme::fp32(), false));
+    let plan = assign(&ops, scheme, true);
+    let r = simulate_unet_step_quant(&cfg, policy, &ops, &plan);
+    let mut t = Table::new(&["metric", "fp32", "W8A8", "reduction"]);
+    t.row(vec!["step time (s)".into(), f(base.seconds(&cfg), 3), f(r.seconds(&cfg), 3), ratio(base.seconds(&cfg) / r.seconds(&cfg))]);
+    t.row(vec!["traffic (GB)".into(), f(base.traffic_bytes / 1e9, 2), f(r.traffic_bytes / 1e9, 2), ratio(base.traffic_bytes / r.traffic_bytes)]);
+    t.row(vec!["energy (J)".into(), f(base.energy_j(&cfg), 2), f(r.energy_j(&cfg), 2), ratio(base.energy_j(&cfg) / r.energy_j(&cfg))]);
+    t.print();
+    println!(
+        "PSNR proxy at W8A8 (fragile layers pinned to fp16): {} dB",
+        f(predicted_psnr_db(&ops, &plan, Some(&profile)), 1)
+    );
+    println!("\n(next: `sd-acc quant calibrate --artifacts <dir>` measures real ranges,");
+    println!(" and `sd-acc generate --quant w8a8` runs the emulated datapath end to end)");
+}

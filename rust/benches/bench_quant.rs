@@ -1,0 +1,176 @@
+//! Mixed-precision sweep: fp32 -> fp16 -> W8A8 -> W4A8 over the real
+//! SD v1.4 inventory and the runnable sd-tiny model, reporting effective
+//! MAC, DRAM-traffic and energy reduction plus the latent-PSNR quality
+//! proxy, and writing a machine-readable `BENCH_quant.json` at the repo
+//! root to anchor the perf trajectory.
+//!
+//! `--smoke` (used by ci.sh) skips the wall-clock timing loops and the
+//! repo-root artifact write but still computes every table and enforces
+//! the acceptance bands, so a regression in the precision-scaled cost
+//! model fails CI rather than only the full bench run (and CI leaves no
+//! untracked files behind).
+
+use std::path::Path;
+
+use sd_acc::hwsim::arch::{AccelConfig, Policy};
+use sd_acc::hwsim::engine::simulate_unet_step_quant;
+use sd_acc::models::inventory::{sd_tiny, sd_v14, unet_ops, UNetArch};
+use sd_acc::quant::{assign, predicted_psnr_db, QuantScheme};
+use sd_acc::util::bench::Bench;
+use sd_acc::util::json::Json;
+use sd_acc::util::table::{f, ratio, Table};
+
+struct Row {
+    scheme: QuantScheme,
+    macs_eff: f64,
+    traffic_bytes: f64,
+    energy_j: f64,
+    energy_reduction: f64,
+    psnr_db: f64,
+}
+
+fn sweep(arch: &UNetArch, cfg: &AccelConfig, policy: Policy) -> Vec<Row> {
+    let ops = unet_ops(arch);
+    let native_bits = (cfg.dtype_bytes * 8) as f64;
+    let schemes = [
+        QuantScheme::fp32(),
+        QuantScheme::fp16(),
+        QuantScheme::w8a8(),
+        QuantScheme::w4a8(),
+    ];
+    let base_energy = {
+        let plan = assign(&ops, QuantScheme::fp32(), false);
+        simulate_unet_step_quant(cfg, policy, &ops, &plan).energy_j(cfg)
+    };
+    schemes
+        .iter()
+        .map(|&scheme| {
+            let plan = assign(&ops, scheme, true);
+            let r = simulate_unet_step_quant(cfg, policy, &ops, &plan);
+            // Effective MACs from the PINNED plan (fragile layers run at
+            // fp16), so the column agrees with the simulated traffic and
+            // energy rather than the uniform scheme's width.
+            let macs_eff: f64 = ops
+                .iter()
+                .zip(&plan)
+                .map(|(op, p)| op.kind.macs() as f64 * 2.0 * p.mac_bits() as f64 / native_bits)
+                .sum();
+            Row {
+                scheme,
+                macs_eff,
+                traffic_bytes: r.traffic_bytes,
+                energy_j: r.energy_j(cfg),
+                energy_reduction: base_energy / r.energy_j(cfg),
+                psnr_db: predicted_psnr_db(&ops, &plan, None),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let cfg = AccelConfig::default();
+    let policy = Policy::optimized();
+    let models = [sd_v14(), sd_tiny()];
+
+    let mut json_models = Vec::new();
+    for arch in &models {
+        println!("== precision sweep: {} (optimized policy, CFG x2 step) ==", arch.name);
+        let rows = sweep(arch, &cfg, policy);
+        let mut t = Table::new(&[
+            "scheme", "eff MACs (G)", "traffic (GB)", "energy (J)", "vs fp32", "PSNR proxy (dB)",
+        ]);
+        for r in &rows {
+            t.row(vec![
+                r.scheme.label(),
+                f(r.macs_eff / 1e9, 1),
+                f(r.traffic_bytes / 1e9, 3),
+                f(r.energy_j, 2),
+                ratio(r.energy_reduction),
+                f(r.psnr_db, 1),
+            ]);
+        }
+        t.print();
+        println!();
+
+        // Acceptance bands — the precision-scaled cost model must keep
+        // modelling the headline wins, on every model.
+        let get = |s: QuantScheme| rows.iter().find(|r| r.scheme == s).unwrap();
+        let w8 = get(QuantScheme::w8a8());
+        let w48 = get(QuantScheme::w4a8());
+        let f16 = get(QuantScheme::fp16());
+        assert!(
+            w8.energy_reduction >= 3.0,
+            "{}: W8A8 energy reduction {:.2}x < 3x",
+            arch.name,
+            w8.energy_reduction
+        );
+        assert!(
+            f16.psnr_db > w8.psnr_db && w8.psnr_db > w48.psnr_db,
+            "{}: PSNR proxy must degrade with aggressiveness",
+            arch.name
+        );
+        assert!(
+            f16.traffic_bytes > w8.traffic_bytes && w8.traffic_bytes > w48.traffic_bytes,
+            "{}: traffic must shrink with operand bytes",
+            arch.name
+        );
+        assert!(
+            w48.energy_reduction > w8.energy_reduction,
+            "{}: W4A8 must beat W8A8 on energy",
+            arch.name
+        );
+
+        json_models.push(Json::obj(vec![
+            ("model", Json::str(arch.name)),
+            (
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("scheme", Json::str(&r.scheme.label())),
+                                ("eff_macs", Json::num(r.macs_eff)),
+                                ("traffic_bytes", Json::num(r.traffic_bytes)),
+                                ("energy_j", Json::num(r.energy_j)),
+                                ("energy_reduction", Json::num(r.energy_reduction)),
+                                ("psnr_proxy_db", Json::num(r.psnr_db)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+
+    if smoke {
+        // Smoke mode is a CI assertion pass only — no repo-root artifact
+        // write, no timing loops.
+        println!("bench_quant --smoke: all acceptance bands hold");
+        return;
+    }
+
+    // Machine-readable trailer at the repo root (the perf trajectory).
+    let doc = Json::obj(vec![
+        ("bench", Json::str("quant_precision_sweep")),
+        ("policy", Json::str("optimized")),
+        ("models", Json::Arr(json_models)),
+    ]);
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_quant.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => println!("could not write {}: {e}", out.display()),
+    }
+
+    // Full mode: time the precision-aware hot path.
+    let ops = unet_ops(&sd_v14());
+    let plan = assign(&ops, QuantScheme::w8a8(), true);
+    let mut b = Bench::default();
+    b.run("simulate_unet_step_quant(sd-v1.4, W8A8)", || {
+        std::hint::black_box(simulate_unet_step_quant(&cfg, policy, &ops, &plan));
+    });
+    b.run("assign(sd-v1.4, W8A8, pinned)", || {
+        std::hint::black_box(assign(&ops, QuantScheme::w8a8(), true));
+    });
+    b.emit_json();
+}

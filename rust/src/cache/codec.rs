@@ -13,10 +13,11 @@ use crate::coordinator::{GenResult, GenStats};
 use crate::pas::calibrate::CalibrationReport;
 use crate::pas::plan::{PasConfig, StepAction};
 use crate::pas::search::Candidate;
+use crate::quant::calibrate::QuantProfile;
 use crate::runtime::Tensor;
 use crate::util::json::Json;
 
-use super::namespaces::{NS_CALIB, NS_PLAN, NS_REQUEST};
+use super::namespaces::{NS_CALIB, NS_PLAN, NS_QUANT, NS_REQUEST};
 
 /// A value that can live in the store under a fixed namespace.
 pub trait Codec: Sized {
@@ -38,6 +39,20 @@ impl Codec for CalibrationReport {
 
     fn decode(j: &Json) -> Result<CalibrationReport> {
         CalibrationReport::from_json(j)
+    }
+}
+
+// ----------------------------------------------------------- quant profile
+
+impl Codec for QuantProfile {
+    const NAMESPACE: &'static str = NS_QUANT;
+
+    fn encode(&self) -> Json {
+        self.to_json()
+    }
+
+    fn decode(j: &Json) -> Result<QuantProfile> {
+        QuantProfile::from_json(j)
     }
 }
 
@@ -245,6 +260,17 @@ pub fn decode_text<T: Codec>(text: &str) -> Result<T> {
 mod tests {
     use super::*;
     use crate::pas::calibrate::analyse;
+
+    #[test]
+    fn quant_profile_text_roundtrip() {
+        let prof = crate::quant::calibrate::synthetic_profile(
+            &crate::models::inventory::sd_tiny(),
+            20,
+        );
+        let back: QuantProfile = decode_text(&encode_text(&prof)).unwrap();
+        assert_eq!(back, prof);
+        assert!(decode_text::<QuantProfile>("{\"model\":\"x\"}").is_err(), "missing ranges");
+    }
 
     #[test]
     fn calibration_text_roundtrip() {

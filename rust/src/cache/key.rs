@@ -11,7 +11,8 @@
 use std::fmt;
 
 /// Bump when any namespace's on-disk encoding changes shape.
-pub const CACHE_VERSION: u32 = 1;
+/// v2: request keys hash the quant scheme; `quant` namespace added.
+pub const CACHE_VERSION: u32 = 2;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x1_0000_0001_b3;

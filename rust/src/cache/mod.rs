@@ -8,12 +8,12 @@
 //!
 //! - [`key`]: structured FNV-1a keys over (manifest digest, model meta,
 //!   request/config fields) — never lossy string formatting.
-//! - [`codec`]: typed value <-> `util::json::Json` payloads for the three
-//!   namespaces (calibration reports, searched plan fronts, generation
-//!   results).
+//! - [`codec`]: typed value <-> `util::json::Json` payloads for the four
+//!   namespaces (calibration reports, searched plan fronts, quant
+//!   profiles, generation results).
 //! - [`store`]: the on-disk store — atomic write-then-rename index,
 //!   crash/corruption recovery by payload scan, hit/miss/eviction
-//!   counters.
+//!   counters, optional per-namespace TTLs.
 //! - [`evict`]: LRU + byte-cap eviction planning (pure, property-tested).
 //! - [`namespaces`]: typed keys and the [`Cache`] facade; owns the
 //!   invalidation rule (manifest hash change ⇒ namespace flush).
@@ -34,7 +34,7 @@ pub mod store;
 
 pub use codec::{Codec, PlanFront};
 pub use key::{CacheKey, KeyHasher, CACHE_VERSION};
-pub use namespaces::{Cache, NS_CALIB, NS_PLAN, NS_REQUEST};
+pub use namespaces::{Cache, NS_CALIB, NS_PLAN, NS_QUANT, NS_REQUEST};
 pub use store::{Store, StoreConfig, StoreStats};
 
 /// Default cache directory: `$SD_ACC_CACHE` or `./cache`.

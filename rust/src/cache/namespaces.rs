@@ -8,10 +8,16 @@
 //! - `plan`:    (manifest, total steps, quality target, report digest)
 //!              plus a "best plan" summary entry per (manifest, steps)
 //!              that `SamplingPlan::Auto` resolution reads
-//! - `request`: (manifest, prompt, seed, steps, sampler, guidance, plan)
+//! - `quant`:   (manifest, steps, calibration prompts, guidance) —
+//!              activation-range profiles for mixed-precision search
+//! - `request`: (manifest, prompt, seed, steps, sampler, guidance, plan,
+//!              quant scheme)
 //!
 //! Invalidation rule: a manifest-hash change on open flushes every
 //! namespace (the store records the hash it was populated under).
+//! Per-namespace TTLs are configured on the [`StoreConfig`] (default
+//! off); the `request` namespace is the intended user — generated
+//! latents age out while calibration/search artifacts persist.
 
 use anyhow::Result;
 
@@ -19,6 +25,8 @@ use crate::coordinator::{GenRequest, GenResult};
 use crate::pas::calibrate::CalibrationReport;
 use crate::pas::plan::{PasConfig, SamplingPlan};
 use crate::pas::search::SearchConstraints;
+use crate::quant::calibrate::QuantProfile;
+use crate::quant::format::QuantScheme;
 
 use super::codec::{decode_text, encode_text, Codec, PlanFront};
 use super::key::{CacheKey, KeyHasher};
@@ -26,6 +34,7 @@ use super::store::{Store, StoreConfig, StoreStats};
 
 pub const NS_CALIB: &str = "calib";
 pub const NS_PLAN: &str = "plan";
+pub const NS_QUANT: &str = "quant";
 pub const NS_REQUEST: &str = "request";
 
 /// Store-meta key recording which manifest populated the cache.
@@ -100,6 +109,33 @@ pub fn best_plan_key(manifest_hash: u64, total_steps: usize) -> CacheKey {
         .finish()
 }
 
+fn hash_quant(h: &mut KeyHasher, quant: &Option<QuantScheme>) {
+    match quant {
+        None => {
+            h.bool(false);
+        }
+        Some(s) => {
+            // Bit widths are unique per format (4/8/16/32).
+            h.bool(true).u64(s.weight.bits() as u64).u64(s.act.bits() as u64);
+        }
+    }
+}
+
+/// Quant-profile key: same cell shape as calibration reports.
+pub fn quant_key(
+    manifest_hash: u64,
+    steps: usize,
+    prompts: &[String],
+    guidance: f32,
+) -> CacheKey {
+    KeyHasher::new(NS_QUANT)
+        .u64(manifest_hash)
+        .usize(steps)
+        .str_list(prompts)
+        .f32(guidance)
+        .finish()
+}
+
 /// Request-level result key: everything that determines the latent.
 pub fn request_key(manifest_hash: u64, req: &GenRequest) -> CacheKey {
     let mut h = KeyHasher::new(NS_REQUEST);
@@ -110,6 +146,7 @@ pub fn request_key(manifest_hash: u64, req: &GenRequest) -> CacheKey {
         .str(&req.sampler)
         .f32(req.guidance);
     hash_plan(&mut h, &req.plan);
+    hash_quant(&mut h, &req.quant);
     h.finish()
 }
 
@@ -192,6 +229,27 @@ impl Cache {
         report: &CalibrationReport,
     ) -> Result<usize> {
         self.put_typed(calib_key(self.manifest_hash, steps, prompts, guidance), report)
+    }
+
+    // ------------------------------------------------------------ quant
+
+    pub fn get_quant_profile(
+        &self,
+        steps: usize,
+        prompts: &[String],
+        guidance: f32,
+    ) -> Option<QuantProfile> {
+        self.get_typed(quant_key(self.manifest_hash, steps, prompts, guidance))
+    }
+
+    pub fn put_quant_profile(
+        &self,
+        steps: usize,
+        prompts: &[String],
+        guidance: f32,
+        profile: &QuantProfile,
+    ) -> Result<usize> {
+        self.put_typed(quant_key(self.manifest_hash, steps, prompts, guidance), profile)
     }
 
     // ------------------------------------------------------------- plan
@@ -309,6 +367,12 @@ mod tests {
         let mut r = base.clone();
         r.plan = SamplingPlan::Pas(PasConfig::pas25(4));
         assert_ne!(request_key(1, &r), k0, "plan");
+        let mut r = base.clone();
+        r.quant = Some(QuantScheme::w8a8());
+        let k_w8 = request_key(1, &r);
+        assert_ne!(k_w8, k0, "quant scheme");
+        r.quant = Some(QuantScheme::w4a8());
+        assert_ne!(request_key(1, &r), k_w8, "different schemes differ");
         assert_ne!(request_key(2, &base), k0, "manifest hash");
         assert_eq!(request_key(1, &base.clone()), k0, "identical request hits");
     }
@@ -376,6 +440,56 @@ mod tests {
         let cache = Cache::open(StoreConfig::new(&dir), 2).unwrap();
         assert_eq!(cache.stats().entries, 0);
         assert!(cache.get_result(&GenRequest::new("x", 1)).is_none());
+    }
+
+    #[test]
+    fn quant_namespace_roundtrips_and_flushes_with_manifest() {
+        let dir = tmp_dir("quantns");
+        let prompts = vec!["red circle x4 y4".to_string()];
+        let prof = crate::quant::calibrate::synthetic_profile(
+            &crate::models::inventory::sd_tiny(),
+            20,
+        );
+        {
+            let cache = Cache::open(StoreConfig::new(&dir), 7).unwrap();
+            assert!(cache.get_quant_profile(20, &prompts, 7.5).is_none());
+            cache.put_quant_profile(20, &prompts, 7.5, &prof).unwrap();
+            let back = cache.get_quant_profile(20, &prompts, 7.5).unwrap();
+            assert_eq!(back, prof);
+            // Different steps / prompts are different cells.
+            assert!(cache.get_quant_profile(21, &prompts, 7.5).is_none());
+            assert!(cache
+                .get_quant_profile(20, &["other".to_string()], 7.5)
+                .is_none());
+        }
+        // Same manifest: profile survives the reopen.
+        {
+            let cache = Cache::open(StoreConfig::new(&dir), 7).unwrap();
+            assert!(cache.get_quant_profile(20, &prompts, 7.5).is_some());
+        }
+        // Manifest hash change: the quant namespace flushes with the rest.
+        let cache = Cache::open(StoreConfig::new(&dir), 8).unwrap();
+        assert!(cache.get_quant_profile(20, &prompts, 7.5).is_none());
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn request_ttl_expires_results_but_not_other_namespaces() {
+        // TTL 0 = expire immediately (the test knob); default is off.
+        let cfg = StoreConfig::new(tmp_dir("ttl")).with_ttl(NS_REQUEST, 0);
+        let cache = Cache::open(cfg, 3).unwrap();
+        let req = GenRequest::new("ephemeral", 1);
+        cache.put_result(&req, &sample_result()).unwrap();
+        cache
+            .put_calibration(20, &["p".to_string()], 7.5, &sample_report())
+            .unwrap();
+        assert!(cache.get_result(&req).is_none(), "request entry expired");
+        assert!(
+            cache.get_calibration(20, &["p".to_string()], 7.5).is_some(),
+            "calib namespace has no TTL"
+        );
+        // The expired entry is gone from the store, not just hidden.
+        assert_eq!(cache.stats().entries, 1);
     }
 
     #[test]

@@ -49,6 +49,13 @@ pub struct StoreConfig {
     pub max_bytes: u64,
     /// Hard cap on entry count.
     pub max_entries: usize,
+    /// Per-namespace time-to-live in seconds (absent = never expires,
+    /// the default). An expired entry behaves like a miss on `get` and
+    /// is removed on sight; `gc` sweeps the rest. A TTL of 0 expires
+    /// entries immediately (useful in tests). Intended user: the
+    /// `request` namespace, whose latents age out while calibration and
+    /// plan artifacts persist.
+    pub ttl_secs: BTreeMap<String, u64>,
 }
 
 impl StoreConfig {
@@ -57,6 +64,7 @@ impl StoreConfig {
             dir: dir.into(),
             max_bytes: DEFAULT_MAX_BYTES,
             max_entries: DEFAULT_MAX_ENTRIES,
+            ttl_secs: BTreeMap::new(),
         }
     }
 
@@ -69,12 +77,30 @@ impl StoreConfig {
         self.max_entries = max_entries;
         self
     }
+
+    /// Set a TTL for one namespace.
+    pub fn with_ttl(mut self, namespace: &str, ttl_secs: u64) -> StoreConfig {
+        self.ttl_secs.insert(namespace.to_string(), ttl_secs);
+        self
+    }
 }
 
 #[derive(Debug, Clone)]
 struct EntryMeta {
     bytes: u64,
     last_used: u64,
+    /// Unix seconds at insert time — the TTL anchor. Entries recovered
+    /// from a pre-TTL index or a payload scan count as created "now"
+    /// (unknown age must not mass-expire a cache on upgrade).
+    created: u64,
+}
+
+/// Wall-clock seconds since the Unix epoch.
+fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
 }
 
 struct Inner {
@@ -123,6 +149,8 @@ pub struct GcReport {
     pub removed_orphans: usize,
     /// Entries evicted to re-enforce the caps.
     pub evicted: usize,
+    /// Entries swept because their namespace TTL had elapsed.
+    pub expired: usize,
 }
 
 /// Content-addressed persistent store with LRU + byte-cap eviction.
@@ -173,11 +201,35 @@ impl Store {
         self.cfg.dir.join(ns).join(format!("{}.json", key.hex()))
     }
 
-    /// Fetch a payload; touches LRU state on hit.
+    /// True when the namespace has a TTL and the entry has outlived it.
+    fn is_expired(&self, ns: &str, meta: &EntryMeta, now: u64) -> bool {
+        self.cfg
+            .ttl_secs
+            .get(ns)
+            .map_or(false, |&ttl| now >= meta.created.saturating_add(ttl))
+    }
+
+    /// Fetch a payload; touches LRU state on hit. Entries past their
+    /// namespace TTL count as misses and are removed on sight.
     pub fn get(&self, ns: &str, key: CacheKey) -> Option<String> {
         let mut inner = self.inner.lock().unwrap();
         let map_key = (ns.to_string(), key);
-        if !inner.entries.contains_key(&map_key) {
+        let expired = match inner.entries.get(&map_key) {
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            Some(meta) => self.is_expired(ns, meta, now_unix()),
+        };
+        if expired {
+            inner.entries.remove(&map_key);
+            let _ = std::fs::remove_file(self.payload_path(ns, key));
+            // Lazily persisted (unlike structural removals): expiry can
+            // run on the request hot path, and a stale index entry whose
+            // payload is gone is already self-healed by the recovery
+            // paths, so the O(entries) index write can wait for the next
+            // batched flush.
+            inner.dirty = true;
             self.misses.fetch_add(1, Ordering::Relaxed);
             return None;
         }
@@ -220,9 +272,10 @@ impl Store {
 
         inner.clock += 1;
         let clock = inner.clock;
-        inner
-            .entries
-            .insert((ns.to_string(), key), EntryMeta { bytes: text.len() as u64, last_used: clock });
+        inner.entries.insert(
+            (ns.to_string(), key),
+            EntryMeta { bytes: text.len() as u64, last_used: clock, created: now_unix() },
+        );
         let evicted = self.evict_locked(&mut inner);
         inner.dirty = true;
         inner.pending_puts += 1;
@@ -270,10 +323,25 @@ impl Store {
         removed
     }
 
-    /// Validate index<->disk agreement and re-enforce the caps.
+    /// Validate index<->disk agreement, sweep expired entries, and
+    /// re-enforce the caps.
     pub fn gc(&self) -> Result<GcReport> {
         let mut inner = self.inner.lock().unwrap();
         let mut report = GcReport::default();
+
+        // 0. Entries past their namespace TTL.
+        let now = now_unix();
+        let expired: Vec<(String, CacheKey)> = inner
+            .entries
+            .iter()
+            .filter(|((ns, _), meta)| self.is_expired(ns, meta, now))
+            .map(|(k, _)| k.clone())
+            .collect();
+        report.expired = expired.len();
+        for (ns, key) in expired {
+            let _ = std::fs::remove_file(self.payload_path(&ns, key));
+            inner.entries.remove(&(ns, key));
+        }
 
         // 1. Index entries whose payload is gone.
         let missing: Vec<(String, CacheKey)> = inner
@@ -391,6 +459,7 @@ impl Store {
                         ("key", Json::str(&key.hex())),
                         ("bytes", Json::num(m.bytes as f64)),
                         ("last_used", Json::num(m.last_used as f64)),
+                        ("created", Json::num(m.created as f64)),
                     ])
                 })
                 .collect(),
@@ -441,6 +510,7 @@ fn load_index(path: &Path) -> Option<Inner> {
         return None;
     }
     let mut entries = BTreeMap::new();
+    let now = now_unix();
     for e in j.get("entries")?.as_arr()? {
         let ns = e.get_str("ns")?.to_string();
         let key = CacheKey::from_hex(e.get_str("key")?)?;
@@ -449,6 +519,7 @@ fn load_index(path: &Path) -> Option<Inner> {
             EntryMeta {
                 bytes: e.get_usize("bytes")? as u64,
                 last_used: e.get_usize("last_used").unwrap_or(0) as u64,
+                created: e.get_usize("created").map(|v| v as u64).unwrap_or(now),
             },
         );
     }
@@ -488,7 +559,10 @@ fn scan_payloads(dir: &Path) -> Inner {
             }
             let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
             clock += 1;
-            entries.insert((ns.clone(), key), EntryMeta { bytes, last_used: clock });
+            entries.insert(
+                (ns.clone(), key),
+                EntryMeta { bytes, last_used: clock, created: now_unix() },
+            );
         }
     }
     Inner { entries, clock, meta: BTreeMap::new(), dirty: true, pending_puts: 0 }
@@ -673,6 +747,59 @@ mod tests {
         assert!(store.get("plan", CacheKey(2)).is_some());
         assert_eq!(store.clear(None), 1);
         assert_eq!(store.stats().entries, 0);
+    }
+
+    #[test]
+    fn ttl_expires_only_configured_namespaces() {
+        // TTL 0 on "req": entries expire on the very next access.
+        let cfg = StoreConfig::new(tmp_dir("ttl_ns")).with_ttl("req", 0);
+        let store = Store::open(cfg).unwrap();
+        store.put("req", CacheKey(1), "{\"v\":1}").unwrap();
+        store.put("plan", CacheKey(2), "{\"v\":2}").unwrap();
+        assert_eq!(store.get("req", CacheKey(1)), None, "expired");
+        assert_eq!(store.get("plan", CacheKey(2)).as_deref(), Some("{\"v\":2}"));
+        // The expired entry was evicted for real: index and payload gone.
+        let s = store.stats();
+        assert_eq!(s.entries, 1);
+        assert!(!store.dir().join("req").join(format!("{}.json", CacheKey(1).hex())).exists());
+        // A generous TTL does not expire fresh entries.
+        let cfg = StoreConfig::new(tmp_dir("ttl_fresh")).with_ttl("req", 3600);
+        let store = Store::open(cfg).unwrap();
+        store.put("req", CacheKey(3), "{}").unwrap();
+        assert!(store.get("req", CacheKey(3)).is_some());
+    }
+
+    #[test]
+    fn gc_sweeps_expired_entries() {
+        let cfg = StoreConfig::new(tmp_dir("ttl_gc")).with_ttl("req", 0);
+        let store = Store::open(cfg).unwrap();
+        for i in 0..3u64 {
+            store.put("req", CacheKey(i), "{}").unwrap();
+        }
+        store.put("calib", CacheKey(9), "{}").unwrap();
+        let report = store.gc().unwrap();
+        assert_eq!(report.expired, 3);
+        assert_eq!(store.stats().entries, 1, "non-TTL namespace survives");
+        // A second pass finds nothing left to sweep.
+        assert_eq!(store.gc().unwrap().expired, 0);
+    }
+
+    #[test]
+    fn ttl_anchor_survives_reopen() {
+        // An entry written without TTL stays valid when the store is
+        // reopened with a generous TTL (created timestamp persisted),
+        // and expires under a zero TTL.
+        let dir = tmp_dir("ttl_reopen");
+        {
+            let store = Store::open(StoreConfig::new(&dir)).unwrap();
+            store.put("req", CacheKey(5), "{\"keep\":1}").unwrap();
+        }
+        {
+            let store = Store::open(StoreConfig::new(&dir).with_ttl("req", 3600)).unwrap();
+            assert!(store.get("req", CacheKey(5)).is_some(), "fresh under 1h TTL");
+        }
+        let store = Store::open(StoreConfig::new(&dir).with_ttl("req", 0)).unwrap();
+        assert!(store.get("req", CacheKey(5)).is_none(), "expired under 0s TTL");
     }
 
     #[test]

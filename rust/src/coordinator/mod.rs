@@ -15,6 +15,7 @@ use crate::cache::Cache;
 use crate::models::inventory::sd_tiny;
 use crate::pas::cost::CostModel;
 use crate::pas::plan::{plan_is_executable, SamplingPlan, StepAction};
+use crate::quant::format::{emulate_activations, QuantScheme};
 use crate::runtime::{Input, Runtime, RuntimeHandle, Tensor, TensorI32};
 use crate::scheduler::{make_sampler, NoiseSchedule};
 use crate::util::rng::Pcg32;
@@ -29,6 +30,10 @@ pub struct GenRequest {
     /// "ddim" | "pndm".
     pub sampler: String,
     pub plan: SamplingPlan,
+    /// Mixed-precision scheme: `None` runs the artifacts untouched;
+    /// `Some` fake-quantises the U-Net output every step (deterministic
+    /// reduced-precision emulation — the artifacts themselves stay fp32).
+    pub quant: Option<QuantScheme>,
 }
 
 impl GenRequest {
@@ -40,6 +45,7 @@ impl GenRequest {
             guidance: 7.5,
             sampler: "pndm".into(),
             plan: SamplingPlan::Full,
+            quant: None,
         }
     }
 
@@ -50,13 +56,16 @@ impl GenRequest {
             sampler: self.sampler.clone(),
             plan: self.plan,
             guidance_bits: self.guidance.to_bits(),
+            quant: self.quant,
         }
     }
 }
 
-/// Structured batching key (steps/sampler/plan/guidance must match to
-/// run lockstep). A real `Hash + Ord` type rather than a lossy
-/// `format!("{:?}")` string, so the batcher can use it as a map key
+/// Structured batching key (steps/sampler/plan/guidance/quant must match
+/// to run lockstep — the fake-quant round-trip applies to the whole
+/// batched eps tensor, so mixed-precision requests can only batch with
+/// requests of the same scheme). A real `Hash + Ord` type rather than a
+/// lossy `format!("{:?}")` string, so the batcher can use it as a map key
 /// directly and the cache key derivation hashes the same fields without
 /// re-parsing. Guidance is carried as its exact f32 bit pattern
 /// (`f32` itself has no `Eq`/`Hash`).
@@ -66,6 +75,7 @@ pub struct BatchKey {
     pub sampler: String,
     pub plan: SamplingPlan,
     pub guidance_bits: u32,
+    pub quant: Option<QuantScheme>,
 }
 
 /// Per-request generation outcome.
@@ -221,7 +231,7 @@ impl Coordinator {
         for (i, &action) in plan.iter().enumerate() {
             let t0 = Instant::now();
             let t_in = Tensor::new(vec![b], vec![ts[i] as f32; b])?;
-            let eps = match action {
+            let mut eps = match action {
                 StepAction::Full => {
                     let out = self.runtime.execute(
                         &Runtime::unet_full(b),
@@ -256,6 +266,20 @@ impl Coordinator {
                     out.into_iter().next().ok_or_else(|| anyhow!("missing eps"))?
                 }
             };
+            // Mixed-precision emulation: quantise-dequantise the U-Net
+            // output at the request's activation format, so the latent
+            // trajectory reflects the reduced-precision datapath the
+            // hwsim costing models (batch-compatible by BatchKey.quant).
+            // Each batch lane gets its own quantiser fit: the request
+            // cache key promises the latent is a function of the request
+            // alone, so a lane's scale must not depend on which other
+            // requests happened to share the batch.
+            if let Some(scheme) = reqs[0].quant {
+                let lane = eps.data.len() / b;
+                for chunk in eps.data.chunks_mut(lane.max(1)) {
+                    emulate_activations(chunk, scheme.act);
+                }
+            }
             // Scheduler update (same t for every batch lane).
             let new_data = sampler.step(i, &latent.data, &eps.data);
             latent.data = new_data;
@@ -313,6 +337,19 @@ mod tests {
     }
 
     #[test]
+    fn batch_key_separates_quant_schemes() {
+        let a = GenRequest::new("x", 1);
+        let mut b = GenRequest::new("y", 2);
+        b.quant = Some(QuantScheme::w8a8());
+        assert_ne!(a.batch_key(), b.batch_key(), "fp32 vs W8A8 cannot lockstep");
+        let mut c = GenRequest::new("z", 3);
+        c.quant = Some(QuantScheme::w8a8());
+        assert_eq!(b.batch_key(), c.batch_key(), "same scheme batches");
+        c.quant = Some(QuantScheme::w4a8());
+        assert_ne!(b.batch_key(), c.batch_key(), "schemes differ");
+    }
+
+    #[test]
     fn batch_key_is_a_real_map_key() {
         use std::collections::HashMap;
         let mut m: HashMap<BatchKey, usize> = HashMap::new();
@@ -333,5 +370,6 @@ mod tests {
         assert_eq!(r.steps, 50);
         assert_eq!(r.sampler, "pndm");
         assert!(matches!(r.plan, SamplingPlan::Full));
+        assert_eq!(r.quant, None, "full precision unless asked");
     }
 }

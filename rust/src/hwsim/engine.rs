@@ -3,14 +3,22 @@
 use super::arch::{AccelConfig, NonlinearMode, Policy, ReuseMode};
 use super::dataflow::op_sa_cost;
 use super::fusion::plan_fusion;
-use super::memory::{op_traffic, FusionTag};
+use super::memory::{op_traffic_bytes, FusionTag};
 use super::streaming::nonlinear_visible_cycles;
 use crate::models::inventory::{conv3x3_layers, LayerOp};
+use crate::quant::format::QuantScheme;
 
 /// Per-run aggregate report.
 #[derive(Debug, Clone, Default)]
 pub struct Report {
     pub sa_cycles: f64,
+    /// SA cycles weighted by per-MAC dynamic power relative to the
+    /// native datapath (multiplier power ~ linear in operand width at
+    /// fixed throughput, since a b-bit MAC costs ~(b/native)^2 the energy
+    /// and runs native/b times faster). Equals `sa_cycles` when every op
+    /// runs at native precision, so the energy model below reduces
+    /// exactly to the Table I formulation.
+    pub sa_scaled_cycles: f64,
     pub conversion_cycles: f64,
     pub nonlinear_cycles: f64,
     pub mem_stall_cycles: f64,
@@ -43,9 +51,16 @@ impl Report {
         2.0 * self.macs / self.traffic_bytes.max(1.0)
     }
 
-    /// Energy (J): on-chip power x time + DRAM access energy.
+    /// Energy (J): on-chip power x time + DRAM access energy, with a
+    /// precision correction on the SA term — ops running wider than the
+    /// native datapath draw proportionally more MAC power, narrower ops
+    /// proportionally less (`sa_scaled_cycles`). At native precision the
+    /// correction is exactly zero and this is Table I's formulation.
     pub fn energy_j(&self, cfg: &AccelConfig) -> f64 {
-        cfg.onchip_power_w() * self.seconds(cfg) + self.traffic_bytes * cfg.dram_j_per_byte
+        let sa_correction_s = (self.sa_scaled_cycles - self.sa_cycles) / cfg.freq_hz;
+        cfg.onchip_power_w() * self.seconds(cfg)
+            + cfg.p_sa_w * sa_correction_s
+            + self.traffic_bytes * cfg.dram_j_per_byte
     }
 }
 
@@ -61,8 +76,33 @@ fn mem_overlap(policy: Policy) -> f64 {
     }
 }
 
-/// Simulate an operator list under a policy.
+/// Simulate an operator list under a policy at native precision.
 pub fn simulate(cfg: &AccelConfig, policy: Policy, ops: &[LayerOp]) -> Report {
+    simulate_inner(cfg, policy, ops, None)
+}
+
+/// Precision-aware simulation: `prec[i]` is the (weight, activation)
+/// format of `ops[i]` (see `quant::search::assign`). Three effects:
+/// cycles scale with the MAC width (a narrow multiplier array retires
+/// proportionally more MACs per cycle, SIMD-style), DRAM traffic scales
+/// with per-operand bytes, and the SA energy term scales with per-MAC
+/// power — so a W4A8 plan shows up in every `Report` axis.
+pub fn simulate_quant(
+    cfg: &AccelConfig,
+    policy: Policy,
+    ops: &[LayerOp],
+    prec: &[QuantScheme],
+) -> Report {
+    assert_eq!(prec.len(), ops.len(), "one scheme per op");
+    simulate_inner(cfg, policy, ops, Some(prec))
+}
+
+fn simulate_inner(
+    cfg: &AccelConfig,
+    policy: Policy,
+    ops: &[LayerOp],
+    prec: Option<&[QuantScheme]>,
+) -> Report {
     // Fusion plan over the 3x3-conv backbone (Sec. V-B / Fig. 16).
     let convs = conv3x3_layers(ops);
     let plan = plan_fusion(cfg, &convs);
@@ -120,21 +160,34 @@ pub fn simulate(cfg: &AccelConfig, policy: Policy, ops: &[LayerOp]) -> Report {
     let mut rep = Report::default();
     let overlap = mem_overlap(policy);
     let double_buffered = policy.reuse == ReuseMode::Adaptive;
+    let native_bits = (cfg.dtype_bytes * 8) as f64;
+    let native_bytes = cfg.dtype_bytes as f64;
     for (i, op) in ops.iter().enumerate() {
-        let sa = op_sa_cost(cfg, policy.dataflow, double_buffered, &op.kind);
+        // Per-op operand widths; the native path uses the Table I dtype.
+        let (w_bytes, a_bytes, mac_bits) = match prec {
+            None => (native_bytes, native_bytes, native_bits),
+            Some(p) => (p[i].weight.bytes(), p[i].act.bytes(), p[i].mac_bits() as f64),
+        };
+        let mut sa = op_sa_cost(cfg, policy.dataflow, double_buffered, &op.kind);
+        // MAC throughput scales inversely with multiplier width: an int8
+        // op packs native_bits/8 MACs per PE per cycle; fp32 takes two.
+        sa.cycles *= mac_bits / native_bits;
         let nl = nonlinear_visible_cycles(cfg, policy.nonlinear, &op.kind);
         let tag = if op.kind.is_conv3x3() {
             if policy.fusion { conv_tag_of(&op.name) } else { default_tag }
         } else {
             chain_tags[i]
         };
-        let tr = op_traffic(cfg, policy, &op.kind, tag);
+        let tr = op_traffic_bytes(cfg, policy, &op.kind, tag, w_bytes, a_bytes);
         let mem_cycles = tr.total() / cfg.dram_bw * cfg.freq_hz;
         // Un-hidden memory time: the (1 - overlap) fraction of each
         // layer's DMA serialises with compute.
         let stall = mem_cycles * (1.0 - overlap);
 
         rep.sa_cycles += sa.cycles;
+        // Per-MAC energy ~ (width/native)^2 over width/native the cycles
+        // => the power-weighted cycle count scales linearly in width.
+        rep.sa_scaled_cycles += sa.cycles * (mac_bits / native_bits);
         rep.conversion_cycles += sa.conversion_cycles;
         rep.nonlinear_cycles += nl;
         rep.mem_stall_cycles += stall;
@@ -147,8 +200,22 @@ pub fn simulate(cfg: &AccelConfig, policy: Policy, ops: &[LayerOp]) -> Report {
 
 /// One U-Net denoising step (CFG doubles the batch => 2x work).
 pub fn simulate_unet_step(cfg: &AccelConfig, policy: Policy, ops: &[LayerOp]) -> Report {
-    let mut r = simulate(cfg, policy, ops);
+    double_for_cfg(simulate(cfg, policy, ops))
+}
+
+/// Precision-aware variant of [`simulate_unet_step`].
+pub fn simulate_unet_step_quant(
+    cfg: &AccelConfig,
+    policy: Policy,
+    ops: &[LayerOp],
+    prec: &[QuantScheme],
+) -> Report {
+    double_for_cfg(simulate_quant(cfg, policy, ops, prec))
+}
+
+fn double_for_cfg(mut r: Report) -> Report {
     r.sa_cycles *= 2.0;
+    r.sa_scaled_cycles *= 2.0;
     r.conversion_cycles *= 2.0;
     r.nonlinear_cycles *= 2.0;
     r.mem_stall_cycles *= 2.0;
@@ -242,6 +309,71 @@ mod tests {
         let onchip = cfg.onchip_power_w() * rep.seconds(&cfg);
         let dram = rep.traffic_bytes * cfg.dram_j_per_byte;
         assert!(onchip > 5.0 * dram, "onchip {onchip} dram {dram}");
+    }
+
+    #[test]
+    fn native_scheme_reproduces_plain_simulate_exactly() {
+        // The accelerator's native datapath is fp16 (Table I dtype 2 B):
+        // a uniform fp16 assignment must be bit-identical to `simulate`.
+        let cfg = AccelConfig::default();
+        let ops = unet_ops(&sd_v14());
+        let a = simulate(&cfg, Policy::optimized(), &ops);
+        let prec = vec![QuantScheme::fp16(); ops.len()];
+        let b = simulate_quant(&cfg, Policy::optimized(), &ops, &prec);
+        assert_eq!(a.sa_cycles, b.sa_cycles);
+        assert_eq!(a.sa_scaled_cycles, b.sa_scaled_cycles);
+        assert_eq!(a.traffic_bytes, b.traffic_bytes);
+        assert_eq!(a.mem_stall_cycles, b.mem_stall_cycles);
+        assert_eq!(a.energy_j(&cfg), b.energy_j(&cfg));
+        // At native precision the energy correction is exactly zero.
+        assert_eq!(a.sa_scaled_cycles, a.sa_cycles);
+    }
+
+    #[test]
+    fn precision_scales_cycles_traffic_and_energy() {
+        let cfg = AccelConfig::default();
+        let ops = unet_ops(&sd_v14());
+        let run = |s: QuantScheme| {
+            simulate_quant(&cfg, Policy::optimized(), &ops, &vec![s; ops.len()])
+        };
+        let fp32 = run(QuantScheme::fp32());
+        let fp16 = run(QuantScheme::fp16());
+        let w8a8 = run(QuantScheme::w8a8());
+        let w4a8 = run(QuantScheme::w4a8());
+        let w4a4 = run(QuantScheme::w4a4());
+        // Cycles: fp32 doubles the native SA time, int8 halves it, and
+        // W4A8 is throughput-bound by its 8-bit activations.
+        assert!((fp32.sa_cycles / fp16.sa_cycles - 2.0).abs() < 1e-9);
+        assert!((fp16.sa_cycles / w8a8.sa_cycles - 2.0).abs() < 1e-9);
+        assert_eq!(w8a8.sa_cycles, w4a8.sa_cycles);
+        assert!((w8a8.sa_cycles / w4a4.sa_cycles - 2.0).abs() < 1e-9);
+        // Traffic: monotone in operand bytes; W4A8 moves fewer weight
+        // bytes than W8A8 at equal cycles.
+        assert!(fp32.traffic_bytes > fp16.traffic_bytes);
+        assert!(fp16.traffic_bytes > w8a8.traffic_bytes);
+        assert!(w8a8.traffic_bytes > w4a8.traffic_bytes);
+        // Energy: strictly ordered, and the acceptance band — W8A8 must
+        // model at least a 3x energy win over fp32.
+        let e32 = fp32.energy_j(&cfg);
+        let e16 = fp16.energy_j(&cfg);
+        let e8 = w8a8.energy_j(&cfg);
+        let e48 = w4a8.energy_j(&cfg);
+        assert!(e32 > e16 && e16 > e8 && e8 > e48, "{e32} {e16} {e8} {e48}");
+        assert!(e32 / e8 >= 3.0, "W8A8 energy reduction {:.2}x", e32 / e8);
+        assert!(e48 > 0.0, "energy stays positive under the int4 refund");
+    }
+
+    #[test]
+    fn unet_step_quant_doubles_all_axes() {
+        let cfg = AccelConfig::default();
+        let ops = unet_ops(&sd_v14());
+        let prec = vec![QuantScheme::w8a8(); ops.len()];
+        let one = simulate_quant(&cfg, Policy::optimized(), &ops, &prec);
+        let step = simulate_unet_step_quant(&cfg, Policy::optimized(), &ops, &prec);
+        assert_eq!(step.sa_cycles, 2.0 * one.sa_cycles);
+        assert_eq!(step.sa_scaled_cycles, 2.0 * one.sa_scaled_cycles);
+        assert_eq!(step.traffic_bytes, 2.0 * one.traffic_bytes);
+        assert_eq!(step.macs, 2.0 * one.macs);
     }
 
     #[test]

@@ -61,22 +61,48 @@ impl Traffic {
 
 pub fn op_traffic(cfg: &AccelConfig, policy: Policy, kind: &OpKind, tag: FusionTag) -> Traffic {
     let b = cfg.dtype_bytes as f64;
+    op_traffic_bytes(cfg, policy, kind, tag, b, b)
+}
+
+/// Precision-aware traffic: weights move at `w_bytes`/element and
+/// activations at `a_bytes`/element (the quant subsystem's per-layer
+/// formats; `op_traffic` is the native-precision special case). The
+/// reuse/tiling decisions see the scaled sizes, so narrower operands can
+/// flip a layer from Tiled to a single-pass reuse choice — exactly the
+/// interaction mixed precision buys on a fixed global buffer.
+pub fn op_traffic_bytes(
+    cfg: &AccelConfig,
+    policy: Policy,
+    kind: &OpKind,
+    tag: FusionTag,
+    w_bytes: f64,
+    a_bytes: f64,
+) -> Traffic {
     let (mut in_b, w_b, out_b, n_dim) = match *kind {
         OpKind::Conv { h, w, cin, cout, k, stride } => {
             let (p, q) = (h.div_ceil(stride), w.div_ceil(stride));
             (
-                (h * w * cin) as f64 * b,
-                (cin * cout * k * k) as f64 * b,
-                (p * q * cout) as f64 * b,
+                (h * w * cin) as f64 * a_bytes,
+                (cin * cout * k * k) as f64 * w_bytes,
+                (p * q * cout) as f64 * a_bytes,
                 cout,
             )
         }
-        OpKind::Matmul { m, n, k } => ((m * k) as f64 * b, (k * n) as f64 * b, (m * n) as f64 * b, n),
+        OpKind::Matmul { m, n, k } => (
+            (m * k) as f64 * a_bytes,
+            (k * n) as f64 * w_bytes,
+            (m * n) as f64 * a_bytes,
+            n,
+        ),
         // Activation-activation matmul: "weight" side is the second
-        // activation operand (K^T / V) — streamed like weights.
-        OpKind::MatmulAct { m, n, k } => {
-            ((m * k) as f64 * b, (k * n) as f64 * b, (m * n) as f64 * b, n)
-        }
+        // activation operand (K^T / V) — streamed like weights but moved
+        // at activation precision.
+        OpKind::MatmulAct { m, n, k } => (
+            (m * k) as f64 * a_bytes,
+            (k * n) as f64 * a_bytes,
+            (m * n) as f64 * a_bytes,
+            n,
+        ),
         // Nonlinears ride the streams (their data is counted by the
         // producing/consuming matmuls); no extra DRAM traffic.
         _ => return Traffic::default(),
@@ -192,6 +218,30 @@ mod tests {
         assert_eq!(t.input, 0.0);
         assert_eq!(t.output, 0.0);
         assert!(t.weight > 0.0);
+    }
+
+    #[test]
+    fn precision_scales_each_operand_independently() {
+        // W4A8 on a mid conv: weights at 0.5 B/elem, activations at 1 B.
+        let t = op_traffic_bytes(
+            &cfg(),
+            Policy::optimized(),
+            &mid_conv(),
+            FusionTag::default(),
+            0.5,
+            1.0,
+        );
+        assert!((t.input - 8.0 * 8.0 * 1280.0).abs() < 1.0);
+        assert!((t.weight - 1280.0 * 1280.0 * 9.0 * 0.5).abs() < 1.0);
+        // MatmulAct moves its second operand at activation precision.
+        let ma = OpKind::MatmulAct { m: 64, n: 64, k: 32 };
+        let t = op_traffic_bytes(&cfg(), Policy::optimized(), &ma, FusionTag::default(), 0.5, 1.0);
+        assert!((t.weight - (32.0 * 64.0)).abs() < 1e-9, "K/V side uses act bytes");
+        // Native byte width reproduces op_traffic exactly.
+        let b = cfg().dtype_bytes as f64;
+        let a = op_traffic(&cfg(), Policy::optimized(), &conv64(), FusionTag::default());
+        let q = op_traffic_bytes(&cfg(), Policy::optimized(), &conv64(), FusionTag::default(), b, b);
+        assert_eq!((a.input, a.weight, a.output), (q.input, q.weight, q.output));
     }
 
     #[test]

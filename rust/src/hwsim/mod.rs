@@ -22,4 +22,6 @@ mod proptests;
 pub mod streaming;
 
 pub use arch::{AccelConfig, Dataflow, NonlinearMode, Policy, ReuseMode};
-pub use engine::{simulate, simulate_unet_step, Report};
+pub use engine::{
+    simulate, simulate_quant, simulate_unet_step, simulate_unet_step_quant, Report,
+};

@@ -26,6 +26,17 @@
 //! enqueueing, hit/miss/eviction counters in `server::metrics`), the
 //! coordinator (`SamplingPlan::Auto` resolution), and the `sd-acc cache`
 //! CLI (`stats`/`gc`/`clear`).
+//!
+//! ## Mixed precision ([`quant`])
+//!
+//! The paper's third workload problem — diverse weight and activation
+//! sizes — is handled by a mixed-precision subsystem: per-layer
+//! int4/int8/fp16/fp32 assignment with a quality-aware Pareto search,
+//! activation-range calibration cached under the `quant` namespace,
+//! precision-scaled hwsim costing (cycles, DRAM traffic and SA energy
+//! all track operand widths), fake-quant emulation on the serving path
+//! (requests carry an optional `QuantScheme` that participates in
+//! batching and cache keys), and a `sd-acc quant` CLI subcommand.
 
 pub mod cache;
 pub mod coordinator;
@@ -33,6 +44,7 @@ pub mod hwsim;
 pub mod models;
 pub mod pas;
 pub mod quality;
+pub mod quant;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

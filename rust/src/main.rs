@@ -4,6 +4,7 @@
 //!   generate   text-to-image via the PJRT runtime (original or PAS)
 //!   calibrate  measure shift scores, D*, outliers (Fig. 4 / Eq. 1-2)
 //!   simulate   run the accelerator performance model on a real SD arch
+//!   quant      mixed precision: calibrate | search | report
 //!   cache      persistent cache maintenance (stats | gc | clear)
 //!   info       artifact + manifest summary
 //!
@@ -12,17 +13,21 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use sd_acc::cache::{default_cache_dir, Cache, Store, StoreConfig};
+use sd_acc::cache::{default_cache_dir, Cache, Store, StoreConfig, NS_REQUEST};
 use sd_acc::coordinator::{Coordinator, GenRequest};
 use sd_acc::hwsim::arch::{AccelConfig, Policy};
-use sd_acc::hwsim::engine::simulate_unet_step;
-use sd_acc::models::inventory::{arch_by_name, unet_ops};
+use sd_acc::hwsim::engine::{simulate_unet_step, simulate_unet_step_quant};
+use sd_acc::models::inventory::{arch_by_name, total_macs, unet_ops};
 use sd_acc::pas::calibrate::Calibrator;
 use sd_acc::pas::plan::{PasConfig, SamplingPlan};
 use sd_acc::quality;
+use sd_acc::quant::{
+    assign, predicted_psnr_db, search, synthetic_profile, QuantCalibrator, QuantConstraints,
+    QuantScheme,
+};
 use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
 use sd_acc::util::cli::{usage, Args, OptSpec};
-use sd_acc::util::table::Table;
+use sd_acc::util::table::{f, ratio, Table};
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -35,6 +40,7 @@ fn main() -> ExitCode {
         "generate" => cmd_generate(rest),
         "calibrate" => cmd_calibrate(rest),
         "simulate" => cmd_simulate(rest),
+        "quant" => cmd_quant(rest),
         "cache" => cmd_cache(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
@@ -55,7 +61,7 @@ fn main() -> ExitCode {
 fn print_help() {
     println!(
         "sd-acc {} — SD-Acc reproduction (phase-aware sampling + HW co-design)\n\n\
-         usage: sd-acc <generate|calibrate|simulate|cache|info> [options]\n\
+         usage: sd-acc <generate|calibrate|simulate|quant|cache|info> [options]\n\
          run a subcommand with --help for its options",
         sd_acc::util::VERSION
     );
@@ -83,6 +89,77 @@ fn open_cache(args: &Args, coord: &Coordinator) -> Result<Option<Cache>, String>
     }
 }
 
+/// The fixed closed-vocabulary calibration prompt set (first `n` of 3),
+/// shared by `calibrate`, `quant calibrate` and `quant search` so they
+/// address the same cache cells.
+fn calib_prompts(n: usize) -> Vec<String> {
+    ["red circle x4 y4 blue square x11 y11", "green stripe x8 y8", "yellow circle x12 y3"]
+        .iter()
+        .take(n.clamp(1, 3))
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Quant-profile acquisition shared by the `quant calibrate|search` arms:
+/// measured trajectories (cache-aware) when artifacts exist, synthetic
+/// deterministic ranges otherwise. The service/coordinator pair is
+/// returned so callers can run measured validation (the service owns the
+/// runtime thread and must stay alive while the coordinator is used).
+#[allow(clippy::type_complexity)]
+fn acquire_quant_profile(
+    args: &Args,
+    arch: &sd_acc::models::inventory::UNetArch,
+    steps: usize,
+) -> Result<(sd_acc::quant::QuantProfile, Option<(RuntimeService, Coordinator)>), String> {
+    let dir = artifacts_dir(args);
+    // Measured ranges come from the runnable model only — applying the
+    // sd-tiny runtime's block ranges to another architecture would gate
+    // quality on cross-model tails (prefix-matched up-blocks, defaulted
+    // everything else).
+    if arch.name != "sd-tiny" {
+        if dir.join("manifest.json").exists() {
+            println!(
+                "model {} is not the runnable artifact model — synthetic profile \
+                 (use --model sd-tiny for measured ranges)",
+                arch.name
+            );
+        }
+        return Ok((synthetic_profile(arch, steps), None));
+    }
+    if !dir.join("manifest.json").exists() {
+        println!("no artifacts at {} — synthetic deterministic profile", dir.display());
+        return Ok((synthetic_profile(arch, steps), None));
+    }
+    let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
+    let coord = Coordinator::new(svc.handle());
+    let cache = open_cache(args, &coord)?;
+    let prompts = calib_prompts(args.get_usize("prompts")?.unwrap_or(2));
+    let calibrator = QuantCalibrator::new(&coord);
+    let profile = match &cache {
+        Some(c) => {
+            let (p, hit) = calibrator
+                .run_cached(c, &prompts, steps, 7.5)
+                .map_err(|e| format!("{e:#}"))?;
+            if hit {
+                println!("quant cache hit — trajectories skipped");
+            }
+            p
+        }
+        None => calibrator.run(&prompts, steps, 7.5).map_err(|e| format!("{e:#}"))?,
+    };
+    Ok((profile, Some((svc, coord))))
+}
+
+fn parse_policy(name: &str) -> Result<Policy, String> {
+    match name {
+        "baseline" => Ok(Policy::baseline()),
+        "ac" => Ok(Policy::with_ac()),
+        "ad" => Ok(Policy::with_ac_ad()),
+        "optimized" => Ok(Policy::optimized()),
+        p => Err(format!("unknown policy '{p}'")),
+    }
+}
+
 fn fmt_bytes(b: u64) -> String {
     if b < 1024 {
         format!("{b} B")
@@ -107,6 +184,7 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
         OptSpec { name: "auto", help: "resolve the best cached PAS plan (SamplingPlan::Auto)", takes_value: false, default: None },
+        OptSpec { name: "quant", help: "mixed-precision scheme (fp16 | w8a8 | w4a8 | ...)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -135,6 +213,10 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
         });
     } else if args.flag("auto") {
         req.plan = SamplingPlan::Auto;
+    }
+    if let Some(s) = args.get("quant") {
+        req.quant =
+            Some(QuantScheme::parse(s).ok_or_else(|| format!("unknown quant scheme '{s}'"))?);
     }
     let req = coord.resolve_plan(&req, cache.as_ref());
     let res = match cache.as_ref().and_then(|c| c.get_result(&req)) {
@@ -183,15 +265,7 @@ fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
     let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
     let coord = Coordinator::new(svc.handle());
     let cache = open_cache(&args, &coord)?;
-    let prompts: Vec<String> = [
-        "red circle x4 y4 blue square x11 y11",
-        "green stripe x8 y8",
-        "yellow circle x12 y3",
-    ]
-    .iter()
-    .take(args.get_usize("prompts")?.unwrap().clamp(1, 3))
-    .map(|s| s.to_string())
-    .collect();
+    let prompts = calib_prompts(args.get_usize("prompts")?.unwrap());
     let steps = args.get_usize("steps")?.unwrap();
     let calibrator = Calibrator::new(&coord);
     let rep = match &cache {
@@ -213,6 +287,135 @@ fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+// -------------------------------------------------------------------- quant
+
+fn cmd_quant(raw: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec { name: "model", help: "sd-v1.4 | sd-v2.1-base | sd-xl | sd-tiny", takes_value: true, default: Some("sd-v1.4") },
+        OptSpec { name: "steps", help: "trajectory steps (calibrate)", takes_value: true, default: Some("25") },
+        OptSpec { name: "prompts", help: "number of calibration prompts", takes_value: true, default: Some("2") },
+        OptSpec { name: "quality-target", help: "latent-PSNR proxy floor in dB (search)", takes_value: true, default: Some("30") },
+        OptSpec { name: "scheme", help: "precision scheme for `report` (fp16 | w8a8 | w4a8 | ...)", takes_value: true, default: Some("w8a8") },
+        OptSpec { name: "policy", help: "baseline | ac | ad | optimized", takes_value: true, default: Some("optimized") },
+        OptSpec { name: "no-pin", help: "disable the fragile-layer sensitivity pass", takes_value: false, default: None },
+        OptSpec { name: "artifacts", help: "artifacts dir (calibrate measures real trajectories when present)", takes_value: true, default: None },
+        OptSpec { name: "cache-dir", help: "persistent cache dir (profiles cached in the quant namespace)", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    let action = args.positional().first().map(String::as_str).unwrap_or("search");
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "sd-acc quant <calibrate|search|report>",
+                "mixed-precision calibration, bit-width search, hwsim report",
+                &spec
+            )
+        );
+        return Ok(());
+    }
+    let model = args.get("model").unwrap();
+    let arch = arch_by_name(model).ok_or_else(|| format!("unknown model '{model}'"))?;
+    let steps = args.get_usize("steps")?.unwrap();
+    let policy = parse_policy(args.get("policy").unwrap())?;
+    let cfg = AccelConfig::default();
+    let ops = unet_ops(&arch);
+
+    match action {
+        "calibrate" => {
+            let (profile, _runtime) = acquire_quant_profile(&args, &arch, steps)?;
+            let mut t = Table::new(&["tensor", "lo", "hi", "absmax", "p99", "drf"]);
+            for r in profile.ranges.iter().take(24) {
+                t.row(vec![
+                    r.name.clone(),
+                    f(r.lo as f64, 2),
+                    f(r.hi as f64, 2),
+                    f(r.absmax as f64, 2),
+                    f(r.p99 as f64, 2),
+                    f(profile.drf(&r.name), 2),
+                ]);
+            }
+            t.print();
+            if profile.ranges.len() > 24 {
+                println!("({} more entries)", profile.ranges.len() - 24);
+            }
+        }
+        "search" => {
+            let cons = QuantConstraints {
+                min_psnr_db: args.get_f64("quality-target")?.unwrap(),
+                pin_fragile: !args.flag("no-pin"),
+            };
+            // Measured calibration (+ measured validation of the front)
+            // when artifacts are present; deterministic synthetic
+            // otherwise.
+            let (profile, runtime) = acquire_quant_profile(&args, &arch, steps)?;
+            let mut front = search(&ops, &cfg, policy, &cons, Some(&profile));
+            if let Some((_svc, coord)) = &runtime {
+                // Fill measured PSNR on the top candidates (reported, not
+                // re-gated: the measured scale is a different proxy than
+                // the analytic one the floor applies to, and it reflects
+                // the activation axis only — the artifacts run fp32
+                // weights, see QuantSearcher's docs).
+                let prompts = calib_prompts(args.get_usize("prompts")?.unwrap_or(2));
+                let searcher = sd_acc::quant::QuantSearcher { coord };
+                searcher
+                    .validate(&mut front, &prompts, steps, f64::NEG_INFINITY, 3)
+                    .map_err(|e| format!("{e:#}"))?;
+            }
+            println!(
+                "model {} | policy {} | quality target {} dB | profile: {} | Pareto front:",
+                arch.name,
+                args.get("policy").unwrap(),
+                cons.min_psnr_db,
+                profile.model
+            );
+            let mut t = Table::new(&[
+                "scheme", "MAC bits", "PSNR proxy (dB)", "measured A-only (dB)",
+                "energy/step (J)", "vs fp32", "traffic (GB)", "pinned",
+            ]);
+            for c in &front {
+                t.row(vec![
+                    c.scheme.label(),
+                    c.scheme.mac_bits().to_string(),
+                    f(c.psnr_db, 1),
+                    c.measured_psnr_db.map(|p| f(p, 1)).unwrap_or_else(|| "-".into()),
+                    f(c.energy_j, 2),
+                    ratio(c.energy_reduction),
+                    f(c.report.traffic_bytes / 1e9, 2),
+                    c.pinned.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        "report" => {
+            let s = args.get("scheme").unwrap();
+            let scheme =
+                QuantScheme::parse(s).ok_or_else(|| format!("unknown quant scheme '{s}'"))?;
+            let pin = !args.flag("no-pin");
+            let base = simulate_unet_step_quant(&cfg, policy, &ops, &assign(&ops, QuantScheme::fp32(), false));
+            let plan = assign(&ops, scheme, pin);
+            let r = simulate_unet_step_quant(&cfg, policy, &ops, &plan);
+            let label = scheme.label();
+            println!("model {} | policy {} | {label} vs fp32 (CFG x2 step)", arch.name, args.get("policy").unwrap());
+            let mut t = Table::new(&["metric", "fp32", label.as_str(), "reduction"]);
+            t.row(vec!["SA cycles (M)".into(), f(base.sa_cycles / 1e6, 1), f(r.sa_cycles / 1e6, 1), ratio(base.sa_cycles / r.sa_cycles)]);
+            t.row(vec!["traffic (GB)".into(), f(base.traffic_bytes / 1e9, 2), f(r.traffic_bytes / 1e9, 2), ratio(base.traffic_bytes / r.traffic_bytes)]);
+            t.row(vec!["step time (s)".into(), f(base.seconds(&cfg), 3), f(r.seconds(&cfg), 3), ratio(base.seconds(&cfg) / r.seconds(&cfg))]);
+            t.row(vec!["energy (J)".into(), f(base.energy_j(&cfg), 2), f(r.energy_j(&cfg), 2), ratio(base.energy_j(&cfg) / r.energy_j(&cfg))]);
+            t.print();
+            println!(
+                "  PSNR proxy {} dB | logical MACs {:.1} G | fragile layers pinned: {}",
+                f(predicted_psnr_db(&ops, &plan, None), 1),
+                total_macs(&ops) as f64 / 1e9,
+                if pin { "yes" } else { "no" }
+            );
+        }
+        other => return Err(format!("unknown quant action '{other}' (calibrate|search|report)")),
+    }
+    Ok(())
+}
+
 // -------------------------------------------------------------------- cache
 
 fn cmd_cache(raw: &[String]) -> Result<(), String> {
@@ -220,7 +423,8 @@ fn cmd_cache(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "dir", help: "cache directory ($SD_ACC_CACHE or ./cache)", takes_value: true, default: None },
         OptSpec { name: "max-bytes", help: "byte cap enforced on open/gc", takes_value: true, default: None },
         OptSpec { name: "max-entries", help: "entry cap enforced on open/gc", takes_value: true, default: None },
-        OptSpec { name: "namespace", help: "restrict clear to one namespace (calib|plan|request)", takes_value: true, default: None },
+        OptSpec { name: "namespace", help: "restrict clear to one namespace (calib|plan|quant|request)", takes_value: true, default: None },
+        OptSpec { name: "request-ttl-secs", help: "TTL for the request namespace (gc sweeps expired latents)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -240,6 +444,9 @@ fn cmd_cache(raw: &[String]) -> Result<(), String> {
     }
     if let Some(n) = args.get_usize("max-entries")? {
         cfg.max_entries = n;
+    }
+    if let Some(ttl) = args.get_u64("request-ttl-secs")? {
+        cfg = cfg.with_ttl(NS_REQUEST, ttl);
     }
     if action == "stats" {
         // Inspection must be read-only: opening with finite caps would
@@ -272,8 +479,9 @@ fn cmd_cache(raw: &[String]) -> Result<(), String> {
         "gc" => {
             let r = store.gc().map_err(|e| format!("{e:#}"))?;
             println!(
-                "gc: dropped {} missing entries, removed {} orphan files, evicted {} to caps",
-                r.dropped_missing, r.removed_orphans, r.evicted
+                "gc: dropped {} missing entries, removed {} orphan files, \
+                 swept {} expired, evicted {} to caps",
+                r.dropped_missing, r.removed_orphans, r.expired, r.evicted
             );
         }
         "clear" => {
@@ -303,13 +511,7 @@ fn cmd_simulate(raw: &[String]) -> Result<(), String> {
     }
     let arch = arch_by_name(args.get("model").unwrap())
         .ok_or_else(|| format!("unknown model '{}'", args.get("model").unwrap()))?;
-    let policy = match args.get("policy").unwrap() {
-        "baseline" => Policy::baseline(),
-        "ac" => Policy::with_ac(),
-        "ad" => Policy::with_ac_ad(),
-        "optimized" => Policy::optimized(),
-        p => return Err(format!("unknown policy '{p}'")),
-    };
+    let policy = parse_policy(args.get("policy").unwrap())?;
     let cfg = AccelConfig::default();
     let ops = unet_ops(&arch);
     let r = simulate_unet_step(&cfg, policy, &ops);

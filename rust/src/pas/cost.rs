@@ -7,6 +7,7 @@
 
 use crate::models::inventory::{block_macs, unet_ops, Block, UNetArch};
 use crate::pas::plan::StepAction;
+use crate::quant::format::QuantScheme;
 
 /// Per-architecture cost model derived from the real layer inventory.
 #[derive(Debug, Clone)]
@@ -76,6 +77,26 @@ impl CostModel {
     pub fn plan_macs(&self, plan: &[StepAction]) -> u64 {
         plan.iter().map(|&a| self.step_macs(a)).sum()
     }
+
+    /// Precision-scaled effective MACs of one full step: logical MACs
+    /// weighted by the multiplier width the scheme needs relative to a
+    /// `native_bits`-wide datapath (an int8 MAC on a 16-bit array costs
+    /// half a native MAC slot; fp32 costs two).
+    pub fn effective_macs(&self, scheme: QuantScheme, native_bits: usize) -> f64 {
+        self.total as f64 * scheme.mac_bits() as f64 / native_bits as f64
+    }
+
+    /// Eq. 3 composed with mixed precision: the phase-aware MAC saving
+    /// multiplies with the multiplier-width saving, since partial steps
+    /// and narrow MACs cut orthogonal axes (steps x layers vs bits).
+    pub fn mac_reduction_quant(
+        &self,
+        plan: &[StepAction],
+        scheme: QuantScheme,
+        native_bits: usize,
+    ) -> f64 {
+        self.mac_reduction(plan) * native_bits as f64 / scheme.mac_bits() as f64
+    }
 }
 
 #[cfg(test)]
@@ -144,5 +165,21 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn l_zero_rejected() {
         CostModel::new(&sd_tiny()).macs_at(0);
+    }
+
+    #[test]
+    fn precision_composes_multiplicatively_with_pas() {
+        let cm = CostModel::new(&sd_v14());
+        let plan = crate::pas::plan::PasConfig::pas25(4).plan(50);
+        let base = cm.mac_reduction(&plan);
+        // W8A8 on a 16-bit datapath doubles the reduction; fp32 halves it.
+        let w8 = cm.mac_reduction_quant(&plan, QuantScheme::w8a8(), 16);
+        let f32r = cm.mac_reduction_quant(&plan, QuantScheme::fp32(), 16);
+        assert!((w8 - 2.0 * base).abs() < 1e-9);
+        assert!((f32r - 0.5 * base).abs() < 1e-9);
+        // Effective MACs scale the same way.
+        assert!(
+            (cm.effective_macs(QuantScheme::w8a8(), 16) - cm.total as f64 * 0.5).abs() < 1e-6
+        );
     }
 }

@@ -1,0 +1,412 @@
+//! Activation-range calibration for mixed-precision search.
+//!
+//! Quantiser scales need the dynamic range of every activation tensor.
+//! Two collection paths produce a [`QuantProfile`]:
+//!
+//! - [`synthetic_profile`]: deterministic per-block ranges derived from
+//!   the operator inventory (seeded by layer name), for the real SD
+//!   architectures that cannot execute here — mirrors the Fig. 13
+//!   shallow-vs-middle activation/weight contrast and gives the
+//!   attention-logit tensors the heavy tails that motivate the
+//!   sensitivity pass (SDP, arXiv 2403.04982, keeps those high-precision).
+//! - [`QuantCalibrator`]: measured ranges over real denoising
+//!   trajectories of the runnable model (the `unet_calib` artifact's
+//!   eps + per-up-block tensors), the same path `pas::calibrate` drives.
+//!
+//! Profiles are cached in the `quant` cache namespace, keyed like
+//! calibration reports (manifest digest + steps + prompts + guidance),
+//! so a manifest rebuild invalidates them.
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::Cache;
+use crate::coordinator::Coordinator;
+use crate::models::inventory::{unet_ops, UNetArch};
+use crate::runtime::{Input, Runtime, Tensor};
+use crate::scheduler::{make_sampler, NoiseSchedule};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+
+/// Observed dynamic range of one named tensor (or tensor group).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerRange {
+    pub name: String,
+    pub lo: f32,
+    pub hi: f32,
+    /// Largest absolute value — what a symmetric absmax scale clips to.
+    pub absmax: f32,
+    /// 99th percentile of |x| — the bulk of the distribution.
+    pub p99: f32,
+}
+
+/// Calibrated activation ranges for one model / trajectory setting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantProfile {
+    pub model: String,
+    pub steps: usize,
+    pub prompts: usize,
+    pub ranges: Vec<LayerRange>,
+}
+
+impl QuantProfile {
+    /// Range entry for an op name: exact match, else the longest prefix
+    /// entry whose name is followed by a `.` separator in `name` (so
+    /// "down1" matches "down1.conv1" but not "down12.conv1").
+    pub fn range_for(&self, name: &str) -> Option<&LayerRange> {
+        let mut best: Option<&LayerRange> = None;
+        for r in &self.ranges {
+            if r.name == name {
+                return Some(r);
+            }
+            let matches = name
+                .strip_prefix(&r.name)
+                .map_or(false, |rest| rest.starts_with('.'));
+            if matches && best.map_or(true, |b| r.name.len() > b.name.len()) {
+                best = Some(r);
+            }
+        }
+        best
+    }
+
+    /// Dynamic-range factor: how much worse absmax-scaled quantisation is
+    /// for this tensor than for a well-behaved Gaussian. absmax/p99 ~ 1.7
+    /// for a Gaussian (4 sigma vs 2.33 sigma); heavy-tailed tensors
+    /// (attention logits) push it far higher. Clamped to [0.5, 8].
+    pub fn drf(&self, name: &str) -> f64 {
+        match self.range_for(name) {
+            None => 1.0,
+            Some(r) => {
+                if r.p99 <= 0.0 || r.absmax <= 0.0 {
+                    return 1.0;
+                }
+                let ratio = r.absmax as f64 / r.p99 as f64 / 1.72;
+                (ratio * ratio).clamp(0.5, 8.0)
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("steps", Json::num(self.steps as f64)),
+            ("prompts", Json::num(self.prompts as f64)),
+            (
+                "ranges",
+                Json::Arr(
+                    self.ranges
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::str(&r.name)),
+                                ("lo", Json::num(r.lo as f64)),
+                                ("hi", Json::num(r.hi as f64)),
+                                ("absmax", Json::num(r.absmax as f64)),
+                                ("p99", Json::num(r.p99 as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<QuantProfile> {
+        let ranges = j
+            .get("ranges")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("quant profile: missing ranges"))?
+            .iter()
+            .map(|r| {
+                let field = |k: &str| {
+                    r.get_f64(k)
+                        .ok_or_else(|| anyhow!("quant profile range: missing '{k}'"))
+                };
+                Ok(LayerRange {
+                    name: r
+                        .get_str("name")
+                        .ok_or_else(|| anyhow!("quant profile range: missing name"))?
+                        .to_string(),
+                    lo: field("lo")? as f32,
+                    hi: field("hi")? as f32,
+                    absmax: field("absmax")? as f32,
+                    p99: field("p99")? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(QuantProfile {
+            model: j.get_str("model").unwrap_or("").to_string(),
+            steps: j.get_usize("steps").unwrap_or(0),
+            prompts: j.get_usize("prompts").unwrap_or(0),
+            ranges,
+        })
+    }
+}
+
+// ------------------------------------------------------------ accumulation
+
+/// Streaming min/max/absmax plus a bounded deterministic sample of |x|
+/// for the percentile. The sample decimates itself as the stream grows
+/// (keep-every-k with k doubling whenever the buffer fills, dropping
+/// every other retained sample), so it stays spread over the WHOLE
+/// observed stream rather than freezing on the first few tensors — and
+/// it is a pure function of the stream, no RNG, so repeated runs agree
+/// exactly.
+#[derive(Debug, Clone)]
+pub struct RangeAccum {
+    lo: f32,
+    hi: f32,
+    absmax: f32,
+    samples: Vec<f64>,
+    seen: usize,
+    keep_every: usize,
+}
+
+const MAX_SAMPLES: usize = 4096;
+
+impl RangeAccum {
+    pub fn new() -> RangeAccum {
+        RangeAccum {
+            lo: f32::INFINITY,
+            hi: f32::NEG_INFINITY,
+            absmax: 0.0,
+            samples: Vec::new(),
+            seen: 0,
+            keep_every: 1,
+        }
+    }
+
+    pub fn observe(&mut self, data: &[f32]) {
+        for &x in data {
+            self.lo = self.lo.min(x);
+            self.hi = self.hi.max(x);
+            self.absmax = self.absmax.max(x.abs());
+            if self.seen % self.keep_every == 0 {
+                if self.samples.len() >= MAX_SAMPLES {
+                    // Halve the retained sample and the keep rate: the
+                    // buffer always covers the stream seen so far.
+                    self.samples = self.samples.iter().copied().step_by(2).collect();
+                    self.keep_every *= 2;
+                }
+                if self.seen % self.keep_every == 0 {
+                    self.samples.push(x.abs() as f64);
+                }
+            }
+            self.seen += 1;
+        }
+    }
+
+    pub fn finish(&self, name: &str) -> LayerRange {
+        LayerRange {
+            name: name.to_string(),
+            lo: if self.lo.is_finite() { self.lo } else { 0.0 },
+            hi: if self.hi.is_finite() { self.hi } else { 0.0 },
+            absmax: self.absmax,
+            p99: stats::percentile(&self.samples, 99.0) as f32,
+        }
+    }
+}
+
+impl Default for RangeAccum {
+    fn default() -> Self {
+        RangeAccum::new()
+    }
+}
+
+// --------------------------------------------------------------- synthetic
+
+/// Deterministic per-block profile for an architecture that cannot run
+/// here: one entry per paper block (resnet body) plus a `.tf` entry for
+/// blocks carrying transformers, whose attention logits get heavy tails.
+/// Seeded by layer name, so the profile is identical across processes.
+pub fn synthetic_profile(arch: &UNetArch, steps: usize) -> QuantProfile {
+    let ops = unet_ops(arch);
+    let mut ranges: Vec<LayerRange> = Vec::new();
+    let mut push_entry = |name: String, heavy_tail: bool| {
+        if ranges.iter().any(|r| r.name == name) {
+            return;
+        }
+        let mut rng = Pcg32::new(crate::cache::key::fnv1a(name.as_bytes()), 0x517);
+        let sigma = 0.8 + 0.4 * rng.next_f32();
+        let p99 = 2.33 * sigma * (1.0 + 0.1 * rng.next_f32());
+        let tail = if heavy_tail { 3.0 + rng.next_f32() } else { 1.0 + 0.3 * rng.next_f32() };
+        let absmax = 4.0 * sigma * tail;
+        ranges.push(LayerRange { name, lo: -absmax, hi: absmax, absmax, p99 });
+    };
+    for op in &ops {
+        let block = op.block.label();
+        // Transformer sub-ops are named "<block>.tf..." by the builder.
+        if op.name.contains(".tf") {
+            push_entry(format!("{block}.tf"), true);
+        } else {
+            push_entry(block, false);
+        }
+    }
+    QuantProfile {
+        model: arch.name.to_string(),
+        steps,
+        prompts: 0,
+        ranges,
+    }
+}
+
+// ----------------------------------------------------------------- runtime
+
+/// Measured range collection over real denoising trajectories: drives the
+/// `unet_calib` artifact (the same one `pas::calibrate` uses) and
+/// accumulates ranges for the predicted noise and every up-block input.
+pub struct QuantCalibrator<'a> {
+    coord: &'a Coordinator,
+}
+
+impl<'a> QuantCalibrator<'a> {
+    pub fn new(coord: &'a Coordinator) -> Self {
+        QuantCalibrator { coord }
+    }
+
+    pub fn run(
+        &self,
+        prompts: &[String],
+        steps: usize,
+        guidance: f32,
+    ) -> Result<QuantProfile> {
+        let rt = self.coord.runtime();
+        let n_blocks = 12usize;
+        let mut eps_acc = RangeAccum::new();
+        let mut latent_acc = RangeAccum::new();
+        let mut up_accs: Vec<RangeAccum> = vec![RangeAccum::new(); n_blocks];
+
+        for (pi, prompt) in prompts.iter().enumerate() {
+            let ctx = self.coord.encode_prompts(std::slice::from_ref(prompt))?;
+            let mut latent = Tensor::stack(&[self.coord.init_latent(3000 + pi as u64)])?;
+            let sched = NoiseSchedule::new(rt.manifest().alpha_bar.clone());
+            let mut sampler = make_sampler("ddim", sched, steps);
+            let ts = sampler.timesteps().to_vec();
+            let g = Tensor::scalar(guidance);
+
+            for (i, &t) in ts.iter().enumerate() {
+                latent_acc.observe(&latent.data);
+                let t_in = Tensor::new(vec![1], vec![t as f32])?;
+                let out = rt.execute(
+                    &Runtime::unet_calib(1),
+                    &[
+                        Input::F32(latent.clone()),
+                        Input::F32(t_in),
+                        Input::F32(ctx.clone()),
+                        Input::F32(g.clone()),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                let eps = it.next().ok_or_else(|| anyhow!("missing eps"))?;
+                let ups: Vec<Tensor> = it.collect();
+                if ups.len() != n_blocks {
+                    anyhow::bail!("calib artifact returned {} block inputs", ups.len());
+                }
+                eps_acc.observe(&eps.data);
+                for (b, u) in ups.iter().enumerate() {
+                    up_accs[b].observe(&u.data);
+                }
+                latent.data = sampler.step(i, &latent.data, &eps.data);
+            }
+        }
+
+        let mut ranges = vec![eps_acc.finish("eps"), latent_acc.finish("latent")];
+        for (b, acc) in up_accs.iter().enumerate() {
+            ranges.push(acc.finish(&format!("up{}", b + 1)));
+        }
+        Ok(QuantProfile {
+            model: "runtime".into(),
+            steps,
+            prompts: prompts.len(),
+            ranges,
+        })
+    }
+
+    /// Cache-aware collection: warm starts return the stored profile
+    /// (keyed on manifest digest + steps + prompts + guidance) without
+    /// running a trajectory. The boolean is true on a cache hit.
+    pub fn run_cached(
+        &self,
+        cache: &Cache,
+        prompts: &[String],
+        steps: usize,
+        guidance: f32,
+    ) -> Result<(QuantProfile, bool)> {
+        if let Some(p) = cache.get_quant_profile(steps, prompts, guidance) {
+            return Ok((p, true));
+        }
+        let p = self.run(prompts, steps, guidance)?;
+        cache.put_quant_profile(steps, prompts, guidance, &p)?;
+        Ok((p, false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::inventory::{sd_tiny, sd_v14};
+
+    #[test]
+    fn synthetic_profile_is_deterministic_and_covers_blocks() {
+        let a = synthetic_profile(&sd_v14(), 50);
+        let b = synthetic_profile(&sd_v14(), 50);
+        assert_eq!(a, b, "same arch, same profile");
+        // 12 down + mid + 12 up bodies, plus .tf entries for attention
+        // levels — comfortably more than 25 entries, fewer than per-op.
+        assert!(a.ranges.len() > 25 && a.ranges.len() < 80, "{} entries", a.ranges.len());
+        assert!(a.ranges.iter().any(|r| r.name == "mid"));
+        assert!(a.ranges.iter().any(|r| r.name == "down2.tf"));
+    }
+
+    #[test]
+    fn prefix_lookup_respects_separators() {
+        let p = synthetic_profile(&sd_v14(), 50);
+        let hit = p.range_for("down2.conv1").expect("down2 body entry");
+        assert_eq!(hit.name, "down2");
+        // Transformer sub-op resolves to the longer .tf entry.
+        let tf = p.range_for("down2.tf.d0.logits").expect("down2.tf entry");
+        assert_eq!(tf.name, "down2.tf");
+        // "down1" must not swallow "down12" ops.
+        let deep = p.range_for("down12.conv1").expect("down12 entry");
+        assert_eq!(deep.name, "down12");
+        assert!(p.range_for("nonexistent").is_none());
+    }
+
+    #[test]
+    fn heavy_tailed_tf_entries_have_higher_drf() {
+        let p = synthetic_profile(&sd_tiny(), 20);
+        let body = p.drf("down2.conv1");
+        let tf = p.drf("down2.tf.d0.logits");
+        assert!(tf > 2.0 * body, "tf drf {tf} vs body {body}");
+        assert_eq!(p.drf("unknown.layer"), 1.0);
+        assert!((0.5..=8.0).contains(&tf));
+    }
+
+    #[test]
+    fn profile_json_roundtrip_exact() {
+        let p = synthetic_profile(&sd_tiny(), 20);
+        let back =
+            QuantProfile::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn range_accum_tracks_extremes_and_percentile() {
+        let mut acc = RangeAccum::new();
+        // 1000 small values and one outlier.
+        let mut data = vec![0.5f32; 500];
+        data.extend(vec![-0.5f32; 500]);
+        data.push(100.0);
+        acc.observe(&data);
+        let r = acc.finish("x");
+        assert_eq!(r.lo, -0.5);
+        assert_eq!(r.hi, 100.0);
+        assert_eq!(r.absmax, 100.0);
+        // p99 of |x| stays near the bulk, far below the outlier.
+        assert!(r.p99 <= 1.0, "p99 {}", r.p99);
+        // Deterministic across identical streams.
+        let mut acc2 = RangeAccum::new();
+        acc2.observe(&data);
+        assert_eq!(acc2.finish("x"), r);
+    }
+}

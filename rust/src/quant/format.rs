@@ -1,0 +1,553 @@
+//! Numeric formats and fake-quantisation (the "diverse weight and
+//! activation sizes" axis, paper Sec. I issue 3).
+//!
+//! The runnable artifacts execute in fp32 — reduced precision is
+//! *modelled* (hwsim costing) and *emulated* (fake-quant round-trips over
+//! `runtime::Tensor` data), the standard software proxy for mixed-
+//! precision accelerators (SDP, arXiv 2403.04982; "Speed Is All You
+//! Need", arXiv 2304.11267). Four formats cover the design space the
+//! related work sweeps: int4/int8 symmetric or affine integers (per-
+//! tensor or per-channel scales) and fp16/fp32 floats (fp16 applies real
+//! round-to-nearest-even at the 10-bit mantissa boundary).
+
+use crate::runtime::Tensor;
+
+/// A storage/compute format for one tensor operand. Variant order is
+/// ascending precision, so `Ord` gives "at least as precise as" and
+/// `a.max(b)` picks the safer format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NumericFormat {
+    Int4,
+    Int8,
+    Fp16,
+    Fp32,
+}
+
+impl NumericFormat {
+    pub fn bits(self) -> usize {
+        match self {
+            NumericFormat::Int4 => 4,
+            NumericFormat::Int8 => 8,
+            NumericFormat::Fp16 => 16,
+            NumericFormat::Fp32 => 32,
+        }
+    }
+
+    /// Bytes per element (int4 packs two elements per byte).
+    pub fn bytes(self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, NumericFormat::Fp16 | NumericFormat::Fp32)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            NumericFormat::Int4 => "int4",
+            NumericFormat::Int8 => "int8",
+            NumericFormat::Fp16 => "fp16",
+            NumericFormat::Fp32 => "fp32",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NumericFormat> {
+        match s {
+            "int4" | "i4" | "4" => Some(NumericFormat::Int4),
+            "int8" | "i8" | "8" => Some(NumericFormat::Int8),
+            "fp16" | "f16" | "16" => Some(NumericFormat::Fp16),
+            "fp32" | "f32" | "32" => Some(NumericFormat::Fp32),
+            _ => None,
+        }
+    }
+
+    /// Largest representable symmetric integer magnitude (int formats).
+    pub fn qmax(self) -> Option<f32> {
+        match self {
+            NumericFormat::Int4 => Some(7.0),
+            NumericFormat::Int8 => Some(127.0),
+            _ => None,
+        }
+    }
+
+    /// Noise-to-signal power proxy of quantising a ~Gaussian tensor to
+    /// this format (symmetric, ~4-sigma clipping): MSE/sigma^2 ≈
+    /// (2·4σ/2^b)^2 / 12 / σ^2 = 5.33·4^-b for b-bit integers; floats use
+    /// their effective mantissa width. Feeds the latent-PSNR proxy in
+    /// [`crate::quant::search::predicted_psnr_db`].
+    pub fn quant_nsr(self) -> f64 {
+        match self {
+            NumericFormat::Int4 => 2.08e-2,
+            NumericFormat::Int8 => 8.14e-5,
+            // fp16: 11-bit effective mantissa.
+            NumericFormat::Fp16 => 1.4e-7,
+            NumericFormat::Fp32 => 1.0e-14,
+        }
+    }
+}
+
+/// A (weight, activation) format pair — the unit of assignment: one per
+/// `LayerOp` in a searched plan, or one per request as the uniform
+/// serving-path scheme ("W4A8" etc.).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct QuantScheme {
+    pub weight: NumericFormat,
+    pub act: NumericFormat,
+}
+
+impl QuantScheme {
+    pub fn new(weight: NumericFormat, act: NumericFormat) -> QuantScheme {
+        QuantScheme { weight, act }
+    }
+
+    pub fn fp32() -> QuantScheme {
+        QuantScheme::new(NumericFormat::Fp32, NumericFormat::Fp32)
+    }
+
+    pub fn fp16() -> QuantScheme {
+        QuantScheme::new(NumericFormat::Fp16, NumericFormat::Fp16)
+    }
+
+    pub fn w8a8() -> QuantScheme {
+        QuantScheme::new(NumericFormat::Int8, NumericFormat::Int8)
+    }
+
+    pub fn w4a8() -> QuantScheme {
+        QuantScheme::new(NumericFormat::Int4, NumericFormat::Int8)
+    }
+
+    pub fn w4a4() -> QuantScheme {
+        QuantScheme::new(NumericFormat::Int4, NumericFormat::Int4)
+    }
+
+    /// Multiplier width the MAC array must provision: the wider operand.
+    pub fn mac_bits(self) -> usize {
+        self.weight.bits().max(self.act.bits())
+    }
+
+    /// "W4A8" for mixed integers, "fp16"/"fp32" for uniform floats.
+    pub fn label(self) -> String {
+        if self.weight == self.act && self.weight.is_float() {
+            self.weight.label().to_string()
+        } else {
+            format!("W{}A{}", self.weight.bits(), self.act.bits())
+        }
+    }
+
+    /// Parse "fp32" | "fp16" | "w8a8" | "w4a8" | "w4a4" | "w<b>a<b>".
+    pub fn parse(s: &str) -> Option<QuantScheme> {
+        let s = s.to_lowercase();
+        if let Some(f) = NumericFormat::parse(&s) {
+            return Some(QuantScheme::new(f, f));
+        }
+        let rest = s.strip_prefix('w')?;
+        let (w, a) = rest.split_once('a')?;
+        Some(QuantScheme::new(NumericFormat::parse(w)?, NumericFormat::parse(a)?))
+    }
+}
+
+/// Scale/zero-point granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    /// One scale per channel; element i belongs to channel `i % channels`
+    /// (row-major (rows, channels) layout, the inventory convention).
+    PerChannel,
+}
+
+/// Fitted quantisation parameters for one tensor: per-channel scale and
+/// zero point (a single entry for per-tensor granularity). Float formats
+/// carry no parameters — `fake_quant` applies mantissa rounding directly.
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    pub format: NumericFormat,
+    pub granularity: Granularity,
+    /// Affine fits use the [0, 2^b - 1] code range with a zero point;
+    /// symmetric fits use [-qmax, qmax]. (The flag, not a zero point of
+    /// 0, decides the branch: affine fits of all-positive data land on a
+    /// zero point of 0 and must still use the full unsigned code range.)
+    pub affine: bool,
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+}
+
+fn channel_count(granularity: Granularity, channels: usize) -> usize {
+    match granularity {
+        Granularity::PerTensor => 1,
+        Granularity::PerChannel => channels.max(1),
+    }
+}
+
+impl Quantizer {
+    /// Symmetric absmax fit: scale = absmax / qmax, zero point 0.
+    pub fn fit_symmetric(
+        data: &[f32],
+        format: NumericFormat,
+        granularity: Granularity,
+        channels: usize,
+    ) -> Quantizer {
+        let nch = channel_count(granularity, channels);
+        let mut scale = vec![0.0f32; nch];
+        if let Some(qmax) = format.qmax() {
+            let mut absmax = vec![0.0f32; nch];
+            for (i, &x) in data.iter().enumerate() {
+                let c = i % nch;
+                absmax[c] = absmax[c].max(x.abs());
+            }
+            for (s, &m) in scale.iter_mut().zip(&absmax) {
+                *s = if m > 0.0 { m / qmax } else { 0.0 };
+            }
+        }
+        Quantizer { format, granularity, affine: false, scale, zero: vec![0.0; nch] }
+    }
+
+    /// Affine min/max fit: scale = range / (2^b - 1), zero point maps the
+    /// minimum onto code 0 — better for one-sided (post-SiLU/GELU) data.
+    /// The fitted range is extended to include 0 (the TFLite convention):
+    /// it keeps the zero point a representable code, so ranges that do
+    /// not cross zero (e.g. [10, 11]) quantise correctly instead of
+    /// having their zero point clamped into nonsense.
+    pub fn fit_affine(
+        data: &[f32],
+        format: NumericFormat,
+        granularity: Granularity,
+        channels: usize,
+    ) -> Quantizer {
+        let nch = channel_count(granularity, channels);
+        let mut scale = vec![0.0f32; nch];
+        let mut zero = vec![0.0f32; nch];
+        if format.qmax().is_some() {
+            let levels = ((1usize << format.bits()) - 1) as f32;
+            let mut lo = vec![f32::INFINITY; nch];
+            let mut hi = vec![f32::NEG_INFINITY; nch];
+            for (i, &x) in data.iter().enumerate() {
+                let c = i % nch;
+                lo[c] = lo[c].min(x);
+                hi[c] = hi[c].max(x);
+            }
+            for c in 0..nch {
+                let (l, h) = (lo[c].min(0.0), hi[c].max(0.0));
+                let range = h - l;
+                if range.is_finite() && range > 0.0 {
+                    scale[c] = range / levels;
+                    zero[c] = (-l / scale[c]).round().clamp(0.0, levels);
+                }
+            }
+        }
+        Quantizer { format, granularity, affine: true, scale, zero }
+    }
+
+    /// Quantise-dequantise round trip (fake quant). Integer formats with
+    /// a zero scale (constant/empty input) pass values through unchanged.
+    pub fn fake_quant(&self, data: &[f32]) -> Vec<f32> {
+        match self.format {
+            NumericFormat::Fp32 => data.to_vec(),
+            NumericFormat::Fp16 => data.iter().map(|&x| f16_round(x)).collect(),
+            f => {
+                let qmax = f.qmax().expect("integer format");
+                let levels = ((1usize << f.bits()) - 1) as f32;
+                let nch = self.scale.len();
+                data.iter()
+                    .enumerate()
+                    .map(|(i, &x)| {
+                        let c = i % nch;
+                        let s = self.scale[c];
+                        if s == 0.0 {
+                            return x;
+                        }
+                        if self.affine {
+                            // Affine: codes in [0, 2^b - 1].
+                            let z = self.zero[c];
+                            let q = (x / s + z).round().clamp(0.0, levels);
+                            (q - z) * s
+                        } else {
+                            // Symmetric: codes in [-qmax, qmax].
+                            (x / s).round().clamp(-qmax, qmax) * s
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    pub fn fake_quant_tensor(&self, t: &Tensor) -> Tensor {
+        Tensor { dims: t.dims.clone(), data: self.fake_quant(&t.data) }
+    }
+}
+
+/// One-call fake quant: symmetric fit + round trip.
+pub fn fake_quant(
+    data: &[f32],
+    format: NumericFormat,
+    granularity: Granularity,
+    channels: usize,
+) -> Vec<f32> {
+    Quantizer::fit_symmetric(data, format, granularity, channels).fake_quant(data)
+}
+
+/// In-place per-tensor symmetric activation emulation — the coordinator
+/// applies this to the U-Net eps output every step when a request carries
+/// a quant scheme, so reduced-precision requests produce (deterministic)
+/// reduced-precision latents.
+pub fn emulate_activations(data: &mut [f32], format: NumericFormat) {
+    match format {
+        NumericFormat::Fp32 => {}
+        NumericFormat::Fp16 => {
+            for x in data.iter_mut() {
+                *x = f16_round(*x);
+            }
+        }
+        _ => {
+            let q = Quantizer::fit_symmetric(data, format, Granularity::PerTensor, 1);
+            let out = q.fake_quant(data);
+            data.copy_from_slice(&out);
+        }
+    }
+}
+
+// ------------------------------------------------------------------- fp16
+
+/// Round an f32 to the nearest representable fp16 value (ties to even),
+/// returned as f32. Overflow saturates to +-inf, |x| < 2^-24 flushes to
+/// signed zero — IEEE 754 binary16 semantics without a half-float dep.
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// f32 -> binary16 bit pattern, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xff) as i32;
+    let man = b & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (quietened).
+        return sign | 0x7c00 | (((man != 0) as u16) << 9);
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 31 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e16 <= 0 {
+        if e16 < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // Subnormal: drop (14 - e16) mantissa bits of the full 24-bit
+        // significand, rounding to nearest-even.
+        let full = man | 0x0080_0000;
+        let shift = (14 - e16) as u32;
+        let lsb = 1u32 << shift;
+        let half = lsb >> 1;
+        let mut v = full >> shift;
+        let rem = full & (lsb - 1);
+        if rem > half || (rem == half && v & 1 == 1) {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+    let mut v = ((e16 as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && v & 1 == 1) {
+        v += 1; // carry may roll into the exponent (and into inf) — correct
+    }
+    sign | v as u16
+}
+
+/// binary16 bit pattern -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    if exp == 0 {
+        // Subnormal (or zero): value = man * 2^-24, exactly representable.
+        let mag = man as f32 * (1.0 / 16_777_216.0);
+        return if sign != 0 { -mag } else { mag };
+    }
+    f32::from_bits(sign | ((exp + 127 - 15) << 23) | (man << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rms(a: &[f32], b: &[f32]) -> f64 {
+        (a.iter()
+            .zip(b)
+            .map(|(&x, &y)| {
+                let d = x as f64 - y as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / a.len() as f64)
+            .sqrt()
+    }
+
+    #[test]
+    fn f16_exact_values_roundtrip() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 2.0, -2.75, 65504.0, 6.103515625e-5] {
+            assert_eq!(f16_round(x), x, "{x} must be fp16-exact");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_and_underflow() {
+        assert_eq!(f16_round(1e5), f32::INFINITY);
+        assert_eq!(f16_round(-1e5), f32::NEG_INFINITY);
+        assert_eq!(f16_round(1e-9), 0.0);
+        assert!(f16_round(-1e-9).to_bits() == (-0.0f32).to_bits());
+        assert!(f16_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn f16_ties_round_to_even() {
+        // fp16 spacing at 2048 is 2: 2049 sits exactly between 2048 and
+        // 2050 and must round to the even mantissa (2048).
+        assert_eq!(f16_round(2049.0), 2048.0);
+        assert_eq!(f16_round(2051.0), 2052.0);
+    }
+
+    #[test]
+    fn f16_subnormals_quantise() {
+        // Smallest subnormal is 2^-24; 1.4e-45-scale f32s flush to zero,
+        // values near 2^-24 snap to multiples of it.
+        let ulp = 1.0f32 / 16_777_216.0;
+        assert_eq!(f16_round(ulp), ulp);
+        assert_eq!(f16_round(2.4 * ulp), 2.0 * ulp);
+    }
+
+    #[test]
+    fn int8_beats_int4_on_gaussian_data() {
+        let mut rng = Pcg32::seeded(7);
+        let data = rng.gaussian_vec(4096);
+        let e8 = rms(&fake_quant(&data, NumericFormat::Int8, Granularity::PerTensor, 1), &data);
+        let e4 = rms(&fake_quant(&data, NumericFormat::Int4, Granularity::PerTensor, 1), &data);
+        assert!(e8 < e4 / 4.0, "int8 rms {e8} vs int4 {e4}");
+        // Round-trip error is bounded by half the step size.
+        let q = Quantizer::fit_symmetric(&data, NumericFormat::Int8, Granularity::PerTensor, 1);
+        let back = q.fake_quant(&data);
+        let bound = q.scale[0] as f64 * 0.5 + 1e-6;
+        for (x, y) in data.iter().zip(&back) {
+            assert!((*x as f64 - *y as f64).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn per_channel_beats_per_tensor_on_skewed_channels() {
+        // Channel 0 is 100x larger than channel 1: a shared absmax scale
+        // wipes out channel 1's resolution.
+        let mut rng = Pcg32::seeded(11);
+        let n = 1024;
+        let mut data = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            data.push((rng.next_f32() * 2.0 - 1.0) * 100.0);
+            data.push(rng.next_f32() * 2.0 - 1.0);
+        }
+        let pt = fake_quant(&data, NumericFormat::Int8, Granularity::PerTensor, 2);
+        let pc = fake_quant(&data, NumericFormat::Int8, Granularity::PerChannel, 2);
+        let ch1 = |v: &[f32]| v.iter().skip(1).step_by(2).copied().collect::<Vec<f32>>();
+        let e_pt = rms(&ch1(&pt), &ch1(&data));
+        let e_pc = rms(&ch1(&pc), &ch1(&data));
+        assert!(e_pc < e_pt / 10.0, "per-channel {e_pc} vs per-tensor {e_pt}");
+    }
+
+    #[test]
+    fn affine_beats_symmetric_on_one_sided_data() {
+        // Post-SiLU-style data in [0, 1]: symmetric wastes half the codes.
+        let mut rng = Pcg32::seeded(13);
+        let data: Vec<f32> = (0..4096).map(|_| rng.next_f32()).collect();
+        let sym = Quantizer::fit_symmetric(&data, NumericFormat::Int4, Granularity::PerTensor, 1);
+        let aff = Quantizer::fit_affine(&data, NumericFormat::Int4, Granularity::PerTensor, 1);
+        let e_sym = rms(&sym.fake_quant(&data), &data);
+        let e_aff = rms(&aff.fake_quant(&data), &data);
+        assert!(e_aff < e_sym, "affine {e_aff} vs symmetric {e_sym}");
+        // Regression: an affine fit of all-positive data lands on a zero
+        // point of 0 and must still use the full unsigned code range —
+        // every element stays within half a step, nothing is clipped.
+        let back = aff.fake_quant(&data);
+        let bound = aff.scale[0] as f64 * 0.5 + 1e-6;
+        for (x, y) in data.iter().zip(&back) {
+            assert!((*x as f64 - *y as f64).abs() <= bound, "clipped: {x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn affine_handles_ranges_that_exclude_zero() {
+        // The fitted range is zero-extended, so data living entirely
+        // above (or below) zero round-trips within half a step instead
+        // of being collapsed by a clamped zero point.
+        for sign in [1.0f32, -1.0] {
+            let data: Vec<f32> =
+                (0..=255).map(|i| sign * (10.0 + i as f32 / 255.0)).collect();
+            let q = Quantizer::fit_affine(&data, NumericFormat::Int8, Granularity::PerTensor, 1);
+            let back = q.fake_quant(&data);
+            let bound = q.scale[0] as f64 * 0.5 + 1e-4;
+            for (x, y) in data.iter().zip(&back) {
+                assert!(
+                    (*x as f64 - *y as f64).abs() <= bound,
+                    "sign {sign}: {x} -> {y} (bound {bound})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_and_constant_inputs_pass_through() {
+        let data = vec![1.25f32, -3.5, 0.0];
+        assert_eq!(fake_quant(&data, NumericFormat::Fp32, Granularity::PerTensor, 1), data);
+        let zeros = vec![0.0f32; 8];
+        assert_eq!(fake_quant(&zeros, NumericFormat::Int8, Granularity::PerTensor, 1), zeros);
+    }
+
+    #[test]
+    fn tensor_roundtrip_keeps_shape() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, -0.2, 0.3, 1.0, -1.0, 0.5]).unwrap();
+        let q = Quantizer::fit_symmetric(&t.data, NumericFormat::Int8, Granularity::PerChannel, 3);
+        let out = q.fake_quant_tensor(&t);
+        assert_eq!(out.dims, t.dims);
+        assert!(rms(&out.data, &t.data) < 0.01);
+    }
+
+    #[test]
+    fn emulate_activations_is_deterministic_and_lossy() {
+        let mut rng = Pcg32::seeded(17);
+        let orig = rng.gaussian_vec(256);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        emulate_activations(&mut a, NumericFormat::Int8);
+        emulate_activations(&mut b, NumericFormat::Int8);
+        assert_eq!(a, b, "same input, same output");
+        assert_ne!(a, orig, "int8 emulation must actually quantise");
+        let mut c = orig.clone();
+        emulate_activations(&mut c, NumericFormat::Fp32);
+        assert_eq!(c, orig, "fp32 is the identity");
+    }
+
+    #[test]
+    fn scheme_labels_and_parsing() {
+        assert_eq!(QuantScheme::w8a8().label(), "W8A8");
+        assert_eq!(QuantScheme::w4a8().label(), "W4A8");
+        assert_eq!(QuantScheme::fp16().label(), "fp16");
+        for s in ["fp32", "fp16", "w8a8", "w4a8", "w4a4", "W8A16"] {
+            let parsed = QuantScheme::parse(s).expect(s);
+            assert_eq!(parsed.label().to_lowercase(), s.to_lowercase());
+        }
+        assert!(QuantScheme::parse("w3a7").is_none());
+        assert_eq!(QuantScheme::w4a8().mac_bits(), 8);
+        assert_eq!(QuantScheme::fp32().mac_bits(), 32);
+    }
+
+    #[test]
+    fn format_order_is_ascending_precision() {
+        assert!(NumericFormat::Int4 < NumericFormat::Int8);
+        assert!(NumericFormat::Int8 < NumericFormat::Fp16);
+        assert!(NumericFormat::Fp16 < NumericFormat::Fp32);
+        assert_eq!(NumericFormat::Int4.max(NumericFormat::Fp16), NumericFormat::Fp16);
+        // NSR proxy is monotone in precision.
+        assert!(NumericFormat::Int4.quant_nsr() > NumericFormat::Int8.quant_nsr());
+        assert!(NumericFormat::Int8.quant_nsr() > NumericFormat::Fp16.quant_nsr());
+    }
+}

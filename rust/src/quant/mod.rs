@@ -1,0 +1,52 @@
+//! Mixed-precision quantization subsystem (S15).
+//!
+//! SD-Acc names three workload problems (Sec. I): redundant sampling
+//! compute (covered by [`pas`](crate::pas)), heterogeneous operators
+//! (covered by [`hwsim`](crate::hwsim)), and **diverse weight and
+//! activation sizes** — this module. It assigns a per-layer numeric
+//! format to every `LayerOp` in the inventory and propagates that choice
+//! end-to-end: quantisers and fake-quant emulation, activation-range
+//! calibration, a quality-aware bit-width search, precision-scaled
+//! hwsim costing, and a `quant` field on the serving request path.
+//!
+//! File map (paper section / related-work citation each reproduces):
+//!
+//! - [`format`]: int4/int8/fp16/fp32 symmetric & affine quantisers,
+//!   per-tensor and per-channel, with exact binary16 rounding — the
+//!   reduced-precision layouts of "Speed Is All You Need" (Chen et al.,
+//!   arXiv 2304.11267) and the int datapath of the SDP processor (Choi
+//!   et al., arXiv 2403.04982).
+//! - [`calibrate`]: activation-range collection (min/max + percentile)
+//!   over deterministic synthetic inventories or measured denoising
+//!   trajectories (the `unet_calib` artifact `pas::calibrate` drives),
+//!   producing a cacheable [`QuantProfile`] — the calibration step of
+//!   every post-training-quantisation flow, keyed like Fig. 4 reports.
+//! - [`search`]: quality-aware bit-width assignment in the Fig. 7
+//!   optimisation-framework shape — enumerate, gate on a latent-PSNR
+//!   proxy (DESIGN.md substitution for CLIP/FID), keep the Pareto set
+//!   over precision-scaled energy — with a sensitivity pass pinning
+//!   first/last convolutions and attention-softmax inputs to fp16, the
+//!   layer set SDP exempts from its text-conditioned int datapath.
+//!
+//! Cross-cutting integration: `hwsim::simulate_quant` scales cycles,
+//! DRAM traffic and SA energy with operand bytes and MAC width (so a
+//! W4A8 plan shows up in every `Report` axis), `pas::cost::CostModel`
+//! composes Eq. 3 with the multiplier-width saving, the coordinator
+//! fake-quants U-Net outputs for requests carrying a scheme (batched
+//! under a `quant`-aware `BatchKey`), profiles persist in the `quant`
+//! cache namespace under manifest-hash invalidation, and the
+//! `sd-acc quant calibrate|search|report` CLI drives the whole loop.
+
+pub mod calibrate;
+pub mod format;
+pub mod search;
+
+pub use calibrate::{synthetic_profile, LayerRange, QuantCalibrator, QuantProfile};
+pub use format::{
+    emulate_activations, f16_round, fake_quant, Granularity, NumericFormat, QuantScheme,
+    Quantizer,
+};
+pub use search::{
+    assign, enumerate_schemes, is_fragile, predicted_psnr_db, search, QuantCandidate,
+    QuantConstraints, QuantSearcher,
+};

@@ -1,0 +1,393 @@
+//! Quality-aware bit-width search (the Fig. 7 framework applied to the
+//! precision axis instead of the sampling axis).
+//!
+//! Same shape as `pas::search`: enumerate candidates, rank on a cost
+//! axis, gate on a fidelity axis, keep the Pareto set. Here the cost
+//! axis is the precision-scaled hwsim energy/traffic of one CFG U-Net
+//! step and the fidelity axis is a latent-PSNR proxy from the additive
+//! quantisation-noise model (optionally validated against measured
+//! latents via [`QuantSearcher`] when a runtime is available, mirroring
+//! `pas::search::Searcher`).
+//!
+//! The sensitivity pass keeps fragile layers high-precision: the
+//! first/last convolutions and the attention-softmax inputs — the same
+//! set SDP (arXiv 2403.04982) exempts from its text-conditioned int
+//! datapath and standard practice in W8A8 SD deployments.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, GenRequest};
+use crate::hwsim::arch::{AccelConfig, Policy};
+use crate::hwsim::engine::{simulate_unet_step_quant, Report};
+use crate::models::inventory::{LayerOp, OpKind};
+use crate::quality;
+use crate::quant::calibrate::QuantProfile;
+use crate::quant::format::{NumericFormat, QuantScheme};
+use crate::util::stats;
+
+/// User requirements for a precision search.
+#[derive(Debug, Clone)]
+pub struct QuantConstraints {
+    /// Floor on the latent-PSNR proxy (dB) — the quality target.
+    pub min_psnr_db: f64,
+    /// Keep fragile layers at >= fp16 (sensitivity pass).
+    pub pin_fragile: bool,
+}
+
+impl Default for QuantConstraints {
+    fn default() -> Self {
+        QuantConstraints { min_psnr_db: 30.0, pin_fragile: true }
+    }
+}
+
+/// Layers whose quantisation error disproportionately damages output
+/// quality: the latent-adjacent first/last convolutions, and everything
+/// feeding a softmax (attention logits explode the exp() under coarse
+/// steps). The softmax ops themselves ride along for completeness.
+pub fn is_fragile(op: &LayerOp) -> bool {
+    op.name == "conv_in"
+        || op.name == "conv_out"
+        || op.name.ends_with(".logits")
+        || op.name.ends_with(".clogits")
+        || matches!(op.kind, OpKind::Softmax { .. })
+}
+
+/// Expand a uniform scheme into the per-layer assignment: every `LayerOp`
+/// gets the scheme, except fragile layers which are raised to at least
+/// fp16 when `pin_fragile` is set (never lowered — pinning an fp32
+/// request to fp16 would be a downgrade).
+pub fn assign(ops: &[LayerOp], scheme: QuantScheme, pin_fragile: bool) -> Vec<QuantScheme> {
+    ops.iter()
+        .map(|op| {
+            if pin_fragile && is_fragile(op) {
+                QuantScheme::new(
+                    scheme.weight.max(NumericFormat::Fp16),
+                    scheme.act.max(NumericFormat::Fp16),
+                )
+            } else {
+                scheme
+            }
+        })
+        .collect()
+}
+
+/// Latent-PSNR proxy (dB) of running `ops` under a per-layer assignment:
+/// each linear layer injects quantisation noise proportional to its
+/// formats' NSR (scaled by the layer's calibrated dynamic-range factor
+/// when a profile is given), weighted by MAC share. Monotone in
+/// aggressiveness like the measured PSNR it stands in for; absolute
+/// values are a proxy, not a CLIP/FID measurement (DESIGN.md
+/// substitution table).
+pub fn predicted_psnr_db(
+    ops: &[LayerOp],
+    plan: &[QuantScheme],
+    profile: Option<&QuantProfile>,
+) -> f64 {
+    assert_eq!(ops.len(), plan.len(), "one scheme per op");
+    let total: f64 = ops.iter().map(|o| o.kind.macs() as f64).sum();
+    if total == 0.0 {
+        return f64::INFINITY;
+    }
+    let mut nsr = 0.0f64;
+    for (op, s) in ops.iter().zip(plan) {
+        let m = op.kind.macs() as f64;
+        if m == 0.0 {
+            continue;
+        }
+        let drf = profile.map_or(1.0, |p| p.drf(&op.name));
+        nsr += m / total * (s.weight.quant_nsr() + s.act.quant_nsr() * drf);
+    }
+    -10.0 * nsr.max(1e-15).log10()
+}
+
+/// One evaluated precision configuration.
+#[derive(Debug, Clone)]
+pub struct QuantCandidate {
+    pub scheme: QuantScheme,
+    /// Predicted latent-PSNR proxy (dB).
+    pub psnr_db: f64,
+    /// Measured latent PSNR vs the fp32 reference, when validated.
+    pub measured_psnr_db: Option<f64>,
+    /// One CFG U-Net step under this assignment.
+    pub report: Report,
+    pub energy_j: f64,
+    /// Energy vs the fp32 uniform baseline (>= 1 is a win).
+    pub energy_reduction: f64,
+    /// DRAM traffic vs the fp32 uniform baseline.
+    pub traffic_reduction: f64,
+    /// Layers the sensitivity pass pinned to >= fp16.
+    pub pinned: usize,
+}
+
+/// All (weight, act) pairs with weight precision <= activation precision
+/// — the half of the grid hardware deployments use (weights are static
+/// and tolerate narrower codes than streamed activations).
+pub fn enumerate_schemes() -> Vec<QuantScheme> {
+    let fmts = [
+        NumericFormat::Int4,
+        NumericFormat::Int8,
+        NumericFormat::Fp16,
+        NumericFormat::Fp32,
+    ];
+    let mut out = Vec::new();
+    for &w in &fmts {
+        for &a in &fmts {
+            if w <= a {
+                out.push(QuantScheme::new(w, a));
+            }
+        }
+    }
+    out
+}
+
+/// Quality-aware precision search: evaluate every enumerated scheme under
+/// the given accelerator/policy, gate on the PSNR floor, keep the Pareto
+/// set over (energy reduction, quality), sorted by energy reduction
+/// descending. The fp32 anchor is exempt from the gate (it IS the
+/// reference the floor is measured against), so the result is non-empty
+/// even under an unreachable quality target.
+pub fn search(
+    ops: &[LayerOp],
+    cfg: &AccelConfig,
+    policy: Policy,
+    cons: &QuantConstraints,
+    profile: Option<&QuantProfile>,
+) -> Vec<QuantCandidate> {
+    let fp32_plan = assign(ops, QuantScheme::fp32(), false);
+    let base = simulate_unet_step_quant(cfg, policy, ops, &fp32_plan);
+    let base_energy = base.energy_j(cfg);
+    let base_traffic = base.traffic_bytes;
+
+    let mut cands: Vec<QuantCandidate> = enumerate_schemes()
+        .into_iter()
+        .map(|scheme| {
+            let plan = assign(ops, scheme, cons.pin_fragile);
+            let pinned = ops
+                .iter()
+                .zip(&plan)
+                .filter(|(_, &p)| p != scheme)
+                .count();
+            let report = simulate_unet_step_quant(cfg, policy, ops, &plan);
+            let energy_j = report.energy_j(cfg);
+            QuantCandidate {
+                scheme,
+                psnr_db: predicted_psnr_db(ops, &plan, profile),
+                measured_psnr_db: None,
+                energy_reduction: base_energy / energy_j,
+                traffic_reduction: base_traffic / report.traffic_bytes.max(1.0),
+                energy_j,
+                report,
+                pinned,
+            }
+        })
+        .filter(|c| c.psnr_db >= cons.min_psnr_db || c.scheme == QuantScheme::fp32())
+        .collect();
+
+    // Pareto prune: drop candidates beaten-or-matched on both axes by
+    // another that is strictly better on at least one.
+    let dominated: Vec<bool> = cands
+        .iter()
+        .map(|c| {
+            cands.iter().any(|o| {
+                o.energy_reduction >= c.energy_reduction
+                    && o.psnr_db >= c.psnr_db
+                    && (o.energy_reduction > c.energy_reduction || o.psnr_db > c.psnr_db)
+            })
+        })
+        .collect();
+    let mut front: Vec<QuantCandidate> = cands
+        .drain(..)
+        .zip(dominated)
+        .filter(|(_, d)| !d)
+        .map(|(c, _)| c)
+        .collect();
+    front.sort_by(|a, b| b.energy_reduction.partial_cmp(&a.energy_reduction).unwrap());
+    front
+}
+
+/// Measured validation against the runnable model, mirroring
+/// `pas::search::Searcher`: generate fp32 references, regenerate with
+/// the candidate scheme on the request path (the coordinator fake-quants
+/// the U-Net output each step), and score with `quality::latent_psnr`.
+///
+/// Limitation: the artifacts execute fp32 weights, so the emulation (and
+/// therefore the measurement) reflects the candidate's **activation**
+/// format only — schemes differing solely in weight format measure
+/// identically. Weight sensitivity is covered by the analytic proxy;
+/// report measured numbers as activation-axis validation.
+pub struct QuantSearcher<'a> {
+    pub coord: &'a Coordinator,
+}
+
+impl<'a> QuantSearcher<'a> {
+    /// Fill `measured_psnr_db` on up to `max_validate` top candidates and
+    /// return the ones meeting `min_measured_db`. See the type-level note:
+    /// the measurement is activation-axis only.
+    pub fn validate(
+        &self,
+        cands: &mut [QuantCandidate],
+        prompts: &[String],
+        steps: usize,
+        min_measured_db: f64,
+        max_validate: usize,
+    ) -> Result<Vec<QuantCandidate>> {
+        let refs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut r = GenRequest::new(p, 7000 + i as u64);
+                r.steps = steps;
+                self.coord.generate_one(&r)
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut passed = Vec::new();
+        for cand in cands.iter_mut().take(max_validate) {
+            let mut psnrs = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                let mut r = GenRequest::new(p, 7000 + i as u64);
+                r.steps = steps;
+                r.quant = Some(cand.scheme);
+                let out = self.coord.generate_one(&r)?;
+                psnrs.push(quality::latent_psnr(&out.latent, &refs[i].latent));
+            }
+            cand.measured_psnr_db = Some(stats::mean(&psnrs));
+            if cand.measured_psnr_db.unwrap() >= min_measured_db {
+                passed.push(cand.clone());
+            }
+        }
+        Ok(passed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::inventory::{sd_v14, unet_ops};
+    use crate::quant::calibrate::synthetic_profile;
+
+    fn defaults() -> (Vec<LayerOp>, AccelConfig, Policy) {
+        (unet_ops(&sd_v14()), AccelConfig::default(), Policy::optimized())
+    }
+
+    #[test]
+    fn fragile_set_covers_ends_and_softmax_inputs() {
+        let ops = unet_ops(&sd_v14());
+        let fragile: Vec<&str> = ops
+            .iter()
+            .filter(|o| is_fragile(o))
+            .map(|o| o.name.as_str())
+            .collect();
+        assert!(fragile.contains(&"conv_in"));
+        assert!(fragile.contains(&"conv_out"));
+        assert!(fragile.iter().any(|n| n.ends_with(".logits")));
+        assert!(fragile.iter().any(|n| n.ends_with(".clogits")));
+        // A tiny share of the network — pinning must not erase the win.
+        let frac = fragile.len() as f64 / ops.len() as f64;
+        assert!(frac < 0.2, "fragile fraction {frac}");
+    }
+
+    #[test]
+    fn assignment_pins_up_never_down() {
+        let ops = unet_ops(&sd_v14());
+        let w8 = assign(&ops, QuantScheme::w8a8(), true);
+        let logits = ops.iter().position(|o| o.name.ends_with(".logits")).unwrap();
+        assert_eq!(w8[logits], QuantScheme::fp16(), "fragile raised to fp16");
+        assert_eq!(w8[1], QuantScheme::w8a8(), "bulk keeps the scheme");
+        // fp32 request: pinning must not lower fragile layers to fp16.
+        let f32p = assign(&ops, QuantScheme::fp32(), true);
+        assert_eq!(f32p[logits], QuantScheme::fp32());
+        // Without pinning everything is uniform.
+        assert!(assign(&ops, QuantScheme::w4a4(), false)
+            .iter()
+            .all(|&s| s == QuantScheme::w4a4()));
+    }
+
+    #[test]
+    fn psnr_proxy_is_monotone_in_precision() {
+        let ops = unet_ops(&sd_v14());
+        let p = |s: QuantScheme| predicted_psnr_db(&ops, &assign(&ops, s, false), None);
+        let (f32_db, f16_db, w8, w48, w44) = (
+            p(QuantScheme::fp32()),
+            p(QuantScheme::fp16()),
+            p(QuantScheme::w8a8()),
+            p(QuantScheme::w4a8()),
+            p(QuantScheme::w4a4()),
+        );
+        assert!(f32_db > f16_db && f16_db > w8 && w8 > w48 && w48 > w44);
+        // The default 30 dB target separates W8A8 (passes) from W4A8.
+        assert!(w8 > 30.0, "W8A8 proxy {w8}");
+        assert!(w48 < 30.0, "W4A8 proxy {w48}");
+        // Sensitivity pinning can only improve the proxy.
+        let pinned = predicted_psnr_db(&ops, &assign(&ops, QuantScheme::w8a8(), true), None);
+        assert!(pinned >= w8);
+    }
+
+    #[test]
+    fn calibrated_profile_penalises_heavy_tails() {
+        let ops = unet_ops(&sd_v14());
+        let profile = synthetic_profile(&sd_v14(), 50);
+        let plan = assign(&ops, QuantScheme::w8a8(), false);
+        let with = predicted_psnr_db(&ops, &plan, Some(&profile));
+        let without = predicted_psnr_db(&ops, &plan, None);
+        assert!(with < without, "heavy-tailed logits must cost quality: {with} vs {without}");
+    }
+
+    #[test]
+    fn search_meets_acceptance_band() {
+        let (ops, cfg, policy) = defaults();
+        let front = search(&ops, &cfg, policy, &QuantConstraints::default(), None);
+        assert!(!front.is_empty());
+        // Sorted by energy reduction, Pareto-consistent.
+        assert!(front
+            .windows(2)
+            .all(|w| w[0].energy_reduction >= w[1].energy_reduction));
+        for pair in front.windows(2) {
+            assert!(pair[1].psnr_db > pair[0].psnr_db, "front must trade energy for quality");
+        }
+        // Every survivor meets the quality floor; W8A8 is on the front
+        // with >= 3x modeled energy reduction over fp32.
+        assert!(front.iter().all(|c| c.psnr_db >= 30.0));
+        let w8 = front
+            .iter()
+            .find(|c| c.scheme == QuantScheme::w8a8())
+            .expect("W8A8 on the front");
+        assert!(w8.energy_reduction >= 3.0, "W8A8 energy {:.2}x", w8.energy_reduction);
+        assert!(w8.traffic_reduction > 2.0, "W8A8 traffic {:.2}x", w8.traffic_reduction);
+        assert!(w8.pinned > 0, "sensitivity pass pinned nothing");
+        // W4A8 fails the default floor...
+        assert!(front.iter().all(|c| c.scheme != QuantScheme::w4a8()));
+        // ...but joins under a relaxed target with a bigger win.
+        let relaxed = search(
+            &ops,
+            &cfg,
+            policy,
+            &QuantConstraints { min_psnr_db: 15.0, ..Default::default() },
+            None,
+        );
+        let w48 = relaxed
+            .iter()
+            .find(|c| c.scheme == QuantScheme::w4a8())
+            .expect("W4A8 under relaxed target");
+        assert!(w48.energy_reduction > w8.energy_reduction);
+    }
+
+    #[test]
+    fn fp32_anchor_survives_unreachable_targets() {
+        let (ops, cfg, policy) = defaults();
+        // 100 dB: only fp32 clears the gate naturally; 1000 dB: nothing
+        // does, and the anchor exemption keeps the front non-empty.
+        for floor in [100.0, 1000.0] {
+            let front = search(
+                &ops,
+                &cfg,
+                policy,
+                &QuantConstraints { min_psnr_db: floor, ..Default::default() },
+                None,
+            );
+            assert_eq!(front.len(), 1, "floor {floor}");
+            assert_eq!(front[0].scheme, QuantScheme::fp32());
+            assert!((front[0].energy_reduction - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -346,4 +346,65 @@ mod tests {
     fn make_sampler_rejects_unknown() {
         make_sampler("euler", sched(), 10);
     }
+
+    /// PNDM's `_get_prev_sample` transfer is the DDIM update rearranged
+    /// (the eps coefficients are algebraically identical), and the PLMS
+    /// warmup blend of a constant eps history is that eps itself — so
+    /// with constant eps the first steps of the two samplers must agree.
+    #[test]
+    fn pndm_warmup_degenerates_to_ddim_on_constant_eps() {
+        let mut rng = Pcg32::seeded(21);
+        let x0: Vec<f32> = rng.gaussian_vec(32);
+        let eps: Vec<f32> = rng.gaussian_vec(32);
+        let mut d = Ddim::new(sched(), 50);
+        let mut p = Pndm::new(sched(), 50);
+        let mut xd = x0.clone();
+        let mut xp = x0;
+        for i in 0..3 {
+            xd = d.step(i, &xd, &eps);
+            xp = p.step(i, &xp, &eps);
+            let err = crate::util::stats::l2_dist(&xd, &xp)
+                / crate::util::stats::l2_norm(&xd).max(1e-9);
+            assert!(err < 1e-4, "step {i}: DDIM/PNDM relative gap {err}");
+        }
+    }
+
+    /// First PNDM step (empty history) matches DDIM for *arbitrary* eps —
+    /// the multistep blend only kicks in from step 2.
+    #[test]
+    fn pndm_first_step_equals_ddim_for_any_eps() {
+        let mut rng = Pcg32::seeded(22);
+        for trial in 0..8 {
+            let x: Vec<f32> = rng.gaussian_vec(16);
+            let e: Vec<f32> = rng.gaussian_vec(16);
+            let yd = Ddim::new(sched(), 30).step(0, &x, &e);
+            let yp = Pndm::new(sched(), 30).step(0, &x, &e);
+            for (a, b) in yd.iter().zip(&yp) {
+                assert!((a - b).abs() < 1e-4, "trial {trial}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// scaled_linear properties over the whole plausible (T, beta) space:
+    /// alpha_bar is strictly decreasing, stays in (0, 1), and starts at
+    /// 1 - beta_start.
+    #[test]
+    fn scaled_linear_monotone_and_in_range_property() {
+        crate::testing::check_no_shrink(
+            "scaled-linear-schedule",
+            |rng| {
+                let t = crate::testing::gen_usize(rng, 2, 2000);
+                let b0 = 1e-5 + rng.next_f64() * 5e-3;
+                let b1 = b0 + rng.next_f64() * 0.05;
+                (t, b0, b1)
+            },
+            |&(t, b0, b1)| {
+                let s = NoiseSchedule::scaled_linear(t, b0, b1);
+                s.alpha_bar.len() == t
+                    && s.alpha_bar.iter().all(|&a| a > 0.0 && a < 1.0)
+                    && s.alpha_bar.windows(2).all(|w| w[1] < w[0])
+                    && (s.alpha_bar[0] as f64 - (1.0 - b0)).abs() < 1e-6
+            },
+        );
+    }
 }

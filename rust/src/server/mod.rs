@@ -2,7 +2,8 @@
 //! metrics — std threads + channels (offline build: no tokio).
 //!
 //! Requests are grouped by `GenRequest::batch_key()` (steps/sampler/plan/
-//! guidance must match to run lockstep) and flushed to workers either
+//! guidance/quant scheme must match to run lockstep) and flushed to
+//! workers either
 //! when a full batch of the largest compiled size is available or when
 //! the oldest queued request exceeds `max_wait`. This is the vLLM-router
 //! pattern scaled to PJRT-CPU executables.

@@ -1,0 +1,115 @@
+//! Integration: the mixed-precision subsystem end to end (ISSUE 2
+//! acceptance criteria). Pure host code — no AOT artifacts needed, so
+//! these always run: the quality-gated search must put W8A8 on the
+//! Pareto front with >= 3x modeled energy reduction over fp32, and a
+//! cached QuantProfile must be invalidated by a manifest-hash change.
+
+use std::path::PathBuf;
+
+use sd_acc::cache::{Cache, StoreConfig, NS_REQUEST};
+use sd_acc::coordinator::GenRequest;
+use sd_acc::hwsim::arch::{AccelConfig, Policy};
+use sd_acc::models::inventory::{sd_v14, unet_ops};
+use sd_acc::quant::{search, synthetic_profile, QuantConstraints, QuantScheme};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sdacc_itquant_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn w8a8_meets_energy_target_under_quality_floor() {
+    let ops = unet_ops(&sd_v14());
+    let cfg = AccelConfig::default();
+    let profile = synthetic_profile(&sd_v14(), 50);
+    let cons = QuantConstraints::default(); // 30 dB floor, sensitivity pass on
+    let front = search(&ops, &cfg, Policy::optimized(), &cons, Some(&profile));
+
+    // Every Pareto survivor respects the configured quality target.
+    assert!(!front.is_empty());
+    assert!(front.iter().all(|c| c.psnr_db >= cons.min_psnr_db));
+
+    // W8A8: >= 3x modeled energy reduction vs fp32 in the hwsim Report,
+    // at a latent-PSNR proxy above the floor.
+    let w8 = front
+        .iter()
+        .find(|c| c.scheme == QuantScheme::w8a8())
+        .expect("W8A8 on the front");
+    assert!(
+        w8.energy_reduction >= 3.0,
+        "W8A8 modeled energy reduction {:.2}x < 3x",
+        w8.energy_reduction
+    );
+    assert!(w8.psnr_db >= cons.min_psnr_db);
+    // The reduction shows up inside the Report itself, not just a ratio:
+    // cycles and traffic both shrink vs the fp32 baseline report.
+    let fp32 = front
+        .iter()
+        .find(|c| c.scheme == QuantScheme::fp32())
+        .expect("fp32 anchor on the front");
+    assert!(w8.report.sa_cycles < 0.3 * fp32.report.sa_cycles);
+    assert!(w8.report.traffic_bytes < 0.5 * fp32.report.traffic_bytes);
+
+    // The front is a real Pareto set: energy-sorted, quality-inverted.
+    assert!(front.windows(2).all(|w| w[0].energy_reduction >= w[1].energy_reduction));
+    assert!(front.windows(2).all(|w| w[0].psnr_db < w[1].psnr_db));
+}
+
+#[test]
+fn quant_profile_cache_invalidated_by_manifest_change() {
+    let dir = tmp_dir("manifest");
+    let prompts = vec!["red circle x4 y4".to_string()];
+    let profile = synthetic_profile(&sd_v14(), 25);
+
+    // Session 1 under manifest A: populate.
+    {
+        let cache = Cache::open(StoreConfig::new(&dir), 0xA).unwrap();
+        cache.put_quant_profile(25, &prompts, 7.5, &profile).unwrap();
+    }
+    // Session 2, same manifest: warm hit across the restart.
+    {
+        let cache = Cache::open(StoreConfig::new(&dir), 0xA).unwrap();
+        let back = cache.get_quant_profile(25, &prompts, 7.5).expect("profile survives");
+        assert_eq!(back, profile);
+    }
+    // Session 3, rebuilt manifest: the profile is gone.
+    let cache = Cache::open(StoreConfig::new(&dir), 0xB).unwrap();
+    assert!(
+        cache.get_quant_profile(25, &prompts, 7.5).is_none(),
+        "manifest hash change must invalidate cached QuantProfile"
+    );
+    assert_eq!(cache.stats().entries, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn quant_requests_cache_separately_and_ttl_ages_them_out() {
+    let dir = tmp_dir("reqttl");
+    let cfg = StoreConfig::new(&dir).with_ttl(NS_REQUEST, 0);
+    let cache = Cache::open(cfg, 1).unwrap();
+
+    // Same prompt/seed at different precisions are different cache cells.
+    let fp = GenRequest::new("blue square x2 y2", 7);
+    let mut w8 = fp.clone();
+    w8.quant = Some(QuantScheme::w8a8());
+    assert_ne!(
+        sd_acc::cache::namespaces::request_key(1, &fp),
+        sd_acc::cache::namespaces::request_key(1, &w8)
+    );
+
+    // With a zero TTL on the request namespace, stored results age out
+    // immediately — the satellite eviction behaviour.
+    let result = sd_acc::coordinator::GenResult {
+        latent: sd_acc::runtime::Tensor::new(vec![2], vec![0.5, -0.5]).unwrap(),
+        stats: sd_acc::coordinator::GenStats {
+            actions: vec![sd_acc::pas::plan::StepAction::Full],
+            step_ms: vec![1.0],
+            mac_reduction: 1.0,
+            total_ms: 1.0,
+        },
+    };
+    cache.put_result(&w8, &result).unwrap();
+    assert!(cache.get_result(&w8).is_none(), "request TTL expired the entry");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -34,6 +34,13 @@ echo "== quant bench (smoke) =="
 # so regressions fail CI, not just the full bench run.
 cargo bench --bench bench_quant -- --smoke
 
+echo "== serving bench (smoke) =="
+# Serving hot-path pass, mirroring bench_cache_hotpath's acceptance bar:
+# a warm request-cache hit (binary decode) must be >= 3x faster than the
+# cold regenerate-and-repopulate floor, and batch occupancy must only
+# use compiled sizes. Full mode writes BENCH_serving.json at repo root.
+cargo bench --bench bench_serving -- --smoke
+
 if [ "$run_fmt" = 1 ]; then
     echo "== cargo fmt --check =="
     # Formatting drift fails CI only when rustfmt is installed.

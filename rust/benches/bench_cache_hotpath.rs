@@ -104,7 +104,7 @@ fn main() {
     cache.put_result(&req, &result).expect("put result");
     b.run("request cache hit (1024-elem latent)", || {
         let hit = cache.get_result(&req).expect("request hit");
-        std::hint::black_box(hit.latent.data.len());
+        std::hint::black_box(hit.latent.data().len());
     });
     let absent = GenRequest::new("never generated", 1);
     b.run("request cache miss (key absent)", || {

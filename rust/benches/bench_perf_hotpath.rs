@@ -51,6 +51,15 @@ fn main() {
             std::hint::black_box(p.step(i, &latent, &eps));
         }
     });
+    b.run("scheduler/pndm_step_mut_1k_elems", || {
+        // In-place hot-path form: one buffer for the whole trajectory.
+        let mut p = Pndm::new(sched.clone(), 50);
+        let mut buf = latent.clone();
+        for i in 0..4 {
+            p.step_mut(i, &mut buf, &eps);
+        }
+        std::hint::black_box(&buf);
+    });
 
     // --- json codec ----------------------------------------------------------
     let blob = Json::Arr((0..2000).map(|i| Json::Num(i as f64 * 0.5)).collect()).to_string();

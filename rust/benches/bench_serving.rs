@@ -1,0 +1,313 @@
+//! End-to-end serving bench: request throughput/latency, batch
+//! occupancy, and warm-vs-cold request-cache latency — the serving perf
+//! trajectory's baseline (`BENCH_serving.json` at the repo root).
+//!
+//! Three sections:
+//!
+//! 1. **Request cache warm vs cold** (no artifacts needed): the cold
+//!    path pays a regeneration proxy — a 50-step PNDM scheduler
+//!    trajectory over an sd-tiny-sized latent, a strict *lower bound*
+//!    on real generation, which also runs 100 U-Net executions — plus
+//!    binary encode + store populate; the warm path is a content-
+//!    addressed hit (store read + binary decode). The diffusion-cache
+//!    acceptance bar: a warm hit must be >= 3x faster than even this
+//!    floor on recompute-and-repopulate. Asserted, also in `--smoke`.
+//! 2. **Batch occupancy** (no artifacts needed): a synthetic arrival
+//!    pattern through the real `Batcher` + `Metrics`, reporting the
+//!    executed-batch-size histogram, mean occupancy and queue depth.
+//! 3. **Live serving** (only when AOT artifacts are present): full
+//!    server over the PJRT runtime — req/s, p50/p95/p99, occupancy,
+//!    measured warm-vs-cold hit latency through the client path.
+//!
+//! `--smoke` (used by ci.sh) trims iteration counts, still enforces the
+//! warm >= 3x cold band, and skips the repo-root artifact write.
+//!
+//! Run: `cargo bench --bench bench_serving [-- --smoke]`
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sd_acc::cache::{Cache, StoreConfig};
+use sd_acc::coordinator::{BatchKey, GenRequest, GenResult, GenStats};
+use sd_acc::pas::plan::StepAction;
+use sd_acc::runtime::Tensor;
+use sd_acc::scheduler::{make_sampler, NoiseSchedule};
+use sd_acc::server::batcher::{BatchItem, Batcher};
+use sd_acc::server::metrics::Metrics;
+use sd_acc::util::bench::Bench;
+use sd_acc::util::json::Json;
+use sd_acc::util::rng::Pcg32;
+use sd_acc::util::stats;
+
+const LATENT_ELEMS: usize = 1024; // sd-tiny: 16x16x4
+const STEPS: usize = 50;
+
+fn sample_result(rng: &mut Pcg32) -> GenResult {
+    GenResult {
+        latent: Tensor::new(vec![LATENT_ELEMS / 4, 4], rng.gaussian_vec(LATENT_ELEMS)).unwrap(),
+        stats: GenStats {
+            actions: vec![StepAction::Full; STEPS],
+            step_ms: vec![10.0; STEPS],
+            mac_reduction: 1.0,
+            total_ms: 500.0,
+        },
+    }
+}
+
+/// The cheapest conceivable "regeneration": just the scheduler math of a
+/// full trajectory, no U-Net, no text encoder. Real cold generation is
+/// orders of magnitude above this floor.
+fn regeneration_floor(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut latent = rng.gaussian_vec(LATENT_ELEMS);
+    let eps: Vec<f32> = rng.gaussian_vec(LATENT_ELEMS);
+    let mut sampler = make_sampler("pndm", NoiseSchedule::scaled_linear(1000, 0.00085, 0.012), STEPS);
+    for i in 0..STEPS {
+        sampler.step_mut(i, &mut latent, &eps);
+    }
+    latent
+}
+
+struct Item(GenRequest);
+
+impl BatchItem for Item {
+    type Key = BatchKey;
+
+    fn key(&self) -> BatchKey {
+        self.0.batch_key()
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = if smoke { Bench::new(2, 8) } else { Bench::default() };
+
+    // ------------------------------------------- 1. warm vs cold cache
+    let dir = std::env::temp_dir().join(format!("sdacc_bench_serving_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = Cache::open(StoreConfig::new(&dir), 0x5e41).expect("open cache");
+    let mut rng = Pcg32::seeded(2026);
+
+    let mut req = GenRequest::new("red circle x4 y4 blue square x11 y11", 4242);
+    req.steps = STEPS;
+    let result = sample_result(&mut rng);
+
+    let mut cold_seed = 0u64;
+    let cold_ns = b.run("cold: regeneration floor + populate request cache", || {
+        cold_seed += 1;
+        let latent = regeneration_floor(cold_seed);
+        std::hint::black_box(latent.len());
+        cache.put_result(&req, &result).expect("put result");
+    });
+    let warm_ns = b.run("warm: request cache hit (binary decode)", || {
+        let hit = cache.get_result(&req).expect("request hit");
+        std::hint::black_box(hit.latent.data().len());
+    });
+    let miss_ns = b.run("request cache miss (key absent)", || {
+        std::hint::black_box(cache.get_result(&GenRequest::new("never generated", 1)).is_none());
+    });
+    let warm_ratio = cold_ns / warm_ns.max(1.0);
+    println!("\nwarm-hit speedup over cold regenerate+populate: {warm_ratio:.1}x");
+    assert!(
+        warm_ratio >= 3.0,
+        "acceptance: warm hit must be >= 3x faster than cold (got {warm_ratio:.1}x)"
+    );
+
+    // ---------------------------------------------- 2. batch occupancy
+    let metrics = Metrics::default();
+    let sizes = vec![1usize, 2, 4];
+    let mut batcher: Batcher<Item> = Batcher::new(sizes.clone(), Duration::from_millis(0));
+    let n_requests = if smoke { 64 } else { 512 };
+    let mut flushed = 0usize;
+    for i in 0..n_requests {
+        let mut r = GenRequest::new("occupancy probe", i as u64);
+        // Three distinct batch keys, weighted toward one hot key.
+        r.steps = match i % 5 {
+            0 => 20,
+            1 => 30,
+            _ => STEPS,
+        };
+        batcher.push(Item(r));
+        if i % 8 == 7 {
+            // Aged flush pass (max_wait = 0 so everything is ready).
+            for batch in batcher.flush_ready(Instant::now()) {
+                metrics.on_batch(batch.len());
+                flushed += batch.len();
+            }
+            metrics.set_queue_depth(batcher.pending());
+        }
+    }
+    for batch in batcher.flush_all() {
+        metrics.on_batch(batch.len());
+        flushed += batch.len();
+    }
+    metrics.set_queue_depth(batcher.pending());
+    let occ = metrics.summary();
+    println!(
+        "batch occupancy: mean {:.2} over {} requests, histogram {:?}, final queue depth {}",
+        occ.mean_batch_size, flushed, occ.batch_hist, occ.queue_depth
+    );
+    assert_eq!(flushed, n_requests, "every request must flush");
+    assert_eq!(occ.queue_depth, 0, "drained batcher reports empty");
+    assert!(
+        occ.batch_hist.iter().all(|&(size, _)| sizes.contains(&size)),
+        "only compiled batch sizes may execute: {:?}",
+        occ.batch_hist
+    );
+    assert!(
+        occ.batch_hist.iter().any(|&(size, _)| size == 4),
+        "the hot key must fill max-size batches: {:?}",
+        occ.batch_hist
+    );
+
+    // ------------------------------------------------- 3. live serving
+    let e2e = run_e2e(smoke);
+
+    b.emit_json();
+    if smoke {
+        println!("bench_serving --smoke: all acceptance bands hold");
+        let _ = std::fs::remove_dir_all(&dir);
+        return;
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_hotpath")),
+        ("latent_elems", Json::num(LATENT_ELEMS as f64)),
+        ("steps", Json::num(STEPS as f64)),
+        ("cold_ns", Json::num(cold_ns)),
+        ("warm_hit_ns", Json::num(warm_ns)),
+        ("miss_ns", Json::num(miss_ns)),
+        ("warm_ratio", Json::num(warm_ratio)),
+        ("mean_batch_size", Json::num(occ.mean_batch_size)),
+        (
+            "batch_hist",
+            Json::Arr(
+                occ.batch_hist
+                    .iter()
+                    .map(|&(size, count)| {
+                        Json::obj(vec![
+                            ("size", Json::num(size as f64)),
+                            ("count", Json::num(count as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("e2e", e2e.unwrap_or(Json::Null)),
+    ]);
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serving.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => println!("could not write {}: {e}", out.display()),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Full-stack serving measurement; `None` when no AOT artifacts exist
+/// or the run failed (failures are *reported*, never silently folded
+/// into the no-artifacts case).
+fn run_e2e(smoke: bool) -> Option<Json> {
+    use sd_acc::runtime::default_artifacts_dir;
+
+    let art_dir = default_artifacts_dir();
+    if !art_dir.join("manifest.json").exists() {
+        println!("no artifacts at {} — skipping live serving section", art_dir.display());
+        return None;
+    }
+    match run_e2e_inner(smoke, &art_dir) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            println!("live serving section FAILED (artifacts present): {e:#}");
+            None
+        }
+    }
+}
+
+fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
+    use sd_acc::coordinator::Coordinator;
+    use sd_acc::runtime::RuntimeService;
+    use sd_acc::server::{Server, ServerConfig};
+
+    let svc = RuntimeService::start(art_dir)?;
+    let coord = Arc::new(Coordinator::new(svc.handle()));
+    let cache_dir =
+        std::env::temp_dir().join(format!("sdacc_bench_serving_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let cache = Arc::new(Cache::open(StoreConfig::new(&cache_dir), coord.manifest_hash())?);
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(30),
+            cache: Some(Arc::clone(&cache)),
+        },
+    );
+    let client = server.client();
+    let n = if smoke { 4 } else { 16 };
+    let steps = if smoke { 4 } else { 12 };
+
+    // Drive both passes in a closure so the server is always shut down
+    // cleanly afterwards, success or failure.
+    let drive = || -> anyhow::Result<(Vec<f64>, Vec<f64>, f64)> {
+        // Cold pass: generate everything, measuring per-request wall time.
+        let t0 = Instant::now();
+        let mut lat_ms = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut r =
+                GenRequest::new(&format!("red circle x{} y{}", 2 + i % 10, 3 + i % 9), i as u64);
+            r.steps = steps;
+            r.sampler = "ddim".into();
+            let t = Instant::now();
+            client.generate(r)?;
+            lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        // Warm pass: identical requests — served from the request cache.
+        let mut warm_ms = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut r =
+                GenRequest::new(&format!("red circle x{} y{}", 2 + i % 10, 3 + i % 9), i as u64);
+            r.steps = steps;
+            r.sampler = "ddim".into();
+            let t = Instant::now();
+            client.generate(r)?;
+            warm_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        Ok((lat_ms, warm_ms, wall_s))
+    };
+    let driven = drive();
+    let m = server.metrics.summary();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let (lat_ms, warm_ms, wall_s) = driven?;
+
+    let (p50, p95, p99) = (
+        stats::percentile(&lat_ms, 50.0),
+        stats::percentile(&lat_ms, 95.0),
+        stats::percentile(&lat_ms, 99.0),
+    );
+    println!(
+        "live serving: {n} reqs in {wall_s:.2}s ({:.2} req/s) | cold p50 {p50:.0} ms p99 {p99:.0} ms | \
+         warm hit p50 {:.2} ms | occupancy {:.2} | hits {} misses {}",
+        n as f64 / wall_s,
+        stats::percentile(&warm_ms, 50.0),
+        m.mean_batch_size,
+        m.cache_hits,
+        m.cache_misses,
+    );
+    Ok(Json::obj(vec![
+        ("requests", Json::num(n as f64)),
+        ("steps", Json::num(steps as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("req_per_s", Json::num(n as f64 / wall_s)),
+        ("p50_ms", Json::num(p50)),
+        ("p95_ms", Json::num(p95)),
+        ("p99_ms", Json::num(p99)),
+        ("warm_hit_p50_ms", Json::num(stats::percentile(&warm_ms, 50.0))),
+        ("mean_batch_size", Json::num(m.mean_batch_size)),
+        ("cache_hits", Json::num(m.cache_hits as f64)),
+        ("cache_misses", Json::num(m.cache_misses as f64)),
+    ]))
+}

@@ -1,0 +1,401 @@
+//! Length-delimited little-endian binary payload codec for large latent
+//! values (`GenResult`).
+//!
+//! JSON float text costs ~3x the bytes of raw f32 (a shortest-roundtrip
+//! Gaussian sample is 10-12 characters against 4 bytes) and pays a
+//! parse per element on every warm request hit. This codec stores the
+//! latent buffer as raw little-endian f32 with length prefixes, so a
+//! cache hit is a bounds-checked `memcpy`, the stored bytes are
+//! ≤ 40% of the JSON encoding (asserted in tests), and non-finite
+//! values (NaN/±inf) plus signed zero round-trip bit-exactly — JSON has
+//! no representation for them at all.
+//!
+//! Framing (everything little-endian):
+//!
+//! ```text
+//! magic  b"SDAB"                      4 bytes
+//! format version                      1 byte  (FORMAT_VERSION)
+//! ndims  u32, then dims as u64 each
+//! latent u64 count, then raw f32 LE   4 bytes/elem
+//! actions u64 count, then u32 each    (0 = Full, l = Partial(l))
+//! step_ms u64 count, then f64 LE each
+//! mac_reduction f64, total_ms f64
+//! ```
+//!
+//! Every read is bounds-checked and the decoder requires the buffer to
+//! be fully consumed, so truncated or trailing-garbage payloads are
+//! decode errors, never panics — the store's corruption-recovery scan
+//! uses [`is_well_formed`] to tell a damaged payload from a healthy one
+//! without constructing the value.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{GenResult, GenStats};
+use crate::pas::plan::StepAction;
+use crate::runtime::Tensor;
+
+/// File magic: "SD-Acc binary" payload.
+pub const MAGIC: [u8; 4] = *b"SDAB";
+
+/// Bump together with `CACHE_VERSION` when the framing changes shape.
+pub const FORMAT_VERSION: u8 = 1;
+
+/// Caps that make [`is_well_formed`] and the decoder reject absurd
+/// length prefixes before allocating (a corrupt length must not ask for
+/// gigabytes).
+const MAX_DIMS: usize = 16;
+
+// ------------------------------------------------------------------ writer
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new(capacity: usize) -> Writer {
+        let mut buf = Vec::with_capacity(capacity + MAGIC.len() + 1);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(FORMAT_VERSION);
+        Writer { buf }
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32_slice(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        self.buf.reserve(xs.len() * 4);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+// ------------------------------------------------------------------ reader
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Result<Reader<'a>> {
+        if bytes.len() < MAGIC.len() + 1 {
+            bail!("binary payload: {} bytes is shorter than the header", bytes.len());
+        }
+        if bytes[..4] != MAGIC {
+            bail!("binary payload: bad magic");
+        }
+        if bytes[4] != FORMAT_VERSION {
+            bail!("binary payload: format version {} (expected {FORMAT_VERSION})", bytes[4]);
+        }
+        Ok(Reader { bytes, pos: 5 })
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| anyhow!("binary payload: truncated at byte {}", self.pos))?;
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed count, sanity-bounded by the remaining bytes.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        let remaining = self.bytes.len() - self.pos;
+        if n.checked_mul(elem_bytes).map_or(true, |total| total > remaining) {
+            bail!("binary payload: length prefix {n} exceeds remaining {remaining} bytes");
+        }
+        Ok(n)
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.bytes.len() {
+            bail!(
+                "binary payload: {} trailing bytes after value",
+                self.bytes.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- GenResult
+
+/// Encode a generation result (latent + stats) into the binary framing.
+pub fn encode_gen_result(res: &GenResult) -> Vec<u8> {
+    let mut w = Writer::new(
+        res.latent.len() * 4 + res.stats.step_ms.len() * 8 + res.stats.actions.len() * 4 + 64,
+    );
+    w.u32(res.latent.dims.len() as u32);
+    for &d in &res.latent.dims {
+        w.u64(d as u64);
+    }
+    w.f32_slice(res.latent.data());
+    w.u64(res.stats.actions.len() as u64);
+    for a in &res.stats.actions {
+        w.u32(match a {
+            StepAction::Full => 0,
+            StepAction::Partial(l) => *l as u32,
+        });
+    }
+    w.u64(res.stats.step_ms.len() as u64);
+    for &ms in &res.stats.step_ms {
+        w.f64(ms);
+    }
+    w.f64(res.stats.mac_reduction);
+    w.f64(res.stats.total_ms);
+    w.buf
+}
+
+/// Decode the binary framing back into a `GenResult`. Bit-exact for
+/// every f32/f64 payload value, non-finite included.
+pub fn decode_gen_result(bytes: &[u8]) -> Result<GenResult> {
+    let mut r = Reader::new(bytes)?;
+    let ndims = r.u32()? as usize;
+    if ndims > MAX_DIMS {
+        bail!("binary payload: {ndims} dims (cap {MAX_DIMS})");
+    }
+    // Validate the dims *here*, with overflow-checked arithmetic, before
+    // any of them reach `Tensor::new`'s unchecked product — a corrupt
+    // payload must decode to an error, never a panic (the store's
+    // self-heal path depends on that).
+    let mut dims = Vec::with_capacity(ndims);
+    let mut elems: u64 = 1;
+    for _ in 0..ndims {
+        let d = r.u64()?;
+        elems = elems
+            .checked_mul(d)
+            .ok_or_else(|| anyhow!("binary payload: dims product overflows"))?;
+        dims.push(d as usize);
+    }
+    let data = r.f32_vec()?;
+    if data.len() as u64 != elems {
+        bail!(
+            "binary payload: latent length {} disagrees with dims {dims:?}",
+            data.len()
+        );
+    }
+    let latent = Tensor::new(dims, data)?;
+    let n_actions = r.count(4)?;
+    let mut actions = Vec::with_capacity(n_actions);
+    for _ in 0..n_actions {
+        let l = r.u32()? as usize;
+        actions.push(if l == 0 { StepAction::Full } else { StepAction::Partial(l) });
+    }
+    let n_ms = r.count(8)?;
+    let mut step_ms = Vec::with_capacity(n_ms);
+    for _ in 0..n_ms {
+        step_ms.push(r.f64()?);
+    }
+    let mac_reduction = r.f64()?;
+    let total_ms = r.f64()?;
+    r.finish()?;
+    Ok(GenResult { latent, stats: GenStats { actions, step_ms, mac_reduction, total_ms } })
+}
+
+/// Structural health check without building the value: does this byte
+/// buffer walk as a complete, self-consistent binary payload? Used by
+/// the store's payload-scan recovery to separate damaged files from
+/// healthy ones (the JSON namespaces use a parse check instead).
+pub fn is_well_formed(bytes: &[u8]) -> bool {
+    fn walk(r: &mut Reader) -> Result<()> {
+        let ndims = r.u32()? as usize;
+        if ndims > MAX_DIMS {
+            bail!("too many dims");
+        }
+        let mut elems: u64 = 1;
+        for _ in 0..ndims {
+            // checked, not saturating: must agree with decode_gen_result
+            // on what counts as healthy.
+            elems = elems
+                .checked_mul(r.u64()?)
+                .ok_or_else(|| anyhow!("dims product overflows"))?;
+        }
+        let n = r.count(4)?;
+        if n as u64 != elems {
+            bail!("latent length disagrees with dims");
+        }
+        r.take(n * 4)?;
+        let n_actions = r.count(4)?;
+        r.take(n_actions * 4)?;
+        let n_ms = r.count(8)?;
+        r.take(n_ms * 8)?;
+        r.f64()?;
+        r.f64()?;
+        r.finish()
+    }
+    let Ok(mut r) = Reader::new(bytes) else { return false };
+    walk(&mut r).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(latent: Vec<f32>) -> GenResult {
+        let n = latent.len();
+        GenResult {
+            latent: Tensor::new(vec![n / 2, 2], latent).unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full, StepAction::Partial(2), StepAction::Partial(1)],
+                step_ms: vec![12.5, 3.25, 3.0],
+                mac_reduction: 2.5,
+                total_ms: 18.75,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let res = sample(vec![0.5, -1.25, 3.0e-7, 0.1, -0.0, 7.5e-3, 2.0, 9.9]);
+        let bytes = encode_gen_result(&res);
+        let back = decode_gen_result(&bytes).unwrap();
+        assert_eq!(back.latent.dims, res.latent.dims);
+        let bits = |t: &Tensor| t.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.latent), bits(&res.latent));
+        assert_eq!(back.stats.actions, res.stats.actions);
+        assert_eq!(back.stats.step_ms, res.stats.step_ms);
+        assert_eq!(back.stats.mac_reduction, res.stats.mac_reduction);
+        assert_eq!(back.stats.total_ms, res.stats.total_ms);
+    }
+
+    #[test]
+    fn non_finite_and_signed_zero_survive() {
+        // JSON cannot carry any of these; the binary codec must keep the
+        // exact bit patterns (including the NaN payload bits).
+        let specials = vec![
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            0.0,
+            f32::from_bits(0x7fc0_dead), // NaN with payload
+            f32::MIN_POSITIVE / 2.0,     // subnormal
+            f32::MAX,
+        ];
+        let res = sample(specials.clone());
+        let back = decode_gen_result(&encode_gen_result(&res)).unwrap();
+        for (a, b) in specials.iter().zip(back.latent.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} lost its bit pattern");
+        }
+    }
+
+    #[test]
+    fn truncation_is_an_error_never_a_panic() {
+        let bytes = encode_gen_result(&sample(vec![1.0, 2.0, 3.0, 4.0]));
+        for cut in 0..bytes.len() {
+            assert!(decode_gen_result(&bytes[..cut]).is_err(), "cut at {cut} decoded");
+            // Well-formedness agrees with the decoder.
+            assert!(!is_well_formed(&bytes[..cut]), "cut at {cut} claimed well-formed");
+        }
+        assert!(decode_gen_result(&bytes).is_ok());
+        assert!(is_well_formed(&bytes));
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = encode_gen_result(&sample(vec![1.0, 2.0]));
+        bytes.extend_from_slice(b"junk");
+        assert!(decode_gen_result(&bytes).is_err());
+        assert!(!is_well_formed(&bytes));
+    }
+
+    #[test]
+    fn wrong_magic_or_version_rejected() {
+        let mut bytes = encode_gen_result(&sample(vec![1.0, 2.0]));
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(decode_gen_result(&bad_magic).is_err());
+        bytes[4] = FORMAT_VERSION + 1;
+        assert!(decode_gen_result(&bytes).is_err());
+        assert!(!is_well_formed(b""));
+        assert!(!is_well_formed(b"{\"json\":true}"));
+    }
+
+    #[test]
+    fn absurd_length_prefix_rejected_before_allocation() {
+        // Header + ndims=1 + dim=u64::MAX + latent count u64::MAX.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(FORMAT_VERSION);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_gen_result(&bytes).is_err());
+        assert!(!is_well_formed(&bytes));
+    }
+
+    /// Dims whose product overflows, or that disagree with the latent
+    /// length, must be decode *errors* — never a panic inside
+    /// `Tensor::new`'s unchecked product (debug) or a wrapped bogus
+    /// tensor (release).
+    #[test]
+    fn corrupt_dims_are_errors_not_panics() {
+        let tail = |bytes: &mut Vec<u8>| {
+            // empty latent + empty actions + empty step_ms + scalars
+            bytes.extend_from_slice(&0u64.to_le_bytes());
+            bytes.extend_from_slice(&0u64.to_le_bytes());
+            bytes.extend_from_slice(&0u64.to_le_bytes());
+            bytes.extend_from_slice(&1.0f64.to_le_bytes());
+            bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        };
+        // dims [2^40, 2^40, 0]: checked product overflows before the 0.
+        let mut overflow = Vec::new();
+        overflow.extend_from_slice(&MAGIC);
+        overflow.push(FORMAT_VERSION);
+        overflow.extend_from_slice(&3u32.to_le_bytes());
+        overflow.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        overflow.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        overflow.extend_from_slice(&0u64.to_le_bytes());
+        tail(&mut overflow);
+        assert!(decode_gen_result(&overflow).is_err(), "overflowing dims must error");
+        assert!(!is_well_formed(&overflow), "health check must agree with the decoder");
+
+        // dims [4] but zero latent elements: consistent framing, wrong shape.
+        let mut mismatch = Vec::new();
+        mismatch.extend_from_slice(&MAGIC);
+        mismatch.push(FORMAT_VERSION);
+        mismatch.extend_from_slice(&1u32.to_le_bytes());
+        mismatch.extend_from_slice(&4u64.to_le_bytes());
+        tail(&mut mismatch);
+        assert!(decode_gen_result(&mismatch).is_err(), "dims/length mismatch must error");
+        assert!(!is_well_formed(&mismatch));
+    }
+}

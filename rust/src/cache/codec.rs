@@ -1,22 +1,31 @@
-//! Codec layer: typed values <-> `util::json::Json` payloads.
+//! Codec layer: typed values <-> on-disk payload bytes.
 //!
-//! One impl per cached namespace: calibration reports, searched plan
-//! fronts, and request-level generation results. Encoding uses only
-//! finite numbers (JSON has no inf/nan; the store never receives
-//! non-finite latents because the coordinator rejects them upstream),
-//! and `Json`'s shortest-roundtrip float formatting makes
-//! `decode(encode(x)) == x` exact — property-tested in `proptests.rs`.
+//! One impl per cached namespace. Small structured payloads
+//! (calibration reports, plan fronts, quant profiles) keep the compact
+//! JSON text encoding — they are a few KB of config/score data and JSON
+//! keeps them greppable on disk. Request-level `GenResult` payloads are
+//! dominated by the latent buffer and go through the length-delimited
+//! binary codec ([`super::binary`]): raw little-endian f32 is ≤ 40% of
+//! the JSON float text (asserted below) and a warm hit decodes with a
+//! bounds-checked copy instead of per-element float parsing. The binary
+//! form is also bit-exact for NaN/±inf/-0.0, which JSON cannot carry at
+//! all. `decode_bytes(encode_bytes(x)) == x` is property-tested in
+//! `proptests.rs` for every namespace.
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{GenResult, GenStats};
+use crate::coordinator::GenResult;
+#[cfg(test)]
+use crate::coordinator::GenStats;
 use crate::pas::calibrate::CalibrationReport;
-use crate::pas::plan::{PasConfig, StepAction};
+use crate::pas::plan::PasConfig;
+#[cfg(test)]
+use crate::pas::plan::StepAction;
 use crate::pas::search::Candidate;
 use crate::quant::calibrate::QuantProfile;
-use crate::runtime::Tensor;
 use crate::util::json::Json;
 
+use super::binary;
 use super::namespaces::{NS_CALIB, NS_PLAN, NS_QUANT, NS_REQUEST};
 
 /// A value that can live in the store under a fixed namespace.
@@ -24,8 +33,14 @@ pub trait Codec: Sized {
     /// Namespace (subdirectory + key salt) this type is stored under.
     const NAMESPACE: &'static str;
 
-    fn encode(&self) -> Json;
-    fn decode(j: &Json) -> Result<Self>;
+    fn encode_payload(&self) -> Vec<u8>;
+    fn decode_payload(bytes: &[u8]) -> Result<Self>;
+}
+
+/// Parse a JSON-namespace payload (UTF-8 text bytes).
+fn parse_json(bytes: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(bytes).map_err(|e| anyhow!("cache payload: {e}"))?;
+    Json::parse(text).map_err(|e| anyhow!("cache payload: {e}"))
 }
 
 // ------------------------------------------------------------ calibration
@@ -33,12 +48,12 @@ pub trait Codec: Sized {
 impl Codec for CalibrationReport {
     const NAMESPACE: &'static str = NS_CALIB;
 
-    fn encode(&self) -> Json {
-        self.to_json()
+    fn encode_payload(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
     }
 
-    fn decode(j: &Json) -> Result<CalibrationReport> {
-        CalibrationReport::from_json(j)
+    fn decode_payload(bytes: &[u8]) -> Result<CalibrationReport> {
+        CalibrationReport::from_json(&parse_json(bytes)?)
     }
 }
 
@@ -47,12 +62,12 @@ impl Codec for CalibrationReport {
 impl Codec for QuantProfile {
     const NAMESPACE: &'static str = NS_QUANT;
 
-    fn encode(&self) -> Json {
-        self.to_json()
+    fn encode_payload(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
     }
 
-    fn decode(j: &Json) -> Result<QuantProfile> {
-        QuantProfile::from_json(j)
+    fn decode_payload(bytes: &[u8]) -> Result<QuantProfile> {
+        QuantProfile::from_json(&parse_json(bytes)?)
     }
 }
 
@@ -101,7 +116,7 @@ fn pas_config_from_json(j: &Json) -> Result<PasConfig> {
 impl Codec for PlanFront {
     const NAMESPACE: &'static str = NS_PLAN;
 
-    fn encode(&self) -> Json {
+    fn encode_payload(&self) -> Vec<u8> {
         Json::obj(vec![
             ("total_steps", Json::num(self.total_steps as f64)),
             ("min_mac_reduction", Json::num(self.min_mac_reduction)),
@@ -127,9 +142,12 @@ impl Codec for PlanFront {
                 ),
             ),
         ])
+        .to_string()
+        .into_bytes()
     }
 
-    fn decode(j: &Json) -> Result<PlanFront> {
+    fn decode_payload(bytes: &[u8]) -> Result<PlanFront> {
+        let j = parse_json(bytes)?;
         let candidates = j
             .get("candidates")
             .and_then(Json::as_arr)
@@ -162,104 +180,115 @@ impl Codec for PlanFront {
 
 // --------------------------------------------------------- request results
 
-fn actions_json(actions: &[StepAction]) -> Json {
-    // Full -> 0, Partial(l) -> l (valid plans have l >= 1).
-    Json::Arr(
-        actions
+impl Codec for GenResult {
+    const NAMESPACE: &'static str = NS_REQUEST;
+
+    fn encode_payload(&self) -> Vec<u8> {
+        binary::encode_gen_result(self)
+    }
+
+    fn decode_payload(bytes: &[u8]) -> Result<GenResult> {
+        binary::decode_gen_result(bytes)
+    }
+}
+
+/// The retired v2 JSON encoding of a `GenResult`, kept under test so the
+/// equivalence property (binary decode == JSON decode for finite
+/// latents) and the ≤ 40% size bound stay checkable against the real
+/// old format rather than an approximation.
+#[cfg(test)]
+pub(crate) fn gen_result_to_json_v2(res: &GenResult) -> String {
+    let actions = Json::Arr(
+        res.stats
+            .actions
             .iter()
             .map(|a| match a {
                 StepAction::Full => Json::num(0.0),
                 StepAction::Partial(l) => Json::num(*l as f64),
             })
             .collect(),
-    )
+    );
+    Json::obj(vec![
+        (
+            "dims",
+            Json::Arr(res.latent.dims.iter().map(|&d| Json::num(d as f64)).collect()),
+        ),
+        (
+            "latent",
+            Json::Arr(res.latent.data().iter().map(|&x| Json::num(x as f64)).collect()),
+        ),
+        ("actions", actions),
+        ("step_ms", Json::arr_f64(&res.stats.step_ms)),
+        ("mac_reduction", Json::num(res.stats.mac_reduction)),
+        ("total_ms", Json::num(res.stats.total_ms)),
+    ])
+    .to_string()
 }
 
-fn actions_from_json(j: &Json) -> Result<Vec<StepAction>> {
-    j.as_arr()
-        .ok_or_else(|| anyhow!("gen result: actions not an array"))?
+#[cfg(test)]
+pub(crate) fn gen_result_from_json_v2(text: &str) -> Result<GenResult> {
+    let j = Json::parse(text).map_err(|e| anyhow!("gen result json: {e}"))?;
+    let dims: Vec<usize> = j
+        .get("dims")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("gen result: missing dims"))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    let data: Vec<f32> = j
+        .get("latent")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("gen result: missing latent"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("gen result: non-numeric latent element"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let latent = crate::runtime::Tensor::new(dims, data)?;
+    let actions = j
+        .get("actions")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("gen result: missing actions"))?
         .iter()
         .map(|v| {
             let l = v.as_usize().ok_or_else(|| anyhow!("gen result: bad action"))?;
             Ok(if l == 0 { StepAction::Full } else { StepAction::Partial(l) })
         })
-        .collect()
+        .collect::<Result<Vec<_>>>()?;
+    let step_ms = j
+        .get("step_ms")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default();
+    Ok(GenResult {
+        latent,
+        stats: GenStats {
+            actions,
+            step_ms,
+            mac_reduction: j.get_f64("mac_reduction").unwrap_or(1.0),
+            total_ms: j.get_f64("total_ms").unwrap_or(0.0),
+        },
+    })
 }
 
-impl Codec for GenResult {
-    const NAMESPACE: &'static str = NS_REQUEST;
-
-    fn encode(&self) -> Json {
-        Json::obj(vec![
-            (
-                "dims",
-                Json::Arr(self.latent.dims.iter().map(|&d| Json::num(d as f64)).collect()),
-            ),
-            (
-                "latent",
-                Json::Arr(self.latent.data.iter().map(|&x| Json::num(x as f64)).collect()),
-            ),
-            ("actions", actions_json(&self.stats.actions)),
-            ("step_ms", Json::arr_f64(&self.stats.step_ms)),
-            ("mac_reduction", Json::num(self.stats.mac_reduction)),
-            ("total_ms", Json::num(self.stats.total_ms)),
-        ])
-    }
-
-    fn decode(j: &Json) -> Result<GenResult> {
-        let dims: Vec<usize> = j
-            .get("dims")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("gen result: missing dims"))?
-            .iter()
-            .filter_map(Json::as_usize)
-            .collect();
-        let data: Vec<f32> = j
-            .get("latent")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("gen result: missing latent"))?
-            .iter()
-            .map(|v| {
-                v.as_f64()
-                    .map(|x| x as f32)
-                    .ok_or_else(|| anyhow!("gen result: non-numeric latent element"))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let latent = Tensor::new(dims, data)?;
-        let step_ms = j
-            .get("step_ms")
-            .and_then(Json::as_arr)
-            .map(|a| a.iter().filter_map(Json::as_f64).collect())
-            .unwrap_or_default();
-        Ok(GenResult {
-            latent,
-            stats: GenStats {
-                actions: actions_from_json(
-                    j.get("actions").ok_or_else(|| anyhow!("gen result: missing actions"))?,
-                )?,
-                step_ms,
-                mac_reduction: j.get_f64("mac_reduction").unwrap_or(1.0),
-                total_ms: j.get_f64("total_ms").unwrap_or(0.0),
-            },
-        })
-    }
+/// Encode straight to the on-disk payload bytes.
+pub fn encode_bytes<T: Codec>(value: &T) -> Vec<u8> {
+    value.encode_payload()
 }
 
-/// Encode straight to the compact on-disk text form.
-pub fn encode_text<T: Codec>(value: &T) -> String {
-    value.encode().to_string()
-}
-
-/// Parse + decode the on-disk text form.
-pub fn decode_text<T: Codec>(text: &str) -> Result<T> {
-    let j = Json::parse(text).map_err(|e| anyhow!("cache payload: {e}"))?;
-    T::decode(&j)
+/// Decode the on-disk payload bytes.
+pub fn decode_bytes<T: Codec>(bytes: &[u8]) -> Result<T> {
+    T::decode_payload(bytes)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::pas::calibrate::analyse;
+    use crate::runtime::Tensor;
+    use crate::util::rng::Pcg32;
 
     #[test]
     fn quant_profile_text_roundtrip() {
@@ -267,9 +296,9 @@ mod tests {
             &crate::models::inventory::sd_tiny(),
             20,
         );
-        let back: QuantProfile = decode_text(&encode_text(&prof)).unwrap();
+        let back: QuantProfile = decode_bytes(&encode_bytes(&prof)).unwrap();
         assert_eq!(back, prof);
-        assert!(decode_text::<QuantProfile>("{\"model\":\"x\"}").is_err(), "missing ranges");
+        assert!(decode_bytes::<QuantProfile>(b"{\"model\":\"x\"}").is_err(), "missing ranges");
     }
 
     #[test]
@@ -278,7 +307,7 @@ mod tests {
             .map(|b| (0..19).map(|t| ((b * 19 + t) as f64).sin().abs()).collect())
             .collect();
         let rep = analyse(raw, vec![0.25; 20], 20, 3);
-        let back: CalibrationReport = decode_text(&encode_text(&rep)).unwrap();
+        let back: CalibrationReport = decode_bytes(&encode_bytes(&rep)).unwrap();
         assert_eq!(back.d_star, rep.d_star);
         assert_eq!(back.outliers, rep.outliers);
         assert_eq!(back.scores, rep.scores);
@@ -307,7 +336,7 @@ mod tests {
                 },
             ],
         };
-        let back: PlanFront = decode_text(&encode_text(&front)).unwrap();
+        let back: PlanFront = decode_bytes(&encode_bytes(&front)).unwrap();
         assert_eq!(back.total_steps, front.total_steps);
         assert_eq!(back.min_psnr_db, front.min_psnr_db);
         assert_eq!(back.candidates.len(), 2);
@@ -330,9 +359,9 @@ mod tests {
                 total_ms: 18.75,
             },
         };
-        let back: GenResult = decode_text(&encode_text(&res)).unwrap();
+        let back: GenResult = decode_bytes(&encode_bytes(&res)).unwrap();
         assert_eq!(back.latent.dims, res.latent.dims);
-        assert_eq!(back.latent.data, res.latent.data);
+        assert_eq!(back.latent.data(), res.latent.data());
         assert_eq!(back.stats.actions, res.stats.actions);
         assert_eq!(back.stats.step_ms, res.stats.step_ms);
         assert_eq!(back.stats.mac_reduction, res.stats.mac_reduction);
@@ -349,9 +378,58 @@ mod tests {
                 total_ms: 1.0,
             },
         };
-        let text = encode_text(&res);
-        for cut in [0, 1, text.len() / 2, text.len() - 1] {
-            assert!(decode_text::<GenResult>(&text[..cut]).is_err());
+        let bytes = encode_bytes(&res);
+        for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_bytes::<GenResult>(&bytes[..cut]).is_err());
         }
+    }
+
+    /// The acceptance bound for the binary payload switch: a realistic
+    /// latent stores in ≤ 40% of the v2 JSON encoding's bytes.
+    #[test]
+    fn binary_latent_is_at_most_40_percent_of_json() {
+        let mut rng = Pcg32::seeded(424242);
+        let steps = 50;
+        let res = GenResult {
+            latent: Tensor::new(vec![256, 4], rng.gaussian_vec(1024)).unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full; steps],
+                step_ms: (0..steps).map(|i| 10.0 + i as f64 * 0.125).collect(),
+                mac_reduction: 1.0,
+                total_ms: 512.5,
+            },
+        };
+        let bin = encode_bytes(&res).len() as f64;
+        let json = gen_result_to_json_v2(&res).len() as f64;
+        assert!(
+            bin <= 0.4 * json,
+            "binary {bin} bytes vs JSON {json} bytes = {:.1}% (bound 40%)",
+            100.0 * bin / json
+        );
+    }
+
+    /// For finite latents the binary codec is semantically identical to
+    /// the retired JSON encoding (same decoded value, bit for bit — the
+    /// JSON path's f32 -> f64 -> shortest-roundtrip text -> f32 chain is
+    /// exact for finite f32).
+    #[test]
+    fn binary_equals_json_semantics_for_finite_latents() {
+        let mut rng = Pcg32::seeded(99);
+        let res = GenResult {
+            latent: Tensor::new(vec![32, 4], rng.gaussian_vec(128)).unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full, StepAction::Partial(3)],
+                step_ms: vec![8.0, 2.0],
+                mac_reduction: 1.75,
+                total_ms: 10.0,
+            },
+        };
+        let via_bin = decode_bytes::<GenResult>(&encode_bytes(&res)).unwrap();
+        let via_json = gen_result_from_json_v2(&gen_result_to_json_v2(&res)).unwrap();
+        assert_eq!(via_bin.latent.dims, via_json.latent.dims);
+        let bits = |t: &Tensor| t.data().iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&via_bin.latent), bits(&via_json.latent));
+        assert_eq!(via_bin.stats.actions, via_json.stats.actions);
+        assert_eq!(via_bin.stats.step_ms, via_json.stats.step_ms);
     }
 }

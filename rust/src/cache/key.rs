@@ -12,7 +12,11 @@ use std::fmt;
 
 /// Bump when any namespace's on-disk encoding changes shape.
 /// v2: request keys hash the quant scheme; `quant` namespace added.
-pub const CACHE_VERSION: u32 = 2;
+/// v3: `request` payloads switched from JSON f32 text to the binary
+///     latent codec (`cache::binary`); payload files renamed `.bin`.
+///     A store written by an older version is flushed clean on open —
+///     never scanned in, since its payloads would be misread.
+pub const CACHE_VERSION: u32 = 3;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x1_0000_0001_b3;

@@ -8,12 +8,17 @@
 //!
 //! - [`key`]: structured FNV-1a keys over (manifest digest, model meta,
 //!   request/config fields) — never lossy string formatting.
-//! - [`codec`]: typed value <-> `util::json::Json` payloads for the four
-//!   namespaces (calibration reports, searched plan fronts, quant
-//!   profiles, generation results).
+//! - [`codec`]: typed value <-> payload bytes for the four namespaces.
+//!   Small structured payloads (calibration reports, plan fronts, quant
+//!   profiles) stay JSON; request-level generation results use the
+//!   length-delimited binary latent codec.
+//! - [`binary`]: the versioned binary framing for large latents — raw
+//!   little-endian f32 with length prefixes, ≤ 40% of the JSON float
+//!   text and bit-exact for NaN/±inf/-0.0.
 //! - [`store`]: the on-disk store — atomic write-then-rename index,
-//!   crash/corruption recovery by payload scan, hit/miss/eviction
-//!   counters, optional per-namespace TTLs.
+//!   crash/corruption recovery by payload scan, version-skew flush (an
+//!   older store's payload encodings are never misread), hit/miss/
+//!   eviction counters, optional per-namespace TTLs.
 //! - [`evict`]: LRU + byte-cap eviction planning (pure, property-tested).
 //! - [`namespaces`]: typed keys and the [`Cache`] facade; owns the
 //!   invalidation rule (manifest hash change ⇒ namespace flush).
@@ -25,6 +30,7 @@
 //! resolves `SamplingPlan::Auto` from the plan namespace, and the
 //! `sd-acc cache` CLI subcommand exposes `stats`/`gc`/`clear`.
 
+pub mod binary;
 pub mod codec;
 pub mod evict;
 pub mod key;

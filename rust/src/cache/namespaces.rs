@@ -28,7 +28,7 @@ use crate::pas::search::SearchConstraints;
 use crate::quant::calibrate::QuantProfile;
 use crate::quant::format::QuantScheme;
 
-use super::codec::{decode_text, encode_text, Codec, PlanFront};
+use super::codec::{decode_bytes, encode_bytes, Codec, PlanFront};
 use super::key::{CacheKey, KeyHasher};
 use super::store::{Store, StoreConfig, StoreStats};
 
@@ -196,8 +196,8 @@ impl Cache {
 
     /// Decode a stored payload; undecodable entries self-heal (removed).
     fn get_typed<T: Codec>(&self, key: CacheKey) -> Option<T> {
-        let text = self.store.get(T::NAMESPACE, key)?;
-        match decode_text(&text) {
+        let bytes = self.store.get(T::NAMESPACE, key)?;
+        match decode_bytes(&bytes) {
             Ok(v) => Some(v),
             Err(_) => {
                 self.store.remove(T::NAMESPACE, key);
@@ -207,7 +207,7 @@ impl Cache {
     }
 
     fn put_typed<T: Codec>(&self, key: CacheKey, value: &T) -> Result<usize> {
-        self.store.put(T::NAMESPACE, key, &encode_text(value))
+        self.store.put(T::NAMESPACE, key, &encode_bytes(value))
     }
 
     // ------------------------------------------------------------ calib
@@ -288,7 +288,7 @@ impl Cache {
             evicted += self.store.put(
                 NS_PLAN,
                 best_plan_key(self.manifest_hash, front.total_steps),
-                &encode_text(&summary),
+                &encode_bytes(&summary),
             )?;
         }
         Ok(evicted)
@@ -416,7 +416,7 @@ mod tests {
         assert!(cache.get_result(&req).is_none());
         cache.put_result(&req, &res).unwrap();
         let back = cache.get_result(&req).unwrap();
-        assert_eq!(back.latent.data, res.latent.data);
+        assert_eq!(back.latent.data(), res.latent.data());
         assert_eq!(back.stats.actions, res.stats.actions);
     }
 
@@ -497,9 +497,9 @@ mod tests {
         let cache = Cache::open(StoreConfig::new(tmp_dir("heal")), 5).unwrap();
         let req = GenRequest::new("y", 9);
         cache.put_result(&req, &sample_result()).unwrap();
-        // Clobber the payload with valid JSON that is not a GenResult.
+        // Clobber the payload with bytes that are not a binary GenResult.
         let key = request_key(5, &req);
-        cache.store().put(NS_REQUEST, key, "{\"not\":\"a result\"}").unwrap();
+        cache.store().put(NS_REQUEST, key, b"{\"not\":\"a result\"}").unwrap();
         assert!(cache.get_result(&req).is_none());
         // Entry was dropped, not left poisoned.
         assert!(cache.store().get(NS_REQUEST, key).is_none());

@@ -1,6 +1,8 @@
 //! Property tests over cache invariants (in-tree framework,
-//! rust/src/testing): codec round-trips must be the identity for all
-//! three namespaces, eviction must never breach the byte cap and must
+//! rust/src/testing): codec round-trips must be the identity for every
+//! namespace (the binary request codec bit-exactly, non-finite values
+//! included), binary and JSON encodings must agree semantically for
+//! finite latents, eviction must never breach the byte cap and must
 //! respect LRU order, and no on-disk corruption may panic the store.
 
 #![cfg(test)]
@@ -8,7 +10,9 @@
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::cache::codec::{decode_text, encode_text, PlanFront};
+use crate::cache::codec::{
+    decode_bytes, encode_bytes, gen_result_from_json_v2, gen_result_to_json_v2, PlanFront,
+};
 use crate::cache::evict::{plan_evictions, EvictEntry};
 use crate::cache::key::CacheKey;
 use crate::cache::store::{Store, StoreConfig};
@@ -54,7 +58,7 @@ fn gen_report(rng: &mut Pcg32) -> CalibrationReport {
 #[test]
 fn calibration_codec_roundtrip_is_identity() {
     check_no_shrink("cache-codec-calib", gen_report, |rep| {
-        let back: CalibrationReport = match decode_text(&encode_text(rep)) {
+        let back: CalibrationReport = match decode_bytes(&encode_bytes(rep)) {
             Ok(b) => b,
             Err(_) => return false,
         };
@@ -94,7 +98,7 @@ fn gen_front(rng: &mut Pcg32) -> PlanFront {
 #[test]
 fn plan_front_codec_roundtrip_is_identity() {
     check_no_shrink("cache-codec-plan", gen_front, |front| {
-        let back: PlanFront = match decode_text(&encode_text(front)) {
+        let back: PlanFront = match decode_bytes(&encode_bytes(front)) {
             Ok(b) => b,
             Err(_) => return false,
         };
@@ -112,15 +116,17 @@ fn plan_front_codec_roundtrip_is_identity() {
     });
 }
 
+/// Random finite latent values (the JSON-comparable regime).
 fn gen_result(rng: &mut Pcg32) -> GenResult {
     let steps = gen_usize(rng, 1, 12);
     let l = gen_usize(rng, 1, 32);
     let c = gen_usize(rng, 1, 4);
     GenResult {
-        latent: Tensor {
-            dims: vec![l, c],
-            data: (0..l * c).map(|_| (rng.next_f32() - 0.5) * 8.0).collect(),
-        },
+        latent: Tensor::new(
+            vec![l, c],
+            (0..l * c).map(|_| (rng.next_f32() - 0.5) * 8.0).collect(),
+        )
+        .expect("dims match"),
         stats: GenStats {
             actions: (0..steps)
                 .map(|_| {
@@ -138,19 +144,83 @@ fn gen_result(rng: &mut Pcg32) -> GenResult {
     }
 }
 
+/// The same, with non-finite and signed-zero specials sprinkled in —
+/// values the retired JSON encoding could not carry at all.
+fn gen_result_with_specials(rng: &mut Pcg32) -> GenResult {
+    let mut res = gen_result(rng);
+    let specials = [
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        -0.0f32,
+        f32::from_bits(0x7fc1_2345), // NaN with payload bits
+        f32::MIN_POSITIVE / 4.0,     // subnormal
+    ];
+    let n = res.latent.len();
+    let buf = res.latent.make_mut();
+    for _ in 0..gen_usize(rng, 1, n.min(6)) {
+        let at = gen_usize(rng, 0, n - 1);
+        buf[at] = specials[gen_usize(rng, 0, specials.len() - 1)];
+    }
+    res
+}
+
+fn latent_bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
 #[test]
 fn gen_result_codec_roundtrip_is_identity() {
     check_no_shrink("cache-codec-genresult", gen_result, |res| {
-        let back: GenResult = match decode_text(&encode_text(res)) {
+        let back: GenResult = match decode_bytes(&encode_bytes(res)) {
             Ok(b) => b,
             Err(_) => return false,
         };
         back.latent.dims == res.latent.dims
-            && back.latent.data == res.latent.data
+            && back.latent.data() == res.latent.data()
             && back.stats.actions == res.stats.actions
             && back.stats.step_ms == res.stats.step_ms
             && back.stats.mac_reduction == res.stats.mac_reduction
             && back.stats.total_ms == res.stats.total_ms
+    });
+}
+
+/// Binary round-trips are bit-exact even for NaN (payload bits and all),
+/// ±inf, -0.0 and subnormals — `==` would be false for NaN, so this
+/// property compares bit patterns.
+#[test]
+fn gen_result_binary_roundtrip_preserves_nonfinite_bits() {
+    check_no_shrink("cache-codec-genresult-specials", gen_result_with_specials, |res| {
+        let back: GenResult = match decode_bytes(&encode_bytes(res)) {
+            Ok(b) => b,
+            Err(_) => return false,
+        };
+        back.latent.dims == res.latent.dims
+            && latent_bits(&back.latent) == latent_bits(&res.latent)
+            && back.stats.actions == res.stats.actions
+    });
+}
+
+/// For finite latents the binary codec and the retired v2 JSON encoding
+/// decode to the same value, bit for bit — the byte format changed, the
+/// semantics did not.
+#[test]
+fn gen_result_binary_equals_json_semantics() {
+    check_no_shrink("cache-codec-genresult-vs-json", gen_result, |res| {
+        let via_bin: GenResult = match decode_bytes(&encode_bytes(res)) {
+            Ok(b) => b,
+            Err(_) => return false,
+        };
+        let via_json = match gen_result_from_json_v2(&gen_result_to_json_v2(res)) {
+            Ok(b) => b,
+            Err(_) => return false,
+        };
+        via_bin.latent.dims == via_json.latent.dims
+            && latent_bits(&via_bin.latent) == latent_bits(&via_json.latent)
+            && via_bin.stats.actions == via_json.stats.actions
+            && via_bin.stats.step_ms == via_json.stats.step_ms
+            && via_bin.stats.mac_reduction == via_json.stats.mac_reduction
+            && via_bin.stats.total_ms == via_json.stats.total_ms
     });
 }
 
@@ -233,7 +303,7 @@ fn store_byte_cap_never_exceeded_under_random_workload() {
             for &(key, len) in ops {
                 // Valid JSON payload of exactly `len` bytes: "xxx...".
                 let payload = format!("\"{}\"", "x".repeat(len - 2));
-                store.put("request", CacheKey(key), &payload).unwrap();
+                store.put("request", CacheKey(key), payload.as_bytes()).unwrap();
                 if store.stats().bytes > *cap {
                     ok = false;
                     break;
@@ -254,11 +324,20 @@ fn corrupt_or_truncated_index_never_panics_and_recovers_payloads() {
         |rng| (gen_usize(rng, 0, 400), rng.bernoulli(0.3)),
         |&(cut, scramble)| {
             let dir = case_dir("corrupt");
+            let binary_payload = encode_bytes(&GenResult {
+                latent: Tensor::new(vec![2], vec![0.5, -0.5]).unwrap(),
+                stats: GenStats {
+                    actions: vec![StepAction::Full],
+                    step_ms: vec![1.0],
+                    mac_reduction: 1.0,
+                    total_ms: 1.0,
+                },
+            });
             {
                 let store = Store::open(StoreConfig::new(&dir)).unwrap();
-                store.put("calib", CacheKey(1), "{\"d_star\":5}").unwrap();
-                store.put("plan", CacheKey(2), "{\"candidates\":[]}").unwrap();
-                store.put("request", CacheKey(3), "{\"dims\":[1]}").unwrap();
+                store.put("calib", CacheKey(1), b"{\"d_star\":5}").unwrap();
+                store.put("plan", CacheKey(2), b"{\"candidates\":[]}").unwrap();
+                store.put("request", CacheKey(3), &binary_payload).unwrap();
             }
             let index = dir.join("index.json");
             let text = std::fs::read(&index).unwrap();
@@ -269,11 +348,12 @@ fn corrupt_or_truncated_index_never_panics_and_recovers_payloads() {
             }
             std::fs::write(&index, &mangled).unwrap();
 
-            // Must open without panicking and recover all three payloads.
+            // Must open without panicking and recover all three payloads
+            // (JSON and binary alike).
             let store = Store::open(StoreConfig::new(&dir)).unwrap();
             let ok = store.get("calib", CacheKey(1)).is_some()
                 && store.get("plan", CacheKey(2)).is_some()
-                && store.get("request", CacheKey(3)).is_some();
+                && store.get("request", CacheKey(3)).as_deref() == Some(&binary_payload[..]);
             let _ = std::fs::remove_dir_all(&dir);
             ok
         },

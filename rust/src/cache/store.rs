@@ -4,17 +4,31 @@
 //! Layout under the cache directory:
 //!
 //! ```text
-//! <dir>/index.json           # {"version","clock","meta","entries":[..]}
-//! <dir>/<namespace>/<key-hex>.json   # one payload per entry
+//! <dir>/index.json          # {"version","clock","meta","entries":[..]}
+//! <dir>/<namespace>/<key-hex>.bin   # one payload per entry
 //! ```
 //!
-//! The index is the source of truth for LRU state and byte accounting;
-//! payloads are content-addressed by [`CacheKey`] hex. Index updates go
-//! through a temp file + `rename`, so a crash leaves either the old or
-//! the new index — never a torn one. A missing, truncated or
-//! version-skewed index is recovered by scanning the payload directories
-//! (entries keep their bytes, LRU order resets), so no on-disk state can
-//! make [`Store::open`] panic.
+//! Payloads are opaque bytes to the store (the codec layer decides
+//! between JSON text and the binary latent framing). The index is the
+//! source of truth for LRU state and byte accounting; payloads are
+//! content-addressed by [`CacheKey`] hex. Index updates go through a
+//! temp file + `rename`, so a crash leaves either the old or the new
+//! index — never a torn one.
+//!
+//! Open-time recovery distinguishes two failure shapes:
+//!
+//! - **Version skew** (the index parses but carries a different
+//!   `CACHE_VERSION`): the store was written by another release whose
+//!   payload encodings may differ — v2 kept request latents as JSON
+//!   where v3 expects binary — so everything is flushed clean rather
+//!   than scanned in and misread.
+//! - **Corrupt/missing/truncated index**: same-version payloads are
+//!   still trustworthy, so the index is rebuilt by scanning the payload
+//!   directories (entries keep their bytes, LRU order resets). Files
+//!   that are neither parseable JSON nor well-formed binary payloads
+//!   are deleted during the scan.
+//!
+//! Neither path can make [`Store::open`] panic.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -25,6 +39,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+use super::binary;
 use super::evict::{plan_evictions, EvictEntry};
 use super::key::{CacheKey, CACHE_VERSION};
 
@@ -90,8 +105,8 @@ struct EntryMeta {
     bytes: u64,
     last_used: u64,
     /// Unix seconds at insert time — the TTL anchor. Entries recovered
-    /// from a pre-TTL index or a payload scan count as created "now"
-    /// (unknown age must not mass-expire a cache on upgrade).
+    /// from a payload scan count as created "now" (unknown age must not
+    /// mass-expire a cache on recovery).
     created: u64,
 }
 
@@ -117,6 +132,18 @@ struct Inner {
     dirty: bool,
     /// Puts since the last index persist (see [`PERSIST_EVERY`]).
     pending_puts: u32,
+}
+
+impl Inner {
+    fn empty() -> Inner {
+        Inner {
+            entries: BTreeMap::new(),
+            clock: 0,
+            meta: BTreeMap::new(),
+            dirty: true,
+            pending_puts: 0,
+        }
+    }
 }
 
 /// Per-namespace usage summary.
@@ -163,14 +190,22 @@ pub struct Store {
 }
 
 impl Store {
-    /// Open (or create) a store. Corrupt/missing indexes recover by
-    /// scanning payload files; this never panics on bad on-disk state.
+    /// Open (or create) a store. A version-skewed index flushes the
+    /// store clean (old payload encodings must not be misread);
+    /// corrupt/missing indexes recover by scanning payload files. Never
+    /// panics on bad on-disk state.
     pub fn open(cfg: StoreConfig) -> Result<Store> {
         std::fs::create_dir_all(&cfg.dir)
             .with_context(|| format!("creating cache dir {}", cfg.dir.display()))?;
         let inner = match load_index(&index_path(&cfg.dir)) {
-            Some(inner) => inner,
-            None => scan_payloads(&cfg.dir),
+            IndexState::Loaded(inner) => inner,
+            IndexState::VersionSkew => {
+                for d in namespace_dirs(&cfg.dir) {
+                    let _ = std::fs::remove_dir_all(&d);
+                }
+                Inner::empty()
+            }
+            IndexState::Unusable => scan_payloads(&cfg.dir),
         };
         let store = Store {
             cfg,
@@ -198,7 +233,7 @@ impl Store {
     }
 
     fn payload_path(&self, ns: &str, key: CacheKey) -> PathBuf {
-        self.cfg.dir.join(ns).join(format!("{}.json", key.hex()))
+        self.cfg.dir.join(ns).join(format!("{}.bin", key.hex()))
     }
 
     /// True when the namespace has a TTL and the entry has outlived it.
@@ -211,7 +246,7 @@ impl Store {
 
     /// Fetch a payload; touches LRU state on hit. Entries past their
     /// namespace TTL count as misses and are removed on sight.
-    pub fn get(&self, ns: &str, key: CacheKey) -> Option<String> {
+    pub fn get(&self, ns: &str, key: CacheKey) -> Option<Vec<u8>> {
         let mut inner = self.inner.lock().unwrap();
         let map_key = (ns.to_string(), key);
         let expired = match inner.entries.get(&map_key) {
@@ -233,8 +268,8 @@ impl Store {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return None;
         }
-        match std::fs::read_to_string(self.payload_path(ns, key)) {
-            Ok(text) => {
+        match std::fs::read(self.payload_path(ns, key)) {
+            Ok(bytes) => {
                 inner.clock += 1;
                 let clock = inner.clock;
                 if let Some(e) = inner.entries.get_mut(&map_key) {
@@ -242,7 +277,7 @@ impl Store {
                 }
                 inner.dirty = true;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(text)
+                Some(bytes)
             }
             Err(_) => {
                 // Payload vanished underneath us: self-heal the index.
@@ -257,7 +292,7 @@ impl Store {
 
     /// Insert (or replace) a payload. Returns how many entries were
     /// evicted to stay under the caps.
-    pub fn put(&self, ns: &str, key: CacheKey, text: &str) -> Result<usize> {
+    pub fn put(&self, ns: &str, key: CacheKey, payload: &[u8]) -> Result<usize> {
         if ns.is_empty() || ns.chars().any(|c| matches!(c, '/' | '\\' | '.')) {
             bail!("invalid cache namespace '{ns}'");
         }
@@ -268,13 +303,13 @@ impl Store {
         let parent = path.parent().expect("payload path has a parent");
         std::fs::create_dir_all(parent)
             .with_context(|| format!("creating {}", parent.display()))?;
-        write_atomic(&path, text.as_bytes())?;
+        write_atomic(&path, payload)?;
 
         inner.clock += 1;
         let clock = inner.clock;
         inner.entries.insert(
             (ns.to_string(), key),
-            EntryMeta { bytes: text.len() as u64, last_used: clock, created: now_unix() },
+            EntryMeta { bytes: payload.len() as u64, last_used: clock, created: now_unix() },
         );
         let evicted = self.evict_locked(&mut inner);
         inner.dirty = true;
@@ -495,29 +530,53 @@ fn index_path(dir: &Path) -> PathBuf {
 
 /// Write-then-rename so readers never observe a torn file.
 fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
-    let tmp = path.with_extension("json.tmp");
+    let tmp = path.with_extension("tmp");
     std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
     std::fs::rename(&tmp, path)
         .with_context(|| format!("renaming {} into place", tmp.display()))?;
     Ok(())
 }
 
-/// Parse the index; `None` means "unusable — fall back to a scan".
-fn load_index(path: &Path) -> Option<Inner> {
-    let text = std::fs::read_to_string(path).ok()?;
-    let j = Json::parse(&text).ok()?;
-    if j.get_usize("version") != Some(CACHE_VERSION as usize) {
-        return None;
+/// How an on-disk index read went.
+enum IndexState {
+    Loaded(Inner),
+    /// Parsed, but written by a different `CACHE_VERSION` — flush.
+    VersionSkew,
+    /// Missing/corrupt/truncated — rebuild by scanning payloads.
+    Unusable,
+}
+
+/// Parse the index, classifying failures (see [`IndexState`]).
+fn load_index(path: &Path) -> IndexState {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return IndexState::Unusable;
+    };
+    let Ok(j) = Json::parse(&text) else {
+        return IndexState::Unusable;
+    };
+    match j.get_usize("version") {
+        Some(v) if v == CACHE_VERSION as usize => {}
+        Some(_) => return IndexState::VersionSkew,
+        None => return IndexState::Unusable,
     }
     let mut entries = BTreeMap::new();
     let now = now_unix();
-    for e in j.get("entries")?.as_arr()? {
-        let ns = e.get_str("ns")?.to_string();
-        let key = CacheKey::from_hex(e.get_str("key")?)?;
+    let Some(list) = j.get("entries").and_then(Json::as_arr) else {
+        return IndexState::Unusable;
+    };
+    for e in list {
+        let (Some(ns), Some(key_hex), Some(bytes)) =
+            (e.get_str("ns"), e.get_str("key"), e.get_usize("bytes"))
+        else {
+            return IndexState::Unusable;
+        };
+        let Some(key) = CacheKey::from_hex(key_hex) else {
+            return IndexState::Unusable;
+        };
         entries.insert(
-            (ns, key),
+            (ns.to_string(), key),
             EntryMeta {
-                bytes: e.get_usize("bytes")? as u64,
+                bytes: bytes as u64,
                 last_used: e.get_usize("last_used").unwrap_or(0) as u64,
                 created: e.get_usize("created").map(|v| v as u64).unwrap_or(now),
             },
@@ -532,7 +591,7 @@ fn load_index(path: &Path) -> Option<Inner> {
                 .collect()
         })
         .unwrap_or_default();
-    Some(Inner {
+    IndexState::Loaded(Inner {
         entries,
         clock: j.get_usize("clock").unwrap_or(0) as u64,
         meta,
@@ -541,17 +600,28 @@ fn load_index(path: &Path) -> Option<Inner> {
     })
 }
 
-/// Rebuild an index by scanning payload directories (recovery path).
-/// Payloads that fail to parse as JSON are deleted; LRU order resets.
+/// True when `bytes` is a healthy payload in either on-disk encoding.
+fn payload_looks_valid(bytes: &[u8]) -> bool {
+    binary::is_well_formed(bytes)
+        || std::str::from_utf8(bytes)
+            .ok()
+            .map(|t| Json::parse(t).is_ok())
+            .unwrap_or(false)
+}
+
+/// Rebuild an index by scanning payload directories (recovery path for a
+/// same-version store whose index is unusable). Payloads that are
+/// neither parseable JSON nor well-formed binary are deleted, as are
+/// stray pre-v3 `.json` payload files; LRU order resets.
 fn scan_payloads(dir: &Path) -> Inner {
     let mut entries = BTreeMap::new();
     let mut clock = 0;
     for ns_dir in namespace_dirs(dir) {
         let ns = ns_dir.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+        sweep_legacy_payloads(&ns_dir);
         for (path, key) in payload_files(&ns_dir) {
-            let valid = std::fs::read_to_string(&path)
-                .ok()
-                .map(|t| Json::parse(&t).is_ok())
+            let valid = std::fs::read(&path)
+                .map(|bytes| payload_looks_valid(&bytes))
                 .unwrap_or(false);
             if !valid {
                 let _ = std::fs::remove_file(&path);
@@ -566,6 +636,22 @@ fn scan_payloads(dir: &Path) -> Inner {
         }
     }
     Inner { entries, clock, meta: BTreeMap::new(), dirty: true, pending_puts: 0 }
+}
+
+/// Delete pre-v3 `<hex>.json` payload files found during a scan — they
+/// belong to a store generation whose index is already gone.
+fn sweep_legacy_payloads(ns_dir: &Path) {
+    if let Ok(rd) = std::fs::read_dir(ns_dir) {
+        for e in rd.flatten() {
+            let p = e.path();
+            let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+            if p.extension().and_then(|s| s.to_str()) == Some("json")
+                && CacheKey::from_hex(stem).is_some()
+            {
+                let _ = std::fs::remove_file(&p);
+            }
+        }
+    }
 }
 
 /// Subdirectories of the cache dir (one per namespace).
@@ -583,14 +669,14 @@ fn namespace_dirs(dir: &Path) -> Vec<PathBuf> {
     out
 }
 
-/// `<16-hex>.json` payload files inside one namespace directory.
+/// `<16-hex>.bin` payload files inside one namespace directory.
 fn payload_files(ns_dir: &Path) -> Vec<(PathBuf, CacheKey)> {
     let mut out = Vec::new();
     if let Ok(rd) = std::fs::read_dir(ns_dir) {
         for e in rd.flatten() {
             let p = e.path();
             let stem = p.file_stem().and_then(|s| s.to_str()).unwrap_or("");
-            if p.extension().and_then(|s| s.to_str()) == Some("json") {
+            if p.extension().and_then(|s| s.to_str()) == Some("bin") {
                 if let Some(key) = CacheKey::from_hex(stem) {
                     out.push((p, key));
                 }
@@ -616,8 +702,8 @@ mod tests {
         let store = Store::open(StoreConfig::new(tmp_dir("roundtrip"))).unwrap();
         let k = CacheKey(42);
         assert_eq!(store.get("req", k), None);
-        store.put("req", k, "{\"a\":1}").unwrap();
-        assert_eq!(store.get("req", k).as_deref(), Some("{\"a\":1}"));
+        store.put("req", k, b"{\"a\":1}").unwrap();
+        assert_eq!(store.get("req", k).as_deref(), Some(&b"{\"a\":1}"[..]));
         let s = store.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
         assert_eq!(s.entries, 1);
@@ -625,16 +711,27 @@ mod tests {
     }
 
     #[test]
+    fn binary_payload_bytes_roundtrip_untouched() {
+        // Payloads are opaque bytes: non-UTF8 binary must come back
+        // byte-for-byte.
+        let store = Store::open(StoreConfig::new(tmp_dir("binbytes"))).unwrap();
+        let payload: Vec<u8> = (0..=255u8).collect();
+        store.put("req", CacheKey(7), &payload).unwrap();
+        assert_eq!(store.get("req", CacheKey(7)).as_deref(), Some(&payload[..]));
+        assert_eq!(store.stats().bytes, 256);
+    }
+
+    #[test]
     fn survives_reopen() {
         let dir = tmp_dir("reopen");
         {
             let store = Store::open(StoreConfig::new(&dir)).unwrap();
-            store.put("plan", CacheKey(1), "{\"x\":[1,2]}").unwrap();
-            store.put("calib", CacheKey(2), "{\"y\":3}").unwrap();
+            store.put("plan", CacheKey(1), b"{\"x\":[1,2]}").unwrap();
+            store.put("calib", CacheKey(2), b"{\"y\":3}").unwrap();
         }
         let store = Store::open(StoreConfig::new(&dir)).unwrap();
-        assert_eq!(store.get("plan", CacheKey(1)).as_deref(), Some("{\"x\":[1,2]}"));
-        assert_eq!(store.get("calib", CacheKey(2)).as_deref(), Some("{\"y\":3}"));
+        assert_eq!(store.get("plan", CacheKey(1)).as_deref(), Some(&b"{\"x\":[1,2]}"[..]));
+        assert_eq!(store.get("calib", CacheKey(2)).as_deref(), Some(&b"{\"y\":3}"[..]));
         assert_eq!(store.stats().entries, 2);
     }
 
@@ -643,7 +740,7 @@ mod tests {
         let cfg = StoreConfig::new(tmp_dir("cap")).with_max_bytes(30);
         let store = Store::open(cfg).unwrap();
         for i in 0..10u64 {
-            store.put("req", CacheKey(i), "{\"v\":1234567}").unwrap(); // 13 bytes
+            store.put("req", CacheKey(i), b"{\"v\":1234567}").unwrap(); // 13 bytes
             assert!(store.stats().bytes <= 30, "cap breached at i={i}");
         }
         let s = store.stats();
@@ -658,11 +755,11 @@ mod tests {
     fn lru_respects_touches() {
         let cfg = StoreConfig::new(tmp_dir("lru")).with_max_entries(2).with_max_bytes(1 << 20);
         let store = Store::open(cfg).unwrap();
-        store.put("req", CacheKey(1), "{}").unwrap();
-        store.put("req", CacheKey(2), "{}").unwrap();
+        store.put("req", CacheKey(1), b"{}").unwrap();
+        store.put("req", CacheKey(2), b"{}").unwrap();
         // Touch 1 so 2 becomes the LRU victim.
         assert!(store.get("req", CacheKey(1)).is_some());
-        store.put("req", CacheKey(3), "{}").unwrap();
+        store.put("req", CacheKey(3), b"{}").unwrap();
         assert!(store.get("req", CacheKey(1)).is_some());
         assert!(store.get("req", CacheKey(2)).is_none());
         assert!(store.get("req", CacheKey(3)).is_some());
@@ -675,7 +772,7 @@ mod tests {
         let dir = tmp_dir("crash1");
         {
             let store = Store::open(StoreConfig::new(&dir)).unwrap();
-            store.put("req", CacheKey(1), "{\"v\":1}").unwrap();
+            store.put("req", CacheKey(1), b"{\"v\":1}").unwrap();
             std::mem::forget(store); // simulated hard crash
         }
         let store = Store::open(StoreConfig::new(&dir)).unwrap();
@@ -689,7 +786,7 @@ mod tests {
         {
             let store = Store::open(StoreConfig::new(&dir)).unwrap();
             for i in 0..super::PERSIST_EVERY as u64 {
-                store.put("req", CacheKey(i), "{}").unwrap();
+                store.put("req", CacheKey(i), b"{}").unwrap();
             }
             std::mem::forget(store);
         }
@@ -702,34 +799,84 @@ mod tests {
         let dir = tmp_dir("corrupt");
         {
             let store = Store::open(StoreConfig::new(&dir)).unwrap();
-            store.put("req", CacheKey(7), "{\"keep\":true}").unwrap();
+            store.put("req", CacheKey(7), b"{\"keep\":true}").unwrap();
         }
         std::fs::write(dir.join("index.json"), "{\"version\":1,\"entr").unwrap();
         let store = Store::open(StoreConfig::new(&dir)).unwrap();
-        assert_eq!(store.get("req", CacheKey(7)).as_deref(), Some("{\"keep\":true}"));
+        assert_eq!(store.get("req", CacheKey(7)).as_deref(), Some(&b"{\"keep\":true}"[..]));
     }
 
     #[test]
-    fn version_skew_recovers_by_scanning() {
-        let dir = tmp_dir("version");
+    fn scan_keeps_wellformed_binary_payloads() {
+        use crate::coordinator::{GenResult, GenStats};
+        use crate::pas::plan::StepAction;
+        use crate::runtime::Tensor;
+        let dir = tmp_dir("scanbin");
+        let res = GenResult {
+            latent: Tensor::new(vec![2, 2], vec![1.0, -2.0, 0.5, f32::NAN]).unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full],
+                step_ms: vec![1.0],
+                mac_reduction: 1.0,
+                total_ms: 1.0,
+            },
+        };
+        let payload = super::binary::encode_gen_result(&res);
         {
             let store = Store::open(StoreConfig::new(&dir)).unwrap();
-            store.put("req", CacheKey(9), "{\"v\":9}").unwrap();
+            store.put("request", CacheKey(3), &payload).unwrap();
+            // A garbage sibling that is neither JSON nor binary.
+            store.put("request", CacheKey(4), &[0xff, 0x00, 0x12]).unwrap();
         }
+        std::fs::remove_file(dir.join("index.json")).unwrap();
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        assert_eq!(store.get("request", CacheKey(3)).as_deref(), Some(&payload[..]));
+        assert!(store.get("request", CacheKey(4)).is_none(), "garbage dropped by scan");
+    }
+
+    #[test]
+    fn version_skew_flushes_cleanly() {
+        // A store written by an older CACHE_VERSION must be flushed on
+        // open — its payload encodings (v2: JSON request latents) would
+        // be misread by the current codecs — not recovered by scan.
+        let dir = tmp_dir("version");
+        let ns = dir.join("request");
+        std::fs::create_dir_all(&ns).unwrap();
+        let key = CacheKey(9);
+        // v2 layout: `<hex>.json` payload + version-2 index naming it.
+        let payload_path = ns.join(format!("{}.json", key.hex()));
+        std::fs::write(&payload_path, "{\"dims\":[1],\"latent\":[0.5]}").unwrap();
+        std::fs::write(
+            dir.join("index.json"),
+            format!(
+                "{{\"version\":2,\"clock\":1,\"meta\":{{}},\"entries\":[{{\"ns\":\"request\",\
+                 \"key\":\"{}\",\"bytes\":27,\"last_used\":1,\"created\":0}}]}}",
+                key.hex()
+            ),
+        )
+        .unwrap();
+
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        assert_eq!(store.stats().entries, 0, "old entries must not be served");
+        assert!(store.get("request", key).is_none());
+        assert!(!payload_path.exists(), "old payload flushed from disk");
+
+        // A future version is flushed the same way.
+        drop(store);
         std::fs::write(dir.join("index.json"), "{\"version\":999,\"entries\":[]}").unwrap();
         let store = Store::open(StoreConfig::new(&dir)).unwrap();
-        assert_eq!(store.get("req", CacheKey(9)).as_deref(), Some("{\"v\":9}"));
+        assert_eq!(store.stats().entries, 0);
     }
 
     #[test]
     fn gc_reconciles_disk_and_index() {
         let dir = tmp_dir("gc");
         let store = Store::open(StoreConfig::new(&dir)).unwrap();
-        store.put("req", CacheKey(1), "{\"a\":1}").unwrap();
-        store.put("req", CacheKey(2), "{\"b\":2}").unwrap();
+        store.put("req", CacheKey(1), b"{\"a\":1}").unwrap();
+        store.put("req", CacheKey(2), b"{\"b\":2}").unwrap();
         // Vanish one payload; drop one orphan file in.
-        std::fs::remove_file(dir.join("req").join(format!("{}.json", CacheKey(1).hex()))).unwrap();
-        std::fs::write(dir.join("req").join(format!("{}.json", CacheKey(99).hex())), "{}").unwrap();
+        std::fs::remove_file(dir.join("req").join(format!("{}.bin", CacheKey(1).hex()))).unwrap();
+        std::fs::write(dir.join("req").join(format!("{}.bin", CacheKey(99).hex())), "{}").unwrap();
         let report = store.gc().unwrap();
         assert_eq!(report.dropped_missing, 1);
         assert_eq!(report.removed_orphans, 1);
@@ -740,8 +887,8 @@ mod tests {
     #[test]
     fn clear_namespace_only_hits_that_namespace() {
         let store = Store::open(StoreConfig::new(tmp_dir("clearns"))).unwrap();
-        store.put("req", CacheKey(1), "{}").unwrap();
-        store.put("plan", CacheKey(2), "{}").unwrap();
+        store.put("req", CacheKey(1), b"{}").unwrap();
+        store.put("plan", CacheKey(2), b"{}").unwrap();
         assert_eq!(store.clear(Some("req")), 1);
         assert!(store.get("req", CacheKey(1)).is_none());
         assert!(store.get("plan", CacheKey(2)).is_some());
@@ -754,18 +901,18 @@ mod tests {
         // TTL 0 on "req": entries expire on the very next access.
         let cfg = StoreConfig::new(tmp_dir("ttl_ns")).with_ttl("req", 0);
         let store = Store::open(cfg).unwrap();
-        store.put("req", CacheKey(1), "{\"v\":1}").unwrap();
-        store.put("plan", CacheKey(2), "{\"v\":2}").unwrap();
+        store.put("req", CacheKey(1), b"{\"v\":1}").unwrap();
+        store.put("plan", CacheKey(2), b"{\"v\":2}").unwrap();
         assert_eq!(store.get("req", CacheKey(1)), None, "expired");
-        assert_eq!(store.get("plan", CacheKey(2)).as_deref(), Some("{\"v\":2}"));
+        assert_eq!(store.get("plan", CacheKey(2)).as_deref(), Some(&b"{\"v\":2}"[..]));
         // The expired entry was evicted for real: index and payload gone.
         let s = store.stats();
         assert_eq!(s.entries, 1);
-        assert!(!store.dir().join("req").join(format!("{}.json", CacheKey(1).hex())).exists());
+        assert!(!store.dir().join("req").join(format!("{}.bin", CacheKey(1).hex())).exists());
         // A generous TTL does not expire fresh entries.
         let cfg = StoreConfig::new(tmp_dir("ttl_fresh")).with_ttl("req", 3600);
         let store = Store::open(cfg).unwrap();
-        store.put("req", CacheKey(3), "{}").unwrap();
+        store.put("req", CacheKey(3), b"{}").unwrap();
         assert!(store.get("req", CacheKey(3)).is_some());
     }
 
@@ -774,9 +921,9 @@ mod tests {
         let cfg = StoreConfig::new(tmp_dir("ttl_gc")).with_ttl("req", 0);
         let store = Store::open(cfg).unwrap();
         for i in 0..3u64 {
-            store.put("req", CacheKey(i), "{}").unwrap();
+            store.put("req", CacheKey(i), b"{}").unwrap();
         }
-        store.put("calib", CacheKey(9), "{}").unwrap();
+        store.put("calib", CacheKey(9), b"{}").unwrap();
         let report = store.gc().unwrap();
         assert_eq!(report.expired, 3);
         assert_eq!(store.stats().entries, 1, "non-TTL namespace survives");
@@ -792,7 +939,7 @@ mod tests {
         let dir = tmp_dir("ttl_reopen");
         {
             let store = Store::open(StoreConfig::new(&dir)).unwrap();
-            store.put("req", CacheKey(5), "{\"keep\":1}").unwrap();
+            store.put("req", CacheKey(5), b"{\"keep\":1}").unwrap();
         }
         {
             let store = Store::open(StoreConfig::new(&dir).with_ttl("req", 3600)).unwrap();
@@ -816,11 +963,11 @@ mod tests {
     #[test]
     fn replacing_an_entry_does_not_double_count() {
         let store = Store::open(StoreConfig::new(tmp_dir("replace"))).unwrap();
-        store.put("req", CacheKey(5), "{\"v\":1}").unwrap();
-        store.put("req", CacheKey(5), "{\"v\":22}").unwrap();
+        store.put("req", CacheKey(5), b"{\"v\":1}").unwrap();
+        store.put("req", CacheKey(5), b"{\"v\":22}").unwrap();
         let s = store.stats();
         assert_eq!(s.entries, 1);
         assert_eq!(s.bytes, 8);
-        assert_eq!(store.get("req", CacheKey(5)).as_deref(), Some("{\"v\":22}"));
+        assert_eq!(store.get("req", CacheKey(5)).as_deref(), Some(&b"{\"v\":22}"[..]));
     }
 }

@@ -6,7 +6,16 @@
 //! refreshes the feature cache) or a partial artifact (which consumes it)
 //! according to the phase-aware sampling plan. Python is never invoked:
 //! every compute step is a PJRT execution of an AOT artifact.
+//!
+//! The step loop is zero-copy on the host side: loop-invariant inputs
+//! (text context, guidance, feature caches) cross the runtime-thread
+//! boundary as [`Input::F32Ref`] Arc shares, the latent travels as an
+//! Arc-backed [`Tensor`] clone (refcount bump, no buffer copy), and the
+//! scheduler update runs in place via [`Sampler::step_mut`] — so a
+//! 50-step generation reuses one latent buffer instead of re-copying
+//! latent + context + guidance on every step.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -17,7 +26,7 @@ use crate::pas::cost::CostModel;
 use crate::pas::plan::{plan_is_executable, SamplingPlan, StepAction};
 use crate::quant::format::{emulate_activations, QuantScheme};
 use crate::runtime::{Input, Runtime, RuntimeHandle, Tensor, TensorI32};
-use crate::scheduler::{make_sampler, NoiseSchedule};
+use crate::scheduler::{make_sampler, NoiseSchedule, Sampler};
 use crate::util::rng::Pcg32;
 
 /// One text-to-image generation request.
@@ -95,6 +104,36 @@ pub struct GenStats {
     pub total_ms: f64,
 }
 
+/// Largest size in `sizes_ascending` that is <= `n`, falling back to
+/// the smallest. THE batch-size selection policy: the dynamic batcher
+/// (`server::batcher`) and the chunk planner below both route through
+/// it, so they can never disagree on chunk shapes.
+pub fn best_fit_batch(sizes_ascending: &[usize], n: usize) -> usize {
+    sizes_ascending
+        .iter()
+        .rev()
+        .find(|&&s| s <= n)
+        .copied()
+        .unwrap_or_else(|| *sizes_ascending.first().expect("no batch sizes"))
+}
+
+/// Split `n` items into compiled batch sizes, largest-first greedy.
+/// Every returned size is a *supported* artifact size; when `n` is
+/// smaller than the smallest compiled artifact (or a tail remains), the
+/// final chunk is the smallest supported size and the caller pads the
+/// batch (repeat a lane) then slices the padded lanes back off — the
+/// old behaviour of emitting an unsupported `n`-sized chunk made the
+/// execute fail at runtime.
+pub fn plan_chunks(supported_ascending: &[usize], mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    while n > 0 {
+        let take = best_fit_batch(supported_ascending, n);
+        out.push(take);
+        n = n.saturating_sub(take);
+    }
+    out
+}
+
 /// The coordinator: runtime handle + schedule + cost accounting.
 pub struct Coordinator {
     runtime: RuntimeHandle,
@@ -140,23 +179,10 @@ impl Coordinator {
     }
 
     /// Split `n` requests into supported batch sizes, largest first.
-    pub fn chunk_sizes(&self, mut n: usize) -> Vec<usize> {
-        let supported = self.supported_batches();
-        let mut out = Vec::new();
-        while n > 0 {
-            let take = supported
-                .iter()
-                .rev()
-                .find(|&&b| b <= n)
-                .copied()
-                .unwrap_or(*supported.first().expect("no batch sizes"));
-            let take = take.min(n).max(1);
-            // If even the smallest artifact is bigger than n, we must pad —
-            // handled by the caller; here we just emit the smallest.
-            out.push(take);
-            n -= take.min(n);
-        }
-        out
+    /// Every size has a compiled artifact; see [`plan_chunks`] for the
+    /// padding contract on the final chunk.
+    pub fn chunk_sizes(&self, n: usize) -> Vec<usize> {
+        plan_chunks(&self.supported_batches(), n)
     }
 
     /// Encode prompts (one text-encoder execution).
@@ -177,10 +203,8 @@ impl Coordinator {
     pub fn init_latent(&self, seed: u64) -> Tensor {
         let m = &self.runtime.manifest().model;
         let mut rng = Pcg32::new(seed, 0x1a7e47);
-        Tensor {
-            dims: vec![m.latent_l(), m.latent_c],
-            data: rng.gaussian_vec(m.latent_elems()),
-        }
+        Tensor::new(vec![m.latent_l(), m.latent_c], rng.gaussian_vec(m.latent_elems()))
+            .expect("latent dims match element count")
     }
 
     /// Run one lockstep batch. All requests must share `batch_key()` and
@@ -211,20 +235,21 @@ impl Coordinator {
         }
 
         let sched = NoiseSchedule::new(self.runtime.manifest().alpha_bar.clone());
-        let mut sampler = make_sampler(&reqs[0].sampler, sched, steps);
+        let mut sampler: Box<dyn Sampler + Send> = make_sampler(&reqs[0].sampler, sched, steps);
         let ts = sampler.timesteps().to_vec();
 
-        // Text conditioning (one batched execution).
+        // Text conditioning (one batched execution). Loop invariants are
+        // Arc'd once and shared with the runtime by refcount each step.
         let prompts: Vec<String> = reqs.iter().map(|r| r.prompt.clone()).collect();
-        let ctx = self.encode_prompts(&prompts)?;
+        let ctx = Arc::new(self.encode_prompts(&prompts)?);
+        let g = Arc::new(Tensor::scalar(reqs[0].guidance));
 
-        // Stacked latents.
+        // Stacked latents: one buffer, stepped in place for all N steps.
         let lat_parts: Vec<Tensor> = reqs.iter().map(|r| self.init_latent(r.seed)).collect();
         let mut latent = Tensor::stack(&lat_parts)?;
-        let g = Tensor::scalar(reqs[0].guidance);
 
         // Feature caches per cut level (refreshed by full steps).
-        let mut caches: Vec<Option<Tensor>> = vec![None; max_cut + 1];
+        let mut caches: Vec<Option<Arc<Tensor>>> = vec![None; max_cut + 1];
         let mut step_ms = Vec::with_capacity(steps);
         let t_start = Instant::now();
 
@@ -238,29 +263,30 @@ impl Coordinator {
                         &[
                             Input::F32(latent.clone()),
                             Input::F32(t_in),
-                            Input::F32(ctx.clone()),
-                            Input::F32(g.clone()),
+                            Input::F32Ref(Arc::clone(&ctx)),
+                            Input::F32Ref(Arc::clone(&g)),
                         ],
                     )?;
                     let mut it = out.into_iter();
                     let eps = it.next().ok_or_else(|| anyhow!("missing eps"))?;
                     for (l, cache) in it.enumerate() {
-                        caches[l + 1] = Some(cache);
+                        caches[l + 1] = Some(Arc::new(cache));
                     }
                     eps
                 }
                 StepAction::Partial(l) => {
                     let cache = caches[l]
-                        .clone()
+                        .as_ref()
+                        .map(Arc::clone)
                         .ok_or_else(|| anyhow!("partial step {i} without cache at cut {l}"))?;
                     let out = self.runtime.execute(
                         &Runtime::unet_partial(l, b),
                         &[
                             Input::F32(latent.clone()),
                             Input::F32(t_in),
-                            Input::F32(ctx.clone()),
-                            Input::F32(g.clone()),
-                            Input::F32(cache),
+                            Input::F32Ref(Arc::clone(&ctx)),
+                            Input::F32Ref(Arc::clone(&g)),
+                            Input::F32Ref(cache),
                         ],
                     )?;
                     out.into_iter().next().ok_or_else(|| anyhow!("missing eps"))?
@@ -275,14 +301,15 @@ impl Coordinator {
             // alone, so a lane's scale must not depend on which other
             // requests happened to share the batch.
             if let Some(scheme) = reqs[0].quant {
-                let lane = eps.data.len() / b;
-                for chunk in eps.data.chunks_mut(lane.max(1)) {
+                let lane = eps.len() / b;
+                for chunk in eps.make_mut().chunks_mut(lane.max(1)) {
                     emulate_activations(chunk, scheme.act);
                 }
             }
-            // Scheduler update (same t for every batch lane).
-            let new_data = sampler.step(i, &latent.data, &eps.data);
-            latent.data = new_data;
+            // Scheduler update, in place (same t for every batch lane).
+            // The runtime dropped its input handles before responding, so
+            // this `make_mut` finds the buffer unique and never copies.
+            sampler.step_mut(i, latent.make_mut(), eps.data());
             step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         }
 
@@ -303,19 +330,56 @@ impl Coordinator {
         Ok(self.generate_batch(std::slice::from_ref(req))?.remove(0))
     }
 
+    /// Run any number of batch-compatible requests by splitting them into
+    /// supported batch sizes ([`plan_chunks`]): a tail smaller than the
+    /// smallest compiled artifact is padded by repeating the last request
+    /// (lockstep lanes are independent) and the padded lanes are dropped
+    /// from the results. PAS validation uses this to batch lanes whose
+    /// plans coincide instead of generating one by one.
+    pub fn generate_many(&self, reqs: &[GenRequest]) -> Result<Vec<GenResult>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let key = reqs[0].batch_key();
+        if reqs.iter().any(|r| r.batch_key() != key) {
+            bail!("generate_many: requests are not batch-compatible");
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        for chunk in self.chunk_sizes(reqs.len()) {
+            let start = out.len();
+            let real = chunk.min(reqs.len() - start);
+            let mut batch: Vec<GenRequest> = reqs[start..start + real].to_vec();
+            while batch.len() < chunk {
+                batch.push(batch.last().expect("non-empty batch").clone());
+            }
+            let mut results = self.generate_batch(&batch)?;
+            results.truncate(real);
+            out.extend(results);
+        }
+        Ok(out)
+    }
+
     /// Decode latents to RGB images, (B, img_h*img_w, 3) in [0, 1]-ish.
+    /// Chunks smaller than the smallest compiled batch are padded by
+    /// repeating the last latent (an Arc clone, not a buffer copy) and
+    /// the padded outputs are sliced back off.
     pub fn decode(&self, latents: &[Tensor]) -> Result<Vec<Tensor>> {
         let mut out = Vec::with_capacity(latents.len());
         for chunk_size in self.chunk_sizes(latents.len()) {
             let start = out.len();
-            let batch = Tensor::stack(&latents[start..start + chunk_size])?;
+            let real = chunk_size.min(latents.len() - start);
+            let mut parts: Vec<Tensor> = latents[start..start + real].to_vec();
+            while parts.len() < chunk_size {
+                parts.push(parts.last().expect("non-empty chunk").clone());
+            }
+            let batch = Tensor::stack(&parts)?;
             let img = self
                 .runtime
                 .execute(&Runtime::vae_decoder(chunk_size), &[Input::F32(batch)])?
                 .into_iter()
                 .next()
                 .ok_or_else(|| anyhow!("missing image output"))?;
-            for i in 0..chunk_size {
+            for i in 0..real {
                 out.push(img.index0(i));
             }
         }
@@ -371,5 +435,41 @@ mod tests {
         assert_eq!(r.sampler, "pndm");
         assert!(matches!(r.plan, SamplingPlan::Full));
         assert_eq!(r.quant, None, "full precision unless asked");
+    }
+
+    #[test]
+    fn plan_chunks_only_emits_supported_sizes() {
+        let supported = [2usize, 4];
+        for n in 1..=11 {
+            let chunks = plan_chunks(&supported, n);
+            assert!(
+                chunks.iter().all(|c| supported.contains(c)),
+                "n={n}: unsupported chunk in {chunks:?}"
+            );
+            let total: usize = chunks.iter().sum();
+            assert!(total >= n, "n={n}: chunks {chunks:?} cover too little");
+            // Padding is confined to the final chunk.
+            let body: usize = chunks[..chunks.len() - 1].iter().sum();
+            assert!(body < n, "n={n}: padding before the final chunk in {chunks:?}");
+        }
+    }
+
+    #[test]
+    fn plan_chunks_pads_below_smallest_artifact() {
+        // The regression: n=1 with smallest compiled batch 2 used to emit
+        // an unsupported chunk of 1 and fail at execute time. Now the
+        // chunk is the smallest artifact and the caller pads one lane.
+        assert_eq!(plan_chunks(&[2, 4], 1), vec![2]);
+        assert_eq!(plan_chunks(&[2, 4], 3), vec![2, 2]);
+        assert_eq!(plan_chunks(&[2, 4], 7), vec![4, 2, 2]);
+        assert_eq!(plan_chunks(&[4], 2), vec![4]);
+    }
+
+    #[test]
+    fn plan_chunks_exact_fits_need_no_padding() {
+        assert_eq!(plan_chunks(&[1, 2, 4], 7), vec![4, 2, 1]);
+        assert_eq!(plan_chunks(&[2, 4], 8), vec![4, 4]);
+        assert_eq!(plan_chunks(&[1], 3), vec![1, 1, 1]);
+        assert!(plan_chunks(&[2, 4], 0).is_empty());
     }
 }

@@ -10,20 +10,43 @@
 //! through the PJRT CPU client (`runtime` module). Python never runs on
 //! the request path.
 //!
+//! ## Zero-copy hot path ([`runtime`], [`scheduler`], [`coordinator`])
+//!
+//! The denoising loop carries no redundant host-side copies:
+//! `runtime::Tensor` storage is a shared `Arc<[f32]>` (clones bump a
+//! refcount, mutation is copy-on-write via `Tensor::make_mut` — see the
+//! cost model in `runtime::tensor`), loop-invariant inputs cross
+//! the runtime-thread boundary as `Input::F32Ref` Arc shares, and
+//! samplers expose an in-place `Sampler::step_mut` that reuses one
+//! latent buffer for all N steps — bit-identical to the allocating
+//! `step` reference path (both call the same scalar kernels; determinism
+//! tests compare the trajectories bit for bit). The runtime thread drops
+//! its input handles before responding so the per-step `make_mut` never
+//! copies. PAS plan search fans candidate validation out over the
+//! `util::threadpool` and lane-batches validation prompts whose plans
+//! coincide through `Coordinator::generate_many`, returning the same
+//! candidate set as the serial path.
+//!
 //! ## Persistent cache ([`cache`])
 //!
 //! Expensive one-time work is memoized in a versioned, content-addressed
-//! on-disk store with three namespaces: calibration reports
-//! (Fig. 4 / Eq. 1-2), searched sampling-plan fronts (Fig. 7), and
-//! request-level generation results. Keys are structured FNV-1a hashes
-//! over the AOT manifest digest plus the defining fields
-//! (`(prompt, seed, steps, sampler, guidance, plan)` for requests), so a
-//! manifest rebuild flushes every namespace rather than serving stale
-//! latents. The store survives process restarts, enforces an LRU byte
-//! cap, and recovers from corrupt/truncated indexes by rescanning its
-//! payload files. Consumers: `pas::calibrate`/`pas::search` (warm starts
-//! become lookups), the serving layer (request cache consulted before
-//! enqueueing, hit/miss/eviction counters in `server::metrics`), the
+//! on-disk store with four namespaces: calibration reports
+//! (Fig. 4 / Eq. 1-2), searched sampling-plan fronts (Fig. 7), quant
+//! profiles, and request-level generation results. Keys are structured
+//! FNV-1a hashes over the AOT manifest digest plus the defining fields
+//! (`(prompt, seed, steps, sampler, guidance, plan, quant)` for
+//! requests), so a manifest rebuild flushes every namespace rather than
+//! serving stale latents. Request latents are stored in a
+//! length-delimited little-endian binary framing (`cache::binary`) at
+//! ≤ 40% of the former JSON float text, bit-exact for NaN/±inf/-0.0;
+//! the small structured namespaces stay JSON. The store survives
+//! process restarts, enforces an LRU byte cap, recovers from corrupt/
+//! truncated indexes by rescanning its payload files, and flushes clean
+//! on a `CACHE_VERSION` skew instead of misreading old encodings.
+//! Consumers: `pas::calibrate`/`pas::search` (warm starts become
+//! lookups), the serving layer (request cache consulted before
+//! enqueueing, hit/miss/eviction counters plus batch-occupancy
+//! histogram and queue-depth gauge in `server::metrics`), the
 //! coordinator (`SamplingPlan::Auto` resolution), and the `sd-acc cache`
 //! CLI (`stats`/`gc`/`clear`).
 //!

@@ -6,6 +6,8 @@
 //! measurement behind Fig. 4 and feeds D* and the outlier set to the
 //! Fig. 7 search framework.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::cache::Cache;
@@ -94,12 +96,12 @@ impl<'a> Calibrator<'a> {
         let mut noise_raw = vec![0.0f64; steps];
 
         for (pi, prompt) in prompts.iter().enumerate() {
-            let ctx = self.coord.encode_prompts(std::slice::from_ref(prompt))?;
+            let ctx = Arc::new(self.coord.encode_prompts(std::slice::from_ref(prompt))?);
             let mut latent = Tensor::stack(&[self.coord.init_latent(1000 + pi as u64)])?;
             let sched = NoiseSchedule::new(rt.manifest().alpha_bar.clone());
             let mut sampler = make_sampler("ddim", sched, steps);
             let ts = sampler.timesteps().to_vec();
-            let g = Tensor::scalar(guidance);
+            let g = Arc::new(Tensor::scalar(guidance));
             let mut prev_ups: Option<Vec<Tensor>> = None;
 
             for (i, &t) in ts.iter().enumerate() {
@@ -109,8 +111,8 @@ impl<'a> Calibrator<'a> {
                     &[
                         Input::F32(latent.clone()),
                         Input::F32(t_in),
-                        Input::F32(ctx.clone()),
-                        Input::F32(g.clone()),
+                        Input::F32Ref(Arc::clone(&ctx)),
+                        Input::F32Ref(Arc::clone(&g)),
                     ],
                 )?;
                 let mut it = out.into_iter();
@@ -119,14 +121,14 @@ impl<'a> Calibrator<'a> {
                 if ups.len() != n_blocks {
                     anyhow::bail!("calib artifact returned {} block inputs", ups.len());
                 }
-                noise_raw[i] += stats::l2_norm(&eps.data);
+                noise_raw[i] += stats::l2_norm(eps.data());
                 if let Some(prev) = &prev_ups {
                     for b in 0..n_blocks {
-                        raw[b][i - 1] += stats::shift_score(&ups[b].data, &prev[b].data);
+                        raw[b][i - 1] += stats::shift_score(ups[b].data(), prev[b].data());
                     }
                 }
                 prev_ups = Some(ups);
-                latent.data = sampler.step(i, &latent.data, &eps.data);
+                sampler.step_mut(i, latent.make_mut(), eps.data());
             }
         }
 

@@ -1,15 +1,29 @@
 //! The Fig. 7 optimisation framework: enumerate PAS configurations under
 //! user constraints, rank by Eq. 3 MAC reduction, optionally validate
 //! image quality against the full-sampling reference trajectory.
+//!
+//! Validation is embarrassingly parallel (each candidate generates with
+//! fixed seeds and compares against fixed references), so
+//! [`Searcher::search`] fans the top candidates out over a
+//! [`ThreadPool`], one worker-local [`Coordinator`] per job sharing the
+//! same runtime thread. Validation lanes whose plans coincide — all
+//! prompts of one candidate share a batch key — run lane-batched through
+//! [`Coordinator::generate_many`]. Both the parallel path and the serial
+//! reference ([`Searcher::search_serial`]) call the same per-candidate
+//! scoring function, so they return identical candidate sets (same
+//! order, same scores) — an integration test locks that in.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cache::{Cache, PlanFront};
-use crate::coordinator::{Coordinator, GenRequest};
+use crate::coordinator::{Coordinator, GenRequest, GenResult};
 use crate::pas::calibrate::CalibrationReport;
 use crate::pas::cost::CostModel;
 use crate::pas::plan::{PasConfig, SamplingPlan};
 use crate::util::stats;
+use crate::util::threadpool::ThreadPool;
 
 /// User requirements (Fig. 7, step 1).
 #[derive(Debug, Clone)]
@@ -84,6 +98,46 @@ pub fn enumerate_candidates(
     out
 }
 
+/// Validation requests for one plan: one per prompt, fixed seeds, all
+/// sharing a batch key so [`Coordinator::generate_many`] can lane-batch
+/// them.
+fn validation_requests(
+    prompts: &[String],
+    total_steps: usize,
+    plan: SamplingPlan,
+) -> Vec<GenRequest> {
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut r = GenRequest::new(p, 9000 + i as u64);
+            r.steps = total_steps;
+            r.plan = plan;
+            r
+        })
+        .collect()
+}
+
+/// Score one candidate: generate with its PAS plan over every validation
+/// prompt (lane-batched) and return the mean latent PSNR vs the
+/// references. Deterministic — identical from any thread.
+fn score_candidate(
+    coord: &Coordinator,
+    cfg: PasConfig,
+    prompts: &[String],
+    total_steps: usize,
+    refs: &[GenResult],
+) -> Result<f64> {
+    let reqs = validation_requests(prompts, total_steps, SamplingPlan::Pas(cfg));
+    let outs = coord.generate_many(&reqs)?;
+    let psnrs: Vec<f64> = outs
+        .iter()
+        .zip(refs)
+        .map(|(out, r)| stats::psnr(out.latent.data(), r.latent.data(), 2.0))
+        .collect();
+    Ok(stats::mean(&psnrs))
+}
+
 /// Full search pipeline (Fig. 7, steps 3-4).
 pub struct Searcher<'a> {
     pub coord: &'a Coordinator,
@@ -93,11 +147,35 @@ pub struct Searcher<'a> {
 impl<'a> Searcher<'a> {
     /// Validate the top candidates by generating with PAS and comparing
     /// the final latent to the full-sampling reference (same seeds).
+    /// Candidate scoring fans out over a thread pool; results are
+    /// identical to [`Searcher::search_serial`].
     pub fn search(
         &self,
         report: &CalibrationReport,
         cons: &SearchConstraints,
         validation_prompts: &[String],
+    ) -> Result<Vec<Candidate>> {
+        self.search_impl(report, cons, validation_prompts, true)
+    }
+
+    /// Single-threaded reference path: same lane batching, same scoring,
+    /// no pool. Exists so tests can prove the parallel path returns the
+    /// same candidate set (same order, same scores).
+    pub fn search_serial(
+        &self,
+        report: &CalibrationReport,
+        cons: &SearchConstraints,
+        validation_prompts: &[String],
+    ) -> Result<Vec<Candidate>> {
+        self.search_impl(report, cons, validation_prompts, false)
+    }
+
+    fn search_impl(
+        &self,
+        report: &CalibrationReport,
+        cons: &SearchConstraints,
+        validation_prompts: &[String],
+        parallel: bool,
     ) -> Result<Vec<Candidate>> {
         let max_cut = self.coord.runtime().manifest().model.max_cut;
         let mut cands = enumerate_candidates(report, &self.cost, cons, max_cut);
@@ -105,30 +183,44 @@ impl<'a> Searcher<'a> {
             return Ok(cands);
         };
 
-        // Reference latents (full sampling).
-        let refs: Vec<_> = validation_prompts
-            .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                let mut r = GenRequest::new(p, 9000 + i as u64);
-                r.steps = cons.total_steps;
-                self.coord.generate_one(&r)
+        // Reference latents (full sampling): one lane-batched run — all
+        // reference requests share a batch key.
+        let ref_reqs = validation_requests(validation_prompts, cons.total_steps, SamplingPlan::Full);
+        let refs = Arc::new(self.coord.generate_many(&ref_reqs)?);
+
+        let n_validate = cons.max_validate.min(cands.len());
+        let cfgs: Vec<PasConfig> = cands[..n_validate].iter().map(|c| c.cfg).collect();
+        let scores: Vec<Result<f64>> = if parallel && cfgs.len() > 1 {
+            // One worker-local Coordinator per job over the shared
+            // runtime handle (Coordinator itself is not 'static here;
+            // its handle is cheap to clone and thread-safe).
+            let handle = self.coord.runtime().clone();
+            let prompts: Arc<Vec<String>> = Arc::new(validation_prompts.to_vec());
+            let total_steps = cons.total_steps;
+            let refs = Arc::clone(&refs);
+            let workers = cfgs
+                .len()
+                .min(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2))
+                .max(1);
+            let pool = ThreadPool::new(workers);
+            pool.map(cfgs, move |cfg| {
+                let coord = Coordinator::new(handle.clone());
+                score_candidate(&coord, cfg, &prompts, total_steps, &refs)
             })
-            .collect::<Result<Vec<_>>>()?;
+        } else {
+            cfgs.into_iter()
+                .map(|cfg| {
+                    score_candidate(self.coord, cfg, validation_prompts, cons.total_steps, &refs)
+                })
+                .collect()
+        };
 
         let mut validated = Vec::new();
-        for cand in cands.iter_mut().take(cons.max_validate) {
-            let mut psnrs = Vec::new();
-            for (i, p) in validation_prompts.iter().enumerate() {
-                let mut r = GenRequest::new(p, 9000 + i as u64);
-                r.steps = cons.total_steps;
-                r.plan = SamplingPlan::Pas(cand.cfg);
-                let out = self.coord.generate_one(&r)?;
-                psnrs.push(stats::psnr(&out.latent.data, &refs[i].latent.data, 2.0));
-            }
-            cand.psnr_db = Some(stats::mean(&psnrs));
+        for (cand, score) in cands.iter_mut().zip(scores) {
+            let psnr = score?;
+            cand.psnr_db = Some(psnr);
             cand.validated = true;
-            if cand.psnr_db.unwrap() >= min_psnr {
+            if psnr >= min_psnr {
                 validated.push(cand.clone());
             }
         }
@@ -265,5 +357,19 @@ mod tests {
             3,
         );
         assert!(cands.is_empty());
+    }
+
+    #[test]
+    fn validation_requests_share_a_batch_key() {
+        let prompts =
+            vec!["red circle x4 y4".to_string(), "green stripe x8 y8".to_string()];
+        let cfg = PasConfig { t_sketch: 25, t_complete: 3, t_sparse: 4, l_sketch: 2, l_refine: 2 };
+        let reqs = validation_requests(&prompts, 50, SamplingPlan::Pas(cfg));
+        assert_eq!(reqs.len(), 2);
+        let key = reqs[0].batch_key();
+        assert!(reqs.iter().all(|r| r.batch_key() == key), "lanes must batch");
+        // Distinct deterministic seeds per prompt index.
+        assert_eq!(reqs[0].seed, 9000);
+        assert_eq!(reqs[1].seed, 9001);
     }
 }

@@ -19,7 +19,7 @@ use crate::util::stats;
 
 /// Latent-space PSNR (dB) against a reference, dynamic range ~[-2, 2].
 pub fn latent_psnr(latent: &Tensor, reference: &Tensor) -> f64 {
-    stats::psnr(&latent.data, &reference.data, 4.0)
+    stats::psnr(latent.data(), reference.data(), 4.0)
 }
 
 /// Pooled feature vector of an RGB image tensor (HW, 3): 4x4 grid of
@@ -36,7 +36,7 @@ pub fn image_features(img: &Tensor, h: usize, w: usize) -> Vec<f64> {
                 for x in cx * cw..(cx + 1) * cw {
                     let base = (y * w + x) * 3;
                     for c in 0..3 {
-                        sum[c] += img.data[base + c] as f64;
+                        sum[c] += img.data()[base + c] as f64;
                     }
                 }
             }
@@ -45,7 +45,7 @@ pub fn image_features(img: &Tensor, h: usize, w: usize) -> Vec<f64> {
         }
     }
     for c in 0..3 {
-        let vals: Vec<f64> = img.data[c..].iter().step_by(3).map(|&v| v as f64).collect();
+        let vals: Vec<f64> = img.data()[c..].iter().step_by(3).map(|&v| v as f64).collect();
         feats.push(stats::stddev(&vals));
     }
     feats
@@ -65,7 +65,7 @@ pub fn write_ppm(img: &Tensor, h: usize, w: usize, path: &Path) -> Result<()> {
         .with_context(|| format!("creating {}", path.display()))?;
     write!(f, "P6\n{w} {h}\n255\n")?;
     let bytes: Vec<u8> = img
-        .data
+        .data()
         .iter()
         .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
         .collect();
@@ -90,7 +90,12 @@ mod tests {
         let a = Tensor::new(vec![8, 2], vec![0.1; 16]).unwrap();
         let mut b_small = a.clone();
         let mut b_big = a.clone();
-        for (i, (s, l)) in b_small.data.iter_mut().zip(b_big.data.iter_mut()).enumerate() {
+        for (i, (s, l)) in b_small
+            .make_mut()
+            .iter_mut()
+            .zip(b_big.make_mut().iter_mut())
+            .enumerate()
+        {
             let delta = if i % 2 == 0 { 1.0 } else { -1.0 };
             *s += 0.01 * delta;
             *l += 0.3 * delta;

@@ -17,6 +17,8 @@
 //! calibration reports (manifest digest + steps + prompts + guidance),
 //! so a manifest rebuild invalidates them.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::cache::Cache;
@@ -277,23 +279,23 @@ impl<'a> QuantCalibrator<'a> {
         let mut up_accs: Vec<RangeAccum> = vec![RangeAccum::new(); n_blocks];
 
         for (pi, prompt) in prompts.iter().enumerate() {
-            let ctx = self.coord.encode_prompts(std::slice::from_ref(prompt))?;
+            let ctx = Arc::new(self.coord.encode_prompts(std::slice::from_ref(prompt))?);
             let mut latent = Tensor::stack(&[self.coord.init_latent(3000 + pi as u64)])?;
             let sched = NoiseSchedule::new(rt.manifest().alpha_bar.clone());
             let mut sampler = make_sampler("ddim", sched, steps);
             let ts = sampler.timesteps().to_vec();
-            let g = Tensor::scalar(guidance);
+            let g = Arc::new(Tensor::scalar(guidance));
 
             for (i, &t) in ts.iter().enumerate() {
-                latent_acc.observe(&latent.data);
+                latent_acc.observe(latent.data());
                 let t_in = Tensor::new(vec![1], vec![t as f32])?;
                 let out = rt.execute(
                     &Runtime::unet_calib(1),
                     &[
                         Input::F32(latent.clone()),
                         Input::F32(t_in),
-                        Input::F32(ctx.clone()),
-                        Input::F32(g.clone()),
+                        Input::F32Ref(Arc::clone(&ctx)),
+                        Input::F32Ref(Arc::clone(&g)),
                     ],
                 )?;
                 let mut it = out.into_iter();
@@ -302,11 +304,11 @@ impl<'a> QuantCalibrator<'a> {
                 if ups.len() != n_blocks {
                     anyhow::bail!("calib artifact returned {} block inputs", ups.len());
                 }
-                eps_acc.observe(&eps.data);
+                eps_acc.observe(eps.data());
                 for (b, u) in ups.iter().enumerate() {
-                    up_accs[b].observe(&u.data);
+                    up_accs[b].observe(u.data());
                 }
-                latent.data = sampler.step(i, &latent.data, &eps.data);
+                sampler.step_mut(i, latent.make_mut(), eps.data());
             }
         }
 

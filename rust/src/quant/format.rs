@@ -271,7 +271,8 @@ impl Quantizer {
     }
 
     pub fn fake_quant_tensor(&self, t: &Tensor) -> Tensor {
-        Tensor { dims: t.dims.clone(), data: self.fake_quant(&t.data) }
+        Tensor::new(t.dims.clone(), self.fake_quant(t.data()))
+            .expect("fake quant preserves element count")
     }
 }
 
@@ -505,10 +506,10 @@ mod tests {
     #[test]
     fn tensor_roundtrip_keeps_shape() {
         let t = Tensor::new(vec![2, 3], vec![0.1, -0.2, 0.3, 1.0, -1.0, 0.5]).unwrap();
-        let q = Quantizer::fit_symmetric(&t.data, NumericFormat::Int8, Granularity::PerChannel, 3);
+        let q = Quantizer::fit_symmetric(t.data(), NumericFormat::Int8, Granularity::PerChannel, 3);
         let out = q.fake_quant_tensor(&t);
         assert_eq!(out.dims, t.dims);
-        assert!(rms(&out.data, &t.data) < 0.01);
+        assert!(rms(out.data(), t.data()) < 0.01);
     }
 
     #[test]

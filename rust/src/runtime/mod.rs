@@ -21,9 +21,19 @@ pub use service::{RuntimeHandle, RuntimeService};
 pub use tensor::{Tensor, TensorI32};
 
 /// An input value for an artifact execution.
+///
+/// `F32` tensors are already cheap to clone (Arc-backed storage, see
+/// `runtime::tensor`); `F32Ref` goes one step further and shares the
+/// whole tensor — dims included — by reference count. The coordinator
+/// uses it for loop-invariant inputs (text context, guidance, feature
+/// caches) that are resent to the runtime on every denoising step, so
+/// the per-step cost of forwarding them across the runtime-thread
+/// channel is two atomic increments, never a buffer copy.
 #[derive(Debug, Clone)]
 pub enum Input {
     F32(Tensor),
+    /// Borrowed-by-refcount f32 input (zero-copy loop invariants).
+    F32Ref(Arc<Tensor>),
     I32(TensorI32),
 }
 
@@ -31,6 +41,7 @@ impl Input {
     fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             Input::F32(t) => t.to_literal(),
+            Input::F32Ref(t) => t.to_literal(),
             Input::I32(t) => t.to_literal(),
         }
     }
@@ -38,6 +49,7 @@ impl Input {
     fn dims(&self) -> &[usize] {
         match self {
             Input::F32(t) => &t.dims,
+            Input::F32Ref(t) => &t.dims,
             Input::I32(t) => &t.dims,
         }
     }

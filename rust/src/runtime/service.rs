@@ -94,7 +94,16 @@ impl RuntimeService {
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         Cmd::Execute { name, inputs, resp } => {
-                            let _ = resp.send(rt.execute(&name, &inputs));
+                            let result = rt.execute(&name, &inputs);
+                            // Release our input handles *before* responding:
+                            // inputs are Arc-backed tensors shared with the
+                            // caller, and the coordinator's in-place step
+                            // (`Tensor::make_mut`) should find its latent
+                            // uniquely owned when this call returns — holding
+                            // the clones across the send would force a
+                            // spurious copy-on-write on every step.
+                            drop(inputs);
+                            let _ = resp.send(result);
                         }
                         Cmd::Preload { names, resp } => {
                             let r = names.iter().try_for_each(|n| rt.load(n).map(|_| ()));

@@ -1,12 +1,34 @@
 //! Host-side tensors and conversions to/from PJRT literals.
+//!
+//! [`Tensor`] storage is a shared `Arc<[f32]>`: cloning a tensor (or an
+//! [`Input`](super::Input) holding one) bumps a reference count instead of
+//! copying the buffer, which is what makes the denoising hot path
+//! copy-free on the clone/mutate axis — the coordinator resends the same
+//! latent/context buffers to the runtime on every step. Mutation goes
+//! through [`Tensor::make_mut`], which is copy-on-write: it hands out
+//! `&mut [f32]` directly when the storage is uniquely owned (the steady
+//! state in the step loop) and detaches a private copy only when another
+//! handle still shares the buffer, so aliased readers can never observe
+//! a write.
+//!
+//! Cost model, stated honestly: *constructing* a tensor from a `Vec`
+//! pays one element copy into the Arc allocation (the refcount header
+//! and the data are colocated, so the Vec's buffer cannot be adopted).
+//! That is one copy per fresh runtime output (eps, feature caches) —
+//! the step loop's dominant traffic was the repeated latent/ctx clones
+//! and per-step result `Vec`s, which this representation eliminates
+//! entirely. `Arc<Vec<f32>>` would dodge the construction copy at the
+//! price of double indirection on every hot-path read.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-/// Dense row-major f32 tensor on the host.
+/// Dense row-major f32 tensor on the host with shared (`Arc`) storage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub dims: Vec<usize>,
-    pub data: Vec<f32>,
+    data: Arc<[f32]>,
 }
 
 impl Tensor {
@@ -15,16 +37,16 @@ impl Tensor {
         if n != data.len() {
             bail!("tensor shape {dims:?} needs {n} elems, got {}", data.len());
         }
-        Ok(Tensor { dims, data })
+        Ok(Tensor { dims, data: data.into() })
     }
 
     pub fn zeros(dims: Vec<usize>) -> Self {
         let n = dims.iter().product();
-        Tensor { dims, data: vec![0.0; n] }
+        Tensor { dims, data: vec![0.0; n].into() }
     }
 
     pub fn scalar(x: f32) -> Self {
-        Tensor { dims: vec![], data: vec![x] }
+        Tensor { dims: vec![], data: vec![x].into() }
     }
 
     pub fn len(&self) -> usize {
@@ -33,6 +55,35 @@ impl Tensor {
 
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
+    }
+
+    /// Read-only view of the element buffer.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable view of the element buffer, copy-on-write: free when this
+    /// tensor uniquely owns its storage, otherwise the buffer is copied
+    /// out first so aliases keep their old values. The denoising loop
+    /// relies on the unique case — the runtime drops its input handles
+    /// before responding, so the per-step `make_mut` never copies.
+    pub fn make_mut(&mut self) -> &mut [f32] {
+        if Arc::get_mut(&mut self.data).is_none() {
+            let copied: Arc<[f32]> = Arc::from(&self.data[..]);
+            self.data = copied;
+        }
+        Arc::get_mut(&mut self.data).expect("storage is uniquely owned after copy-out")
+    }
+
+    /// True when `self` and `other` share the same underlying buffer
+    /// (zero-copy observability for tests and assertions).
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// True when no other handle aliases this tensor's storage.
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.data) == 1
     }
 
     /// Convert to an XLA literal of the same shape.
@@ -56,7 +107,7 @@ impl Tensor {
         let inner: usize = self.dims[1..].iter().product();
         Tensor {
             dims: self.dims[1..].to_vec(),
-            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+            data: Arc::from(&self.data[i * inner..(i + 1) * inner]),
         }
     }
 
@@ -75,11 +126,12 @@ impl Tensor {
         }
         let mut dims = vec![parts.len()];
         dims.extend_from_slice(inner);
-        Ok(Tensor { dims, data })
+        Ok(Tensor { dims, data: data.into() })
     }
 }
 
-/// Dense row-major i32 tensor (token ids).
+/// Dense row-major i32 tensor (token ids). Small (prompt tokens only),
+/// so it keeps plain `Vec` storage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorI32 {
     pub dims: Vec<usize>,
@@ -115,7 +167,7 @@ mod tests {
     #[test]
     fn index0_slices_rows() {
         let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
-        assert_eq!(t.index0(1).data, vec![3.0, 4.0, 5.0]);
+        assert_eq!(t.index0(1).data(), &[3.0, 4.0, 5.0]);
         assert_eq!(t.index0(0).dims, vec![3]);
     }
 
@@ -140,6 +192,34 @@ mod tests {
     fn scalar_literal() {
         let t = Tensor::scalar(7.5);
         let lit = t.to_literal().unwrap();
-        assert_eq!(Tensor::from_literal(&lit).unwrap().data, vec![7.5]);
+        assert_eq!(Tensor::from_literal(&lit).unwrap().data(), &[7.5]);
+    }
+
+    #[test]
+    fn clone_shares_storage_without_copying() {
+        let a = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = a.clone();
+        assert!(a.shares_storage(&b), "clone must be zero-copy");
+        assert!(!a.is_unique());
+    }
+
+    #[test]
+    fn make_mut_is_free_when_unique() {
+        let mut t = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let before = t.data().as_ptr();
+        t.make_mut()[0] = 9.0;
+        assert_eq!(t.data().as_ptr(), before, "unique storage must mutate in place");
+        assert_eq!(t.data(), &[9.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn make_mut_copies_on_write_when_aliased() {
+        let mut a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = a.clone();
+        a.make_mut()[0] = -5.0;
+        assert_eq!(b.data(), &[1.0, 2.0, 3.0], "alias must keep the old values");
+        assert_eq!(a.data(), &[-5.0, 2.0, 3.0]);
+        assert!(!a.shares_storage(&b), "write detached the storage");
+        assert!(a.is_unique() && b.is_unique());
     }
 }

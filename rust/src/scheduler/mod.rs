@@ -11,6 +11,15 @@
 //!
 //! Both consume the `alpha_bar` table exported in the AOT manifest, so the
 //! rust side and the training-time schedule match bit-for-bit.
+//!
+//! Samplers expose two update paths. [`Sampler::step`] is the allocating
+//! reference: it returns a fresh latent `Vec` and never touches its
+//! inputs. [`Sampler::step_mut`] is the hot-path form: it overwrites the
+//! latent buffer in place, so the coordinator's denoising loop reuses one
+//! buffer for all N steps instead of allocating one per step. Both paths
+//! are routed through the same per-element scalar kernels, which makes
+//! them bit-identical by construction — the determinism tests below lock
+//! that in, including under copy-on-write aliasing of the latent tensor.
 
 use std::collections::VecDeque;
 
@@ -72,15 +81,40 @@ pub trait Sampler {
     /// Timesteps this sampler will visit (descending).
     fn timesteps(&self) -> &[i64];
 
-    /// Apply one denoising update. `i` indexes into `timesteps()`;
-    /// `latent` and `eps` are flat f32 of equal length.
+    /// Apply one denoising update, allocating: returns the next latent
+    /// and leaves `latent` untouched. `i` indexes into `timesteps()`;
+    /// `latent` and `eps` are flat f32 of equal length. This is the
+    /// clone-based reference path the determinism tests compare
+    /// [`Sampler::step_mut`] against.
     fn step(&mut self, i: usize, latent: &[f32], eps: &[f32]) -> Vec<f32>;
+
+    /// Apply one denoising update in place, overwriting `latent` with
+    /// the next latent. Bit-identical to [`Sampler::step`] (both call
+    /// the same scalar kernels); allocation-free in steady state.
+    fn step_mut(&mut self, i: usize, latent: &mut [f32], eps: &[f32]);
 
     /// Reset multistep history (new generation).
     fn reset(&mut self);
 }
 
 // -------------------------------------------------------------------- DDIM
+
+/// Per-step DDIM coefficients, shared by the allocating and in-place
+/// update paths.
+#[derive(Debug, Clone, Copy)]
+struct DdimCoeffs {
+    sa_t: f64,
+    sa_p: f64,
+    s1m_t: f64,
+    s1m_p: f64,
+}
+
+/// The DDIM per-element update (eta = 0).
+#[inline]
+fn ddim_update(c: DdimCoeffs, x: f32, e: f32) -> f32 {
+    let x0 = (x as f64 - c.s1m_t * e as f64) / c.sa_t;
+    (c.sa_p * x0 + c.s1m_p * e as f64) as f32
+}
 
 /// Deterministic DDIM sampler (eta = 0).
 pub struct Ddim {
@@ -101,6 +135,17 @@ impl Ddim {
             -1
         }
     }
+
+    fn coeffs(&self, i: usize) -> DdimCoeffs {
+        let ab_t = self.sched.ab(self.ts[i]);
+        let ab_p = self.sched.ab(self.prev_t(i));
+        DdimCoeffs {
+            sa_t: ab_t.sqrt(),
+            sa_p: ab_p.sqrt(),
+            s1m_t: (1.0 - ab_t).sqrt(),
+            s1m_p: (1.0 - ab_p).sqrt(),
+        }
+    }
 }
 
 impl Sampler for Ddim {
@@ -110,18 +155,16 @@ impl Sampler for Ddim {
 
     fn step(&mut self, i: usize, latent: &[f32], eps: &[f32]) -> Vec<f32> {
         assert_eq!(latent.len(), eps.len());
-        let ab_t = self.sched.ab(self.ts[i]);
-        let ab_p = self.sched.ab(self.prev_t(i));
-        let (sa_t, sa_p) = (ab_t.sqrt(), ab_p.sqrt());
-        let (s1m_t, s1m_p) = ((1.0 - ab_t).sqrt(), (1.0 - ab_p).sqrt());
-        latent
-            .iter()
-            .zip(eps)
-            .map(|(&x, &e)| {
-                let x0 = (x as f64 - s1m_t * e as f64) / sa_t;
-                (sa_p * x0 + s1m_p * e as f64) as f32
-            })
-            .collect()
+        let c = self.coeffs(i);
+        latent.iter().zip(eps).map(|(&x, &e)| ddim_update(c, x, e)).collect()
+    }
+
+    fn step_mut(&mut self, i: usize, latent: &mut [f32], eps: &[f32]) {
+        assert_eq!(latent.len(), eps.len());
+        let c = self.coeffs(i);
+        for (x, &e) in latent.iter_mut().zip(eps) {
+            *x = ddim_update(c, *x, e);
+        }
     }
 
     fn reset(&mut self) {}
@@ -129,12 +172,38 @@ impl Sampler for Ddim {
 
 // -------------------------------------------------------------------- PNDM
 
+/// Adams–Bashforth blend kernels (Liu et al., Eq. 12): coefficients for
+/// history depths 1-3 (depth 0 passes eps through).
+#[inline]
+fn blend1(e: f32, e1: f32) -> f32 {
+    (3.0 * e - e1) / 2.0
+}
+
+#[inline]
+fn blend2(e: f32, e1: f32, e2: f32) -> f32 {
+    (23.0 * e - 16.0 * e1 + 5.0 * e2) / 12.0
+}
+
+#[inline]
+fn blend3(e: f32, e1: f32, e2: f32, e3: f32) -> f32 {
+    (55.0 * e - 59.0 * e1 + 37.0 * e2 - 9.0 * e3) / 24.0
+}
+
+/// The PNDM transfer per-element update (diffusers `_get_prev_sample`).
+#[inline]
+fn transfer_update(sample_coeff: f64, eps_coeff: f64, x: f32, e: f32) -> f32 {
+    (sample_coeff * x as f64 - eps_coeff * e as f64) as f32
+}
+
 /// PNDM in PLMS mode (skip_prk_steps, as used for StableDiff): linear
 /// multistep over the last four eps predictions, then the PNDM transfer
 /// formula for the state update.
 pub struct Pndm {
     sched: NoiseSchedule,
     ts: Vec<i64>,
+    /// Up to 3 past eps buffers, newest first. Retired buffers are
+    /// recycled by [`Pndm::push_history`], so steady-state stepping
+    /// allocates nothing.
     history: VecDeque<Vec<f32>>,
 }
 
@@ -152,46 +221,50 @@ impl Pndm {
         }
     }
 
-    /// Adams–Bashforth blend of the eps history (Liu et al., Eq. 12).
+    /// Transfer coefficients for step `i` (f64, shared by both paths).
+    fn transfer_coeffs(&self, i: usize) -> (f64, f64) {
+        let ab_t = self.sched.ab(self.ts[i]);
+        let ab_p = self.sched.ab(self.prev_t(i));
+        let sample_coeff = (ab_p / ab_t).sqrt();
+        let denom = ab_t * (1.0 - ab_p).sqrt() + (ab_t * (1.0 - ab_t) * ab_p).sqrt();
+        let eps_coeff = (ab_p - ab_t) / denom;
+        (sample_coeff, eps_coeff)
+    }
+
+    /// Record `eps` as the newest history entry, recycling the retiring
+    /// buffer's allocation once the window is full.
+    fn push_history(&mut self, eps: &[f32]) {
+        let mut buf = if self.history.len() >= 3 {
+            self.history.pop_back().expect("non-empty history")
+        } else {
+            Vec::with_capacity(eps.len())
+        };
+        buf.clear();
+        buf.extend_from_slice(eps);
+        self.history.push_front(buf);
+    }
+
+    /// Adams–Bashforth blend of the eps history (allocating reference
+    /// form; the in-place path applies the same kernels element-wise).
     fn blend(&self, eps: &[f32]) -> Vec<f32> {
         let h: Vec<&Vec<f32>> = self.history.iter().collect();
         match h.len() {
             0 => eps.to_vec(),
-            1 => eps
-                .iter()
-                .zip(h[0])
-                .map(|(&e, &e1)| (3.0 * e - e1) / 2.0)
-                .collect(),
+            1 => eps.iter().zip(h[0]).map(|(&e, &e1)| blend1(e, e1)).collect(),
             2 => eps
                 .iter()
                 .zip(h[0])
                 .zip(h[1])
-                .map(|((&e, &e1), &e2)| (23.0 * e - 16.0 * e1 + 5.0 * e2) / 12.0)
+                .map(|((&e, &e1), &e2)| blend2(e, e1, e2))
                 .collect(),
             _ => eps
                 .iter()
                 .zip(h[0])
                 .zip(h[1])
                 .zip(h[2])
-                .map(|(((&e, &e1), &e2), &e3)| {
-                    (55.0 * e - 59.0 * e1 + 37.0 * e2 - 9.0 * e3) / 24.0
-                })
+                .map(|(((&e, &e1), &e2), &e3)| blend3(e, e1, e2, e3))
                 .collect(),
         }
-    }
-
-    /// The PNDM transfer step (diffusers `_get_prev_sample`).
-    fn transfer(&self, i: usize, latent: &[f32], eps: &[f32]) -> Vec<f32> {
-        let ab_t = self.sched.ab(self.ts[i]);
-        let ab_p = self.sched.ab(self.prev_t(i));
-        let sample_coeff = (ab_p / ab_t).sqrt();
-        let denom = ab_t * (1.0 - ab_p).sqrt() + (ab_t * (1.0 - ab_t) * ab_p).sqrt();
-        let eps_coeff = (ab_p - ab_t) / denom;
-        latent
-            .iter()
-            .zip(eps)
-            .map(|(&x, &e)| (sample_coeff * x as f64 - eps_coeff * e as f64) as f32)
-            .collect()
     }
 }
 
@@ -203,11 +276,46 @@ impl Sampler for Pndm {
     fn step(&mut self, i: usize, latent: &[f32], eps: &[f32]) -> Vec<f32> {
         assert_eq!(latent.len(), eps.len());
         let blended = self.blend(eps);
-        self.history.push_front(eps.to_vec());
-        if self.history.len() > 3 {
-            self.history.pop_back();
+        self.push_history(eps);
+        let (sc, ec) = self.transfer_coeffs(i);
+        latent
+            .iter()
+            .zip(&blended)
+            .map(|(&x, &e)| transfer_update(sc, ec, x, e))
+            .collect()
+    }
+
+    fn step_mut(&mut self, i: usize, latent: &mut [f32], eps: &[f32]) {
+        assert_eq!(latent.len(), eps.len());
+        let (sc, ec) = self.transfer_coeffs(i);
+        // Blend + transfer fused per element: no temporary blended Vec.
+        // History is read-only here; `eps` joins it after the loop.
+        match self.history.len() {
+            0 => {
+                for (x, &e) in latent.iter_mut().zip(eps) {
+                    *x = transfer_update(sc, ec, *x, e);
+                }
+            }
+            1 => {
+                let h0 = &self.history[0];
+                for (j, x) in latent.iter_mut().enumerate() {
+                    *x = transfer_update(sc, ec, *x, blend1(eps[j], h0[j]));
+                }
+            }
+            2 => {
+                let (h0, h1) = (&self.history[0], &self.history[1]);
+                for (j, x) in latent.iter_mut().enumerate() {
+                    *x = transfer_update(sc, ec, *x, blend2(eps[j], h0[j], h1[j]));
+                }
+            }
+            _ => {
+                let (h0, h1, h2) = (&self.history[0], &self.history[1], &self.history[2]);
+                for (j, x) in latent.iter_mut().enumerate() {
+                    *x = transfer_update(sc, ec, *x, blend3(eps[j], h0[j], h1[j], h2[j]));
+                }
+            }
         }
-        self.transfer(i, latent, &blended)
+        self.push_history(eps);
     }
 
     fn reset(&mut self) {
@@ -227,6 +335,7 @@ pub fn make_sampler(name: &str, sched: NoiseSchedule, n_steps: usize) -> Box<dyn
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::Tensor;
     use crate::util::rng::Pcg32;
 
     fn sched() -> NoiseSchedule {
@@ -406,5 +515,120 @@ mod tests {
                     && (s.alpha_bar[0] as f64 - (1.0 - b0)).abs() < 1e-6
             },
         );
+    }
+
+    // -------------------------------------------- in-place determinism
+
+    /// Synthetic but step- and element-dependent eps (exercises the full
+    /// multistep history machinery, unlike a constant).
+    fn synth_eps(step: usize, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|j| (((step * 31 + j * 7) % 97) as f32 / 97.0 - 0.5) * 1.5)
+            .collect()
+    }
+
+    /// step_mut must be bit-identical to the allocating step for both
+    /// samplers over a full multistep trajectory (property over random
+    /// seeds/lengths).
+    #[test]
+    fn step_mut_matches_step_bitwise() {
+        crate::testing::check_no_shrink(
+            "scheduler-inplace-bitexact",
+            |rng| {
+                let steps = crate::testing::gen_usize(rng, 1, 24);
+                let n = crate::testing::gen_usize(rng, 1, 64);
+                let seed = rng.next_u64();
+                (steps, n, seed)
+            },
+            |&(steps, n, seed)| {
+                for name in ["ddim", "pndm"] {
+                    let mut rng = Pcg32::seeded(seed);
+                    let x0: Vec<f32> = rng.gaussian_vec(n);
+                    let mut a = make_sampler(name, sched(), steps);
+                    let mut b = make_sampler(name, sched(), steps);
+                    let mut ref_latent = x0.clone();
+                    let mut inplace = x0;
+                    for i in 0..steps {
+                        let eps = synth_eps(i, n);
+                        ref_latent = a.step(i, &ref_latent, &eps);
+                        b.step_mut(i, &mut inplace, &eps);
+                        if ref_latent
+                            .iter()
+                            .zip(&inplace)
+                            .any(|(r, p)| r.to_bits() != p.to_bits())
+                        {
+                            return false;
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// The determinism guard for the zero-copy refactor: stepping a
+    /// shared (Arc-aliased) tensor in place through `make_mut` must
+    /// produce bit-identical final latents to the clone-based reference
+    /// path, while every alias taken mid-trajectory keeps its old bytes
+    /// (copy-on-write can never corrupt a concurrent reader).
+    #[test]
+    fn inplace_trajectory_on_shared_tensor_matches_reference() {
+        for name in ["ddim", "pndm"] {
+            let steps = 50;
+            let n = 128;
+            let mut rng = Pcg32::seeded(0x5eed);
+            let x0: Vec<f32> = rng.gaussian_vec(n);
+
+            // Reference: clone-based path, fresh Vec per step.
+            let mut a = make_sampler(name, sched(), steps);
+            let mut ref_latent = x0.clone();
+            for i in 0..steps {
+                ref_latent = a.step(i, &ref_latent, &synth_eps(i, n));
+            }
+
+            // Hot path: one Tensor stepped in place; every step also takes
+            // an alias (worst-case sharing — forces CoW on each make_mut).
+            let mut b = make_sampler(name, sched(), steps);
+            let mut latent = Tensor::new(vec![n], x0).unwrap();
+            let mut aliases: Vec<(Tensor, Vec<f32>)> = Vec::new();
+            for i in 0..steps {
+                let alias = latent.clone();
+                let before = alias.data().to_vec();
+                b.step_mut(i, latent.make_mut(), &synth_eps(i, n));
+                aliases.push((alias, before));
+            }
+
+            for (j, (r, p)) in ref_latent.iter().zip(latent.data()).enumerate() {
+                assert_eq!(
+                    r.to_bits(),
+                    p.to_bits(),
+                    "{name}: elem {j} diverged: {r} vs {p}"
+                );
+            }
+            for (i, (alias, before)) in aliases.iter().enumerate() {
+                assert_eq!(alias.data(), &before[..], "{name}: alias at step {i} mutated");
+            }
+        }
+    }
+
+    /// PNDM's recycled history buffers must never change results: run two
+    /// trajectories long enough to cycle the 3-deep window many times.
+    #[test]
+    fn pndm_history_recycling_is_invisible() {
+        let steps = 40;
+        let n = 16;
+        let mut p1 = Pndm::new(sched(), steps);
+        let mut p2 = Pndm::new(sched(), steps);
+        let mut rng = Pcg32::seeded(77);
+        let x0: Vec<f32> = rng.gaussian_vec(n);
+        let mut via_step = x0.clone();
+        let mut via_mut = x0;
+        for i in 0..steps {
+            let eps = synth_eps(i, n);
+            via_step = p1.step(i, &via_step, &eps);
+            p2.step_mut(i, &mut via_mut, &eps);
+        }
+        assert_eq!(via_step, via_mut);
+        assert!(p1.history.len() <= 3 && p2.history.len() <= 3);
     }
 }

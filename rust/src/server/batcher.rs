@@ -27,6 +27,16 @@ impl BatchItem for super::Pending {
     }
 }
 
+/// Largest size in `sizes` (ascending) that is <= n, falling back to
+/// the smallest. A free function — not a method — so `flush_ready` can
+/// call it while `self.queues` is mutably borrowed, instead of cloning
+/// the size table and re-stating the logic as a closure on every call.
+/// Delegates to the coordinator's policy so the batcher and the chunk
+/// planner (`coordinator::plan_chunks`) always agree.
+fn best_size_of(sizes: &[usize], n: usize) -> usize {
+    crate::coordinator::best_fit_batch(sizes, n)
+}
+
 impl<P: BatchItem> Batcher<P> {
     pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
         sizes.sort_unstable();
@@ -51,12 +61,7 @@ impl<P: BatchItem> Batcher<P> {
 
     /// Largest supported size <= n (falls back to smallest).
     fn best_size(&self, n: usize) -> usize {
-        self.sizes
-            .iter()
-            .rev()
-            .find(|&&s| s <= n)
-            .copied()
-            .unwrap_or(self.sizes[0])
+        best_size_of(&self.sizes, n)
     }
 
     /// Emit batches that are full, or whose oldest member exceeded
@@ -64,10 +69,6 @@ impl<P: BatchItem> Batcher<P> {
     pub fn flush_ready(&mut self, now: Instant) -> Vec<Vec<P>> {
         let max_size = self.max_size();
         let max_wait = self.max_wait;
-        let sizes = self.sizes.clone();
-        let best_size = |n: usize| -> usize {
-            sizes.iter().rev().find(|&&s| s <= n).copied().unwrap_or(sizes[0])
-        };
         let mut out = Vec::new();
         for q in self.queues.values_mut() {
             loop {
@@ -79,12 +80,12 @@ impl<P: BatchItem> Batcher<P> {
                 if !full && !aged {
                     break;
                 }
-                let take = best_size(q.len()).min(q.len());
+                let take = best_size_of(&self.sizes, q.len()).min(q.len());
                 out.push(q.drain(..take).map(|(_, p)| p).collect());
                 // Leftovers smaller than the smallest supported size wait
                 // for company unless they age out on a later call (the
                 // coordinator requires exact artifact batch sizes).
-                if q.len() < sizes[0] {
+                if q.len() < self.sizes[0] {
                     break;
                 }
             }

@@ -1,5 +1,7 @@
-//! Serving metrics: counters + latency reservoir.
+//! Serving metrics: counters, latency reservoir, batch-occupancy
+//! histogram, and a live queue-depth gauge.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -16,6 +18,15 @@ pub struct Metrics {
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_evictions: AtomicU64,
+    /// Requests currently held by the batcher (gauge, set by the
+    /// batcher thread after every flush pass).
+    queue_depth: AtomicU64,
+    /// Requests-per-executed-flush-group -> count (occupancy
+    /// histogram). This is the *logical* group size — how many real
+    /// requests shared an execution — not the artifact batch size:
+    /// a group smaller than the smallest compiled artifact is padded
+    /// up by `Coordinator::generate_many` before executing.
+    batch_hist: Mutex<BTreeMap<usize, u64>>,
     latencies_ms: Mutex<Vec<f64>>,
 }
 
@@ -26,6 +37,13 @@ pub struct Summary {
     pub completed: u64,
     pub errors: u64,
     pub mean_batch_size: f64,
+    /// (requests per executed flush group, group count), ascending by
+    /// size — the bench reports batch occupancy from this. Logical
+    /// sizes: sub-artifact groups execute padded (see `generate_many`)
+    /// but are recorded at their real request count.
+    pub batch_hist: Vec<(usize, u64)>,
+    /// Requests sitting in the batcher at summary time.
+    pub queue_depth: u64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub mean_ms: f64,
@@ -51,6 +69,12 @@ impl Metrics {
     pub fn on_batch(&self, batch_size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+        *self.batch_hist.lock().unwrap().entry(batch_size).or_insert(0) += 1;
+    }
+
+    /// Update the live queue-depth gauge (batcher thread).
+    pub fn set_queue_depth(&self, pending: usize) {
+        self.queue_depth.store(pending as u64, Ordering::Relaxed);
     }
 
     pub fn on_error(&self) {
@@ -85,6 +109,14 @@ impl Metrics {
                     self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
                 }
             },
+            batch_hist: self
+                .batch_hist
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(&size, &count)| (size, count))
+                .collect(),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
             p50_ms: stats::percentile(&lats, 50.0),
             p95_ms: stats::percentile(&lats, 95.0),
             mean_ms: stats::mean(&lats),
@@ -131,5 +163,32 @@ mod tests {
         assert_eq!(s.cache_hits, 2);
         assert_eq!(s.cache_misses, 1);
         assert_eq!(s.cache_evictions, 3);
+    }
+
+    #[test]
+    fn batch_histogram_counts_per_size() {
+        let m = Metrics::default();
+        m.on_batch(2);
+        m.on_batch(2);
+        m.on_batch(1);
+        m.on_batch(4);
+        let s = m.summary();
+        assert_eq!(s.batch_hist, vec![(1, 1), (2, 2), (4, 1)]);
+        // Histogram mass equals the batch counters.
+        let total: u64 = s.batch_hist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 4);
+        let weighted: u64 = s.batch_hist.iter().map(|&(sz, c)| sz as u64 * c).sum();
+        assert!((s.mean_batch_size - weighted as f64 / total as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_depth_is_a_gauge_not_a_counter() {
+        let m = Metrics::default();
+        m.set_queue_depth(7);
+        assert_eq!(m.summary().queue_depth, 7);
+        m.set_queue_depth(3);
+        assert_eq!(m.summary().queue_depth, 3, "gauge overwrites, never accumulates");
+        m.set_queue_depth(0);
+        assert_eq!(m.summary().queue_depth, 0);
     }
 }

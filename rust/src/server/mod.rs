@@ -141,11 +141,13 @@ impl Server {
                             for batch in batcher.flush_ready(Instant::now()) {
                                 let _ = work_tx.send(batch);
                             }
+                            metrics.set_queue_depth(batcher.pending());
                         }
                         // Final drain.
                         for batch in batcher.flush_all() {
                             let _ = work_tx.send(batch);
                         }
+                        metrics.set_queue_depth(0);
                     })
                     .expect("spawn batcher"),
             );
@@ -173,7 +175,12 @@ impl Server {
                             .iter()
                             .map(|p| p.enqueued.elapsed().as_secs_f64() * 1e3)
                             .collect();
-                        match coord.generate_batch(&reqs) {
+                        // generate_many, not generate_batch: aged
+                        // leftovers (and shutdown drains) can flush at
+                        // sizes below the smallest compiled artifact,
+                        // and generate_many pads those to a compiled
+                        // size and slices the results back.
+                        match coord.generate_many(&reqs) {
                             Ok(results) => {
                                 let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
                                 metrics.on_batch(reqs.len());

@@ -89,7 +89,7 @@ fn all_three_namespaces_survive_restart() {
     assert_eq!(cache.best_plan(25), Some(front.candidates[0].cfg));
 
     let res = cache.get_result(&req).expect("gen result survives");
-    assert_eq!(res.latent.data, result.latent.data);
+    assert_eq!(res.latent.data(), result.latent.data());
     assert_eq!(res.stats.actions, result.stats.actions);
 
     // Requests that differ in any key field stay distinct.
@@ -146,13 +146,53 @@ fn manifest_rebuild_flushes_but_same_manifest_keeps() {
 #[test]
 fn raw_store_recovers_from_index_loss() {
     let dir = tmp_dir("indexloss");
+    let payload = sd_acc::cache::codec::encode_bytes(&sample_result(0.25));
     {
         let store = Store::open(StoreConfig::new(&dir)).unwrap();
-        store.put("request", sd_acc::cache::CacheKey(77), "{\"dims\":[1],\"latent\":[0]}")
-            .unwrap();
+        store.put("request", sd_acc::cache::CacheKey(77), &payload).unwrap();
     }
     std::fs::remove_file(dir.join("index.json")).unwrap();
     let store = Store::open(StoreConfig::new(&dir)).unwrap();
-    assert!(store.get("request", sd_acc::cache::CacheKey(77)).is_some());
+    assert_eq!(
+        store.get("request", sd_acc::cache::CacheKey(77)).as_deref(),
+        Some(&payload[..]),
+        "binary payload recovered byte-exact by the scan"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pre_v3_store_is_flushed_not_misread() {
+    // A v2-generation store kept request latents as JSON `.json`
+    // payloads. Opening it with the v3 binary codecs must flush it
+    // clean — serving a misdecoded latent would be corruption, and the
+    // keys are version-salted anyway.
+    let dir = tmp_dir("prev3");
+    let ns = dir.join("request");
+    std::fs::create_dir_all(&ns).unwrap();
+    let key = sd_acc::cache::CacheKey(0xabcd);
+    std::fs::write(
+        ns.join(format!("{key}.json")),
+        "{\"dims\":[2],\"latent\":[0.5,-1.0],\"actions\":[0],\"step_ms\":[1],\
+         \"mac_reduction\":1,\"total_ms\":1}",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("index.json"),
+        format!(
+            "{{\"version\":2,\"clock\":1,\"meta\":{{\"manifest_hash\":\"0000000000000001\"}},\
+             \"entries\":[{{\"ns\":\"request\",\"key\":\"{key}\",\"bytes\":10,\
+             \"last_used\":1,\"created\":0}}]}}"
+        ),
+    )
+    .unwrap();
+
+    let cache = Cache::open(StoreConfig::new(&dir), 1).unwrap();
+    assert_eq!(cache.stats().entries, 0, "v2 store flushed on open");
+    assert!(!ns.join(format!("{key}.json")).exists(), "v2 payload removed from disk");
+    // The store works normally afterwards.
+    let req = GenRequest::new("fresh after flush", 9);
+    cache.put_result(&req, &sample_result(1.0)).unwrap();
+    assert!(cache.get_result(&req).is_some());
     let _ = std::fs::remove_dir_all(&dir);
 }

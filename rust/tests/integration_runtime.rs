@@ -43,8 +43,8 @@ fn text_encoder_runs_and_is_deterministic() {
     let out2 = rt.execute("text_encoder_b1", &[Input::I32(toks)]).unwrap();
     assert_eq!(out1.len(), 1);
     assert_eq!(out1[0].dims, vec![1, m.ctx_len, m.ctx_dim]);
-    assert_eq!(out1[0].data, out2[0].data, "execution must be deterministic");
-    assert!(out1[0].data.iter().all(|x| x.is_finite()));
+    assert_eq!(out1[0].data(), out2[0].data(), "execution must be deterministic");
+    assert!(out1[0].data().iter().all(|x| x.is_finite()));
 }
 
 #[test]
@@ -66,7 +66,7 @@ fn unet_full_shapes_and_caches() {
     assert_eq!(out[0].dims, vec![1, m.latent_l(), m.latent_c]);
     for cache in &out[1..] {
         assert_eq!(cache.dims, vec![2, m.latent_l(), m.channels[0]]);
-        assert!(cache.data.iter().all(|x| x.is_finite()));
+        assert!(cache.data().iter().all(|x| x.is_finite()));
     }
 }
 
@@ -105,11 +105,11 @@ fn unet_partial_consumes_full_cache() {
             )
             .unwrap();
         assert_eq!(eps[0].dims, vec![1, m.latent_l(), m.latent_c]);
-        assert!(eps[0].data.iter().all(|x| x.is_finite()));
+        assert!(eps[0].data().iter().all(|x| x.is_finite()));
         // With the *fresh* cache from the same timestep, the partial U-Net
         // re-runs the top blocks exactly => eps matches full eps closely.
-        let d = sd_acc::util::stats::l2_dist(&eps[0].data, &full[0].data);
-        let n = sd_acc::util::stats::l2_norm(&full[0].data).max(1e-6);
+        let d = sd_acc::util::stats::l2_dist(eps[0].data(), full[0].data());
+        let n = sd_acc::util::stats::l2_norm(full[0].data()).max(1e-6);
         assert!(d / n < 1e-3, "partial l={l} diverged: rel {}", d / n);
     }
 }
@@ -184,8 +184,8 @@ fn batch_lanes_are_independent() {
         .unwrap();
     let lane0 = out2[0].index0(0);
     let single = out1[0].index0(0);
-    let d = sd_acc::util::stats::l2_dist(&lane0.data, &single.data);
-    let n = sd_acc::util::stats::l2_norm(&single.data).max(1e-6);
+    let d = sd_acc::util::stats::l2_dist(lane0.data(), single.data());
+    let n = sd_acc::util::stats::l2_norm(single.data()).max(1e-6);
     assert!(d / n < 1e-3, "batch lane diverged: rel {}", d / n);
 }
 

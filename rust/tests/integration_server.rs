@@ -46,7 +46,7 @@ fn serves_concurrent_requests_with_batching() {
     let mut ok = 0;
     for rx in rxs {
         let res = rx.recv().expect("server alive").expect("generation ok");
-        assert!(res.latent.data.iter().all(|x| x.is_finite()));
+        assert!(res.latent.data().iter().all(|x| x.is_finite()));
         ok += 1;
     }
     assert_eq!(ok, 5);
@@ -67,8 +67,8 @@ fn server_result_matches_direct_coordinator() {
     let served = server.client().generate(req("blue square x3 y9", 55)).unwrap();
     server.shutdown();
 
-    let d = sd_acc::util::stats::l2_dist(&served.latent.data, &direct.latent.data);
-    let n = sd_acc::util::stats::l2_norm(&direct.latent.data);
+    let d = sd_acc::util::stats::l2_dist(served.latent.data(), direct.latent.data());
+    let n = sd_acc::util::stats::l2_norm(direct.latent.data());
     assert!(d / n < 2e-3, "served != direct: rel {}", d / n);
 }
 
@@ -90,7 +90,7 @@ fn repeated_request_served_from_request_cache() {
 
     let first = client.generate(req("cyan stripe x6 y6", 321)).unwrap();
     let again = client.generate(req("cyan stripe x6 y6", 321)).unwrap();
-    assert_eq!(first.latent.data, again.latent.data, "hit replays the stored latent");
+    assert_eq!(first.latent.data(), again.latent.data(), "hit replays the stored latent");
 
     let m = server.metrics.summary();
     assert_eq!(m.cache_hits, 1, "second submission hits");
@@ -111,7 +111,7 @@ fn repeated_request_served_from_request_cache() {
         ServerConfig { cache: Some(cache), ..Default::default() },
     );
     let warm = server.client().generate(req("cyan stripe x6 y6", 321)).unwrap();
-    assert_eq!(warm.latent.data, first.latent.data);
+    assert_eq!(warm.latent.data(), first.latent.data());
     assert_eq!(server.metrics.summary().cache_hits, 1);
     server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);

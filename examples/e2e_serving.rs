@@ -77,7 +77,15 @@ fn main() -> anyhow::Result<()> {
     // requests together.
     let server = Server::start(
         Arc::clone(&coord),
-        ServerConfig { workers: 1, max_wait: Duration::from_millis(40), cache },
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(40),
+            cache,
+            // This driver submits the whole workload up front; admit it
+            // all even when SD_ACC_E2E_REQS exceeds the default bound.
+            max_queue: n_reqs.max(1024),
+            ..Default::default()
+        },
     );
     let client = server.client();
 
@@ -86,7 +94,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("submitting {n_reqs} requests ({steps} steps each, 50% PAS)...");
     let t0 = Instant::now();
-    let mut rxs = Vec::new();
+    let mut handles = Vec::new();
     for i in 0..n_reqs {
         let mut r = GenRequest::new(&synth_prompt(&mut rng), 4000 + i as u64);
         r.steps = steps;
@@ -94,14 +102,17 @@ fn main() -> anyhow::Result<()> {
         if i % 2 == 1 {
             r.plan = SamplingPlan::Pas(pas);
         }
-        rxs.push((r.clone(), client.submit(r)));
+        // submit returns a JobHandle (id + streaming events + cancel
+        // token); this driver only needs the blocking wait.
+        let handle = client.submit(r.clone())?;
+        handles.push((r, handle));
     }
 
     let mut lat_full = Vec::new();
     let mut lat_pas = Vec::new();
     let mut results = Vec::new();
-    for (req, rx) in rxs {
-        let res = rx.recv()??;
+    for (req, handle) in handles {
+        let res = handle.wait()?;
         match req.plan {
             SamplingPlan::Full | SamplingPlan::Auto => lat_full.push(res.stats.total_ms),
             SamplingPlan::Pas(_) => lat_pas.push(res.stats.total_ms),

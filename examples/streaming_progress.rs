@@ -1,0 +1,101 @@
+//! Streaming job API walkthrough: submit, watch per-step events arrive
+//! live, then cancel a second job mid-flight.
+//!
+//! Demonstrates the session-oriented serving API:
+//!   - `Client::submit` -> `JobHandle { id, events, cancel }`
+//!   - the event vocabulary (Queued / Scheduled / Step / Done / ...)
+//!   - `SubmitOptions` priorities
+//!   - cooperative cancellation observed once per denoising step, so a
+//!     fired token stops a run *before its final step*, not just while
+//!     it waits in the queue.
+//!
+//! Run: `make artifacts && cargo run --release --example streaming_progress`
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sd_acc::coordinator::{Coordinator, GenRequest, SamplerKind};
+use sd_acc::pas::plan::StepAction;
+use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+use sd_acc::server::{JobEvent, Priority, Server, ServerConfig, SubmitOptions};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("no artifacts at {} — run `make artifacts` first", dir.display());
+    }
+    let svc = RuntimeService::start(&dir)?;
+    let coord = Arc::new(Coordinator::new(svc.handle()));
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig { workers: 1, max_wait: Duration::from_millis(20), ..Default::default() },
+    );
+    let client = server.client();
+
+    // ---- 1. Watch a generation stream its lifecycle, step by step.
+    let req = GenRequest::builder("red circle x4 y4 blue square x11 y11", 7)
+        .steps(12)
+        .sampler(SamplerKind::Ddim)
+        .build()?;
+    let handle = client.submit_with(req, SubmitOptions::with_priority(Priority::High))?;
+    println!("submitted {} (high priority); streaming events:", handle.id);
+    loop {
+        let ev = handle
+            .events
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped the event stream"))?;
+        match &ev {
+            JobEvent::Queued => println!("  queued"),
+            JobEvent::CacheHit => println!("  cache hit — no generation needed"),
+            JobEvent::Scheduled { batch_size } => {
+                println!("  scheduled in a batch of {batch_size}")
+            }
+            JobEvent::Step { i, action, ms } => {
+                let what = match action {
+                    StepAction::Full => "full U-Net".to_string(),
+                    StepAction::Partial(l) => format!("partial (cut {l})"),
+                };
+                println!("  step {:>2}: {what:<16} {ms:6.1} ms", i + 1);
+            }
+            JobEvent::Done(res) => {
+                println!(
+                    "  done: {:.0} ms total, MAC reduction {:.2}x",
+                    res.stats.total_ms, res.stats.mac_reduction
+                );
+            }
+            JobEvent::Failed(e) => println!("  failed: {e}"),
+            JobEvent::Cancelled => println!("  cancelled"),
+        }
+        if ev.is_terminal() {
+            break;
+        }
+    }
+
+    // ---- 2. Cancel a job after its third step: the denoising loop
+    // polls the token every step, so the run aborts mid-flight.
+    let req = GenRequest::builder("green stripe x8 y8", 8).steps(12).build()?;
+    let handle = client.submit(req)?;
+    println!("\nsubmitted {}; cancelling after 3 observed steps...", handle.id);
+    let mut steps_seen = 0usize;
+    loop {
+        let Ok(ev) = handle.events.recv() else { break };
+        match &ev {
+            JobEvent::Step { i, .. } => {
+                steps_seen += 1;
+                println!("  step {} ran", i + 1);
+                if steps_seen == 3 {
+                    handle.cancel.cancel();
+                    println!("  -> cancel requested");
+                }
+            }
+            JobEvent::Cancelled => println!("  cancelled after {steps_seen} of 12 steps"),
+            other => println!("  {}", other.label()),
+        }
+        if ev.is_terminal() {
+            break;
+        }
+    }
+
+    server.shutdown();
+    Ok(())
+}

@@ -2,7 +2,7 @@
 //! occupancy, and warm-vs-cold request-cache latency — the serving perf
 //! trajectory's baseline (`BENCH_serving.json` at the repo root).
 //!
-//! Three sections:
+//! Four sections:
 //!
 //! 1. **Request cache warm vs cold** (no artifacts needed): the cold
 //!    path pays a regeneration proxy — a 50-step PNDM scheduler
@@ -15,12 +15,23 @@
 //! 2. **Batch occupancy** (no artifacts needed): a synthetic arrival
 //!    pattern through the real `Batcher` + `Metrics`, reporting the
 //!    executed-batch-size histogram, mean occupancy and queue depth.
-//! 3. **Live serving** (only when AOT artifacts are present): full
+//! 3. **Event-channel & cancellation overhead** (no artifacts needed):
+//!    the job API streams one `Step` event per denoising step through a
+//!    `StepObserver`; this section runs the scheduler-floor loop with
+//!    (a) the no-op observer, (b) a cancel-poll-only observer, and
+//!    (c) a channel observer feeding a live drainer thread, and
+//!    asserts the event-channel path adds **< 5% p50 overhead** over
+//!    the blocking path. Asserted, also in `--smoke` — this is the
+//!    acceptance band for the streaming job API.
+//! 4. **Live serving** (only when AOT artifacts are present): full
 //!    server over the PJRT runtime — req/s, p50/p95/p99, occupancy,
-//!    measured warm-vs-cold hit latency through the client path.
+//!    measured warm-vs-cold hit latency through the client path, plus
+//!    submit->event->done latency and time-to-cancel-ack through the
+//!    `JobHandle` API.
 //!
 //! `--smoke` (used by ci.sh) trims iteration counts, still enforces the
-//! warm >= 3x cold band, and skips the repo-root artifact write.
+//! warm >= 3x cold and event-overhead bands, and skips the repo-root
+//! artifact write.
 //!
 //! Run: `cargo bench --bench bench_serving [-- --smoke]`
 
@@ -29,12 +40,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use sd_acc::cache::{Cache, StoreConfig};
-use sd_acc::coordinator::{BatchKey, GenRequest, GenResult, GenStats};
+use sd_acc::coordinator::{BatchKey, GenRequest, GenResult, GenStats, NoopObserver, StepObserver};
 use sd_acc::pas::plan::StepAction;
 use sd_acc::runtime::Tensor;
 use sd_acc::scheduler::{make_sampler, NoiseSchedule};
 use sd_acc::server::batcher::{BatchItem, Batcher};
 use sd_acc::server::metrics::Metrics;
+use sd_acc::server::{CancelToken, JobEvent};
 use sd_acc::util::bench::Bench;
 use sd_acc::util::json::Json;
 use sd_acc::util::rng::Pcg32;
@@ -77,6 +89,81 @@ impl BatchItem for Item {
     fn key(&self) -> BatchKey {
         self.0.batch_key()
     }
+}
+
+/// SD-class latent for the observer-overhead loop (64x64 images decode
+/// from 4096-element latents; sd-tiny's 1024 would make the per-step
+/// work so small that channel costs dominate by construction).
+const OBS_ELEMS: usize = 4096;
+
+/// The scheduler-floor loop with the coordinator's observer contract:
+/// one `should_cancel` poll before each step, one `on_step` after —
+/// exactly the per-step hooks `generate_batch_observed` adds.
+fn observed_floor(seed: u64, obs: &dyn StepObserver) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut latent = rng.gaussian_vec(OBS_ELEMS);
+    let eps: Vec<f32> = rng.gaussian_vec(OBS_ELEMS);
+    let mut sampler =
+        make_sampler("pndm", NoiseSchedule::scaled_linear(1000, 0.00085, 0.012), STEPS);
+    for i in 0..STEPS {
+        if obs.should_cancel() {
+            break;
+        }
+        let t0 = Instant::now();
+        sampler.step_mut(i, &mut latent, &eps);
+        obs.on_step(i, StepAction::Full, t0.elapsed().as_secs_f64() * 1e3);
+    }
+    latent
+}
+
+/// Observer that only pays the cancellation poll (token never fires).
+struct CancelPollObserver {
+    cancel: CancelToken,
+}
+
+impl StepObserver for CancelPollObserver {
+    fn should_cancel(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+}
+
+/// Observer streaming one `JobEvent::Step` per step into a channel —
+/// the job API's event path.
+struct ChannelObserver {
+    tx: std::sync::mpsc::Sender<JobEvent>,
+    cancel: CancelToken,
+}
+
+impl StepObserver for ChannelObserver {
+    fn on_step(&self, i: usize, action: StepAction, ms: f64) {
+        let _ = self.tx.send(JobEvent::Step { i, action, ms });
+    }
+
+    fn should_cancel(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+}
+
+/// One timed run of `observed_floor`, in ns. When a receiver is given,
+/// the timed region also drains it (same thread — deterministic, no
+/// cross-thread scheduler noise in the measurement); the second return
+/// is the number of events drained.
+fn timed_floor(
+    seed: u64,
+    obs: &dyn StepObserver,
+    drain: Option<&std::sync::mpsc::Receiver<JobEvent>>,
+) -> (f64, usize) {
+    let mut drained = 0usize;
+    let t0 = Instant::now();
+    let latent = observed_floor(seed, obs);
+    std::hint::black_box(latent.len());
+    if let Some(rx) = drain {
+        while let Ok(ev) = rx.try_recv() {
+            std::hint::black_box(ev.label());
+            drained += 1;
+        }
+    }
+    (t0.elapsed().as_nanos() as f64, drained)
 }
 
 fn main() {
@@ -161,7 +248,56 @@ fn main() {
         occ.batch_hist
     );
 
-    // ------------------------------------------------- 3. live serving
+    // -------------------- 3. event-channel & cancellation overhead
+    // The event path sends one JobEvent::Step per step and drains them
+    // inside the timed region (same thread: deterministic, no consumer
+    // wakeup races). The three variants are measured *interleaved* —
+    // blocking/cancel/event per iteration — so a load burst or
+    // frequency transition hits all three alike instead of biasing
+    // whichever was measured last; p50 then absorbs the outliers.
+    let iters = if smoke { 64 } else { 256 };
+    let cancel_obs = CancelPollObserver { cancel: CancelToken::new() };
+    let (ev_tx, ev_rx) = std::sync::mpsc::channel::<JobEvent>();
+    let chan_obs = ChannelObserver { tx: ev_tx, cancel: CancelToken::new() };
+    for k in 0..8u64 {
+        // Warm-up: first-touch allocation noise stays out of the medians.
+        let _ = timed_floor(k, &NoopObserver, None);
+        let _ = timed_floor(k, &chan_obs, Some(&ev_rx));
+    }
+    let mut blocking_ns = Vec::with_capacity(iters);
+    let mut cancel_ns = Vec::with_capacity(iters);
+    let mut event_ns = Vec::with_capacity(iters);
+    let mut delivered = 0usize;
+    for k in 0..iters {
+        blocking_ns.push(timed_floor(k as u64, &NoopObserver, None).0);
+        cancel_ns.push(timed_floor(k as u64, &cancel_obs, None).0);
+        let (ns, n) = timed_floor(k as u64, &chan_obs, Some(&ev_rx));
+        event_ns.push(ns);
+        delivered += n;
+    }
+    let blocking_p50 = stats::percentile(&blocking_ns, 50.0);
+    let cancel_p50 = stats::percentile(&cancel_ns, 50.0);
+    let event_p50 = stats::percentile(&event_ns, 50.0);
+    assert_eq!(delivered, iters * STEPS, "every step event must be delivered");
+    let event_overhead = event_p50 / blocking_p50.max(1.0) - 1.0;
+    let cancel_overhead = cancel_p50 / blocking_p50.max(1.0) - 1.0;
+    println!(
+        "step-loop p50: blocking {:.0} ns | +cancel poll {:.0} ns ({:+.2}%) | \
+         +event channel {:.0} ns ({:+.2}%)",
+        blocking_p50,
+        cancel_p50,
+        cancel_overhead * 100.0,
+        event_p50,
+        event_overhead * 100.0,
+    );
+    assert!(
+        event_overhead < 0.05,
+        "acceptance: the event-channel path must add < 5% p50 overhead over the \
+         blocking path (got {:.2}%)",
+        event_overhead * 100.0
+    );
+
+    // ------------------------------------------------- 4. live serving
     let e2e = run_e2e(smoke);
 
     b.emit_json();
@@ -179,6 +315,10 @@ fn main() {
         ("warm_hit_ns", Json::num(warm_ns)),
         ("miss_ns", Json::num(miss_ns)),
         ("warm_ratio", Json::num(warm_ratio)),
+        ("step_blocking_p50_ns", Json::num(blocking_p50)),
+        ("step_cancel_poll_p50_ns", Json::num(cancel_p50)),
+        ("step_event_channel_p50_ns", Json::num(event_p50)),
+        ("event_channel_overhead", Json::num(event_overhead)),
         ("mean_batch_size", Json::num(occ.mean_batch_size)),
         (
             "batch_hist",
@@ -241,15 +381,17 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
             workers: 2,
             max_wait: Duration::from_millis(30),
             cache: Some(Arc::clone(&cache)),
+            ..Default::default()
         },
     );
     let client = server.client();
     let n = if smoke { 4 } else { 16 };
     let steps = if smoke { 4 } else { 12 };
 
-    // Drive both passes in a closure so the server is always shut down
+    // Drive the passes in a closure so the server is always shut down
     // cleanly afterwards, success or failure.
-    let drive = || -> anyhow::Result<(Vec<f64>, Vec<f64>, f64)> {
+    #[allow(clippy::type_complexity)]
+    let drive = || -> anyhow::Result<(Vec<f64>, Vec<f64>, f64, f64, usize, f64)> {
         // Cold pass: generate everything, measuring per-request wall time.
         let t0 = Instant::now();
         let mut lat_ms = Vec::with_capacity(n);
@@ -275,13 +417,38 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
             client.generate(r)?;
             warm_ms.push(t.elapsed().as_secs_f64() * 1e3);
         }
-        Ok((lat_ms, warm_ms, wall_s))
+
+        // Job-API path: submit -> streamed events -> done on a fresh
+        // (cache-missing) request, counting the Step events.
+        let mut r = GenRequest::new("yellow circle x1 y13", 9_000_001);
+        r.steps = steps;
+        r.sampler = "ddim".into();
+        let t = Instant::now();
+        let h = client.submit(r)?;
+        let (events, outcome) = h.wait_with_events();
+        outcome.map_err(|e| anyhow::anyhow!("job-API run failed: {e}"))?;
+        let submit_done_ms = t.elapsed().as_secs_f64() * 1e3;
+        let step_events =
+            events.iter().filter(|e| matches!(e, JobEvent::Step { .. })).count();
+
+        // Cancellation overhead: cancel immediately after submit and
+        // time until the Cancelled ack arrives.
+        let mut r = GenRequest::new("yellow circle x2 y12", 9_000_002);
+        r.steps = steps;
+        r.sampler = "ddim".into();
+        let t = Instant::now();
+        let h = client.submit(r)?;
+        h.cancel.cancel();
+        let _ = h.wait(); // Cancelled (or Done if it raced the flush)
+        let cancel_ack_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        Ok((lat_ms, warm_ms, wall_s, submit_done_ms, step_events, cancel_ack_ms))
     };
     let driven = drive();
     let m = server.metrics.summary();
     server.shutdown();
     let _ = std::fs::remove_dir_all(&cache_dir);
-    let (lat_ms, warm_ms, wall_s) = driven?;
+    let (lat_ms, warm_ms, wall_s, submit_done_ms, step_events, cancel_ack_ms) = driven?;
 
     let (p50, p95, p99) = (
         stats::percentile(&lat_ms, 50.0),
@@ -297,6 +464,11 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
         m.cache_hits,
         m.cache_misses,
     );
+    println!(
+        "job API: submit->event->done {submit_done_ms:.0} ms ({step_events} step events) | \
+         cancel ack {cancel_ack_ms:.1} ms | {} cancellations",
+        m.cancellations,
+    );
     Ok(Json::obj(vec![
         ("requests", Json::num(n as f64)),
         ("steps", Json::num(steps as f64)),
@@ -306,6 +478,9 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
         ("p95_ms", Json::num(p95)),
         ("p99_ms", Json::num(p99)),
         ("warm_hit_p50_ms", Json::num(stats::percentile(&warm_ms, 50.0))),
+        ("submit_done_ms", Json::num(submit_done_ms)),
+        ("step_events", Json::num(step_events as f64)),
+        ("cancel_ack_ms", Json::num(cancel_ack_ms)),
         ("mean_batch_size", Json::num(m.mean_batch_size)),
         ("cache_hits", Json::num(m.cache_hits as f64)),
         ("cache_misses", Json::num(m.cache_misses as f64)),

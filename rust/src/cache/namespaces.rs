@@ -137,13 +137,20 @@ pub fn quant_key(
 }
 
 /// Request-level result key: everything that determines the latent.
+///
+/// The sampler hashes as `SamplerKind::as_str` bytes — exactly what
+/// the retired `sampler: String` field fed this hasher — so the
+/// `String` -> enum migration changed no digest and `CACHE_VERSION`
+/// stayed put (the stability property test below locks this in; if a
+/// variant's canonical bytes ever change, bump `CACHE_VERSION` so the
+/// flush-on-open rule retires old stores).
 pub fn request_key(manifest_hash: u64, req: &GenRequest) -> CacheKey {
     let mut h = KeyHasher::new(NS_REQUEST);
     h.u64(manifest_hash)
         .str(&req.prompt)
         .u64(req.seed)
         .usize(req.steps)
-        .str(&req.sampler)
+        .str(req.sampler.as_str())
         .f32(req.guidance);
     hash_plan(&mut h, &req.plan);
     hash_quant(&mut h, &req.quant);
@@ -346,6 +353,91 @@ mod tests {
                 total_ms: 7.5,
             },
         }
+    }
+
+    /// The acceptance property for the `String` -> `SamplerKind`
+    /// migration: for every reachable request, the new enum-based key
+    /// equals the key the retired string field produced, byte for byte
+    /// — so every pre-migration request-cache entry still hits and
+    /// `CACHE_VERSION` did not need to move. The "legacy" derivation is
+    /// reproduced exactly as it was written: same namespace salt, same
+    /// field order, `.str(<sampler string>)` in the sampler slot.
+    #[test]
+    fn request_key_digests_stable_across_sampler_enum_migration() {
+        use crate::coordinator::SamplerKind;
+        use crate::quant::format::QuantScheme;
+        use crate::testing::{check_no_shrink, gen_usize};
+
+        fn legacy_request_key(manifest_hash: u64, sampler: &str, req: &GenRequest) -> CacheKey {
+            let mut h = KeyHasher::new(NS_REQUEST);
+            h.u64(manifest_hash)
+                .str(&req.prompt)
+                .u64(req.seed)
+                .usize(req.steps)
+                .str(sampler)
+                .f32(req.guidance);
+            hash_plan(&mut h, &req.plan);
+            hash_quant(&mut h, &req.quant);
+            h.finish()
+        }
+
+        /// The literal strings the retired `String` field carried —
+        /// deliberately NOT `as_str()`, so a change to a variant's
+        /// canonical bytes *fails* this property instead of being
+        /// absorbed into both sides of the comparison.
+        fn legacy_name(kind: SamplerKind) -> &'static str {
+            match kind {
+                SamplerKind::Ddim => "ddim",
+                SamplerKind::Pndm => "pndm",
+            }
+        }
+
+        check_no_shrink(
+            "cache-request-key-sampler-migration",
+            |rng| {
+                let words = ["red", "blue", "circle", "square", "x4", "y11", ""];
+                let prompt = (0..gen_usize(rng, 1, 4))
+                    .map(|_| words[gen_usize(rng, 0, words.len() - 1)])
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                let mut req = GenRequest::new(&prompt, rng.next_u64());
+                req.steps = gen_usize(rng, 1, 100);
+                req.sampler =
+                    SamplerKind::ALL[gen_usize(rng, 0, SamplerKind::ALL.len() - 1)];
+                req.guidance = (rng.next_f32() - 0.5) * 30.0;
+                req.plan = match gen_usize(rng, 0, 2) {
+                    0 => SamplingPlan::Full,
+                    1 => SamplingPlan::Pas(PasConfig {
+                        t_sketch: gen_usize(rng, 1, 50),
+                        t_complete: gen_usize(rng, 1, 8),
+                        t_sparse: gen_usize(rng, 2, 8),
+                        l_sketch: gen_usize(rng, 1, 4),
+                        l_refine: gen_usize(rng, 1, 4),
+                    }),
+                    _ => SamplingPlan::Auto,
+                };
+                req.quant = match gen_usize(rng, 0, 4) {
+                    0 => Some(QuantScheme::w8a8()),
+                    1 => Some(QuantScheme::w4a8()),
+                    2 => Some(QuantScheme::fp16()),
+                    _ => None,
+                };
+                (rng.next_u64(), req)
+            },
+            |(manifest_hash, req)| {
+                let old = legacy_request_key(*manifest_hash, legacy_name(req.sampler), req);
+                request_key(*manifest_hash, req) == old
+            },
+        );
+        // And the two legacy sampler strings map to *different* keys —
+        // the enum did not collapse the sampler axis.
+        let mut a = GenRequest::new("p", 1);
+        a.sampler = SamplerKind::Ddim;
+        let mut b = GenRequest::new("p", 1);
+        b.sampler = SamplerKind::Pndm;
+        assert_ne!(request_key(1, &a), request_key(1, &b));
+        assert_eq!(legacy_request_key(1, "ddim", &a), request_key(1, &a));
+        assert_eq!(legacy_request_key(1, "pndm", &b), request_key(1, &b));
     }
 
     #[test]

@@ -14,11 +14,34 @@
 //! scheduler update runs in place via [`Sampler::step_mut`] — so a
 //! 50-step generation reuses one latent buffer instead of re-copying
 //! latent + context + guidance on every step.
+//!
+//! ## Typed request API
+//!
+//! Requests are validated at construction ([`GenRequest::builder`] /
+//! [`GenRequest::validate`]): steps >= 1, finite guidance, executable
+//! plan. The sampler is the [`SamplerKind`] enum rather than a string
+//! (its [`SamplerKind::as_str`] bytes are what cache keys hash, so the
+//! `String` -> enum migration left every request-cache digest
+//! unchanged). Errors cross the API boundary as the structured
+//! [`SdError`]; internals keep `anyhow` and convert at the edge.
+//!
+//! ## Step observability & cancellation
+//!
+//! The `*_observed` entry points thread a [`StepObserver`] through the
+//! denoising loop: `on_step(i, action, ms)` fires after every executed
+//! step and `should_cancel()` is checked once per step *before* the
+//! U-Net execution, so a cancellation aborts a 50-step run mid-flight
+//! (returning [`SdError::Cancelled`]) instead of only at dequeue time.
+//! The plain `generate_batch`/`generate_many`/`generate_one` entry
+//! points are thin wrappers over the observed variants with a no-op
+//! observer — PAS search and the benches are untouched by the redesign.
 
+use std::fmt;
+use std::str::FromStr;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
 use crate::cache::Cache;
 use crate::models::inventory::sd_tiny;
@@ -26,8 +49,140 @@ use crate::pas::cost::CostModel;
 use crate::pas::plan::{plan_is_executable, SamplingPlan, StepAction};
 use crate::quant::format::{emulate_activations, QuantScheme};
 use crate::runtime::{Input, Runtime, RuntimeHandle, Tensor, TensorI32};
-use crate::scheduler::{make_sampler, NoiseSchedule, Sampler};
+use crate::scheduler::{Ddim, NoiseSchedule, Pndm, Sampler};
 use crate::util::rng::Pcg32;
+
+// ------------------------------------------------------------------ errors
+
+/// Structured error vocabulary at the serving/coordination API boundary.
+///
+/// Internals keep `anyhow` for its context chains; the edge converts
+/// via [`SdError::runtime`] (lossy but displayable) and the reverse
+/// direction is free: `SdError` implements `std::error::Error`, so `?`
+/// and `anyhow::Error::from` lift it back into `anyhow` for the
+/// source-compatible blocking wrappers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SdError {
+    /// The request failed validation before any work ran (bad steps,
+    /// non-finite guidance, non-executable plan, unknown sampler,
+    /// incompatible batch, unsupported batch size).
+    InvalidRequest(String),
+    /// Bounded admission refused the request: the server queue is at
+    /// its configured capacity.
+    QueueFull,
+    /// The job's [`CancelToken`](crate::server::CancelToken) fired —
+    /// either before dequeue or mid-run via
+    /// [`StepObserver::should_cancel`].
+    Cancelled,
+    /// The job's deadline elapsed before a worker could run it.
+    DeadlineExceeded,
+    /// Generation itself failed (runtime/PJRT/codec errors). Carries
+    /// the flattened `anyhow` context chain.
+    Runtime(String),
+}
+
+impl SdError {
+    pub fn invalid(msg: impl Into<String>) -> SdError {
+        SdError::InvalidRequest(msg.into())
+    }
+
+    /// Convert an internal error (typically `anyhow::Error`) at the edge.
+    pub fn runtime(e: impl fmt::Display) -> SdError {
+        SdError::Runtime(format!("{e:#}"))
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self, SdError::Cancelled)
+    }
+}
+
+impl fmt::Display for SdError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SdError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            SdError::QueueFull => f.write_str("queue full: request rejected by admission control"),
+            SdError::Cancelled => f.write_str("cancelled"),
+            SdError::DeadlineExceeded => f.write_str("deadline exceeded"),
+            SdError::Runtime(m) => write!(f, "runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SdError {}
+
+// ----------------------------------------------------------------- sampler
+
+/// The sampler vocabulary, as a real enum instead of a `String` field.
+///
+/// **Cache-key stability rule:** [`SamplerKind::as_str`] returns exactly
+/// the bytes the retired `sampler: String` field carried ("ddim" /
+/// "pndm"), and the request-cache key hashes those bytes — so the
+/// migration changed no digest and `CACHE_VERSION` did not move. Any
+/// future variant must hash a string no old request could have produced,
+/// and renaming an existing variant's `as_str` bytes requires a
+/// `CACHE_VERSION` bump.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SamplerKind {
+    /// Deterministic DDIM (eta = 0).
+    Ddim,
+    /// PNDM in its PLMS form — the paper's scheduler (default).
+    #[default]
+    Pndm,
+}
+
+impl SamplerKind {
+    pub const ALL: [SamplerKind; 2] = [SamplerKind::Ddim, SamplerKind::Pndm];
+
+    /// Canonical name; these exact bytes feed the cache-key hasher.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SamplerKind::Ddim => "ddim",
+            SamplerKind::Pndm => "pndm",
+        }
+    }
+
+    /// Construct the sampler — an exhaustive match, so the stringly
+    /// `make_sampler` panic arm cannot be reached from the serving
+    /// path (adding a variant is a compile error here, not a worker
+    /// panic at the first request).
+    pub fn build(self, sched: NoiseSchedule, n_steps: usize) -> Box<dyn Sampler + Send> {
+        match self {
+            SamplerKind::Ddim => Box::new(Ddim::new(sched, n_steps)),
+            SamplerKind::Pndm => Box::new(Pndm::new(sched, n_steps)),
+        }
+    }
+}
+
+impl fmt::Display for SamplerKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for SamplerKind {
+    type Err = SdError;
+
+    fn from_str(s: &str) -> Result<SamplerKind, SdError> {
+        match s {
+            "ddim" => Ok(SamplerKind::Ddim),
+            "pndm" => Ok(SamplerKind::Pndm),
+            other => Err(SdError::invalid(format!("unknown sampler '{other}' (ddim|pndm)"))),
+        }
+    }
+}
+
+/// Infallible-looking conversion for literals (`req.sampler =
+/// "ddim".into()`), kept for source compatibility with the `String`
+/// era. Panics on an unknown name — exactly where the old string field
+/// panicked later inside `make_sampler`; fallible callers should use
+/// `FromStr` instead.
+impl From<&str> for SamplerKind {
+    fn from(s: &str) -> SamplerKind {
+        s.parse().unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+// ----------------------------------------------------------------- request
 
 /// One text-to-image generation request.
 #[derive(Debug, Clone)]
@@ -36,8 +191,7 @@ pub struct GenRequest {
     pub seed: u64,
     pub steps: usize,
     pub guidance: f32,
-    /// "ddim" | "pndm".
-    pub sampler: String,
+    pub sampler: SamplerKind,
     pub plan: SamplingPlan,
     /// Mixed-precision scheme: `None` runs the artifacts untouched;
     /// `Some` fake-quantises the U-Net output every step (deterministic
@@ -52,21 +206,99 @@ impl GenRequest {
             seed,
             steps: 50,
             guidance: 7.5,
-            sampler: "pndm".into(),
+            sampler: SamplerKind::Pndm,
             plan: SamplingPlan::Full,
             quant: None,
         }
+    }
+
+    /// Validating builder: invalid requests fail at construction with a
+    /// typed [`SdError::InvalidRequest`] instead of deep inside
+    /// `generate_batch`.
+    pub fn builder(prompt: &str, seed: u64) -> GenRequestBuilder {
+        GenRequestBuilder { req: GenRequest::new(prompt, seed) }
+    }
+
+    /// The plan-independent field rules (steps >= 1, finite guidance);
+    /// the execution path calls this and checks the plan against the
+    /// actions vec it builds anyway, instead of expanding it twice.
+    fn validate_fields(&self) -> Result<(), SdError> {
+        if self.steps == 0 {
+            return Err(SdError::invalid("steps must be >= 1"));
+        }
+        if !self.guidance.is_finite() {
+            return Err(SdError::invalid(format!(
+                "guidance must be finite (got {})",
+                self.guidance
+            )));
+        }
+        Ok(())
+    }
+
+    /// The construction-time validity rules: steps >= 1, finite
+    /// guidance, and (for concrete plans) an executable action sequence.
+    /// `Auto` plans validate after resolution (`resolve_plan` always
+    /// yields `Full` or a searched — hence executable — config).
+    pub fn validate(&self) -> Result<(), SdError> {
+        self.validate_fields()?;
+        if !matches!(self.plan, SamplingPlan::Auto)
+            && !plan_is_executable(&self.plan.actions(self.steps))
+        {
+            return Err(SdError::invalid(
+                "plan is not executable (partial step before any full step)",
+            ));
+        }
+        Ok(())
     }
 
     /// Batching key: requests sharing it can run lockstep.
     pub fn batch_key(&self) -> BatchKey {
         BatchKey {
             steps: self.steps,
-            sampler: self.sampler.clone(),
+            sampler: self.sampler,
             plan: self.plan,
             guidance_bits: self.guidance.to_bits(),
             quant: self.quant,
         }
+    }
+}
+
+/// Builder returned by [`GenRequest::builder`]; `build()` runs
+/// [`GenRequest::validate`].
+#[derive(Debug, Clone)]
+pub struct GenRequestBuilder {
+    req: GenRequest,
+}
+
+impl GenRequestBuilder {
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.req.steps = steps;
+        self
+    }
+
+    pub fn guidance(mut self, guidance: f32) -> Self {
+        self.req.guidance = guidance;
+        self
+    }
+
+    pub fn sampler(mut self, sampler: SamplerKind) -> Self {
+        self.req.sampler = sampler;
+        self
+    }
+
+    pub fn plan(mut self, plan: SamplingPlan) -> Self {
+        self.req.plan = plan;
+        self
+    }
+
+    pub fn quant(mut self, quant: QuantScheme) -> Self {
+        self.req.quant = Some(quant);
+        self
+    }
+
+    pub fn build(self) -> Result<GenRequest, SdError> {
+        self.req.validate()?;
+        Ok(self.req)
     }
 }
 
@@ -77,11 +309,12 @@ impl GenRequest {
 /// lossy `format!("{:?}")` string, so the batcher can use it as a map key
 /// directly and the cache key derivation hashes the same fields without
 /// re-parsing. Guidance is carried as its exact f32 bit pattern
-/// (`f32` itself has no `Eq`/`Hash`).
+/// (`f32` itself has no `Eq`/`Hash`). Since the sampler became an enum
+/// the key is `Copy`-cheap end to end.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BatchKey {
     pub steps: usize,
-    pub sampler: String,
+    pub sampler: SamplerKind,
     pub plan: SamplingPlan,
     pub guidance_bits: u32,
     pub quant: Option<QuantScheme>,
@@ -104,34 +337,64 @@ pub struct GenStats {
     pub total_ms: f64,
 }
 
+// ---------------------------------------------------------------- observer
+
+/// Step-level observability + cancellation hook threaded through the
+/// denoising loop by the `*_observed` entry points.
+///
+/// `should_cancel` is polled once per denoising step *before* the U-Net
+/// executes, so flipping it aborts a run mid-flight with
+/// [`SdError::Cancelled`] — the contract the serving layer's
+/// `CancelToken` relies on. `on_step` fires after each executed step
+/// with the step index, the action that ran, and its wall time; for a
+/// batched run both apply to the whole lockstep batch.
+pub trait StepObserver {
+    fn on_step(&self, _i: usize, _action: StepAction, _ms: f64) {}
+
+    fn should_cancel(&self) -> bool {
+        false
+    }
+}
+
+/// The do-nothing observer behind the plain (blocking) entry points.
+pub struct NoopObserver;
+
+impl StepObserver for NoopObserver {}
+
+// ---------------------------------------------------------------- batching
+
 /// Largest size in `sizes_ascending` that is <= `n`, falling back to
-/// the smallest. THE batch-size selection policy: the dynamic batcher
-/// (`server::batcher`) and the chunk planner below both route through
-/// it, so they can never disagree on chunk shapes.
-pub fn best_fit_batch(sizes_ascending: &[usize], n: usize) -> usize {
+/// the smallest; `None` when no batch sizes exist at all (a manifest
+/// with an empty `batch_sizes` table). THE batch-size selection policy:
+/// the dynamic batcher (`server::batcher`) and the chunk planner below
+/// both route through it, so they can never disagree on chunk shapes.
+pub fn best_fit_batch(sizes_ascending: &[usize], n: usize) -> Option<usize> {
     sizes_ascending
         .iter()
         .rev()
         .find(|&&s| s <= n)
+        .or_else(|| sizes_ascending.first())
         .copied()
-        .unwrap_or_else(|| *sizes_ascending.first().expect("no batch sizes"))
 }
 
 /// Split `n` items into compiled batch sizes, largest-first greedy.
 /// Every returned size is a *supported* artifact size; when `n` is
 /// smaller than the smallest compiled artifact (or a tail remains), the
 /// final chunk is the smallest supported size and the caller pads the
-/// batch (repeat a lane) then slices the padded lanes back off — the
-/// old behaviour of emitting an unsupported `n`-sized chunk made the
-/// execute fail at runtime.
-pub fn plan_chunks(supported_ascending: &[usize], mut n: usize) -> Vec<usize> {
+/// batch (repeat a lane) then slices the padded lanes back off.
+/// An empty `supported_ascending` with work to place is a clean
+/// [`SdError::Runtime`] — it used to panic via `expect("no batch
+/// sizes")` inside `best_fit_batch`.
+pub fn plan_chunks(supported_ascending: &[usize], mut n: usize) -> Result<Vec<usize>, SdError> {
     let mut out = Vec::new();
     while n > 0 {
-        let take = best_fit_batch(supported_ascending, n);
+        let take = best_fit_batch(supported_ascending, n).ok_or_else(|| {
+            SdError::Runtime("no compiled batch sizes in the manifest".to_string())
+        })?;
         out.push(take);
         n = n.saturating_sub(take);
     }
-    out
+    Ok(out)
 }
 
 /// The coordinator: runtime handle + schedule + cost accounting.
@@ -181,7 +444,7 @@ impl Coordinator {
     /// Split `n` requests into supported batch sizes, largest first.
     /// Every size has a compiled artifact; see [`plan_chunks`] for the
     /// padding contract on the final chunk.
-    pub fn chunk_sizes(&self, n: usize) -> Vec<usize> {
+    pub fn chunk_sizes(&self, n: usize) -> Result<Vec<usize>, SdError> {
         plan_chunks(&self.supported_batches(), n)
     }
 
@@ -196,7 +459,7 @@ impl Coordinator {
         let t = TensorI32::new(vec![b, m.ctx_len], toks)?;
         let name = Runtime::text_encoder(b);
         let out = self.runtime.execute(&name, &[Input::I32(t)])?;
-        Ok(out.into_iter().next().ok_or_else(|| anyhow!("empty text output"))?)
+        out.into_iter().next().ok_or_else(|| anyhow::anyhow!("empty text output"))
     }
 
     /// Seeded N(0,1) initial latent for one request, (L, latent_c).
@@ -207,46 +470,61 @@ impl Coordinator {
             .expect("latent dims match element count")
     }
 
-    /// Run one lockstep batch. All requests must share `batch_key()` and
-    /// the batch size must have compiled artifacts.
-    pub fn generate_batch(&self, reqs: &[GenRequest]) -> Result<Vec<GenResult>> {
+    /// Run one lockstep batch with a [`StepObserver`] in the loop. All
+    /// requests must share `batch_key()` and the batch size must have
+    /// compiled artifacts. Cancellation is polled before every step;
+    /// a fired token aborts with [`SdError::Cancelled`] mid-run.
+    pub fn generate_batch_observed(
+        &self,
+        reqs: &[GenRequest],
+        obs: &dyn StepObserver,
+    ) -> Result<Vec<GenResult>, SdError> {
         let b = reqs.len();
         if b == 0 {
-            bail!("empty batch");
+            return Err(SdError::invalid("empty batch"));
         }
         if !self.supported_batches().contains(&b) {
-            bail!("no artifacts for batch size {b} (have {:?})", self.supported_batches());
+            return Err(SdError::invalid(format!(
+                "no artifacts for batch size {b} (have {:?})",
+                self.supported_batches()
+            )));
         }
         let key = reqs[0].batch_key();
         if reqs.iter().any(|r| r.batch_key() != key) {
-            bail!("generate_batch: requests are not batch-compatible");
+            return Err(SdError::invalid("generate_batch: requests are not batch-compatible"));
         }
+        // Field rules, then the plan checked against the actions vec
+        // this function needs anyway (one expansion, not two); the cut
+        // bound below is the only manifest-dependent rule.
+        reqs[0].validate_fields()?;
         let m = self.runtime.manifest().model.clone();
         let steps = reqs[0].steps;
         let plan = reqs[0].plan.actions(steps);
         if !plan_is_executable(&plan) {
-            bail!("plan is not executable (partial step before any full step)");
+            return Err(SdError::invalid(
+                "plan is not executable (partial step before any full step)",
+            ));
         }
         let max_cut = m.max_cut;
         if let Some(StepAction::Partial(l)) =
             plan.iter().find(|a| matches!(a, StepAction::Partial(l) if *l > max_cut))
         {
-            bail!("plan uses cut {l} > compiled max_cut {max_cut}");
+            return Err(SdError::invalid(format!("plan uses cut {l} > compiled max_cut {max_cut}")));
         }
 
         let sched = NoiseSchedule::new(self.runtime.manifest().alpha_bar.clone());
-        let mut sampler: Box<dyn Sampler + Send> = make_sampler(&reqs[0].sampler, sched, steps);
+        let mut sampler = reqs[0].sampler.build(sched, steps);
         let ts = sampler.timesteps().to_vec();
 
         // Text conditioning (one batched execution). Loop invariants are
         // Arc'd once and shared with the runtime by refcount each step.
         let prompts: Vec<String> = reqs.iter().map(|r| r.prompt.clone()).collect();
-        let ctx = Arc::new(self.encode_prompts(&prompts)?);
+        let ctx = Arc::new(self.encode_prompts(&prompts).map_err(SdError::runtime)?);
         let g = Arc::new(Tensor::scalar(reqs[0].guidance));
 
         // Stacked latents: one buffer, stepped in place for all N steps.
         let lat_parts: Vec<Tensor> = reqs.iter().map(|r| self.init_latent(r.seed)).collect();
-        let mut latent = Tensor::stack(&lat_parts)?;
+        let mut latent = Tensor::stack(&lat_parts).map_err(SdError::runtime)?;
 
         // Feature caches per cut level (refreshed by full steps).
         let mut caches: Vec<Option<Arc<Tensor>>> = vec![None; max_cut + 1];
@@ -254,42 +532,55 @@ impl Coordinator {
         let t_start = Instant::now();
 
         for (i, &action) in plan.iter().enumerate() {
+            // Mid-flight cancellation: checked once per denoising step,
+            // before the expensive U-Net execution.
+            if obs.should_cancel() {
+                return Err(SdError::Cancelled);
+            }
             let t0 = Instant::now();
-            let t_in = Tensor::new(vec![b], vec![ts[i] as f32; b])?;
+            let t_in = Tensor::new(vec![b], vec![ts[i] as f32; b]).map_err(SdError::runtime)?;
             let mut eps = match action {
                 StepAction::Full => {
-                    let out = self.runtime.execute(
-                        &Runtime::unet_full(b),
-                        &[
-                            Input::F32(latent.clone()),
-                            Input::F32(t_in),
-                            Input::F32Ref(Arc::clone(&ctx)),
-                            Input::F32Ref(Arc::clone(&g)),
-                        ],
-                    )?;
+                    let out = self
+                        .runtime
+                        .execute(
+                            &Runtime::unet_full(b),
+                            &[
+                                Input::F32(latent.clone()),
+                                Input::F32(t_in),
+                                Input::F32Ref(Arc::clone(&ctx)),
+                                Input::F32Ref(Arc::clone(&g)),
+                            ],
+                        )
+                        .map_err(SdError::runtime)?;
                     let mut it = out.into_iter();
-                    let eps = it.next().ok_or_else(|| anyhow!("missing eps"))?;
+                    let eps =
+                        it.next().ok_or_else(|| SdError::Runtime("missing eps".to_string()))?;
                     for (l, cache) in it.enumerate() {
                         caches[l + 1] = Some(Arc::new(cache));
                     }
                     eps
                 }
                 StepAction::Partial(l) => {
-                    let cache = caches[l]
-                        .as_ref()
-                        .map(Arc::clone)
-                        .ok_or_else(|| anyhow!("partial step {i} without cache at cut {l}"))?;
-                    let out = self.runtime.execute(
-                        &Runtime::unet_partial(l, b),
-                        &[
-                            Input::F32(latent.clone()),
-                            Input::F32(t_in),
-                            Input::F32Ref(Arc::clone(&ctx)),
-                            Input::F32Ref(Arc::clone(&g)),
-                            Input::F32Ref(cache),
-                        ],
-                    )?;
-                    out.into_iter().next().ok_or_else(|| anyhow!("missing eps"))?
+                    let cache = caches[l].as_ref().map(Arc::clone).ok_or_else(|| {
+                        SdError::Runtime(format!("partial step {i} without cache at cut {l}"))
+                    })?;
+                    let out = self
+                        .runtime
+                        .execute(
+                            &Runtime::unet_partial(l, b),
+                            &[
+                                Input::F32(latent.clone()),
+                                Input::F32(t_in),
+                                Input::F32Ref(Arc::clone(&ctx)),
+                                Input::F32Ref(Arc::clone(&g)),
+                                Input::F32Ref(cache),
+                            ],
+                        )
+                        .map_err(SdError::runtime)?;
+                    out.into_iter()
+                        .next()
+                        .ok_or_else(|| SdError::Runtime("missing eps".to_string()))?
                 }
             };
             // Mixed-precision emulation: quantise-dequantise the U-Net
@@ -310,7 +601,9 @@ impl Coordinator {
             // The runtime dropped its input handles before responding, so
             // this `make_mut` finds the buffer unique and never copies.
             sampler.step_mut(i, latent.make_mut(), eps.data());
-            step_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            step_ms.push(ms);
+            obs.on_step(i, action, ms);
         }
 
         let total_ms = t_start.elapsed().as_secs_f64() * 1e3;
@@ -325,6 +618,21 @@ impl Coordinator {
             .collect())
     }
 
+    /// Run one lockstep batch (blocking wrapper over
+    /// [`Coordinator::generate_batch_observed`] with a no-op observer).
+    pub fn generate_batch(&self, reqs: &[GenRequest]) -> Result<Vec<GenResult>> {
+        self.generate_batch_observed(reqs, &NoopObserver).map_err(anyhow::Error::from)
+    }
+
+    /// Single request with a [`StepObserver`] in the loop.
+    pub fn generate_one_observed(
+        &self,
+        req: &GenRequest,
+        obs: &dyn StepObserver,
+    ) -> Result<GenResult, SdError> {
+        Ok(self.generate_batch_observed(std::slice::from_ref(req), obs)?.remove(0))
+    }
+
     /// Convenience wrapper for a single request.
     pub fn generate_one(&self, req: &GenRequest) -> Result<GenResult> {
         Ok(self.generate_batch(std::slice::from_ref(req))?.remove(0))
@@ -334,29 +642,40 @@ impl Coordinator {
     /// supported batch sizes ([`plan_chunks`]): a tail smaller than the
     /// smallest compiled artifact is padded by repeating the last request
     /// (lockstep lanes are independent) and the padded lanes are dropped
-    /// from the results. PAS validation uses this to batch lanes whose
-    /// plans coincide instead of generating one by one.
-    pub fn generate_many(&self, reqs: &[GenRequest]) -> Result<Vec<GenResult>> {
+    /// from the results. The observer spans all chunks: step events fire
+    /// per executed chunk and a cancellation aborts between — or inside —
+    /// chunks. PAS validation uses the blocking wrapper to batch lanes
+    /// whose plans coincide instead of generating one by one.
+    pub fn generate_many_observed(
+        &self,
+        reqs: &[GenRequest],
+        obs: &dyn StepObserver,
+    ) -> Result<Vec<GenResult>, SdError> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
         let key = reqs[0].batch_key();
         if reqs.iter().any(|r| r.batch_key() != key) {
-            bail!("generate_many: requests are not batch-compatible");
+            return Err(SdError::invalid("generate_many: requests are not batch-compatible"));
         }
         let mut out = Vec::with_capacity(reqs.len());
-        for chunk in self.chunk_sizes(reqs.len()) {
+        for chunk in self.chunk_sizes(reqs.len())? {
             let start = out.len();
             let real = chunk.min(reqs.len() - start);
             let mut batch: Vec<GenRequest> = reqs[start..start + real].to_vec();
             while batch.len() < chunk {
                 batch.push(batch.last().expect("non-empty batch").clone());
             }
-            let mut results = self.generate_batch(&batch)?;
+            let mut results = self.generate_batch_observed(&batch, obs)?;
             results.truncate(real);
             out.extend(results);
         }
         Ok(out)
+    }
+
+    /// Blocking wrapper over [`Coordinator::generate_many_observed`].
+    pub fn generate_many(&self, reqs: &[GenRequest]) -> Result<Vec<GenResult>> {
+        self.generate_many_observed(reqs, &NoopObserver).map_err(anyhow::Error::from)
     }
 
     /// Decode latents to RGB images, (B, img_h*img_w, 3) in [0, 1]-ish.
@@ -365,7 +684,7 @@ impl Coordinator {
     /// the padded outputs are sliced back off.
     pub fn decode(&self, latents: &[Tensor]) -> Result<Vec<Tensor>> {
         let mut out = Vec::with_capacity(latents.len());
-        for chunk_size in self.chunk_sizes(latents.len()) {
+        for chunk_size in self.chunk_sizes(latents.len()).map_err(anyhow::Error::from)? {
             let start = out.len();
             let real = chunk_size.min(latents.len() - start);
             let mut parts: Vec<Tensor> = latents[start..start + real].to_vec();
@@ -378,7 +697,7 @@ impl Coordinator {
                 .execute(&Runtime::vae_decoder(chunk_size), &[Input::F32(batch)])?
                 .into_iter()
                 .next()
-                .ok_or_else(|| anyhow!("missing image output"))?;
+                .ok_or_else(|| anyhow::anyhow!("missing image output"))?;
             for i in 0..real {
                 out.push(img.index0(i));
             }
@@ -390,6 +709,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pas::plan::PasConfig;
 
     #[test]
     fn batch_key_separates_incompatible_requests() {
@@ -432,16 +752,98 @@ mod tests {
     fn request_defaults() {
         let r = GenRequest::new("red circle", 7);
         assert_eq!(r.steps, 50);
-        assert_eq!(r.sampler, "pndm");
+        assert_eq!(r.sampler, SamplerKind::Pndm);
         assert!(matches!(r.plan, SamplingPlan::Full));
         assert_eq!(r.quant, None, "full precision unless asked");
+    }
+
+    #[test]
+    fn sampler_kind_roundtrips_exact_legacy_bytes() {
+        for kind in SamplerKind::ALL {
+            assert_eq!(kind.as_str().parse::<SamplerKind>().unwrap(), kind);
+            assert_eq!(kind.to_string(), kind.as_str());
+        }
+        // The exact strings the retired String field carried.
+        assert_eq!(SamplerKind::Ddim.as_str(), "ddim");
+        assert_eq!(SamplerKind::Pndm.as_str(), "pndm");
+        assert_eq!(SamplerKind::default(), SamplerKind::Pndm);
+        // Strict parsing: the old field would have panicked in
+        // make_sampler for these, so FromStr rejects them up front.
+        assert!("euler".parse::<SamplerKind>().is_err());
+        assert!("DDIM".parse::<SamplerKind>().is_err());
+        // Source-compat literal conversion.
+        let k: SamplerKind = "ddim".into();
+        assert_eq!(k, SamplerKind::Ddim);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown sampler")]
+    fn sampler_from_literal_panics_on_unknown() {
+        let _: SamplerKind = "euler".into();
+    }
+
+    #[test]
+    fn builder_accepts_valid_requests() {
+        let r = GenRequest::builder("red circle x4 y4", 9)
+            .steps(25)
+            .guidance(6.0)
+            .sampler(SamplerKind::Ddim)
+            .plan(SamplingPlan::Pas(PasConfig::pas25(4)))
+            .quant(QuantScheme::w8a8())
+            .build()
+            .unwrap();
+        assert_eq!(r.steps, 25);
+        assert_eq!(r.sampler, SamplerKind::Ddim);
+        assert_eq!(r.guidance, 6.0);
+        assert!(matches!(r.plan, SamplingPlan::Pas(_)));
+        assert_eq!(r.quant, Some(QuantScheme::w8a8()));
+    }
+
+    #[test]
+    fn builder_rejects_invalid_requests_at_construction() {
+        // Zero steps.
+        let e = GenRequest::builder("x", 1).steps(0).build().unwrap_err();
+        assert!(matches!(e, SdError::InvalidRequest(_)), "{e}");
+        // Non-finite guidance.
+        let e = GenRequest::builder("x", 1).guidance(f32::NAN).build().unwrap_err();
+        assert!(matches!(e, SdError::InvalidRequest(_)), "{e}");
+        let e = GenRequest::builder("x", 1).guidance(f32::INFINITY).build().unwrap_err();
+        assert!(matches!(e, SdError::InvalidRequest(_)), "{e}");
+        // Non-executable plan: sketching phase longer than the run means
+        // a partial step would come before any full step.
+        let bad = PasConfig { t_sketch: 8, t_complete: 0, t_sparse: 9, l_sketch: 2, l_refine: 2 };
+        let e = GenRequest::builder("x", 1)
+            .steps(8)
+            .plan(SamplingPlan::Pas(bad))
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, SdError::InvalidRequest(_)), "{e}");
+        // Auto passes construction (resolved + re-validated later).
+        assert!(GenRequest::builder("x", 1).plan(SamplingPlan::Auto).build().is_ok());
+    }
+
+    #[test]
+    fn sd_error_display_and_anyhow_conversion() {
+        let e = SdError::invalid("steps must be >= 1");
+        assert_eq!(e.to_string(), "invalid request: steps must be >= 1");
+        assert_eq!(
+            SdError::QueueFull.to_string(),
+            "queue full: request rejected by admission control"
+        );
+        assert!(SdError::Cancelled.is_cancelled());
+        assert!(!SdError::DeadlineExceeded.is_cancelled());
+        // The edge conversion back into anyhow keeps the message.
+        let any: anyhow::Error = anyhow::Error::from(SdError::Cancelled);
+        assert_eq!(any.to_string(), "cancelled");
+        let rt = SdError::runtime(anyhow::anyhow!("pjrt exploded"));
+        assert_eq!(rt.to_string(), "runtime error: pjrt exploded");
     }
 
     #[test]
     fn plan_chunks_only_emits_supported_sizes() {
         let supported = [2usize, 4];
         for n in 1..=11 {
-            let chunks = plan_chunks(&supported, n);
+            let chunks = plan_chunks(&supported, n).unwrap();
             assert!(
                 chunks.iter().all(|c| supported.contains(c)),
                 "n={n}: unsupported chunk in {chunks:?}"
@@ -459,17 +861,37 @@ mod tests {
         // The regression: n=1 with smallest compiled batch 2 used to emit
         // an unsupported chunk of 1 and fail at execute time. Now the
         // chunk is the smallest artifact and the caller pads one lane.
-        assert_eq!(plan_chunks(&[2, 4], 1), vec![2]);
-        assert_eq!(plan_chunks(&[2, 4], 3), vec![2, 2]);
-        assert_eq!(plan_chunks(&[2, 4], 7), vec![4, 2, 2]);
-        assert_eq!(plan_chunks(&[4], 2), vec![4]);
+        assert_eq!(plan_chunks(&[2, 4], 1).unwrap(), vec![2]);
+        assert_eq!(plan_chunks(&[2, 4], 3).unwrap(), vec![2, 2]);
+        assert_eq!(plan_chunks(&[2, 4], 7).unwrap(), vec![4, 2, 2]);
+        assert_eq!(plan_chunks(&[4], 2).unwrap(), vec![4]);
     }
 
     #[test]
     fn plan_chunks_exact_fits_need_no_padding() {
-        assert_eq!(plan_chunks(&[1, 2, 4], 7), vec![4, 2, 1]);
-        assert_eq!(plan_chunks(&[2, 4], 8), vec![4, 4]);
-        assert_eq!(plan_chunks(&[1], 3), vec![1, 1, 1]);
-        assert!(plan_chunks(&[2, 4], 0).is_empty());
+        assert_eq!(plan_chunks(&[1, 2, 4], 7).unwrap(), vec![4, 2, 1]);
+        assert_eq!(plan_chunks(&[2, 4], 8).unwrap(), vec![4, 4]);
+        assert_eq!(plan_chunks(&[1], 3).unwrap(), vec![1, 1, 1]);
+        assert!(plan_chunks(&[2, 4], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn empty_size_table_is_a_clean_error_not_a_panic() {
+        // The regression this guards: `best_fit_batch` used to
+        // `expect("no batch sizes")` and take the whole process down.
+        assert_eq!(best_fit_batch(&[], 3), None);
+        assert_eq!(best_fit_batch(&[2, 4], 3), Some(2));
+        assert_eq!(best_fit_batch(&[2, 4], 1), Some(2), "falls back to smallest");
+        let e = plan_chunks(&[], 3).unwrap_err();
+        assert!(matches!(e, SdError::Runtime(_)), "{e}");
+        // No work to place never needs a size table.
+        assert!(plan_chunks(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn default_observer_neither_cancels_nor_panics() {
+        let obs = NoopObserver;
+        assert!(!obs.should_cancel());
+        obs.on_step(0, StepAction::Full, 1.0);
     }
 }

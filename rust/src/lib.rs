@@ -50,6 +50,32 @@
 //! coordinator (`SamplingPlan::Auto` resolution), and the `sd-acc cache`
 //! CLI (`stats`/`gc`/`clear`).
 //!
+//! ## Session-oriented job API ([`server`], [`coordinator`])
+//!
+//! The serving surface is typed end to end. Requests validate at
+//! construction (`GenRequest::builder`: steps >= 1, finite guidance,
+//! executable plan), the sampler is the `SamplerKind` enum whose
+//! `as_str` bytes are exactly what the retired `String` field fed the
+//! request-cache hasher (digest-stable migration — property-tested; the
+//! rule: changing a variant's canonical bytes requires a `CACHE_VERSION`
+//! bump), and errors cross the boundary as the structured
+//! `coordinator::SdError` (`InvalidRequest` / `QueueFull` / `Cancelled`
+//! / `DeadlineExceeded` / `Runtime`) while internals keep `anyhow`.
+//! `Client::submit` returns a `JobHandle { id, events, cancel }`
+//! streaming the job lifecycle — `Queued`, `CacheHit`, `Scheduled`,
+//! one `Step { i, action, ms }` per denoising step (meaningful under
+//! phase-aware sampling: full and partial steps cost very differently),
+//! and exactly one terminal `Done`/`Failed`/`Cancelled`. Scheduling is
+//! priority- and deadline-aware: earliest-deadline-first within a batch
+//! key, cross-key dispatch by priority with one-rank-per-`max_wait`
+//! aging (no starvation), bounded admission (`max_queue` ->
+//! `QueueFull`), and cooperative cancellation honoured in the batcher,
+//! at worker dequeue, and once per denoising step via the coordinator's
+//! `StepObserver` — so a fired `CancelToken` stops a 50-step run
+//! mid-flight. The blocking `Client::generate` survives unchanged,
+//! re-expressed over the job API; `bench_serving` holds the event
+//! channel to < 5% p50 overhead over the blocking loop.
+//!
 //! ## Mixed precision ([`quant`])
 //!
 //! The paper's third workload problem — diverse weight and activation

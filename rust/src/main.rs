@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   generate   text-to-image via the PJRT runtime (original or PAS)
+//!   serve      drive a synthetic workload through the job-API server
 //!   calibrate  measure shift scores, D*, outliers (Fig. 4 / Eq. 1-2)
 //!   simulate   run the accelerator performance model on a real SD arch
 //!   quant      mixed precision: calibrate | search | report
@@ -14,7 +15,8 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use sd_acc::cache::{default_cache_dir, Cache, Store, StoreConfig, NS_REQUEST};
-use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::coordinator::{Coordinator, GenRequest, StepObserver};
+use sd_acc::pas::plan::StepAction;
 use sd_acc::hwsim::arch::{AccelConfig, Policy};
 use sd_acc::hwsim::engine::{simulate_unet_step, simulate_unet_step_quant};
 use sd_acc::models::inventory::{arch_by_name, total_macs, unet_ops};
@@ -38,6 +40,7 @@ fn main() -> ExitCode {
     let rest = &argv[1..];
     let result = match cmd.as_str() {
         "generate" => cmd_generate(rest),
+        "serve" => cmd_serve(rest),
         "calibrate" => cmd_calibrate(rest),
         "simulate" => cmd_simulate(rest),
         "quant" => cmd_quant(rest),
@@ -61,7 +64,7 @@ fn main() -> ExitCode {
 fn print_help() {
     println!(
         "sd-acc {} — SD-Acc reproduction (phase-aware sampling + HW co-design)\n\n\
-         usage: sd-acc <generate|calibrate|simulate|quant|cache|info> [options]\n\
+         usage: sd-acc <generate|serve|calibrate|simulate|quant|cache|info> [options]\n\
          run a subcommand with --help for its options",
         sd_acc::util::VERSION
     );
@@ -185,6 +188,7 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
         OptSpec { name: "auto", help: "resolve the best cached PAS plan (SamplingPlan::Auto)", takes_value: false, default: None },
         OptSpec { name: "quant", help: "mixed-precision scheme (fp16 | w8a8 | w4a8 | ...)", takes_value: true, default: None },
+        OptSpec { name: "progress", help: "stream per-step progress while generating", takes_value: false, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -202,7 +206,11 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
     let steps = args.get_usize("steps")?.unwrap();
     let mut req = GenRequest::new(args.get("prompt").unwrap(), args.get_usize("seed")?.unwrap() as u64);
     req.steps = steps;
-    req.sampler = args.get("sampler").unwrap().to_string();
+    req.sampler = args
+        .get("sampler")
+        .unwrap()
+        .parse()
+        .map_err(|e: sd_acc::coordinator::SdError| e.to_string())?;
     if args.flag("pas") {
         req.plan = SamplingPlan::Pas(PasConfig {
             t_sketch: steps / 2,
@@ -219,13 +227,21 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
             Some(QuantScheme::parse(s).ok_or_else(|| format!("unknown quant scheme '{s}'"))?);
     }
     let req = coord.resolve_plan(&req, cache.as_ref());
+    // Fail typed and early: bad steps/guidance/plan never reach the loop.
+    req.validate().map_err(|e| e.to_string())?;
     let res = match cache.as_ref().and_then(|c| c.get_result(&req)) {
         Some(hit) => {
             println!("request cache hit — reusing stored latent");
             hit
         }
         None => {
-            let res = coord.generate_one(&req).map_err(|e| format!("{e:#}"))?;
+            let res = if args.flag("progress") {
+                coord
+                    .generate_one_observed(&req, &PrintProgress { total: steps })
+                    .map_err(|e| e.to_string())?
+            } else {
+                coord.generate_one(&req).map_err(|e| format!("{e:#}"))?
+            };
             if let Some(c) = &cache {
                 let _ = c.put_result(&req, &res);
             }
@@ -242,6 +258,147 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
     let out = PathBuf::from(args.get("out").unwrap());
     quality::write_ppm(&imgs[0], m.img_h, m.img_w, &out).map_err(|e| format!("{e:#}"))?;
     println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// `--progress` observer: one line per denoising step, streamed as the
+/// loop runs (full vs partial steps have very different costs under
+/// phase-aware sampling, so the per-step view is genuinely informative).
+struct PrintProgress {
+    total: usize,
+}
+
+impl StepObserver for PrintProgress {
+    fn on_step(&self, i: usize, action: StepAction, ms: f64) {
+        let what = match action {
+            StepAction::Full => "full".to_string(),
+            StepAction::Partial(l) => format!("partial(l={l})"),
+        };
+        println!("  step {:>3}/{} {:<14} {:7.1} ms", i + 1, self.total, what, ms);
+    }
+}
+
+// -------------------------------------------------------------------- serve
+
+fn cmd_serve(raw: &[String]) -> Result<(), String> {
+    use sd_acc::server::{Priority, Server, ServerConfig, SubmitOptions};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let spec = [
+        OptSpec { name: "requests", help: "synthetic requests to push", takes_value: true, default: Some("12") },
+        OptSpec { name: "steps", help: "denoising steps per request", takes_value: true, default: Some("8") },
+        OptSpec { name: "workers", help: "worker threads", takes_value: true, default: Some("2") },
+        OptSpec { name: "max-wait-ms", help: "batcher hold time before an aged flush", takes_value: true, default: Some("30") },
+        OptSpec { name: "max-queue", help: "bounded admission capacity (QueueFull beyond it)", takes_value: true, default: Some("256") },
+        OptSpec { name: "deadline-ms", help: "per-request deadline (0 = none)", takes_value: true, default: Some("0") },
+        OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage("sd-acc serve", "synthetic workload through the job-API server", &spec)
+        );
+        return Ok(());
+    }
+    let dir = artifacts_dir(&args);
+    need_artifacts(&dir)?;
+    let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
+    let coord = Coordinator::new(svc.handle());
+    let cache = open_cache(&args, &coord)?.map(Arc::new);
+
+    let n = args.get_usize("requests")?.unwrap();
+    let steps = args.get_usize("steps")?.unwrap();
+    let deadline_ms = args.get_u64("deadline-ms")?.unwrap();
+    let server = Server::start(
+        Arc::new(coord),
+        ServerConfig {
+            workers: args.get_usize("workers")?.unwrap().max(1),
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms")?.unwrap()),
+            cache,
+            max_queue: args.get_usize("max-queue")?.unwrap(),
+        },
+    );
+    let client = server.client();
+
+    println!("submitting {n} requests ({steps} steps, priorities cycling high/normal/low)...");
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let class = i % Priority::ALL.len();
+        let mut req =
+            GenRequest::new(&format!("red circle x{} y{}", 2 + i % 10, 3 + i % 9), 9000 + i as u64);
+        // Each priority class runs a slightly different step count so
+        // the classes land in distinct batch keys — priority governs
+        // *cross-key* dispatch order, so one shared key would never
+        // exercise it (EDF within a key ignores priority).
+        req.steps = steps + class;
+        let mut opts = SubmitOptions::with_priority(Priority::ALL[class]);
+        if deadline_ms > 0 {
+            opts.deadline = Some(Duration::from_millis(deadline_ms));
+        }
+        match client.submit_with(req, opts) {
+            Ok(h) => handles.push(h),
+            Err(e) => println!("  {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for h in &handles {
+        let (events, outcome) = h.wait_with_events();
+        let steps_seen = events
+            .iter()
+            .filter(|e| matches!(e, sd_acc::server::JobEvent::Step { .. }))
+            .count();
+        match outcome {
+            Ok(r) => {
+                ok += 1;
+                println!(
+                    "  {} done: {} step events, {:.0} ms generation",
+                    h.id, steps_seen, r.stats.total_ms
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                println!("  {} failed: {e}", h.id);
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.metrics.summary();
+    println!("\n== serve report ==");
+    println!(
+        "{} ok / {} failed in {:.2}s ({:.2} req/s)",
+        ok,
+        failed,
+        wall,
+        (ok + failed) as f64 / wall.max(1e-9)
+    );
+    println!(
+        "latency: p50 {:.0} ms, p95 {:.0} ms | mean batch {:.2}",
+        m.p50_ms, m.p95_ms, m.mean_batch_size
+    );
+    println!(
+        "lifecycle: {} cancelled, {} deadline misses, {} rejected (queue full)",
+        m.cancellations, m.deadline_misses, m.rejected
+    );
+    println!(
+        "queue depth now: {} total ({}/{}/{} high/normal/low)",
+        m.queue_depth,
+        m.queue_depth_by_priority[0],
+        m.queue_depth_by_priority[1],
+        m.queue_depth_by_priority[2]
+    );
+    if m.cache_hits + m.cache_misses > 0 {
+        println!(
+            "request cache: {} hits, {} misses, {} evictions",
+            m.cache_hits, m.cache_misses, m.cache_evictions
+        );
+    }
+    server.shutdown();
     Ok(())
 }
 

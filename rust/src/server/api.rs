@@ -1,0 +1,298 @@
+//! Session-oriented job API: typed job identities, streaming step
+//! events, cancellation tokens, priorities and deadlines.
+//!
+//! `Client::submit` returns a [`JobHandle`] — a job id, a live event
+//! stream, and a [`CancelToken`] — instead of a bare result receiver.
+//! The event vocabulary ([`JobEvent`]) mirrors the job lifecycle:
+//!
+//! ```text
+//! Queued -> Scheduled{batch_size} -> Step{i,action,ms}* -> Done(result)
+//!                                 |                     -> Failed(err)
+//!                                 |                     -> Cancelled
+//! CacheHit -> Done(result)                 (request-cache short-circuit)
+//! ```
+//!
+//! Exactly one terminal event (`Done` / `Failed` / `Cancelled`) is
+//! delivered per job; phase-aware sampling makes the `Step` stream
+//! genuinely informative, since full and partial steps have very
+//! different costs (Eq. 3). Cancellation is cooperative and observed at
+//! three points: at admission (before a worker ever sees the job), at
+//! worker dequeue, and once per denoising step via
+//! [`StepObserver::should_cancel`](crate::coordinator::StepObserver) —
+//! so a fired token stops a 50-step run mid-flight.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::coordinator::{GenResult, SdError};
+use crate::pas::plan::StepAction;
+
+/// Server-unique job identity (monotonic per client fleet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Scheduling priority. Order is flush order: `High` sorts first.
+/// Starved lower priorities age upward one rank per full `max_wait`
+/// they spend queued (see `server::batcher`), so `Low` traffic is
+/// delayed under load but never starved.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Rank as an array index (High = 0, Normal = 1, Low = 2).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-submission scheduling options.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    /// Total latency budget, measured from submission. A job whose
+    /// deadline elapses before a worker picks it up is dropped with
+    /// [`SdError::DeadlineExceeded`]; dispatch within a batch key is
+    /// earliest-deadline-first.
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOptions {
+    pub fn with_priority(priority: Priority) -> SubmitOptions {
+        SubmitOptions { priority, deadline: None }
+    }
+
+    pub fn with_deadline(deadline: Duration) -> SubmitOptions {
+        SubmitOptions { priority: Priority::default(), deadline: Some(deadline) }
+    }
+}
+
+/// Shared cancellation flag: cloning hands out another handle to the
+/// same flag. Cancellation is cooperative, idempotent and sticky.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The job lifecycle, streamed over [`JobHandle::events`].
+#[derive(Debug, Clone)]
+pub enum JobEvent {
+    /// Admitted into the batcher queue.
+    Queued,
+    /// Answered from the persistent request cache; `Done` follows
+    /// immediately and no generation runs.
+    CacheHit,
+    /// Picked up by a worker as part of a batch of `batch_size`
+    /// compatible requests (the logical group size, pre-padding).
+    Scheduled { batch_size: usize },
+    /// One denoising step executed for this job's batch.
+    Step { i: usize, action: StepAction, ms: f64 },
+    /// Terminal: generation finished.
+    Done(GenResult),
+    /// Terminal: the job failed (validation, deadline, runtime).
+    Failed(SdError),
+    /// Terminal: the job's [`CancelToken`] fired.
+    Cancelled,
+}
+
+impl JobEvent {
+    /// Terminal events end the stream; exactly one is sent per job.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobEvent::Done(_) | JobEvent::Failed(_) | JobEvent::Cancelled)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobEvent::Queued => "queued",
+            JobEvent::CacheHit => "cache-hit",
+            JobEvent::Scheduled { .. } => "scheduled",
+            JobEvent::Step { .. } => "step",
+            JobEvent::Done(_) => "done",
+            JobEvent::Failed(_) => "failed",
+            JobEvent::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// What `Client::submit` returns: identity, event stream, cancellation.
+pub struct JobHandle {
+    pub id: JobId,
+    pub events: mpsc::Receiver<JobEvent>,
+    pub cancel: CancelToken,
+}
+
+impl JobHandle {
+    /// Block until the terminal event, discarding progress events —
+    /// the blocking `Client::generate` compatibility path.
+    pub fn wait(&self) -> Result<GenResult, SdError> {
+        loop {
+            match self.events.recv() {
+                Ok(JobEvent::Done(r)) => return Ok(r),
+                Ok(JobEvent::Failed(e)) => return Err(e),
+                Ok(JobEvent::Cancelled) => return Err(SdError::Cancelled),
+                Ok(_) => {}
+                Err(_) => return Err(SdError::Runtime("server shut down".to_string())),
+            }
+        }
+    }
+
+    /// Block until the terminal event, returning the full event log
+    /// alongside the outcome (tests and progress UIs).
+    pub fn wait_with_events(&self) -> (Vec<JobEvent>, Result<GenResult, SdError>) {
+        let mut log = Vec::new();
+        loop {
+            match self.events.recv() {
+                Ok(ev) => {
+                    let terminal = ev.is_terminal();
+                    log.push(ev);
+                    if terminal {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    return (log, Err(SdError::Runtime("server shut down".to_string())));
+                }
+            }
+        }
+        let outcome = match log.last() {
+            Some(JobEvent::Done(r)) => Ok(r.clone()),
+            Some(JobEvent::Failed(e)) => Err(e.clone()),
+            Some(JobEvent::Cancelled) => Err(SdError::Cancelled),
+            _ => unreachable!("loop exits only on a terminal event"),
+        };
+        (log, outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenStats;
+    use crate::runtime::Tensor;
+
+    fn done_result() -> GenResult {
+        GenResult {
+            latent: Tensor::new(vec![1, 2], vec![0.5, -0.5]).unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full],
+                step_ms: vec![1.0],
+                mac_reduction: 1.0,
+                total_ms: 1.0,
+            },
+        }
+    }
+
+    fn handle() -> (mpsc::Sender<JobEvent>, JobHandle) {
+        let (tx, rx) = mpsc::channel();
+        (tx, JobHandle { id: JobId(7), events: rx, cancel: CancelToken::new() })
+    }
+
+    #[test]
+    fn cancel_token_is_shared_sticky_and_idempotent() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!t.is_cancelled());
+        clone.cancel();
+        assert!(t.is_cancelled(), "clones share the flag");
+        t.cancel();
+        assert!(t.is_cancelled(), "cancel is idempotent");
+    }
+
+    #[test]
+    fn priority_order_and_index_agree() {
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.to_string(), "high");
+    }
+
+    #[test]
+    fn wait_skips_progress_and_returns_done() {
+        let (tx, h) = handle();
+        tx.send(JobEvent::Queued).unwrap();
+        tx.send(JobEvent::Scheduled { batch_size: 2 }).unwrap();
+        tx.send(JobEvent::Step { i: 0, action: StepAction::Full, ms: 3.0 }).unwrap();
+        tx.send(JobEvent::Done(done_result())).unwrap();
+        let r = h.wait().unwrap();
+        assert_eq!(r.latent.data(), &[0.5, -0.5]);
+    }
+
+    #[test]
+    fn wait_maps_terminal_events_to_typed_errors() {
+        let (tx, h) = handle();
+        tx.send(JobEvent::Queued).unwrap();
+        tx.send(JobEvent::Cancelled).unwrap();
+        assert_eq!(h.wait().unwrap_err(), SdError::Cancelled);
+
+        let (tx, h) = handle();
+        tx.send(JobEvent::Failed(SdError::DeadlineExceeded)).unwrap();
+        assert_eq!(h.wait().unwrap_err(), SdError::DeadlineExceeded);
+
+        // A dropped sender (server shut down) is a Runtime error.
+        let (tx, h) = handle();
+        drop(tx);
+        assert!(matches!(h.wait().unwrap_err(), SdError::Runtime(_)));
+    }
+
+    #[test]
+    fn wait_with_events_returns_the_full_ordered_log() {
+        let (tx, h) = handle();
+        tx.send(JobEvent::Queued).unwrap();
+        tx.send(JobEvent::CacheHit).unwrap();
+        tx.send(JobEvent::Done(done_result())).unwrap();
+        tx.send(JobEvent::Queued).unwrap(); // past the terminal: ignored
+        let (log, outcome) = h.wait_with_events();
+        assert!(outcome.is_ok());
+        let labels: Vec<&str> = log.iter().map(|e| e.label()).collect();
+        assert_eq!(labels, vec!["queued", "cache-hit", "done"]);
+        assert!(log.last().unwrap().is_terminal());
+        assert_eq!(log.iter().filter(|e| e.is_terminal()).count(), 1);
+    }
+}

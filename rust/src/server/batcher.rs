@@ -1,82 +1,214 @@
-//! Dynamic batcher: group compatible requests, flush on size or age.
+//! Dynamic batcher: group compatible requests, flush on size or age —
+//! now priority- and deadline-aware.
+//!
+//! Within one batch key the queue is kept in earliest-deadline-first
+//! order (EDF; items without a deadline keep FIFO order after all
+//! deadlined ones), so when a batch flushes it carries the most urgent
+//! compatible requests. Across keys, `flush_ready` emits batches in
+//! *effective-priority* order: a key's rank is the best rank among its
+//! items, and every full `max_wait` an item spends queued lifts it one
+//! rank ("starved-priority aging") — low-priority traffic is delayed
+//! under load but can never be starved by a steady high-priority
+//! stream. Cancelled and deadline-expired items are dropped during
+//! flush passes and surfaced through [`Batcher::take_dropped`], so they
+//! never reach a worker.
 
+use std::cmp::Reverse;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-/// Generic over the pending item; the server instantiates P = Pending.
+use super::api::Priority;
+
+/// Generic over the pending item; the server instantiates P = Job.
 pub struct Batcher<P: BatchItem> {
     /// Supported batch sizes, ascending.
     sizes: Vec<usize>,
     max_wait: Duration,
     queues: BTreeMap<P::Key, Vec<(Instant, P)>>,
+    /// Cancelled/expired items removed during flush passes, awaiting
+    /// [`Batcher::take_dropped`].
+    dropped: Vec<(DropReason, P)>,
 }
 
 /// Anything with a batching key. The key is a structured `Ord` type
 /// (the server uses `coordinator::BatchKey`), not a formatted string.
+/// Priority, deadline and cancellation have neutral defaults so plain
+/// items (benches, tests) batch exactly as before.
 pub trait BatchItem {
     type Key: Ord + Clone;
 
     fn key(&self) -> Self::Key;
+
+    /// Cross-key flush priority (see [`Priority`]).
+    fn priority(&self) -> Priority {
+        Priority::Normal
+    }
+
+    /// Absolute deadline; `None` means no deadline (EDF sorts it last).
+    fn deadline(&self) -> Option<Instant> {
+        None
+    }
+
+    /// Cancelled items are dropped at the next flush pass instead of
+    /// being handed to a worker.
+    fn cancelled(&self) -> bool {
+        false
+    }
 }
 
-impl BatchItem for super::Pending {
-    type Key = crate::coordinator::BatchKey;
-
-    fn key(&self) -> Self::Key {
-        self.req.batch_key()
-    }
+/// Why an item was removed without being dispatched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DropReason {
+    Cancelled,
+    DeadlineExceeded,
 }
 
 /// Largest size in `sizes` (ascending) that is <= n, falling back to
 /// the smallest. A free function — not a method — so `flush_ready` can
-/// call it while `self.queues` is mutably borrowed, instead of cloning
-/// the size table and re-stating the logic as a closure on every call.
-/// Delegates to the coordinator's policy so the batcher and the chunk
-/// planner (`coordinator::plan_chunks`) always agree.
+/// call it while `self.queues` is mutably borrowed. Delegates to the
+/// coordinator's policy so the batcher and the chunk planner
+/// (`coordinator::plan_chunks`) always agree; the `expect` is
+/// structurally safe because [`Batcher::new`] rejects an empty size
+/// table (callers without one get a clean `SdError` from the
+/// coordinator path instead).
 fn best_size_of(sizes: &[usize], n: usize) -> usize {
     crate::coordinator::best_fit_batch(sizes, n)
+        .expect("Batcher::new enforces a non-empty size table")
+}
+
+/// True when deadline `a` sorts strictly after `b` (None = infinitely
+/// late; two Nones keep FIFO order).
+fn deadline_after(a: Option<Instant>, b: Option<Instant>) -> bool {
+    match (a, b) {
+        (None, None) | (Some(_), None) => false,
+        (None, Some(_)) => true,
+        (Some(x), Some(y)) => x > y,
+    }
+}
+
+/// Base rank lifted one step per full `max_wait` of queue time.
+/// `max_wait` of zero means "flush immediately" — everything ages to
+/// the top rank at once.
+fn effective_rank(p: Priority, waited: Duration, max_wait: Duration) -> usize {
+    let boost = if max_wait.is_zero() {
+        usize::MAX
+    } else {
+        (waited.as_nanos() / max_wait.as_nanos()).min(usize::MAX as u128) as usize
+    };
+    p.index().saturating_sub(boost)
 }
 
 impl<P: BatchItem> Batcher<P> {
     pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
         sizes.sort_unstable();
         assert!(!sizes.is_empty(), "need at least one batch size");
-        Batcher { sizes, max_wait, queues: BTreeMap::new() }
+        Batcher { sizes, max_wait, queues: BTreeMap::new(), dropped: Vec::new() }
     }
 
+    /// Enqueue, keeping the key's queue in EDF order.
     pub fn push(&mut self, item: P) {
-        self.queues
-            .entry(item.key())
-            .or_default()
-            .push((Instant::now(), item));
+        let q = self.queues.entry(item.key()).or_default();
+        let d = item.deadline();
+        let pos = q.iter().position(|(_, p)| deadline_after(p.deadline(), d)).unwrap_or(q.len());
+        q.insert(pos, (Instant::now(), item));
     }
 
     pub fn pending(&self) -> usize {
         self.queues.values().map(Vec::len).sum()
     }
 
+    /// Queue depth per priority rank (High/Normal/Low), for the
+    /// per-priority gauges in `server::metrics`.
+    pub fn pending_by_priority(&self) -> [usize; 3] {
+        let mut out = [0usize; 3];
+        for q in self.queues.values() {
+            for (_, p) in q {
+                out[p.priority().index()] += 1;
+            }
+        }
+        out
+    }
+
     fn max_size(&self) -> usize {
         *self.sizes.last().unwrap()
     }
 
-    /// Largest supported size <= n (falls back to smallest).
-    fn best_size(&self, n: usize) -> usize {
-        best_size_of(&self.sizes, n)
+    /// Remove cancelled and deadline-expired items into the dropped
+    /// list; they never reach a worker.
+    fn prune(&mut self, now: Instant) {
+        for q in self.queues.values_mut() {
+            let mut i = 0;
+            while i < q.len() {
+                let reason = if q[i].1.cancelled() {
+                    Some(DropReason::Cancelled)
+                } else if q[i].1.deadline().map_or(false, |d| now >= d) {
+                    Some(DropReason::DeadlineExceeded)
+                } else {
+                    None
+                };
+                match reason {
+                    Some(r) => {
+                        let (_, item) = q.remove(i);
+                        self.dropped.push((r, item));
+                    }
+                    None => i += 1,
+                }
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+    }
+
+    /// Take ownership of everything dropped since the last call, with
+    /// the reason each item was removed. The server turns these into
+    /// `Cancelled` / `Failed(DeadlineExceeded)` job events and metrics.
+    pub fn take_dropped(&mut self) -> Vec<(DropReason, P)> {
+        std::mem::take(&mut self.dropped)
     }
 
     /// Emit batches that are full, or whose oldest member exceeded
     /// max_wait (aged batches flush at the best available size).
+    /// Batches are returned in effective-priority order (aging
+    /// included), so under a backlog the dispatch channel sees
+    /// high-priority — or long-starved — keys first. Cancelled/expired
+    /// items are pruned first and never appear in a batch.
     pub fn flush_ready(&mut self, now: Instant) -> Vec<Vec<P>> {
+        self.prune(now);
         let max_size = self.max_size();
         let max_wait = self.max_wait;
+        // Rank every key: best effective rank among its items, then
+        // longest wait first within a rank.
+        let mut order: Vec<(usize, Reverse<u128>, P::Key)> = self
+            .queues
+            .iter()
+            .map(|(k, q)| {
+                let rank = q
+                    .iter()
+                    .map(|(at, p)| {
+                        effective_rank(p.priority(), now.saturating_duration_since(*at), max_wait)
+                    })
+                    .min()
+                    .unwrap_or(Priority::Low.index());
+                let waited = q
+                    .iter()
+                    .map(|(at, _)| now.saturating_duration_since(*at).as_nanos())
+                    .max()
+                    .unwrap_or(0);
+                (rank, Reverse(waited), k.clone())
+            })
+            .collect();
+        order.sort();
+
         let mut out = Vec::new();
-        for q in self.queues.values_mut() {
+        for (_, _, key) in order {
+            let q = self.queues.get_mut(&key).expect("ranked key present");
             loop {
                 if q.is_empty() {
                     break;
                 }
                 let full = q.len() >= max_size;
-                let aged = now.duration_since(q[0].0) >= max_wait;
+                let oldest =
+                    q.iter().map(|(at, _)| *at).min().expect("non-empty queue has an oldest");
+                let aged = now.saturating_duration_since(oldest) >= max_wait;
                 if !full && !aged {
                     break;
                 }
@@ -94,12 +226,15 @@ impl<P: BatchItem> Batcher<P> {
         out
     }
 
-    /// Flush everything (shutdown), best-effort sizes.
+    /// Flush everything (shutdown), best-effort sizes. Cancelled and
+    /// expired items are still pruned — shutdown must not hand them to
+    /// a worker either.
     pub fn flush_all(&mut self) -> Vec<Vec<P>> {
+        self.prune(Instant::now());
         let mut out = Vec::new();
         for (_, mut q) in std::mem::take(&mut self.queues) {
             while !q.is_empty() {
-                let take = self.best_size(q.len()).min(q.len());
+                let take = best_size_of(&self.sizes, q.len()).min(q.len());
                 out.push(q.drain(..take).map(|(_, p)| p).collect());
             }
         }
@@ -124,6 +259,46 @@ mod tests {
 
     fn mk(key: &str) -> Item {
         Item(key.to_string())
+    }
+
+    /// Item with scheduling state, for the priority/deadline paths.
+    #[derive(Debug, Clone)]
+    struct Sched {
+        key: String,
+        tag: u32,
+        priority: Priority,
+        deadline: Option<Instant>,
+        cancelled: bool,
+    }
+
+    impl BatchItem for Sched {
+        type Key = String;
+
+        fn key(&self) -> String {
+            self.key.clone()
+        }
+
+        fn priority(&self) -> Priority {
+            self.priority
+        }
+
+        fn deadline(&self) -> Option<Instant> {
+            self.deadline
+        }
+
+        fn cancelled(&self) -> bool {
+            self.cancelled
+        }
+    }
+
+    fn sched(key: &str, tag: u32) -> Sched {
+        Sched {
+            key: key.to_string(),
+            tag,
+            priority: Priority::Normal,
+            deadline: None,
+            cancelled: false,
+        }
     }
 
     #[test]
@@ -190,5 +365,90 @@ mod tests {
         let total: usize = out.iter().map(Vec::len).sum();
         assert_eq!(total, 3);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn cancelled_items_never_flush_and_surface_in_take_dropped() {
+        let mut b = Batcher::new(vec![1, 2], Duration::from_millis(0));
+        let mut dead = sched("a", 1);
+        dead.cancelled = true;
+        b.push(dead);
+        b.push(sched("a", 2));
+        let out = b.flush_ready(Instant::now() + Duration::from_millis(1));
+        let flushed: Vec<u32> = out.into_iter().flatten().map(|s| s.tag).collect();
+        assert_eq!(flushed, vec![2], "cancelled item must not reach a batch");
+        let dropped = b.take_dropped();
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].0, DropReason::Cancelled);
+        assert_eq!(dropped[0].1.tag, 1);
+        assert!(b.take_dropped().is_empty(), "take_dropped drains");
+    }
+
+    #[test]
+    fn expired_deadlines_drop_with_reason_even_at_flush_all() {
+        let now = Instant::now();
+        let mut b = Batcher::new(vec![1], Duration::from_secs(10));
+        let mut late = sched("a", 1);
+        late.deadline = Some(now - Duration::from_millis(1));
+        b.push(late);
+        let mut ok = sched("a", 2);
+        ok.deadline = Some(now + Duration::from_secs(60));
+        b.push(ok);
+        let out = b.flush_all();
+        let flushed: Vec<u32> = out.into_iter().flatten().map(|s| s.tag).collect();
+        assert_eq!(flushed, vec![2]);
+        let dropped = b.take_dropped();
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].0, DropReason::DeadlineExceeded);
+    }
+
+    #[test]
+    fn edf_orders_within_a_key() {
+        let now = Instant::now();
+        let mut b = Batcher::new(vec![1, 2, 4], Duration::from_millis(0));
+        let mut mkd = |tag: u32, d: Option<Duration>| {
+            let mut s = sched("k", tag);
+            s.deadline = d.map(|d| now + d);
+            b.push(s);
+        };
+        mkd(1, None); // no deadline: sorts last, FIFO among Nones
+        mkd(2, Some(Duration::from_secs(30)));
+        mkd(3, Some(Duration::from_secs(10)));
+        mkd(4, None);
+        let out = b.flush_ready(now + Duration::from_millis(1));
+        let order: Vec<u32> = out.into_iter().flatten().map(|s| s.tag).collect();
+        assert_eq!(order, vec![3, 2, 1, 4], "EDF first, then FIFO no-deadline tail");
+    }
+
+    #[test]
+    fn high_priority_keys_flush_first() {
+        // max_wait is long so no aging kicks in: batches of one are
+        // "full" (max size 1) and flush purely in priority order.
+        let now = Instant::now();
+        let mut b = Batcher::new(vec![1], Duration::from_secs(10));
+        let mut lo = sched("zz-low", 1);
+        lo.priority = Priority::Low;
+        b.push(lo);
+        let mut hi = sched("aa-high", 2);
+        hi.priority = Priority::High;
+        b.push(hi);
+        let mut mid = sched("mm-mid", 3);
+        mid.priority = Priority::Normal;
+        b.push(mid);
+        let out = b.flush_ready(now);
+        let order: Vec<u32> = out.into_iter().flatten().map(|s| s.tag).collect();
+        assert_eq!(order, vec![2, 3, 1], "dispatch order follows priority, not key order");
+    }
+
+    #[test]
+    fn effective_rank_ages_one_step_per_max_wait() {
+        let w = Duration::from_millis(50);
+        assert_eq!(effective_rank(Priority::Low, Duration::from_millis(0), w), 2);
+        assert_eq!(effective_rank(Priority::Low, Duration::from_millis(60), w), 1);
+        assert_eq!(effective_rank(Priority::Low, Duration::from_millis(120), w), 0);
+        assert_eq!(effective_rank(Priority::Low, Duration::from_secs(60), w), 0, "saturates");
+        assert_eq!(effective_rank(Priority::High, Duration::from_secs(60), w), 0);
+        // max_wait == 0: everything is top-rank immediately.
+        assert_eq!(effective_rank(Priority::Low, Duration::from_nanos(1), Duration::ZERO), 0);
     }
 }

@@ -1,5 +1,7 @@
 //! Serving metrics: counters, latency reservoir, batch-occupancy
-//! histogram, and a live queue-depth gauge.
+//! histogram, live queue-depth gauges (total and per priority), and the
+//! job-lifecycle counters (cancellations, deadline misses, admission
+//! rejections).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -13,14 +15,26 @@ pub struct Metrics {
     enqueued: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
+    /// Jobs that ended with a fired `CancelToken` (pre-dequeue, at
+    /// dequeue, or mid-run via the step observer).
+    cancellations: AtomicU64,
+    /// Jobs dropped because their deadline elapsed before completion.
+    deadline_misses: AtomicU64,
+    /// Submissions refused by bounded admission (`SdError::QueueFull`).
+    rejected: AtomicU64,
     batched_requests: AtomicU64,
     batches: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_evictions: AtomicU64,
     /// Requests currently held by the batcher (gauge, set by the
-    /// batcher thread after every flush pass).
+    /// batcher thread after every flush pass — and zeroed on *every*
+    /// batcher exit path, shutdown flag and disconnected submit
+    /// channel alike).
     queue_depth: AtomicU64,
+    /// Queue depth split by priority rank (High/Normal/Low), same
+    /// update discipline as `queue_depth`.
+    queue_depth_priority: [AtomicU64; 3],
     /// Requests-per-executed-flush-group -> count (occupancy
     /// histogram). This is the *logical* group size — how many real
     /// requests shared an execution — not the artifact batch size:
@@ -36,6 +50,12 @@ pub struct Summary {
     pub enqueued: u64,
     pub completed: u64,
     pub errors: u64,
+    /// Jobs that ended cancelled (any stage of the lifecycle).
+    pub cancellations: u64,
+    /// Jobs dropped for an elapsed deadline.
+    pub deadline_misses: u64,
+    /// Submissions bounced by admission control (queue full).
+    pub rejected: u64,
     pub mean_batch_size: f64,
     /// (requests per executed flush group, group count), ascending by
     /// size — the bench reports batch occupancy from this. Logical
@@ -44,6 +64,8 @@ pub struct Summary {
     pub batch_hist: Vec<(usize, u64)>,
     /// Requests sitting in the batcher at summary time.
     pub queue_depth: u64,
+    /// `queue_depth` split by priority rank (High/Normal/Low).
+    pub queue_depth_by_priority: [u64; 3],
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub mean_ms: f64,
@@ -77,8 +99,32 @@ impl Metrics {
         self.queue_depth.store(pending as u64, Ordering::Relaxed);
     }
 
+    /// Update the per-priority queue-depth gauges (batcher thread;
+    /// index order is `Priority::index()`: High/Normal/Low).
+    pub fn set_queue_depth_by_priority(&self, pending: [usize; 3]) {
+        for (gauge, &n) in self.queue_depth_priority.iter().zip(pending.iter()) {
+            gauge.store(n as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn on_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Job ended cancelled (dropped in the batcher, filtered at worker
+    /// dequeue, or aborted mid-run by the step observer).
+    pub fn on_cancelled(&self) {
+        self.cancellations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Job dropped because its deadline elapsed before a worker ran it.
+    pub fn on_deadline_miss(&self) {
+        self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Submission refused by bounded admission (queue at capacity).
+    pub fn on_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Request served from the persistent cache (no generation ran).
@@ -101,6 +147,9 @@ impl Metrics {
             enqueued: self.enqueued.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            cancellations: self.cancellations.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
             mean_batch_size: {
                 let b = self.batches.load(Ordering::Relaxed);
                 if b == 0 {
@@ -117,6 +166,11 @@ impl Metrics {
                 .map(|(&size, &count)| (size, count))
                 .collect(),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_depth_by_priority: [
+                self.queue_depth_priority[0].load(Ordering::Relaxed),
+                self.queue_depth_priority[1].load(Ordering::Relaxed),
+                self.queue_depth_priority[2].load(Ordering::Relaxed),
+            ],
             p50_ms: stats::percentile(&lats, 50.0),
             p95_ms: stats::percentile(&lats, 95.0),
             mean_ms: stats::mean(&lats),
@@ -166,6 +220,24 @@ mod tests {
     }
 
     #[test]
+    fn lifecycle_counters_aggregate() {
+        let m = Metrics::default();
+        m.on_cancelled();
+        m.on_cancelled();
+        m.on_deadline_miss();
+        m.on_rejected();
+        m.on_rejected();
+        m.on_rejected();
+        let s = m.summary();
+        assert_eq!(s.cancellations, 2);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.rejected, 3);
+        // Independent from error/done accounting.
+        assert_eq!(s.errors, 0);
+        assert_eq!(s.completed, 0);
+    }
+
+    #[test]
     fn batch_histogram_counts_per_size() {
         let m = Metrics::default();
         m.on_batch(2);
@@ -190,5 +262,16 @@ mod tests {
         assert_eq!(m.summary().queue_depth, 3, "gauge overwrites, never accumulates");
         m.set_queue_depth(0);
         assert_eq!(m.summary().queue_depth, 0);
+    }
+
+    #[test]
+    fn per_priority_depth_gauges_overwrite() {
+        let m = Metrics::default();
+        m.set_queue_depth_by_priority([5, 2, 9]);
+        assert_eq!(m.summary().queue_depth_by_priority, [5, 2, 9]);
+        m.set_queue_depth_by_priority([0, 1, 0]);
+        assert_eq!(m.summary().queue_depth_by_priority, [0, 1, 0], "gauges, not counters");
+        m.set_queue_depth_by_priority([0, 0, 0]);
+        assert_eq!(m.summary().queue_depth_by_priority, [0, 0, 0]);
     }
 }

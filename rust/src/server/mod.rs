@@ -1,23 +1,39 @@
-//! Serving layer (S8): request queue, dynamic batcher, worker fleet,
-//! metrics — std threads + channels (offline build: no tokio).
+//! Serving layer (S8): session-oriented job API over a request queue,
+//! priority/deadline-aware dynamic batcher, worker fleet, metrics —
+//! std threads + channels (offline build: no tokio).
 //!
-//! Requests are grouped by `GenRequest::batch_key()` (steps/sampler/plan/
-//! guidance/quant scheme must match to run lockstep) and flushed to
-//! workers either
-//! when a full batch of the largest compiled size is available or when
-//! the oldest queued request exceeds `max_wait`. This is the vLLM-router
-//! pattern scaled to PJRT-CPU executables.
+//! [`Client::submit`] returns a [`JobHandle`] (id + streaming
+//! [`JobEvent`]s + [`CancelToken`]); the blocking [`Client::generate`]
+//! is a thin compatibility wrapper re-expressed over the job API.
+//! Requests are grouped by `GenRequest::batch_key()` (steps/sampler/
+//! plan/guidance/quant scheme must match to run lockstep) and flushed
+//! to workers when a full batch of the largest compiled size is
+//! available or when the oldest queued request exceeds `max_wait`;
+//! within a key the queue is earliest-deadline-first, across keys
+//! dispatch follows priority with starvation-proof aging
+//! (`server::batcher`). Admission is bounded (`ServerConfig::max_queue`,
+//! rejections are a typed [`SdError::QueueFull`]) instead of letting
+//! the channel grow without limit.
+//!
+//! Cancellation is honoured at every stage: cancelled jobs are dropped
+//! inside the batcher, filtered again at worker dequeue (they *never*
+//! reach `generate_many`), and — once a batch is running — polled every
+//! denoising step through the coordinator's `StepObserver`, so a
+//! single-lane batch aborts mid-flight.
 //!
 //! With a [`cache::Cache`](crate::cache::Cache) configured, `Auto` plans
 //! are resolved against the plan store and the request cache is consulted
-//! *before* enqueueing: a repeated identical request returns its stored
-//! latent without touching the batcher or a worker, and hit/miss/eviction
-//! counters surface in [`metrics::Metrics`].
+//! *before* enqueueing: a repeated identical request streams
+//! `CacheHit -> Done` without touching the batcher or a worker, and
+//! hit/miss/eviction counters surface in [`metrics::Metrics`].
 
+pub mod api;
 pub mod batcher;
 pub mod metrics;
 
-use std::sync::atomic::{AtomicBool, Ordering};
+pub use api::{CancelToken, JobEvent, JobHandle, JobId, Priority, SubmitOptions};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -25,15 +41,41 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::cache::Cache;
-use crate::coordinator::{Coordinator, GenRequest, GenResult};
-use batcher::Batcher;
+use crate::coordinator::{BatchKey, Coordinator, GenRequest, GenResult, SdError, StepObserver};
+use crate::pas::plan::StepAction;
+use batcher::{BatchItem, Batcher, DropReason};
 use metrics::Metrics;
 
-/// A queued request with its response channel.
-struct Pending {
+/// A queued job: the request plus its event channel and control state.
+/// (The public [`JobId`] lives on the [`JobHandle`]; the pipeline
+/// itself addresses jobs by their channels.)
+struct Job {
     req: GenRequest,
     enqueued: Instant,
-    resp: mpsc::Sender<Result<GenResult>>,
+    deadline: Option<Instant>,
+    priority: Priority,
+    cancel: CancelToken,
+    events: mpsc::Sender<JobEvent>,
+}
+
+impl BatchItem for Job {
+    type Key = BatchKey;
+
+    fn key(&self) -> BatchKey {
+        self.req.batch_key()
+    }
+
+    fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    fn cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
 }
 
 /// Server configuration.
@@ -44,49 +86,391 @@ pub struct ServerConfig {
     pub max_wait: Duration,
     /// Persistent result/plan cache; `None` disables caching.
     pub cache: Option<Arc<Cache>>,
+    /// Bounded admission: jobs in flight (admitted but not yet
+    /// finished — queued, dispatched, or executing) beyond this count
+    /// are refused with [`SdError::QueueFull`].
+    pub max_queue: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { workers: 2, max_wait: Duration::from_millis(50), cache: None }
+        ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(50),
+            cache: None,
+            max_queue: 1024,
+        }
     }
 }
 
 /// Handle for submitting requests.
 #[derive(Clone)]
 pub struct Client {
-    tx: mpsc::Sender<Pending>,
+    tx: mpsc::Sender<Job>,
     coord: Arc<Coordinator>,
     cache: Option<Arc<Cache>>,
     metrics: Arc<Metrics>,
+    /// Jobs admitted and not yet finished (admission bound): the slot
+    /// is released when the job is dropped by the batcher or when a
+    /// worker delivers its terminal event — *not* when it is merely
+    /// handed to the work channel, so a backlog of dispatched-but-
+    /// unserved batches still counts against `max_queue` and sustained
+    /// overload hits `QueueFull` instead of growing the channel
+    /// without bound.
+    depth: Arc<AtomicUsize>,
+    max_queue: usize,
+    next_id: Arc<AtomicU64>,
 }
 
 impl Client {
-    /// Submit a request; returns a receiver for the result.
+    /// Submit a request with default options (normal priority, no
+    /// deadline). See [`Client::submit_with`].
+    pub fn submit(&self, req: GenRequest) -> Result<JobHandle, SdError> {
+        self.submit_with(req, SubmitOptions::default())
+    }
+
+    /// Submit a request; returns a [`JobHandle`] streaming the job's
+    /// lifecycle.
     ///
-    /// `Auto` plans are resolved against the plan store first (so batch
-    /// and cache keys see a concrete plan), then the request cache is
-    /// checked: a hit answers immediately without enqueueing.
-    pub fn submit(&self, req: GenRequest) -> mpsc::Receiver<Result<GenResult>> {
-        let (tx, rx) = mpsc::channel();
+    /// The request is validated up front (`InvalidRequest` instead of a
+    /// deep failure), `Auto` plans are resolved against the plan store
+    /// (so batch and cache keys see a concrete plan), then the request
+    /// cache is checked: a hit streams `CacheHit -> Done` immediately
+    /// without enqueueing. Otherwise bounded admission applies
+    /// (`QueueFull` at capacity) and the job enters the batcher with
+    /// `Queued` as its first event.
+    pub fn submit_with(&self, req: GenRequest, opts: SubmitOptions) -> Result<JobHandle, SdError> {
+        // Validate after plan resolution: the steps/guidance checks are
+        // plan-independent and Auto (the only plan that changes here)
+        // is exempt from the executability check, so one pass suffices.
         let req = self.coord.resolve_plan(&req, self.cache.as_deref());
+        req.validate()?;
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let (ev_tx, ev_rx) = mpsc::channel();
+        let cancel = CancelToken::new();
+        let handle = JobHandle { id, events: ev_rx, cancel: cancel.clone() };
+
         if let Some(cache) = &self.cache {
             if let Some(hit) = cache.get_result(&req) {
                 self.metrics.on_cache_hit();
-                let _ = tx.send(Ok(hit));
-                return rx;
+                let _ = ev_tx.send(JobEvent::CacheHit);
+                let _ = ev_tx.send(JobEvent::Done(hit));
+                return Ok(handle);
             }
             self.metrics.on_cache_miss();
         }
-        let _ = self.tx.send(Pending { req, enqueued: Instant::now(), resp: tx });
-        rx
+
+        // Bounded admission: reserve a slot or bounce.
+        if self.depth.fetch_add(1, Ordering::SeqCst) >= self.max_queue {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.on_rejected();
+            return Err(SdError::QueueFull);
+        }
+
+        let now = Instant::now();
+        let job = Job {
+            req,
+            enqueued: now,
+            deadline: opts.deadline.map(|d| now + d),
+            priority: opts.priority,
+            cancel,
+            events: ev_tx.clone(),
+        };
+        let _ = ev_tx.send(JobEvent::Queued);
+        if self.tx.send(job).is_err() {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            return Err(SdError::Runtime("server shut down".to_string()));
+        }
+        Ok(handle)
     }
 
-    /// Submit and wait.
+    /// Submit and wait — the blocking path, source-compatible with the
+    /// pre-job-API signature, now re-expressed over [`JobHandle`].
     pub fn generate(&self, req: GenRequest) -> Result<GenResult> {
         self.submit(req)
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server shut down"))?
+            .and_then(|h| h.wait())
+            .map_err(anyhow::Error::from)
+    }
+}
+
+/// Broadcasts per-step events to every live job of a running batch and
+/// aggregates their cancel tokens: the run aborts mid-step only when
+/// *every* lane has cancelled (lockstep lanes are independent, so one
+/// cancelled lane must not kill its batch mates — it is skipped at
+/// delivery instead).
+struct BatchObserver<'a> {
+    jobs: &'a [Job],
+}
+
+impl StepObserver for BatchObserver<'_> {
+    fn on_step(&self, i: usize, action: StepAction, ms: f64) {
+        for job in self.jobs {
+            if !job.cancel.is_cancelled() {
+                let _ = job.events.send(JobEvent::Step { i, action, ms });
+            }
+        }
+    }
+
+    fn should_cancel(&self) -> bool {
+        self.jobs.iter().all(|j| j.cancel.is_cancelled())
+    }
+}
+
+/// One dispatch pass: surface batcher drops as events/metrics, forward
+/// ready batches to the workers, refresh the queue gauges. Shared by
+/// the steady-state loop and the shutdown drain so the two paths can
+/// never diverge. Dropped jobs release their admission slot here;
+/// dispatched jobs keep theirs until a worker finishes them, so the
+/// work channel cannot absorb an unbounded backlog.
+fn dispatch_pass(
+    batcher: &mut Batcher<Job>,
+    batches: Vec<Vec<Job>>,
+    work_tx: &mpsc::Sender<Vec<Job>>,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) {
+    for (reason, job) in batcher.take_dropped() {
+        depth.fetch_sub(1, Ordering::SeqCst);
+        match reason {
+            DropReason::Cancelled => {
+                metrics.on_cancelled();
+                let _ = job.events.send(JobEvent::Cancelled);
+            }
+            DropReason::DeadlineExceeded => {
+                metrics.on_deadline_miss();
+                let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
+            }
+        }
+    }
+    for batch in batches {
+        let _ = work_tx.send(batch);
+    }
+    metrics.set_queue_depth(batcher.pending());
+    metrics.set_queue_depth_by_priority(batcher.pending_by_priority());
+}
+
+/// The batcher thread body: drain the submit queue, group, flush.
+/// Both exit branches — the shutdown flag and a disconnected submit
+/// channel — fall through to the same tail, which drains the remaining
+/// queue and zeroes every depth gauge (total and per-priority); the
+/// gauges cannot be left dangling at a stale value.
+fn run_batcher(
+    rx: mpsc::Receiver<Job>,
+    work_tx: mpsc::Sender<Vec<Job>>,
+    mut batcher: Batcher<Job>,
+    metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+) {
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        // Pull with a small timeout so aging batches still flush under
+        // low load; after the first job, drain the burst with try_recv
+        // so N queued submissions cost one ranking pass, not N.
+        match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(job) => {
+                metrics.on_enqueue();
+                batcher.push(job);
+                while let Ok(job) = rx.try_recv() {
+                    metrics.on_enqueue();
+                    batcher.push(job);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        let ready = batcher.flush_ready(Instant::now());
+        dispatch_pass(&mut batcher, ready, &work_tx, &metrics, &depth);
+    }
+    // Final drain — shared tail for every exit path. First pull the
+    // jobs still buffered in the submit channel (a client clone may
+    // have admitted them just before the shutdown flag was observed)
+    // so they reach a terminal event rather than being dropped. A send
+    // racing the instant between this drain and `rx` going out of
+    // scope is the one remaining gap — that caller's handle observes
+    // the stream closing, which `JobHandle::wait` surfaces as a typed
+    // `SdError::Runtime("server shut down")`.
+    while let Ok(job) = rx.try_recv() {
+        metrics.on_enqueue();
+        batcher.push(job);
+    }
+    let rest = batcher.flush_all();
+    dispatch_pass(&mut batcher, rest, &work_tx, &metrics, &depth);
+    metrics.set_queue_depth(0);
+    metrics.set_queue_depth_by_priority([0, 0, 0]);
+}
+
+/// Execute one dequeued batch on a worker: filter cancelled/expired
+/// jobs (they never reach the generation loop), then run the survivors
+/// in compiled-size groups — each group gets its own observer, so
+/// every job sees exactly one `Step` event per denoising step and a
+/// group aborts mid-run when *its* lanes all cancel, independent of
+/// jobs executing in a different group. Every job's admission slot is
+/// released here, exactly once, after its terminal event.
+fn run_batch(
+    batch: Vec<Job>,
+    coord: &Coordinator,
+    metrics: &Metrics,
+    cache: Option<&Cache>,
+    depth: &AtomicUsize,
+) {
+    let now = Instant::now();
+    let mut remaining = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.cancel.is_cancelled() {
+            metrics.on_cancelled();
+            let _ = job.events.send(JobEvent::Cancelled);
+            depth.fetch_sub(1, Ordering::SeqCst);
+        } else if job.deadline.map_or(false, |d| now >= d) {
+            metrics.on_deadline_miss();
+            let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
+            depth.fetch_sub(1, Ordering::SeqCst);
+        } else {
+            remaining.push(job);
+        }
+    }
+    if remaining.is_empty() {
+        return;
+    }
+    // The dequeue-side filter can leave a count spanning several
+    // compiled chunks; execute chunk by chunk so step events stay
+    // scoped to the group actually running. One chunk_sizes call plans
+    // every group — the same policy (and the same typed error) the
+    // coordinator itself uses, never a second copy of it.
+    let groups = match coord.chunk_sizes(remaining.len()) {
+        Ok(groups) => groups,
+        Err(e) => {
+            for job in remaining.drain(..) {
+                metrics.on_error();
+                let _ = job.events.send(JobEvent::Failed(e.clone()));
+                depth.fetch_sub(1, Ordering::SeqCst);
+            }
+            return;
+        }
+    };
+    // One RAII guard covers every live job of this batch: slots are
+    // released group by group on the normal path, and the guard's drop
+    // releases whatever is left during a panic unwind — including the
+    // slots of groups that never got to run — so a panic inside the
+    // coordinator cannot leak admission slots and pin the server at
+    // QueueFull while it appears alive.
+    let mut slots = SlotGuard { depth, n: remaining.len() };
+    for take in groups {
+        if remaining.is_empty() {
+            break;
+        }
+        let group: Vec<Job> = remaining.drain(..take.min(remaining.len())).collect();
+        let done = group.len();
+        run_group(group, coord, metrics, cache);
+        slots.release(done);
+    }
+}
+
+/// Admission-slot guard: holds `n` unreleased slots and returns them on
+/// drop — including during a panic unwind of the worker thread. The
+/// happy path releases incrementally via [`SlotGuard::release`], so the
+/// final drop is a no-op there.
+struct SlotGuard<'a> {
+    depth: &'a AtomicUsize,
+    n: usize,
+}
+
+impl SlotGuard<'_> {
+    fn release(&mut self, n: usize) {
+        self.depth.fetch_sub(n, Ordering::SeqCst);
+        self.n -= n;
+    }
+}
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        if self.n > 0 {
+            self.depth.fetch_sub(self.n, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Run one compiled-size group to completion: `Scheduled`, one `Step`
+/// per denoising step, then exactly one terminal event per job.
+fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Option<&Cache>) {
+    let t0 = Instant::now();
+    // Deadlines re-checked at group start, not just at batch dequeue:
+    // earlier groups of the same dequeued batch may have consumed a
+    // later job's entire latency budget while it waited its turn.
+    let mut group = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.deadline.map_or(false, |d| t0 >= d) {
+            metrics.on_deadline_miss();
+            let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
+        } else {
+            group.push(job);
+        }
+    }
+    if group.is_empty() {
+        return;
+    }
+    let batch_size = group.len();
+    for job in &group {
+        let _ = job.events.send(JobEvent::Scheduled { batch_size });
+    }
+    let reqs: Vec<GenRequest> = group.iter().map(|j| j.req.clone()).collect();
+    let queue_ms: Vec<f64> =
+        group.iter().map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3).collect();
+    // generate_many, not generate_batch: aged leftovers (and shutdown
+    // drains) can flush at sizes below the smallest compiled artifact,
+    // and generate_many pads those to a compiled size and slices the
+    // results back.
+    let obs = BatchObserver { jobs: &group };
+    match coord.generate_many_observed(&reqs, &obs) {
+        Ok(results) => {
+            let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
+            metrics.on_batch(batch_size);
+            // Populate the request cache (best-effort; a full disk must
+            // not fail the request).
+            if let Some(cache) = cache {
+                for (req, r) in reqs.iter().zip(&results) {
+                    if let Ok(evicted) = cache.put_result(req, r) {
+                        metrics.on_cache_evictions(evicted);
+                    }
+                }
+            }
+            for ((job, r), q_ms) in group.into_iter().zip(results).zip(queue_ms) {
+                if job.cancel.is_cancelled() {
+                    // Cancelled while batch mates kept the run alive:
+                    // the caller asked out, so deliver Cancelled even
+                    // though a latent exists.
+                    metrics.on_cancelled();
+                    let _ = job.events.send(JobEvent::Cancelled);
+                } else {
+                    metrics.on_done(batch_ms + q_ms);
+                    let _ = job.events.send(JobEvent::Done(r));
+                }
+            }
+        }
+        Err(e) if e.is_cancelled() => {
+            // Every lane's token fired; the observer aborted the run
+            // before its final step.
+            for job in group {
+                metrics.on_cancelled();
+                let _ = job.events.send(JobEvent::Cancelled);
+            }
+        }
+        Err(e) => {
+            for job in group {
+                if job.cancel.is_cancelled() {
+                    // The lane had already asked out when a batch
+                    // mate's failure aborted the run: it observes
+                    // Cancelled, not the mate's error.
+                    metrics.on_cancelled();
+                    let _ = job.events.send(JobEvent::Cancelled);
+                } else {
+                    metrics.on_error();
+                    let _ = job.events.send(JobEvent::Failed(e.clone()));
+                }
+            }
+        }
     }
 }
 
@@ -102,53 +486,24 @@ pub struct Server {
 
 impl Server {
     pub fn start(coord: Arc<Coordinator>, cfg: ServerConfig) -> Server {
-        let (tx, rx) = mpsc::channel::<Pending>();
-        let rx = Arc::new(Mutex::new(rx));
+        let (tx, rx) = mpsc::channel::<Job>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::default());
-        let (work_tx, work_rx) = mpsc::channel::<Vec<Pending>>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let (work_tx, work_rx) = mpsc::channel::<Vec<Job>>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
         // Batcher thread: drain queue, group, flush.
         let mut threads = Vec::new();
         {
-            let rx = Arc::clone(&rx);
             let shutdown = Arc::clone(&shutdown);
             let metrics = Arc::clone(&metrics);
-            let sizes = coord.supported_batches();
-            let max_wait = cfg.max_wait;
+            let depth = Arc::clone(&depth);
+            let batcher = Batcher::new(coord.supported_batches(), cfg.max_wait);
             threads.push(
                 thread::Builder::new()
                     .name("sd-acc-batcher".into())
-                    .spawn(move || {
-                        let mut batcher = Batcher::new(sizes, max_wait);
-                        loop {
-                            if shutdown.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            // Pull with a small timeout so aging batches
-                            // still flush under low load.
-                            let pulled =
-                                rx.lock().unwrap().recv_timeout(Duration::from_millis(5));
-                            match pulled {
-                                Ok(p) => {
-                                    metrics.on_enqueue();
-                                    batcher.push(p);
-                                }
-                                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                            }
-                            for batch in batcher.flush_ready(Instant::now()) {
-                                let _ = work_tx.send(batch);
-                            }
-                            metrics.set_queue_depth(batcher.pending());
-                        }
-                        // Final drain.
-                        for batch in batcher.flush_all() {
-                            let _ = work_tx.send(batch);
-                        }
-                        metrics.set_queue_depth(0);
-                    })
+                    .spawn(move || run_batcher(rx, work_tx, batcher, metrics, depth, shutdown))
                     .expect("spawn batcher"),
             );
         }
@@ -159,6 +514,7 @@ impl Server {
             let coord = Arc::clone(&coord);
             let metrics = Arc::clone(&metrics);
             let cache = cfg.cache.clone();
+            let depth = Arc::clone(&depth);
             threads.push(
                 thread::Builder::new()
                     .name(format!("sd-acc-gen-{i}"))
@@ -168,46 +524,7 @@ impl Server {
                             rx.recv()
                         };
                         let Ok(batch) = batch else { break };
-                        let t0 = Instant::now();
-                        let reqs: Vec<GenRequest> =
-                            batch.iter().map(|p| p.req.clone()).collect();
-                        let queue_ms: Vec<f64> = batch
-                            .iter()
-                            .map(|p| p.enqueued.elapsed().as_secs_f64() * 1e3)
-                            .collect();
-                        // generate_many, not generate_batch: aged
-                        // leftovers (and shutdown drains) can flush at
-                        // sizes below the smallest compiled artifact,
-                        // and generate_many pads those to a compiled
-                        // size and slices the results back.
-                        match coord.generate_many(&reqs) {
-                            Ok(results) => {
-                                let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
-                                metrics.on_batch(reqs.len());
-                                // Populate the request cache (best-effort;
-                                // a full disk must not fail the request).
-                                if let Some(cache) = &cache {
-                                    for (req, r) in reqs.iter().zip(&results) {
-                                        if let Ok(evicted) = cache.put_result(req, r) {
-                                            metrics.on_cache_evictions(evicted);
-                                        }
-                                    }
-                                }
-                                for ((p, r), q_ms) in
-                                    batch.into_iter().zip(results).zip(queue_ms)
-                                {
-                                    metrics.on_done(batch_ms + q_ms);
-                                    let _ = p.resp.send(Ok(r));
-                                }
-                            }
-                            Err(e) => {
-                                let msg = format!("{e:#}");
-                                for p in batch {
-                                    metrics.on_error();
-                                    let _ = p.resp.send(Err(anyhow::anyhow!(msg.clone())));
-                                }
-                            }
-                        }
+                        run_batch(batch, &coord, &metrics, cache.as_deref(), &depth);
                     })
                     .expect("spawn worker"),
             );
@@ -218,6 +535,9 @@ impl Server {
             coord,
             cache: cfg.cache.clone(),
             metrics: Arc::clone(&metrics),
+            depth,
+            max_queue: cfg.max_queue,
+            next_id: Arc::new(AtomicU64::new(0)),
         };
         Server { client, shutdown, threads, metrics }
     }
@@ -236,5 +556,156 @@ impl Server {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Artifact-free coverage of the batcher-thread pipeline: `Job`s
+    //! only need a `GenRequest` and channels, not a runtime, so the
+    //! dequeue-side cancellation guarantees and the gauge-zeroing
+    //! contract are testable without AOT artifacts.
+
+    use super::*;
+
+    fn job(prompt: &str, seed: u64) -> (Job, mpsc::Receiver<JobEvent>) {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        let job = Job {
+            req: GenRequest::new(prompt, seed),
+            enqueued: now,
+            deadline: None,
+            priority: Priority::Normal,
+            cancel: CancelToken::new(),
+            events: tx,
+        };
+        (job, rx)
+    }
+
+    fn drain(rx: &mpsc::Receiver<JobEvent>) -> Vec<&'static str> {
+        let mut out = Vec::new();
+        while let Ok(ev) = rx.try_recv() {
+            out.push(ev.label());
+        }
+        out
+    }
+
+    /// Run the batcher loop to completion over a set of jobs and return
+    /// (work batches received, metrics).
+    fn pump(jobs: Vec<Job>, max_wait: Duration) -> (Vec<Vec<Job>>, Arc<Metrics>, Arc<AtomicUsize>) {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (work_tx, work_rx) = mpsc::channel::<Vec<Job>>();
+        let metrics = Arc::new(Metrics::default());
+        let depth = Arc::new(AtomicUsize::new(jobs.len()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        for j in jobs {
+            tx.send(j).unwrap();
+        }
+        // Disconnect the submit side: the loop must drain and exit via
+        // the `Disconnected` branch.
+        drop(tx);
+        let batcher: Batcher<Job> = Batcher::new(vec![1, 2], max_wait);
+        run_batcher(
+            rx,
+            work_tx,
+            batcher,
+            Arc::clone(&metrics),
+            Arc::clone(&depth),
+            shutdown,
+        );
+        let mut batches = Vec::new();
+        while let Ok(b) = work_rx.try_recv() {
+            batches.push(b);
+        }
+        (batches, metrics, depth)
+    }
+
+    #[test]
+    fn disconnected_exit_drains_work_and_zeroes_all_gauges() {
+        let (a, rx_a) = job("red circle x1 y1", 1);
+        let (b, rx_b) = job("red circle x2 y2", 2);
+        let (batches, metrics, depth) = pump(vec![a, b], Duration::from_secs(10));
+        let total: usize = batches.iter().map(Vec::len).sum();
+        assert_eq!(total, 2, "shutdown drain dispatches everything");
+        // The regression this pins: the gauge must read zero after the
+        // thread exits through the Disconnected branch, not the last
+        // pre-exit pending count.
+        let s = metrics.summary();
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.queue_depth_by_priority, [0, 0, 0]);
+        assert_eq!(s.enqueued, 2);
+        // Dispatched jobs keep their admission slot until a worker
+        // finishes them (no worker runs in this harness), so the bound
+        // still covers the work-channel backlog.
+        assert_eq!(depth.load(Ordering::SeqCst), 2, "slots held for dispatched jobs");
+        // No terminal events were sent by the batcher for live jobs.
+        assert!(drain(&rx_a).is_empty());
+        assert!(drain(&rx_b).is_empty());
+    }
+
+    #[test]
+    fn shutdown_flag_exit_still_drains_the_submit_channel() {
+        // A job admitted just before the shutdown flag is observed must
+        // still be dispatched by the tail drain, not silently dropped
+        // in the channel with its handle waiting forever.
+        let (a, rx_a) = job("red circle x1 y1", 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (work_tx, work_rx) = mpsc::channel::<Vec<Job>>();
+        let metrics = Arc::new(Metrics::default());
+        let depth = Arc::new(AtomicUsize::new(1));
+        let shutdown = Arc::new(AtomicBool::new(true)); // already set
+        tx.send(a).unwrap();
+        let batcher: Batcher<Job> = Batcher::new(vec![1, 2], Duration::from_secs(10));
+        run_batcher(rx, work_tx, batcher, Arc::clone(&metrics), Arc::clone(&depth), shutdown);
+        let dispatched: usize = std::iter::from_fn(|| work_rx.try_recv().ok())
+            .map(|b| b.len())
+            .sum();
+        assert_eq!(dispatched, 1, "buffered job reaches the workers, not the void");
+        assert!(drain(&rx_a).is_empty(), "no terminal sent by the batcher for a live job");
+        assert_eq!(metrics.summary().queue_depth, 0);
+        assert_eq!(metrics.summary().enqueued, 1);
+    }
+
+    #[test]
+    fn cancelled_jobs_never_reach_the_work_channel() {
+        let (a, rx_a) = job("red circle x1 y1", 1);
+        a.cancel.cancel();
+        let (b, rx_b) = job("red circle x2 y2", 2);
+        let (batches, metrics, depth) = pump(vec![a, b], Duration::from_millis(0));
+        let ids: Vec<u64> = batches.iter().flatten().map(|j| j.req.seed).collect();
+        assert_eq!(ids, vec![2], "only the live job is dispatched");
+        assert_eq!(drain(&rx_a), vec!["cancelled"]);
+        assert!(drain(&rx_b).is_empty());
+        let s = metrics.summary();
+        assert_eq!(s.cancellations, 1);
+        assert_eq!(s.queue_depth, 0);
+        // Dropped job released its slot; the dispatched one holds its
+        // slot until a worker would finish it.
+        assert_eq!(depth.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn expired_jobs_fail_with_deadline_exceeded_at_dequeue() {
+        let (mut a, rx_a) = job("red circle x1 y1", 1);
+        a.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let (batches, metrics, _) = pump(vec![a], Duration::from_millis(0));
+        assert!(batches.iter().all(|b| b.is_empty()) || batches.is_empty());
+        assert_eq!(drain(&rx_a), vec!["failed"]);
+        assert_eq!(metrics.summary().deadline_misses, 1);
+    }
+
+    #[test]
+    fn batch_observer_cancels_only_when_every_lane_cancelled() {
+        let (a, rx_a) = job("x", 1);
+        let (b, _rx_b) = job("y", 2);
+        let jobs = vec![a, b];
+        let obs = BatchObserver { jobs: &jobs };
+        assert!(!obs.should_cancel());
+        jobs[0].cancel.cancel();
+        assert!(!obs.should_cancel(), "one live lane keeps the batch running");
+        obs.on_step(0, StepAction::Full, 2.0);
+        assert!(drain(&rx_a).is_empty(), "cancelled lanes stop receiving step events");
+        jobs[1].cancel.cancel();
+        assert!(obs.should_cancel(), "all lanes cancelled: abort mid-run");
     }
 }

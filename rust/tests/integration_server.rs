@@ -40,12 +40,16 @@ fn serves_concurrent_requests_with_batching() {
 
     // Submit 5 compatible requests at once; the batcher should form
     // some batches of 2 (the largest compiled size).
-    let rxs: Vec<_> = (0..5)
-        .map(|i| client.submit(req(&format!("red circle x{i} y{i}"), 100 + i as u64)))
+    let handles: Vec<_> = (0..5)
+        .map(|i| {
+            client
+                .submit(req(&format!("red circle x{i} y{i}"), 100 + i as u64))
+                .expect("admitted")
+        })
         .collect();
     let mut ok = 0;
-    for rx in rxs {
-        let res = rx.recv().expect("server alive").expect("generation ok");
+    for h in &handles {
+        let res = h.wait().expect("generation ok");
         assert!(res.latent.data().iter().all(|x| x.is_finite()));
         ok += 1;
     }
@@ -133,10 +137,10 @@ fn mixed_plans_are_not_batched_together() {
     });
     let full = req("green circle x5 y5", 77);
 
-    let rx1 = client.submit(pas);
-    let rx2 = client.submit(full.clone());
-    let r1 = rx1.recv().unwrap().unwrap();
-    let r2 = rx2.recv().unwrap().unwrap();
+    let h1 = client.submit(pas).unwrap();
+    let h2 = client.submit(full.clone()).unwrap();
+    let r1 = h1.wait().unwrap();
+    let r2 = h2.wait().unwrap();
     assert!(r1.stats.mac_reduction > 1.0);
     assert!((r2.stats.mac_reduction - 1.0).abs() < 1e-9);
     server.shutdown();

@@ -13,13 +13,14 @@
 //! run with the same artifacts + settings) skips the trajectories and
 //! the search entirely and replays the stored results.
 //!
-//! Run: `make artifacts && cargo run --release --example calibrate_and_search`
+//! Run: `cargo run --release --example calibrate_and_search`
+//! (sim backend without artifacts; `make artifacts` for the xla path)
 //! Env: SD_ACC_CALIB_STEPS (default 25), SD_ACC_CALIB_PROMPTS (default 2),
 //!      SD_ACC_CACHE (cache dir, default ./cache).
 
 use std::time::Instant;
 
-use sd_acc::cache::{default_cache_dir, Cache, StoreConfig};
+use sd_acc::cache::{default_cache_dir, StoreConfig};
 use sd_acc::coordinator::Coordinator;
 use sd_acc::models::inventory::sd_tiny;
 use sd_acc::pas::calibrate::Calibrator;
@@ -30,15 +31,15 @@ use sd_acc::util::table::{f, ratio, Table};
 
 fn main() -> anyhow::Result<()> {
     let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        anyhow::bail!("no artifacts at {} — run `make artifacts` first", dir.display());
-    }
     let steps: usize = std::env::var("SD_ACC_CALIB_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(25);
     let n_prompts: usize = std::env::var("SD_ACC_CALIB_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
 
+    // Backend auto-resolution: xla over artifacts, deterministic sim
+    // backend otherwise.
     let svc = RuntimeService::start(&dir)?;
+    println!("backend: {}", svc.backend());
     let coord = Coordinator::new(svc.handle());
-    let cache = Cache::open(StoreConfig::new(default_cache_dir()), coord.manifest_hash())?;
+    let cache = coord.open_cache(StoreConfig::new(default_cache_dir()))?;
 
     // Step 1+2: calibration (5%-style prompt subset, Sec. III-C).
     let prompts: Vec<String> = [
@@ -58,7 +59,12 @@ fn main() -> anyhow::Result<()> {
         if calib_hit { "cache hit (trajectories skipped)" } else { "computed" },
         t0.elapsed().as_secs_f64()
     );
-    std::fs::write(dir.join("calibration.json"), report.to_json().to_string())?;
+    // Only the xla backend persists calibration.json: the file lives in
+    // the artifacts dir untagged, and sim-measured shift scores must not
+    // be mistaken for measurements of the real model.
+    if svc.backend() == sd_acc::runtime::BackendKind::Xla {
+        std::fs::write(dir.join("calibration.json"), report.to_json().to_string())?;
+    }
     println!("D* = {} / {steps}   outlier blocks = {:?}", report.d_star, report.outliers);
     println!("(full curves: cargo bench --bench bench_fig4_shift_scores)");
 

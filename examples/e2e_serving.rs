@@ -6,13 +6,14 @@
 //! latency percentiles, throughput, mean batch size, and the PAS quality
 //! proxy, and appends a JSON record consumed by EXPERIMENTS.md.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! Run: `cargo run --release --example e2e_serving`
+//! (sim backend without artifacts; `make artifacts` for the xla path)
 //! Env: SD_ACC_E2E_REQS (default 12), SD_ACC_E2E_STEPS (default 20).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use sd_acc::cache::{Cache, StoreConfig};
+use sd_acc::cache::StoreConfig;
 use sd_acc::coordinator::{Coordinator, GenRequest};
 use sd_acc::pas::plan::{PasConfig, SamplingPlan};
 use sd_acc::quality;
@@ -43,13 +44,13 @@ fn synth_prompt(rng: &mut Pcg32) -> String {
 
 fn main() -> anyhow::Result<()> {
     let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        anyhow::bail!("no artifacts at {} — run `make artifacts` first", dir.display());
-    }
     let n_reqs: usize = std::env::var("SD_ACC_E2E_REQS").ok().and_then(|v| v.parse().ok()).unwrap_or(12);
     let steps: usize = std::env::var("SD_ACC_E2E_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
 
+    // Backend auto-resolution: xla over artifacts, deterministic sim
+    // backend otherwise — the driver runs either way.
     let svc = RuntimeService::start(&dir)?;
+    println!("backend: {}", svc.backend());
     // Warm the executable cache so serving latency excludes compiles.
     let warm = [
         Runtime::unet_full(1),
@@ -68,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     // Optional persistent cache: set SD_ACC_E2E_CACHE to a directory and
     // a second run of this driver is served from the request cache.
     let cache = match std::env::var("SD_ACC_E2E_CACHE") {
-        Ok(dir) => Some(Arc::new(Cache::open(StoreConfig::new(dir), coord.manifest_hash())?)),
+        Ok(dir) => Some(Arc::new(coord.open_cache(StoreConfig::new(dir))?)),
         Err(_) => None,
     };
     // One worker: PJRT submissions are serialised on the runtime thread

@@ -2,20 +2,27 @@
 //! phase-aware sampling, compare cost + quality, save PPM images.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
+//!
+//! **No artifacts? No problem.** The runtime auto-resolves its
+//! execution backend: with `artifacts/manifest.json` present it runs
+//! the PJRT/xla path, without it (or with `SD_ACC_BACKEND=sim`, or
+//! `sd-acc ... --backend sim` on the CLI) it runs the deterministic
+//! pure-Rust `SimBackend` — same API, same shapes, bit-reproducible
+//! outputs, zero setup.
 
 use std::path::Path;
 
 use sd_acc::coordinator::{Coordinator, GenRequest};
 use sd_acc::pas::plan::{PasConfig, SamplingPlan};
 use sd_acc::quality;
-use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+use sd_acc::runtime::{default_artifacts_dir, BackendKind, RuntimeService};
 
 fn main() -> anyhow::Result<()> {
     let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        anyhow::bail!("no artifacts at {} — run `make artifacts` first", dir.display());
-    }
     let svc = RuntimeService::start(&dir)?;
+    if svc.backend() == BackendKind::Sim {
+        println!("backend: sim (no artifacts at {} — deterministic simulator)", dir.display());
+    }
     // Compile ahead of time so the reported step times are steady-state.
     println!("compiling artifacts (one-time)...");
     svc.handle().preload(&[

@@ -9,7 +9,9 @@
 //!     fired token stops a run *before its final step*, not just while
 //!     it waits in the queue.
 //!
-//! Run: `make artifacts && cargo run --release --example streaming_progress`
+//! Run: `cargo run --release --example streaming_progress`
+//! (runs on the deterministic sim backend when no artifacts exist;
+//! `make artifacts` first to drive the PJRT/xla path instead)
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -21,10 +23,8 @@ use sd_acc::server::{JobEvent, Priority, Server, ServerConfig, SubmitOptions};
 
 fn main() -> anyhow::Result<()> {
     let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        anyhow::bail!("no artifacts at {} — run `make artifacts` first", dir.display());
-    }
     let svc = RuntimeService::start(&dir)?;
+    println!("backend: {}", svc.backend());
     let coord = Arc::new(Coordinator::new(svc.handle()));
     let server = Server::start(
         Arc::clone(&coord),

@@ -23,24 +23,31 @@ fn main() {
     let report: CalibrationReport = if cached.exists() {
         let text = std::fs::read_to_string(&cached).expect("read calibration.json");
         CalibrationReport::from_json(&Json::parse(&text).expect("parse")).expect("decode")
-    } else if dir.join("manifest.json").exists() {
+    } else {
         let steps: usize = std::env::var("SD_ACC_BENCH_STEPS")
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(25);
-        println!("(no calibration.json cache — measuring {steps}-step trajectories now)");
+        // Auto backend: xla over artifacts, deterministic sim otherwise
+        // — the measurement runs either way.
         let svc = RuntimeService::start(&dir).expect("runtime");
+        println!(
+            "(no calibration.json cache — measuring {steps}-step trajectories on the {} backend)",
+            svc.backend()
+        );
         let coord = Coordinator::new(svc.handle());
         let prompts = vec![
             "red circle x4 y4 blue square x11 y11".to_string(),
             "green stripe x8 y8".to_string(),
         ];
         let rep = Calibrator::new(&coord).run(&prompts, steps, 7.5).expect("calibration");
-        std::fs::write(&cached, rep.to_json().to_string()).ok();
+        // Cache the file for repeat runs only on the xla path: the
+        // artifacts-dir calibration.json carries no backend tag, so sim
+        // measurements must not be mistaken for the real model's.
+        if svc.backend() == sd_acc::runtime::BackendKind::Xla {
+            std::fs::write(&cached, rep.to_json().to_string()).ok();
+        }
         rep
-    } else {
-        println!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
-        return;
     };
 
     println!(

@@ -67,10 +67,11 @@ fn main() {
         std::hint::black_box(Json::parse(&blob).unwrap());
     });
 
-    // --- runtime hot path (needs artifacts) -----------------------------------
+    // --- runtime hot path (xla over artifacts, sim backend otherwise) ---------
     let dir = default_artifacts_dir();
-    if dir.join("manifest.json").exists() {
+    {
         let svc = RuntimeService::start(&dir).expect("runtime");
+        println!("runtime hot path backend: {}", svc.backend());
         let h = svc.handle();
         let m = h.manifest().model.clone();
         // warm compile outside timing
@@ -111,8 +112,6 @@ fn main() {
             std::hint::black_box(coord.generate_one(&req).unwrap());
         });
         bench_rt.emit_json();
-    } else {
-        println!("(artifacts not built — runtime hot-path benches skipped)");
     }
 
     b.emit_json();

@@ -23,11 +23,12 @@
 //!    asserts the event-channel path adds **< 5% p50 overhead** over
 //!    the blocking path. Asserted, also in `--smoke` — this is the
 //!    acceptance band for the streaming job API.
-//! 4. **Live serving** (only when AOT artifacts are present): full
-//!    server over the PJRT runtime — req/s, p50/p95/p99, occupancy,
-//!    measured warm-vs-cold hit latency through the client path, plus
-//!    submit->event->done latency and time-to-cancel-ack through the
-//!    `JobHandle` API.
+//! 4. **Live serving**: full server over the resolved execution
+//!    backend (xla when AOT artifacts are present, the deterministic
+//!    sim backend otherwise — this section always executes) — req/s,
+//!    p50/p95/p99, occupancy, measured warm-vs-cold hit latency
+//!    through the client path, plus submit->event->done latency and
+//!    time-to-cancel-ack through the `JobHandle` API.
 //!
 //! `--smoke` (used by ci.sh) trims iteration counts, still enforces the
 //! warm >= 3x cold and event-overhead bands, and skips the repo-root
@@ -344,21 +345,19 @@ fn main() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// Full-stack serving measurement; `None` when no AOT artifacts exist
-/// or the run failed (failures are *reported*, never silently folded
-/// into the no-artifacts case).
+/// Full-stack serving measurement over whichever execution backend
+/// resolves — xla over real artifacts when present, the deterministic
+/// sim backend otherwise — so this section *executes* (never skips) in
+/// artifact-less containers; `None` only when the run itself failed
+/// (failures are *reported*, never silently folded away).
 fn run_e2e(smoke: bool) -> Option<Json> {
     use sd_acc::runtime::default_artifacts_dir;
 
     let art_dir = default_artifacts_dir();
-    if !art_dir.join("manifest.json").exists() {
-        println!("no artifacts at {} — skipping live serving section", art_dir.display());
-        return None;
-    }
     match run_e2e_inner(smoke, &art_dir) {
         Ok(j) => Some(j),
         Err(e) => {
-            println!("live serving section FAILED (artifacts present): {e:#}");
+            println!("live serving section FAILED: {e:#}");
             None
         }
     }
@@ -370,11 +369,12 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
     use sd_acc::server::{Server, ServerConfig};
 
     let svc = RuntimeService::start(art_dir)?;
+    println!("live serving backend: {}", svc.backend());
     let coord = Arc::new(Coordinator::new(svc.handle()));
     let cache_dir =
         std::env::temp_dir().join(format!("sdacc_bench_serving_e2e_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&cache_dir);
-    let cache = Arc::new(Cache::open(StoreConfig::new(&cache_dir), coord.manifest_hash())?);
+    let cache = Arc::new(coord.open_cache(StoreConfig::new(&cache_dir))?);
     let server = Server::start(
         Arc::clone(&coord),
         ServerConfig {
@@ -470,6 +470,7 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
         m.cancellations,
     );
     Ok(Json::obj(vec![
+        ("backend", Json::str(svc.backend().as_str())),
         ("requests", Json::num(n as f64)),
         ("steps", Json::num(steps as f64)),
         ("wall_s", Json::num(wall_s)),

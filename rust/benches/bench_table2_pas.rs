@@ -54,16 +54,16 @@ fn main() {
     );
     assert!((2.3..3.4).contains(&red), "PAS-25/4 v1.4 reduction {red}");
 
-    // --- quality proxies on sd-tiny (needs artifacts) ---------------------
+    // --- quality proxies on the runnable model (xla over artifacts,
+    // --- deterministic sim backend otherwise) -----------------------------
     let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("\n(artifacts not built — skipping measured quality proxies; run `make artifacts`)");
-        return;
-    }
     let steps: usize = std::env::var("SD_ACC_BENCH_STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
     let n_prompts: usize = std::env::var("SD_ACC_BENCH_PROMPTS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
-    println!("\n== Table II: measured quality proxies on sd-tiny ({steps} steps, {n_prompts} prompts) ==");
     let svc = RuntimeService::start(&dir).expect("runtime");
+    println!(
+        "\n== Table II: measured quality proxies on sd-tiny ({steps} steps, {n_prompts} prompts, backend {}) ==",
+        svc.backend()
+    );
     let coord = Coordinator::new(svc.handle());
     let cm_tiny = CostModel::new(&sd_tiny());
     let prompts = ["red circle x4 y4 blue square x11 y11", "green stripe x8 y8"];

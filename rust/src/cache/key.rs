@@ -18,17 +18,24 @@ use std::fmt;
 ///     never scanned in, since its payloads would be misread.
 pub const CACHE_VERSION: u32 = 3;
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a offset basis (the initial state for [`fnv1a_update`]).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x1_0000_0001_b3;
+
+/// Incremental FNV-1a: fold `bytes` into an existing state — THE one
+/// implementation of the algorithm in the crate (`fnv1a`, the keyed
+/// hasher, and the sim backend's input digests all route through it).
+pub fn fnv1a_update(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(FNV_PRIME);
+    }
+    state
+}
 
 /// Raw FNV-1a over a byte slice (also used for the manifest digest).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = FNV_OFFSET;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h
+    fnv1a_update(FNV_OFFSET, bytes)
 }
 
 /// A 64-bit content-addressed key. The hex form names the payload file.
@@ -71,10 +78,7 @@ impl KeyHasher {
     }
 
     fn raw(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.state ^= b as u64;
-            self.state = self.state.wrapping_mul(FNV_PRIME);
-        }
+        self.state = fnv1a_update(self.state, bytes);
     }
 
     /// Length-prefixed string field.

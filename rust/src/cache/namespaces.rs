@@ -22,6 +22,7 @@
 use anyhow::Result;
 
 use crate::coordinator::{GenRequest, GenResult};
+use crate::runtime::BackendKind;
 use crate::pas::calibrate::CalibrationReport;
 use crate::pas::plan::{PasConfig, SamplingPlan};
 use crate::pas::search::SearchConstraints;
@@ -157,12 +158,52 @@ pub fn request_key(manifest_hash: u64, req: &GenRequest) -> CacheKey {
     h.finish()
 }
 
+/// Backend salt applied to the manifest digest before *every* key
+/// derivation. **Digest-stability rule:** the xla path (and `Auto`,
+/// which the runtime service grounds before any cache exists) returns
+/// the digest untouched — every pre-existing entry in every namespace
+/// still hits and `CACHE_VERSION` did not move with the backend
+/// redesign. The sim backend mixes in a fixed tag, which makes ALL
+/// namespaces disjoint from the xla path's entries — not just
+/// `request`: calibration shift-scores, searched plans and activation
+/// ranges are measurements *of the executor's numerics*, not of the
+/// manifest alone, so sim-measured data must never resolve an xla
+/// lookup (and vice versa) even when the sim ran over the same real
+/// manifest.json.
+pub fn backend_salted_hash(manifest_hash: u64, backend: BackendKind) -> u64 {
+    match backend {
+        BackendKind::Xla | BackendKind::Auto => manifest_hash,
+        BackendKind::Sim => {
+            let mut bytes = [0u8; 19];
+            bytes[..8].copy_from_slice(&manifest_hash.to_le_bytes());
+            bytes[8..].copy_from_slice(b"backend:sim");
+            crate::cache::key::fnv1a(&bytes)
+        }
+    }
+}
+
+/// Backend-aware request key: the legacy [`request_key`] derivation over
+/// the backend-salted digest (xla keys are byte-identical to the
+/// pre-seam era; sim keys are disjoint).
+pub fn request_key_for(manifest_hash: u64, backend: BackendKind, req: &GenRequest) -> CacheKey {
+    request_key(backend_salted_hash(manifest_hash, backend), req)
+}
+
 // ------------------------------------------------------------------ facade
 
-/// The typed cache: a [`Store`] bound to one manifest generation.
+/// The typed cache: a [`Store`] bound to one manifest generation and
+/// one execution backend. Every key derivation — all four namespaces —
+/// goes through the backend-salted digest ([`backend_salted_hash`]), so
+/// sim-backend entries can never satisfy xla lookups; the *flush* rule
+/// stays anchored on the raw manifest digest, so the two backends can
+/// share one store without clobbering each other on open.
 pub struct Cache {
     store: Store,
+    /// Raw manifest digest: the flush-on-open anchor.
     manifest_hash: u64,
+    /// Backend-salted digest: what every key derivation hashes.
+    key_hash: u64,
+    backend: BackendKind,
 }
 
 impl std::fmt::Debug for Cache {
@@ -171,26 +212,56 @@ impl std::fmt::Debug for Cache {
         f.debug_struct("Cache")
             .field("dir", &self.store.dir())
             .field("manifest_hash", &hash)
+            .field("backend", &self.backend.as_str())
             .finish()
     }
 }
 
 impl Cache {
-    /// Open the cache for a given manifest digest. If the store was
-    /// populated under a different manifest, every namespace is flushed
-    /// before use (the invalidation rule).
+    /// Open the cache for a given manifest digest over the **xla**
+    /// backend (the legacy construction — keys are byte-identical to
+    /// every release since the `SamplerKind` migration). If the store
+    /// was populated under a different manifest, every namespace is
+    /// flushed before use (the invalidation rule).
+    ///
+    /// **Do not call this with a live coordinator/runtime in hand** —
+    /// a sim-resolved runtime opened through here would store sim
+    /// numerics under untagged xla keys, exactly the cross-backend
+    /// poisoning the salting prevents. Use
+    /// [`Coordinator::open_cache`](crate::coordinator::Coordinator::open_cache)
+    /// (which supplies digest + kind from the running backend) or
+    /// [`Cache::open_for`]; this constructor exists for xla-tagged
+    /// fixtures and offline maintenance (`sd-acc cache`), where no
+    /// executor is running.
     pub fn open(cfg: StoreConfig, manifest_hash: u64) -> Result<Cache> {
+        Self::open_for(cfg, manifest_hash, BackendKind::Xla)
+    }
+
+    /// Open the cache for a given manifest digest and execution backend.
+    /// Prefer [`Coordinator::open_cache`](crate::coordinator::Coordinator::open_cache),
+    /// which supplies both from the live runtime.
+    pub fn open_for(cfg: StoreConfig, manifest_hash: u64, backend: BackendKind) -> Result<Cache> {
         let store = Store::open(cfg)?;
         let hash_hex = format!("{manifest_hash:016x}");
         if store.meta(META_MANIFEST_HASH).as_deref() != Some(hash_hex.as_str()) {
             store.clear(None);
             store.set_meta(META_MANIFEST_HASH, &hash_hex)?;
         }
-        Ok(Cache { store, manifest_hash })
+        Ok(Cache {
+            store,
+            manifest_hash,
+            key_hash: backend_salted_hash(manifest_hash, backend),
+            backend,
+        })
     }
 
     pub fn manifest_hash(&self) -> u64 {
         self.manifest_hash
+    }
+
+    /// The backend whose results this cache stores/serves.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     pub fn store(&self) -> &Store {
@@ -225,7 +296,7 @@ impl Cache {
         prompts: &[String],
         guidance: f32,
     ) -> Option<CalibrationReport> {
-        self.get_typed(calib_key(self.manifest_hash, steps, prompts, guidance))
+        self.get_typed(calib_key(self.key_hash, steps, prompts, guidance))
     }
 
     pub fn put_calibration(
@@ -235,7 +306,7 @@ impl Cache {
         guidance: f32,
         report: &CalibrationReport,
     ) -> Result<usize> {
-        self.put_typed(calib_key(self.manifest_hash, steps, prompts, guidance), report)
+        self.put_typed(calib_key(self.key_hash, steps, prompts, guidance), report)
     }
 
     // ------------------------------------------------------------ quant
@@ -246,7 +317,7 @@ impl Cache {
         prompts: &[String],
         guidance: f32,
     ) -> Option<QuantProfile> {
-        self.get_typed(quant_key(self.manifest_hash, steps, prompts, guidance))
+        self.get_typed(quant_key(self.key_hash, steps, prompts, guidance))
     }
 
     pub fn put_quant_profile(
@@ -256,7 +327,7 @@ impl Cache {
         guidance: f32,
         profile: &QuantProfile,
     ) -> Result<usize> {
-        self.put_typed(quant_key(self.manifest_hash, steps, prompts, guidance), profile)
+        self.put_typed(quant_key(self.key_hash, steps, prompts, guidance), profile)
     }
 
     // ------------------------------------------------------------- plan
@@ -268,7 +339,7 @@ impl Cache {
         d_star: usize,
         outliers: &[usize],
     ) -> Option<PlanFront> {
-        self.get_typed(plan_key(self.manifest_hash, cons, validation_prompts, d_star, outliers))
+        self.get_typed(plan_key(self.key_hash, cons, validation_prompts, d_star, outliers))
     }
 
     /// Store a searched front; also refreshes the per-steps "best plan"
@@ -284,7 +355,7 @@ impl Cache {
         front: &PlanFront,
     ) -> Result<usize> {
         let mut evicted = self.put_typed(
-            plan_key(self.manifest_hash, cons, validation_prompts, d_star, outliers),
+            plan_key(self.key_hash, cons, validation_prompts, d_star, outliers),
             front,
         )?;
         if !front.candidates.is_empty() {
@@ -294,7 +365,7 @@ impl Cache {
             };
             evicted += self.store.put(
                 NS_PLAN,
-                best_plan_key(self.manifest_hash, front.total_steps),
+                best_plan_key(self.key_hash, front.total_steps),
                 &encode_bytes(&summary),
             )?;
         }
@@ -305,18 +376,18 @@ impl Cache {
     /// what `SamplingPlan::Auto` resolves to.
     pub fn best_plan(&self, total_steps: usize) -> Option<PasConfig> {
         let front: PlanFront =
-            self.get_typed(best_plan_key(self.manifest_hash, total_steps))?;
+            self.get_typed(best_plan_key(self.key_hash, total_steps))?;
         front.best().map(|c| c.cfg)
     }
 
     // ---------------------------------------------------------- request
 
     pub fn get_result(&self, req: &GenRequest) -> Option<GenResult> {
-        self.get_typed(request_key(self.manifest_hash, req))
+        self.get_typed(request_key(self.key_hash, req))
     }
 
     pub fn put_result(&self, req: &GenRequest, result: &GenResult) -> Result<usize> {
-        self.put_typed(request_key(self.manifest_hash, req), result)
+        self.put_typed(request_key(self.key_hash, req), result)
     }
 }
 
@@ -438,6 +509,64 @@ mod tests {
         assert_ne!(request_key(1, &a), request_key(1, &b));
         assert_eq!(legacy_request_key(1, "ddim", &a), request_key(1, &a));
         assert_eq!(legacy_request_key(1, "pndm", &b), request_key(1, &b));
+    }
+
+    /// The backend-tagging acceptance rule: xla keys are byte-identical
+    /// to the untagged legacy derivation (no `CACHE_VERSION` bump, every
+    /// old entry still hits), sim keys are disjoint, and inside one
+    /// shared store a sim-produced latent can never satisfy an xla
+    /// lookup or vice versa.
+    #[test]
+    fn sim_and_xla_request_caches_are_disjoint() {
+        let req = GenRequest::new("red circle x4 y4", 42);
+        // Key level: xla == legacy, sim != xla.
+        assert_eq!(
+            request_key_for(7, BackendKind::Xla, &req),
+            request_key(7, &req),
+            "xla path must keep every legacy digest"
+        );
+        assert_eq!(
+            request_key_for(7, BackendKind::Auto, &req),
+            request_key(7, &req),
+            "Auto hashes as xla (it is grounded before any cache exists)"
+        );
+        assert_ne!(
+            request_key_for(7, BackendKind::Sim, &req),
+            request_key(7, &req),
+            "sim latents must never land on an xla key"
+        );
+
+        // Facade level: one shared store, same manifest hash (no flush),
+        // two backend bindings.
+        let dir = tmp_dir("backend_tag");
+        let sim = Cache::open_for(StoreConfig::new(&dir), 9, BackendKind::Sim).unwrap();
+        sim.put_result(&req, &sample_result()).unwrap();
+        assert!(sim.get_result(&req).is_some(), "sim sees its own entry");
+        drop(sim);
+        let xla = Cache::open(StoreConfig::new(&dir), 9).unwrap();
+        assert!(
+            xla.get_result(&req).is_none(),
+            "an xla lookup must not be satisfied by a sim latent"
+        );
+        xla.put_result(&req, &sample_result()).unwrap();
+        drop(xla);
+        let sim = Cache::open_for(StoreConfig::new(&dir), 9, BackendKind::Sim).unwrap();
+        assert!(sim.get_result(&req).is_some(), "sim entry survived the xla session");
+        assert_eq!(sim.stats().entries, 2, "both backends coexist in one store");
+
+        // The measurement namespaces are backend-tagged too: shift
+        // scores / plans / activation ranges measure the executor's
+        // numerics, so a sim-measured calibration must not resolve an
+        // xla lookup even over the same manifest digest.
+        let prompts = vec!["red circle x4 y4".to_string()];
+        sim.put_calibration(20, &prompts, 7.5, &sample_report()).unwrap();
+        drop(sim);
+        let xla = Cache::open(StoreConfig::new(&dir), 9).unwrap();
+        assert!(
+            xla.get_calibration(20, &prompts, 7.5).is_none(),
+            "sim-measured calibration must be invisible to the xla binding"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -43,12 +43,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::cache::Cache;
+use crate::cache::{Cache, StoreConfig};
 use crate::models::inventory::sd_tiny;
 use crate::pas::cost::CostModel;
 use crate::pas::plan::{plan_is_executable, SamplingPlan, StepAction};
 use crate::quant::format::{emulate_activations, QuantScheme};
-use crate::runtime::{Input, Runtime, RuntimeHandle, Tensor, TensorI32};
+use crate::runtime::{BackendKind, Input, Runtime, RuntimeHandle, Tensor, TensorI32};
 use crate::scheduler::{Ddim, NoiseSchedule, Pndm, Sampler};
 use crate::util::rng::Pcg32;
 
@@ -339,19 +339,29 @@ pub struct GenStats {
 
 // ---------------------------------------------------------------- observer
 
-/// Step-level observability + cancellation hook threaded through the
-/// denoising loop by the `*_observed` entry points.
+/// Step-level observability + cancellation/deadline hook threaded
+/// through the denoising loop by the `*_observed` entry points.
 ///
-/// `should_cancel` is polled once per denoising step *before* the U-Net
-/// executes, so flipping it aborts a run mid-flight with
-/// [`SdError::Cancelled`] — the contract the serving layer's
-/// `CancelToken` relies on. `on_step` fires after each executed step
-/// with the step index, the action that ran, and its wall time; for a
-/// batched run both apply to the whole lockstep batch.
+/// `should_cancel` and `deadline_exceeded` are polled once per denoising
+/// step *before* the U-Net executes, so flipping either aborts a run
+/// mid-flight with [`SdError::Cancelled`] / [`SdError::DeadlineExceeded`]
+/// — the contracts the serving layer's `CancelToken` and per-job
+/// deadlines rely on (a job's latency budget is enforced *inside* the
+/// loop, not only at admission and dequeue). Cancellation is checked
+/// first, so a job that is both cancelled and expired reports
+/// `Cancelled`. `on_step` fires after each executed step with the step
+/// index, the action that ran, and its wall time; for a batched run all
+/// hooks apply to the whole lockstep batch.
 pub trait StepObserver {
     fn on_step(&self, _i: usize, _action: StepAction, _ms: f64) {}
 
     fn should_cancel(&self) -> bool {
+        false
+    }
+
+    /// True when the run's step budget / wall-clock deadline is spent
+    /// and the remaining steps should not execute.
+    fn deadline_exceeded(&self) -> bool {
         false
     }
 }
@@ -415,6 +425,19 @@ impl Coordinator {
     /// Digest of the loaded AOT manifest — the cache invalidation anchor.
     pub fn manifest_hash(&self) -> u64 {
         self.runtime.manifest().hash
+    }
+
+    /// The resolved execution backend behind this coordinator.
+    pub fn backend(&self) -> BackendKind {
+        self.runtime.backend()
+    }
+
+    /// Open the persistent cache bound to this coordinator's manifest
+    /// digest *and* backend kind — THE cache construction path, so sim
+    /// results are always tagged apart from xla results (they are
+    /// different latents and must never satisfy each other's lookups).
+    pub fn open_cache(&self, cfg: StoreConfig) -> Result<Cache> {
+        Cache::open_for(cfg, self.manifest_hash(), self.backend())
     }
 
     /// Resolve a `SamplingPlan::Auto` request against the plan cache:
@@ -532,10 +555,15 @@ impl Coordinator {
         let t_start = Instant::now();
 
         for (i, &action) in plan.iter().enumerate() {
-            // Mid-flight cancellation: checked once per denoising step,
-            // before the expensive U-Net execution.
+            // Mid-flight cancellation and deadline/step-budget
+            // enforcement: checked once per denoising step, before the
+            // expensive U-Net execution. Cancellation wins when both
+            // fired (the caller asked out; the budget is moot).
             if obs.should_cancel() {
                 return Err(SdError::Cancelled);
+            }
+            if obs.deadline_exceeded() {
+                return Err(SdError::DeadlineExceeded);
             }
             let t0 = Instant::now();
             let t_in = Tensor::new(vec![b], vec![ts[i] as f32; b]).map_err(SdError::runtime)?;
@@ -889,9 +917,10 @@ mod tests {
     }
 
     #[test]
-    fn default_observer_neither_cancels_nor_panics() {
+    fn default_observer_neither_cancels_nor_expires_nor_panics() {
         let obs = NoopObserver;
         assert!(!obs.should_cancel());
+        assert!(!obs.deadline_exceeded(), "no deadline unless an observer provides one");
         obs.on_step(0, StepAction::Full, 1.0);
     }
 }

@@ -10,6 +10,41 @@
 //! through the PJRT CPU client (`runtime` module). Python never runs on
 //! the request path.
 //!
+//! ## Pluggable execution backends ([`runtime::backend`], [`runtime::sim`])
+//!
+//! The runtime layer is a seam, not a single executor: the object-safe
+//! `ExecBackend` trait (`manifest` / `execute(name, inputs)` /
+//! `preload`) is the artifact contract, `Runtime` (PJRT/xla over AOT
+//! HLO artifacts) and `SimBackend` (deterministic pure Rust, zero
+//! artifacts required) are its two implementations, and both live on
+//! the `RuntimeService` owner thread — the xla wrappers are `!Send`, so
+//! Send-safety stays a property of the service, never of the backend.
+//! **Resolution order** for `BackendKind`: explicit `--backend` flag >
+//! `SD_ACC_BACKEND` env > `Auto` (xla when `artifacts/manifest.json`
+//! exists, sim otherwise). **Determinism rule:** a sim execution is a
+//! pure function of (artifact name, input bytes) — PCG32 texture seeded
+//! from FNV-1a input digests, per-element scalar kernels, no global
+//! state — so repeated `Client::generate` runs are bit-identical,
+//! lockstep batch lanes equal their solo runs bit for bit, and the
+//! request cache's replay guarantee holds on both backends. The sim's
+//! U-Net stand-in routes a slowly-drifting "deep" term through the
+//! feature-cache tensors (fresh cache ⇒ partial ≡ full exactly; stale
+//! cache ⇒ small monotone error), so phase-aware-sampling behaviour is
+//! meaningfully exercised without artifacts. Shape errors route through
+//! one shared `check_inputs`, so both backends report byte-identical
+//! wording. **Cache rule:** every key derivation — all four namespaces,
+//! since calibration/plan/quant data measure the executor's numerics —
+//! hashes a backend-salted manifest digest (`backend_salted_hash`: xla
+//! keys are byte-identical to the pre-seam derivation, no
+//! `CACHE_VERSION` bump; sim keys are disjoint), while the flush rule
+//! stays on the raw digest so both backends can share one store. Sim
+//! and xla results can never satisfy each other's lookups, and the sim
+//! backend never writes `calibration.json` into the artifacts dir. The
+//! payoff: every integration suite
+//! and runtime-backed bench section *executes* in artifact-less
+//! containers (`ci.sh` exports `SD_ACC_BACKEND=sim`) instead of
+//! skipping.
+//!
 //! ## Zero-copy hot path ([`runtime`], [`scheduler`], [`coordinator`])
 //!
 //! The denoising loop carries no redundant host-side copies:

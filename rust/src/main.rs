@@ -27,7 +27,7 @@ use sd_acc::quant::{
     assign, predicted_psnr_db, search, synthetic_profile, QuantCalibrator, QuantConstraints,
     QuantScheme,
 };
-use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+use sd_acc::runtime::{default_artifacts_dir, BackendKind, RuntimeService};
 use sd_acc::util::cli::{usage, Args, OptSpec};
 use sd_acc::util::table::{f, ratio, Table};
 
@@ -82,10 +82,43 @@ fn need_artifacts(dir: &Path) -> Result<(), String> {
     }
 }
 
-/// Open the persistent cache when `--cache-dir` is given.
+/// Resolve the execution backend (`--backend` flag > `SD_ACC_BACKEND`
+/// env > auto-detect on the artifacts dir) and start the runtime
+/// service + coordinator over it — THE construction path for every
+/// runtime-backed subcommand. Xla still requires artifacts (same clean
+/// error as before); `--backend sim` runs without any.
+fn start_runtime(args: &Args) -> Result<(RuntimeService, Coordinator), String> {
+    let dir = artifacts_dir(args);
+    let kind = BackendKind::resolve(args.get("backend"))
+        .map_err(|e| format!("{e:#}"))?
+        .for_dir(&dir);
+    if kind == BackendKind::Xla {
+        need_artifacts(&dir)?;
+    } else {
+        println!("backend: sim (deterministic pure-Rust executor — no artifacts needed)");
+    }
+    let svc = RuntimeService::start_with(kind, &dir).map_err(|e| format!("{e:#}"))?;
+    let coord = Coordinator::new(svc.handle());
+    Ok((svc, coord))
+}
+
+/// The shared `--backend` option row.
+fn backend_opt() -> OptSpec {
+    OptSpec {
+        name: "backend",
+        help: "execution backend: auto | xla | sim (also SD_ACC_BACKEND)",
+        takes_value: true,
+        default: None,
+    }
+}
+
+/// Open the persistent cache when `--cache-dir` is given. Keys are
+/// bound to the coordinator's manifest digest *and* backend kind, so
+/// sim latents never satisfy xla lookups.
 fn open_cache(args: &Args, coord: &Coordinator) -> Result<Option<Cache>, String> {
     match args.get("cache-dir") {
-        Some(d) => Cache::open(StoreConfig::new(d), coord.manifest_hash())
+        Some(d) => coord
+            .open_cache(StoreConfig::new(d))
             .map(Some)
             .map_err(|e| format!("{e:#}")),
         None => Ok(None),
@@ -104,10 +137,12 @@ fn calib_prompts(n: usize) -> Vec<String> {
 }
 
 /// Quant-profile acquisition shared by the `quant calibrate|search` arms:
-/// measured trajectories (cache-aware) when artifacts exist, synthetic
-/// deterministic ranges otherwise. The service/coordinator pair is
-/// returned so callers can run measured validation (the service owns the
-/// runtime thread and must stay alive while the coordinator is used).
+/// measured trajectories (cache-aware) over whichever execution backend
+/// resolves — xla over real artifacts, or the deterministic sim backend
+/// when none exist — and synthetic deterministic ranges for the
+/// non-runnable architectures. The service/coordinator pair is returned
+/// so callers can run measured validation (the service owns the runtime
+/// thread and must stay alive while the coordinator is used).
 #[allow(clippy::type_complexity)]
 fn acquire_quant_profile(
     args: &Args,
@@ -129,12 +164,7 @@ fn acquire_quant_profile(
         }
         return Ok((synthetic_profile(arch, steps), None));
     }
-    if !dir.join("manifest.json").exists() {
-        println!("no artifacts at {} — synthetic deterministic profile", dir.display());
-        return Ok((synthetic_profile(arch, steps), None));
-    }
-    let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
-    let coord = Coordinator::new(svc.handle());
+    let (svc, coord) = start_runtime(args)?;
     let cache = open_cache(args, &coord)?;
     let prompts = calib_prompts(args.get_usize("prompts")?.unwrap_or(2));
     let calibrator = QuantCalibrator::new(&coord);
@@ -185,6 +215,7 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "t-sparse", help: "PAS sparse period", takes_value: true, default: Some("4") },
         OptSpec { name: "out", help: "output PPM path", takes_value: true, default: Some("out.ppm") },
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        backend_opt(),
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
         OptSpec { name: "auto", help: "resolve the best cached PAS plan (SamplingPlan::Auto)", takes_value: false, default: None },
         OptSpec { name: "quant", help: "mixed-precision scheme (fp16 | w8a8 | w4a8 | ...)", takes_value: true, default: None },
@@ -196,10 +227,7 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
         print!("{}", usage("sd-acc generate", "text-to-image generation", &spec));
         return Ok(());
     }
-    let dir = artifacts_dir(&args);
-    need_artifacts(&dir)?;
-    let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
-    let coord = Coordinator::new(svc.handle());
+    let (_svc, coord) = start_runtime(&args)?;
     let m = coord.runtime().manifest().model.clone();
     let cache = open_cache(&args, &coord)?;
 
@@ -293,6 +321,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "max-queue", help: "bounded admission capacity (QueueFull beyond it)", takes_value: true, default: Some("256") },
         OptSpec { name: "deadline-ms", help: "per-request deadline (0 = none)", takes_value: true, default: Some("0") },
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        backend_opt(),
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
@@ -304,10 +333,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         );
         return Ok(());
     }
-    let dir = artifacts_dir(&args);
-    need_artifacts(&dir)?;
-    let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
-    let coord = Coordinator::new(svc.handle());
+    let (_svc, coord) = start_runtime(&args)?;
     let cache = open_cache(&args, &coord)?.map(Arc::new);
 
     let n = args.get_usize("requests")?.unwrap();
@@ -409,6 +435,7 @@ fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "steps", help: "timesteps per trajectory", takes_value: true, default: Some("25") },
         OptSpec { name: "prompts", help: "number of calibration prompts", takes_value: true, default: Some("2") },
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        backend_opt(),
         OptSpec { name: "cache-dir", help: "persistent cache dir (warm starts skip the trajectories)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
@@ -418,9 +445,7 @@ fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
         return Ok(());
     }
     let dir = artifacts_dir(&args);
-    need_artifacts(&dir)?;
-    let svc = RuntimeService::start(&dir).map_err(|e| format!("{e:#}"))?;
-    let coord = Coordinator::new(svc.handle());
+    let (_svc, coord) = start_runtime(&args)?;
     let cache = open_cache(&args, &coord)?;
     let prompts = calib_prompts(args.get_usize("prompts")?.unwrap());
     let steps = args.get_usize("steps")?.unwrap();
@@ -437,10 +462,18 @@ fn cmd_calibrate(raw: &[String]) -> Result<(), String> {
         }
         None => calibrator.run(&prompts, steps, 7.5).map_err(|e| format!("{e:#}"))?,
     };
-    std::fs::write(dir.join("calibration.json"), rep.to_json().to_string())
-        .map_err(|e| e.to_string())?;
     println!("D* = {} / {steps}, outliers = {:?}", rep.d_star, rep.outliers);
-    println!("wrote {}/calibration.json", dir.display());
+    // calibration.json sits in the artifacts dir and is consumed by the
+    // xla tooling (bench_fig4) with no backend tag — sim-measured shift
+    // scores must not masquerade as measurements of the real model, so
+    // only the xla backend persists the file.
+    if coord.backend() == BackendKind::Xla {
+        std::fs::write(dir.join("calibration.json"), rep.to_json().to_string())
+            .map_err(|e| e.to_string())?;
+        println!("wrote {}/calibration.json", dir.display());
+    } else {
+        println!("(sim backend: calibration.json not written — sim measurements stay out of the artifacts dir)");
+    }
     Ok(())
 }
 
@@ -456,6 +489,7 @@ fn cmd_quant(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "policy", help: "baseline | ac | ad | optimized", takes_value: true, default: Some("optimized") },
         OptSpec { name: "no-pin", help: "disable the fragile-layer sensitivity pass", takes_value: false, default: None },
         OptSpec { name: "artifacts", help: "artifacts dir (calibrate measures real trajectories when present)", takes_value: true, default: None },
+        backend_opt(),
         OptSpec { name: "cache-dir", help: "persistent cache dir (profiles cached in the quant namespace)", takes_value: true, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
@@ -687,6 +721,7 @@ fn cmd_simulate(raw: &[String]) -> Result<(), String> {
 fn cmd_info(raw: &[String]) -> Result<(), String> {
     let spec = [
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
+        backend_opt(),
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -695,8 +730,23 @@ fn cmd_info(raw: &[String]) -> Result<(), String> {
         return Ok(());
     }
     let dir = artifacts_dir(&args);
-    need_artifacts(&dir)?;
-    let manifest = sd_acc::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?;
+    let kind = BackendKind::resolve(args.get("backend"))
+        .map_err(|e| format!("{e:#}"))?
+        .for_dir(&dir);
+    let manifest = match kind {
+        BackendKind::Sim => {
+            use sd_acc::runtime::ExecBackend;
+            println!("backend: sim (synthetic manifest when no artifacts exist)");
+            sd_acc::runtime::SimBackend::open(&dir)
+                .map_err(|e| format!("{e:#}"))?
+                .manifest()
+                .clone()
+        }
+        _ => {
+            need_artifacts(&dir)?;
+            sd_acc::runtime::Manifest::load(&dir).map_err(|e| format!("{e:#}"))?
+        }
+    };
     println!("artifacts dir : {}", dir.display());
     println!("model         : sd-tiny latent {}x{}x{}, ctx {}x{}, max_cut {}",
         manifest.model.latent_h, manifest.model.latent_w, manifest.model.latent_c,

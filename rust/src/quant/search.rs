@@ -220,9 +220,36 @@ pub struct QuantSearcher<'a> {
 }
 
 impl<'a> QuantSearcher<'a> {
+    /// Validation requests for one scheme: one per prompt, fixed seeds.
+    /// All share a batch key (same steps/sampler/plan/guidance/quant),
+    /// so `Coordinator::generate_many` can lane-batch them — the same
+    /// structure `pas::search` uses for plan validation.
+    fn validation_requests(
+        prompts: &[String],
+        steps: usize,
+        quant: Option<QuantScheme>,
+    ) -> Vec<GenRequest> {
+        prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut r = GenRequest::new(p, 7000 + i as u64);
+                r.steps = steps;
+                r.quant = quant;
+                r
+            })
+            .collect()
+    }
+
     /// Fill `measured_psnr_db` on up to `max_validate` top candidates and
     /// return the ones meeting `min_measured_db`. See the type-level note:
     /// the measurement is activation-axis only.
+    ///
+    /// The validation prompts of each scheme run lane-batched through
+    /// [`Coordinator::generate_many`] (ROADMAP PR-3 follow-up: one
+    /// batched execution per scheme instead of one per prompt);
+    /// [`QuantSearcher::validate_serial`] keeps the request-at-a-time
+    /// reference path and a parity test holds the two equal.
     pub fn validate(
         &self,
         cands: &mut [QuantCandidate],
@@ -231,26 +258,50 @@ impl<'a> QuantSearcher<'a> {
         min_measured_db: f64,
         max_validate: usize,
     ) -> Result<Vec<QuantCandidate>> {
-        let refs: Vec<_> = prompts
-            .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                let mut r = GenRequest::new(p, 7000 + i as u64);
-                r.steps = steps;
-                self.coord.generate_one(&r)
-            })
-            .collect::<Result<Vec<_>>>()?;
+        self.validate_impl(cands, prompts, steps, min_measured_db, max_validate, true)
+    }
+
+    /// Request-at-a-time reference path (`generate_one` per prompt):
+    /// same seeds, same scoring — exists so tests can prove the
+    /// lane-batched path scores identically.
+    pub fn validate_serial(
+        &self,
+        cands: &mut [QuantCandidate],
+        prompts: &[String],
+        steps: usize,
+        min_measured_db: f64,
+        max_validate: usize,
+    ) -> Result<Vec<QuantCandidate>> {
+        self.validate_impl(cands, prompts, steps, min_measured_db, max_validate, false)
+    }
+
+    fn validate_impl(
+        &self,
+        cands: &mut [QuantCandidate],
+        prompts: &[String],
+        steps: usize,
+        min_measured_db: f64,
+        max_validate: usize,
+        batched: bool,
+    ) -> Result<Vec<QuantCandidate>> {
+        let run = |quant: Option<QuantScheme>| -> Result<Vec<crate::coordinator::GenResult>> {
+            let reqs = Self::validation_requests(prompts, steps, quant);
+            if batched {
+                self.coord.generate_many(&reqs)
+            } else {
+                reqs.iter().map(|r| self.coord.generate_one(r)).collect()
+            }
+        };
+        let refs = run(None)?;
 
         let mut passed = Vec::new();
         for cand in cands.iter_mut().take(max_validate) {
-            let mut psnrs = Vec::new();
-            for (i, p) in prompts.iter().enumerate() {
-                let mut r = GenRequest::new(p, 7000 + i as u64);
-                r.steps = steps;
-                r.quant = Some(cand.scheme);
-                let out = self.coord.generate_one(&r)?;
-                psnrs.push(quality::latent_psnr(&out.latent, &refs[i].latent));
-            }
+            let outs = run(Some(cand.scheme))?;
+            let psnrs: Vec<f64> = outs
+                .iter()
+                .zip(&refs)
+                .map(|(out, r)| quality::latent_psnr(&out.latent, &r.latent))
+                .collect();
             cand.measured_psnr_db = Some(stats::mean(&psnrs));
             if cand.measured_psnr_db.unwrap() >= min_measured_db {
                 passed.push(cand.clone());

@@ -1,0 +1,243 @@
+//! The execution-backend seam: one artifact contract, many executors.
+//!
+//! [`ExecBackend`] is the object-safe trait every executor implements:
+//! `manifest()` exposes the artifact contract (shapes, batch sizes,
+//! schedule, vocabulary), `execute(name, inputs)` runs one artifact, and
+//! `preload(names)` warms whatever per-artifact state is expensive to
+//! build (compiles for PJRT, nothing for the simulator). Implementations
+//! need not be `Send` — the PJRT wrappers are `Rc`-based — because every
+//! backend lives on the [`RuntimeService`](super::RuntimeService) owner
+//! thread and the rest of the system only ever talks to the thread-safe
+//! [`RuntimeHandle`](super::RuntimeHandle).
+//!
+//! Two backends exist:
+//!
+//! - [`Runtime`](super::Runtime) (`BackendKind::Xla`): the PJRT/xla path
+//!   over AOT HLO artifacts, unchanged semantics.
+//! - [`SimBackend`](super::sim::SimBackend) (`BackendKind::Sim`): a
+//!   deterministic pure-Rust executor that needs no artifacts at all —
+//!   it shape-checks against the same [`ArtifactMeta`] rules (via
+//!   [`check_inputs`], so error wording is identical byte for byte) and
+//!   produces seeded, bit-reproducible outputs.
+//!
+//! **Resolution order** (`flag > env > auto`): an explicit `--backend`
+//! flag wins, else the `SD_ACC_BACKEND` environment variable, else
+//! `Auto` — which picks `Xla` when `<dir>/manifest.json` exists and
+//! `Sim` otherwise. The resolved kind is carried on the handle so cache
+//! keys can be backend-tagged (sim latents must never satisfy an xla
+//! lookup — see `cache::namespaces::request_key_for`).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::{Input, Tensor};
+
+/// Environment variable consulted by [`BackendKind::resolve`].
+pub const BACKEND_ENV: &str = "SD_ACC_BACKEND";
+
+/// Which executor runs the artifacts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BackendKind {
+    /// Decide from the artifacts directory: `Xla` when
+    /// `manifest.json` exists, `Sim` otherwise.
+    #[default]
+    Auto,
+    /// PJRT/xla over AOT HLO artifacts.
+    Xla,
+    /// Deterministic pure-Rust simulator; no artifacts required.
+    Sim,
+}
+
+impl BackendKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Xla => "xla",
+            BackendKind::Sim => "sim",
+        }
+    }
+
+    fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "xla" => Ok(BackendKind::Xla),
+            "sim" => Ok(BackendKind::Sim),
+            other => bail!("unknown backend '{other}' (auto|xla|sim)"),
+        }
+    }
+
+    /// The resolution order: explicit flag > `SD_ACC_BACKEND` env > Auto.
+    /// The returned kind may still be `Auto`; [`BackendKind::for_dir`]
+    /// grounds it against an artifacts directory.
+    pub fn resolve(flag: Option<&str>) -> Result<BackendKind> {
+        Self::resolve_parts(flag, std::env::var(BACKEND_ENV).ok().as_deref())
+    }
+
+    /// Pure half of [`BackendKind::resolve`] (unit-testable without
+    /// mutating process environment).
+    pub fn resolve_parts(flag: Option<&str>, env: Option<&str>) -> Result<BackendKind> {
+        match (flag, env) {
+            (Some(f), _) => Self::parse(f),
+            (None, Some(e)) => Self::parse(e),
+            (None, None) => Ok(BackendKind::Auto),
+        }
+    }
+
+    /// Ground `Auto` against an artifacts directory: artifacts present
+    /// means the real runtime, absent means the simulator. `Xla`/`Sim`
+    /// pass through untouched.
+    pub fn for_dir(self, dir: &Path) -> BackendKind {
+        match self {
+            BackendKind::Auto => {
+                if dir.join("manifest.json").exists() {
+                    BackendKind::Xla
+                } else {
+                    BackendKind::Sim
+                }
+            }
+            concrete => concrete,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendKind> {
+        BackendKind::parse(s)
+    }
+}
+
+/// An artifact executor. Object-safe; lives on the runtime owner thread
+/// (implementations may be `!Send`, like the PJRT wrappers).
+pub trait ExecBackend {
+    /// The resolved kind (never `Auto`).
+    fn kind(&self) -> BackendKind;
+
+    /// The artifact contract this backend executes against.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute one artifact over non-weight inputs, returning the output
+    /// tensors. Inputs are shape-checked against [`ArtifactMeta`] with
+    /// the shared [`check_inputs`] rules.
+    fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>>;
+
+    /// Warm per-artifact state ahead of time (PJRT compiles; a no-op
+    /// validation pass for the simulator).
+    fn preload(&self, names: &[String]) -> Result<()>;
+}
+
+/// THE input validation rule, shared by every backend so a shape bug
+/// reports the same error bytes no matter which executor caught it
+/// (the backend-parity suite asserts the wording).
+pub fn check_inputs(meta: &ArtifactMeta, inputs: &[Input]) -> Result<()> {
+    if inputs.len() != meta.inputs.len() {
+        bail!(
+            "artifact {}: expected {} inputs, got {}",
+            meta.name,
+            meta.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (inp, (shape, _))) in inputs.iter().zip(&meta.inputs).enumerate() {
+        if inp.dims() != &shape[..] {
+            bail!(
+                "artifact {} input {i}: shape {:?} != manifest {:?}",
+                meta.name,
+                inp.dims(),
+                shape
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_and_roundtrips() {
+        for kind in [BackendKind::Auto, BackendKind::Xla, BackendKind::Sim] {
+            assert_eq!(kind.as_str().parse::<BackendKind>().unwrap(), kind);
+            assert_eq!(kind.to_string(), kind.as_str());
+        }
+        assert!("pjrt".parse::<BackendKind>().is_err());
+        assert!("SIM".parse::<BackendKind>().is_err(), "strict lower-case vocabulary");
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+
+    #[test]
+    fn resolution_order_is_flag_then_env_then_auto() {
+        // Flag wins over env.
+        assert_eq!(
+            BackendKind::resolve_parts(Some("sim"), Some("xla")).unwrap(),
+            BackendKind::Sim
+        );
+        // Env wins over nothing.
+        assert_eq!(
+            BackendKind::resolve_parts(None, Some("xla")).unwrap(),
+            BackendKind::Xla
+        );
+        // Neither set: Auto (grounded later by artifact presence).
+        assert_eq!(BackendKind::resolve_parts(None, None).unwrap(), BackendKind::Auto);
+        // A bad flag is an error even when the env is valid.
+        assert!(BackendKind::resolve_parts(Some("bogus"), Some("sim")).is_err());
+        // A bad env is an error when no flag overrides it.
+        assert!(BackendKind::resolve_parts(None, Some("bogus")).is_err());
+    }
+
+    #[test]
+    fn auto_grounds_on_artifact_presence() {
+        let dir = std::env::temp_dir().join(format!("sdacc_backend_auto_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(BackendKind::Auto.for_dir(&dir), BackendKind::Sim, "no artifacts -> sim");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        assert_eq!(BackendKind::Auto.for_dir(&dir), BackendKind::Xla, "artifacts -> xla");
+        // Concrete kinds ignore the directory.
+        assert_eq!(BackendKind::Sim.for_dir(&dir), BackendKind::Sim);
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(BackendKind::Xla.for_dir(&dir), BackendKind::Xla);
+    }
+
+    #[test]
+    fn check_inputs_reports_the_canonical_wording() {
+        let meta = ArtifactMeta {
+            name: "unet_full_b1".into(),
+            file: String::new(),
+            n_params: 0,
+            inputs: vec![(vec![1, 256, 4], false), (vec![1], false)],
+        };
+        let bad_count = check_inputs(&meta, &[]).unwrap_err();
+        assert_eq!(bad_count.to_string(), "artifact unet_full_b1: expected 2 inputs, got 0");
+        let bad_shape = check_inputs(
+            &meta,
+            &[
+                Input::F32(Tensor::zeros(vec![1, 3, 3])),
+                Input::F32(Tensor::zeros(vec![1])),
+            ],
+        )
+        .unwrap_err();
+        assert_eq!(
+            bad_shape.to_string(),
+            "artifact unet_full_b1 input 0: shape [1, 3, 3] != manifest [1, 256, 4]"
+        );
+        assert!(check_inputs(
+            &meta,
+            &[
+                Input::F32(Tensor::zeros(vec![1, 256, 4])),
+                Input::F32(Tensor::zeros(vec![1])),
+            ],
+        )
+        .is_ok());
+    }
+}

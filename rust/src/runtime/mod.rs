@@ -1,13 +1,21 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Execution runtime: the pluggable backend seam plus the PJRT/xla
+//! reference implementation.
 //!
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `client.compile` -> `execute` (pattern from /opt/xla-example/load_hlo).
-//! Weights are loaded once per weight set from `weights_*.bin` (raw f32 in
-//! jax lowering order, per the manifest table) and prepended to every
-//! execute call, so python never runs at request time.
+//! The artifact contract (manifest shapes + `execute(name, inputs)`) is
+//! the [`backend::ExecBackend`] trait; [`Runtime`] is its PJRT/xla
+//! implementation (`HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `client.compile` -> `execute`,
+//! pattern from /opt/xla-example/load_hlo; weights are loaded once per
+//! weight set from `weights_*.bin` and prepended to every execute call,
+//! so python never runs at request time) and [`sim::SimBackend`] is the
+//! deterministic pure-Rust one that needs no artifacts. Which backend a
+//! [`RuntimeService`] starts is a [`BackendKind`] — resolution order:
+//! explicit flag > `SD_ACC_BACKEND` env > artifacts-present auto-detect.
 
+pub mod backend;
 pub mod manifest;
 pub mod service;
+pub mod sim;
 pub mod tensor;
 
 use std::collections::HashMap;
@@ -16,8 +24,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+pub use backend::{BackendKind, ExecBackend};
 pub use manifest::{ArtifactMeta, Manifest, ModelMeta};
 pub use service::{RuntimeHandle, RuntimeService};
+pub use sim::SimBackend;
 pub use tensor::{Tensor, TensorI32};
 
 /// An input value for an artifact execution.
@@ -46,7 +56,8 @@ impl Input {
         }
     }
 
-    fn dims(&self) -> &[usize] {
+    /// Shape of the carried tensor (used by the shared input check).
+    pub fn dims(&self) -> &[usize] {
         match self {
             Input::F32(t) => &t.dims,
             Input::F32Ref(t) => &t.dims,
@@ -72,24 +83,9 @@ impl LoadedArtifact {
     /// Execute with the given non-weight inputs; returns output tensors
     /// (the lowered computation always returns a tuple).
     pub fn execute(&self, inputs: &[Input]) -> Result<Vec<Tensor>> {
-        if inputs.len() != self.meta.inputs.len() {
-            bail!(
-                "artifact {}: expected {} inputs, got {}",
-                self.meta.name,
-                self.meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (inp, (shape, _))) in inputs.iter().zip(&self.meta.inputs).enumerate() {
-            if inp.dims() != &shape[..] {
-                bail!(
-                    "artifact {} input {i}: shape {:?} != manifest {:?}",
-                    self.meta.name,
-                    inp.dims(),
-                    shape
-                );
-            }
-        }
+        // Shared validation rule (backend::check_inputs) so the sim
+        // backend reports byte-identical error wording.
+        backend::check_inputs(&self.meta, inputs)?;
         // Weights are borrowed from the shared cache; only the (small)
         // per-call inputs are materialised as fresh literals.
         let input_lits: Vec<xla::Literal> =
@@ -213,6 +209,11 @@ impl Runtime {
         self.load(name)?.execute(inputs)
     }
 
+    /// Warm the executable cache (compiles are the slow part).
+    pub fn preload(&self, names: &[String]) -> Result<()> {
+        names.iter().try_for_each(|n| self.load(n).map(|_| ()))
+    }
+
     /// Artifact name helpers matching aot.py's naming scheme.
     pub fn unet_full(b: usize) -> String {
         format!("unet_full_b{b}")
@@ -232,6 +233,27 @@ impl Runtime {
 
     pub fn vae_decoder(b: usize) -> String {
         format!("vae_decoder_b{b}")
+    }
+}
+
+/// The PJRT/xla path is one [`ExecBackend`] among several; the owner
+/// thread ([`RuntimeService`]) dispatches through the trait object, so
+/// adding an executor never touches the coordinator or serving layers.
+impl ExecBackend for Runtime {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Xla
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        Runtime::execute(self, name, inputs)
+    }
+
+    fn preload(&self, names: &[String]) -> Result<()> {
+        Runtime::preload(self, names)
     }
 }
 

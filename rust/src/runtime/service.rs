@@ -1,12 +1,22 @@
-//! Runtime service: a dedicated thread owning the PJRT client.
+//! Runtime service: a dedicated thread owning one [`ExecBackend`].
 //!
 //! The `xla` crate's client/executable/literal wrappers are `!Send`
-//! (Rc + raw pointers), so all PJRT work is serialised onto one owner
+//! (Rc + raw pointers), so all backend work is serialised onto one owner
 //! thread; the rest of the system talks to it through a cloneable,
-//! thread-safe [`RuntimeHandle`]. PJRT-CPU parallelises *inside* an
-//! execution (Eigen pool), so serialising submissions costs little and
-//! batching recovers the rest — the measured trade-off is recorded in
-//! EXPERIMENTS.md §Perf.
+//! thread-safe [`RuntimeHandle`]. The same pattern hosts the pure-Rust
+//! [`SimBackend`](super::SimBackend) — it does not need the isolation,
+//! but sharing the owner thread means the coordinator, server, PAS
+//! search and benches are completely backend-agnostic. PJRT-CPU
+//! parallelises *inside* an execution (Eigen pool), so serialising
+//! submissions costs little and batching recovers the rest — the
+//! measured trade-off is recorded in EXPERIMENTS.md §Perf.
+//!
+//! Construction goes through [`RuntimeService::start_with`] with a
+//! [`BackendKind`]; the one-argument [`RuntimeService::start`] resolves
+//! the kind from the environment (`SD_ACC_BACKEND`) and the artifacts
+//! directory (`Auto`: xla when `manifest.json` exists, sim otherwise) —
+//! THE construction path every caller (CLI, server, tests, benches,
+//! examples) shares instead of ten hand-rolled copies.
 
 use std::path::Path;
 use std::sync::{mpsc, Arc, Mutex};
@@ -14,6 +24,8 @@ use std::thread;
 
 use anyhow::{anyhow, Result};
 
+use super::backend::{BackendKind, ExecBackend};
+use super::sim::SimBackend;
 use super::{Input, Manifest, Runtime, Tensor};
 
 enum Cmd {
@@ -22,7 +34,7 @@ enum Cmd {
         inputs: Vec<Input>,
         resp: mpsc::Sender<Result<Vec<Tensor>>>,
     },
-    /// Compile artifacts ahead of time (warm the executable cache).
+    /// Warm per-artifact state ahead of time (compiles on xla).
     Preload {
         names: Vec<String>,
         resp: mpsc::Sender<Result<()>>,
@@ -35,11 +47,19 @@ enum Cmd {
 pub struct RuntimeHandle {
     tx: Arc<Mutex<mpsc::Sender<Cmd>>>,
     manifest: Arc<Manifest>,
+    backend: BackendKind,
 }
 
 impl RuntimeHandle {
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// The resolved executor kind behind this handle (never `Auto`).
+    /// Cache key derivation reads this so sim latents are tagged apart
+    /// from xla latents.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     /// Execute an artifact on the runtime thread (blocking).
@@ -53,7 +73,8 @@ impl RuntimeHandle {
         rx.recv().map_err(|_| anyhow!("runtime thread dropped the request"))?
     }
 
-    /// Warm the executable cache (compiles are the slow part).
+    /// Warm the backend's per-artifact state (compiles on xla; artifact
+    /// name validation on sim).
     pub fn preload(&self, names: &[String]) -> Result<()> {
         let (resp, rx) = mpsc::channel();
         self.tx
@@ -72,19 +93,39 @@ pub struct RuntimeService {
 }
 
 impl RuntimeService {
-    /// Start the owner thread over an artifacts directory.
+    /// Start the owner thread with the default resolution order:
+    /// `SD_ACC_BACKEND` env override, else `Auto` (xla over real
+    /// artifacts when `<dir>/manifest.json` exists, the deterministic
+    /// sim backend otherwise).
     pub fn start(dir: &Path) -> Result<RuntimeService> {
-        let manifest = Arc::new(Manifest::load(dir)?);
+        Self::start_with(BackendKind::resolve(None)?, dir)
+    }
+
+    /// Start the owner thread over an explicit backend selection.
+    /// `Auto` is grounded against `dir` (see [`BackendKind::for_dir`]);
+    /// the backend itself is constructed *on* the owner thread, because
+    /// the xla client is `!Send`.
+    pub fn start_with(kind: BackendKind, dir: &Path) -> Result<RuntimeService> {
+        let kind = kind.for_dir(dir);
         let (tx, rx) = mpsc::channel::<Cmd>();
         let dir = dir.to_path_buf();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Arc<Manifest>>>();
         let thread = thread::Builder::new()
             .name("sd-acc-runtime".into())
             .spawn(move || {
-                let rt = match Runtime::new(&dir) {
-                    Ok(rt) => {
-                        let _ = ready_tx.send(Ok(()));
-                        rt
+                let built: Result<Box<dyn ExecBackend>> = match kind {
+                    BackendKind::Xla => {
+                        Runtime::new(&dir).map(|rt| Box::new(rt) as Box<dyn ExecBackend>)
+                    }
+                    BackendKind::Sim => {
+                        SimBackend::open(&dir).map(|s| Box::new(s) as Box<dyn ExecBackend>)
+                    }
+                    BackendKind::Auto => unreachable!("for_dir grounds Auto"),
+                };
+                let backend = match built {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(Arc::new(b.manifest().clone())));
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -94,7 +135,7 @@ impl RuntimeService {
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         Cmd::Execute { name, inputs, resp } => {
-                            let result = rt.execute(&name, &inputs);
+                            let result = backend.execute(&name, &inputs);
                             // Release our input handles *before* responding:
                             // inputs are Arc-backed tensors shared with the
                             // caller, and the coordinator's in-place step
@@ -106,25 +147,29 @@ impl RuntimeService {
                             let _ = resp.send(result);
                         }
                         Cmd::Preload { names, resp } => {
-                            let r = names.iter().try_for_each(|n| rt.load(n).map(|_| ()));
-                            let _ = resp.send(r);
+                            let _ = resp.send(backend.preload(&names));
                         }
                         Cmd::Stop => break,
                     }
                 }
             })
             .expect("spawn runtime thread");
-        ready_rx
+        let manifest = ready_rx
             .recv()
             .map_err(|_| anyhow!("runtime thread died during init"))??;
         Ok(RuntimeService {
-            handle: RuntimeHandle { tx: Arc::new(Mutex::new(tx)), manifest },
+            handle: RuntimeHandle { tx: Arc::new(Mutex::new(tx)), manifest, backend: kind },
             thread: Some(thread),
         })
     }
 
     pub fn handle(&self) -> RuntimeHandle {
         self.handle.clone()
+    }
+
+    /// The resolved executor kind this service runs (never `Auto`).
+    pub fn backend(&self) -> BackendKind {
+        self.handle.backend
     }
 }
 
@@ -134,5 +179,39 @@ impl Drop for RuntimeService {
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_artifacts_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sdacc_svc_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn sim_service_starts_without_artifacts_and_executes() {
+        let dir = no_artifacts_dir("sim");
+        let svc = RuntimeService::start_with(BackendKind::Sim, &dir).unwrap();
+        assert_eq!(svc.backend(), BackendKind::Sim);
+        let h = svc.handle();
+        assert_eq!(h.backend(), BackendKind::Sim);
+        let m = h.manifest().model.clone();
+        let toks =
+            crate::runtime::TensorI32::new(vec![1, m.ctx_len], vec![1; m.ctx_len]).unwrap();
+        let out = h.execute("text_encoder_b1", &[Input::I32(toks)]).unwrap();
+        assert_eq!(out[0].dims, vec![1, m.ctx_len, m.ctx_dim]);
+        h.preload(&["unet_full_b1".to_string()]).unwrap();
+        assert!(h.execute("unet_full_b99", &[]).is_err());
+    }
+
+    #[test]
+    fn auto_resolves_to_sim_when_no_artifacts_exist() {
+        let dir = no_artifacts_dir("auto");
+        let svc = RuntimeService::start_with(BackendKind::Auto, &dir).unwrap();
+        assert_eq!(svc.backend(), BackendKind::Sim, "no manifest.json -> sim");
     }
 }

@@ -1,0 +1,677 @@
+//! Deterministic pure-Rust execution backend: no PJRT, no artifacts.
+//!
+//! [`SimBackend`] implements [`ExecBackend`](super::backend::ExecBackend)
+//! over the same artifact contract as the xla path: it loads
+//! `manifest.json` when one exists, otherwise synthesizes a
+//! self-consistent manifest ([`synthetic_manifest`]) so the whole stack —
+//! coordinator, PAS search, quantisation, serving — runs end to end in a
+//! container with no compiled artifacts at all.
+//!
+//! ## Determinism rule
+//!
+//! Every execution is a **pure function of (artifact name, input
+//! bytes)**: per-element analytic scalar kernels (tanh/sin families)
+//! plus a PCG32 texture stream seeded from the FNV-1a digest of the
+//! lane's inputs and the artifact family. No wall clock, no global
+//! state, no cross-lane coupling — so
+//!
+//! - repeated runs are bit-identical (the request cache's replay
+//!   guarantee holds),
+//! - lane `j` of a batch-2 execution is bit-identical to the same
+//!   request at batch 1 (lockstep lanes are independent), and
+//! - `generate` vs `generate_batch` produce the same latents bit for
+//!   bit, because the scheduler half already guarantees
+//!   `step`/`step_mut` bit-exactness.
+//!
+//! ## Model behaviour (why PAS tests hold on the simulator)
+//!
+//! The U-Net stand-in splits its eps prediction into a *shallow* part
+//! (recomputed every step from the current latent/context/guidance) and
+//! a *deep* part that full steps write into the feature-cache outputs
+//! and partial steps read back instead of recomputing. A partial step
+//! with a **fresh** cache therefore reproduces the full step bit for
+//! bit, while a **stale** cache injects a small, smoothly-growing error
+//! (the deep term drifts slowly with the timestep) — exactly the
+//! approximation structure phase-aware sampling exploits, so
+//! PAS-close-to-full and monotone-in-staleness assertions are meaningful
+//! here, not vacuous. Full steps also do ~25x the per-element work of
+//! partial steps (they fill every cache level), so the wall-clock
+//! cheapness of partial steps is real too.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cache::key::{fnv1a, fnv1a_update, FNV_OFFSET};
+use crate::scheduler::NoiseSchedule;
+use crate::util::rng::Pcg32;
+
+use super::backend::{check_inputs, BackendKind, ExecBackend};
+use super::manifest::{ArtifactMeta, Manifest, ModelMeta};
+use super::{Input, Tensor};
+
+// Kernel magnitudes. `DEEP_*` are deliberately small and slowly varying
+// in the timestep so stale-cache (partial-step) error stays a gentle,
+// monotone function of staleness.
+const SHALLOW_GAIN: f32 = 0.6;
+const CTX_GAIN: f32 = 0.22;
+const DEEP_GAIN: f32 = 0.12;
+const DEEP_T_RATE: f32 = 0.9;
+const NOISE_GAIN: f32 = 0.03;
+
+/// Parsed artifact identity (aot.py's naming scheme).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ArtifactKind {
+    TextEncoder { b: usize },
+    UnetFull { b: usize },
+    UnetPartial { l: usize, b: usize },
+    UnetCalib { b: usize },
+    VaeDecoder { b: usize },
+}
+
+fn parse_name(name: &str) -> Option<ArtifactKind> {
+    let num = |s: &str| s.parse::<usize>().ok();
+    if let Some(rest) = name.strip_prefix("text_encoder_b") {
+        return Some(ArtifactKind::TextEncoder { b: num(rest)? });
+    }
+    if let Some(rest) = name.strip_prefix("unet_full_b") {
+        return Some(ArtifactKind::UnetFull { b: num(rest)? });
+    }
+    if let Some(rest) = name.strip_prefix("unet_calib_b") {
+        return Some(ArtifactKind::UnetCalib { b: num(rest)? });
+    }
+    if let Some(rest) = name.strip_prefix("vae_decoder_b") {
+        return Some(ArtifactKind::VaeDecoder { b: num(rest)? });
+    }
+    if let Some(rest) = name.strip_prefix("unet_partial_l") {
+        let (l, b) = rest.split_once("_b")?;
+        return Some(ArtifactKind::UnetPartial { l: num(l)?, b: num(b)? });
+    }
+    None
+}
+
+/// Synthesize a self-consistent AOT manifest for the simulator: sd-tiny
+/// shapes (16x16x4 latent, 64x64 image, 3 cut levels), compiled batch
+/// sizes {1, 2}, the SD scaled-linear noise schedule, and a closed
+/// colour/shape/coordinate vocabulary. The digest is a fixed constant —
+/// the synthetic contract only changes when this code changes, at which
+/// point `SIM_MANIFEST_SALT` must be bumped so caches flush.
+pub fn synthetic_manifest(dir: &Path) -> Manifest {
+    const SIM_MANIFEST_SALT: &[u8] = b"sd-acc sim synthetic manifest v1";
+    let model = ModelMeta {
+        latent_h: 16,
+        latent_w: 16,
+        latent_c: 4,
+        channels: vec![32, 64, 128, 128],
+        ctx_len: 8,
+        ctx_dim: 64,
+        img_h: 64,
+        img_w: 64,
+        max_cut: 3,
+        train_steps: 1000,
+        guidance: 7.5,
+        seed: 42,
+    };
+    let mut vocab = BTreeMap::new();
+    vocab.insert("<pad>".to_string(), 0);
+    let mut next_id = 1i32;
+    let mut add = |w: String, vocab: &mut BTreeMap<String, i32>| {
+        vocab.insert(w, next_id);
+        next_id += 1;
+    };
+    for w in ["red", "green", "blue", "yellow", "cyan", "magenta", "circle", "square", "stripe"] {
+        add(w.to_string(), &mut vocab);
+    }
+    for i in 0..16 {
+        add(format!("x{i}"), &mut vocab);
+        add(format!("y{i}"), &mut vocab);
+    }
+    let alpha_bar = NoiseSchedule::scaled_linear(model.train_steps, 0.00085, 0.012).alpha_bar;
+
+    let (l, c) = (model.latent_l(), model.latent_c);
+    let (cl, cd) = (model.ctx_len, model.ctx_dim);
+    let c0 = model.channels[0];
+    let mut artifacts = BTreeMap::new();
+    let mut art = |name: String, inputs: Vec<(Vec<usize>, bool)>| {
+        artifacts
+            .insert(name.clone(), ArtifactMeta { name, file: String::new(), n_params: 0, inputs });
+    };
+    for b in [1usize, 2] {
+        let unet_core = vec![
+            (vec![b, l, c], false),   // latent
+            (vec![b], false),         // timestep
+            (vec![b, cl, cd], false), // text context
+            (vec![], false),          // guidance scalar
+        ];
+        art(format!("text_encoder_b{b}"), vec![(vec![b, cl], true)]);
+        art(format!("unet_full_b{b}"), unet_core.clone());
+        art(format!("unet_calib_b{b}"), unet_core.clone());
+        for cut in 1..=model.max_cut {
+            let mut inputs = unet_core.clone();
+            inputs.push((vec![2 * b, l, c0], false)); // feature cache
+            art(format!("unet_partial_l{cut}_b{b}"), inputs);
+        }
+        art(format!("vae_decoder_b{b}"), vec![(vec![b, l, c], false)]);
+    }
+
+    Manifest {
+        dir: dir.to_path_buf(),
+        hash: fnv1a(SIM_MANIFEST_SALT),
+        model,
+        batch_sizes: vec![1, 2],
+        vocab,
+        alpha_bar,
+        weights: BTreeMap::new(),
+        artifacts,
+    }
+}
+
+/// The deterministic pure-Rust backend.
+pub struct SimBackend {
+    manifest: Manifest,
+}
+
+impl SimBackend {
+    /// Open over an artifacts directory: a real `manifest.json` is
+    /// honoured (same shapes and schedule as the xla path would use);
+    /// absent one, the synthetic manifest applies — no files needed.
+    pub fn open(dir: &Path) -> Result<SimBackend> {
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(dir)?
+        } else {
+            synthetic_manifest(dir)
+        };
+        Ok(SimBackend { manifest })
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> SimBackend {
+        SimBackend { manifest }
+    }
+
+    fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Declared shape of the feature-cache input that `unet_partial_l{l}`
+    /// expects at this batch size (the cache tensors `unet_full` must
+    /// emit); falls back to the synthetic convention when a (real)
+    /// manifest does not describe the partial artifact.
+    fn cache_dims(&self, l: usize, b: usize) -> Vec<usize> {
+        let m = &self.manifest.model;
+        self.manifest
+            .artifacts
+            .get(&format!("unet_partial_l{l}_b{b}"))
+            .and_then(|meta| meta.inputs.last().map(|(shape, _)| shape.clone()))
+            .unwrap_or_else(|| vec![2 * b, m.latent_l(), m.channels[0]])
+    }
+}
+
+// -------------------------------------------------------------- kernels
+
+/// FNV-1a over the exact little-endian bytes of a float stream
+/// (incremental — the one algorithm from `cache::key`, not a copy).
+fn digest_f32s(state: u64, xs: &[f32]) -> u64 {
+    xs.iter().fold(state, |h, x| fnv1a_update(h, &x.to_bits().to_le_bytes()))
+}
+
+/// Per-lane scalar summaries of the U-Net inputs.
+struct LaneCtx {
+    /// Normalised timestep in (0, 1].
+    tn: f32,
+    /// Mean of the context lane (conditioning signal).
+    c_mean: f32,
+    /// Bounded guidance effect.
+    g_eff: f32,
+    /// Mean |latent| — the deep term's data dependence.
+    m: f32,
+    /// Digest of (latent lane, t, ctx lane, g): seeds the texture RNG.
+    digest: u64,
+}
+
+fn lane_ctx(lat: &[f32], t: f32, ctx: &[f32], g: f32, train_steps: usize) -> LaneCtx {
+    let c_mean = ctx.iter().sum::<f32>() / ctx.len().max(1) as f32;
+    let m = lat.iter().map(|x| x.abs()).sum::<f32>() / lat.len().max(1) as f32;
+    let mut digest = digest_f32s(FNV_OFFSET, lat);
+    digest = digest_f32s(digest, &[t]);
+    digest = digest_f32s(digest, ctx);
+    digest = digest_f32s(digest, &[g]);
+    LaneCtx {
+        tn: t / train_steps.max(1) as f32,
+        c_mean,
+        g_eff: (0.1 * g).tanh(),
+        m,
+        digest,
+    }
+}
+
+/// The deep ("cached") eps contribution: small, smooth in the timestep,
+/// mildly data-dependent. Full steps compute it and publish it through
+/// the feature caches; partial steps replay the cached values, so cache
+/// staleness — not randomness — is the PAS approximation error.
+#[inline]
+fn deep_term(lc: &LaneCtx, idx: usize) -> f32 {
+    DEEP_GAIN * (DEEP_T_RATE * lc.tn + 0.05 * idx as f32).sin() * (0.7 + 0.3 * lc.m.tanh())
+}
+
+/// One lane of eps: shallow + context + deep + seeded texture. `deep`
+/// lets the partial path substitute cached values element by element.
+fn eps_lane(lat: &[f32], lc: &LaneCtx, latent_c: usize, deep: impl Fn(usize) -> f32) -> Vec<f32> {
+    let mut rng = Pcg32::new(lc.digest, fnv1a(b"unet"));
+    lat.iter()
+        .enumerate()
+        .map(|(idx, &x)| {
+            let p = idx / latent_c;
+            let c = idx % latent_c;
+            let ph = 0.013 * p as f32 + 1.7 * c as f32;
+            let shallow = SHALLOW_GAIN * (0.9 * x).tanh();
+            let ctxterm = CTX_GAIN * (ph + 2.2 * lc.c_mean + 0.9 * lc.g_eff).sin();
+            shallow + ctxterm + deep(idx) + NOISE_GAIN * rng.next_gaussian()
+        })
+        .collect()
+}
+
+/// Lane-major region of a stacked `[b, ...]` tensor.
+fn lane<'a>(data: &'a [f32], j: usize, b: usize) -> &'a [f32] {
+    let stride = data.len() / b.max(1);
+    &data[j * stride..(j + 1) * stride]
+}
+
+impl ExecBackend for SimBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sim
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn preload(&self, names: &[String]) -> Result<()> {
+        // Nothing to compile; still fail on unknown names like the xla
+        // path does, so typos surface at preload time on both backends.
+        names.iter().try_for_each(|n| self.meta(n).map(|_| ()))
+    }
+
+    fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        let meta = self.meta(name)?;
+        check_inputs(meta, inputs)?;
+        let kind = parse_name(name)
+            .ok_or_else(|| anyhow!("sim backend: unsupported artifact '{name}'"))?;
+        let m = &self.manifest.model;
+        let (ll, lc) = (m.latent_l(), m.latent_c);
+
+        // Borrow the f32 views of the (already shape-checked) inputs.
+        // The shape check compares dims only, so a wrong-dtype input is
+        // still reachable here — reject it like the xla lowering would.
+        fn f32_view<'a>(inputs: &'a [Input], i: usize, name: &str) -> Result<&'a [f32]> {
+            match &inputs[i] {
+                Input::F32(t) => Ok(t.data()),
+                Input::F32Ref(t) => Ok(t.data()),
+                Input::I32(_) => bail!("artifact {name} input {i}: expected f32, got i32"),
+            }
+        }
+        let f32_in = |i: usize| f32_view(inputs, i, name);
+
+        match kind {
+            ArtifactKind::TextEncoder { b } => {
+                let toks = match &inputs[0] {
+                    Input::I32(t) => &t.data,
+                    _ => bail!("artifact {name}: expected i32 token input"),
+                };
+                let mut out = Vec::with_capacity(b * m.ctx_len * m.ctx_dim);
+                for j in 0..b {
+                    for (s, &v) in toks[j * m.ctx_len..(j + 1) * m.ctx_len].iter().enumerate() {
+                        for d in 0..m.ctx_dim {
+                            let emb = 0.5 * (0.37 * (v + 1) as f32 * (d + 1) as f32).sin();
+                            let pos = 0.25 * (0.9 * s as f32 + 0.13 * d as f32).cos();
+                            out.push(emb + pos);
+                        }
+                    }
+                }
+                Ok(vec![Tensor::new(vec![b, m.ctx_len, m.ctx_dim], out)?])
+            }
+
+            ArtifactKind::UnetFull { b } | ArtifactKind::UnetCalib { b } => {
+                let (latd, td, ctxd) = (f32_in(0)?, f32_in(1)?, f32_in(2)?);
+                let g = f32_in(3)?[0];
+                let mut eps = Vec::with_capacity(b * ll * lc);
+                let mut lanes = Vec::with_capacity(b);
+                for j in 0..b {
+                    let lat = lane(latd, j, b);
+                    let lcx = lane_ctx(lat, td[j], lane(ctxd, j, b), g, m.train_steps);
+                    eps.extend(eps_lane(lat, &lcx, lc, |idx| deep_term(&lcx, idx)));
+                    lanes.push(lcx);
+                }
+                let eps = Tensor::new(vec![b, ll, lc], eps)?;
+
+                if matches!(kind, ArtifactKind::UnetCalib { .. }) {
+                    // eps + 12 up-block main-branch inputs. Blocks 1-2
+                    // keep changing across the whole trajectory (the
+                    // paper's outliers); deeper blocks freeze once the
+                    // semantics phase ends (tn < 0.55) — which is what
+                    // gives calibration its knee (D*) and outlier set.
+                    let mut outs = vec![eps];
+                    let q = 8usize;
+                    for k in 0..12usize {
+                        let mut up = Vec::with_capacity(b * ll * q);
+                        for lcx in &lanes {
+                            let active = lcx.tn > 0.55 || k < 2;
+                            let amp = if active { 1.0 } else { 0.07 };
+                            let v = amp * (7.0 * lcx.tn + 0.6 * k as f32).sin();
+                            for p in 0..ll {
+                                for qq in 0..q {
+                                    let basis =
+                                        (0.11 * p as f32 + 0.7 * qq as f32 + 0.3 * k as f32).sin();
+                                    let keel = 0.3 * (0.05 * p as f32 + 1.3 * qq as f32).cos();
+                                    up.push(v * basis + keel);
+                                }
+                            }
+                        }
+                        outs.push(Tensor::new(vec![b, ll, q], up)?);
+                    }
+                    return Ok(outs);
+                }
+
+                // unet_full: eps + one feature cache per cut level. The
+                // first latent-size slots of every lane region carry the
+                // deep eps term verbatim (what partial steps replay);
+                // the rest is deterministic feature filler.
+                let mut outs = vec![eps];
+                for l in 1..=m.max_cut {
+                    let dims = self.cache_dims(l, b);
+                    let total: usize = dims.iter().product();
+                    let region = total / b.max(1);
+                    let mut data = Vec::with_capacity(total);
+                    for lcx in &lanes {
+                        for slot in 0..region {
+                            if slot < ll * lc {
+                                data.push(deep_term(lcx, slot));
+                            } else {
+                                data.push(
+                                    0.1 * (0.05 * slot as f32 + lcx.tn + l as f32).sin(),
+                                );
+                            }
+                        }
+                    }
+                    outs.push(Tensor::new(dims, data)?);
+                }
+                Ok(outs)
+            }
+
+            ArtifactKind::UnetPartial { l: _, b } => {
+                let (latd, td, ctxd) = (f32_in(0)?, f32_in(1)?, f32_in(2)?);
+                let g = f32_in(3)?[0];
+                let cached = f32_in(4)?;
+                let mut eps = Vec::with_capacity(b * ll * lc);
+                for j in 0..b {
+                    let lat = lane(latd, j, b);
+                    let lcx = lane_ctx(lat, td[j], lane(ctxd, j, b), g, m.train_steps);
+                    let deep_cached = lane(cached, j, b);
+                    // Replay the cached deep term; recompute any tail the
+                    // cache region was too small to carry.
+                    eps.extend(eps_lane(lat, &lcx, lc, |idx| {
+                        deep_cached.get(idx).copied().unwrap_or_else(|| deep_term(&lcx, idx))
+                    }));
+                }
+                Ok(vec![Tensor::new(vec![b, ll, lc], eps)?])
+            }
+
+            ArtifactKind::VaeDecoder { b } => {
+                let latd = f32_in(0)?;
+                let hw = m.img_h * m.img_w;
+                let mut out = Vec::with_capacity(b * hw * 3);
+                for j in 0..b {
+                    let lat = lane(latd, j, b);
+                    for p in 0..hw {
+                        let q = p * ll / hw;
+                        for c in 0..3usize {
+                            let x = lat[q * lc + c % lc];
+                            let px = 0.5
+                                + 0.35 * (0.8 * x).tanh()
+                                + 0.05 * (0.009 * p as f32 + 1.1 * c as f32).sin();
+                            out.push(px);
+                        }
+                    }
+                }
+                Ok(vec![Tensor::new(vec![b, hw, 3], out)?])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorI32;
+
+    fn sim() -> SimBackend {
+        SimBackend::open(Path::new("/nonexistent/sdacc-sim-test")).unwrap()
+    }
+
+    fn unet_inputs(sim: &SimBackend, b: usize, seed: u64) -> Vec<Input> {
+        let m = &sim.manifest().model;
+        let mut rng = Pcg32::seeded(seed);
+        let lat =
+            Tensor::new(vec![b, m.latent_l(), m.latent_c], rng.gaussian_vec(b * m.latent_elems()))
+                .unwrap();
+        let ctx = Tensor::new(
+            vec![b, m.ctx_len, m.ctx_dim],
+            rng.gaussian_vec(b * m.ctx_len * m.ctx_dim),
+        )
+        .unwrap();
+        vec![
+            Input::F32(lat),
+            Input::F32(Tensor::new(vec![b], vec![500.0; b]).unwrap()),
+            Input::F32(ctx),
+            Input::F32(Tensor::scalar(7.5)),
+        ]
+    }
+
+    #[test]
+    fn synthetic_manifest_is_self_consistent() {
+        let s = sim();
+        let man = s.manifest();
+        assert_eq!(man.batch_sizes, vec![1, 2]);
+        assert_eq!(man.model.latent_l(), 256);
+        assert_eq!(man.alpha_bar.len(), man.model.train_steps);
+        assert!(man.alpha_bar.windows(2).all(|w| w[1] < w[0]), "alpha_bar decreasing");
+        // Every artifact the coordinator addresses exists for every
+        // compiled batch size.
+        for b in [1usize, 2] {
+            for name in [
+                format!("text_encoder_b{b}"),
+                format!("unet_full_b{b}"),
+                format!("unet_calib_b{b}"),
+                format!("vae_decoder_b{b}"),
+            ] {
+                assert!(man.artifacts.contains_key(&name), "{name}");
+            }
+            for l in 1..=man.model.max_cut {
+                assert!(man.artifacts.contains_key(&format!("unet_partial_l{l}_b{b}")));
+            }
+        }
+        // Tokenizer covers the closed test vocabulary.
+        assert_ne!(man.tokenize("red circle x4 y4")[0], 0);
+        // The digest is stable (cache anchoring).
+        let again = SimBackend::open(Path::new("/nonexistent/other")).unwrap();
+        assert_eq!(man.hash, again.manifest().hash);
+    }
+
+    #[test]
+    fn execution_is_a_pure_function_of_name_and_inputs() {
+        let s = sim();
+        let inputs = unet_inputs(&s, 1, 7);
+        let a = s.execute("unet_full_b1", &inputs).unwrap();
+        let b = s.execute("unet_full_b1", &inputs).unwrap();
+        assert_eq!(a.len(), 1 + s.manifest().model.max_cut);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data(), y.data(), "bit-reproducible");
+        }
+        assert!(a[0].data().iter().all(|v| v.is_finite()));
+        // Different inputs decorrelate through the digest-seeded stream.
+        let other = s.execute("unet_full_b1", &unet_inputs(&s, 1, 8)).unwrap();
+        assert_ne!(a[0].data(), other[0].data());
+    }
+
+    #[test]
+    fn batch_lanes_are_independent_and_exact() {
+        let s = sim();
+        let m = s.manifest().model.clone();
+        let b2 = unet_inputs(&s, 2, 11);
+        let out2 = s.execute("unet_full_b2", &b2).unwrap();
+        // Rebuild lane 0 as a batch-1 call.
+        let slice_lane = |i: usize, dims: Vec<usize>| {
+            let t = match &b2[i] {
+                Input::F32(t) => t,
+                _ => unreachable!(),
+            };
+            Tensor::new(dims, t.data()[..t.len() / 2].to_vec()).unwrap()
+        };
+        let b1 = vec![
+            Input::F32(slice_lane(0, vec![1, m.latent_l(), m.latent_c])),
+            Input::F32(Tensor::new(vec![1], vec![500.0]).unwrap()),
+            Input::F32(slice_lane(2, vec![1, m.ctx_len, m.ctx_dim])),
+            Input::F32(Tensor::scalar(7.5)),
+        ];
+        let out1 = s.execute("unet_full_b1", &b1).unwrap();
+        let lane0: Vec<f32> = out2[0].data()[..m.latent_elems()].to_vec();
+        assert_eq!(lane0, out1[0].data(), "lane 0 of b2 must equal the b1 run bit for bit");
+    }
+
+    #[test]
+    fn partial_with_fresh_cache_reproduces_full_eps_exactly() {
+        let s = sim();
+        let inputs = unet_inputs(&s, 1, 21);
+        let full = s.execute("unet_full_b1", &inputs).unwrap();
+        for l in 1..=s.manifest().model.max_cut {
+            let mut pin = inputs.clone();
+            pin.push(Input::F32(full[l].clone()));
+            let partial = s.execute(&format!("unet_partial_l{l}_b1"), &pin).unwrap();
+            assert_eq!(partial[0].data(), full[0].data(), "cut {l}: fresh cache is exact");
+        }
+    }
+
+    #[test]
+    fn stale_cache_error_grows_with_staleness() {
+        let s = sim();
+        let inputs = unet_inputs(&s, 1, 33);
+        let full = s.execute("unet_full_b1", &inputs).unwrap();
+        // Same latent/ctx at increasingly different timesteps: the deep
+        // term drifts, so eps error must grow monotonically (and stay
+        // small relative to the eps scale).
+        let mut errs = Vec::new();
+        for &t in &[520.0f32, 560.0, 640.0] {
+            let mut at_t = inputs.clone();
+            at_t[1] = Input::F32(Tensor::new(vec![1], vec![t]).unwrap());
+            let fresh = s.execute("unet_full_b1", &at_t).unwrap();
+            let mut pin = at_t.clone();
+            pin.push(Input::F32(full[1].clone())); // cache from t=500
+            let stale = s.execute("unet_partial_l1_b1", &pin).unwrap();
+            errs.push(crate::util::stats::l2_dist(stale[0].data(), fresh[0].data()));
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "staleness must grow error: {errs:?}");
+        let norm = crate::util::stats::l2_norm(full[0].data());
+        assert!(errs[2] / norm < 0.25, "stale error stays a perturbation: {}", errs[2] / norm);
+    }
+
+    #[test]
+    fn text_encoder_and_vae_shapes_and_ranges() {
+        let s = sim();
+        let m = s.manifest().model.clone();
+        let toks = TensorI32::new(vec![1, m.ctx_len], vec![3; m.ctx_len]).unwrap();
+        let ctx = s.execute("text_encoder_b1", &[Input::I32(toks)]).unwrap();
+        assert_eq!(ctx[0].dims, vec![1, m.ctx_len, m.ctx_dim]);
+        assert!(ctx[0].data().iter().all(|x| x.is_finite() && x.abs() <= 1.0));
+
+        let mut rng = Pcg32::seeded(5);
+        let lat = Tensor::new(
+            vec![1, m.latent_l(), m.latent_c],
+            rng.gaussian_vec(m.latent_elems()),
+        )
+        .unwrap();
+        let img = s.execute("vae_decoder_b1", &[Input::F32(lat)]).unwrap();
+        assert_eq!(img[0].dims, vec![1, m.img_h * m.img_w, 3]);
+        assert!(img[0].data().iter().all(|&x| (0.05..0.95).contains(&x)));
+    }
+
+    #[test]
+    fn calib_artifact_yields_a_knee_and_top_block_outliers() {
+        // Drive the calib artifact like pas::calibrate does and check the
+        // analysis lands on the designed structure: D* near the 0.55
+        // phase crossing, blocks 1-2 as outliers.
+        let s = sim();
+        let m = s.manifest().model.clone();
+        let steps = 12usize;
+        let sched = NoiseSchedule::new(s.manifest().alpha_bar.clone());
+        let ts = sched.timesteps(steps);
+        let mut rng = Pcg32::seeded(1);
+        let lat = Tensor::new(
+            vec![1, m.latent_l(), m.latent_c],
+            rng.gaussian_vec(m.latent_elems()),
+        )
+        .unwrap();
+        let ctx = Tensor::new(
+            vec![1, m.ctx_len, m.ctx_dim],
+            rng.gaussian_vec(m.ctx_len * m.ctx_dim),
+        )
+        .unwrap();
+        let mut raw = vec![vec![0.0f64; steps - 1]; 12];
+        let mut noise = vec![0.0f64; steps];
+        let mut prev: Option<Vec<Tensor>> = None;
+        for (i, &t) in ts.iter().enumerate() {
+            let out = s
+                .execute(
+                    "unet_calib_b1",
+                    &[
+                        Input::F32(lat.clone()),
+                        Input::F32(Tensor::new(vec![1], vec![t as f32]).unwrap()),
+                        Input::F32(ctx.clone()),
+                        Input::F32(Tensor::scalar(7.5)),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(out.len(), 13, "eps + 12 up blocks");
+            noise[i] = crate::util::stats::l2_norm(out[0].data());
+            let ups: Vec<Tensor> = out.into_iter().skip(1).collect();
+            if let Some(p) = &prev {
+                for b in 0..12 {
+                    raw[b][i - 1] = crate::util::stats::shift_score(ups[b].data(), p[b].data());
+                }
+            }
+            prev = Some(ups);
+        }
+        let rep = crate::pas::calibrate::analyse(raw, noise, steps, 1);
+        assert!(rep.outliers.contains(&1) && rep.outliers.contains(&2), "{:?}", rep.outliers);
+        assert!(!rep.outliers.contains(&7));
+        assert!((2..=7).contains(&rep.d_star), "D* = {}", rep.d_star);
+    }
+
+    #[test]
+    fn shape_and_name_errors_match_the_xla_wording() {
+        let s = sim();
+        let e = s.execute("unet_full_b99", &[]).unwrap_err();
+        assert_eq!(e.to_string(), "unknown artifact 'unet_full_b99'");
+        let e = s
+            .execute("unet_full_b1", &[Input::F32(Tensor::zeros(vec![1, 3, 3]))])
+            .unwrap_err();
+        assert_eq!(e.to_string(), "artifact unet_full_b1: expected 4 inputs, got 1");
+        let mut inputs = unet_inputs(&s, 1, 1);
+        inputs[0] = Input::F32(Tensor::zeros(vec![1, 3, 3]));
+        let e = s.execute("unet_full_b1", &inputs).unwrap_err();
+        assert_eq!(
+            e.to_string(),
+            "artifact unet_full_b1 input 0: shape [1, 3, 3] != manifest [1, 256, 4]"
+        );
+    }
+
+    #[test]
+    fn preload_validates_names() {
+        let s = sim();
+        assert!(s.preload(&["unet_full_b1".to_string()]).is_ok());
+        let e = s.preload(&["unet_full_b7".to_string()]).unwrap_err();
+        assert_eq!(e.to_string(), "unknown artifact 'unet_full_b7'");
+    }
+}

@@ -1,34 +1,41 @@
 //! Host-side tensors and conversions to/from PJRT literals.
 //!
-//! [`Tensor`] storage is a shared `Arc<[f32]>`: cloning a tensor (or an
-//! [`Input`](super::Input) holding one) bumps a reference count instead of
-//! copying the buffer, which is what makes the denoising hot path
-//! copy-free on the clone/mutate axis — the coordinator resends the same
-//! latent/context buffers to the runtime on every step. Mutation goes
-//! through [`Tensor::make_mut`], which is copy-on-write: it hands out
+//! [`Tensor`] storage is a shared `Arc<[f32]>` plus an (offset, len)
+//! window: cloning a tensor (or an [`Input`](super::Input) holding one)
+//! bumps a reference count instead of copying the buffer, and
+//! [`Tensor::index0`] / contiguous [`Tensor::stack`] are *views* into
+//! the same allocation — per-request result slicing after a batched
+//! generation touches zero bytes. Mutation goes through
+//! [`Tensor::make_mut`], which is copy-on-write: it hands out
 //! `&mut [f32]` directly when the storage is uniquely owned (the steady
-//! state in the step loop) and detaches a private copy only when another
-//! handle still shares the buffer, so aliased readers can never observe
-//! a write.
+//! state in the step loop) and detaches a private copy of the window
+//! only when another handle still shares the buffer, so aliased readers
+//! can never observe a write.
 //!
 //! Cost model, stated honestly: *constructing* a tensor from a `Vec`
 //! pays one element copy into the Arc allocation (the refcount header
 //! and the data are colocated, so the Vec's buffer cannot be adopted).
 //! That is one copy per fresh runtime output (eps, feature caches) —
-//! the step loop's dominant traffic was the repeated latent/ctx clones
-//! and per-step result `Vec`s, which this representation eliminates
-//! entirely. `Arc<Vec<f32>>` would dodge the construction copy at the
-//! price of double indirection on every hot-path read.
+//! the step loop's dominant traffic was the repeated latent/ctx clones,
+//! per-step result `Vec`s, and per-lane result slices, which this
+//! representation eliminates entirely. `Arc<Vec<f32>>` would dodge the
+//! construction copy at the price of double indirection on every
+//! hot-path read.
 
+use std::fmt;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-/// Dense row-major f32 tensor on the host with shared (`Arc`) storage.
-#[derive(Debug, Clone, PartialEq)]
+/// Dense row-major f32 tensor on the host: a (offset, len) window over
+/// shared (`Arc`) storage. Equality compares shape and *viewed*
+/// elements, never storage identity.
+#[derive(Clone)]
 pub struct Tensor {
     pub dims: Vec<usize>,
     data: Arc<[f32]>,
+    off: usize,
+    len: usize,
 }
 
 impl Tensor {
@@ -37,46 +44,53 @@ impl Tensor {
         if n != data.len() {
             bail!("tensor shape {dims:?} needs {n} elems, got {}", data.len());
         }
-        Ok(Tensor { dims, data: data.into() })
+        Ok(Tensor { dims, off: 0, len: n, data: data.into() })
     }
 
     pub fn zeros(dims: Vec<usize>) -> Self {
         let n = dims.iter().product();
-        Tensor { dims, data: vec![0.0; n].into() }
+        Tensor { dims, off: 0, len: n, data: vec![0.0; n].into() }
     }
 
     pub fn scalar(x: f32) -> Self {
-        Tensor { dims: vec![], data: vec![x].into() }
+        Tensor { dims: vec![], off: 0, len: 1, data: vec![x].into() }
     }
 
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len == 0
     }
 
     /// Read-only view of the element buffer.
     pub fn data(&self) -> &[f32] {
-        &self.data
+        &self.data[self.off..self.off + self.len]
     }
 
     /// Mutable view of the element buffer, copy-on-write: free when this
-    /// tensor uniquely owns its storage, otherwise the buffer is copied
-    /// out first so aliases keep their old values. The denoising loop
-    /// relies on the unique case — the runtime drops its input handles
-    /// before responding, so the per-step `make_mut` never copies.
+    /// tensor uniquely owns its storage, otherwise the viewed window is
+    /// copied out first so aliases keep their old values. The denoising
+    /// loop relies on the unique case — the runtime drops its input
+    /// handles before responding, so the per-step `make_mut` never
+    /// copies. (A unique *partial* view also mutates in place: nobody
+    /// else can observe the out-of-window elements.)
     pub fn make_mut(&mut self) -> &mut [f32] {
         if Arc::get_mut(&mut self.data).is_none() {
-            let copied: Arc<[f32]> = Arc::from(&self.data[..]);
+            let copied: Arc<[f32]> = Arc::from(&self.data[self.off..self.off + self.len]);
             self.data = copied;
+            self.off = 0;
         }
-        Arc::get_mut(&mut self.data).expect("storage is uniquely owned after copy-out")
+        let (off, len) = (self.off, self.len);
+        &mut Arc::get_mut(&mut self.data).expect("storage is uniquely owned after copy-out")
+            [off..off + len]
     }
 
-    /// True when `self` and `other` share the same underlying buffer
-    /// (zero-copy observability for tests and assertions).
+    /// True when `self` and `other` share the same underlying allocation
+    /// (zero-copy observability for tests and assertions; the windows
+    /// need not overlap — an `index0` slice shares storage with its
+    /// parent).
     pub fn shares_storage(&self, other: &Tensor) -> bool {
         Arc::ptr_eq(&self.data, &other.data)
     }
@@ -88,7 +102,7 @@ impl Tensor {
 
     /// Convert to an XLA literal of the same shape.
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
+        let lit = xla::Literal::vec1(self.data());
         let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
         lit.reshape(&dims).context("tensor reshape to literal")
     }
@@ -101,32 +115,69 @@ impl Tensor {
         Tensor::new(dims, data)
     }
 
-    /// Leading-axis slice [i] (drops the first dim).
+    /// Leading-axis slice [i] (drops the first dim) — a zero-copy view
+    /// into the shared storage; no bytes move.
     pub fn index0(&self, i: usize) -> Tensor {
         assert!(!self.dims.is_empty() && i < self.dims[0]);
         let inner: usize = self.dims[1..].iter().product();
         Tensor {
             dims: self.dims[1..].to_vec(),
-            data: Arc::from(&self.data[i * inner..(i + 1) * inner]),
+            data: Arc::clone(&self.data),
+            off: self.off + i * inner,
+            len: inner,
         }
     }
 
     /// Stack tensors of identical shape along a new leading axis.
+    ///
+    /// When the parts are back-to-back windows of one allocation in
+    /// order — the shape `index0` slices of a batched result have — the
+    /// stack is a zero-copy view over that allocation; otherwise the
+    /// elements are copied into fresh storage.
     pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
         if parts.is_empty() {
             bail!("stack of zero tensors");
         }
-        let inner = &parts[0].dims;
-        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        let first = &parts[0];
         for p in parts {
-            if &p.dims != inner {
-                bail!("stack shape mismatch: {:?} vs {:?}", p.dims, inner);
+            if p.dims != first.dims {
+                bail!("stack shape mismatch: {:?} vs {:?}", p.dims, first.dims);
             }
-            data.extend_from_slice(&p.data);
         }
         let mut dims = vec![parts.len()];
-        dims.extend_from_slice(inner);
-        Ok(Tensor { dims, data: data.into() })
+        dims.extend_from_slice(&first.dims);
+        let contiguous = parts
+            .iter()
+            .enumerate()
+            .all(|(i, p)| p.shares_storage(first) && p.off == first.off + i * first.len);
+        if contiguous {
+            return Ok(Tensor {
+                dims,
+                data: Arc::clone(&first.data),
+                off: first.off,
+                len: first.len * parts.len(),
+            });
+        }
+        let mut data = Vec::with_capacity(parts.len() * first.len);
+        for p in parts {
+            data.extend_from_slice(p.data());
+        }
+        Ok(Tensor { dims, off: 0, len: data.len(), data: data.into() })
+    }
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.dims == other.dims && self.data() == other.data()
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Tensor")
+            .field("dims", &self.dims)
+            .field("data", &self.data())
+            .finish()
     }
 }
 
@@ -172,6 +223,33 @@ mod tests {
     }
 
     #[test]
+    fn index0_is_a_zero_copy_view() {
+        // The PR-3 follow-up: per-request result slicing must not copy.
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        let row = t.index0(1);
+        assert!(row.shares_storage(&t), "index0 must share the parent allocation");
+        assert_eq!(row.data().as_ptr(), t.data()[3..].as_ptr(), "window, not copy");
+        assert_eq!(row.len(), 3);
+    }
+
+    #[test]
+    fn stack_of_contiguous_views_is_zero_copy() {
+        let t = Tensor::new(vec![3, 2], (0..6).map(|x| x as f32).collect()).unwrap();
+        let parts: Vec<Tensor> = (0..3).map(|i| t.index0(i)).collect();
+        let s = Tensor::stack(&parts).unwrap();
+        assert!(s.shares_storage(&t), "restacking ordered slices is a view");
+        assert_eq!(s.dims, vec![3, 2]);
+        assert_eq!(s.data(), t.data());
+        // Out-of-order or repeated slices fall back to a copy.
+        let rev = Tensor::stack(&[t.index0(1), t.index0(0)]).unwrap();
+        assert!(!rev.shares_storage(&t));
+        assert_eq!(rev.data(), &[2.0, 3.0, 0.0, 1.0]);
+        let padded = Tensor::stack(&[t.index0(2), t.index0(2)]).unwrap();
+        assert!(!padded.shares_storage(&t), "repeated lanes cannot alias in order");
+        assert_eq!(padded.data(), &[4.0, 5.0, 4.0, 5.0]);
+    }
+
+    #[test]
     fn stack_roundtrip() {
         let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
         let b = Tensor::new(vec![2], vec![3.0, 4.0]).unwrap();
@@ -186,6 +264,15 @@ mod tests {
         let lit = t.to_literal().unwrap();
         let back = Tensor::from_literal(&lit).unwrap();
         assert_eq!(back, t);
+    }
+
+    #[test]
+    fn view_literal_uses_the_window() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let row = t.index0(1);
+        let back = Tensor::from_literal(&row.to_literal().unwrap()).unwrap();
+        assert_eq!(back.data(), &[3.0, 4.0]);
+        assert_eq!(back.dims, vec![2]);
     }
 
     #[test]
@@ -221,5 +308,16 @@ mod tests {
         assert_eq!(a.data(), &[-5.0, 2.0, 3.0]);
         assert!(!a.shares_storage(&b), "write detached the storage");
         assert!(a.is_unique() && b.is_unique());
+    }
+
+    #[test]
+    fn make_mut_on_a_view_detaches_only_the_window() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut row = t.index0(0);
+        row.make_mut()[0] = 99.0;
+        assert_eq!(row.data(), &[99.0, 2.0]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0], "parent untouched");
+        assert!(!row.shares_storage(&t));
+        assert_eq!(row.len(), 2, "detached copy carries only the window");
     }
 }

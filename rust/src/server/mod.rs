@@ -19,7 +19,14 @@
 //! inside the batcher, filtered again at worker dequeue (they *never*
 //! reach `generate_many`), and — once a batch is running — polled every
 //! denoising step through the coordinator's `StepObserver`, so a
-//! single-lane batch aborts mid-flight.
+//! single-lane batch aborts mid-flight. Deadlines follow the same
+//! ladder: expired jobs are dropped in the batcher, re-checked at
+//! dequeue and group start, polled once per denoising step via
+//! `StepObserver::deadline_exceeded` (a run whose every live lane has
+//! exhausted its budget aborts with [`SdError::DeadlineExceeded`]
+//! mid-run), and a lane that expires while batch mates finish is failed
+//! at delivery rather than handed a late result — all counted in the
+//! one deadline-miss metric.
 //!
 //! With a [`cache::Cache`](crate::cache::Cache) configured, `Auto` plans
 //! are resolved against the plan store and the request cache is consulted
@@ -194,18 +201,27 @@ impl Client {
 }
 
 /// Broadcasts per-step events to every live job of a running batch and
-/// aggregates their cancel tokens: the run aborts mid-step only when
-/// *every* lane has cancelled (lockstep lanes are independent, so one
-/// cancelled lane must not kill its batch mates — it is skipped at
-/// delivery instead).
+/// aggregates their cancel tokens and deadlines: the run aborts
+/// mid-step only when *no* lane can still use the result — every lane
+/// cancelled ([`SdError::Cancelled`]) or every live lane past its
+/// deadline ([`SdError::DeadlineExceeded`], the in-loop step-budget
+/// enforcement). Lockstep lanes are independent, so one dead lane must
+/// not kill its batch mates — it is skipped at delivery instead.
 struct BatchObserver<'a> {
     jobs: &'a [Job],
 }
 
+impl BatchObserver<'_> {
+    fn expired(job: &Job, now: Instant) -> bool {
+        job.deadline.map_or(false, |d| now >= d)
+    }
+}
+
 impl StepObserver for BatchObserver<'_> {
     fn on_step(&self, i: usize, action: StepAction, ms: f64) {
+        let now = Instant::now();
         for job in self.jobs {
-            if !job.cancel.is_cancelled() {
+            if !job.cancel.is_cancelled() && !Self::expired(job, now) {
                 let _ = job.events.send(JobEvent::Step { i, action, ms });
             }
         }
@@ -213,6 +229,28 @@ impl StepObserver for BatchObserver<'_> {
 
     fn should_cancel(&self) -> bool {
         self.jobs.iter().all(|j| j.cancel.is_cancelled())
+    }
+
+    /// Per-job deadlines enforced inside the denoising loop: true only
+    /// when every non-cancelled lane has exhausted its latency budget
+    /// (and at least one such lane exists — an all-cancelled batch is
+    /// `should_cancel`'s case, which the coordinator checks first).
+    fn deadline_exceeded(&self) -> bool {
+        let now = Instant::now();
+        let mut any_expired = false;
+        for job in self.jobs {
+            if job.cancel.is_cancelled() {
+                continue;
+            }
+            if Self::expired(job, now) {
+                any_expired = true;
+            } else {
+                // A live lane still inside its budget (or without one):
+                // the batch keeps running for it.
+                return false;
+            }
+        }
+        any_expired
     }
 }
 
@@ -436,6 +474,7 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
                     }
                 }
             }
+            let now = Instant::now();
             for ((job, r), q_ms) in group.into_iter().zip(results).zip(queue_ms) {
                 if job.cancel.is_cancelled() {
                     // Cancelled while batch mates kept the run alive:
@@ -443,6 +482,13 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
                     // though a latent exists.
                     metrics.on_cancelled();
                     let _ = job.events.send(JobEvent::Cancelled);
+                } else if BatchObserver::expired(&job, now) {
+                    // The lane's latency budget ran out while batch
+                    // mates kept the run alive: a deadline is a hard
+                    // delivery bound, so the (valid, cached-above)
+                    // latent is not delivered late.
+                    metrics.on_deadline_miss();
+                    let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
                 } else {
                     metrics.on_done(batch_ms + q_ms);
                     let _ = job.events.send(JobEvent::Done(r));
@@ -466,7 +512,14 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
                     metrics.on_cancelled();
                     let _ = job.events.send(JobEvent::Cancelled);
                 } else {
-                    metrics.on_error();
+                    // Mid-run step-budget expiry is a deadline miss in
+                    // the metrics, not a generic error — it feeds the
+                    // same counter as admission/dequeue-time expiry.
+                    if e == SdError::DeadlineExceeded {
+                        metrics.on_deadline_miss();
+                    } else {
+                        metrics.on_error();
+                    }
                     let _ = job.events.send(JobEvent::Failed(e.clone()));
                 }
             }
@@ -692,6 +745,39 @@ mod tests {
         assert!(batches.iter().all(|b| b.is_empty()) || batches.is_empty());
         assert_eq!(drain(&rx_a), vec!["failed"]);
         assert_eq!(metrics.summary().deadline_misses, 1);
+    }
+
+    #[test]
+    fn batch_observer_enforces_deadlines_only_when_no_live_lane_has_budget() {
+        let (mut a, rx_a) = job("x", 1);
+        let (b, _rx_b) = job("y", 2);
+        a.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let jobs = vec![a, b];
+        let obs = BatchObserver { jobs: &jobs };
+        assert!(
+            !obs.deadline_exceeded(),
+            "a live lane without a deadline keeps the batch running"
+        );
+        // Expired lanes stop receiving step events (they will be failed
+        // at delivery, not handed a late stream).
+        obs.on_step(0, StepAction::Full, 1.0);
+        assert!(drain(&rx_a).is_empty(), "expired lane receives no step events");
+
+        // Every live lane expired -> the in-loop budget enforcement fires.
+        let (mut c, _rx_c) = job("z", 3);
+        c.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let jobs = vec![jobs.into_iter().next().unwrap(), c];
+        let obs = BatchObserver { jobs: &jobs };
+        assert!(obs.deadline_exceeded(), "all live lanes expired: abort mid-run");
+        assert!(!obs.should_cancel(), "expiry is not cancellation");
+
+        // An expired-but-cancelled lane does not count as expired (the
+        // cancel wins); with no expired live lane left this is
+        // should_cancel's territory, not a deadline abort.
+        jobs[0].cancel.cancel();
+        jobs[1].cancel.cancel();
+        assert!(!obs.deadline_exceeded());
+        assert!(obs.should_cancel());
     }
 
     #[test]

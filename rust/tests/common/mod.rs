@@ -1,0 +1,27 @@
+//! Shared bootstrap for the runtime-backed integration suites.
+//!
+//! One `RuntimeService` per test binary over the default resolution
+//! order (xla when real artifacts exist, the deterministic `SimBackend`
+//! otherwise, `SD_ACC_BACKEND` honoured) — so the suites execute in
+//! artifact-less containers instead of skipping, and a backend-
+//! resolution change happens here once instead of in five copies.
+
+use std::sync::OnceLock;
+
+use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
+
+static SERVICE: OnceLock<Option<RuntimeService>> = OnceLock::new();
+
+/// The binary-wide service; `None` only if the resolved backend failed
+/// to start (callers skip with the printed reason).
+pub fn service() -> Option<&'static RuntimeService> {
+    SERVICE
+        .get_or_init(|| match RuntimeService::start(&default_artifacts_dir()) {
+            Ok(svc) => Some(svc),
+            Err(e) => {
+                eprintln!("backend failed to start: {e:#}");
+                None
+            }
+        })
+        .as_ref()
+}

@@ -4,17 +4,19 @@
 //! The batcher-policy half (EDF within a key, starvation-proof aging,
 //! cancelled items never dispatched) is artifact-free: the batcher is
 //! pure data structure. The serving half (event sequences, mid-run
-//! cancellation, bounded admission) needs the PJRT runtime and skips
-//! cleanly when `artifacts/manifest.json` is absent.
+//! cancellation, bounded admission) runs over whichever execution
+//! backend resolves — xla over real artifacts when present, the
+//! deterministic `SimBackend` otherwise — so it executes everywhere.
 
-use std::sync::{Arc, OnceLock};
+mod common;
+
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use sd_acc::coordinator::{
     Coordinator, GenRequest, SamplerKind, SdError, StepObserver,
 };
 use sd_acc::pas::plan::StepAction;
-use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
 use sd_acc::server::batcher::{BatchItem, Batcher, DropReason};
 use sd_acc::server::{CancelToken, JobEvent, Priority, Server, ServerConfig, SubmitOptions};
 
@@ -164,18 +166,8 @@ fn typed_request_surface_validates_and_roundtrips() {
 
 // ---------------------------------------------------------- runtime-backed
 
-static SERVICE: OnceLock<Option<RuntimeService>> = OnceLock::new();
-
 fn coord_or_skip() -> Option<Arc<Coordinator>> {
-    let svc = SERVICE.get_or_init(|| {
-        let dir = default_artifacts_dir();
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: no artifacts (run `make artifacts`)");
-            return None;
-        }
-        Some(RuntimeService::start(&dir).expect("runtime service"))
-    });
-    svc.as_ref().map(|s| Arc::new(Coordinator::new(s.handle())))
+    common::service().map(|s| Arc::new(Coordinator::new(s.handle())))
 }
 
 fn req(prompt: &str, seed: u64) -> GenRequest {
@@ -215,6 +207,65 @@ fn observer_cancellation_stops_a_run_before_its_final_step() {
         seen >= 2 && seen < steps,
         "run must stop mid-flight: observed {seen} of {steps} steps"
     );
+}
+
+/// Observer whose deadline budget covers only `budget` steps — the
+/// in-loop step-budget enforcement satellite.
+struct ExpireAfter {
+    budget: usize,
+    seen: std::sync::atomic::AtomicUsize,
+}
+
+impl StepObserver for ExpireAfter {
+    fn on_step(&self, _i: usize, _action: StepAction, _ms: f64) {
+        self.seen.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    fn deadline_exceeded(&self) -> bool {
+        self.seen.load(std::sync::atomic::Ordering::SeqCst) >= self.budget
+    }
+}
+
+#[test]
+fn deadline_enforced_inside_the_denoising_loop() {
+    let Some(coord) = coord_or_skip() else { return };
+    let steps = 6;
+    let mut r = req("red stripe x6 y1", 43);
+    r.steps = steps;
+    let obs = ExpireAfter { budget: 2, seen: std::sync::atomic::AtomicUsize::new(0) };
+    let err = coord.generate_one_observed(&r, &obs).unwrap_err();
+    assert_eq!(err, SdError::DeadlineExceeded, "expired mid-run, not at dequeue");
+    let seen = obs.seen.load(std::sync::atomic::Ordering::SeqCst);
+    assert!(
+        seen >= 2 && seen < steps,
+        "run must stop mid-flight: observed {seen} of {steps} steps"
+    );
+}
+
+#[test]
+fn mid_run_deadline_counts_in_the_deadline_miss_metric() {
+    let Some(coord) = coord_or_skip() else { return };
+    // Tight-but-nonzero budget with an instant flush: whether the job
+    // expires pre-dequeue, mid-run (the new in-loop check), or at
+    // delivery, the observable contract is the same — a typed
+    // Failed(DeadlineExceeded) and one deadline-miss count.
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig { max_wait: Duration::from_millis(0), ..Default::default() },
+    );
+    let client = server.client();
+    let h = client
+        .submit_with(
+            req("red circle x2 y2", 99),
+            SubmitOptions::with_deadline(Duration::from_micros(300)),
+        )
+        .unwrap();
+    let err = h.wait().unwrap_err();
+    assert_eq!(err, SdError::DeadlineExceeded);
+    let m = server.metrics.summary();
+    assert_eq!(m.deadline_misses, 1, "counted in the one deadline-miss metric");
+    assert_eq!(m.errors, 0, "a deadline miss is not a generic error");
+    server.shutdown();
 }
 
 #[test]
@@ -301,10 +352,8 @@ fn cache_hit_streams_cachehit_then_done() {
     let Some(coord) = coord_or_skip() else { return };
     let dir = std::env::temp_dir().join(format!("sdacc_api_cache_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let cache = Arc::new(
-        sd_acc::cache::Cache::open(sd_acc::cache::StoreConfig::new(&dir), coord.manifest_hash())
-            .unwrap(),
-    );
+    let cache =
+        Arc::new(coord.open_cache(sd_acc::cache::StoreConfig::new(&dir)).unwrap());
     let server = Server::start(
         Arc::clone(&coord),
         ServerConfig { cache: Some(cache), ..Default::default() },

@@ -1,0 +1,260 @@
+//! Integration: the execution-backend seam (`runtime::backend`).
+//!
+//! The sim half always runs — `SimBackend` needs no artifacts by
+//! design. Covered here:
+//!
+//! - **Determinism / replay**: two full `Client::generate` runs of the
+//!   same request through a real `Server` are bit-identical (the
+//!   acceptance criterion), and `generate` vs a `generate_batch` lane
+//!   agree bit for bit (lockstep lanes are independent).
+//! - **Error parity**: sim shape/unknown-artifact errors carry the
+//!   exact wording the xla path produces (both route through
+//!   `backend::check_inputs` / the shared `unknown artifact` message).
+//! - **Cache isolation**: a sim-generated latent cached through the
+//!   serving path never satisfies an xla-tagged lookup on the same
+//!   store (backend-tagged request keys).
+//! - **No-regression dispatch** (artifacts-gated): with real artifacts
+//!   present, trait-object dispatch through `RuntimeService` returns
+//!   the same bits as driving `Runtime` directly.
+
+use std::sync::{Arc, OnceLock};
+
+use sd_acc::cache::StoreConfig;
+use sd_acc::coordinator::{Coordinator, GenRequest, SamplerKind};
+use sd_acc::runtime::{
+    default_artifacts_dir, BackendKind, ExecBackend, Runtime, RuntimeService, SimBackend, Tensor,
+};
+use sd_acc::server::{Server, ServerConfig};
+
+static SIM: OnceLock<RuntimeService> = OnceLock::new();
+
+/// A sim-backed coordinator over a directory with no artifacts — this
+/// suite exercises the simulator even when real artifacts exist.
+fn sim_coord() -> Coordinator {
+    let svc = SIM.get_or_init(|| {
+        let dir = std::env::temp_dir().join("sdacc_backend_suite_no_artifacts");
+        let _ = std::fs::remove_dir_all(&dir);
+        RuntimeService::start_with(BackendKind::Sim, &dir).expect("sim backend starts")
+    });
+    Coordinator::new(svc.handle())
+}
+
+fn req(prompt: &str, seed: u64, steps: usize) -> GenRequest {
+    let mut r = GenRequest::new(prompt, seed);
+    r.steps = steps;
+    r.sampler = SamplerKind::Ddim;
+    r
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sdacc_itbackend_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The acceptance criterion: `SimBackend` output is bit-reproducible
+/// across two full `Client::generate` runs of the same request — the
+/// whole serving stack (submit, batcher, worker, observer) included.
+#[test]
+fn sim_client_generate_is_bit_reproducible_across_runs() {
+    let coord = Arc::new(sim_coord());
+    let r = req("red circle x4 y4 blue square x11 y11", 4242, 6);
+
+    let server = Server::start(Arc::clone(&coord), ServerConfig::default());
+    let a = server.client().generate(r.clone()).unwrap();
+    server.shutdown();
+
+    // A fresh server over the same coordinator: nothing carried over
+    // but the deterministic backend.
+    let server = Server::start(Arc::clone(&coord), ServerConfig::default());
+    let b = server.client().generate(r).unwrap();
+    server.shutdown();
+
+    assert_eq!(a.latent.dims, b.latent.dims);
+    assert_eq!(bits(&a.latent), bits(&b.latent), "two Client::generate runs must agree bit for bit");
+    assert!(a.latent.data().iter().all(|x| x.is_finite()));
+}
+
+/// Same seed/prompt through `generate_one` vs a `generate_batch` lane:
+/// bit-identical (sim lanes are independent; the scheduler already
+/// guarantees step/step_mut exactness).
+#[test]
+fn sim_generate_matches_generate_batch_lane_bitwise() {
+    let coord = sim_coord();
+    let a = req("green stripe x8 y8", 77, 6);
+    let b = req("yellow circle x12 y3", 78, 6);
+    let solo = coord.generate_one(&a).unwrap();
+    let batch = coord.generate_batch(&[a, b]).unwrap();
+    assert_eq!(bits(&batch[0].latent), bits(&solo.latent), "lane 0 == solo, bit for bit");
+    // And `generate_many` (padded tail: 3 lanes over sizes {1,2}).
+    let many_reqs: Vec<GenRequest> =
+        (0..3).map(|i| req(&format!("cyan square x{} y5", 2 + i), 300 + i as u64, 6)).collect();
+    let many = coord.generate_many(&many_reqs).unwrap();
+    for (r, out) in many_reqs.iter().zip(&many) {
+        let solo = coord.generate_one(r).unwrap();
+        assert_eq!(bits(&out.latent), bits(&solo.latent), "every lane == its solo run");
+    }
+}
+
+/// Shape-mismatch and unknown-artifact errors must carry the exact
+/// wording of the xla path — locked by formatting the expected strings
+/// from the same manifest metadata the backends check against.
+#[test]
+fn sim_error_wording_is_identical_to_the_xla_path() {
+    let coord = sim_coord();
+    let rt = coord.runtime();
+    let meta = rt.manifest().artifacts.get("unet_full_b1").unwrap().clone();
+
+    let e = rt
+        .execute("unet_full_b1", &[sd_acc::runtime::Input::F32(Tensor::zeros(vec![1, 3, 3]))])
+        .unwrap_err();
+    assert_eq!(
+        e.to_string(),
+        format!("artifact unet_full_b1: expected {} inputs, got 1", meta.inputs.len())
+    );
+
+    let mut inputs: Vec<sd_acc::runtime::Input> = meta
+        .inputs
+        .iter()
+        .map(|(shape, is_i32)| {
+            assert!(!*is_i32, "unet inputs are f32");
+            sd_acc::runtime::Input::F32(Tensor::zeros(shape.clone()))
+        })
+        .collect();
+    inputs[0] = sd_acc::runtime::Input::F32(Tensor::zeros(vec![1, 3, 3]));
+    let e = rt.execute("unet_full_b1", &inputs).unwrap_err();
+    assert_eq!(
+        e.to_string(),
+        format!(
+            "artifact unet_full_b1 input 0: shape [1, 3, 3] != manifest {:?}",
+            meta.inputs[0].0
+        )
+    );
+
+    let e = rt.execute("unet_full_b99", &[]).unwrap_err();
+    assert_eq!(e.to_string(), "unknown artifact 'unet_full_b99'");
+}
+
+/// A sim latent cached through the real serving path must be invisible
+/// to an xla-tagged cache over the same store and manifest hash.
+#[test]
+fn sim_served_results_never_satisfy_xla_lookups() {
+    let coord = Arc::new(sim_coord());
+    let dir = tmp_dir("cache_iso");
+    let cache = Arc::new(coord.open_cache(StoreConfig::new(&dir)).unwrap());
+    assert_eq!(cache.backend(), BackendKind::Sim);
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig { cache: Some(Arc::clone(&cache)), ..Default::default() },
+    );
+    let r = req("magenta circle x6 y6", 555, 6);
+    let first = server.client().generate(r.clone()).unwrap();
+    let again = server.client().generate(r.clone()).unwrap();
+    assert_eq!(bits(&first.latent), bits(&again.latent), "replay from the sim-tagged cache");
+    assert_eq!(server.metrics.summary().cache_hits, 1, "second submission hit");
+    server.shutdown();
+    drop(cache);
+
+    // Same store, same manifest hash, xla binding: the sim entry must
+    // not answer.
+    let xla_view = sd_acc::cache::Cache::open_for(
+        StoreConfig::new(&dir),
+        coord.manifest_hash(),
+        BackendKind::Xla,
+    )
+    .unwrap();
+    assert!(
+        xla_view.get_result(&r).is_none(),
+        "sim latents must never satisfy an xla lookup"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Concrete backend selection is honoured even when it cannot start:
+/// forcing xla without artifacts fails instead of silently simming.
+#[test]
+fn forced_xla_without_artifacts_fails_instead_of_simming() {
+    let dir = tmp_dir("forced_xla");
+    let err = RuntimeService::start_with(BackendKind::Xla, &dir);
+    assert!(err.is_err(), "xla cannot run without artifacts/manifest.json");
+}
+
+/// Artifacts-gated no-regression test: when real artifacts exist (and
+/// the PJRT client can start), trait-object dispatch through the
+/// service returns the same bits as calling `Runtime` directly.
+#[test]
+fn xla_trait_dispatch_matches_direct_runtime() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts — xla no-regression comparison not applicable");
+        return;
+    }
+    let direct = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("xla backend unavailable ({e:#}) — comparison not applicable");
+            return;
+        }
+    };
+    let svc = RuntimeService::start_with(BackendKind::Xla, &dir).expect("service over artifacts");
+    assert_eq!(svc.backend(), BackendKind::Xla);
+    let m = direct.manifest().model.clone();
+    let toks = sd_acc::runtime::TensorI32::new(vec![1, m.ctx_len], vec![1; m.ctx_len]).unwrap();
+    let via_trait = svc
+        .handle()
+        .execute("text_encoder_b1", &[sd_acc::runtime::Input::I32(toks.clone())])
+        .unwrap();
+    let via_direct = ExecBackend::execute(
+        &direct,
+        "text_encoder_b1",
+        &[sd_acc::runtime::Input::I32(toks)],
+    )
+    .unwrap();
+    assert_eq!(bits(&via_trait[0]), bits(&via_direct[0]), "dispatch must not change results");
+}
+
+/// `SimBackend::open` honours a real manifest when present, so the sim
+/// runs the same contract (shapes, schedule) the artifacts were built
+/// for — and synthesizes one otherwise.
+#[test]
+fn sim_backend_honours_a_real_manifest_when_present() {
+    let dir = tmp_dir("sim_manifest");
+    let sim = SimBackend::open(&dir).unwrap();
+    let synth_hash = sim.manifest().hash;
+    assert!(!sim.manifest().artifacts.is_empty());
+
+    // Write a manifest and reopen: the sim must adopt it.
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{
+          "model": {"latent_h":8,"latent_w":8,"latent_c":4,
+            "channels":[16,32,64,64],"ctx_len":4,"ctx_dim":32,
+            "img_h":32,"img_w":32,"max_cut":2,"train_steps":100,
+            "guidance":7.5,"seed":1},
+          "batch_sizes":[1],
+          "vocab":{"<pad>":0,"red":1},
+          "alpha_bar":[0.99,0.98],
+          "weights":{},
+          "artifacts":[{"name":"vae_decoder_b1","file":"x","n_params":0,
+            "inputs":[{"shape":[1,64,4],"dtype":"f32"}]}]
+        }"#,
+    )
+    .unwrap();
+    let sim = SimBackend::open(&dir).unwrap();
+    assert_ne!(sim.manifest().hash, synth_hash, "real manifest digest adopted");
+    assert_eq!(sim.manifest().model.latent_l(), 64);
+    // And it executes against the declared shapes.
+    let out = sim
+        .execute(
+            "vae_decoder_b1",
+            &[sd_acc::runtime::Input::F32(Tensor::zeros(vec![1, 64, 4]))],
+        )
+        .unwrap();
+    assert_eq!(out[0].dims, vec![1, 32 * 32, 3]);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -2,26 +2,19 @@
 //!
 //! Uses short step counts to keep CI time sane; the full-length runs live
 //! in examples/ and the bench harness.
+//!
+//! Backend: xla over real artifacts when `artifacts/manifest.json`
+//! exists, otherwise the deterministic `SimBackend` — these bodies
+//! execute in artifact-less containers instead of skipping.
 
-use std::sync::OnceLock;
+mod common;
 
 use sd_acc::coordinator::{Coordinator, GenRequest};
 use sd_acc::pas::plan::{PasConfig, SamplingPlan, StepAction};
 use sd_acc::quality;
-use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
-
-static SERVICE: OnceLock<Option<RuntimeService>> = OnceLock::new();
 
 fn coord_or_skip() -> Option<Coordinator> {
-    let svc = SERVICE.get_or_init(|| {
-        let dir = default_artifacts_dir();
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: no artifacts (run `make artifacts`)");
-            return None;
-        }
-        Some(RuntimeService::start(&dir).expect("runtime service"))
-    });
-    svc.as_ref().map(|s| Coordinator::new(s.handle()))
+    common::service().map(|s| Coordinator::new(s.handle()))
 }
 
 fn short_req(prompt: &str, seed: u64, steps: usize) -> GenRequest {

@@ -1,16 +1,23 @@
 //! Integration: the mixed-precision subsystem end to end (ISSUE 2
-//! acceptance criteria). Pure host code — no AOT artifacts needed, so
-//! these always run: the quality-gated search must put W8A8 on the
-//! Pareto front with >= 3x modeled energy reduction over fp32, and a
-//! cached QuantProfile must be invalidated by a manifest-hash change.
+//! acceptance criteria). The analytic half is pure host code; the
+//! measured-validation half runs over whichever execution backend
+//! resolves (xla with artifacts, the deterministic `SimBackend`
+//! without), so every body executes in artifact-less containers too.
+
+mod common;
 
 use std::path::PathBuf;
 
 use sd_acc::cache::{Cache, StoreConfig, NS_REQUEST};
-use sd_acc::coordinator::GenRequest;
+use sd_acc::coordinator::{Coordinator, GenRequest};
 use sd_acc::hwsim::arch::{AccelConfig, Policy};
 use sd_acc::models::inventory::{sd_v14, unet_ops};
 use sd_acc::quant::{search, synthetic_profile, QuantConstraints, QuantScheme};
+use sd_acc::runtime::BackendKind;
+
+fn coord_or_skip() -> Option<Coordinator> {
+    common::service().map(|s| Coordinator::new(s.handle()))
+}
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("sdacc_itquant_{tag}_{}", std::process::id()));
@@ -81,6 +88,57 @@ fn quant_profile_cache_invalidated_by_manifest_change() {
     );
     assert_eq!(cache.stats().entries, 0);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// ROADMAP PR-3 follow-up lock: `QuantSearcher::validate` lane-batches
+/// its validation prompts through `Coordinator::generate_many`, and the
+/// serial request-at-a-time reference path scores every candidate the
+/// same — bit-identically on the deterministic sim backend (lockstep
+/// lanes are independent by construction), within a whisker on xla
+/// (PJRT batch kernels reassociate reductions).
+#[test]
+fn quant_validate_batched_equals_serial_reference() {
+    let Some(coord) = coord_or_skip() else { return };
+    let ops = unet_ops(&sd_v14());
+    let cfg = AccelConfig::default();
+    let cons = QuantConstraints { min_psnr_db: 15.0, ..Default::default() };
+    let prompts = vec![
+        "red circle x4 y4".to_string(),
+        "green stripe x8 y8".to_string(),
+        "blue square x2 y9".to_string(),
+    ];
+    let steps = 6;
+    let searcher = sd_acc::quant::QuantSearcher { coord: &coord };
+
+    let mut batched = search(&ops, &cfg, Policy::optimized(), &cons, None);
+    let mut serial = batched.clone();
+    searcher
+        .validate(&mut batched, &prompts, steps, f64::NEG_INFINITY, 3)
+        .expect("batched validation");
+    searcher
+        .validate_serial(&mut serial, &prompts, steps, f64::NEG_INFINITY, 3)
+        .expect("serial validation");
+
+    let validated = batched.iter().filter(|c| c.measured_psnr_db.is_some()).count();
+    assert!(validated >= 2, "at least two candidates measured (got {validated})");
+    for (i, (b, s)) in batched.iter().zip(&serial).enumerate() {
+        assert_eq!(b.scheme, s.scheme, "candidate {i}: order untouched");
+        match (b.measured_psnr_db, s.measured_psnr_db) {
+            (None, None) => {}
+            (Some(bm), Some(sm)) => {
+                if coord.backend() == BackendKind::Sim {
+                    assert_eq!(
+                        bm.to_bits(),
+                        sm.to_bits(),
+                        "candidate {i}: lane-batched score must be bit-identical on sim"
+                    );
+                } else {
+                    assert!((bm - sm).abs() < 0.5, "candidate {i}: {bm} vs {sm}");
+                }
+            }
+            other => panic!("candidate {i}: validation coverage diverged: {other:?}"),
+        }
+    }
 }
 
 #[test]

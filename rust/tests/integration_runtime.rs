@@ -1,32 +1,17 @@
-//! Integration: PJRT runtime over the real AOT artifacts.
-//!
-//! Requires `make artifacts` (or SD_ACC_ARTIFACTS pointing at a built
-//! artifacts dir); tests are skipped with a notice otherwise. One
-//! RuntimeService is shared across the whole binary so each artifact is
-//! compiled exactly once.
+//! Integration: the execution runtime behind its backend seam — xla
+//! over real AOT artifacts when `make artifacts` (or SD_ACC_ARTIFACTS)
+//! provides them, the deterministic `SimBackend` otherwise, so these
+//! bodies execute in artifact-less containers. One RuntimeService is
+//! shared across the whole binary so each artifact is compiled (xla) or
+//! synthesized (sim) exactly once.
 
-use std::sync::OnceLock;
+mod common;
 
-use sd_acc::runtime::{default_artifacts_dir, Input, Runtime, RuntimeHandle, RuntimeService, Tensor, TensorI32};
+use sd_acc::runtime::{Input, Runtime, RuntimeHandle, Tensor, TensorI32};
 use sd_acc::util::rng::Pcg32;
 
-static SERVICE: OnceLock<Option<RuntimeService>> = OnceLock::new();
-
 fn handle_or_skip() -> Option<RuntimeHandle> {
-    SERVICE
-        .get_or_init(|| {
-            let dir = default_artifacts_dir();
-            if !dir.join("manifest.json").exists() {
-                eprintln!(
-                    "skipping: no artifacts at {} (run `make artifacts`)",
-                    dir.display()
-                );
-                return None;
-            }
-            Some(RuntimeService::start(&dir).expect("runtime service"))
-        })
-        .as_ref()
-        .map(|s| s.handle())
+    common::service().map(|s| s.handle())
 }
 
 fn gaussian_tensor(rng: &mut Pcg32, dims: Vec<usize>) -> Tensor {

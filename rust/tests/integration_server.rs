@@ -1,25 +1,17 @@
-//! Integration: serving layer over the real runtime — dynamic batching,
-//! concurrent clients, metrics.
+//! Integration: serving layer over the runtime seam — dynamic batching,
+//! concurrent clients, metrics. Runs on xla when artifacts exist and on
+//! the deterministic `SimBackend` otherwise (no skipping).
 
-use std::sync::{Arc, OnceLock};
+mod common;
+
+use std::sync::Arc;
 use std::time::Duration;
 
 use sd_acc::coordinator::{Coordinator, GenRequest};
-use sd_acc::runtime::{default_artifacts_dir, RuntimeService};
 use sd_acc::server::{Server, ServerConfig};
 
-static SERVICE: OnceLock<Option<RuntimeService>> = OnceLock::new();
-
 fn coord_or_skip() -> Option<Arc<Coordinator>> {
-    let svc = SERVICE.get_or_init(|| {
-        let dir = default_artifacts_dir();
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: no artifacts (run `make artifacts`)");
-            return None;
-        }
-        Some(RuntimeService::start(&dir).expect("runtime service"))
-    });
-    svc.as_ref().map(|s| Arc::new(Coordinator::new(s.handle())))
+    common::service().map(|s| Arc::new(Coordinator::new(s.handle())))
 }
 
 fn req(prompt: &str, seed: u64) -> GenRequest {
@@ -82,10 +74,10 @@ fn repeated_request_served_from_request_cache() {
     let dir = std::env::temp_dir()
         .join(format!("sdacc_server_cache_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let cache = Arc::new(
-        sd_acc::cache::Cache::open(sd_acc::cache::StoreConfig::new(&dir), coord.manifest_hash())
-            .unwrap(),
-    );
+    // Backend-aware construction: sim results must cache under
+    // sim-tagged keys, xla under the legacy keys.
+    let cache =
+        Arc::new(coord.open_cache(sd_acc::cache::StoreConfig::new(&dir)).unwrap());
     let server = Server::start(
         Arc::clone(&coord),
         ServerConfig { cache: Some(Arc::clone(&cache)), ..Default::default() },

@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verify in one command: build, tests, formatting, lints.
 #
-# Usage: ./ci.sh [--no-clippy] [--no-fmt]
+# Usage: ./ci.sh [--no-clippy] [--no-fmt] [--bench-commit]
 #   SD_ACC_PROP_CASES=16 ./ci.sh     # trim property-test cases for speed
+#   ./ci.sh --bench-commit           # also refresh BENCH_obs.json (repo
+#                                    # root) after validating the schema
+#                                    # and the allocs/step budget
 #
 # The crate builds fully offline: external deps are vendored under
 # rust/vendor (anyhow subset + backend-less xla stub), so no network or
@@ -24,10 +27,12 @@ fi
 
 run_clippy=1
 run_fmt=1
+bench_commit=0
 for arg in "$@"; do
     case "$arg" in
         --no-clippy) run_clippy=0 ;;
         --no-fmt) run_fmt=0 ;;
+        --bench-commit) bench_commit=1 ;;
         *) echo "unknown flag: $arg" >&2; exit 2 ;;
     esac
 done
@@ -58,6 +63,24 @@ echo "== serving bench (smoke) =="
 # Full mode writes BENCH_serving.json at repo root, including
 # submit->event->done and cancel-ack latency.
 cargo bench --bench bench_serving -- --smoke
+
+echo "== obs bench (smoke) =="
+# Observability pass: deterministic sim-backed workload through a traced
+# server. Asserts the BENCH_obs.json schema (required keys, non-zero
+# step/byte counters, cache_hit_ratio in [0,1]), exactly one terminal
+# span per job in the trace ring, and — when the counting allocator is
+# active — that allocs/step stays within the committed
+# allocs_per_step_limit. Writes nothing.
+cargo bench --bench bench_obs -- --smoke
+
+if [ "$bench_commit" = 1 ]; then
+    echo "== obs bench (commit trajectory point) =="
+    # Full measurement; validates schema + the allocs/step budget against
+    # the committed limit, then rewrites BENCH_obs.json at the repo root.
+    # The limit itself is carried over from the committed file — raising
+    # it is a reviewed edit, never an automatic ratchet.
+    cargo bench --bench bench_obs -- --commit
+fi
 
 if [ "$run_fmt" = 1 ]; then
     echo "== cargo fmt --check =="

@@ -1,0 +1,299 @@
+//! Observability bench: the deterministic sim-backed workload behind
+//! the committed `BENCH_obs.json` trajectory (repo root).
+//!
+//! Drives a real server (sim backend, request cache, trace sink) with a
+//! mixed cold/warm request stream and reports, from the obs layer
+//! itself rather than ad-hoc timers:
+//!
+//! - **steps/s** — per-PAS-action step counters over the measured wall;
+//! - **allocs/step** — steady-state global-allocator delta per denoising
+//!   step (counting allocator, `count-alloc` feature; reported as 0 and
+//!   not gated when counting is unavailable);
+//! - **bytes moved** — per-backend execute operand+result bytes;
+//! - **cache hit ratio** — request-namespace hit/miss counters;
+//! - **p50/p95 job latency** — per-job `queued -> terminal` deltas from
+//!   the trace ring.
+//!
+//! Modes (ci.sh):
+//!   `--smoke`  validate only: schema keys present, counters non-zero,
+//!              one terminal span per job. No file writes.
+//!   `--commit` the `ci.sh --bench-commit` lane: everything `--smoke`
+//!              checks, plus the allocs/step regression gate against the
+//!              committed `allocs_per_step_limit`, then rewrite
+//!              `BENCH_obs.json` (the limit itself is carried over, not
+//!              re-derived — ratcheting it is a reviewed edit).
+//!   default    measure and print, write nothing.
+//!
+//! Run: `cargo bench --bench bench_obs [-- --smoke | -- --commit]`
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sd_acc::cache::StoreConfig;
+use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::obs::{self, alloc, TraceSink};
+use sd_acc::runtime::{BackendKind, RuntimeService};
+use sd_acc::server::{Server, ServerConfig};
+use sd_acc::util::json::Json;
+use sd_acc::util::stats;
+
+/// Keys every BENCH_obs.json point must carry (schema validation).
+const REQUIRED_KEYS: [&str; 10] = [
+    "bench",
+    "trace_schema_version",
+    "steps_per_sec",
+    "allocs_per_step",
+    "allocs_per_step_limit",
+    "bytes_moved",
+    "cache_hit_ratio",
+    "p50_ms",
+    "p95_ms",
+    "counting_alloc_active",
+];
+
+struct Measured {
+    steps_per_sec: f64,
+    allocs_per_step: f64,
+    bytes_moved: u64,
+    executes: u64,
+    cache_hit_ratio: f64,
+    request_hits: u64,
+    request_misses: u64,
+    steps: u64,
+    p50_ms: f64,
+    p95_ms: f64,
+    jobs: usize,
+}
+
+fn run_workload(smoke: bool) -> anyhow::Result<Measured> {
+    let art_dir =
+        std::env::temp_dir().join(format!("sdacc_bench_obs_art_{}", std::process::id()));
+    let cache_dir =
+        std::env::temp_dir().join(format!("sdacc_bench_obs_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&art_dir);
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    // Sim backend always: the trajectory point must be deterministic and
+    // runnable in artifact-less containers.
+    let svc = RuntimeService::start_with(BackendKind::Sim, &art_dir)?;
+    let coord = Arc::new(Coordinator::new(svc.handle()));
+    let cache = Arc::new(coord.open_cache(StoreConfig::new(&cache_dir))?);
+    let trace = TraceSink::in_memory(obs::trace::DEFAULT_RING_CAP);
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(10),
+            cache: Some(Arc::clone(&cache)),
+            trace: Some(Arc::clone(&trace)),
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let n = if smoke { 6 } else { 16 };
+    let steps = if smoke { 4 } else { 10 };
+
+    let before = obs::counters().snapshot();
+    let t0 = Instant::now();
+    let drive = || -> anyhow::Result<()> {
+        // Cold pass (misses + generation), then a warm pass over the
+        // same requests (request-cache hits) for a non-trivial ratio.
+        for pass in 0..2 {
+            for i in 0..n {
+                let mut r = GenRequest::new(
+                    &format!("red circle x{} y{}", 2 + i % 10, 3 + i % 9),
+                    i as u64,
+                );
+                r.steps = steps;
+                r.sampler = "ddim".into();
+                client
+                    .generate(r)
+                    .map_err(|e| anyhow::anyhow!("pass {pass} req {i}: {e}"))?;
+            }
+        }
+        Ok(())
+    };
+    let driven = drive();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let served = obs::counters().snapshot().delta_since(&before);
+    server.shutdown();
+    driven?;
+
+    // Steady-state allocation cost per denoising step: warm everything
+    // first (plan resolution, runtime buffers), then measure direct
+    // coordinator generates so server-thread churn stays out of the
+    // numerator. Counting is armed only around the measured region.
+    let alloc_iters = if smoke { 2 } else { 4 };
+    let mut warm = GenRequest::new("alloc probe prompt", 77_001);
+    warm.steps = steps;
+    warm.sampler = "ddim".into();
+    coord.generate_one(&warm)?;
+    let was_enabled = alloc::enabled();
+    alloc::enable();
+    let alloc_before = alloc::snapshot();
+    for k in 0..alloc_iters {
+        let mut r = GenRequest::new("alloc probe prompt", 78_000 + k as u64);
+        r.steps = steps;
+        r.sampler = "ddim".into();
+        coord.generate_one(&r)?;
+    }
+    let alloc_delta = alloc::snapshot().delta_since(&alloc_before);
+    if !was_enabled {
+        alloc::disable();
+    }
+    let allocs_per_step = if alloc::counting_active() {
+        alloc_delta.allocs as f64 / (alloc_iters * steps) as f64
+    } else {
+        0.0
+    };
+
+    // Job latency from the trace ring: queued -> terminal, per job.
+    let spans = trace.snapshot();
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let mut jobs_seen: Vec<u64> = Vec::new();
+    for ev in &spans {
+        if !ev.phase.is_entry() || jobs_seen.contains(&ev.job) {
+            continue;
+        }
+        jobs_seen.push(ev.job);
+        let terminal = spans
+            .iter()
+            .find(|t| t.job == ev.job && t.phase.is_terminal())
+            .ok_or_else(|| anyhow::anyhow!("job {} has no terminal span", ev.job))?;
+        let extra = spans
+            .iter()
+            .filter(|t| t.job == ev.job && t.phase.is_terminal())
+            .count();
+        anyhow::ensure!(extra == 1, "job {} has {extra} terminal spans, want exactly 1", ev.job);
+        lat_ms.push((terminal.ts_us.saturating_sub(ev.ts_us)) as f64 / 1e3);
+    }
+    anyhow::ensure!(!lat_ms.is_empty(), "trace ring recorded no complete jobs");
+    let counts = trace.lifecycle_counts();
+    anyhow::ensure!(
+        counts.terminals() == counts.enqueued,
+        "drained server must have terminals == enqueued (got {} vs {})",
+        counts.terminals(),
+        counts.enqueued
+    );
+
+    let req = served.ns("request").expect("request namespace counters");
+    let sim = served.backend("sim").expect("sim backend counters");
+    let total_steps = served.steps_full + served.steps_partial;
+    let _ = std::fs::remove_dir_all(&art_dir);
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    Ok(Measured {
+        steps_per_sec: total_steps as f64 / wall_s.max(1e-9),
+        allocs_per_step,
+        bytes_moved: sim.bytes_moved(),
+        executes: sim.executes,
+        cache_hit_ratio: req.hit_ratio(),
+        request_hits: req.hits,
+        request_misses: req.misses,
+        steps: total_steps,
+        p50_ms: stats::percentile(&lat_ms, 50.0),
+        p95_ms: stats::percentile(&lat_ms, 95.0),
+        jobs: lat_ms.len(),
+    })
+}
+
+/// Schema-validate a BENCH_obs.json document: required keys present,
+/// load-bearing counters non-zero.
+fn validate(doc: &Json) -> Result<(), String> {
+    for k in REQUIRED_KEYS {
+        if doc.get(k).is_none() {
+            return Err(format!("BENCH_obs.json missing required key '{k}'"));
+        }
+    }
+    let nonzero = ["steps_per_sec", "bytes_moved", "p95_ms"];
+    for k in nonzero {
+        let v = doc.get_f64(k).ok_or_else(|| format!("key '{k}' is not a number"))?;
+        if v <= 0.0 {
+            return Err(format!("key '{k}' must be > 0 (got {v})"));
+        }
+    }
+    let ratio = doc.get_f64("cache_hit_ratio").unwrap_or(-1.0);
+    if !(0.0..=1.0).contains(&ratio) {
+        return Err(format!("cache_hit_ratio {ratio} outside [0, 1]"));
+    }
+    if doc.get_f64("trace_schema_version") != Some(obs::TRACE_SCHEMA_VERSION as f64) {
+        return Err(format!(
+            "trace_schema_version mismatch (want {})",
+            obs::TRACE_SCHEMA_VERSION
+        ));
+    }
+    Ok(())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let commit = std::env::args().any(|a| a == "--commit");
+
+    let m = run_workload(smoke).expect("obs workload");
+    println!(
+        "obs bench: {} jobs | {:.0} steps/s ({} steps) | {} executes, {} bytes moved",
+        m.jobs, m.steps_per_sec, m.steps, m.executes, m.bytes_moved
+    );
+    println!(
+        "  request cache: {} hits / {} misses (ratio {:.2}) | job latency p50 {:.1} ms p95 {:.1} ms",
+        m.request_hits, m.request_misses, m.cache_hit_ratio, m.p50_ms, m.p95_ms
+    );
+    println!(
+        "  allocs/step: {:.0} (counting {})",
+        m.allocs_per_step,
+        if alloc::counting_active() { "active" } else { "unavailable" }
+    );
+
+    // Warm pass over identical requests: every one must hit.
+    assert!(m.cache_hit_ratio > 0.0, "warm pass produced no request-cache hits");
+    assert!(m.bytes_moved > 0, "backend byte counters never moved");
+    assert!(m.steps > 0, "step counters never moved");
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_obs.json");
+    let committed = std::fs::read_to_string(&out)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok());
+    // The regression gate rides the *committed* limit so a bad change
+    // fails `--bench-commit` instead of silently ratcheting the budget.
+    let limit = committed
+        .as_ref()
+        .and_then(|d| d.get_f64("allocs_per_step_limit"))
+        .unwrap_or(8192.0);
+    if alloc::counting_active() && m.allocs_per_step > 0.0 {
+        assert!(
+            m.allocs_per_step <= limit,
+            "allocs/step regression: measured {:.0} > committed limit {:.0}",
+            m.allocs_per_step,
+            limit
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("obs_trajectory")),
+        ("trace_schema_version", Json::num(obs::TRACE_SCHEMA_VERSION as f64)),
+        ("steps_per_sec", Json::num(m.steps_per_sec)),
+        ("allocs_per_step", Json::num(m.allocs_per_step)),
+        ("allocs_per_step_limit", Json::num(limit)),
+        ("bytes_moved", Json::num(m.bytes_moved as f64)),
+        ("executes", Json::num(m.executes as f64)),
+        ("steps", Json::num(m.steps as f64)),
+        ("cache_hit_ratio", Json::num(m.cache_hit_ratio)),
+        ("request_hits", Json::num(m.request_hits as f64)),
+        ("request_misses", Json::num(m.request_misses as f64)),
+        ("p50_ms", Json::num(m.p50_ms)),
+        ("p95_ms", Json::num(m.p95_ms)),
+        ("jobs", Json::num(m.jobs as f64)),
+        ("counting_alloc_active", Json::Bool(alloc::counting_active())),
+    ]);
+    validate(&doc).expect("fresh measurement must satisfy the BENCH_obs schema");
+    if let Some(prev) = &committed {
+        validate(prev).expect("committed BENCH_obs.json must satisfy the schema");
+    }
+
+    if commit {
+        std::fs::write(&out, doc.to_string()).expect("write BENCH_obs.json");
+        println!("wrote {}", out.display());
+    } else if smoke {
+        println!("bench_obs --smoke: schema + counter + trace invariants hold");
+    }
+}

@@ -22,6 +22,7 @@
 use anyhow::Result;
 
 use crate::coordinator::{GenRequest, GenResult};
+use crate::obs;
 use crate::runtime::BackendKind;
 use crate::pas::calibrate::CalibrationReport;
 use crate::pas::plan::{PasConfig, SamplingPlan};
@@ -273,19 +274,58 @@ impl Cache {
     }
 
     /// Decode a stored payload; undecodable entries self-heal (removed).
+    ///
+    /// Observability chokepoint: every typed lookup bumps the
+    /// per-namespace hit/miss counters and, inside a [`TraceScope`],
+    /// records a `cache-lookup` span attributed to the scope's job (a
+    /// self-healed corrupt entry counts as a miss).
+    ///
+    /// [`TraceScope`]: crate::obs::TraceScope
     fn get_typed<T: Codec>(&self, key: CacheKey) -> Option<T> {
-        let bytes = self.store.get(T::NAMESPACE, key)?;
-        match decode_bytes(&bytes) {
-            Ok(v) => Some(v),
-            Err(_) => {
-                self.store.remove(T::NAMESPACE, key);
-                None
+        let t0 = std::time::Instant::now();
+        let out = self.store.get(T::NAMESPACE, key).and_then(|bytes| {
+            match decode_bytes(&bytes) {
+                Ok(v) => Some(v),
+                Err(_) => {
+                    self.store.remove(T::NAMESPACE, key);
+                    None
+                }
             }
+        });
+        let hit = out.is_some();
+        if hit {
+            obs::counters().cache_hit(T::NAMESPACE);
+        } else {
+            obs::counters().cache_miss(T::NAMESPACE);
         }
+        obs::with_current(|sink, job| {
+            sink.record(
+                obs::SpanEvent::new(job, obs::Phase::CacheLookup)
+                    .with_namespace(T::NAMESPACE)
+                    .with_hit(hit)
+                    .with_dur_us(t0.elapsed().as_micros() as u64),
+            );
+        });
+        out
     }
 
+    /// Observability chokepoint mirroring [`Cache::get_typed`]: counts
+    /// evictions per namespace and records a `cache-write` span.
     fn put_typed<T: Codec>(&self, key: CacheKey, value: &T) -> Result<usize> {
-        self.store.put(T::NAMESPACE, key, &encode_bytes(value))
+        let payload = encode_bytes(value);
+        let bytes = payload.len() as u64;
+        let res = self.store.put(T::NAMESPACE, key, &payload);
+        if let Ok(evicted) = &res {
+            obs::counters().cache_evictions(T::NAMESPACE, *evicted as u64);
+        }
+        obs::with_current(|sink, job| {
+            sink.record(
+                obs::SpanEvent::new(job, obs::Phase::CacheWrite)
+                    .with_namespace(T::NAMESPACE)
+                    .with_bytes(bytes),
+            );
+        });
+        res
     }
 
     // ------------------------------------------------------------ calib
@@ -363,11 +403,13 @@ impl Cache {
                 candidates: front.candidates.iter().take(1).cloned().collect(),
                 ..front.clone()
             };
-            evicted += self.store.put(
+            let summary_evicted = self.store.put(
                 NS_PLAN,
                 best_plan_key(self.key_hash, front.total_steps),
                 &encode_bytes(&summary),
             )?;
+            obs::counters().cache_evictions(NS_PLAN, summary_evicted as u64);
+            evicted += summary_evicted;
         }
         Ok(evicted)
     }

@@ -632,6 +632,18 @@ impl Coordinator {
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             step_ms.push(ms);
             obs.on_step(i, action, ms);
+            // Observability: per-action counters always; a `step` span
+            // when a TraceScope is active (attributed to the scope's
+            // job — for a batch, its lead job).
+            crate::obs::counters().step(action.label());
+            crate::obs::with_current(|sink, job| {
+                sink.record(
+                    crate::obs::SpanEvent::new(job, crate::obs::Phase::Step)
+                        .with_step(i as u64)
+                        .with_action(action.label())
+                        .with_dur_us((ms * 1e3) as u64),
+                );
+            });
         }
 
         let total_ms = t_start.elapsed().as_secs_f64() * 1e3;
@@ -711,6 +723,7 @@ impl Coordinator {
     /// repeating the last latent (an Arc clone, not a buffer copy) and
     /// the padded outputs are sliced back off.
     pub fn decode(&self, latents: &[Tensor]) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
         let mut out = Vec::with_capacity(latents.len());
         for chunk_size in self.chunk_sizes(latents.len()).map_err(anyhow::Error::from)? {
             let start = out.len();
@@ -730,6 +743,14 @@ impl Coordinator {
                 out.push(img.index0(i));
             }
         }
+        crate::obs::counters().decode();
+        crate::obs::with_current(|sink, job| {
+            sink.record(
+                crate::obs::SpanEvent::new(job, crate::obs::Phase::Decode)
+                    .with_batch(latents.len() as u64)
+                    .with_dur_us(t0.elapsed().as_micros() as u64),
+            );
+        });
         Ok(out)
     }
 }

@@ -111,6 +111,28 @@
 //! re-expressed over the job API; `bench_serving` holds the event
 //! channel to < 5% p50 overhead over the blocking loop.
 //!
+//! ## Observability ([`obs`])
+//!
+//! The measurement layer: a lock-light `TraceSink` records structured
+//! span events (job id, phase, step index, PAS action, cache namespace
+//! + hit/miss, backend kind, bytes, duration) into a bounded ring and
+//! an optional JSONL file, with the `JobId` threaded from `server::api`
+//! through the batcher, coordinator denoising loop, cache facade and
+//! runtime service via a thread-local `TraceScope` — so every cache
+//! lookup and backend `execute` is attributable to the job that caused
+//! it. Process-global labeled counters (`obs::counters`) split cache
+//! traffic per namespace, executes/bytes per backend and steps per PAS
+//! action; a counting global allocator (`obs::alloc`, feature
+//! `count-alloc`, armed at runtime) makes the zero-copy invariants
+//! regression-visible as allocations per step. `Metrics` latency
+//! percentiles now come from a bounded deterministic reservoir
+//! (`obs::reservoir`); the consistent lifecycle snapshot is
+//! `TraceSink::lifecycle_counts`. Surfaces: `sd-acc generate --trace`,
+//! `serve --trace-out`/`--json`, `cache stats --json`, the `sd-acc
+//! trace` report subcommand, and `bench_obs` (emits `BENCH_obs.json`
+//! via `ci.sh --bench-commit`). JSONL span lines are versioned by
+//! `obs::TRACE_SCHEMA_VERSION`.
+//!
 //! ## Mixed precision ([`quant`])
 //!
 //! The paper's third workload problem — diverse weight and activation
@@ -126,6 +148,7 @@ pub mod cache;
 pub mod coordinator;
 pub mod hwsim;
 pub mod models;
+pub mod obs;
 pub mod pas;
 pub mod quality;
 pub mod quant;
@@ -134,3 +157,11 @@ pub mod scheduler;
 pub mod server;
 pub mod testing;
 pub mod util;
+
+/// Counting allocator registration (see [`obs::alloc`]). Compiled in
+/// under the default `count-alloc` feature; counting itself stays a
+/// single relaxed-atomic check per allocation until armed at runtime
+/// (`SD_ACC_COUNT_ALLOC=1` or `obs::alloc::enable`).
+#[cfg(feature = "count-alloc")]
+#[global_allocator]
+static GLOBAL_ALLOCATOR: obs::alloc::CountingAlloc = obs::alloc::CountingAlloc;

@@ -7,6 +7,7 @@
 //!   simulate   run the accelerator performance model on a real SD arch
 //!   quant      mixed precision: calibrate | search | report
 //!   cache      persistent cache maintenance (stats | gc | clear)
+//!   trace      summarise a span trace (JSONL) written by generate/serve
 //!   info       artifact + manifest summary
 //!
 //! All compute goes through AOT artifacts; python never runs here.
@@ -20,6 +21,8 @@ use sd_acc::pas::plan::StepAction;
 use sd_acc::hwsim::arch::{AccelConfig, Policy};
 use sd_acc::hwsim::engine::{simulate_unet_step, simulate_unet_step_quant};
 use sd_acc::models::inventory::{arch_by_name, total_macs, unet_ops};
+use sd_acc::obs::{self, Phase, SpanEvent, TraceScope, TraceSink};
+use sd_acc::obs::trace::DEFAULT_RING_CAP;
 use sd_acc::pas::calibrate::Calibrator;
 use sd_acc::pas::plan::{PasConfig, SamplingPlan};
 use sd_acc::quality;
@@ -32,6 +35,9 @@ use sd_acc::util::cli::{usage, Args, OptSpec};
 use sd_acc::util::table::{f, ratio, Table};
 
 fn main() -> ExitCode {
+    // Arm the counting allocator when SD_ACC_COUNT_ALLOC=1 (no-op
+    // otherwise; counters stay a single relaxed load per allocation).
+    sd_acc::obs::alloc::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         print_help();
@@ -45,6 +51,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(rest),
         "quant" => cmd_quant(rest),
         "cache" => cmd_cache(rest),
+        "trace" => cmd_trace(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
             print_help();
@@ -64,7 +71,7 @@ fn main() -> ExitCode {
 fn print_help() {
     println!(
         "sd-acc {} — SD-Acc reproduction (phase-aware sampling + HW co-design)\n\n\
-         usage: sd-acc <generate|serve|calibrate|simulate|quant|cache|info> [options]\n\
+         usage: sd-acc <generate|serve|calibrate|simulate|quant|cache|trace|info> [options]\n\
          run a subcommand with --help for its options",
         sd_acc::util::VERSION
     );
@@ -220,6 +227,8 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "auto", help: "resolve the best cached PAS plan (SamplingPlan::Auto)", takes_value: false, default: None },
         OptSpec { name: "quant", help: "mixed-precision scheme (fp16 | w8a8 | w4a8 | ...)", takes_value: true, default: None },
         OptSpec { name: "progress", help: "stream per-step progress while generating", takes_value: false, default: None },
+        OptSpec { name: "trace", help: "record a span trace of this run (JSONL)", takes_value: false, default: None },
+        OptSpec { name: "trace-out", help: "span trace path (implies --trace)", takes_value: true, default: Some("trace.jsonl") },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -230,6 +239,21 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
     let (_svc, coord) = start_runtime(&args)?;
     let m = coord.runtime().manifest().model.clone();
     let cache = open_cache(&args, &coord)?;
+    // `--trace` records every stage of this single run (job id 0): the
+    // lifecycle spans below, plus — through the scope — the cache
+    // lookups, denoising steps and backend executes they cause.
+    let trace = if args.flag("trace") || raw.iter().any(|a| a == "--trace-out") {
+        let path = PathBuf::from(args.get("trace-out").unwrap());
+        Some((TraceSink::with_file(DEFAULT_RING_CAP, &path).map_err(|e| format!("{e:#}"))?, path))
+    } else {
+        None
+    };
+    let _scope = trace
+        .as_ref()
+        .map(|(sink, _)| TraceScope::enter(std::sync::Arc::clone(sink), 0));
+    if let Some((sink, _)) = &trace {
+        sink.record(SpanEvent::new(0, Phase::Queued));
+    }
 
     let steps = args.get_usize("steps")?.unwrap();
     let mut req = GenRequest::new(args.get("prompt").unwrap(), args.get_usize("seed")?.unwrap() as u64);
@@ -286,6 +310,16 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
     let out = PathBuf::from(args.get("out").unwrap());
     quality::write_ppm(&imgs[0], m.img_h, m.img_w, &out).map_err(|e| format!("{e:#}"))?;
     println!("wrote {}", out.display());
+    if let Some((sink, path)) = &trace {
+        sink.record(SpanEvent::new(0, Phase::Done));
+        sink.flush();
+        println!(
+            "trace: {} spans -> {} (summarise with `sd-acc trace {}`)",
+            sink.recorded(),
+            path.display(),
+            path.display()
+        );
+    }
     Ok(())
 }
 
@@ -323,6 +357,8 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
         backend_opt(),
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
+        OptSpec { name: "trace-out", help: "record per-job span trace to this JSONL path", takes_value: true, default: None },
+        OptSpec { name: "json", help: "print the final metrics snapshot as JSON", takes_value: false, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -335,6 +371,13 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
     }
     let (_svc, coord) = start_runtime(&args)?;
     let cache = open_cache(&args, &coord)?.map(Arc::new);
+    let trace = match args.get("trace-out") {
+        Some(p) => Some((
+            TraceSink::with_file(DEFAULT_RING_CAP, Path::new(p)).map_err(|e| format!("{e:#}"))?,
+            PathBuf::from(p),
+        )),
+        None => None,
+    };
 
     let n = args.get_usize("requests")?.unwrap();
     let steps = args.get_usize("steps")?.unwrap();
@@ -346,6 +389,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
             max_wait: Duration::from_millis(args.get_u64("max-wait-ms")?.unwrap()),
             cache,
             max_queue: args.get_usize("max-queue")?.unwrap(),
+            trace: trace.as_ref().map(|(sink, _)| Arc::clone(sink)),
         },
     );
     let client = server.client();
@@ -395,6 +439,36 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = server.metrics.summary();
+    if args.flag("json") {
+        // Machine-readable snapshot: the relaxed summary plus the
+        // process-global obs counters (cumulative: includes any prior
+        // work in this process) and, when tracing, the lock-consistent
+        // lifecycle counts.
+        use sd_acc::util::json::Json;
+        let mut fields = vec![
+            ("wall_s", Json::Num(wall)),
+            ("summary", m.to_json()),
+            ("counters", obs::counters().snapshot().to_json()),
+        ];
+        if let Some((sink, _)) = &trace {
+            let lc = sink.lifecycle_counts();
+            fields.push((
+                "lifecycle",
+                Json::obj(vec![
+                    ("enqueued", Json::Num(lc.enqueued as f64)),
+                    ("done", Json::Num(lc.done as f64)),
+                    ("failed", Json::Num(lc.failed as f64)),
+                    ("cancelled", Json::Num(lc.cancelled as f64)),
+                ]),
+            ));
+        }
+        println!("{}", Json::obj(fields).to_string());
+        if let Some((sink, _)) = &trace {
+            sink.flush();
+        }
+        server.shutdown();
+        return Ok(());
+    }
     println!("\n== serve report ==");
     println!(
         "{} ok / {} failed in {:.2}s ({:.2} req/s)",
@@ -422,6 +496,15 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         println!(
             "request cache: {} hits, {} misses, {} evictions",
             m.cache_hits, m.cache_misses, m.cache_evictions
+        );
+    }
+    if let Some((sink, path)) = &trace {
+        sink.flush();
+        println!(
+            "trace: {} spans -> {} (summarise with `sd-acc trace {}`)",
+            sink.recorded(),
+            path.display(),
+            path.display()
         );
     }
     server.shutdown();
@@ -616,6 +699,7 @@ fn cmd_cache(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "max-entries", help: "entry cap enforced on open/gc", takes_value: true, default: None },
         OptSpec { name: "namespace", help: "restrict clear to one namespace (calib|plan|quant|request)", takes_value: true, default: None },
         OptSpec { name: "request-ttl-secs", help: "TTL for the request namespace (gc sweeps expired latents)", takes_value: true, default: None },
+        OptSpec { name: "json", help: "print stats as JSON instead of a table", takes_value: false, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -649,6 +733,37 @@ fn cmd_cache(raw: &[String]) -> Result<(), String> {
     match action {
         "stats" => {
             let s = store.stats();
+            if args.flag("json") {
+                use sd_acc::util::json::Json;
+                let mut fields = vec![
+                    ("dir", Json::Str(store.dir().display().to_string())),
+                    (
+                        "namespaces",
+                        Json::Arr(
+                            s.namespaces
+                                .iter()
+                                .map(|ns| {
+                                    Json::obj(vec![
+                                        ("namespace", Json::Str(ns.namespace.clone())),
+                                        ("entries", Json::Num(ns.entries as f64)),
+                                        ("bytes", Json::Num(ns.bytes as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("entries", Json::Num(s.entries as f64)),
+                    ("bytes", Json::Num(s.bytes as f64)),
+                ];
+                if let Some(cap) = requested_max_bytes {
+                    fields.push(("max_bytes", Json::Num(cap as f64)));
+                }
+                if let Some(h) = store.meta("manifest_hash") {
+                    fields.push(("manifest_hash", Json::Str(h)));
+                }
+                println!("{}", Json::obj(fields).to_string());
+                return Ok(());
+            }
             println!("cache dir : {}", store.dir().display());
             if let Some(h) = store.meta("manifest_hash") {
                 println!("manifest  : {h}");
@@ -683,6 +798,151 @@ fn cmd_cache(raw: &[String]) -> Result<(), String> {
             }
         }
         other => return Err(format!("unknown cache action '{other}' (stats|gc|clear)")),
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------------------- trace
+
+/// `sd-acc trace <file>`: parse a JSONL span trace written by
+/// `generate --trace` / `serve --trace-out` and print a per-job summary.
+fn cmd_trace(raw: &[String]) -> Result<(), String> {
+    let spec = [
+        OptSpec { name: "json", help: "print the per-job summary as JSON", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    if args.flag("help") || args.positional().is_empty() {
+        print!("{}", usage("sd-acc trace <file.jsonl>", "summarise a recorded span trace", &spec));
+        return if args.flag("help") { Ok(()) } else { Err("missing trace file argument".into()) };
+    }
+    let path = PathBuf::from(&args.positional()[0]);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut spans = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        // Schema-version mismatches surface here as a hard error — a
+        // trace written by a different vocabulary must not be
+        // mis-summarised silently.
+        spans.push(
+            SpanEvent::parse_line(line).map_err(|e| format!("line {}: {e:#}", i + 1))?,
+        );
+    }
+    if spans.is_empty() {
+        return Err(format!("{}: no spans", path.display()));
+    }
+
+    // Aggregate per job, in first-seen order.
+    struct JobAgg {
+        job: u64,
+        spans: u64,
+        steps: u64,
+        lookups: u64,
+        lookup_hits: u64,
+        executes: u64,
+        bytes: u64,
+        first_us: u64,
+        last_us: u64,
+        terminal: Option<Phase>,
+    }
+    let mut jobs: Vec<JobAgg> = Vec::new();
+    for ev in &spans {
+        let agg = match jobs.iter_mut().find(|a| a.job == ev.job) {
+            Some(a) => a,
+            None => {
+                jobs.push(JobAgg {
+                    job: ev.job,
+                    spans: 0,
+                    steps: 0,
+                    lookups: 0,
+                    lookup_hits: 0,
+                    executes: 0,
+                    bytes: 0,
+                    first_us: ev.ts_us,
+                    last_us: ev.ts_us,
+                    terminal: None,
+                });
+                jobs.last_mut().unwrap()
+            }
+        };
+        agg.spans += 1;
+        agg.first_us = agg.first_us.min(ev.ts_us);
+        agg.last_us = agg.last_us.max(ev.ts_us);
+        agg.bytes += ev.bytes.unwrap_or(0);
+        match ev.phase {
+            Phase::Step => agg.steps += 1,
+            Phase::CacheLookup => {
+                agg.lookups += 1;
+                if ev.hit == Some(true) {
+                    agg.lookup_hits += 1;
+                }
+            }
+            Phase::Execute => agg.executes += 1,
+            p if p.is_terminal() => agg.terminal = Some(p),
+            _ => {}
+        }
+    }
+
+    if args.flag("json") {
+        use sd_acc::util::json::Json;
+        let out = Json::obj(vec![
+            ("trace_schema_version", Json::Num(sd_acc::obs::TRACE_SCHEMA_VERSION as f64)),
+            ("spans", Json::Num(spans.len() as f64)),
+            (
+                "jobs",
+                Json::Arr(
+                    jobs.iter()
+                        .map(|a| {
+                            Json::obj(vec![
+                                ("job", Json::Num(a.job as f64)),
+                                ("spans", Json::Num(a.spans as f64)),
+                                ("steps", Json::Num(a.steps as f64)),
+                                ("cache_lookups", Json::Num(a.lookups as f64)),
+                                ("cache_hits", Json::Num(a.lookup_hits as f64)),
+                                ("executes", Json::Num(a.executes as f64)),
+                                ("bytes", Json::Num(a.bytes as f64)),
+                                ("span_ms", Json::Num((a.last_us - a.first_us) as f64 / 1e3)),
+                                (
+                                    "terminal",
+                                    match a.terminal {
+                                        Some(p) => Json::Str(p.as_str().to_string()),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        println!("{}", out.to_string());
+        return Ok(());
+    }
+
+    println!("{}: {} spans, {} jobs", path.display(), spans.len(), jobs.len());
+    let mut t = Table::new(&[
+        "job", "spans", "steps", "lookups", "hits", "executes", "bytes", "span ms", "terminal",
+    ]);
+    for a in &jobs {
+        t.row(vec![
+            a.job.to_string(),
+            a.spans.to_string(),
+            a.steps.to_string(),
+            a.lookups.to_string(),
+            a.lookup_hits.to_string(),
+            a.executes.to_string(),
+            fmt_bytes(a.bytes),
+            f((a.last_us - a.first_us) as f64 / 1e3, 1),
+            a.terminal.map(|p| p.as_str().to_string()).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    let orphans = jobs.iter().filter(|a| a.terminal.is_none()).count();
+    if orphans > 0 {
+        println!("warning: {orphans} job(s) have no terminal span (truncated trace?)");
     }
     Ok(())
 }

@@ -1,0 +1,172 @@
+//! Counting global allocator.
+//!
+//! A thin wrapper over [`std::alloc::System`] that counts allocation
+//! events and bytes behind a runtime switch, making the hot path's
+//! zero-copy invariants (PR 3/5) regression-visible as *numbers* —
+//! allocations per steady-state step — instead of only structural tests.
+//!
+//! Two gates, both off by default:
+//! - **Compile-time**: the wrapper is only registered as
+//!   `#[global_allocator]` under the `count-alloc` feature (default-on in
+//!   this repo; [`registered`] reports it).
+//! - **Runtime**: even when registered, counting is a single relaxed
+//!   `AtomicBool` load until armed via [`enable`] or
+//!   `SD_ACC_COUNT_ALLOC=1` ([`init_from_env`]).
+//!
+//! Debug/observability-only (standing invariant): these counters must
+//! never feed cache keys or influence generated bits.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+
+/// The wrapper type registered as the global allocator (see `lib.rs`).
+pub struct CountingAlloc;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: delegates every operation verbatim to `System`; the counting
+// side effects touch only lock-free atomics and never allocate, so the
+// GlobalAlloc contract is inherited from `System` unchanged.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Relaxed) {
+            ALLOCS.fetch_add(1, Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ENABLED.load(Relaxed) {
+            ALLOCS.fetch_add(1, Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        if ENABLED.load(Relaxed) {
+            DEALLOCS.fetch_add(1, Relaxed);
+        }
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ENABLED.load(Relaxed) {
+            ALLOCS.fetch_add(1, Relaxed);
+            BYTES.fetch_add(new_size as u64, Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Whether the wrapper is compiled in as the global allocator.
+pub fn registered() -> bool {
+    cfg!(feature = "count-alloc")
+}
+
+/// Arm counting (no effect on numbers unless [`registered`]).
+pub fn enable() {
+    ENABLED.store(true, Relaxed);
+}
+
+/// Disarm counting.
+pub fn disable() {
+    ENABLED.store(false, Relaxed);
+}
+
+/// Whether counting is currently armed.
+pub fn enabled() -> bool {
+    ENABLED.load(Relaxed)
+}
+
+/// Arm counting if `SD_ACC_COUNT_ALLOC=1` is set in the environment.
+pub fn init_from_env() {
+    if std::env::var("SD_ACC_COUNT_ALLOC").as_deref() == Ok("1") {
+        enable();
+    }
+}
+
+/// True when allocation numbers are actually being produced
+/// (compiled in *and* armed).
+pub fn counting_active() -> bool {
+    registered() && enabled()
+}
+
+/// Cumulative allocation counters at a point in time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    /// Allocation events (alloc / alloc_zeroed / realloc).
+    pub allocs: u64,
+    /// Deallocation events.
+    pub deallocs: u64,
+    /// Total bytes requested by counted allocation events.
+    pub bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Fieldwise `self - earlier` (saturating).
+    pub fn delta_since(&self, earlier: &AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            allocs: self.allocs.saturating_sub(earlier.allocs),
+            deallocs: self.deallocs.saturating_sub(earlier.deallocs),
+            bytes: self.bytes.saturating_sub(earlier.bytes),
+        }
+    }
+}
+
+/// Read the cumulative counters (relaxed loads; use deltas).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Relaxed),
+        deallocs: DEALLOCS.load(Relaxed),
+        bytes: BYTES.load(Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_observes_heap_traffic_when_registered() {
+        if !registered() {
+            // Feature off: the wrapper is not the global allocator and
+            // the counters legitimately stay at zero.
+            assert_eq!(snapshot(), AllocSnapshot::default());
+            return;
+        }
+        let before = snapshot();
+        enable();
+        // A boxed slice guarantees at least one counted allocation of at
+        // least this size while armed.
+        let buf: Vec<u8> = Vec::with_capacity(64 * 1024);
+        disable();
+        let delta = snapshot().delta_since(&before);
+        drop(buf);
+        assert!(delta.allocs >= 1, "expected counted allocations, got {delta:?}");
+        assert!(delta.bytes >= 64 * 1024, "expected counted bytes, got {delta:?}");
+    }
+
+    #[test]
+    fn disarmed_counting_is_cheap_and_stable() {
+        // With counting disarmed the only cost is one relaxed load per
+        // allocator call; this just checks enable/disable toggling.
+        let was = enabled();
+        disable();
+        assert!(!enabled());
+        if was {
+            enable();
+        }
+    }
+
+    #[test]
+    fn delta_saturates() {
+        let a = AllocSnapshot { allocs: 1, deallocs: 2, bytes: 3 };
+        let b = AllocSnapshot { allocs: 5, deallocs: 5, bytes: 5 };
+        assert_eq!(a.delta_since(&b), AllocSnapshot::default());
+    }
+}

@@ -1,0 +1,380 @@
+//! Process-global labeled counters.
+//!
+//! The flat `server::Metrics` struct aggregates per-server totals; these
+//! counters carry the *labels* it cannot express: cache traffic per
+//! namespace, execute count and bytes moved per backend, denoise steps
+//! per PAS action. They are plain relaxed atomics — cheap enough to bump
+//! on the hot path — and cumulative for the process lifetime, so
+//! consumers (benches, tests, `serve --json`) work with deltas between
+//! two [`CountersSnapshot`]s.
+//!
+//! Observability-only (standing invariant): counter values must never
+//! feed cache keys or influence generated bits.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::util::json::Json;
+
+/// Cache namespaces with dedicated counters, in snapshot order. These
+/// mirror the `cache::NS_*` constants.
+pub const CACHE_NAMESPACES: [&str; 4] = ["calib", "plan", "quant", "request"];
+
+/// Backend kinds with dedicated counters, in snapshot order.
+pub const BACKENDS: [&str; 2] = ["xla", "sim"];
+
+#[derive(Debug)]
+struct NsCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl NsCounters {
+    const fn new() -> NsCounters {
+        NsCounters {
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct BackendCounters {
+    executes: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+impl BackendCounters {
+    const fn new() -> BackendCounters {
+        BackendCounters {
+            executes: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The process-global counter set. Obtain via [`counters`].
+#[derive(Debug)]
+pub struct Counters {
+    cache: [NsCounters; 4],
+    backend: [BackendCounters; 2],
+    steps_full: AtomicU64,
+    steps_partial: AtomicU64,
+    decodes: AtomicU64,
+}
+
+static GLOBAL: Counters = Counters {
+    cache: [NsCounters::new(), NsCounters::new(), NsCounters::new(), NsCounters::new()],
+    backend: [BackendCounters::new(), BackendCounters::new()],
+    steps_full: AtomicU64::new(0),
+    steps_partial: AtomicU64::new(0),
+    decodes: AtomicU64::new(0),
+};
+
+/// The process-global labeled counters.
+pub fn counters() -> &'static Counters {
+    &GLOBAL
+}
+
+fn ns_index(ns: &str) -> Option<usize> {
+    CACHE_NAMESPACES.iter().position(|n| *n == ns)
+}
+
+fn backend_index(backend: &str) -> Option<usize> {
+    BACKENDS.iter().position(|b| *b == backend)
+}
+
+impl Counters {
+    /// One cache lookup that found a decodable entry in `ns`.
+    pub fn cache_hit(&self, ns: &str) {
+        if let Some(i) = ns_index(ns) {
+            self.cache[i].hits.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// One cache lookup that missed (or self-healed a corrupt entry) in `ns`.
+    pub fn cache_miss(&self, ns: &str) {
+        if let Some(i) = ns_index(ns) {
+            self.cache[i].misses.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// `n` entries evicted from `ns` by a write.
+    pub fn cache_evictions(&self, ns: &str, n: u64) {
+        if let Some(i) = ns_index(ns) {
+            if n > 0 {
+                self.cache[i].evictions.fetch_add(n, Relaxed);
+            }
+        }
+    }
+
+    /// One backend execute moving `bytes_in` operand bytes and
+    /// `bytes_out` result bytes.
+    pub fn execute(&self, backend: &str, bytes_in: u64, bytes_out: u64) {
+        if let Some(i) = backend_index(backend) {
+            self.backend[i].executes.fetch_add(1, Relaxed);
+            self.backend[i].bytes_in.fetch_add(bytes_in, Relaxed);
+            self.backend[i].bytes_out.fetch_add(bytes_out, Relaxed);
+        }
+    }
+
+    /// One denoise step with the given PAS action label ("full"/"partial").
+    pub fn step(&self, action_label: &str) {
+        if action_label == "full" {
+            self.steps_full.fetch_add(1, Relaxed);
+        } else {
+            self.steps_partial.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// One VAE decode call.
+    pub fn decode(&self) {
+        self.decodes.fetch_add(1, Relaxed);
+    }
+
+    /// Point-in-time copy. Each label is read with a relaxed load;
+    /// cross-label consistency is not guaranteed (use deltas over quiet
+    /// periods, or the trace-sink lifecycle counts for the consistent
+    /// path).
+    pub fn snapshot(&self) -> CountersSnapshot {
+        CountersSnapshot {
+            cache: CACHE_NAMESPACES
+                .iter()
+                .zip(&self.cache)
+                .map(|(ns, c)| NsSnapshot {
+                    namespace: ns,
+                    hits: c.hits.load(Relaxed),
+                    misses: c.misses.load(Relaxed),
+                    evictions: c.evictions.load(Relaxed),
+                })
+                .collect(),
+            backends: BACKENDS
+                .iter()
+                .zip(&self.backend)
+                .map(|(b, c)| BackendSnapshot {
+                    backend: b,
+                    executes: c.executes.load(Relaxed),
+                    bytes_in: c.bytes_in.load(Relaxed),
+                    bytes_out: c.bytes_out.load(Relaxed),
+                })
+                .collect(),
+            steps_full: self.steps_full.load(Relaxed),
+            steps_partial: self.steps_partial.load(Relaxed),
+            decodes: self.decodes.load(Relaxed),
+        }
+    }
+}
+
+/// Per-namespace cache counters at snapshot time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NsSnapshot {
+    pub namespace: &'static str,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl NsSnapshot {
+    /// hits / (hits + misses); 0 when there was no traffic.
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Per-backend counters at snapshot time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendSnapshot {
+    pub backend: &'static str,
+    pub executes: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+impl BackendSnapshot {
+    /// Operand + result bytes for this backend.
+    pub fn bytes_moved(&self) -> u64 {
+        self.bytes_in + self.bytes_out
+    }
+}
+
+/// Point-in-time view of all labeled counters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CountersSnapshot {
+    pub cache: Vec<NsSnapshot>,
+    pub backends: Vec<BackendSnapshot>,
+    pub steps_full: u64,
+    pub steps_partial: u64,
+    pub decodes: u64,
+}
+
+impl CountersSnapshot {
+    /// Fieldwise `self - earlier` (saturating). Both snapshots come from
+    /// the same global counter set, so label order is fixed.
+    pub fn delta_since(&self, earlier: &CountersSnapshot) -> CountersSnapshot {
+        CountersSnapshot {
+            cache: self
+                .cache
+                .iter()
+                .zip(&earlier.cache)
+                .map(|(now, then)| NsSnapshot {
+                    namespace: now.namespace,
+                    hits: now.hits.saturating_sub(then.hits),
+                    misses: now.misses.saturating_sub(then.misses),
+                    evictions: now.evictions.saturating_sub(then.evictions),
+                })
+                .collect(),
+            backends: self
+                .backends
+                .iter()
+                .zip(&earlier.backends)
+                .map(|(now, then)| BackendSnapshot {
+                    backend: now.backend,
+                    executes: now.executes.saturating_sub(then.executes),
+                    bytes_in: now.bytes_in.saturating_sub(then.bytes_in),
+                    bytes_out: now.bytes_out.saturating_sub(then.bytes_out),
+                })
+                .collect(),
+            steps_full: self.steps_full.saturating_sub(earlier.steps_full),
+            steps_partial: self.steps_partial.saturating_sub(earlier.steps_partial),
+            decodes: self.decodes.saturating_sub(earlier.decodes),
+        }
+    }
+
+    /// Counters for one namespace.
+    pub fn ns(&self, namespace: &str) -> Option<&NsSnapshot> {
+        self.cache.iter().find(|c| c.namespace == namespace)
+    }
+
+    /// Counters for one backend.
+    pub fn backend(&self, backend: &str) -> Option<&BackendSnapshot> {
+        self.backends.iter().find(|b| b.backend == backend)
+    }
+
+    /// Total bytes moved across all backends.
+    pub fn total_bytes_moved(&self) -> u64 {
+        self.backends.iter().map(BackendSnapshot::bytes_moved).sum()
+    }
+
+    /// Total denoise steps across actions.
+    pub fn total_steps(&self) -> u64 {
+        self.steps_full + self.steps_partial
+    }
+
+    /// Machine-readable form (for `serve --json` and `BENCH_obs.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "cache",
+                Json::Arr(
+                    self.cache
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("namespace", Json::Str(c.namespace.to_string())),
+                                ("hits", Json::Num(c.hits as f64)),
+                                ("misses", Json::Num(c.misses as f64)),
+                                ("evictions", Json::Num(c.evictions as f64)),
+                                ("hit_ratio", Json::Num(c.hit_ratio())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "backends",
+                Json::Arr(
+                    self.backends
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("backend", Json::Str(b.backend.to_string())),
+                                ("executes", Json::Num(b.executes as f64)),
+                                ("bytes_in", Json::Num(b.bytes_in as f64)),
+                                ("bytes_out", Json::Num(b.bytes_out as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("steps_full", Json::Num(self.steps_full as f64)),
+            ("steps_partial", Json::Num(self.steps_partial as f64)),
+            ("decodes", Json::Num(self.decodes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The counters are process-global and tests run in parallel, so every
+    // assertion here is on deltas this test itself caused (>= not ==
+    // where another test could plausibly bump the same label).
+
+    #[test]
+    fn cache_labels_count_independently() {
+        let before = counters().snapshot();
+        counters().cache_hit("plan");
+        counters().cache_hit("plan");
+        counters().cache_miss("request");
+        counters().cache_evictions("request", 3);
+        counters().cache_hit("no-such-namespace"); // ignored, no panic
+        let d = counters().snapshot().delta_since(&before);
+        assert!(d.ns("plan").unwrap().hits >= 2);
+        assert!(d.ns("request").unwrap().misses >= 1);
+        assert!(d.ns("request").unwrap().evictions >= 3);
+        assert_eq!(d.ns("calib").unwrap().hits, 0);
+    }
+
+    #[test]
+    fn backend_bytes_accumulate() {
+        let before = counters().snapshot();
+        counters().execute("sim", 100, 50);
+        counters().execute("sim", 10, 5);
+        let d = counters().snapshot().delta_since(&before);
+        let sim = d.backend("sim").unwrap();
+        assert!(sim.executes >= 2);
+        assert!(sim.bytes_in >= 110);
+        assert!(sim.bytes_out >= 55);
+        assert!(d.total_bytes_moved() >= 165);
+    }
+
+    #[test]
+    fn step_actions_split_full_partial() {
+        let before = counters().snapshot();
+        counters().step("full");
+        counters().step("partial");
+        counters().step("partial");
+        let d = counters().snapshot().delta_since(&before);
+        assert!(d.steps_full >= 1);
+        assert!(d.steps_partial >= 2);
+        assert!(d.total_steps() >= 3);
+    }
+
+    #[test]
+    fn hit_ratio_handles_zero_traffic() {
+        let ns = NsSnapshot { namespace: "calib", hits: 0, misses: 0, evictions: 0 };
+        assert_eq!(ns.hit_ratio(), 0.0);
+        let ns = NsSnapshot { namespace: "calib", hits: 3, misses: 1, evictions: 0 };
+        assert!((ns.hit_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_json_has_all_labels() {
+        let j = counters().snapshot().to_json();
+        let cache = j.get("cache").and_then(Json::as_arr).unwrap();
+        assert_eq!(cache.len(), CACHE_NAMESPACES.len());
+        let backends = j.get("backends").and_then(Json::as_arr).unwrap();
+        assert_eq!(backends.len(), BACKENDS.len());
+        assert!(j.get_f64("steps_full").is_some());
+        assert!(j.get_f64("decodes").is_some());
+    }
+}

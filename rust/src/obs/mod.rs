@@ -1,0 +1,78 @@
+//! # Observability: per-job trace spans, labeled counters, allocation accounting
+//!
+//! This module is the crate's measurement layer. Everything SD-Acc claims
+//! to win — MAC reduction from phase-aware sampling, memory traffic from
+//! dataflow reuse, latency from batching — is a *measured* quantity, and
+//! this module is where those measurements become attributable numbers
+//! instead of aggregate guesses.
+//!
+//! ## Span vocabulary
+//!
+//! A trace is an ordered sequence of [`SpanEvent`]s recorded by a
+//! [`TraceSink`]. Every span carries the `job` id (the [`JobId`] minted by
+//! `server::api`, or request id `0` for single-shot CLI runs) of the job
+//! that *caused* it, plus a [`Phase`] naming what happened:
+//!
+//! | phase          | emitted by                  | extra fields                 |
+//! |----------------|-----------------------------|------------------------------|
+//! | `queued`       | `Client::submit_with`       | —                            |
+//! | `cache-hit`    | `Client::submit_with`       | — (request-cache fast path)  |
+//! | `scheduled`    | server worker (`run_group`) | `batch` (batch size)         |
+//! | `step`         | coordinator denoise loop    | `step`, `action`, `dur_us`   |
+//! | `decode`       | `Coordinator::decode`       | `batch` (latent count), `dur_us` |
+//! | `cache-lookup` | `Cache::get_typed`          | `namespace`, `hit`, `dur_us` |
+//! | `cache-write`  | `Cache::put_typed`          | `namespace`, `bytes`         |
+//! | `execute`      | `RuntimeHandle::execute`    | `backend`, `artifact`, `bytes`, `dur_us` |
+//! | `done`         | server / CLI terminal       | —                            |
+//! | `failed`       | server terminal             | —                            |
+//! | `cancelled`    | server terminal             | —                            |
+//!
+//! `queued` and `cache-hit` are *lifecycle entries*; `done`, `failed` and
+//! `cancelled` are *terminals*. The standing job-API invariant (exactly
+//! one terminal event per job) is mirrored here: a traced job records
+//! exactly one entry span and exactly one terminal span.
+//!
+//! Deep-layer spans (`cache-lookup`, `cache-write`, `execute`, `step`,
+//! `decode`) are attributed through a thread-local [`TraceScope`]: the
+//! layer that knows the job id enters a scope, and instrumented code
+//! below it records against the sink + job id of the innermost scope.
+//! For a batched group the scope carries the *lead* (first) job of the
+//! group — documented as "the job that caused this work". Outside any
+//! scope, deep-layer spans are dropped (the labeled counters still
+//! count).
+//!
+//! ## Schema versioning (standing invariant)
+//!
+//! JSONL span lines carry `"v": TRACE_SCHEMA_VERSION`. Any change to the
+//! span field set or field meaning must bump [`TRACE_SCHEMA_VERSION`];
+//! readers reject lines from other versions rather than misparse them.
+//!
+//! ## Counters and the allocator
+//!
+//! [`counters()`](counters::counters) is a process-global set of labeled
+//! atomics the flat `server::Metrics` struct cannot express: cache
+//! hit/miss/eviction *per namespace*, execute count and bytes moved *per
+//! backend*, step count *per PAS action*. [`alloc`] wraps the system
+//! allocator (feature `count-alloc`, runtime-armed via
+//! `SD_ACC_COUNT_ALLOC=1` or [`alloc::enable`]) so the zero-copy
+//! invariants of the hot path are regression-visible as allocations per
+//! step. Allocator and global counters are debug/observability-only:
+//! they must never feed cache keys or affect generated bits — standing
+//! invariant.
+//!
+//! [`JobId`]: crate::server::JobId
+//! [`SpanEvent`]: trace::SpanEvent
+//! [`Phase`]: trace::Phase
+//! [`TraceSink`]: trace::TraceSink
+//! [`TraceScope`]: trace::TraceScope
+//! [`TRACE_SCHEMA_VERSION`]: trace::TRACE_SCHEMA_VERSION
+
+pub mod alloc;
+pub mod counters;
+pub mod reservoir;
+pub mod trace;
+
+pub use counters::{counters, CountersSnapshot};
+pub use trace::{
+    with_current, LifecycleCounts, Phase, SpanEvent, TraceScope, TraceSink, TRACE_SCHEMA_VERSION,
+};

@@ -1,0 +1,137 @@
+//! Fixed-size reservoir sampler (Vitter's Algorithm R).
+//!
+//! Replaces the previously unbounded latency buffer in
+//! `server::Metrics`: memory stays `O(cap)` under sustained serving
+//! while percentiles remain an unbiased estimate of the full stream.
+//! Below capacity the reservoir keeps *every* observation, so small-run
+//! summaries (tests, short benches) are exact. The replacement RNG is a
+//! deterministic [`Pcg32`] with a fixed seed — same stream in, same
+//! samples out, on every run.
+
+use crate::util::rng::Pcg32;
+
+/// Default capacity used by `server::Metrics` for latency sampling.
+pub const DEFAULT_CAP: usize = 4096;
+
+/// Uniform reservoir sample over an unbounded stream of `f64`s.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Pcg32,
+}
+
+impl Default for Reservoir {
+    /// The `server::Metrics` configuration: [`DEFAULT_CAP`] samples.
+    fn default() -> Reservoir {
+        Reservoir::new(DEFAULT_CAP)
+    }
+}
+
+impl Reservoir {
+    /// A reservoir keeping at most `cap` samples (`cap > 0`).
+    pub fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0, "Reservoir: capacity must be positive");
+        // Fixed seed/stream: sampling is deterministic by design.
+        Reservoir { cap, seen: 0, samples: Vec::new(), rng: Pcg32::new(0x5dac_c0b5, 17) }
+    }
+
+    /// Observe one value. The i-th observation replaces a kept sample
+    /// with probability cap/i (Algorithm R), so every prefix is a
+    /// uniform sample of the stream so far.
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+            return;
+        }
+        let j = self.rng.gen_range(0, self.seen - 1);
+        if (j as usize) < self.cap {
+            self.samples[j as usize] = x;
+        }
+    }
+
+    /// The kept samples (unordered).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Number of kept samples (== min(seen, cap)).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True before the first observation.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Total observations pushed, kept or not.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Maximum kept samples.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn exact_below_capacity() {
+        let mut r = Reservoir::new(100);
+        for i in 0..50 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 50);
+        assert_eq!(r.seen(), 50);
+        let expect: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        assert_eq!(r.samples(), expect.as_slice(), "below cap keeps everything, in order");
+    }
+
+    #[test]
+    fn bounded_over_100k_observations() {
+        let mut r = Reservoir::new(DEFAULT_CAP);
+        for i in 0..100_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), DEFAULT_CAP, "memory stays bounded at capacity");
+        assert_eq!(r.seen(), 100_000);
+        for &x in r.samples() {
+            assert!((0.0..100_000.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Reservoir::new(64);
+        let mut b = Reservoir::new(64);
+        for i in 0..10_000 {
+            let x = (i * 7 % 1013) as f64;
+            a.push(x);
+            b.push(x);
+        }
+        assert_eq!(a.samples(), b.samples());
+    }
+
+    #[test]
+    fn sample_is_representative() {
+        // Uniform stream 0..100k: the sampled mean and median should land
+        // near the stream's (50k). Loose bounds — this is a sanity check
+        // on Algorithm R's uniformity, not a statistical test.
+        let mut r = Reservoir::new(DEFAULT_CAP);
+        for i in 0..100_000 {
+            r.push(i as f64);
+        }
+        let m = stats::mean(r.samples());
+        assert!((30_000.0..70_000.0).contains(&m), "mean={m}");
+        let p50 = stats::percentile(r.samples(), 50.0);
+        assert!((30_000.0..70_000.0).contains(&p50), "p50={p50}");
+    }
+}

@@ -1,0 +1,664 @@
+//! Structured trace spans: the [`TraceSink`] ring + JSONL file sink, and
+//! the thread-local [`TraceScope`] that attributes deep-layer events
+//! (cache lookups, backend executes, denoise steps) to the job that
+//! caused them. See the module header of [`crate::obs`] for the span
+//! vocabulary.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Version of the span wire format. Any change to the span field set or
+/// the meaning of a field must bump this (standing invariant); readers
+/// reject other versions rather than misparse them.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// Default in-memory ring capacity (spans). Old spans are evicted FIFO;
+/// the JSONL file sink, when configured, keeps everything.
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+/// What a span records. See the vocabulary table in [`crate::obs`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Job admitted to the batcher queue (lifecycle entry).
+    Queued,
+    /// Job served from the request cache without queueing (lifecycle entry).
+    CacheHit,
+    /// Job placed into an executing batch of `batch` lanes.
+    Scheduled,
+    /// One denoising step (`step` index, `action` full/partial).
+    Step,
+    /// One VAE decode call over `batch` latents.
+    Decode,
+    /// One typed cache lookup (`namespace`, `hit`).
+    CacheLookup,
+    /// One typed cache write (`namespace`, `bytes` of encoded payload).
+    CacheWrite,
+    /// One backend execute (`backend`, `artifact`, `bytes` moved).
+    Execute,
+    /// Job finished successfully (terminal).
+    Done,
+    /// Job finished with an error (terminal).
+    Failed,
+    /// Job finished by cancellation (terminal).
+    Cancelled,
+}
+
+impl Phase {
+    /// Every phase, in declaration order.
+    pub const ALL: [Phase; 11] = [
+        Phase::Queued,
+        Phase::CacheHit,
+        Phase::Scheduled,
+        Phase::Step,
+        Phase::Decode,
+        Phase::CacheLookup,
+        Phase::CacheWrite,
+        Phase::Execute,
+        Phase::Done,
+        Phase::Failed,
+        Phase::Cancelled,
+    ];
+
+    /// Stable wire label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::CacheHit => "cache-hit",
+            Phase::Scheduled => "scheduled",
+            Phase::Step => "step",
+            Phase::Decode => "decode",
+            Phase::CacheLookup => "cache-lookup",
+            Phase::CacheWrite => "cache-write",
+            Phase::Execute => "execute",
+            Phase::Done => "done",
+            Phase::Failed => "failed",
+            Phase::Cancelled => "cancelled",
+        }
+    }
+
+    /// Inverse of [`Phase::as_str`].
+    pub fn parse(s: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.as_str() == s)
+    }
+
+    /// Terminal phases — exactly one per traced job (standing invariant).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, Phase::Done | Phase::Failed | Phase::Cancelled)
+    }
+
+    /// Lifecycle-entry phases — exactly one per traced job.
+    pub fn is_entry(self) -> bool {
+        matches!(self, Phase::Queued | Phase::CacheHit)
+    }
+}
+
+/// One structured trace event. `seq` and `ts_us` are assigned by the
+/// sink at record time (under one lock, so `seq` order and timestamp
+/// order agree); all other fields are supplied by the instrumentation
+/// site via the `with_*` builders.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Record sequence number, unique and dense per sink.
+    pub seq: u64,
+    /// Microseconds since the sink's epoch (monotone clock).
+    pub ts_us: u64,
+    /// Originating job/request id ([`crate::server::JobId`] value, or 0
+    /// for single-shot CLI runs).
+    pub job: u64,
+    /// What happened.
+    pub phase: Phase,
+    /// Denoising step index (`step` spans).
+    pub step: Option<u64>,
+    /// PAS action label, `"full"` or `"partial"` (`step` spans).
+    pub action: Option<String>,
+    /// Cache namespace (`cache-lookup` / `cache-write` spans).
+    pub namespace: Option<String>,
+    /// Lookup outcome (`cache-lookup` spans).
+    pub hit: Option<bool>,
+    /// Backend kind label (`execute` spans).
+    pub backend: Option<String>,
+    /// Executable artifact name (`execute` spans).
+    pub artifact: Option<String>,
+    /// Bytes moved or written (`execute` / `cache-write` spans).
+    pub bytes: Option<u64>,
+    /// Batch size / lane count (`scheduled` / `decode` spans).
+    pub batch: Option<u64>,
+    /// Duration of the operation, microseconds.
+    pub dur_us: Option<u64>,
+}
+
+impl SpanEvent {
+    /// A bare span for `job` in `phase`; decorate with the `with_*`
+    /// builders. `seq`/`ts_us` are placeholders until recorded.
+    pub fn new(job: u64, phase: Phase) -> SpanEvent {
+        SpanEvent {
+            seq: 0,
+            ts_us: 0,
+            job,
+            phase,
+            step: None,
+            action: None,
+            namespace: None,
+            hit: None,
+            backend: None,
+            artifact: None,
+            bytes: None,
+            batch: None,
+            dur_us: None,
+        }
+    }
+
+    pub fn with_step(mut self, i: u64) -> SpanEvent {
+        self.step = Some(i);
+        self
+    }
+
+    pub fn with_action(mut self, action: &str) -> SpanEvent {
+        self.action = Some(action.to_string());
+        self
+    }
+
+    pub fn with_namespace(mut self, ns: &str) -> SpanEvent {
+        self.namespace = Some(ns.to_string());
+        self
+    }
+
+    pub fn with_hit(mut self, hit: bool) -> SpanEvent {
+        self.hit = Some(hit);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: &str) -> SpanEvent {
+        self.backend = Some(backend.to_string());
+        self
+    }
+
+    pub fn with_artifact(mut self, artifact: &str) -> SpanEvent {
+        self.artifact = Some(artifact.to_string());
+        self
+    }
+
+    pub fn with_bytes(mut self, bytes: u64) -> SpanEvent {
+        self.bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_batch(mut self, batch: u64) -> SpanEvent {
+        self.batch = Some(batch);
+        self
+    }
+
+    pub fn with_dur_us(mut self, dur_us: u64) -> SpanEvent {
+        self.dur_us = Some(dur_us);
+        self
+    }
+
+    /// JSON object for one JSONL line. `None` fields are omitted; the
+    /// line always carries `"v"` = [`TRACE_SCHEMA_VERSION`].
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("v", Json::Num(TRACE_SCHEMA_VERSION as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("ts_us", Json::Num(self.ts_us as f64)),
+            ("job", Json::Num(self.job as f64)),
+            ("phase", Json::Str(self.phase.as_str().to_string())),
+        ];
+        if let Some(v) = self.step {
+            fields.push(("step", Json::Num(v as f64)));
+        }
+        if let Some(v) = &self.action {
+            fields.push(("action", Json::Str(v.clone())));
+        }
+        if let Some(v) = &self.namespace {
+            fields.push(("namespace", Json::Str(v.clone())));
+        }
+        if let Some(v) = self.hit {
+            fields.push(("hit", Json::Bool(v)));
+        }
+        if let Some(v) = &self.backend {
+            fields.push(("backend", Json::Str(v.clone())));
+        }
+        if let Some(v) = &self.artifact {
+            fields.push(("artifact", Json::Str(v.clone())));
+        }
+        if let Some(v) = self.bytes {
+            fields.push(("bytes", Json::Num(v as f64)));
+        }
+        if let Some(v) = self.batch {
+            fields.push(("batch", Json::Num(v as f64)));
+        }
+        if let Some(v) = self.dur_us {
+            fields.push(("dur_us", Json::Num(v as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Inverse of [`SpanEvent::to_json`]. Rejects lines whose `"v"`
+    /// differs from [`TRACE_SCHEMA_VERSION`] (schema invariant).
+    pub fn from_json(j: &Json) -> Result<SpanEvent> {
+        let v = j.get_usize("v").ok_or_else(|| anyhow!("span: missing version field"))? as u64;
+        if v != TRACE_SCHEMA_VERSION {
+            return Err(anyhow!("span: schema version {v}, expected {TRACE_SCHEMA_VERSION}"));
+        }
+        let phase_str = j.get_str("phase").ok_or_else(|| anyhow!("span: missing phase"))?;
+        let phase =
+            Phase::parse(phase_str).ok_or_else(|| anyhow!("span: unknown phase '{phase_str}'"))?;
+        Ok(SpanEvent {
+            seq: j.get_usize("seq").ok_or_else(|| anyhow!("span: missing seq"))? as u64,
+            ts_us: j.get_usize("ts_us").ok_or_else(|| anyhow!("span: missing ts_us"))? as u64,
+            job: j.get_usize("job").ok_or_else(|| anyhow!("span: missing job"))? as u64,
+            phase,
+            step: j.get_usize("step").map(|v| v as u64),
+            action: j.get_str("action").map(str::to_string),
+            namespace: j.get_str("namespace").map(str::to_string),
+            hit: j.get("hit").and_then(Json::as_bool),
+            backend: j.get_str("backend").map(str::to_string),
+            artifact: j.get_str("artifact").map(str::to_string),
+            bytes: j.get_usize("bytes").map(|v| v as u64),
+            batch: j.get_usize("batch").map(|v| v as u64),
+            dur_us: j.get_usize("dur_us").map(|v| v as u64),
+        })
+    }
+
+    /// Parse one JSONL line.
+    pub fn parse_line(line: &str) -> Result<SpanEvent> {
+        let j = Json::parse(line).map_err(|e| anyhow!("span: bad JSON: {e}"))?;
+        SpanEvent::from_json(&j)
+    }
+
+    /// Structural projection: everything except `seq`, `ts_us` and
+    /// `dur_us`. Two same-seed deterministic runs must produce
+    /// byte-identical structure sequences even though wall-clock fields
+    /// differ.
+    pub fn structure(&self) -> String {
+        let mut out = format!("{} job={}", self.phase.as_str(), self.job);
+        if let Some(v) = self.step {
+            out.push_str(&format!(" step={v}"));
+        }
+        if let Some(v) = &self.action {
+            out.push_str(&format!(" action={v}"));
+        }
+        if let Some(v) = &self.namespace {
+            out.push_str(&format!(" ns={v}"));
+        }
+        if let Some(v) = self.hit {
+            out.push_str(&format!(" hit={v}"));
+        }
+        if let Some(v) = &self.backend {
+            out.push_str(&format!(" backend={v}"));
+        }
+        if let Some(v) = &self.artifact {
+            out.push_str(&format!(" artifact={v}"));
+        }
+        if let Some(v) = self.bytes {
+            out.push_str(&format!(" bytes={v}"));
+        }
+        if let Some(v) = self.batch {
+            out.push_str(&format!(" batch={v}"));
+        }
+        out
+    }
+}
+
+/// Newline-joined [`SpanEvent::structure`] of a span sequence.
+pub fn structure_lines(events: &[SpanEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.structure());
+        out.push('\n');
+    }
+    out
+}
+
+/// Job lifecycle counts taken under one lock — the *consistent*
+/// counterpart to the relaxed per-atomic reads of `Metrics::summary`.
+/// `terminals() <= enqueued` holds in every snapshot by construction:
+/// entry and terminal spans for a job are recorded in order, and both
+/// updates happen inside the same sink lock.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LifecycleCounts {
+    /// Jobs that entered the traced lifecycle (`queued` + `cache-hit`).
+    pub enqueued: u64,
+    /// Jobs that finished successfully.
+    pub done: u64,
+    /// Jobs that finished with an error.
+    pub failed: u64,
+    /// Jobs that finished by cancellation.
+    pub cancelled: u64,
+}
+
+impl LifecycleCounts {
+    /// Total terminal spans.
+    pub fn terminals(&self) -> u64 {
+        self.done + self.failed + self.cancelled
+    }
+
+    /// Jobs entered but not yet terminal.
+    pub fn in_flight(&self) -> u64 {
+        self.enqueued.saturating_sub(self.terminals())
+    }
+}
+
+struct Inner {
+    next_seq: u64,
+    cap: usize,
+    ring: VecDeque<SpanEvent>,
+    counts: LifecycleCounts,
+}
+
+/// Lock-light span recorder: a bounded in-memory ring (always) plus an
+/// optional JSONL file sink. One mutex guards the ring, sequence
+/// counter, timestamps and lifecycle counts, so a single lock
+/// acquisition yields a consistent view; the file writer has its own
+/// lock and never blocks ring readers.
+pub struct TraceSink {
+    epoch: Instant,
+    inner: Mutex<Inner>,
+    file: Option<Mutex<BufWriter<File>>>,
+    path: Option<PathBuf>,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.inner.lock().unwrap();
+        f.debug_struct("TraceSink")
+            .field("spans", &g.next_seq)
+            .field("ring", &g.ring.len())
+            .field("cap", &g.cap)
+            .field("path", &self.path)
+            .finish()
+    }
+}
+
+impl TraceSink {
+    /// Ring-only sink with the given capacity.
+    pub fn in_memory(cap: usize) -> Arc<TraceSink> {
+        assert!(cap > 0, "TraceSink: capacity must be positive");
+        Arc::new(TraceSink {
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner {
+                next_seq: 0,
+                cap,
+                ring: VecDeque::with_capacity(cap.min(1024)),
+                counts: LifecycleCounts::default(),
+            }),
+            file: None,
+            path: None,
+        })
+    }
+
+    /// Ring sink that additionally appends every span as a JSONL line to
+    /// `path` (truncating any existing file).
+    pub fn with_file(cap: usize, path: &Path) -> Result<Arc<TraceSink>> {
+        let f = File::create(path)
+            .with_context(|| format!("trace: cannot create {}", path.display()))?;
+        let sink = TraceSink {
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner {
+                next_seq: 0,
+                cap,
+                ring: VecDeque::with_capacity(cap.min(1024)),
+                counts: LifecycleCounts::default(),
+            }),
+            file: Some(Mutex::new(BufWriter::new(f))),
+            path: Some(path.to_path_buf()),
+        };
+        Ok(Arc::new(sink))
+    }
+
+    /// JSONL output path, if this sink has a file.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Record one span. Assigns `seq` and `ts_us` under the ring lock,
+    /// updates lifecycle counts, evicts FIFO past capacity, and appends
+    /// the JSONL line if a file sink is configured.
+    pub fn record(&self, mut ev: SpanEvent) {
+        let line = {
+            let mut g = self.inner.lock().unwrap();
+            ev.seq = g.next_seq;
+            g.next_seq += 1;
+            ev.ts_us = self.epoch.elapsed().as_micros() as u64;
+            if ev.phase.is_entry() {
+                g.counts.enqueued += 1;
+            }
+            match ev.phase {
+                Phase::Done => g.counts.done += 1,
+                Phase::Failed => g.counts.failed += 1,
+                Phase::Cancelled => g.counts.cancelled += 1,
+                _ => {}
+            }
+            if g.ring.len() == g.cap {
+                g.ring.pop_front();
+            }
+            let line = self.file.as_ref().map(|_| ev.to_json().to_string());
+            g.ring.push_back(ev);
+            line
+        };
+        if let (Some(file), Some(line)) = (&self.file, line) {
+            let mut w = file.lock().unwrap();
+            // Ignore I/O errors: tracing must never take down the pipeline.
+            let _ = writeln!(w, "{line}");
+        }
+    }
+
+    /// Total spans recorded (including ones evicted from the ring).
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Copy of the ring contents, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let g = self.inner.lock().unwrap();
+        g.ring.iter().cloned().collect()
+    }
+
+    /// Consistent lifecycle counts (single lock acquisition). These are
+    /// cumulative — unaffected by ring eviction.
+    pub fn lifecycle_counts(&self) -> LifecycleCounts {
+        self.inner.lock().unwrap().counts
+    }
+
+    /// Flush the JSONL writer (no-op for ring-only sinks).
+    pub fn flush(&self) {
+        if let Some(file) = &self.file {
+            let _ = file.lock().unwrap().flush();
+        }
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static SCOPES: RefCell<Vec<(Arc<TraceSink>, u64)>> = RefCell::new(Vec::new());
+}
+
+/// RAII guard binding `(sink, job)` as the current trace context for
+/// this thread. Scopes nest; instrumented code records against the
+/// innermost one via [`with_current`]. Deliberately `!Send`: a scope
+/// must be dropped on the thread that entered it.
+pub struct TraceScope {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl TraceScope {
+    /// Enter a scope attributing subsequent spans on this thread to `job`.
+    pub fn enter(sink: Arc<TraceSink>, job: u64) -> TraceScope {
+        SCOPES.with(|s| s.borrow_mut().push((sink, job)));
+        TraceScope { _not_send: std::marker::PhantomData }
+    }
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        SCOPES.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+/// Run `f` with the innermost trace scope on this thread, if any. The
+/// thread-local borrow is released before `f` runs, so `f` may record
+/// spans (but should not enter new scopes).
+pub fn with_current<F: FnOnce(&TraceSink, u64)>(f: F) {
+    let top = SCOPES.with(|s| s.borrow().last().cloned());
+    if let Some((sink, job)) = top {
+        f(&sink, job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_labels_round_trip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Phase::parse("nope"), None);
+    }
+
+    #[test]
+    fn span_json_round_trip() {
+        let ev = SpanEvent::new(7, Phase::Execute)
+            .with_backend("sim")
+            .with_artifact("unet_b1")
+            .with_bytes(4096)
+            .with_dur_us(1234);
+        let sink = TraceSink::in_memory(8);
+        sink.record(ev);
+        let got = sink.snapshot().remove(0);
+        let line = got.to_json().to_string();
+        let back = SpanEvent::parse_line(&line).unwrap();
+        assert_eq!(back, got);
+    }
+
+    #[test]
+    fn wrong_schema_version_rejected() {
+        let ev = SpanEvent::new(1, Phase::Done);
+        let line = ev.to_json().to_string();
+        let bumped = line.replace(
+            &format!("\"v\":{TRACE_SCHEMA_VERSION}"),
+            &format!("\"v\":{}", TRACE_SCHEMA_VERSION + 1),
+        );
+        assert_ne!(line, bumped, "version field must appear in the line");
+        assert!(SpanEvent::parse_line(&bumped).is_err());
+    }
+
+    #[test]
+    fn ring_evicts_fifo_and_keeps_counts() {
+        let sink = TraceSink::in_memory(4);
+        for i in 0..10u64 {
+            sink.record(SpanEvent::new(i, Phase::Queued));
+        }
+        let snap = sink.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert_eq!(snap[0].job, 6, "oldest retained span is #6");
+        assert_eq!(sink.recorded(), 10);
+        // Lifecycle counts are cumulative, unaffected by eviction.
+        assert_eq!(sink.lifecycle_counts().enqueued, 10);
+    }
+
+    #[test]
+    fn seq_and_timestamps_are_monotone() {
+        let sink = TraceSink::in_memory(64);
+        for i in 0..20u64 {
+            sink.record(SpanEvent::new(1, Phase::Step).with_step(i));
+        }
+        let snap = sink.snapshot();
+        for w in snap.windows(2) {
+            assert!(w[1].seq == w[0].seq + 1);
+            assert!(w[1].ts_us >= w[0].ts_us);
+        }
+    }
+
+    #[test]
+    fn lifecycle_counts_are_internally_consistent() {
+        let sink = TraceSink::in_memory(64);
+        sink.record(SpanEvent::new(1, Phase::Queued));
+        sink.record(SpanEvent::new(2, Phase::CacheHit));
+        sink.record(SpanEvent::new(2, Phase::Done));
+        sink.record(SpanEvent::new(1, Phase::Failed));
+        let c = sink.lifecycle_counts();
+        assert_eq!(c, LifecycleCounts { enqueued: 2, done: 1, failed: 1, cancelled: 0 });
+        assert!(c.terminals() <= c.enqueued);
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn scope_nesting_attributes_innermost() {
+        let outer = TraceSink::in_memory(8);
+        let inner = TraceSink::in_memory(8);
+        let _a = TraceScope::enter(Arc::clone(&outer), 1);
+        {
+            let _b = TraceScope::enter(Arc::clone(&inner), 2);
+            with_current(|sink, job| {
+                assert_eq!(job, 2);
+                sink.record(SpanEvent::new(job, Phase::Step).with_step(0));
+            });
+        }
+        with_current(|sink, job| {
+            assert_eq!(job, 1);
+            sink.record(SpanEvent::new(job, Phase::Step).with_step(1));
+        });
+        assert_eq!(inner.snapshot().len(), 1);
+        assert_eq!(outer.snapshot().len(), 1);
+        assert_eq!(outer.snapshot()[0].job, 1);
+    }
+
+    #[test]
+    fn no_scope_means_no_record() {
+        let mut ran = false;
+        with_current(|_, _| ran = true);
+        assert!(!ran);
+    }
+
+    #[test]
+    fn structure_ignores_wallclock_fields() {
+        let mut a = SpanEvent::new(3, Phase::Step).with_step(5).with_action("full");
+        let mut b = a.clone();
+        a.seq = 10;
+        a.ts_us = 999;
+        a.dur_us = Some(1);
+        b.seq = 20;
+        b.ts_us = 111;
+        b.dur_us = Some(2);
+        assert_eq!(a.structure(), b.structure());
+        assert_eq!(structure_lines(&[a]), structure_lines(&[b]));
+    }
+
+    #[test]
+    fn jsonl_file_sink_writes_parseable_lines() {
+        let dir =
+            std::env::temp_dir().join(format!("sdacc_trace_jsonl_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let sink = TraceSink::with_file(16, &path).unwrap();
+        sink.record(SpanEvent::new(1, Phase::Queued));
+        sink.record(
+            SpanEvent::new(1, Phase::CacheLookup).with_namespace("request").with_hit(false),
+        );
+        sink.record(SpanEvent::new(1, Phase::Done));
+        sink.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed: Vec<SpanEvent> =
+            text.lines().map(|l| SpanEvent::parse_line(l).unwrap()).collect();
+        assert_eq!(parsed, sink.snapshot());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -9,6 +9,17 @@ pub enum StepAction {
     Partial(usize),
 }
 
+impl StepAction {
+    /// Stable label for traces and per-action counters. The partial cut
+    /// level is deliberately dropped: the label names the action class.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StepAction::Full => "full",
+            StepAction::Partial(_) => "partial",
+        }
+    }
+}
+
 /// The paper's hyper-parameter set (Fig. 5 top).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PasConfig {

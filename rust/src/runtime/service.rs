@@ -63,14 +63,40 @@ impl RuntimeHandle {
     }
 
     /// Execute an artifact on the runtime thread (blocking).
+    ///
+    /// Observability chokepoint: every execute bumps the per-backend
+    /// counters (count + operand/result bytes, f32/i32 elements are 4
+    /// bytes each) and, inside a [`TraceScope`](crate::obs::TraceScope),
+    /// records an `execute` span attributed to the scope's job. The
+    /// measured duration includes the owner-thread round trip — that is
+    /// the latency the caller actually pays.
     pub fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        let t0 = std::time::Instant::now();
+        let bytes_in: u64 =
+            inputs.iter().map(|i| i.dims().iter().product::<usize>() as u64 * 4).sum();
         let (resp, rx) = mpsc::channel();
         self.tx
             .lock()
             .unwrap()
             .send(Cmd::Execute { name: name.to_string(), inputs: inputs.to_vec(), resp })
             .map_err(|_| anyhow!("runtime thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("runtime thread dropped the request"))?
+        let result: Result<Vec<Tensor>> =
+            rx.recv().map_err(|_| anyhow!("runtime thread dropped the request"))?;
+        let bytes_out: u64 = match &result {
+            Ok(outs) => outs.iter().map(|t| t.len() as u64 * 4).sum(),
+            Err(_) => 0,
+        };
+        crate::obs::counters().execute(self.backend.as_str(), bytes_in, bytes_out);
+        crate::obs::with_current(|sink, job| {
+            sink.record(
+                crate::obs::SpanEvent::new(job, crate::obs::Phase::Execute)
+                    .with_backend(self.backend.as_str())
+                    .with_artifact(name)
+                    .with_bytes(bytes_in + bytes_out)
+                    .with_dur_us(t0.elapsed().as_micros() as u64),
+            );
+        });
+        result
     }
 
     /// Warm the backend's per-artifact state (compiles on xla; artifact
@@ -206,6 +232,38 @@ mod tests {
         assert_eq!(out[0].dims, vec![1, m.ctx_len, m.ctx_dim]);
         h.preload(&["unet_full_b1".to_string()]).unwrap();
         assert!(h.execute("unet_full_b99", &[]).is_err());
+    }
+
+    #[test]
+    fn execute_is_attributed_inside_a_trace_scope() {
+        use crate::obs::{self, Phase, TraceScope, TraceSink};
+
+        let dir = no_artifacts_dir("trace");
+        let svc = RuntimeService::start_with(BackendKind::Sim, &dir).unwrap();
+        let h = svc.handle();
+        let m = h.manifest().model.clone();
+        let toks =
+            crate::runtime::TensorI32::new(vec![1, m.ctx_len], vec![1; m.ctx_len]).unwrap();
+
+        let before = obs::counters().snapshot();
+        let sink = TraceSink::in_memory(16);
+        {
+            let _scope = TraceScope::enter(Arc::clone(&sink), 42);
+            h.execute("text_encoder_b1", &[Input::I32(toks)]).unwrap();
+        }
+        let spans = sink.snapshot();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].phase, Phase::Execute);
+        assert_eq!(spans[0].job, 42, "execute span carries the scope's job id");
+        assert_eq!(spans[0].backend.as_deref(), Some("sim"));
+        assert_eq!(spans[0].artifact.as_deref(), Some("text_encoder_b1"));
+        assert!(spans[0].bytes.unwrap() > 0);
+
+        let d = obs::counters().snapshot().delta_since(&before);
+        let sim = d.backend("sim").unwrap();
+        assert!(sim.executes >= 1);
+        assert!(sim.bytes_in >= (m.ctx_len as u64) * 4);
+        assert!(sim.bytes_out >= (m.ctx_len * m.ctx_dim) as u64 * 4);
     }
 
     #[test]

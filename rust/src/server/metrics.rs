@@ -7,6 +7,8 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::obs::reservoir::Reservoir;
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Lock-light metrics shared across server threads.
@@ -41,7 +43,10 @@ pub struct Metrics {
     /// a group smaller than the smallest compiled artifact is padded
     /// up by `Coordinator::generate_many` before executing.
     batch_hist: Mutex<BTreeMap<usize, u64>>,
-    latencies_ms: Mutex<Vec<f64>>,
+    /// Bounded latency sample (`obs::reservoir`, Algorithm R with a
+    /// fixed-seed RNG): memory is O(cap) under sustained serving while
+    /// small runs keep every observation exactly.
+    latencies_ms: Mutex<Reservoir>,
 }
 
 /// A point-in-time summary.
@@ -141,8 +146,23 @@ impl Metrics {
         self.cache_evictions.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// Point-in-time summary over the individual counters.
+    ///
+    /// Consistency contract: every field is read with a separate
+    /// `Relaxed` load, so a summary taken while jobs are in flight may
+    /// be *torn* — e.g. `completed` already bumped for a job whose
+    /// `enqueued` increment this thread has not yet observed, making
+    /// per-field deltas transiently disagree. Each counter is
+    /// individually exact and monotone, and once the server quiesces
+    /// (workers joined, or simply "no submissions racing the read") the
+    /// cross-field identities hold:
+    /// `completed + errors + cancellations + deadline_misses <= enqueued`.
+    /// Callers needing a snapshot that is consistent *while* work is in
+    /// flight should read
+    /// [`TraceSink::lifecycle_counts`](crate::obs::TraceSink::lifecycle_counts),
+    /// which counts admissions and terminals under one lock.
     pub fn summary(&self) -> Summary {
-        let lats = self.latencies_ms.lock().unwrap().clone();
+        let lats = self.latencies_ms.lock().unwrap().samples().to_vec();
         Summary {
             enqueued: self.enqueued.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -178,6 +198,53 @@ impl Metrics {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
         }
+    }
+}
+
+impl Summary {
+    /// Machine-readable form for `sd-acc serve --json` and external
+    /// scrapers. Carries the same relaxed-consistency caveat as
+    /// [`Metrics::summary`].
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enqueued", Json::Num(self.enqueued as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("cancellations", Json::Num(self.cancellations as f64)),
+            ("deadline_misses", Json::Num(self.deadline_misses as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("mean_batch_size", Json::Num(self.mean_batch_size)),
+            (
+                "batch_hist",
+                Json::Arr(
+                    self.batch_hist
+                        .iter()
+                        .map(|&(size, count)| {
+                            Json::obj(vec![
+                                ("size", Json::Num(size as f64)),
+                                ("count", Json::Num(count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            (
+                "queue_depth_by_priority",
+                Json::Arr(
+                    self.queue_depth_by_priority
+                        .iter()
+                        .map(|&n| Json::Num(n as f64))
+                        .collect(),
+                ),
+            ),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("cache_misses", Json::Num(self.cache_misses as f64)),
+            ("cache_evictions", Json::Num(self.cache_evictions as f64)),
+        ])
     }
 }
 
@@ -251,6 +318,53 @@ mod tests {
         assert_eq!(total, 4);
         let weighted: u64 = s.batch_hist.iter().map(|&(sz, c)| sz as u64 * c).sum();
         assert!((s.mean_batch_size - weighted as f64 / total as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_memory_stays_bounded_over_100k_observations() {
+        // Regression: `latencies_ms` used to be an unbounded Vec, so a
+        // long-lived server grew without limit. The reservoir caps the
+        // kept samples while keeping the percentiles representative.
+        let m = Metrics::default();
+        for i in 0..100_000u64 {
+            m.on_done(i as f64 % 1000.0);
+        }
+        let kept = m.latencies_ms.lock().unwrap().len();
+        assert!(
+            kept <= crate::obs::reservoir::DEFAULT_CAP,
+            "kept {kept} samples, cap is {}",
+            crate::obs::reservoir::DEFAULT_CAP
+        );
+        let s = m.summary();
+        assert_eq!(s.completed, 100_000);
+        // Stream values are 0..1000 uniform-ish; the sampled percentiles
+        // must land inside the stream's range and keep their order.
+        assert!((0.0..1000.0).contains(&s.p50_ms), "p50={}", s.p50_ms);
+        assert!(s.p95_ms >= s.p50_ms);
+        assert!((0.0..1000.0).contains(&s.mean_ms));
+    }
+
+    #[test]
+    fn summary_json_round_trips_counter_fields() {
+        let m = Metrics::default();
+        m.on_enqueue();
+        m.on_enqueue();
+        m.on_done(12.0);
+        m.on_batch(2);
+        m.on_cache_hit();
+        m.set_queue_depth(1);
+        m.set_queue_depth_by_priority([0, 1, 0]);
+        let j = m.summary().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get_usize("enqueued"), Some(2));
+        assert_eq!(parsed.get_usize("completed"), Some(1));
+        assert_eq!(parsed.get_usize("cache_hits"), Some(1));
+        assert_eq!(parsed.get_usize("queue_depth"), Some(1));
+        let hist = parsed.get("batch_hist").and_then(|h| h.as_arr()).unwrap();
+        assert_eq!(hist.len(), 1);
+        assert_eq!(hist[0].get_usize("size"), Some(2));
+        assert_eq!(hist[0].get_usize("count"), Some(1));
+        assert_eq!(parsed.get_f64("p50_ms"), Some(12.0));
     }
 
     #[test]

@@ -49,20 +49,30 @@ use anyhow::Result;
 
 use crate::cache::Cache;
 use crate::coordinator::{BatchKey, Coordinator, GenRequest, GenResult, SdError, StepObserver};
+use crate::obs::{Phase, SpanEvent, TraceScope, TraceSink};
 use crate::pas::plan::StepAction;
 use batcher::{BatchItem, Batcher, DropReason};
 use metrics::Metrics;
 
 /// A queued job: the request plus its event channel and control state.
-/// (The public [`JobId`] lives on the [`JobHandle`]; the pipeline
-/// itself addresses jobs by their channels.)
+/// The [`JobId`] rides along so every pipeline stage (batcher drops,
+/// worker delivery, the coordinator loop below a [`TraceScope`]) can
+/// attribute trace spans to the job that caused them.
 struct Job {
+    id: JobId,
     req: GenRequest,
     enqueued: Instant,
     deadline: Option<Instant>,
     priority: Priority,
     cancel: CancelToken,
     events: mpsc::Sender<JobEvent>,
+}
+
+/// Record a lifecycle span when tracing is configured.
+fn record_span(trace: Option<&Arc<TraceSink>>, ev: SpanEvent) {
+    if let Some(t) = trace {
+        t.record(ev);
+    }
 }
 
 impl BatchItem for Job {
@@ -97,6 +107,12 @@ pub struct ServerConfig {
     /// finished — queued, dispatched, or executing) beyond this count
     /// are refused with [`SdError::QueueFull`].
     pub max_queue: usize,
+    /// Span sink; `None` disables tracing. Every stage records against
+    /// it: lifecycle spans from the client/batcher/workers, and — via a
+    /// [`TraceScope`] around each executing group — the coordinator's
+    /// step spans plus cache/runtime spans attributed to the group's
+    /// lead job.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for ServerConfig {
@@ -106,6 +122,7 @@ impl Default for ServerConfig {
             max_wait: Duration::from_millis(50),
             cache: None,
             max_queue: 1024,
+            trace: None,
         }
     }
 }
@@ -127,6 +144,7 @@ pub struct Client {
     depth: Arc<AtomicUsize>,
     max_queue: usize,
     next_id: Arc<AtomicU64>,
+    trace: Option<Arc<TraceSink>>,
 }
 
 impl Client {
@@ -158,8 +176,18 @@ impl Client {
         let handle = JobHandle { id, events: ev_rx, cancel: cancel.clone() };
 
         if let Some(cache) = &self.cache {
+            // Consult the request cache under a trace scope so the
+            // `cache-lookup` span inside `Cache::get_typed` carries
+            // this job's id.
+            let _scope =
+                self.trace.as_ref().map(|t| TraceScope::enter(Arc::clone(t), id.0));
             if let Some(hit) = cache.get_result(&req) {
                 self.metrics.on_cache_hit();
+                // Lifecycle entry + terminal for the fast path: the job
+                // never queues, but the trace still shows exactly one
+                // entry span and one terminal span.
+                record_span(self.trace.as_ref(), SpanEvent::new(id.0, Phase::CacheHit));
+                record_span(self.trace.as_ref(), SpanEvent::new(id.0, Phase::Done));
                 let _ = ev_tx.send(JobEvent::CacheHit);
                 let _ = ev_tx.send(JobEvent::Done(hit));
                 return Ok(handle);
@@ -176,6 +204,7 @@ impl Client {
 
         let now = Instant::now();
         let job = Job {
+            id,
             req,
             enqueued: now,
             deadline: opts.deadline.map(|d| now + d),
@@ -183,9 +212,13 @@ impl Client {
             cancel,
             events: ev_tx.clone(),
         };
+        record_span(self.trace.as_ref(), SpanEvent::new(id.0, Phase::Queued));
         let _ = ev_tx.send(JobEvent::Queued);
         if self.tx.send(job).is_err() {
             self.depth.fetch_sub(1, Ordering::SeqCst);
+            // Close the lifecycle even on the shutdown race: the entry
+            // span above must still get its terminal.
+            record_span(self.trace.as_ref(), SpanEvent::new(id.0, Phase::Failed));
             return Err(SdError::Runtime("server shut down".to_string()));
         }
         Ok(handle)
@@ -266,16 +299,19 @@ fn dispatch_pass(
     work_tx: &mpsc::Sender<Vec<Job>>,
     metrics: &Metrics,
     depth: &AtomicUsize,
+    trace: Option<&Arc<TraceSink>>,
 ) {
     for (reason, job) in batcher.take_dropped() {
         depth.fetch_sub(1, Ordering::SeqCst);
         match reason {
             DropReason::Cancelled => {
                 metrics.on_cancelled();
+                record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                 let _ = job.events.send(JobEvent::Cancelled);
             }
             DropReason::DeadlineExceeded => {
                 metrics.on_deadline_miss();
+                record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
                 let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
             }
         }
@@ -299,6 +335,7 @@ fn run_batcher(
     metrics: Arc<Metrics>,
     depth: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
+    trace: Option<Arc<TraceSink>>,
 ) {
     loop {
         if shutdown.load(Ordering::Relaxed) {
@@ -320,7 +357,7 @@ fn run_batcher(
             Err(mpsc::RecvTimeoutError::Timeout) => {}
         }
         let ready = batcher.flush_ready(Instant::now());
-        dispatch_pass(&mut batcher, ready, &work_tx, &metrics, &depth);
+        dispatch_pass(&mut batcher, ready, &work_tx, &metrics, &depth, trace.as_ref());
     }
     // Final drain — shared tail for every exit path. First pull the
     // jobs still buffered in the submit channel (a client clone may
@@ -335,7 +372,7 @@ fn run_batcher(
         batcher.push(job);
     }
     let rest = batcher.flush_all();
-    dispatch_pass(&mut batcher, rest, &work_tx, &metrics, &depth);
+    dispatch_pass(&mut batcher, rest, &work_tx, &metrics, &depth, trace.as_ref());
     metrics.set_queue_depth(0);
     metrics.set_queue_depth_by_priority([0, 0, 0]);
 }
@@ -353,16 +390,19 @@ fn run_batch(
     metrics: &Metrics,
     cache: Option<&Cache>,
     depth: &AtomicUsize,
+    trace: Option<&Arc<TraceSink>>,
 ) {
     let now = Instant::now();
     let mut remaining = Vec::with_capacity(batch.len());
     for job in batch {
         if job.cancel.is_cancelled() {
             metrics.on_cancelled();
+            record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
             let _ = job.events.send(JobEvent::Cancelled);
             depth.fetch_sub(1, Ordering::SeqCst);
         } else if job.deadline.map_or(false, |d| now >= d) {
             metrics.on_deadline_miss();
+            record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
             let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
             depth.fetch_sub(1, Ordering::SeqCst);
         } else {
@@ -382,6 +422,7 @@ fn run_batch(
         Err(e) => {
             for job in remaining.drain(..) {
                 metrics.on_error();
+                record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
                 let _ = job.events.send(JobEvent::Failed(e.clone()));
                 depth.fetch_sub(1, Ordering::SeqCst);
             }
@@ -401,7 +442,7 @@ fn run_batch(
         }
         let group: Vec<Job> = remaining.drain(..take.min(remaining.len())).collect();
         let done = group.len();
-        run_group(group, coord, metrics, cache);
+        run_group(group, coord, metrics, cache, trace);
         slots.release(done);
     }
 }
@@ -432,7 +473,13 @@ impl Drop for SlotGuard<'_> {
 
 /// Run one compiled-size group to completion: `Scheduled`, one `Step`
 /// per denoising step, then exactly one terminal event per job.
-fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Option<&Cache>) {
+fn run_group(
+    batch: Vec<Job>,
+    coord: &Coordinator,
+    metrics: &Metrics,
+    cache: Option<&Cache>,
+    trace: Option<&Arc<TraceSink>>,
+) {
     let t0 = Instant::now();
     // Deadlines re-checked at group start, not just at batch dequeue:
     // earlier groups of the same dequeued batch may have consumed a
@@ -441,6 +488,7 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
     for job in batch {
         if job.deadline.map_or(false, |d| t0 >= d) {
             metrics.on_deadline_miss();
+            record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
             let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
         } else {
             group.push(job);
@@ -451,11 +499,20 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
     }
     let batch_size = group.len();
     for job in &group {
+        record_span(
+            trace,
+            SpanEvent::new(job.id.0, Phase::Scheduled).with_batch(batch_size as u64),
+        );
         let _ = job.events.send(JobEvent::Scheduled { batch_size });
     }
     let reqs: Vec<GenRequest> = group.iter().map(|j| j.req.clone()).collect();
     let queue_ms: Vec<f64> =
         group.iter().map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3).collect();
+    // Deep-layer attribution: the coordinator's step spans and the
+    // cache/runtime spans below it record against the group's *lead*
+    // job — lockstep lanes share the work, so the first job stands in
+    // as "the job that caused it".
+    let _scope = trace.map(|t| TraceScope::enter(Arc::clone(t), group[0].id.0));
     // generate_many, not generate_batch: aged leftovers (and shutdown
     // drains) can flush at sizes below the smallest compiled artifact,
     // and generate_many pads those to a compiled size and slices the
@@ -481,6 +538,7 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
                     // the caller asked out, so deliver Cancelled even
                     // though a latent exists.
                     metrics.on_cancelled();
+                    record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                     let _ = job.events.send(JobEvent::Cancelled);
                 } else if BatchObserver::expired(&job, now) {
                     // The lane's latency budget ran out while batch
@@ -488,9 +546,11 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
                     // delivery bound, so the (valid, cached-above)
                     // latent is not delivered late.
                     metrics.on_deadline_miss();
+                    record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
                     let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
                 } else {
                     metrics.on_done(batch_ms + q_ms);
+                    record_span(trace, SpanEvent::new(job.id.0, Phase::Done));
                     let _ = job.events.send(JobEvent::Done(r));
                 }
             }
@@ -500,6 +560,7 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
             // before its final step.
             for job in group {
                 metrics.on_cancelled();
+                record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                 let _ = job.events.send(JobEvent::Cancelled);
             }
         }
@@ -510,6 +571,7 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
                     // mate's failure aborted the run: it observes
                     // Cancelled, not the mate's error.
                     metrics.on_cancelled();
+                    record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                     let _ = job.events.send(JobEvent::Cancelled);
                 } else {
                     // Mid-run step-budget expiry is a deadline miss in
@@ -520,6 +582,7 @@ fn run_group(batch: Vec<Job>, coord: &Coordinator, metrics: &Metrics, cache: Opt
                     } else {
                         metrics.on_error();
                     }
+                    record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
                     let _ = job.events.send(JobEvent::Failed(e.clone()));
                 }
             }
@@ -552,11 +615,12 @@ impl Server {
             let shutdown = Arc::clone(&shutdown);
             let metrics = Arc::clone(&metrics);
             let depth = Arc::clone(&depth);
+            let trace = cfg.trace.clone();
             let batcher = Batcher::new(coord.supported_batches(), cfg.max_wait);
             threads.push(
                 thread::Builder::new()
                     .name("sd-acc-batcher".into())
-                    .spawn(move || run_batcher(rx, work_tx, batcher, metrics, depth, shutdown))
+                    .spawn(move || run_batcher(rx, work_tx, batcher, metrics, depth, shutdown, trace))
                     .expect("spawn batcher"),
             );
         }
@@ -568,6 +632,7 @@ impl Server {
             let metrics = Arc::clone(&metrics);
             let cache = cfg.cache.clone();
             let depth = Arc::clone(&depth);
+            let trace = cfg.trace.clone();
             threads.push(
                 thread::Builder::new()
                     .name(format!("sd-acc-gen-{i}"))
@@ -577,7 +642,7 @@ impl Server {
                             rx.recv()
                         };
                         let Ok(batch) = batch else { break };
-                        run_batch(batch, &coord, &metrics, cache.as_deref(), &depth);
+                        run_batch(batch, &coord, &metrics, cache.as_deref(), &depth, trace.as_ref());
                     })
                     .expect("spawn worker"),
             );
@@ -591,6 +656,7 @@ impl Server {
             depth,
             max_queue: cfg.max_queue,
             next_id: Arc::new(AtomicU64::new(0)),
+            trace: cfg.trace.clone(),
         };
         Server { client, shutdown, threads, metrics }
     }
@@ -625,6 +691,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
         let job = Job {
+            id: JobId(seed),
             req: GenRequest::new(prompt, seed),
             enqueued: now,
             deadline: None,
@@ -665,6 +732,7 @@ mod tests {
             Arc::clone(&metrics),
             Arc::clone(&depth),
             shutdown,
+            None,
         );
         let mut batches = Vec::new();
         while let Ok(b) = work_rx.try_recv() {
@@ -709,7 +777,7 @@ mod tests {
         let shutdown = Arc::new(AtomicBool::new(true)); // already set
         tx.send(a).unwrap();
         let batcher: Batcher<Job> = Batcher::new(vec![1, 2], Duration::from_secs(10));
-        run_batcher(rx, work_tx, batcher, Arc::clone(&metrics), Arc::clone(&depth), shutdown);
+        run_batcher(rx, work_tx, batcher, Arc::clone(&metrics), Arc::clone(&depth), shutdown, None);
         let dispatched: usize = std::iter::from_fn(|| work_rx.try_recv().ok())
             .map(|b| b.len())
             .sum();

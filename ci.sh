@@ -73,6 +73,25 @@ echo "== obs bench (smoke) =="
 # allocs_per_step_limit. Writes nothing.
 cargo bench --bench bench_obs -- --smoke
 
+echo "== trace analytics (smoke) =="
+# End-to-end CLI pass over a real recorded trace: serve writes a JSONL
+# span trace on the sim backend, then `trace --analyze --strict` must
+# produce a non-empty phase decomposition (and find no orphan jobs),
+# and the Chrome/Perfetto exporter must emit JSON that parses back
+# through util::json (the CLI prints "(validated)" only after the
+# round-trip succeeds).
+trace_tmp="$(mktemp -d "${TMPDIR:-/tmp}/sdacc_ci_trace.XXXXXX")"
+trap 'rm -rf "$trace_tmp"' EXIT
+./target/release/sd-acc serve --requests 4 --steps 3 --workers 1 \
+    --trace-out "$trace_tmp/trace.jsonl" > /dev/null
+analyze_out="$(./target/release/sd-acc trace "$trace_tmp/trace.jsonl" \
+    --analyze --strict --export-chrome "$trace_tmp/trace.chrome.json")"
+echo "$analyze_out" | grep -q "where does a millisecond go" \
+    || { echo "trace --analyze produced no decomposition table" >&2; exit 1; }
+echo "$analyze_out" | grep -q "(validated)" \
+    || { echo "chrome export did not self-validate" >&2; exit 1; }
+rm -rf "$trace_tmp"
+
 if [ "$bench_commit" = 1 ]; then
     echo "== obs bench (commit trajectory point) =="
     # Full measurement; validates schema + the allocs/step budget against

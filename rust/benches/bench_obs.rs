@@ -39,7 +39,7 @@ use sd_acc::util::json::Json;
 use sd_acc::util::stats;
 
 /// Keys every BENCH_obs.json point must carry (schema validation).
-const REQUIRED_KEYS: [&str; 10] = [
+const REQUIRED_KEYS: [&str; 16] = [
     "bench",
     "trace_schema_version",
     "steps_per_sec",
@@ -50,6 +50,12 @@ const REQUIRED_KEYS: [&str; 10] = [
     "p50_ms",
     "p95_ms",
     "counting_alloc_active",
+    "windowed_p50_ms",
+    "windowed_p95_ms",
+    "phase_queue_ms",
+    "phase_step_full_ms",
+    "phase_step_partial_ms",
+    "phase_decode_ms",
 ];
 
 struct Measured {
@@ -64,6 +70,16 @@ struct Measured {
     p50_ms: f64,
     p95_ms: f64,
     jobs: usize,
+    /// Sliding-window percentiles from the server's SLO tracker,
+    /// captured while the window still covers the whole run.
+    windowed_p50_ms: f64,
+    windowed_p95_ms: f64,
+    /// Per-phase totals from the trace analyzer ("where does a
+    /// millisecond go"), summed over complete jobs.
+    phase_queue_ms: f64,
+    phase_step_full_ms: f64,
+    phase_step_partial_ms: f64,
+    phase_decode_ms: f64,
 }
 
 fn run_workload(smoke: bool) -> anyhow::Result<Measured> {
@@ -117,6 +133,9 @@ fn run_workload(smoke: bool) -> anyhow::Result<Measured> {
     let driven = drive();
     let wall_s = t0.elapsed().as_secs_f64();
     let served = obs::counters().snapshot().delta_since(&before);
+    // Windowed SLO view must be read before shutdown, while the
+    // sliding window still covers the run.
+    let summary = server.metrics.summary();
     server.shutdown();
     driven?;
 
@@ -177,6 +196,10 @@ fn run_workload(smoke: bool) -> anyhow::Result<Measured> {
         counts.enqueued
     );
 
+    // Phase decomposition over the same span stream the latency numbers
+    // came from.
+    let analysis = sd_acc::obs::analyze::analyze(&spans);
+
     let req = served.ns("request").expect("request namespace counters");
     let sim = served.backend("sim").expect("sim backend counters");
     let total_steps = served.steps_full + served.steps_partial;
@@ -194,6 +217,12 @@ fn run_workload(smoke: bool) -> anyhow::Result<Measured> {
         p50_ms: stats::percentile(&lat_ms, 50.0),
         p95_ms: stats::percentile(&lat_ms, 95.0),
         jobs: lat_ms.len(),
+        windowed_p50_ms: summary.windowed_p50_ms,
+        windowed_p95_ms: summary.windowed_p95_ms,
+        phase_queue_ms: analysis.phase_total_ms("queue"),
+        phase_step_full_ms: analysis.phase_total_ms("step-full"),
+        phase_step_partial_ms: analysis.phase_total_ms("step-partial"),
+        phase_decode_ms: analysis.phase_total_ms("decode"),
     })
 }
 
@@ -205,7 +234,9 @@ fn validate(doc: &Json) -> Result<(), String> {
             return Err(format!("BENCH_obs.json missing required key '{k}'"));
         }
     }
-    let nonzero = ["steps_per_sec", "bytes_moved", "p95_ms"];
+    // phase_step_full_ms is the only phase gated non-zero: the ddim
+    // workload has no partial steps, and queue/decode can round small.
+    let nonzero = ["steps_per_sec", "bytes_moved", "p95_ms", "windowed_p95_ms", "phase_step_full_ms"];
     for k in nonzero {
         let v = doc.get_f64(k).ok_or_else(|| format!("key '{k}' is not a number"))?;
         if v <= 0.0 {
@@ -242,6 +273,15 @@ fn main() {
         "  allocs/step: {:.0} (counting {})",
         m.allocs_per_step,
         if alloc::counting_active() { "active" } else { "unavailable" }
+    );
+    println!(
+        "  windowed p50 {:.1} ms p95 {:.1} ms | phase ms: queue {:.1}, step-full {:.1}, step-partial {:.1}, decode {:.1}",
+        m.windowed_p50_ms,
+        m.windowed_p95_ms,
+        m.phase_queue_ms,
+        m.phase_step_full_ms,
+        m.phase_step_partial_ms,
+        m.phase_decode_ms
     );
 
     // Warm pass over identical requests: every one must hit.
@@ -284,6 +324,12 @@ fn main() {
         ("p95_ms", Json::num(m.p95_ms)),
         ("jobs", Json::num(m.jobs as f64)),
         ("counting_alloc_active", Json::Bool(alloc::counting_active())),
+        ("windowed_p50_ms", Json::num(m.windowed_p50_ms)),
+        ("windowed_p95_ms", Json::num(m.windowed_p95_ms)),
+        ("phase_queue_ms", Json::num(m.phase_queue_ms)),
+        ("phase_step_full_ms", Json::num(m.phase_step_full_ms)),
+        ("phase_step_partial_ms", Json::num(m.phase_step_partial_ms)),
+        ("phase_decode_ms", Json::num(m.phase_decode_ms)),
     ]);
     validate(&doc).expect("fresh measurement must satisfy the BENCH_obs schema");
     if let Some(prev) = &committed {

@@ -337,6 +337,24 @@ pub struct GenStats {
     pub total_ms: f64,
 }
 
+impl GenStats {
+    /// Executed full-U-Net steps (feeds the per-priority SLO ledger).
+    pub fn full_steps(&self) -> u64 {
+        self.actions
+            .iter()
+            .filter(|a| matches!(a, StepAction::Full))
+            .count() as u64
+    }
+
+    /// Executed partial (cache-consuming) steps.
+    pub fn partial_steps(&self) -> u64 {
+        self.actions
+            .iter()
+            .filter(|a| matches!(a, StepAction::Partial(_)))
+            .count() as u64
+    }
+}
+
 // ---------------------------------------------------------------- observer
 
 /// Step-level observability + cancellation/deadline hook threaded

@@ -127,11 +127,25 @@
 //! regression-visible as allocations per step. `Metrics` latency
 //! percentiles now come from a bounded deterministic reservoir
 //! (`obs::reservoir`); the consistent lifecycle snapshot is
-//! `TraceSink::lifecycle_counts`. Surfaces: `sd-acc generate --trace`,
-//! `serve --trace-out`/`--json`, `cache stats --json`, the `sd-acc
-//! trace` report subcommand, and `bench_obs` (emits `BENCH_obs.json`
-//! via `ci.sh --bench-commit`). JSONL span lines are versioned by
-//! `obs::TRACE_SCHEMA_VERSION`.
+//! `TraceSink::lifecycle_counts`.
+//!
+//! On top of the raw span stream sit three read-only analytics
+//! surfaces: `obs::analyze` reconstructs per-job timelines and
+//! decomposes end-to-end latency into phases (queue, batch formation,
+//! full vs PAS-partial steps, cache, decode — per-job sums are
+//! guaranteed `<=` the measured e2e) plus batch critical paths;
+//! `obs::slo` provides log-bucketed histograms with a documented
+//! relative-error bound, sliding-window p50/p95/p99 (wired into
+//! `server::Metrics` alongside the all-time reservoir) and the
+//! per-priority results ledger (goodput, deadline-miss rate,
+//! cancel-ack latency, rejects); `obs::export` writes Chrome
+//! trace-event / Perfetto JSON. Surfaces: `sd-acc generate --trace`,
+//! `serve --trace-out`/`--json`/`--monitor <secs>`, `cache stats
+//! --json`, the `sd-acc trace` report subcommand (`--analyze`,
+//! `--export-chrome`, `--strict`), and `bench_obs` (emits
+//! `BENCH_obs.json` via `ci.sh --bench-commit`, including windowed
+//! percentiles and the phase decomposition). JSONL span lines are
+//! versioned by `obs::TRACE_SCHEMA_VERSION`.
 //!
 //! ## Mixed precision ([`quant`])
 //!

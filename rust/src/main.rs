@@ -358,6 +358,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         backend_opt(),
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
         OptSpec { name: "trace-out", help: "record per-job span trace to this JSONL path", takes_value: true, default: None },
+        OptSpec { name: "monitor", help: "print a live SLO line to stderr every N seconds (0 = off)", takes_value: true, default: Some("0") },
         OptSpec { name: "json", help: "print the final metrics snapshot as JSON", takes_value: false, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
@@ -393,6 +394,53 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         },
     );
     let client = server.client();
+
+    // Live monitor: a stderr reporter driven off the windowed SLO
+    // tracker plus `counters::delta_since` rates — stdout stays clean
+    // for the report / `--json` snapshot.
+    let monitor_secs = args.get_u64("monitor")?.unwrap();
+    let mon_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let monitor = if monitor_secs > 0 {
+        use std::sync::atomic::Ordering;
+        let metrics = Arc::clone(&server.metrics);
+        let stop = Arc::clone(&mon_stop);
+        let period = Duration::from_secs(monitor_secs);
+        Some(std::thread::spawn(move || {
+            let mut last = obs::counters().snapshot();
+            let mut next = Instant::now() + period;
+            while !stop.load(Ordering::Relaxed) {
+                // Small sleep increments so a stop request is honoured
+                // promptly even with a long period.
+                std::thread::sleep(Duration::from_millis(50));
+                if Instant::now() < next {
+                    continue;
+                }
+                next += period;
+                let now = obs::counters().snapshot();
+                let d = now.delta_since(&last);
+                last = now;
+                let s = metrics.summary();
+                eprintln!(
+                    "[monitor] window p50 {:.0} ms p95 {:.0} ms ({} done in window) | \
+                     +{} full / +{} partial steps, +{} decodes | \
+                     totals: {} done, {} miss, {} cancel, {} reject, depth {}",
+                    s.windowed_p50_ms,
+                    s.windowed_p95_ms,
+                    s.windowed_count,
+                    d.steps_full,
+                    d.steps_partial,
+                    d.decodes,
+                    s.completed,
+                    s.deadline_misses,
+                    s.cancellations,
+                    s.rejected,
+                    s.queue_depth
+                );
+            }
+        }))
+    } else {
+        None
+    };
 
     println!("submitting {n} requests ({steps} steps, priorities cycling high/normal/low)...");
     let t0 = Instant::now();
@@ -438,6 +486,10 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    if let Some(h) = monitor {
+        mon_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = h.join();
+    }
     let m = server.metrics.summary();
     if args.flag("json") {
         // Machine-readable snapshot: the relaxed summary plus the
@@ -481,6 +533,35 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         "latency: p50 {:.0} ms, p95 {:.0} ms | mean batch {:.2}",
         m.p50_ms, m.p95_ms, m.mean_batch_size
     );
+    println!(
+        "windowed (last {} x {:.0}s): p50 {:.0} ms, p95 {:.0} ms, p99 {:.0} ms over {} jobs (\u{b1}{:.1}%)",
+        m.windows,
+        m.window_secs,
+        m.windowed_p50_ms,
+        m.windowed_p95_ms,
+        m.windowed_p99_ms,
+        m.windowed_count,
+        m.slo_relative_error * 100.0
+    );
+    for p in sd_acc::server::Priority::ALL {
+        let lane = m.ledger.lane(p);
+        if lane.completed + lane.deadline_misses + lane.cancellations + lane.rejected == 0 {
+            continue;
+        }
+        println!(
+            "  lane {:6}: {} done (p50 {:.0} ms), {} miss ({:.0}% rate), {} cancel (ack p95 {:.1} ms), {} reject | steps {}F/{}P",
+            p.as_str(),
+            lane.completed,
+            lane.latency_ms.percentile(50.0),
+            lane.deadline_misses,
+            lane.deadline_miss_rate() * 100.0,
+            lane.cancellations,
+            lane.cancel_ack_ms.percentile(95.0),
+            lane.rejected,
+            lane.steps_full,
+            lane.steps_partial
+        );
+    }
     println!(
         "lifecycle: {} cancelled, {} deadline misses, {} rejected (queue full)",
         m.cancellations, m.deadline_misses, m.rejected
@@ -807,8 +888,12 @@ fn cmd_cache(raw: &[String]) -> Result<(), String> {
 /// `sd-acc trace <file>`: parse a JSONL span trace written by
 /// `generate --trace` / `serve --trace-out` and print a per-job summary.
 fn cmd_trace(raw: &[String]) -> Result<(), String> {
+    use sd_acc::util::json::Json;
     let spec = [
-        OptSpec { name: "json", help: "print the per-job summary as JSON", takes_value: false, default: None },
+        OptSpec { name: "analyze", help: "decompose per-job latency into phases + batch critical paths", takes_value: false, default: None },
+        OptSpec { name: "export-chrome", help: "write a Chrome trace-event / Perfetto JSON to this path", takes_value: true, default: None },
+        OptSpec { name: "strict", help: "exit nonzero on parse warnings or jobs without terminals", takes_value: false, default: None },
+        OptSpec { name: "json", help: "print the per-job summary (or analysis) as JSON", takes_value: false, default: None },
         OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
     ];
     let args = Args::parse(raw, &spec)?;
@@ -819,20 +904,120 @@ fn cmd_trace(raw: &[String]) -> Result<(), String> {
     let path = PathBuf::from(&args.positional()[0]);
     let text = std::fs::read_to_string(&path)
         .map_err(|e| format!("read {}: {e}", path.display()))?;
-    let mut spans = Vec::new();
-    for (i, line) in text.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        // Schema-version mismatches surface here as a hard error — a
-        // trace written by a different vocabulary must not be
-        // mis-summarised silently.
-        spans.push(
-            SpanEvent::parse_line(line).map_err(|e| format!("line {}: {e:#}", i + 1))?,
-        );
+    // Lossy parse: a truncated final line (killed writer) is a warning,
+    // not a hard error; mid-file garbage and schema-version mismatches
+    // still fail — a trace written by a different vocabulary must not
+    // be mis-summarised silently.
+    let (spans, warnings) =
+        sd_acc::obs::parse_jsonl_lossy(&text).map_err(|e| format!("{e:#}"))?;
+    for w in &warnings {
+        eprintln!("warning: {w}");
     }
     if spans.is_empty() {
         return Err(format!("{}: no spans", path.display()));
+    }
+
+    if let Some(out) = args.get("export-chrome") {
+        let out = PathBuf::from(out);
+        let n = sd_acc::obs::export::write_chrome(&spans, &out)
+            .map_err(|e| format!("{e:#}"))?;
+        // Self-validate: the export must round-trip through our own
+        // JSON parser before we call it well-formed.
+        let back = std::fs::read_to_string(&out)
+            .map_err(|e| format!("re-read {}: {e}", out.display()))?;
+        let parsed = Json::parse(&back)
+            .map_err(|e| format!("exported chrome trace is not valid JSON: {e:?}"))?;
+        let events = parsed
+            .get("traceEvents")
+            .and_then(|j| j.as_arr())
+            .ok_or("exported chrome trace lacks a traceEvents array")?
+            .len();
+        if events != n {
+            return Err(format!("chrome export round-trip mismatch: wrote {n}, read {events}"));
+        }
+        println!("chrome trace: {} events -> {} (validated)", n, out.display());
+    }
+
+    if args.flag("analyze") {
+        let a = sd_acc::obs::analyze::analyze(&spans);
+        if args.flag("json") {
+            println!("{}", a.to_json().to_string());
+        } else {
+            println!(
+                "{}: {} spans, {} jobs ({} complete), {} batch group(s)",
+                path.display(),
+                spans.len(),
+                a.jobs.len(),
+                a.jobs.iter().filter(|t| t.complete).count(),
+                a.batches.len()
+            );
+            println!("\n== where does a millisecond go ({:.1} ms total e2e) ==", a.total_e2e_ms);
+            let mut t = Table::new(&["phase", "total ms", "share %", "p50 ms", "p95 ms", "p99 ms"]);
+            for p in &a.phases {
+                t.row(vec![
+                    p.name.to_string(),
+                    f(p.total_ms, 2),
+                    f(p.share * 100.0, 1),
+                    f(p.p50_ms, 2),
+                    f(p.p95_ms, 2),
+                    f(p.p99_ms, 2),
+                ]);
+            }
+            t.print();
+            println!("\n== per-job decomposition (ms) ==");
+            let mut t = Table::new(&[
+                "job", "e2e", "queue", "form", "full", "partial", "cache", "decode", "other",
+                "batch", "lead", "terminal",
+            ]);
+            for j in &a.jobs {
+                t.row(vec![
+                    j.job.to_string(),
+                    f(j.e2e_us as f64 / 1e3, 1),
+                    f(j.breakdown.queue_us as f64 / 1e3, 1),
+                    f(j.breakdown.batch_form_us as f64 / 1e3, 1),
+                    f(j.breakdown.step_full_us as f64 / 1e3, 1),
+                    f(j.breakdown.step_partial_us as f64 / 1e3, 1),
+                    f(j.breakdown.cache_us as f64 / 1e3, 1),
+                    f(j.breakdown.decode_us as f64 / 1e3, 1),
+                    f(j.other_us as f64 / 1e3, 1),
+                    j.batch.map_or("-".into(), |b| b.to_string()),
+                    if j.lead { "*".into() } else { String::new() },
+                    j.terminal.map_or("-".into(), |p| p.as_str().to_string()),
+                ]);
+            }
+            t.print();
+            if !a.batches.is_empty() {
+                println!("\n== batch critical paths ==");
+                let mut t =
+                    Table::new(&["size", "lead job", "span ms", "lead work ms", "overhead ms"]);
+                for b in &a.batches {
+                    t.row(vec![
+                        b.size.to_string(),
+                        b.lead.to_string(),
+                        f(b.span_us as f64 / 1e3, 1),
+                        f(b.lead_work_us as f64 / 1e3, 1),
+                        f(b.span_us.saturating_sub(b.lead_work_us) as f64 / 1e3, 1),
+                    ]);
+                }
+                t.print();
+            }
+            if !a.incomplete_jobs.is_empty() {
+                println!(
+                    "warning: {} job(s) have no terminal span (truncated trace?): {:?}",
+                    a.incomplete_jobs.len(),
+                    a.incomplete_jobs
+                );
+            }
+        }
+        let orphans = a.incomplete_jobs.len();
+        if args.flag("strict") && (!warnings.is_empty() || orphans > 0) {
+            return Err(format!(
+                "strict: {} parse warning(s), {} incomplete job(s)",
+                warnings.len(),
+                orphans
+            ));
+        }
+        return Ok(());
     }
 
     // Aggregate per job, in first-seen order.
@@ -887,7 +1072,6 @@ fn cmd_trace(raw: &[String]) -> Result<(), String> {
     }
 
     if args.flag("json") {
-        use sd_acc::util::json::Json;
         let out = Json::obj(vec![
             ("trace_schema_version", Json::Num(sd_acc::obs::TRACE_SCHEMA_VERSION as f64)),
             ("spans", Json::Num(spans.len() as f64)),
@@ -919,6 +1103,13 @@ fn cmd_trace(raw: &[String]) -> Result<(), String> {
             ),
         ]);
         println!("{}", out.to_string());
+        let orphans = jobs.iter().filter(|a| a.terminal.is_none()).count();
+        if args.flag("strict") && (!warnings.is_empty() || orphans > 0) {
+            return Err(format!(
+                "strict: {} parse warning(s), {orphans} incomplete job(s)",
+                warnings.len()
+            ));
+        }
         return Ok(());
     }
 
@@ -943,6 +1134,12 @@ fn cmd_trace(raw: &[String]) -> Result<(), String> {
     let orphans = jobs.iter().filter(|a| a.terminal.is_none()).count();
     if orphans > 0 {
         println!("warning: {orphans} job(s) have no terminal span (truncated trace?)");
+    }
+    if args.flag("strict") && (!warnings.is_empty() || orphans > 0) {
+        return Err(format!(
+            "strict: {} parse warning(s), {orphans} incomplete job(s)",
+            warnings.len()
+        ));
     }
     Ok(())
 }

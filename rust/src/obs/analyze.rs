@@ -1,0 +1,612 @@
+//! Trace analytics: reconstruct per-job timelines from [`SpanEvent`]s
+//! and decompose end-to-end latency into serving phases — the library
+//! behind `sd-acc trace <file> --analyze` and the signal source for the
+//! future traffic engine (ROADMAP item 2).
+//!
+//! ## Decomposition model
+//!
+//! Span timestamps are assigned at the *end* of the operation, so a
+//! dur-carrying span covers the interval `[ts_us - dur_us, ts_us]`. A
+//! job's timeline starts at the minimum interval start across its spans
+//! (this includes the request-cache lookup that precedes the lifecycle
+//! entry span) and ends at its latest timestamp. Each phase segment is
+//! an interval inside that range:
+//!
+//! | segment        | interval                                          |
+//! |----------------|---------------------------------------------------|
+//! | `queue`        | entry span -> `scheduled` span                    |
+//! | `batch-form`   | `scheduled` -> start of the first work span       |
+//! | `step-full`    | `step` spans with `action = "full"`               |
+//! | `step-partial` | `step` spans with any other PAS action            |
+//! | `cache`        | `cache-lookup` spans                              |
+//! | `decode`       | `decode` spans                                    |
+//! | `other`        | remainder of the end-to-end range                 |
+//!
+//! Segments are accumulated by a sweep that clips overlap (first
+//! category wins), so per-job phase durations **always sum to <= the
+//! end-to-end span** — the acceptance invariant `integration_obs`
+//! asserts. `execute` spans are *excluded* from the decomposition (they
+//! nest inside steps and would double-count) and reported separately.
+//!
+//! Batch groups are reconstructed from runs of consecutive `scheduled`
+//! spans sharing the same `batch` size (the worker records them
+//! back-to-back under one lock); the *lead* lane — the job whose scope
+//! carried the group's deep-layer spans — defines the group's critical
+//! path. Schema v1 carries no explicit batch id, so this is a
+//! best-effort reconstruction that degrades to singleton groups when
+//! runs from concurrent workers interleave.
+
+use crate::obs::trace::{Phase, SpanEvent};
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Phase names in report order. `other` is always last.
+pub const PHASE_NAMES: [&str; 7] =
+    ["queue", "batch-form", "step-full", "step-partial", "cache", "decode", "other"];
+
+const N_SEGS: usize = 6; // attributed segments, excluding `other`
+
+/// Per-job attributed durations, microseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseBreakdown {
+    /// Lifecycle entry -> picked up by a worker (`scheduled`).
+    pub queue_us: u64,
+    /// `scheduled` -> first attributed work span begins.
+    pub batch_form_us: u64,
+    /// Full-depth denoising steps.
+    pub step_full_us: u64,
+    /// PAS partial (approximated) steps.
+    pub step_partial_us: u64,
+    /// Typed cache lookups (calib/plan/quant/request).
+    pub cache_us: u64,
+    /// VAE decode.
+    pub decode_us: u64,
+}
+
+impl PhaseBreakdown {
+    /// Sum of the attributed segments (excludes `other`).
+    pub fn total_us(&self) -> u64 {
+        self.queue_us
+            + self.batch_form_us
+            + self.step_full_us
+            + self.step_partial_us
+            + self.cache_us
+            + self.decode_us
+    }
+
+    fn seg_mut(&mut self, i: usize) -> &mut u64 {
+        match i {
+            0 => &mut self.queue_us,
+            1 => &mut self.batch_form_us,
+            2 => &mut self.step_full_us,
+            3 => &mut self.step_partial_us,
+            4 => &mut self.cache_us,
+            _ => &mut self.decode_us,
+        }
+    }
+
+    fn seg(&self, i: usize) -> u64 {
+        match i {
+            0 => self.queue_us,
+            1 => self.batch_form_us,
+            2 => self.step_full_us,
+            3 => self.step_partial_us,
+            4 => self.cache_us,
+            _ => self.decode_us,
+        }
+    }
+}
+
+/// One job's reconstructed timeline.
+#[derive(Debug, Clone)]
+pub struct JobTimeline {
+    pub job: u64,
+    /// Lifecycle entry phase (`queued` / `cache-hit`), if seen.
+    pub entry: Option<Phase>,
+    /// Terminal phase (`done` / `failed` / `cancelled`), if seen.
+    pub terminal: Option<Phase>,
+    /// Earliest interval start across the job's spans (µs since sink epoch).
+    pub start_us: u64,
+    /// Latest timestamp across the job's spans.
+    pub end_us: u64,
+    /// `end_us - start_us`: the measured end-to-end span.
+    pub e2e_us: u64,
+    pub breakdown: PhaseBreakdown,
+    /// Unattributed remainder: `e2e_us - breakdown.total_us()`.
+    pub other_us: u64,
+    pub steps_full: u64,
+    pub steps_partial: u64,
+    pub cache_lookups: u64,
+    pub cache_lookup_hits: u64,
+    /// Backend executes attributed to this job (nested inside steps —
+    /// reported separately, excluded from the decomposition).
+    pub executes: u64,
+    pub execute_us: u64,
+    pub bytes_moved: u64,
+    /// Batch size from the `scheduled` span, if the job was batched.
+    pub batch: Option<u64>,
+    /// True when this job's scope carried the group's deep-layer spans.
+    pub lead: bool,
+    /// Entry and terminal both present.
+    pub complete: bool,
+}
+
+/// A reconstructed batch group and its critical path.
+#[derive(Debug, Clone)]
+pub struct BatchGroup {
+    /// Logical group size (the `batch` field of the members' spans).
+    pub size: u64,
+    pub jobs: Vec<u64>,
+    /// The lane whose scope carried the group's work spans.
+    pub lead: u64,
+    /// First member's `scheduled` timestamp.
+    pub scheduled_us: u64,
+    /// `scheduled` -> last member terminal: the group's wall span.
+    pub span_us: u64,
+    /// Attributed work (steps + decode) on the lead lane — the critical
+    /// path; `span_us - lead_work_us` is group overhead.
+    pub lead_work_us: u64,
+}
+
+/// Aggregate statistics for one phase across all complete jobs.
+#[derive(Debug, Clone)]
+pub struct PhaseStats {
+    pub name: &'static str,
+    pub total_ms: f64,
+    /// Fraction of the summed end-to-end time — the "where does a
+    /// millisecond go" column. Shares over all phases sum to 1.
+    pub share: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// The full analysis: per-job timelines, batch groups, and the
+/// aggregate per-phase distribution.
+#[derive(Debug, Clone)]
+pub struct TraceAnalysis {
+    pub jobs: Vec<JobTimeline>,
+    pub batches: Vec<BatchGroup>,
+    /// One entry per [`PHASE_NAMES`] name, in that order.
+    pub phases: Vec<PhaseStats>,
+    /// Summed end-to-end time over complete jobs, ms.
+    pub total_e2e_ms: f64,
+    /// Jobs missing an entry or terminal span (truncated traces,
+    /// in-flight jobs, ring eviction).
+    pub incomplete_jobs: Vec<u64>,
+}
+
+fn seg_index_for(ev: &SpanEvent) -> Option<usize> {
+    match ev.phase {
+        Phase::Step => {
+            if ev.action.as_deref() == Some("full") {
+                Some(2)
+            } else {
+                Some(3)
+            }
+        }
+        Phase::CacheLookup => Some(4),
+        Phase::Decode => Some(5),
+        _ => None,
+    }
+}
+
+fn analyze_job(job: u64, spans: &[&SpanEvent]) -> JobTimeline {
+    let entry = spans.iter().find(|s| s.phase.is_entry());
+    let terminal = spans.iter().find(|s| s.phase.is_terminal());
+    let start_us =
+        spans.iter().map(|s| s.ts_us.saturating_sub(s.dur_us.unwrap_or(0))).min().unwrap_or(0);
+    let end_us = spans.iter().map(|s| s.ts_us).max().unwrap_or(0);
+    let e2e_us = end_us.saturating_sub(start_us);
+    let sched = spans.iter().find(|s| s.phase == Phase::Scheduled);
+
+    // Collect attributed intervals: (start, end, segment index).
+    let mut intervals: Vec<(u64, u64, usize)> = Vec::new();
+    if let (Some(e), Some(s)) = (entry, sched) {
+        intervals.push((e.ts_us.min(s.ts_us), s.ts_us, 0)); // queue
+    }
+    if let Some(s) = sched {
+        // Batch formation: scheduled -> the first work interval that
+        // starts at or after the scheduled timestamp.
+        let first_work = spans
+            .iter()
+            .filter(|ev| seg_index_for(ev).is_some() && ev.dur_us.is_some())
+            .map(|ev| ev.ts_us.saturating_sub(ev.dur_us.unwrap_or(0)))
+            .filter(|&ws| ws >= s.ts_us)
+            .min();
+        if let Some(ws) = first_work {
+            intervals.push((s.ts_us, ws, 1));
+        }
+    }
+    for ev in spans {
+        if let (Some(seg), Some(dur)) = (seg_index_for(ev), ev.dur_us) {
+            intervals.push((ev.ts_us.saturating_sub(dur), ev.ts_us, seg));
+        }
+    }
+
+    // Sweep with overlap clipping (first category wins): guarantees the
+    // attributed segments sum to <= e2e even if instrumented intervals
+    // ever nest or overlap.
+    intervals.sort_by_key(|&(s, e, _)| (s, e));
+    let mut breakdown = PhaseBreakdown::default();
+    let mut cursor = start_us;
+    for (s, e, seg) in intervals {
+        let s = s.max(cursor).min(end_us);
+        let e = e.min(end_us);
+        if e > s {
+            *breakdown.seg_mut(seg) += e - s;
+            cursor = e;
+        }
+    }
+
+    let mut t = JobTimeline {
+        job,
+        entry: entry.map(|s| s.phase),
+        terminal: terminal.map(|s| s.phase),
+        start_us,
+        end_us,
+        e2e_us,
+        other_us: e2e_us.saturating_sub(breakdown.total_us()),
+        breakdown,
+        steps_full: 0,
+        steps_partial: 0,
+        cache_lookups: 0,
+        cache_lookup_hits: 0,
+        executes: 0,
+        execute_us: 0,
+        bytes_moved: 0,
+        batch: sched.and_then(|s| s.batch),
+        lead: false,
+        complete: entry.is_some() && terminal.is_some(),
+    };
+    for ev in spans {
+        match ev.phase {
+            Phase::Step => {
+                if ev.action.as_deref() == Some("full") {
+                    t.steps_full += 1;
+                } else {
+                    t.steps_partial += 1;
+                }
+            }
+            Phase::CacheLookup => {
+                t.cache_lookups += 1;
+                if ev.hit == Some(true) {
+                    t.cache_lookup_hits += 1;
+                }
+            }
+            Phase::Execute => {
+                t.executes += 1;
+                t.execute_us += ev.dur_us.unwrap_or(0);
+                t.bytes_moved += ev.bytes.unwrap_or(0);
+            }
+            _ => {}
+        }
+    }
+    t.lead = t.steps_full + t.steps_partial > 0;
+    t
+}
+
+/// Analyze a span stream (any order; sorted internally by `seq`).
+pub fn analyze(spans: &[SpanEvent]) -> TraceAnalysis {
+    let mut sorted: Vec<&SpanEvent> = spans.iter().collect();
+    sorted.sort_by_key(|s| s.seq);
+
+    // Group spans per job, preserving seq order within each job.
+    let mut job_order: Vec<u64> = Vec::new();
+    let mut per_job: std::collections::HashMap<u64, Vec<&SpanEvent>> =
+        std::collections::HashMap::new();
+    for ev in &sorted {
+        let bucket = per_job.entry(ev.job).or_insert_with(|| {
+            job_order.push(ev.job);
+            Vec::new()
+        });
+        bucket.push(ev);
+    }
+
+    let jobs: Vec<JobTimeline> =
+        job_order.iter().map(|&job| analyze_job(job, &per_job[&job])).collect();
+    let by_job: std::collections::HashMap<u64, &JobTimeline> =
+        jobs.iter().map(|t| (t.job, t)).collect();
+
+    // Batch groups: runs of consecutive `scheduled` spans that agree on
+    // the group size. The worker records a group's scheduled spans
+    // back-to-back, so in single-worker (deterministic CI) traces this
+    // recovers groups exactly; interleaved multi-worker runs degrade to
+    // singletons.
+    let scheduled: Vec<&SpanEvent> =
+        sorted.iter().filter(|s| s.phase == Phase::Scheduled).copied().collect();
+    let mut batches: Vec<BatchGroup> = Vec::new();
+    let mut i = 0;
+    while i < scheduled.len() {
+        let size = scheduled[i].batch.unwrap_or(1).max(1) as usize;
+        let members: Vec<&SpanEvent> = if i + size <= scheduled.len()
+            && scheduled[i..i + size].iter().all(|s| s.batch == scheduled[i].batch)
+        {
+            scheduled[i..i + size].to_vec()
+        } else {
+            vec![scheduled[i]]
+        };
+        let n = members.len();
+        let member_jobs: Vec<u64> = members.iter().map(|s| s.job).collect();
+        let scheduled_us = members.iter().map(|s| s.ts_us).min().unwrap_or(0);
+        let end_us = member_jobs
+            .iter()
+            .filter_map(|j| by_job.get(j))
+            .map(|t| t.end_us)
+            .max()
+            .unwrap_or(scheduled_us);
+        let lead = member_jobs
+            .iter()
+            .copied()
+            .find(|j| by_job.get(j).is_some_and(|t| t.lead))
+            .unwrap_or(member_jobs[0]);
+        let lead_work_us = by_job.get(&lead).map_or(0, |t| {
+            t.breakdown.step_full_us + t.breakdown.step_partial_us + t.breakdown.decode_us
+        });
+        batches.push(BatchGroup {
+            size: members[0].batch.unwrap_or(1),
+            jobs: member_jobs,
+            lead,
+            scheduled_us,
+            span_us: end_us.saturating_sub(scheduled_us),
+            lead_work_us,
+        });
+        i += n;
+    }
+
+    // Aggregate phase stats over complete jobs.
+    let complete: Vec<&JobTimeline> = jobs.iter().filter(|t| t.complete).collect();
+    let total_e2e_us: u64 = complete.iter().map(|t| t.e2e_us).sum();
+    let phases = PHASE_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, &name)| {
+            let vals_ms: Vec<f64> = complete
+                .iter()
+                .map(|t| if i < N_SEGS { t.breakdown.seg(i) } else { t.other_us } as f64 / 1e3)
+                .collect();
+            let total_ms: f64 = vals_ms.iter().sum();
+            PhaseStats {
+                name,
+                total_ms,
+                share: if total_e2e_us == 0 { 0.0 } else { total_ms / (total_e2e_us as f64 / 1e3) },
+                p50_ms: stats::percentile(&vals_ms, 50.0),
+                p95_ms: stats::percentile(&vals_ms, 95.0),
+                p99_ms: stats::percentile(&vals_ms, 99.0),
+            }
+        })
+        .collect();
+
+    TraceAnalysis {
+        incomplete_jobs: jobs.iter().filter(|t| !t.complete).map(|t| t.job).collect(),
+        total_e2e_ms: total_e2e_us as f64 / 1e3,
+        jobs,
+        batches,
+        phases,
+    }
+}
+
+impl JobTimeline {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::Num(self.job as f64)),
+            ("entry", self.entry.map_or(Json::Null, |p| Json::str(p.as_str()))),
+            ("terminal", self.terminal.map_or(Json::Null, |p| Json::str(p.as_str()))),
+            ("e2e_ms", Json::Num(self.e2e_us as f64 / 1e3)),
+            ("queue_ms", Json::Num(self.breakdown.queue_us as f64 / 1e3)),
+            ("batch_form_ms", Json::Num(self.breakdown.batch_form_us as f64 / 1e3)),
+            ("step_full_ms", Json::Num(self.breakdown.step_full_us as f64 / 1e3)),
+            ("step_partial_ms", Json::Num(self.breakdown.step_partial_us as f64 / 1e3)),
+            ("cache_ms", Json::Num(self.breakdown.cache_us as f64 / 1e3)),
+            ("decode_ms", Json::Num(self.breakdown.decode_us as f64 / 1e3)),
+            ("other_ms", Json::Num(self.other_us as f64 / 1e3)),
+            ("steps_full", Json::Num(self.steps_full as f64)),
+            ("steps_partial", Json::Num(self.steps_partial as f64)),
+            ("executes", Json::Num(self.executes as f64)),
+            ("execute_ms", Json::Num(self.execute_us as f64 / 1e3)),
+            ("bytes_moved", Json::Num(self.bytes_moved as f64)),
+            ("batch", self.batch.map_or(Json::Null, |b| Json::Num(b as f64))),
+            ("lead", Json::Bool(self.lead)),
+            ("complete", Json::Bool(self.complete)),
+        ])
+    }
+}
+
+impl TraceAnalysis {
+    /// Machine-readable form (`sd-acc trace --analyze --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs", Json::Arr(self.jobs.iter().map(JobTimeline::to_json).collect())),
+            (
+                "batches",
+                Json::Arr(
+                    self.batches
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("size", Json::Num(b.size as f64)),
+                                (
+                                    "jobs",
+                                    Json::Arr(
+                                        b.jobs.iter().map(|&j| Json::Num(j as f64)).collect(),
+                                    ),
+                                ),
+                                ("lead", Json::Num(b.lead as f64)),
+                                ("span_ms", Json::Num(b.span_us as f64 / 1e3)),
+                                ("lead_work_ms", Json::Num(b.lead_work_us as f64 / 1e3)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "phases",
+                Json::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("name", Json::str(p.name)),
+                                ("total_ms", Json::Num(p.total_ms)),
+                                ("share", Json::Num(p.share)),
+                                ("p50_ms", Json::Num(p.p50_ms)),
+                                ("p95_ms", Json::Num(p.p95_ms)),
+                                ("p99_ms", Json::Num(p.p99_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("total_e2e_ms", Json::Num(self.total_e2e_ms)),
+            (
+                "incomplete_jobs",
+                Json::Arr(self.incomplete_jobs.iter().map(|&j| Json::Num(j as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Total attributed to `name` across complete jobs, ms.
+    pub fn phase_total_ms(&self, name: &str) -> f64 {
+        self.phases.iter().find(|p| p.name == name).map_or(0.0, |p| p.total_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64, ts: u64, job: u64, phase: Phase) -> SpanEvent {
+        let mut e = SpanEvent::new(job, phase);
+        e.seq = seq;
+        e.ts_us = ts;
+        e
+    }
+
+    fn synthetic_job() -> Vec<SpanEvent> {
+        vec![
+            // request-cache lookup precedes the entry span
+            ev(0, 100, 1, Phase::CacheLookup).with_namespace("request").with_hit(false).with_dur_us(80),
+            ev(1, 110, 1, Phase::Queued),
+            ev(2, 500, 1, Phase::Scheduled).with_batch(1),
+            ev(3, 700, 1, Phase::CacheLookup).with_namespace("plan").with_hit(true).with_dur_us(50),
+            ev(4, 1_700, 1, Phase::Step).with_step(0).with_action("full").with_dur_us(1_000),
+            ev(5, 1_690, 1, Phase::Execute).with_backend("sim").with_bytes(64).with_dur_us(900),
+            ev(6, 2_100, 1, Phase::Step).with_step(1).with_action("partial").with_dur_us(400),
+            ev(7, 2_600, 1, Phase::Decode).with_batch(1).with_dur_us(450),
+            ev(8, 2_650, 1, Phase::Done),
+        ]
+    }
+
+    #[test]
+    fn decomposition_sums_to_at_most_e2e() {
+        let a = analyze(&synthetic_job());
+        assert_eq!(a.jobs.len(), 1);
+        let t = &a.jobs[0];
+        assert!(t.complete);
+        assert_eq!(t.start_us, 20); // lookup interval start: 100 - 80
+        assert_eq!(t.end_us, 2_650);
+        assert_eq!(t.e2e_us, 2_630);
+        assert_eq!(t.breakdown.total_us() + t.other_us, t.e2e_us);
+        assert!(t.breakdown.total_us() <= t.e2e_us);
+    }
+
+    #[test]
+    fn segments_are_attributed_per_phase() {
+        let a = analyze(&synthetic_job());
+        let t = &a.jobs[0];
+        assert_eq!(t.breakdown.queue_us, 390); // 110 -> 500
+        assert_eq!(t.breakdown.batch_form_us, 150); // 500 -> plan lookup start 650
+        assert_eq!(t.breakdown.cache_us, 80 + 50);
+        assert_eq!(t.breakdown.step_full_us, 1_000);
+        assert_eq!(t.breakdown.step_partial_us, 400);
+        assert_eq!(t.breakdown.decode_us, 450);
+        assert_eq!(t.steps_full, 1);
+        assert_eq!(t.steps_partial, 1);
+        // Executes are nested, counted separately, not in the breakdown.
+        assert_eq!(t.executes, 1);
+        assert_eq!(t.execute_us, 900);
+        assert!(t.lead);
+    }
+
+    #[test]
+    fn overlapping_intervals_never_double_count() {
+        // Pathological trace: a cache lookup entirely inside a step.
+        let spans = vec![
+            ev(0, 0, 1, Phase::Queued),
+            ev(1, 10, 1, Phase::Scheduled).with_batch(1),
+            ev(2, 1_010, 1, Phase::Step).with_step(0).with_action("full").with_dur_us(1_000),
+            ev(3, 600, 1, Phase::CacheLookup).with_namespace("plan").with_hit(true).with_dur_us(200),
+            ev(4, 1_020, 1, Phase::Done),
+        ];
+        let a = analyze(&spans);
+        let t = &a.jobs[0];
+        assert!(t.breakdown.total_us() <= t.e2e_us, "sweep must clip overlap");
+    }
+
+    #[test]
+    fn batch_groups_reconstruct_from_consecutive_scheduled_runs() {
+        let mut spans = Vec::new();
+        // Group of 2: jobs 1, 2 scheduled back-to-back.
+        spans.push(ev(0, 0, 1, Phase::Queued));
+        spans.push(ev(1, 5, 2, Phase::Queued));
+        spans.push(ev(2, 100, 1, Phase::Scheduled).with_batch(2));
+        spans.push(ev(3, 101, 2, Phase::Scheduled).with_batch(2));
+        spans.push(ev(4, 900, 1, Phase::Step).with_step(0).with_action("full").with_dur_us(700));
+        spans.push(ev(5, 950, 1, Phase::Done));
+        spans.push(ev(6, 960, 2, Phase::Done));
+        let a = analyze(&spans);
+        assert_eq!(a.batches.len(), 1);
+        let b = &a.batches[0];
+        assert_eq!(b.size, 2);
+        assert_eq!(b.jobs, vec![1, 2]);
+        assert_eq!(b.lead, 1, "lead lane is the one carrying step spans");
+        assert_eq!(b.span_us, 860); // 100 -> 960
+        assert_eq!(b.lead_work_us, 700);
+    }
+
+    #[test]
+    fn incomplete_jobs_are_flagged_not_aggregated() {
+        let spans = vec![
+            ev(0, 0, 1, Phase::Queued),
+            ev(1, 10, 1, Phase::Done),
+            ev(2, 20, 2, Phase::Queued), // no terminal: in flight
+        ];
+        let a = analyze(&spans);
+        assert_eq!(a.incomplete_jobs, vec![2]);
+        assert_eq!(a.jobs.iter().filter(|t| t.complete).count(), 1);
+    }
+
+    #[test]
+    fn phase_shares_sum_to_one_when_time_was_spent() {
+        let a = analyze(&synthetic_job());
+        let share_sum: f64 = a.phases.iter().map(|p| p.share).sum();
+        assert!((share_sum - 1.0).abs() < 1e-9, "shares sum to {share_sum}");
+        assert_eq!(a.phases.len(), PHASE_NAMES.len());
+        assert_eq!(a.phases.last().unwrap().name, "other");
+    }
+
+    #[test]
+    fn analysis_json_is_parseable() {
+        let a = analyze(&synthetic_job());
+        let j = Json::parse(&a.to_json().to_string()).unwrap();
+        assert_eq!(j.get("jobs").and_then(|x| x.as_arr()).unwrap().len(), 1);
+        assert_eq!(j.get("phases").and_then(|x| x.as_arr()).unwrap().len(), 7);
+        assert!(j.get_f64("total_e2e_ms").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn cache_hit_fast_path_decomposes_without_scheduled_span() {
+        let spans = vec![
+            ev(0, 300, 9, Phase::CacheLookup).with_namespace("request").with_hit(true).with_dur_us(250),
+            ev(1, 320, 9, Phase::CacheHit),
+            ev(2, 340, 9, Phase::Done),
+        ];
+        let a = analyze(&spans);
+        let t = &a.jobs[0];
+        assert!(t.complete);
+        assert_eq!(t.breakdown.queue_us, 0);
+        assert_eq!(t.breakdown.cache_us, 250);
+        assert!(t.breakdown.total_us() <= t.e2e_us);
+        assert!(a.batches.is_empty());
+    }
+}

@@ -1,0 +1,182 @@
+//! Chrome trace-event (Perfetto) export: map a span stream onto the
+//! JSON Array Format that `ui.perfetto.dev` and `chrome://tracing`
+//! open directly.
+//!
+//! Mapping (standing invariant — the exporter is a *read-only* consumer
+//! of span schema v1; any change here tracks [`TRACE_SCHEMA_VERSION`]):
+//!
+//! - every job becomes a track: `pid` 1, `tid` = job id, named via a
+//!   `thread_name` metadata event;
+//! - dur-carrying spans become complete duration events (`"ph": "X"`)
+//!   at `ts = ts_us - dur_us` (span timestamps mark the *end* of the
+//!   operation), `dur = dur_us`;
+//! - lifecycle / instantaneous spans become thread-scoped instant
+//!   events (`"ph": "i"`, `"s": "t"`);
+//! - the remaining span fields ride along in `args` verbatim.
+//!
+//! Timestamps are microseconds since the recording sink's epoch, which
+//! is exactly the unit the trace-event format expects.
+//!
+//! [`TRACE_SCHEMA_VERSION`]: crate::obs::trace::TRACE_SCHEMA_VERSION
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::obs::trace::SpanEvent;
+use crate::util::json::Json;
+
+fn args_json(ev: &SpanEvent) -> Json {
+    let mut fields = vec![("seq", Json::Num(ev.seq as f64))];
+    if let Some(v) = ev.step {
+        fields.push(("step", Json::Num(v as f64)));
+    }
+    if let Some(v) = &ev.action {
+        fields.push(("action", Json::str(v)));
+    }
+    if let Some(v) = &ev.namespace {
+        fields.push(("namespace", Json::str(v)));
+    }
+    if let Some(v) = ev.hit {
+        fields.push(("hit", Json::Bool(v)));
+    }
+    if let Some(v) = &ev.backend {
+        fields.push(("backend", Json::str(v)));
+    }
+    if let Some(v) = &ev.artifact {
+        fields.push(("artifact", Json::str(v)));
+    }
+    if let Some(v) = ev.bytes {
+        fields.push(("bytes", Json::Num(v as f64)));
+    }
+    if let Some(v) = ev.batch {
+        fields.push(("batch", Json::Num(v as f64)));
+    }
+    Json::obj(fields)
+}
+
+/// Build the trace-event JSON object for a span stream.
+pub fn to_chrome_json(spans: &[SpanEvent]) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + 8);
+
+    // One thread_name metadata event per job, in first-seen order, so
+    // tracks are labeled in the viewer.
+    let mut seen: Vec<u64> = Vec::new();
+    for ev in spans {
+        if !seen.contains(&ev.job) {
+            seen.push(ev.job);
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(ev.job as f64)),
+                ("args", Json::obj(vec![("name", Json::str(&format!("job {}", ev.job)))])),
+            ]));
+        }
+    }
+
+    for ev in spans {
+        let mut fields = vec![
+            ("name", Json::str(ev.phase.as_str())),
+            ("cat", Json::str("sd-acc")),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(ev.job as f64)),
+        ];
+        match ev.dur_us {
+            Some(dur) => {
+                fields.push(("ph", Json::str("X")));
+                fields.push(("ts", Json::Num(ev.ts_us.saturating_sub(dur) as f64)));
+                fields.push(("dur", Json::Num(dur as f64)));
+            }
+            None => {
+                fields.push(("ph", Json::str("i")));
+                fields.push(("s", Json::str("t")));
+                fields.push(("ts", Json::Num(ev.ts_us as f64)));
+            }
+        }
+        fields.push(("args", args_json(ev)));
+        events.push(Json::obj(fields));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write the export to `path`; returns the number of trace events
+/// written (metadata events included).
+pub fn write_chrome(spans: &[SpanEvent], path: &Path) -> Result<usize> {
+    let j = to_chrome_json(spans);
+    let n = j.get("traceEvents").and_then(Json::as_arr).map_or(0, |a| a.len());
+    std::fs::write(path, j.to_string())
+        .with_context(|| format!("trace: cannot write chrome export {}", path.display()))?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Phase;
+
+    fn sample() -> Vec<SpanEvent> {
+        let mut q = SpanEvent::new(3, Phase::Queued);
+        q.seq = 0;
+        q.ts_us = 100;
+        let mut s = SpanEvent::new(3, Phase::Step).with_step(0).with_action("full").with_dur_us(40);
+        s.seq = 1;
+        s.ts_us = 200;
+        let mut d = SpanEvent::new(3, Phase::Done);
+        d.seq = 2;
+        d.ts_us = 210;
+        vec![q, s, d]
+    }
+
+    #[test]
+    fn export_shapes_duration_and_instant_events() {
+        let j = to_chrome_json(&sample());
+        let events = j.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 1 thread_name metadata + 3 spans.
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].get_str("ph"), Some("M"));
+        assert_eq!(events[0].get_str("name"), Some("thread_name"));
+
+        let queued = &events[1];
+        assert_eq!(queued.get_str("ph"), Some("i"));
+        assert_eq!(queued.get_str("s"), Some("t"));
+        assert_eq!(queued.get_usize("ts"), Some(100));
+
+        let step = &events[2];
+        assert_eq!(step.get_str("ph"), Some("X"));
+        // Span timestamps mark the end: X events start at ts - dur.
+        assert_eq!(step.get_usize("ts"), Some(160));
+        assert_eq!(step.get_usize("dur"), Some(40));
+        assert_eq!(step.get_usize("tid"), Some(3));
+        let args = step.get("args").unwrap();
+        assert_eq!(args.get_str("action"), Some("full"));
+    }
+
+    #[test]
+    fn export_round_trips_through_util_json() {
+        let j = to_chrome_json(&sample());
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get_str("displayTimeUnit"), Some("ms"));
+        let events = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(!events.is_empty());
+        for e in events {
+            assert!(e.get_str("ph").is_some());
+        }
+    }
+
+    #[test]
+    fn write_chrome_reports_event_count() {
+        let dir = std::env::temp_dir().join(format!("sdacc_chrome_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let n = write_chrome(&sample(), &path).unwrap();
+        assert_eq!(n, 4);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -32,6 +32,17 @@
 //! one terminal event per job) is mirrored here: a traced job records
 //! exactly one entry span and exactly one terminal span.
 //!
+//! ## Consumers of the span stream
+//!
+//! Three read-only consumers interpret recorded spans (none of them may
+//! feed inputs back into serving — standing invariant):
+//!
+//! | surface | module | CLI |
+//! |---------|--------|-----|
+//! | per-job phase decomposition (queue / batch-form / step-full / step-partial / cache / decode), batch critical path, per-phase p50/p95/p99 | [`analyze`] | `sd-acc trace <file> --analyze` |
+//! | windowed SLO percentiles (log-bucketed histograms, sliding window ring) and the per-priority results ledger (goodput, deadline-miss rate, cancel-ack latency, rejects) | [`slo`] (wired into `server::Metrics`) | `sd-acc serve --json` / `--monitor <secs>` |
+//! | Chrome trace-event / Perfetto export (jobs -> tracks, dur spans -> `"X"` events, lifecycle spans -> instants) | [`export`] | `sd-acc trace <file> --export-chrome out.json` |
+//!
 //! Deep-layer spans (`cache-lookup`, `cache-write`, `execute`, `step`,
 //! `decode`) are attributed through a thread-local [`TraceScope`]: the
 //! layer that knows the job id enters a scope, and instrumented code
@@ -68,11 +79,17 @@
 //! [`TRACE_SCHEMA_VERSION`]: trace::TRACE_SCHEMA_VERSION
 
 pub mod alloc;
+pub mod analyze;
 pub mod counters;
+pub mod export;
 pub mod reservoir;
+pub mod slo;
 pub mod trace;
+
+mod proptests;
 
 pub use counters::{counters, CountersSnapshot};
 pub use trace::{
-    with_current, LifecycleCounts, Phase, SpanEvent, TraceScope, TraceSink, TRACE_SCHEMA_VERSION,
+    parse_jsonl_lossy, with_current, LifecycleCounts, Phase, SpanEvent, TraceScope, TraceSink,
+    TRACE_SCHEMA_VERSION,
 };

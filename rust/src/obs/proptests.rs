@@ -1,0 +1,120 @@
+#![cfg(test)]
+//! Property tests for the SLO layer (`obs::slo`): the log-bucketed
+//! histogram's relative-error bound against exact percentiles, exact
+//! merge associativity/commutativity, and window-ring rotation against
+//! a naive keep-everything model.
+
+use crate::obs::slo::{LogHistogram, WindowRing, MIN_VALUE_MS};
+use crate::testing::{check_no_shrink, gen_usize};
+use crate::util::rng::Pcg32;
+
+/// Log-uniform latency in [MIN_VALUE_MS, ~1e6 ms] — the range the
+/// histogram's relative-error bound covers.
+fn gen_latency(rng: &mut Pcg32) -> f64 {
+    MIN_VALUE_MS * (rng.next_f64() * (1e9f64).ln()).exp()
+}
+
+fn gen_stream(rng: &mut Pcg32, max_len: usize) -> Vec<f64> {
+    let len = gen_usize(rng, 1, max_len);
+    (0..len).map(|_| gen_latency(rng)).collect()
+}
+
+fn exact_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    let rank = ((p / 100.0 * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank - 1]
+}
+
+#[test]
+fn prop_percentiles_within_relative_error_of_exact() {
+    check_no_shrink(
+        "slo-hist-relative-error",
+        |rng| gen_stream(rng, 300),
+        |xs| {
+            let mut h = LogHistogram::new();
+            for &x in xs {
+                h.record(x);
+            }
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let bound = LogHistogram::relative_error_bound() + 1e-9;
+            [50.0, 90.0, 95.0, 99.0].iter().all(|&p| {
+                let exact = exact_nearest_rank(&sorted, p);
+                let approx = h.percentile(p);
+                (approx - exact).abs() <= bound * exact
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_merge_is_associative_and_commutative() {
+    check_no_shrink(
+        "slo-hist-merge-assoc",
+        |rng| (gen_stream(rng, 80), gen_stream(rng, 80), gen_stream(rng, 80)),
+        |(xs, ys, zs)| {
+            let hist = |vals: &[f64]| {
+                let mut h = LogHistogram::new();
+                for &v in vals {
+                    h.record(v);
+                }
+                h
+            };
+            let (a, b, c) = (hist(xs), hist(ys), hist(zs));
+            // (a + b) + c
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            // a + (b + c)
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            // b + a (commutativity)
+            let mut ba = b.clone();
+            ba.merge(&a);
+            let mut ab = a.clone();
+            ab.merge(&b);
+            left == right && ab == ba && left.count() == a.count() + b.count() + c.count()
+        },
+    );
+}
+
+#[test]
+fn prop_window_rotation_matches_naive_model() {
+    // Feed a ring and a keep-everything model the same (window index,
+    // value) stream with non-decreasing indices (including idle gaps
+    // larger than the ring), then check the sliding view equals the
+    // model filtered to the last `n` windows.
+    check_no_shrink(
+        "slo-window-rotation",
+        |rng| {
+            let windows = gen_usize(rng, 1, 6);
+            let events = gen_usize(rng, 1, 60);
+            let mut idx = 0u64;
+            let stream: Vec<(u64, f64)> = (0..events)
+                .map(|_| {
+                    idx += gen_usize(rng, 0, 8) as u64; // gaps may skip the whole ring
+                    (idx, gen_latency(rng))
+                })
+                .collect();
+            (windows, stream)
+        },
+        |(windows, stream)| {
+            let mut ring = WindowRing::new(*windows);
+            let mut model: Vec<(u64, f64)> = Vec::new();
+            for &(idx, v) in stream {
+                ring.record(idx, v);
+                model.push((idx, v));
+            }
+            let cur = stream.last().map_or(0, |&(idx, _)| idx);
+            let lo = cur.saturating_sub(*windows as u64 - 1);
+            let mut expect = LogHistogram::new();
+            for &(idx, v) in &model {
+                if idx >= lo && idx <= cur {
+                    expect.record(v);
+                }
+            }
+            ring.sliding(cur) == expect
+        },
+    );
+}

@@ -1,0 +1,477 @@
+//! Windowed SLO tracking: log-bucketed latency histograms with a fixed
+//! relative-error bound, a ring of time windows for sliding
+//! percentiles, and the per-[`Priority`] results ledger (goodput,
+//! deadline-miss rate, cancel-ack latency, queue-full rejects).
+//!
+//! The histogram is HDR-style: bucket boundaries grow geometrically by
+//! [`GAMMA`] from [`MIN_VALUE_MS`], so any recorded value `v >=
+//! MIN_VALUE_MS` is represented by its bucket's geometric midpoint with
+//! relative error at most [`LogHistogram::relative_error_bound`] =
+//! `sqrt(GAMMA) - 1` (~2.5%). Values below `MIN_VALUE_MS` clamp into
+//! bucket 0 (absolute error <= 1 microsecond); values beyond the last
+//! bucket boundary (~20 hours) clamp into the final bucket. Buckets are
+//! plain `u64` counts, so [`LogHistogram::merge`] is element-wise
+//! addition — exactly associative and commutative, which is what lets
+//! window merges and cross-thread aggregation commute (property-tested
+//! in `obs::proptests`).
+//!
+//! Percentiles use the *nearest-rank* convention: `percentile(p)`
+//! returns the representative value of the bucket holding the
+//! `ceil(p/100 * count)`-th smallest sample. Because bucket assignment
+//! is monotone in the value, that representative is within the relative
+//! error bound of the exact nearest-rank sample of the raw stream.
+//!
+//! [`WindowRing`] keys everything off an explicit `u64` window index
+//! (no wall clock inside), so rotation is deterministic and testable;
+//! [`SloTracker`] layers `Instant`-based indexing on top for
+//! `server::Metrics`. Per the standing invariant, all of this is an
+//! observer: nothing here may feed batching, cache keys, or outputs.
+//!
+//! [`Priority`]: crate::server::api::Priority
+
+use std::time::{Duration, Instant};
+
+use crate::server::api::Priority;
+use crate::util::json::Json;
+
+/// Smallest distinguishable latency (1 microsecond, in milliseconds).
+pub const MIN_VALUE_MS: f64 = 1e-3;
+
+/// Geometric bucket growth factor. `sqrt(GAMMA) - 1` is the relative
+/// error bound on any reported percentile.
+pub const GAMMA: f64 = 1.05;
+
+/// Bucket count: `MIN_VALUE_MS * GAMMA^511` is ~7e7 ms (~20 hours), far
+/// past any serving latency this system produces.
+pub const BUCKETS: usize = 512;
+
+/// Log-bucketed latency histogram with bounded relative error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    /// `counts[0]` holds values <= MIN_VALUE_MS; `counts[i]` (i >= 1)
+    /// holds values in `(MIN * GAMMA^(i-1), MIN * GAMMA^i]`.
+    counts: Vec<u64>,
+    count: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram { counts: vec![0; BUCKETS], count: 0 }
+    }
+
+    /// Maximum relative error of any percentile, for values inside
+    /// `[MIN_VALUE_MS, MIN_VALUE_MS * GAMMA^(BUCKETS-1)]`:
+    /// `sqrt(GAMMA) - 1` (~2.47% at GAMMA = 1.05).
+    pub fn relative_error_bound() -> f64 {
+        GAMMA.sqrt() - 1.0
+    }
+
+    fn bucket(v: f64) -> usize {
+        if !(v > MIN_VALUE_MS) {
+            return 0; // includes v <= MIN, v <= 0, and NaN (recorded as floor)
+        }
+        let i = 1 + ((v / MIN_VALUE_MS).ln() / GAMMA.ln()).floor() as usize;
+        i.min(BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` — the value reported for any
+    /// sample that landed there.
+    fn representative(i: usize) -> f64 {
+        if i == 0 {
+            MIN_VALUE_MS
+        } else {
+            MIN_VALUE_MS * GAMMA.powf(i as f64 - 0.5)
+        }
+    }
+
+    /// Record one latency in milliseconds. NaN clamps to bucket 0.
+    pub fn record(&mut self, ms: f64) {
+        self.counts[Self::bucket(ms)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Element-wise addition of bucket counts: exactly associative and
+    /// commutative (all-integer state), so merge order never matters.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100) over the bucketed
+    /// sample: the representative of the bucket holding the
+    /// `ceil(p/100 * count)`-th smallest value. Returns 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::representative(i);
+            }
+        }
+        Self::representative(BUCKETS - 1)
+    }
+
+    /// Approximate mean from bucket representatives (same error bound
+    /// as the percentiles).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| c as f64 * Self::representative(i))
+            .sum();
+        sum / self.count as f64
+    }
+}
+
+/// Ring of `n` time windows, each holding a [`LogHistogram`], keyed by
+/// an explicit monotone window index. A slot is lazily reset when a
+/// newer index maps onto it, and `sliding(idx)` merges only the slots
+/// whose stored index falls inside the last `n` windows ending at
+/// `idx` — so slots that were skipped entirely (idle gaps) never leak
+/// stale samples into the sliding view.
+#[derive(Debug)]
+pub struct WindowRing {
+    /// `(window index, histogram)`; `u64::MAX` marks a never-used slot.
+    slots: Vec<(u64, LogHistogram)>,
+}
+
+impl WindowRing {
+    pub fn new(windows: usize) -> WindowRing {
+        let n = windows.max(1);
+        WindowRing { slots: (0..n).map(|_| (u64::MAX, LogHistogram::new())).collect() }
+    }
+
+    pub fn windows(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record `ms` into window `idx` (indices must be supplied
+    /// non-decreasing for the sliding view to be meaningful).
+    pub fn record(&mut self, idx: u64, ms: f64) {
+        let n = self.slots.len() as u64;
+        let slot = &mut self.slots[(idx % n) as usize];
+        if slot.0 != idx {
+            slot.0 = idx;
+            slot.1 = LogHistogram::new();
+        }
+        slot.1.record(ms);
+    }
+
+    /// Merge of the last `windows()` windows ending at `idx` inclusive.
+    pub fn sliding(&self, idx: u64) -> LogHistogram {
+        let n = self.slots.len() as u64;
+        let lo = idx.saturating_sub(n - 1);
+        let mut out = LogHistogram::new();
+        for (slot_idx, hist) in &self.slots {
+            if *slot_idx != u64::MAX && *slot_idx >= lo && *slot_idx <= idx {
+                out.merge(hist);
+            }
+        }
+        out
+    }
+}
+
+/// Default window width for [`SloTracker`].
+pub const DEFAULT_WINDOW: Duration = Duration::from_secs(1);
+/// Default window count: 64 x 1s ~= the last minute of traffic.
+pub const DEFAULT_WINDOWS: usize = 64;
+
+/// Wall-clock front-end over [`WindowRing`]: maps `Instant::now()`
+/// elapsed-since-start onto window indices.
+#[derive(Debug)]
+pub struct SloTracker {
+    start: Instant,
+    window: Duration,
+    ring: WindowRing,
+}
+
+impl Default for SloTracker {
+    fn default() -> SloTracker {
+        SloTracker::new(DEFAULT_WINDOW, DEFAULT_WINDOWS)
+    }
+}
+
+impl SloTracker {
+    pub fn new(window: Duration, windows: usize) -> SloTracker {
+        SloTracker {
+            start: Instant::now(),
+            window: window.max(Duration::from_millis(1)),
+            ring: WindowRing::new(windows),
+        }
+    }
+
+    fn idx(&self) -> u64 {
+        (self.start.elapsed().as_nanos() / self.window.as_nanos().max(1)) as u64
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        let i = self.idx();
+        self.ring.record(i, ms);
+    }
+
+    /// Histogram over the sliding window ending now.
+    pub fn windowed(&self) -> LogHistogram {
+        self.ring.sliding(self.idx())
+    }
+
+    pub fn window_secs(&self) -> f64 {
+        self.window.as_secs_f64()
+    }
+
+    pub fn windows(&self) -> usize {
+        self.ring.windows()
+    }
+}
+
+/// Per-lane slice of the results ledger.
+#[derive(Debug, Clone, Default)]
+pub struct LaneLedger {
+    /// Jobs delivered `Done` on this lane (goodput numerator).
+    pub completed: u64,
+    /// Jobs dropped for an elapsed deadline.
+    pub deadline_misses: u64,
+    /// Jobs that ended cancelled.
+    pub cancellations: u64,
+    /// Submissions bounced by bounded admission (queue full).
+    pub rejected: u64,
+    /// Full-depth denoising steps executed for completed jobs.
+    pub steps_full: u64,
+    /// PAS partial (approximated) steps executed for completed jobs.
+    pub steps_partial: u64,
+    /// End-to-end latency of completed jobs.
+    pub latency_ms: LogHistogram,
+    /// `CancelToken` fire -> cancellation observed (terminal recorded).
+    pub cancel_ack_ms: LogHistogram,
+}
+
+impl LaneLedger {
+    /// Fraction of terminal outcomes that missed their deadline.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        let terminals = self.completed + self.deadline_misses + self.cancellations;
+        if terminals == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / terminals as f64
+        }
+    }
+}
+
+/// Per-[`Priority`] results ledger — the structure ROADMAP item 2's
+/// traffic engine consumes: goodput, deadline-miss rate, cancel-ack
+/// latency and rejects, each with its own latency histogram.
+#[derive(Debug, Clone, Default)]
+pub struct PriorityLedger {
+    lanes: [LaneLedger; 3],
+}
+
+impl PriorityLedger {
+    pub fn lane(&self, p: Priority) -> &LaneLedger {
+        &self.lanes[p.index()]
+    }
+
+    pub fn on_done(&mut self, p: Priority, latency_ms: f64) {
+        let lane = &mut self.lanes[p.index()];
+        lane.completed += 1;
+        lane.latency_ms.record(latency_ms);
+    }
+
+    /// `ack_ms` is the fire-to-observation latency when the token's
+    /// fire time is known (it always is on the server paths; `None`
+    /// covers externally-constructed tokens that were never fired).
+    pub fn on_cancelled(&mut self, p: Priority, ack_ms: Option<f64>) {
+        let lane = &mut self.lanes[p.index()];
+        lane.cancellations += 1;
+        if let Some(ms) = ack_ms {
+            lane.cancel_ack_ms.record(ms);
+        }
+    }
+
+    pub fn on_deadline_miss(&mut self, p: Priority) {
+        self.lanes[p.index()].deadline_misses += 1;
+    }
+
+    pub fn on_rejected(&mut self, p: Priority) {
+        self.lanes[p.index()].rejected += 1;
+    }
+
+    /// Attribute executed step counts (full vs PAS-partial) to a lane.
+    pub fn on_steps(&mut self, p: Priority, full: u64, partial: u64) {
+        let lane = &mut self.lanes[p.index()];
+        lane.steps_full += full;
+        lane.steps_partial += partial;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            Priority::ALL
+                .iter()
+                .map(|&p| {
+                    let lane = self.lane(p);
+                    Json::obj(vec![
+                        ("priority", Json::str(p.as_str())),
+                        ("completed", Json::Num(lane.completed as f64)),
+                        ("deadline_misses", Json::Num(lane.deadline_misses as f64)),
+                        ("deadline_miss_rate", Json::Num(lane.deadline_miss_rate())),
+                        ("cancellations", Json::Num(lane.cancellations as f64)),
+                        ("rejected", Json::Num(lane.rejected as f64)),
+                        ("steps_full", Json::Num(lane.steps_full as f64)),
+                        ("steps_partial", Json::Num(lane.steps_partial as f64)),
+                        ("latency_p50_ms", Json::Num(lane.latency_ms.percentile(50.0))),
+                        ("latency_p95_ms", Json::Num(lane.latency_ms.percentile(95.0))),
+                        ("cancel_acks", Json::Num(lane.cancel_ack_ms.count() as f64)),
+                        ("cancel_ack_p50_ms", Json::Num(lane.cancel_ack_ms.percentile(50.0))),
+                        ("cancel_ack_p95_ms", Json::Num(lane.cancel_ack_ms.percentile(95.0))),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentile_respects_relative_error_bound() {
+        let mut h = LogHistogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.37).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [50.0, 90.0, 95.0, 99.0] {
+            let exact = sorted[((p / 100.0 * sorted.len() as f64).ceil() as usize).max(1) - 1];
+            let approx = h.percentile(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(
+                rel <= LogHistogram::relative_error_bound() + 1e-9,
+                "p{p}: approx {approx} vs exact {exact} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_clamps_tiny_values_to_floor_bucket() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-4.0);
+        h.record(f64::NAN);
+        h.record(1e-9);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.percentile(99.0), MIN_VALUE_MS);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(10.0);
+        b.record(1000.0);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab.count(), 2);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge is commutative");
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(95.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn window_ring_drops_expired_windows() {
+        let mut r = WindowRing::new(4);
+        r.record(0, 5.0);
+        r.record(1, 50.0);
+        // Window 0 is still inside the 4-wide view at idx 3...
+        assert_eq!(r.sliding(3).count(), 2);
+        // ...and out of it at idx 4, even though nothing overwrote the
+        // slot yet (lazy reset must not leak stale windows).
+        assert_eq!(r.sliding(4).count(), 1);
+        assert_eq!(r.sliding(10).count(), 0);
+    }
+
+    #[test]
+    fn window_ring_slot_reuse_resets_old_contents() {
+        let mut r = WindowRing::new(2);
+        r.record(0, 1.0);
+        r.record(0, 1.0);
+        r.record(2, 9.0); // same slot as window 0: must reset, not merge
+        assert_eq!(r.sliding(2).count(), 1);
+    }
+
+    #[test]
+    fn slo_tracker_windowed_sees_recent_samples() {
+        let mut t = SloTracker::new(Duration::from_secs(60), 8);
+        for i in 0..50 {
+            t.record(10.0 + i as f64);
+        }
+        let w = t.windowed();
+        assert_eq!(w.count(), 50);
+        assert!(w.percentile(50.0) > 0.0);
+    }
+
+    #[test]
+    fn ledger_tracks_lanes_independently() {
+        let mut l = PriorityLedger::default();
+        l.on_done(Priority::High, 12.0);
+        l.on_done(Priority::High, 14.0);
+        l.on_deadline_miss(Priority::Low);
+        l.on_cancelled(Priority::Normal, Some(3.0));
+        l.on_rejected(Priority::Low);
+        l.on_steps(Priority::High, 7, 3);
+        assert_eq!(l.lane(Priority::High).completed, 2);
+        assert_eq!(l.lane(Priority::High).steps_full, 7);
+        assert_eq!(l.lane(Priority::High).steps_partial, 3);
+        assert_eq!(l.lane(Priority::Normal).cancellations, 1);
+        assert_eq!(l.lane(Priority::Normal).cancel_ack_ms.count(), 1);
+        assert_eq!(l.lane(Priority::Low).rejected, 1);
+        assert!((l.lane(Priority::Low).deadline_miss_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(l.lane(Priority::High).deadline_miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn ledger_json_is_parseable_and_ordered_by_priority() {
+        let mut l = PriorityLedger::default();
+        l.on_done(Priority::Normal, 25.0);
+        let j = Json::parse(&l.to_json().to_string()).unwrap();
+        let lanes = j.as_arr().unwrap();
+        assert_eq!(lanes.len(), 3);
+        assert_eq!(lanes[0].get_str("priority"), Some("high"));
+        assert_eq!(lanes[1].get_str("priority"), Some("normal"));
+        assert_eq!(lanes[1].get_usize("completed"), Some(1));
+        assert!(lanes[1].get_f64("latency_p50_ms").unwrap() > 0.0);
+    }
+}

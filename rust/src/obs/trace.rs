@@ -274,7 +274,46 @@ impl SpanEvent {
         let j = Json::parse(line).map_err(|e| anyhow!("span: bad JSON: {e}"))?;
         SpanEvent::from_json(&j)
     }
+}
 
+/// Parse a whole JSONL trace, tolerating a truncated tail.
+///
+/// A process that dies mid-write leaves a final line that is not valid
+/// JSON; hard-erroring on it makes every crash trace unreadable. This
+/// parser skips a *final* malformed-JSON line with a warning string
+/// instead. Everything else stays strict: malformed JSON anywhere but
+/// the last line, and well-formed lines that fail span validation
+/// (wrong schema version, missing fields) on *any* line — truncation
+/// cannot produce those — are hard errors. Line numbers in errors and
+/// warnings are 1-based over the raw input.
+pub fn parse_jsonl_lossy(text: &str) -> Result<(Vec<SpanEvent>, Vec<String>)> {
+    let lines: Vec<(usize, &str)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .collect();
+    let mut spans = Vec::with_capacity(lines.len());
+    let mut warnings = Vec::new();
+    for (pos, &(lineno, line)) in lines.iter().enumerate() {
+        match SpanEvent::parse_line(line) {
+            Ok(ev) => spans.push(ev),
+            Err(e) => {
+                let last = pos + 1 == lines.len();
+                if last && Json::parse(line).is_err() {
+                    warnings.push(format!(
+                        "line {}: skipped truncated final line ({e:#})",
+                        lineno + 1
+                    ));
+                } else {
+                    return Err(anyhow!("line {}: {e:#}", lineno + 1));
+                }
+            }
+        }
+    }
+    Ok((spans, warnings))
+}
+
+impl SpanEvent {
     /// Structural projection: everything except `seq`, `ts_us` and
     /// `dur_us`. Two same-seed deterministic runs must produce
     /// byte-identical structure sequences even though wall-clock fields
@@ -640,6 +679,49 @@ mod tests {
         b.dur_us = Some(2);
         assert_eq!(a.structure(), b.structure());
         assert_eq!(structure_lines(&[a]), structure_lines(&[b]));
+    }
+
+    #[test]
+    fn lossy_parse_skips_truncated_final_line_with_warning() {
+        let full = SpanEvent::new(1, Phase::Queued).to_json().to_string();
+        let half = &full[..full.len() / 2]; // a crash-truncated tail
+        let text = format!("{full}\n{full}\n{half}");
+        let (spans, warnings) = parse_jsonl_lossy(&text).unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("line 3"), "warning was: {}", warnings[0]);
+        assert!(warnings[0].contains("truncated"));
+    }
+
+    #[test]
+    fn lossy_parse_hard_errors_on_mid_file_garbage() {
+        let full = SpanEvent::new(1, Phase::Queued).to_json().to_string();
+        let text = format!("{full}\n{{broken\n{full}");
+        let err = parse_jsonl_lossy(&text).unwrap_err();
+        assert!(err.to_string().contains("line 2"), "error was: {err:#}");
+    }
+
+    #[test]
+    fn lossy_parse_hard_errors_on_wrong_version_even_at_tail() {
+        // A well-formed final line with a wrong schema version is not
+        // truncation damage; the schema invariant stays strict.
+        let full = SpanEvent::new(1, Phase::Queued).to_json().to_string();
+        let bumped = full.replace(
+            &format!("\"v\":{TRACE_SCHEMA_VERSION}"),
+            &format!("\"v\":{}", TRACE_SCHEMA_VERSION + 1),
+        );
+        let text = format!("{full}\n{bumped}");
+        assert!(parse_jsonl_lossy(&text).is_err());
+    }
+
+    #[test]
+    fn lossy_parse_handles_clean_files_and_blank_lines() {
+        let full = SpanEvent::new(1, Phase::Queued).to_json().to_string();
+        let text = format!("{full}\n\n{full}\n");
+        let (spans, warnings) = parse_jsonl_lossy(&text).unwrap();
+        assert_eq!(spans.len(), 2);
+        assert!(warnings.is_empty());
+        assert_eq!(parse_jsonl_lossy("").unwrap().0.len(), 0);
     }
 
     #[test]

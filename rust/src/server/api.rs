@@ -23,8 +23,8 @@
 
 use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{GenResult, SdError};
 use crate::pas::plan::StepAction;
@@ -101,8 +101,20 @@ impl SubmitOptions {
 
 /// Shared cancellation flag: cloning hands out another handle to the
 /// same flag. Cancellation is cooperative, idempotent and sticky.
+///
+/// The first `cancel()` also stamps a fire time, so the server can
+/// measure cancel-ack latency — fire to the `Cancelled` terminal — per
+/// priority in the SLO ledger (`obs::slo::PriorityLedger`). Later
+/// `cancel()` calls keep the original stamp (ack latency is measured
+/// from the first request to cancel).
 #[derive(Debug, Clone, Default)]
-pub struct CancelToken(Arc<AtomicBool>);
+pub struct CancelToken(Arc<CancelState>);
+
+#[derive(Debug, Default)]
+struct CancelState {
+    fired: AtomicBool,
+    fired_at: Mutex<Option<Instant>>,
+}
 
 impl CancelToken {
     pub fn new() -> CancelToken {
@@ -110,11 +122,32 @@ impl CancelToken {
     }
 
     pub fn cancel(&self) {
-        self.0.store(true, Ordering::Relaxed);
+        // Stamp before raising the flag so any observer that sees
+        // `is_cancelled()` can also read a fire time.
+        {
+            let mut at = self.0.fired_at.lock().unwrap();
+            if at.is_none() {
+                *at = Some(Instant::now());
+            }
+        }
+        self.0.fired.store(true, Ordering::Relaxed);
     }
 
     pub fn is_cancelled(&self) -> bool {
-        self.0.load(Ordering::Relaxed)
+        self.0.fired.load(Ordering::Relaxed)
+    }
+
+    /// When the token first fired, if it has.
+    pub fn fired_at(&self) -> Option<Instant> {
+        *self.0.fired_at.lock().unwrap()
+    }
+
+    /// Milliseconds from the first `cancel()` to `observed` — the
+    /// cancel-ack latency when `observed` is the moment the server
+    /// recorded the `Cancelled` terminal. `None` if never fired.
+    pub fn ack_ms(&self, observed: Instant) -> Option<f64> {
+        self.fired_at()
+            .map(|at| observed.saturating_duration_since(at).as_secs_f64() * 1e3)
     }
 }
 
@@ -240,6 +273,21 @@ mod tests {
         assert!(t.is_cancelled(), "clones share the flag");
         t.cancel();
         assert!(t.is_cancelled(), "cancel is idempotent");
+    }
+
+    #[test]
+    fn cancel_token_stamps_first_fire_time_only() {
+        let t = CancelToken::new();
+        assert!(t.fired_at().is_none());
+        assert!(t.ack_ms(std::time::Instant::now()).is_none());
+        t.cancel();
+        let first = t.fired_at().expect("fire stamps a time");
+        t.cancel();
+        assert_eq!(t.fired_at(), Some(first), "re-cancel keeps the first stamp");
+        let ack = t.ack_ms(first + Duration::from_millis(25)).unwrap();
+        assert!((ack - 25.0).abs() < 1e-6, "ack_ms was {ack}");
+        // Clones read the same stamp.
+        assert_eq!(t.clone().fired_at(), Some(first));
     }
 
     #[test]

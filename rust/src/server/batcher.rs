@@ -26,8 +26,10 @@ pub struct Batcher<P: BatchItem> {
     max_wait: Duration,
     queues: BTreeMap<P::Key, Vec<(Instant, P)>>,
     /// Cancelled/expired items removed during flush passes, awaiting
-    /// [`Batcher::take_dropped`].
-    dropped: Vec<(DropReason, P)>,
+    /// [`Batcher::take_dropped`]. The `Instant` is when the prune
+    /// observed the drop — the server measures cancel-ack latency from
+    /// the token's fire time to this timestamp.
+    dropped: Vec<(DropReason, Instant, P)>,
 }
 
 /// Anything with a batching key. The key is a structured `Ord` type
@@ -149,7 +151,7 @@ impl<P: BatchItem> Batcher<P> {
                 match reason {
                     Some(r) => {
                         let (_, item) = q.remove(i);
-                        self.dropped.push((r, item));
+                        self.dropped.push((r, now, item));
                     }
                     None => i += 1,
                 }
@@ -159,9 +161,11 @@ impl<P: BatchItem> Batcher<P> {
     }
 
     /// Take ownership of everything dropped since the last call, with
-    /// the reason each item was removed. The server turns these into
-    /// `Cancelled` / `Failed(DeadlineExceeded)` job events and metrics.
-    pub fn take_dropped(&mut self) -> Vec<(DropReason, P)> {
+    /// the reason each item was removed and the instant the prune
+    /// observed it. The server turns these into `Cancelled` /
+    /// `Failed(DeadlineExceeded)` job events, metrics, and cancel-ack
+    /// latency samples.
+    pub fn take_dropped(&mut self) -> Vec<(DropReason, Instant, P)> {
         std::mem::take(&mut self.dropped)
     }
 
@@ -380,7 +384,8 @@ mod tests {
         let dropped = b.take_dropped();
         assert_eq!(dropped.len(), 1);
         assert_eq!(dropped[0].0, DropReason::Cancelled);
-        assert_eq!(dropped[0].1.tag, 1);
+        assert_eq!(dropped[0].2.tag, 1);
+        assert!(dropped[0].1.elapsed() < Duration::from_secs(60), "drop instant is recent");
         assert!(b.take_dropped().is_empty(), "take_dropped drains");
     }
 
@@ -400,6 +405,7 @@ mod tests {
         let dropped = b.take_dropped();
         assert_eq!(dropped.len(), 1);
         assert_eq!(dropped[0].0, DropReason::DeadlineExceeded);
+        assert_eq!(dropped[0].2.tag, 1);
     }
 
     #[test]

@@ -1,13 +1,19 @@
 //! Serving metrics: counters, latency reservoir, batch-occupancy
-//! histogram, live queue-depth gauges (total and per priority), and the
+//! histogram, live queue-depth gauges (total and per priority), the
 //! job-lifecycle counters (cancellations, deadline misses, admission
-//! rejections).
+//! rejections), plus the SLO layer — a windowed latency tracker
+//! ([`SloTracker`]) giving sliding p50/p95/p99 *alongside* (not
+//! replacing) the all-time reservoir, and the per-priority results
+//! ledger ([`PriorityLedger`]) of goodput, deadline-miss rate,
+//! cancel-ack latency and rejects.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::obs::reservoir::Reservoir;
+use crate::obs::slo::{LogHistogram, PriorityLedger, SloTracker};
+use crate::server::api::Priority;
 use crate::util::json::Json;
 use crate::util::stats;
 
@@ -47,6 +53,12 @@ pub struct Metrics {
     /// fixed-seed RNG): memory is O(cap) under sustained serving while
     /// small runs keep every observation exactly.
     latencies_ms: Mutex<Reservoir>,
+    /// Windowed latency histograms (`obs::slo`): sliding p50/p95/p99
+    /// over the last ~minute, alongside the all-time reservoir.
+    slo: Mutex<SloTracker>,
+    /// Per-priority results ledger: goodput, deadline misses,
+    /// cancel-ack latency, rejects, full/partial step counts.
+    ledger: Mutex<PriorityLedger>,
 }
 
 /// A point-in-time summary.
@@ -80,6 +92,21 @@ pub struct Summary {
     pub cache_misses: u64,
     /// Entries evicted from the cache while this server was inserting.
     pub cache_evictions: u64,
+    /// Sliding-window latency percentiles (`obs::slo`), covering the
+    /// last `windows * window_secs` seconds. Each is within
+    /// `LogHistogram::relative_error_bound()` of the exact windowed
+    /// sample percentile.
+    pub windowed_p50_ms: f64,
+    pub windowed_p95_ms: f64,
+    pub windowed_p99_ms: f64,
+    /// Completions inside the sliding window.
+    pub windowed_count: u64,
+    pub window_secs: f64,
+    pub windows: usize,
+    /// Documented relative-error bound of the windowed percentiles.
+    pub slo_relative_error: f64,
+    /// Per-priority results ledger snapshot.
+    pub ledger: PriorityLedger,
 }
 
 impl Metrics {
@@ -87,9 +114,24 @@ impl Metrics {
         self.enqueued.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn on_done(&self, latency_ms: f64) {
+    pub fn on_done(&self, latency_ms: f64, priority: Priority) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latencies_ms.lock().unwrap().push(latency_ms);
+        self.slo.lock().unwrap().record(latency_ms);
+        self.ledger.lock().unwrap().on_done(priority, latency_ms);
+    }
+
+    /// Exact latency samples currently held by the all-time reservoir
+    /// (every observation, for runs smaller than the reservoir cap) —
+    /// the reference the SLO tests compare windowed percentiles against.
+    pub fn latency_samples(&self) -> Vec<f64> {
+        self.latencies_ms.lock().unwrap().samples().to_vec()
+    }
+
+    /// Attribute executed denoising steps (full vs PAS-partial) of a
+    /// completed job to its priority lane.
+    pub fn on_steps(&self, priority: Priority, full: u64, partial: u64) {
+        self.ledger.lock().unwrap().on_steps(priority, full, partial);
     }
 
     /// Record one executed batch (called once per batch, not per request).
@@ -117,19 +159,24 @@ impl Metrics {
     }
 
     /// Job ended cancelled (dropped in the batcher, filtered at worker
-    /// dequeue, or aborted mid-run by the step observer).
-    pub fn on_cancelled(&self) {
+    /// dequeue, or aborted mid-run by the step observer). `ack_ms` is
+    /// the cancel-ack latency — `CancelToken` fire to the observed
+    /// `Cancelled` terminal — when the fire time is known.
+    pub fn on_cancelled(&self, priority: Priority, ack_ms: Option<f64>) {
         self.cancellations.fetch_add(1, Ordering::Relaxed);
+        self.ledger.lock().unwrap().on_cancelled(priority, ack_ms);
     }
 
     /// Job dropped because its deadline elapsed before a worker ran it.
-    pub fn on_deadline_miss(&self) {
+    pub fn on_deadline_miss(&self, priority: Priority) {
         self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        self.ledger.lock().unwrap().on_deadline_miss(priority);
     }
 
     /// Submission refused by bounded admission (queue at capacity).
-    pub fn on_rejected(&self) {
+    pub fn on_rejected(&self, priority: Priority) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.ledger.lock().unwrap().on_rejected(priority);
     }
 
     /// Request served from the persistent cache (no generation ran).
@@ -163,6 +210,10 @@ impl Metrics {
     /// which counts admissions and terminals under one lock.
     pub fn summary(&self) -> Summary {
         let lats = self.latencies_ms.lock().unwrap().samples().to_vec();
+        let (windowed, window_secs, windows) = {
+            let slo = self.slo.lock().unwrap();
+            (slo.windowed(), slo.window_secs(), slo.windows())
+        };
         Summary {
             enqueued: self.enqueued.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -197,6 +248,14 @@ impl Metrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            windowed_p50_ms: windowed.percentile(50.0),
+            windowed_p95_ms: windowed.percentile(95.0),
+            windowed_p99_ms: windowed.percentile(99.0),
+            windowed_count: windowed.count(),
+            window_secs,
+            windows,
+            slo_relative_error: LogHistogram::relative_error_bound(),
+            ledger: self.ledger.lock().unwrap().clone(),
         }
     }
 }
@@ -244,6 +303,19 @@ impl Summary {
             ("cache_hits", Json::Num(self.cache_hits as f64)),
             ("cache_misses", Json::Num(self.cache_misses as f64)),
             ("cache_evictions", Json::Num(self.cache_evictions as f64)),
+            (
+                "windowed",
+                Json::obj(vec![
+                    ("p50_ms", Json::Num(self.windowed_p50_ms)),
+                    ("p95_ms", Json::Num(self.windowed_p95_ms)),
+                    ("p99_ms", Json::Num(self.windowed_p99_ms)),
+                    ("count", Json::Num(self.windowed_count as f64)),
+                    ("window_secs", Json::Num(self.window_secs)),
+                    ("windows", Json::Num(self.windows as f64)),
+                    ("relative_error", Json::Num(self.slo_relative_error)),
+                ]),
+            ),
+            ("ledger", self.ledger.to_json()),
         ])
     }
 }
@@ -257,7 +329,7 @@ mod tests {
         let m = Metrics::default();
         for i in 0..10 {
             m.on_enqueue();
-            m.on_done(10.0 + i as f64);
+            m.on_done(10.0 + i as f64, Priority::Normal);
         }
         for _ in 0..5 {
             m.on_batch(2);
@@ -289,12 +361,12 @@ mod tests {
     #[test]
     fn lifecycle_counters_aggregate() {
         let m = Metrics::default();
-        m.on_cancelled();
-        m.on_cancelled();
-        m.on_deadline_miss();
-        m.on_rejected();
-        m.on_rejected();
-        m.on_rejected();
+        m.on_cancelled(Priority::Normal, Some(2.0));
+        m.on_cancelled(Priority::High, None);
+        m.on_deadline_miss(Priority::Low);
+        m.on_rejected(Priority::Low);
+        m.on_rejected(Priority::Low);
+        m.on_rejected(Priority::Normal);
         let s = m.summary();
         assert_eq!(s.cancellations, 2);
         assert_eq!(s.deadline_misses, 1);
@@ -302,6 +374,18 @@ mod tests {
         // Independent from error/done accounting.
         assert_eq!(s.errors, 0);
         assert_eq!(s.completed, 0);
+        // The ledger reconciles with the flat counters, per lane.
+        let lanes = &s.ledger;
+        let total_cancel: u64 =
+            Priority::ALL.iter().map(|&p| lanes.lane(p).cancellations).sum();
+        let total_miss: u64 =
+            Priority::ALL.iter().map(|&p| lanes.lane(p).deadline_misses).sum();
+        let total_rej: u64 = Priority::ALL.iter().map(|&p| lanes.lane(p).rejected).sum();
+        assert_eq!(total_cancel, s.cancellations);
+        assert_eq!(total_miss, s.deadline_misses);
+        assert_eq!(total_rej, s.rejected);
+        assert_eq!(lanes.lane(Priority::Normal).cancel_ack_ms.count(), 1);
+        assert_eq!(lanes.lane(Priority::High).cancel_ack_ms.count(), 0, "no ack without a fire time");
     }
 
     #[test]
@@ -327,7 +411,7 @@ mod tests {
         // kept samples while keeping the percentiles representative.
         let m = Metrics::default();
         for i in 0..100_000u64 {
-            m.on_done(i as f64 % 1000.0);
+            m.on_done(i as f64 % 1000.0, Priority::Normal);
         }
         let kept = m.latencies_ms.lock().unwrap().len();
         assert!(
@@ -349,7 +433,7 @@ mod tests {
         let m = Metrics::default();
         m.on_enqueue();
         m.on_enqueue();
-        m.on_done(12.0);
+        m.on_done(12.0, Priority::High);
         m.on_batch(2);
         m.on_cache_hit();
         m.set_queue_depth(1);
@@ -365,6 +449,54 @@ mod tests {
         assert_eq!(hist[0].get_usize("size"), Some(2));
         assert_eq!(hist[0].get_usize("count"), Some(1));
         assert_eq!(parsed.get_f64("p50_ms"), Some(12.0));
+        // New SLO surfaces ride along in the same JSON.
+        let windowed = parsed.get("windowed").unwrap();
+        assert_eq!(windowed.get_usize("count"), Some(1));
+        assert!(windowed.get_f64("p95_ms").unwrap() > 0.0);
+        let ledger = parsed.get("ledger").and_then(Json::as_arr).unwrap();
+        assert_eq!(ledger.len(), 3);
+        assert_eq!(ledger[0].get_str("priority"), Some("high"));
+        assert_eq!(ledger[0].get_usize("completed"), Some(1));
+    }
+
+    #[test]
+    fn windowed_percentiles_track_recent_completions_within_bound() {
+        let m = Metrics::default();
+        for i in 0..200 {
+            m.on_done(5.0 + i as f64, Priority::Normal);
+        }
+        let s = m.summary();
+        // All samples fall inside the (minute-wide) sliding window on a
+        // fast test run, so the windowed percentile must sit within the
+        // documented relative error of the exact sample percentile.
+        assert_eq!(s.windowed_count, 200);
+        let mut exact = m.latency_samples();
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((0.95 * exact.len() as f64).ceil() as usize).max(1) - 1;
+        let exact_p95 = exact[rank];
+        let rel = (s.windowed_p95_ms - exact_p95).abs() / exact_p95;
+        assert!(
+            rel <= s.slo_relative_error + 1e-9,
+            "windowed p95 {} vs exact {} (rel {rel}, bound {})",
+            s.windowed_p95_ms,
+            exact_p95,
+            s.slo_relative_error
+        );
+        assert!(s.windowed_p50_ms <= s.windowed_p95_ms);
+        assert!(s.windowed_p95_ms <= s.windowed_p99_ms);
+    }
+
+    #[test]
+    fn ledger_step_attribution_accumulates_per_lane() {
+        let m = Metrics::default();
+        m.on_steps(Priority::Normal, 3, 2);
+        m.on_steps(Priority::Normal, 3, 2);
+        m.on_steps(Priority::High, 10, 0);
+        let s = m.summary();
+        assert_eq!(s.ledger.lane(Priority::Normal).steps_full, 6);
+        assert_eq!(s.ledger.lane(Priority::Normal).steps_partial, 4);
+        assert_eq!(s.ledger.lane(Priority::High).steps_full, 10);
+        assert_eq!(s.ledger.lane(Priority::Low).steps_full, 0);
     }
 
     #[test]

@@ -198,7 +198,7 @@ impl Client {
         // Bounded admission: reserve a slot or bounce.
         if self.depth.fetch_add(1, Ordering::SeqCst) >= self.max_queue {
             self.depth.fetch_sub(1, Ordering::SeqCst);
-            self.metrics.on_rejected();
+            self.metrics.on_rejected(opts.priority);
             return Err(SdError::QueueFull);
         }
 
@@ -301,16 +301,18 @@ fn dispatch_pass(
     depth: &AtomicUsize,
     trace: Option<&Arc<TraceSink>>,
 ) {
-    for (reason, job) in batcher.take_dropped() {
+    for (reason, observed_at, job) in batcher.take_dropped() {
         depth.fetch_sub(1, Ordering::SeqCst);
         match reason {
             DropReason::Cancelled => {
-                metrics.on_cancelled();
+                // Cancel-ack latency: token fire -> the prune that
+                // observed it, per priority in the SLO ledger.
+                metrics.on_cancelled(job.priority, job.cancel.ack_ms(observed_at));
                 record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                 let _ = job.events.send(JobEvent::Cancelled);
             }
             DropReason::DeadlineExceeded => {
-                metrics.on_deadline_miss();
+                metrics.on_deadline_miss(job.priority);
                 record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
                 let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
             }
@@ -396,12 +398,12 @@ fn run_batch(
     let mut remaining = Vec::with_capacity(batch.len());
     for job in batch {
         if job.cancel.is_cancelled() {
-            metrics.on_cancelled();
+            metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
             record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
             let _ = job.events.send(JobEvent::Cancelled);
             depth.fetch_sub(1, Ordering::SeqCst);
         } else if job.deadline.map_or(false, |d| now >= d) {
-            metrics.on_deadline_miss();
+            metrics.on_deadline_miss(job.priority);
             record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
             let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
             depth.fetch_sub(1, Ordering::SeqCst);
@@ -487,7 +489,7 @@ fn run_group(
     let mut group = Vec::with_capacity(batch.len());
     for job in batch {
         if job.deadline.map_or(false, |d| t0 >= d) {
-            metrics.on_deadline_miss();
+            metrics.on_deadline_miss(job.priority);
             record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
             let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
         } else {
@@ -537,7 +539,7 @@ fn run_group(
                     // Cancelled while batch mates kept the run alive:
                     // the caller asked out, so deliver Cancelled even
                     // though a latent exists.
-                    metrics.on_cancelled();
+                    metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
                     record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                     let _ = job.events.send(JobEvent::Cancelled);
                 } else if BatchObserver::expired(&job, now) {
@@ -545,11 +547,12 @@ fn run_group(
                     // mates kept the run alive: a deadline is a hard
                     // delivery bound, so the (valid, cached-above)
                     // latent is not delivered late.
-                    metrics.on_deadline_miss();
+                    metrics.on_deadline_miss(job.priority);
                     record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
                     let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
                 } else {
-                    metrics.on_done(batch_ms + q_ms);
+                    metrics.on_done(batch_ms + q_ms, job.priority);
+                    metrics.on_steps(job.priority, r.stats.full_steps(), r.stats.partial_steps());
                     record_span(trace, SpanEvent::new(job.id.0, Phase::Done));
                     let _ = job.events.send(JobEvent::Done(r));
                 }
@@ -558,19 +561,21 @@ fn run_group(
         Err(e) if e.is_cancelled() => {
             // Every lane's token fired; the observer aborted the run
             // before its final step.
+            let now = Instant::now();
             for job in group {
-                metrics.on_cancelled();
+                metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
                 record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                 let _ = job.events.send(JobEvent::Cancelled);
             }
         }
         Err(e) => {
+            let now = Instant::now();
             for job in group {
                 if job.cancel.is_cancelled() {
                     // The lane had already asked out when a batch
                     // mate's failure aborted the run: it observes
                     // Cancelled, not the mate's error.
-                    metrics.on_cancelled();
+                    metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
                     record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                     let _ = job.events.send(JobEvent::Cancelled);
                 } else {
@@ -578,7 +583,7 @@ fn run_group(
                     // the metrics, not a generic error — it feeds the
                     // same counter as admission/dequeue-time expiry.
                     if e == SdError::DeadlineExceeded {
-                        metrics.on_deadline_miss();
+                        metrics.on_deadline_miss(job.priority);
                     } else {
                         metrics.on_error();
                     }

@@ -13,7 +13,7 @@ use sd_acc::cache::StoreConfig;
 use sd_acc::coordinator::{Coordinator, GenRequest};
 use sd_acc::obs::trace::{structure_lines, DEFAULT_RING_CAP};
 use sd_acc::obs::{Phase, SpanEvent, TraceScope, TraceSink};
-use sd_acc::server::{Server, ServerConfig};
+use sd_acc::server::{Priority, Server, ServerConfig, SubmitOptions};
 
 fn coord_or_skip() -> Option<Arc<Coordinator>> {
     common::service().map(|s| Arc::new(Coordinator::new(s.handle())))
@@ -251,6 +251,167 @@ fn warm_request_hit_is_one_entry_one_terminal_without_scheduling() {
     assert!(
         !spans.iter().any(|s| s.job == hit_jobs[0] && s.phase == Phase::Scheduled),
         "cache-hit jobs never reach the batcher"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------- analytics & SLO layer
+
+#[test]
+fn analyzer_phase_durations_sum_to_at_most_e2e_per_job() {
+    let Some(coord) = coord_or_skip() else { return };
+    let sink = TraceSink::in_memory(DEFAULT_RING_CAP);
+    traced_run(&coord, &sink, 4);
+    let a = sd_acc::obs::analyze::analyze(&sink.snapshot());
+    assert_eq!(a.jobs.len(), 4);
+    assert!(a.incomplete_jobs.is_empty(), "drained server leaves no incomplete jobs");
+    for t in &a.jobs {
+        assert!(t.complete);
+        assert!(
+            t.breakdown.total_us() <= t.e2e_us,
+            "job {}: attributed {} us exceeds e2e {} us",
+            t.job,
+            t.breakdown.total_us(),
+            t.e2e_us
+        );
+        assert_eq!(
+            t.breakdown.total_us() + t.other_us,
+            t.e2e_us,
+            "attributed + other always reconstructs e2e exactly"
+        );
+    }
+    assert!(
+        a.jobs.iter().any(|t| t.breakdown.step_full_us > 0),
+        "lead lanes carry denoising step time"
+    );
+    assert!(a.total_e2e_ms > 0.0);
+    assert!(!a.batches.is_empty(), "scheduled spans reconstruct into batch groups");
+}
+
+#[test]
+fn windowed_percentiles_track_exact_samples_within_documented_bound() {
+    let Some(coord) = coord_or_skip() else { return };
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let handles: Vec<_> = (0..6)
+        .map(|i| client.submit(req(&format!("blue dot x{i} y{i}"), 700 + i as u64)).unwrap())
+        .collect();
+    for h in &handles {
+        h.wait().expect("generation ok");
+    }
+    let s = server.metrics.summary();
+    let mut exact = server.metrics.latency_samples();
+    server.shutdown();
+    assert_eq!(exact.len(), 6);
+    assert_eq!(s.windowed_count, 6, "a short run fits entirely in the sliding window");
+    exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // The windowed numbers use the histogram's nearest-rank convention,
+    // so compare against the exact nearest-rank sample, not an
+    // interpolated percentile.
+    for (p, windowed) in
+        [(50.0, s.windowed_p50_ms), (95.0, s.windowed_p95_ms), (99.0, s.windowed_p99_ms)]
+    {
+        let rank = ((p / 100.0 * exact.len() as f64).ceil() as usize).max(1) - 1;
+        let e = exact[rank];
+        let rel = (windowed - e).abs() / e;
+        assert!(
+            rel <= s.slo_relative_error + 1e-9,
+            "p{p}: windowed {windowed} vs exact {e} (rel {rel}, bound {})",
+            s.slo_relative_error
+        );
+    }
+}
+
+#[test]
+fn ledger_reconciles_with_metrics_counters() {
+    let Some(coord) = coord_or_skip() else { return };
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    // Lane Normal: a job that completes and attributes its steps.
+    let a = client
+        .submit_with(req("red circle x1 y1", 801), SubmitOptions::with_priority(Priority::Normal))
+        .unwrap();
+    // Lane High: a distinct batch key (different step count) queued
+    // behind the single worker, cancelled immediately — whichever side
+    // observes the fired token (batcher prune or dequeue filter) must
+    // record a cancel-ack latency.
+    let mut rb = req("red circle x2 y2", 802);
+    rb.steps = 6;
+    let b = client.submit_with(rb, SubmitOptions::with_priority(Priority::High)).unwrap();
+    b.cancel.cancel();
+    // Lane Low: already expired on arrival.
+    let mut rc = req("red circle x3 y3", 803);
+    rc.steps = 7;
+    let mut opts = SubmitOptions::with_priority(Priority::Low);
+    opts.deadline = Some(Duration::ZERO);
+    let c = client.submit_with(rc, opts).unwrap();
+
+    a.wait().expect("normal-priority job completes");
+    assert!(b.wait().is_err(), "cancelled job delivers an error terminal");
+    assert!(c.wait().is_err(), "expired job delivers an error terminal");
+    let s = server.metrics.summary();
+    server.shutdown();
+
+    assert_eq!(s.completed, 1);
+    assert_eq!(s.cancellations, 1);
+    assert_eq!(s.deadline_misses, 1);
+    // Per-lane sums reconcile with the flat counters...
+    let lanes: Vec<_> = Priority::ALL.iter().map(|&p| s.ledger.lane(p)).collect();
+    assert_eq!(lanes.iter().map(|l| l.completed).sum::<u64>(), s.completed);
+    assert_eq!(lanes.iter().map(|l| l.cancellations).sum::<u64>(), s.cancellations);
+    assert_eq!(lanes.iter().map(|l| l.deadline_misses).sum::<u64>(), s.deadline_misses);
+    assert_eq!(lanes.iter().map(|l| l.rejected).sum::<u64>(), s.rejected);
+    // ...and land on the right lanes.
+    assert_eq!(s.ledger.lane(Priority::Normal).completed, 1);
+    assert_eq!(s.ledger.lane(Priority::High).cancellations, 1);
+    assert_eq!(
+        s.ledger.lane(Priority::High).cancel_ack_ms.count(),
+        1,
+        "every server-observed cancellation records a cancel-ack latency"
+    );
+    assert_eq!(s.ledger.lane(Priority::Low).deadline_misses, 1);
+    assert!(
+        s.ledger.lane(Priority::Normal).steps_full >= 1,
+        "completed job attributes its executed steps to its lane"
+    );
+}
+
+#[test]
+fn chrome_export_round_trips_through_util_json() {
+    let Some(coord) = coord_or_skip() else { return };
+    let sink = TraceSink::in_memory(DEFAULT_RING_CAP);
+    traced_run(&coord, &sink, 2);
+    let spans = sink.snapshot();
+    let dir = temp_dir("chrome");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.chrome.json");
+    let n = sd_acc::obs::export::write_chrome(&spans, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = sd_acc::util::json::Json::parse(&text).expect("export parses with util::json");
+    let events = doc.get("traceEvents").and_then(|j| j.as_arr()).expect("traceEvents array");
+    assert_eq!(events.len(), n, "write_chrome reports the emitted event count");
+    assert!(n >= spans.len(), "one event per span plus per-job metadata");
+    assert!(
+        events.iter().any(|e| e.get_str("ph") == Some("X")),
+        "dur-carrying spans become complete events"
+    );
+    assert!(
+        events.iter().any(|e| e.get_str("ph") == Some("i")),
+        "lifecycle spans become instant events"
     );
     let _ = std::fs::remove_dir_all(&dir);
 }

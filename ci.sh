@@ -3,9 +3,9 @@
 #
 # Usage: ./ci.sh [--no-clippy] [--no-fmt] [--bench-commit]
 #   SD_ACC_PROP_CASES=16 ./ci.sh     # trim property-test cases for speed
-#   ./ci.sh --bench-commit           # also refresh BENCH_obs.json (repo
-#                                    # root) after validating the schema
-#                                    # and the allocs/step budget
+#   ./ci.sh --bench-commit           # also refresh BENCH_obs.json and
+#                                    # BENCH_chaos.json (repo root) after
+#                                    # validating schemas and budgets
 #
 # The crate builds fully offline: external deps are vendored under
 # rust/vendor (anyhow subset + backend-less xla stub), so no network or
@@ -92,6 +92,30 @@ echo "$analyze_out" | grep -q "(validated)" \
     || { echo "chrome export did not self-validate" >&2; exit 1; }
 rm -rf "$trace_tmp"
 
+echo "== chaos bench (smoke) =="
+# Resilience pass: a seeded transient-fault wave (closed loop) must
+# recover >=95% of retried jobs with exactly one terminal each, and the
+# bursty load-engine phase must engage brownout against one worker.
+# Writes nothing; full mode refreshes BENCH_chaos.json at repo root.
+cargo bench --bench bench_chaos -- --smoke
+
+echo "== chaos serve lane =="
+# End-to-end CLI pass: deterministic fault injection (--chaos, sim-only)
+# plus the bursty deterministic load engine (--load) with shedding and
+# brownout armed. The serve report's always-printed resilience line is
+# the gate: the fault schedule must produce retries, and the burst
+# pattern must drive at least one brownout transition.
+chaos_out="$(./target/release/sd-acc serve --backend sim \
+    --chaos "seed=7,err=0.10,slow=0.03,slow_ms=1" \
+    --load "bursty:rate=800,burst=12@6,n=36,seed=3,steps=3,cooldown=8" \
+    --workers 2 --shed-low 6 --brownout 5:2)"
+echo "$chaos_out" | grep -q "chaos: deterministic fault injection armed" \
+    || { echo "chaos serve lane: --chaos did not arm fault injection" >&2; exit 1; }
+echo "$chaos_out" | grep -qE "resilience: [1-9][0-9]* retries" \
+    || { echo "chaos serve lane: fault schedule produced no retries" >&2; exit 1; }
+echo "$chaos_out" | grep -qE "[1-9][0-9]* brownout transitions" \
+    || { echo "chaos serve lane: burst load never engaged brownout" >&2; exit 1; }
+
 if [ "$bench_commit" = 1 ]; then
     echo "== obs bench (commit trajectory point) =="
     # Full measurement; validates schema + the allocs/step budget against
@@ -99,6 +123,10 @@ if [ "$bench_commit" = 1 ]; then
     # The limit itself is carried over from the committed file — raising
     # it is a reviewed edit, never an automatic ratchet.
     cargo bench --bench bench_obs -- --commit
+
+    echo "== chaos bench (commit trajectory point) =="
+    # Same gates as the smoke lane, then rewrite BENCH_chaos.json.
+    cargo bench --bench bench_chaos -- --commit
 fi
 
 if [ "$run_fmt" = 1 ]; then

@@ -1,0 +1,262 @@
+//! Chaos bench: the deterministic fault-injection workload behind the
+//! committed `BENCH_chaos.json` trajectory (repo root).
+//!
+//! Two phases over the sim backend:
+//!
+//! 1. **Transient wave** (closed loop): a seeded fault schedule fails
+//!    ~half of first attempts with transient execute errors plus
+//!    latency spikes. Reports goodput, how many jobs retried, and the
+//!    retry recovery ratio — gated at >= 95%, with exactly one terminal
+//!    event per job.
+//! 2. **Pressure** (bursty open loop via `server::loadgen`): a
+//!    fault-free server with shedding and brownout armed, driven by the
+//!    deterministic bursty arrival process. Reports sheds, brownout
+//!    transitions, degraded admissions and load-engine accounting —
+//!    gated on brownout engaging and the report's terminal accounting.
+//!
+//! Modes (ci.sh):
+//!   `--smoke`  validate only: schema keys present, gates hold. No file
+//!              writes.
+//!   `--commit` everything `--smoke` checks, then rewrite
+//!              `BENCH_chaos.json`.
+//!   default    measure and print, write nothing.
+//!
+//! Run: `cargo bench --bench bench_chaos [-- --smoke | -- --commit]`
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sd_acc::coordinator::{Coordinator, GenRequest};
+use sd_acc::runtime::{BackendKind, FaultSpec, RuntimeService};
+use sd_acc::server::loadgen::{run_load, LoadReport, LoadSpec};
+use sd_acc::server::{JobEvent, ResiliencePolicy, Server, ServerConfig};
+use sd_acc::util::json::Json;
+
+/// Keys every BENCH_chaos.json point must carry (schema validation).
+const REQUIRED_KEYS: [&str; 12] = [
+    "bench",
+    "wave_jobs",
+    "wave_goodput_per_sec",
+    "wave_retried_jobs",
+    "wave_retries",
+    "wave_recovery_ratio",
+    "wave_errors",
+    "load_submitted",
+    "load_goodput_per_sec",
+    "sheds",
+    "brownout_transitions",
+    "degraded",
+];
+
+struct WaveMeasured {
+    jobs: u64,
+    goodput_per_sec: f64,
+    retried: u64,
+    retries: u64,
+    recovery_ratio: f64,
+    errors: u64,
+}
+
+/// Phase 1: closed-loop transient wave. Same schedule family as
+/// `tests/integration_chaos.rs` — err=0.15 over 4 faultable calls per
+/// attempt fails ~48% of first attempts; a 12-retry budget makes
+/// permanent failure a ~1e-4 tail.
+fn run_wave() -> anyhow::Result<WaveMeasured> {
+    let art_dir =
+        std::env::temp_dir().join(format!("sdacc_bench_chaos_art_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&art_dir);
+    let spec = FaultSpec::parse("seed=11,err=0.15,slow=0.05,slow_ms=1")?;
+    let svc = RuntimeService::start_with_faults(BackendKind::Sim, &art_dir, Some(spec))?;
+    let coord = Arc::new(Coordinator::new(svc.handle()));
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(0),
+            resilience: ResiliencePolicy {
+                retry_budget: 12,
+                backoff_base: Duration::from_micros(200),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let n = 30u64;
+    let t0 = Instant::now();
+    let mut retried = 0u64;
+    let mut recovered = 0u64;
+    let mut ok = 0u64;
+    for i in 0..n {
+        let mut r = GenRequest::new(&format!("wave {i}"), 8_800 + i);
+        r.steps = 3;
+        let h = client.submit(r).map_err(|e| anyhow::anyhow!("submit {i}: {e:?}"))?;
+        let (events, outcome) = h.wait_with_events();
+        anyhow::ensure!(
+            events.iter().filter(|e| e.is_terminal()).count() == 1,
+            "job {i}: want exactly one terminal event"
+        );
+        let scheds =
+            events.iter().filter(|e| matches!(e, JobEvent::Scheduled { .. })).count();
+        if scheds > 1 {
+            retried += 1;
+            if outcome.is_ok() {
+                recovered += 1;
+            }
+        }
+        if outcome.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let s = server.metrics.summary();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&art_dir);
+    anyhow::ensure!(s.completed + s.errors == n, "terminal accounting under chaos");
+    anyhow::ensure!(s.retries_recovered == recovered, "recovery counter agrees with event logs");
+    Ok(WaveMeasured {
+        jobs: n,
+        goodput_per_sec: ok as f64 / wall_s.max(1e-9),
+        retried,
+        retries: s.retries,
+        recovery_ratio: if retried == 0 { 1.0 } else { recovered as f64 / retried as f64 },
+        errors: s.errors,
+    })
+}
+
+struct PressureMeasured {
+    report: LoadReport,
+    sheds: u64,
+    brownout_transitions: u64,
+    degraded: u64,
+}
+
+/// Phase 2: the deterministic load engine drives a bursty arrival
+/// process at a fault-free server with the pressure ladder armed. One
+/// worker against 10-request bursts guarantees the smoothed depth
+/// crosses the brownout threshold.
+fn run_pressure() -> anyhow::Result<PressureMeasured> {
+    let art_dir =
+        std::env::temp_dir().join(format!("sdacc_bench_chaos_press_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&art_dir);
+    let svc = RuntimeService::start_with_faults(BackendKind::Sim, &art_dir, None)?;
+    let coord = Arc::new(Coordinator::new(svc.handle()));
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(0),
+            resilience: ResiliencePolicy {
+                shed_low_depth: Some(4),
+                brownout_enter: Some(5),
+                brownout_exit: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let spec = LoadSpec::parse("bursty:rate=2000,burst=10@5,n=30,seed=3,steps=12,cooldown=8")
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let report = run_load(&client, &spec);
+    let s = server.metrics.summary();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&art_dir);
+    let terminals =
+        report.ok + report.failed + report.rejected + report.cancelled + report.deadline_miss;
+    anyhow::ensure!(
+        terminals == report.submitted,
+        "load accounting: {terminals} terminals vs {} submitted",
+        report.submitted
+    );
+    Ok(PressureMeasured {
+        report,
+        sheds: s.sheds,
+        brownout_transitions: s.brownout_transitions,
+        degraded: s.degraded,
+    })
+}
+
+/// Schema-validate a BENCH_chaos.json document.
+fn validate(doc: &Json) -> Result<(), String> {
+    for k in REQUIRED_KEYS {
+        if doc.get(k).is_none() {
+            return Err(format!("BENCH_chaos.json missing required key '{k}'"));
+        }
+    }
+    let ratio = doc.get_f64("wave_recovery_ratio").unwrap_or(-1.0);
+    if !(0.0..=1.0).contains(&ratio) {
+        return Err(format!("wave_recovery_ratio {ratio} outside [0, 1]"));
+    }
+    for k in ["wave_goodput_per_sec", "load_goodput_per_sec", "wave_retried_jobs"] {
+        let v = doc.get_f64(k).ok_or_else(|| format!("key '{k}' is not a number"))?;
+        if v <= 0.0 {
+            return Err(format!("key '{k}' must be > 0 (got {v})"));
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let commit = std::env::args().any(|a| a == "--commit");
+
+    let w = run_wave().expect("chaos wave workload");
+    println!(
+        "chaos bench wave: {} jobs | {:.0} ok/s | {} retried ({} re-dispatches) | recovery {:.3} | {} permanent failures",
+        w.jobs, w.goodput_per_sec, w.retried, w.retries, w.recovery_ratio, w.errors
+    );
+    assert!(w.retried >= 3, "the wave should transiently fail a material share of jobs");
+    assert!(
+        w.recovery_ratio >= 0.95,
+        "retry recovery regression: {:.3} < 0.95",
+        w.recovery_ratio
+    );
+
+    let p = run_pressure().expect("pressure workload");
+    println!(
+        "chaos bench pressure: {} submitted, {} ok, {} rejected | {} sheds, {} brownout transitions, {} degraded | {:.0} ok/s",
+        p.report.submitted,
+        p.report.ok,
+        p.report.rejected,
+        p.sheds,
+        p.brownout_transitions,
+        p.degraded,
+        p.report.goodput()
+    );
+    assert!(
+        p.brownout_transitions >= 1,
+        "10-request bursts against one worker must engage brownout"
+    );
+    assert!(p.report.ok >= 1, "pressure phase served nothing");
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("chaos_resilience")),
+        ("wave_jobs", Json::num(w.jobs as f64)),
+        ("wave_goodput_per_sec", Json::num(w.goodput_per_sec)),
+        ("wave_retried_jobs", Json::num(w.retried as f64)),
+        ("wave_retries", Json::num(w.retries as f64)),
+        ("wave_recovery_ratio", Json::num(w.recovery_ratio)),
+        ("wave_errors", Json::num(w.errors as f64)),
+        ("load_submitted", Json::num(p.report.submitted as f64)),
+        ("load_ok", Json::num(p.report.ok as f64)),
+        ("load_rejected", Json::num(p.report.rejected as f64)),
+        ("load_goodput_per_sec", Json::num(p.report.goodput())),
+        ("sheds", Json::num(p.sheds as f64)),
+        ("brownout_transitions", Json::num(p.brownout_transitions as f64)),
+        ("degraded", Json::num(p.degraded as f64)),
+    ]);
+    validate(&doc).expect("fresh measurement must satisfy the BENCH_chaos schema");
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_chaos.json");
+    if let Some(prev) = std::fs::read_to_string(&out).ok().and_then(|s| Json::parse(&s).ok()) {
+        validate(&prev).expect("committed BENCH_chaos.json must satisfy the schema");
+    }
+
+    if commit {
+        std::fs::write(&out, doc.to_string()).expect("write BENCH_chaos.json");
+        println!("wrote {}", out.display());
+    } else if smoke {
+        println!("bench_chaos --smoke: schema, recovery and pressure gates hold");
+    }
+}

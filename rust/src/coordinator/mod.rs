@@ -94,6 +94,19 @@ impl SdError {
     pub fn is_cancelled(&self) -> bool {
         matches!(self, SdError::Cancelled)
     }
+
+    /// THE transient-vs-permanent classification seam for the server's
+    /// retry policy. Only `Runtime` errors carrying the fault-injection
+    /// marker ([`runtime::TRANSIENT_MARKER`](crate::runtime::TRANSIENT_MARKER))
+    /// qualify: they describe a call that failed *this time* and may
+    /// succeed on re-dispatch. Everything else is deterministic —
+    /// `InvalidRequest` and shape/name contract errors would fail
+    /// identically on every attempt, `Cancelled`/`DeadlineExceeded`/
+    /// `QueueFull` are final verdicts — so retrying would only burn
+    /// capacity repeating the same failure.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, SdError::Runtime(m) if m.contains(crate::runtime::TRANSIENT_MARKER))
+    }
 }
 
 impl fmt::Display for SdError {
@@ -904,6 +917,35 @@ mod tests {
         assert_eq!(any.to_string(), "cancelled");
         let rt = SdError::runtime(anyhow::anyhow!("pjrt exploded"));
         assert_eq!(rt.to_string(), "runtime error: pjrt exploded");
+    }
+
+    #[test]
+    fn retryability_classifies_transient_faults_only() {
+        use crate::runtime::TRANSIENT_MARKER;
+
+        // Injected transient faults (as they arrive at the edge: the
+        // anyhow chain flattened through SdError::runtime) retry.
+        let injected = SdError::runtime(anyhow::anyhow!(
+            "{TRANSIENT_MARKER} injected: artifact unet_full_b2 call 7"
+        ));
+        assert!(injected.is_retryable());
+        // Contract violations — the exact canonical check_inputs wording
+        // — are deterministic and must never be re-dispatched.
+        let shape = SdError::runtime(anyhow::anyhow!(
+            "artifact unet_full_b1 input 0: shape [1, 3, 3] != manifest [1, 256, 4]"
+        ));
+        assert!(!shape.is_retryable());
+        let count = SdError::runtime(anyhow::anyhow!(
+            "artifact unet_full_b1: expected 4 inputs, got 1"
+        ));
+        assert!(!count.is_retryable());
+        // Non-Runtime variants are final verdicts.
+        assert!(!SdError::invalid("steps must be >= 1").is_retryable());
+        assert!(!SdError::QueueFull.is_retryable());
+        assert!(!SdError::Cancelled.is_retryable());
+        assert!(!SdError::DeadlineExceeded.is_retryable());
+        // Even a Runtime error is permanent without the marker.
+        assert!(!SdError::runtime(anyhow::anyhow!("pjrt exploded")).is_retryable());
     }
 
     #[test]

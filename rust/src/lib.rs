@@ -147,6 +147,41 @@
 //! percentiles and the phase decomposition). JSONL span lines are
 //! versioned by `obs::TRACE_SCHEMA_VERSION`.
 //!
+//! ## Resilience & chaos ([`runtime::faults`], [`server::resilience`], [`server::loadgen`])
+//!
+//! The failure-hardening layer has three deterministic pieces. The
+//! **chaos engine** (`runtime::faults`) attaches a `FaultSpec` schedule
+//! of transient execute errors, latency spikes and error bursts to the
+//! sim backend — armed only via `RuntimeService::start_with_faults`,
+//! the `SD_ACC_FAULTS` env var, or `sd-acc serve --chaos`; the xla path
+//! never consults it. Every injection decision is a pure function of
+//! (seed, artifact name, per-artifact call index), so a chaos run is
+//! bit-replayable; injected errors carry `runtime::TRANSIENT_MARKER`,
+//! the substring `SdError::is_retryable` classifies on, while shape and
+//! arity contract errors surface before injection and never look
+//! transient. The **resilience policy** (`server::resilience`,
+//! `ServerConfig::resilience`, default-inert) layers bounded retry with
+//! exponential backoff (failed lanes re-enter the batcher solo —
+//! keyed apart so a poisoned batch mate cannot recontaminate fresh
+//! work — with deadlines still binding and exactly one terminal per
+//! job arbitrated by a shared claim flag), hedged re-dispatch of
+//! straggling groups (the twin is event-silent and cache-write-barred
+//! unless it wins the claim), EWMA load shedding of Low-priority
+//! admissions, and hysteretic brownout that rewrites degradable
+//! admissions to a cheaper PAS/quant form *before* plan resolution and
+//! cache lookup — so a degraded result lives under the degraded
+//! request's own cache key and is never stored or served under the
+//! full-quality key (standing invariant). The **load engine**
+//! (`server::loadgen`, `sd-acc serve --load`) drives closed-loop,
+//! Poisson or bursty arrival processes with a seeded
+//! prompt/steps/priority/quant mix — deterministic request sequences
+//! from per-index RNG streams — and reports goodput and terminal
+//! accounting. `tests/integration_chaos.rs` pins replayability, the
+//! one-terminal invariant under a transient-failure wave, ≥95% retry
+//! recovery, lane isolation (healthy lanes bit-identical to uninjected
+//! runs), shed/brownout hysteresis and the cache-key rule;
+//! `bench_chaos` emits `BENCH_chaos.json` via `ci.sh --bench-commit`.
+//!
 //! ## Mixed precision ([`quant`])
 //!
 //! The paper's third workload problem — diverse weight and activation

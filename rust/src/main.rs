@@ -30,7 +30,7 @@ use sd_acc::quant::{
     assign, predicted_psnr_db, search, synthetic_profile, QuantCalibrator, QuantConstraints,
     QuantScheme,
 };
-use sd_acc::runtime::{default_artifacts_dir, BackendKind, RuntimeService};
+use sd_acc::runtime::{default_artifacts_dir, BackendKind, FaultSpec, RuntimeService};
 use sd_acc::util::cli::{usage, Args, OptSpec};
 use sd_acc::util::table::{f, ratio, Table};
 
@@ -104,7 +104,19 @@ fn start_runtime(args: &Args) -> Result<(RuntimeService, Coordinator), String> {
     } else {
         println!("backend: sim (deterministic pure-Rust executor — no artifacts needed)");
     }
-    let svc = RuntimeService::start_with(kind, &dir).map_err(|e| format!("{e:#}"))?;
+    // `--chaos <spec>` arms deterministic fault injection (subcommands
+    // that don't declare the flag simply never see it here); without
+    // the flag, `start_with` still consults SD_ACC_FAULTS. Injection is
+    // sim-only — start_with_faults rejects it on xla.
+    let svc = match args.get("chaos") {
+        Some(spec) => {
+            let spec = FaultSpec::parse(spec).map_err(|e| format!("--chaos: {e:#}"))?;
+            println!("chaos: deterministic fault injection armed");
+            RuntimeService::start_with_faults(kind, &dir, Some(spec))
+        }
+        None => RuntimeService::start_with(kind, &dir),
+    }
+    .map_err(|e| format!("{e:#}"))?;
     let coord = Coordinator::new(svc.handle());
     Ok((svc, coord))
 }
@@ -343,7 +355,8 @@ impl StepObserver for PrintProgress {
 // -------------------------------------------------------------------- serve
 
 fn cmd_serve(raw: &[String]) -> Result<(), String> {
-    use sd_acc::server::{Priority, Server, ServerConfig, SubmitOptions};
+    use sd_acc::server::loadgen::{run_load, LoadSpec};
+    use sd_acc::server::{Priority, ResiliencePolicy, Server, ServerConfig, SubmitOptions};
     use std::sync::Arc;
     use std::time::{Duration, Instant};
 
@@ -354,6 +367,11 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "max-wait-ms", help: "batcher hold time before an aged flush", takes_value: true, default: Some("30") },
         OptSpec { name: "max-queue", help: "bounded admission capacity (QueueFull beyond it)", takes_value: true, default: Some("256") },
         OptSpec { name: "deadline-ms", help: "per-request deadline (0 = none)", takes_value: true, default: Some("0") },
+        OptSpec { name: "chaos", help: "deterministic fault schedule, e.g. seed=7,err=0.10,slow=0.03 (sim only)", takes_value: true, default: None },
+        OptSpec { name: "load", help: "workload spec: closed|poisson|bursty, e.g. bursty:rate=800,burst=12@6,n=36", takes_value: true, default: None },
+        OptSpec { name: "shed-low", help: "shed Low-priority work when smoothed queue depth exceeds N", takes_value: true, default: None },
+        OptSpec { name: "brownout", help: "brownout thresholds ENTER:EXIT on smoothed queue depth", takes_value: true, default: None },
+        OptSpec { name: "hedge-ms", help: "hedge straggler batches after N ms (0 = off)", takes_value: true, default: Some("0") },
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
         backend_opt(),
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
@@ -383,6 +401,25 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
     let n = args.get_usize("requests")?.unwrap();
     let steps = args.get_usize("steps")?.unwrap();
     let deadline_ms = args.get_u64("deadline-ms")?.unwrap();
+    let load = args
+        .get("load")
+        .map(LoadSpec::parse)
+        .transpose()?;
+    let mut resilience = ResiliencePolicy::default();
+    resilience.shed_low_depth = args.get_usize("shed-low")?;
+    if let Some(b) = args.get("brownout") {
+        let (enter, exit) =
+            b.split_once(':').ok_or("--brownout: expected ENTER:EXIT (e.g. 8:2)")?;
+        resilience.brownout_enter = Some(
+            enter.parse().map_err(|_| format!("--brownout: bad enter threshold '{enter}'"))?,
+        );
+        resilience.brownout_exit =
+            exit.parse().map_err(|_| format!("--brownout: bad exit threshold '{exit}'"))?;
+    }
+    let hedge_ms = args.get_u64("hedge-ms")?.unwrap();
+    if hedge_ms > 0 {
+        resilience.hedge_after = Some(Duration::from_millis(hedge_ms));
+    }
     let server = Server::start(
         Arc::new(coord),
         ServerConfig {
@@ -391,6 +428,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
             cache,
             max_queue: args.get_usize("max-queue")?.unwrap(),
             trace: trace.as_ref().map(|(sink, _)| Arc::clone(sink)),
+            resilience,
         },
     );
     let client = server.client();
@@ -423,7 +461,8 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
                 eprintln!(
                     "[monitor] window p50 {:.0} ms p95 {:.0} ms ({} done in window) | \
                      +{} full / +{} partial steps, +{} decodes | \
-                     totals: {} done, {} miss, {} cancel, {} reject, depth {}",
+                     totals: {} done, {} miss, {} cancel, {} reject, depth {} | \
+                     resilience: {} retries, {} hedges, {} sheds, {} brownouts",
                     s.windowed_p50_ms,
                     s.windowed_p95_ms,
                     s.windowed_count,
@@ -434,7 +473,11 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
                     s.deadline_misses,
                     s.cancellations,
                     s.rejected,
-                    s.queue_depth
+                    s.queue_depth,
+                    s.retries,
+                    s.hedges,
+                    s.sheds,
+                    s.brownout_transitions
                 );
             }
         }))
@@ -442,46 +485,71 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         None
     };
 
-    println!("submitting {n} requests ({steps} steps, priorities cycling high/normal/low)...");
     let t0 = Instant::now();
-    let mut handles = Vec::new();
-    for i in 0..n {
-        let class = i % Priority::ALL.len();
-        let mut req =
-            GenRequest::new(&format!("red circle x{} y{}", 2 + i % 10, 3 + i % 9), 9000 + i as u64);
-        // Each priority class runs a slightly different step count so
-        // the classes land in distinct batch keys — priority governs
-        // *cross-key* dispatch order, so one shared key would never
-        // exercise it (EDF within a key ignores priority).
-        req.steps = steps + class;
-        let mut opts = SubmitOptions::with_priority(Priority::ALL[class]);
-        if deadline_ms > 0 {
-            opts.deadline = Some(Duration::from_millis(deadline_ms));
-        }
-        match client.submit_with(req, opts) {
-            Ok(h) => handles.push(h),
-            Err(e) => println!("  {e}"),
-        }
-    }
     let mut ok = 0usize;
     let mut failed = 0usize;
-    for h in &handles {
-        let (events, outcome) = h.wait_with_events();
-        let steps_seen = events
-            .iter()
-            .filter(|e| matches!(e, sd_acc::server::JobEvent::Step { .. }))
-            .count();
-        match outcome {
-            Ok(r) => {
-                ok += 1;
-                println!(
-                    "  {} done: {} step events, {:.0} ms generation",
-                    h.id, steps_seen, r.stats.total_ms
-                );
+    let mut load_report = None;
+    if let Some(spec) = &load {
+        println!(
+            "driving {} workload requests ({} cooldown) via the deterministic load engine...",
+            spec.n, spec.cooldown
+        );
+        let rep = run_load(&client, spec);
+        ok = rep.ok as usize;
+        failed = (rep.failed + rep.cancelled + rep.deadline_miss) as usize;
+        println!(
+            "load: {} submitted, {} ok, {} failed, {} rejected, {} cancelled, {} deadline misses \
+             ({:.2} req/s goodput)",
+            rep.submitted,
+            rep.ok,
+            rep.failed,
+            rep.rejected,
+            rep.cancelled,
+            rep.deadline_miss,
+            rep.goodput()
+        );
+        load_report = Some(rep);
+    } else {
+        println!("submitting {n} requests ({steps} steps, priorities cycling high/normal/low)...");
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let class = i % Priority::ALL.len();
+            let mut req = GenRequest::new(
+                &format!("red circle x{} y{}", 2 + i % 10, 3 + i % 9),
+                9000 + i as u64,
+            );
+            // Each priority class runs a slightly different step count so
+            // the classes land in distinct batch keys — priority governs
+            // *cross-key* dispatch order, so one shared key would never
+            // exercise it (EDF within a key ignores priority).
+            req.steps = steps + class;
+            let mut opts = SubmitOptions::with_priority(Priority::ALL[class]);
+            if deadline_ms > 0 {
+                opts.deadline = Some(Duration::from_millis(deadline_ms));
             }
-            Err(e) => {
-                failed += 1;
-                println!("  {} failed: {e}", h.id);
+            match client.submit_with(req, opts) {
+                Ok(h) => handles.push(h),
+                Err(e) => println!("  {e}"),
+            }
+        }
+        for h in &handles {
+            let (events, outcome) = h.wait_with_events();
+            let steps_seen = events
+                .iter()
+                .filter(|e| matches!(e, sd_acc::server::JobEvent::Step { .. }))
+                .count();
+            match outcome {
+                Ok(r) => {
+                    ok += 1;
+                    println!(
+                        "  {} done: {} step events, {:.0} ms generation",
+                        h.id, steps_seen, r.stats.total_ms
+                    );
+                }
+                Err(e) => {
+                    failed += 1;
+                    println!("  {} failed: {e}", h.id);
+                }
             }
         }
     }
@@ -502,6 +570,9 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
             ("summary", m.to_json()),
             ("counters", obs::counters().snapshot().to_json()),
         ];
+        if let Some(rep) = &load_report {
+            fields.push(("load", rep.to_json()));
+        }
         if let Some((sink, _)) = &trace {
             let lc = sink.lifecycle_counts();
             fields.push((
@@ -565,6 +636,12 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
     println!(
         "lifecycle: {} cancelled, {} deadline misses, {} rejected (queue full)",
         m.cancellations, m.deadline_misses, m.rejected
+    );
+    // Always printed — the CI chaos lane greps this line for evidence
+    // that retries/shedding/brownout actually engaged under load.
+    println!(
+        "resilience: {} retries ({} recovered), {} hedges, {} sheds, {} brownout transitions ({} degraded)",
+        m.retries, m.retries_recovered, m.hedges, m.sheds, m.brownout_transitions, m.degraded
     );
     println!(
         "queue depth now: {} total ({}/{}/{} high/normal/low)",

@@ -56,6 +56,34 @@ impl BackendCounters {
     }
 }
 
+/// Resilience-policy activity (`server::resilience`): how often the
+/// failure-hardening machinery actually fired. Observability-only like
+/// everything here — the policy keeps its own per-server state; these
+/// labels exist so `serve --monitor`/`--json` can show process-wide
+/// deltas.
+#[derive(Debug)]
+struct ResilienceCounters {
+    retries: AtomicU64,
+    retries_recovered: AtomicU64,
+    hedges: AtomicU64,
+    sheds: AtomicU64,
+    brownout_transitions: AtomicU64,
+    degraded: AtomicU64,
+}
+
+impl ResilienceCounters {
+    const fn new() -> ResilienceCounters {
+        ResilienceCounters {
+            retries: AtomicU64::new(0),
+            retries_recovered: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            sheds: AtomicU64::new(0),
+            brownout_transitions: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+        }
+    }
+}
+
 /// The process-global counter set. Obtain via [`counters`].
 #[derive(Debug)]
 pub struct Counters {
@@ -64,6 +92,7 @@ pub struct Counters {
     steps_full: AtomicU64,
     steps_partial: AtomicU64,
     decodes: AtomicU64,
+    resilience: ResilienceCounters,
 }
 
 static GLOBAL: Counters = Counters {
@@ -72,6 +101,7 @@ static GLOBAL: Counters = Counters {
     steps_full: AtomicU64::new(0),
     steps_partial: AtomicU64::new(0),
     decodes: AtomicU64::new(0),
+    resilience: ResilienceCounters::new(),
 };
 
 /// The process-global labeled counters.
@@ -135,6 +165,36 @@ impl Counters {
         self.decodes.fetch_add(1, Relaxed);
     }
 
+    /// One transient failure re-dispatched by the retry policy.
+    pub fn retry(&self) {
+        self.resilience.retries.fetch_add(1, Relaxed);
+    }
+
+    /// One previously-retried job that ultimately completed.
+    pub fn retry_recovered(&self) {
+        self.resilience.retries_recovered.fetch_add(1, Relaxed);
+    }
+
+    /// One hedged re-dispatch of a straggling job.
+    pub fn hedge(&self) {
+        self.resilience.hedges.fetch_add(1, Relaxed);
+    }
+
+    /// One request rejected early by the load shedder.
+    pub fn shed(&self) {
+        self.resilience.sheds.fetch_add(1, Relaxed);
+    }
+
+    /// One brownout state change (engage or disengage each count 1).
+    pub fn brownout_transition(&self) {
+        self.resilience.brownout_transitions.fetch_add(1, Relaxed);
+    }
+
+    /// One request degraded to a cheaper plan/quant at admission.
+    pub fn degrade(&self) {
+        self.resilience.degraded.fetch_add(1, Relaxed);
+    }
+
     /// Point-in-time copy. Each label is read with a relaxed load;
     /// cross-label consistency is not guaranteed (use deltas over quiet
     /// periods, or the trace-sink lifecycle counts for the consistent
@@ -164,7 +224,33 @@ impl Counters {
             steps_full: self.steps_full.load(Relaxed),
             steps_partial: self.steps_partial.load(Relaxed),
             decodes: self.decodes.load(Relaxed),
+            resilience: ResilienceSnapshot {
+                retries: self.resilience.retries.load(Relaxed),
+                retries_recovered: self.resilience.retries_recovered.load(Relaxed),
+                hedges: self.resilience.hedges.load(Relaxed),
+                sheds: self.resilience.sheds.load(Relaxed),
+                brownout_transitions: self.resilience.brownout_transitions.load(Relaxed),
+                degraded: self.resilience.degraded.load(Relaxed),
+            },
         }
+    }
+}
+
+/// Resilience-policy counters at snapshot time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResilienceSnapshot {
+    pub retries: u64,
+    pub retries_recovered: u64,
+    pub hedges: u64,
+    pub sheds: u64,
+    pub brownout_transitions: u64,
+    pub degraded: u64,
+}
+
+impl ResilienceSnapshot {
+    /// Any policy activity at all (gates the monitor line).
+    pub fn any(&self) -> bool {
+        self.retries + self.hedges + self.sheds + self.brownout_transitions + self.degraded > 0
     }
 }
 
@@ -213,6 +299,7 @@ pub struct CountersSnapshot {
     pub steps_full: u64,
     pub steps_partial: u64,
     pub decodes: u64,
+    pub resilience: ResilienceSnapshot,
 }
 
 impl CountersSnapshot {
@@ -245,6 +332,20 @@ impl CountersSnapshot {
             steps_full: self.steps_full.saturating_sub(earlier.steps_full),
             steps_partial: self.steps_partial.saturating_sub(earlier.steps_partial),
             decodes: self.decodes.saturating_sub(earlier.decodes),
+            resilience: ResilienceSnapshot {
+                retries: self.resilience.retries.saturating_sub(earlier.resilience.retries),
+                retries_recovered: self
+                    .resilience
+                    .retries_recovered
+                    .saturating_sub(earlier.resilience.retries_recovered),
+                hedges: self.resilience.hedges.saturating_sub(earlier.resilience.hedges),
+                sheds: self.resilience.sheds.saturating_sub(earlier.resilience.sheds),
+                brownout_transitions: self
+                    .resilience
+                    .brownout_transitions
+                    .saturating_sub(earlier.resilience.brownout_transitions),
+                degraded: self.resilience.degraded.saturating_sub(earlier.resilience.degraded),
+            },
         }
     }
 
@@ -307,6 +408,23 @@ impl CountersSnapshot {
             ("steps_full", Json::Num(self.steps_full as f64)),
             ("steps_partial", Json::Num(self.steps_partial as f64)),
             ("decodes", Json::Num(self.decodes as f64)),
+            (
+                "resilience",
+                Json::obj(vec![
+                    ("retries", Json::Num(self.resilience.retries as f64)),
+                    (
+                        "retries_recovered",
+                        Json::Num(self.resilience.retries_recovered as f64),
+                    ),
+                    ("hedges", Json::Num(self.resilience.hedges as f64)),
+                    ("sheds", Json::Num(self.resilience.sheds as f64)),
+                    (
+                        "brownout_transitions",
+                        Json::Num(self.resilience.brownout_transitions as f64),
+                    ),
+                    ("degraded", Json::Num(self.resilience.degraded as f64)),
+                ]),
+            ),
         ])
     }
 }
@@ -357,6 +475,35 @@ mod tests {
         assert!(d.steps_full >= 1);
         assert!(d.steps_partial >= 2);
         assert!(d.total_steps() >= 3);
+    }
+
+    #[test]
+    fn resilience_labels_accumulate_and_export() {
+        let before = counters().snapshot();
+        counters().retry();
+        counters().retry();
+        counters().retry_recovered();
+        counters().hedge();
+        counters().shed();
+        counters().brownout_transition();
+        counters().brownout_transition();
+        counters().degrade();
+        let d = counters().snapshot().delta_since(&before);
+        assert!(d.resilience.retries >= 2);
+        assert!(d.resilience.retries_recovered >= 1);
+        assert!(d.resilience.hedges >= 1);
+        assert!(d.resilience.sheds >= 1);
+        assert!(d.resilience.brownout_transitions >= 2);
+        assert!(d.resilience.degraded >= 1);
+        assert!(d.resilience.any());
+        assert!(!ResilienceSnapshot::default().any());
+        let r = counters().snapshot().to_json();
+        let r = r.get("resilience").unwrap();
+        for key in
+            ["retries", "retries_recovered", "hedges", "sheds", "brownout_transitions", "degraded"]
+        {
+            assert!(r.get_f64(key).is_some(), "{key} missing from resilience json");
+        }
     }
 
     #[test]

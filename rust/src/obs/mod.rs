@@ -88,7 +88,7 @@ pub mod trace;
 
 mod proptests;
 
-pub use counters::{counters, CountersSnapshot};
+pub use counters::{counters, CountersSnapshot, ResilienceSnapshot};
 pub use trace::{
     parse_jsonl_lossy, with_current, LifecycleCounts, Phase, SpanEvent, TraceScope, TraceSink,
     TRACE_SCHEMA_VERSION,

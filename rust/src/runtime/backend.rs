@@ -137,7 +137,11 @@ pub trait ExecBackend {
 
 /// THE input validation rule, shared by every backend so a shape bug
 /// reports the same error bytes no matter which executor caught it
-/// (the backend-parity suite asserts the wording).
+/// (the backend-parity suite asserts the wording). The wording is also
+/// load-bearing for resilience: these are *contract* errors, emitted
+/// before any fault injection (`runtime::faults`), and they never carry
+/// the transient marker — `SdError::is_retryable` relies on that to
+/// guarantee a malformed request is failed once, never re-dispatched.
 pub fn check_inputs(meta: &ArtifactMeta, inputs: &[Input]) -> Result<()> {
     if inputs.len() != meta.inputs.len() {
         bail!(

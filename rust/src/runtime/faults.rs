@@ -1,0 +1,326 @@
+//! Deterministic fault injection for the sim backend (chaos engine).
+//!
+//! A [`FaultSpec`] describes a schedule of transient execute errors,
+//! latency spikes and error bursts; a [`FaultPlan`] applies it to a
+//! stream of `execute` calls. The decision for any single call is a
+//! **pure function of (seed, artifact name, per-artifact call index)**
+//! — no wall clock, no global state — so a chaos run is bit-replayable:
+//! the same workload against the same spec injects exactly the same
+//! faults in the same places, every time.
+//!
+//! Faults are **sim-only by construction**: the plan is attached to
+//! [`SimBackend`](super::SimBackend) via
+//! [`RuntimeService::start_with_faults`](super::RuntimeService::start_with_faults)
+//! (or the `SD_ACC_FAULTS` env var) and the xla path never consults it.
+//! Injected errors carry [`TRANSIENT_MARKER`] in their message — the
+//! substring `SdError::is_retryable` classifies on — while shape/name
+//! validation errors surface *before* injection and therefore never
+//! look transient.
+//!
+//! Spec syntax (comma-separated `key=value`, e.g. via
+//! `SD_ACC_FAULTS="seed=7,err=0.1,slow=0.05,slow_ms=2,burst=50:3,target=unet"`):
+//!
+//! | key       | meaning                                                  |
+//! |-----------|----------------------------------------------------------|
+//! | `seed`    | RNG seed for the probabilistic draws (default 0)         |
+//! | `err`     | per-call transient-error probability in [0, 1]           |
+//! | `slow`    | per-call latency-spike probability in [0, 1]             |
+//! | `slow_ms` | spike duration, milliseconds (default 1)                 |
+//! | `burst`   | `every:len` — calls `i` with `i % every < len` all error |
+//! | `at`      | `|`-separated exact call indices that error              |
+//! | `slow_at` | `|`-separated exact call indices that spike              |
+//! | `target`  | artifact-name prefix filter (e.g. `unet`, `unet_full_b2`)|
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::cache::key::{fnv1a_update, FNV_OFFSET};
+use crate::util::rng::Pcg32;
+
+/// Environment variable carrying a [`FaultSpec`] for
+/// [`RuntimeService::start`](super::RuntimeService::start)-style
+/// construction paths.
+pub const FAULTS_ENV: &str = "SD_ACC_FAULTS";
+
+/// Substring every injected transient error message carries. The
+/// serving layer's retry classification (`SdError::is_retryable`) keys
+/// on it; real backend errors (shape mismatches, unknown artifacts)
+/// never contain it.
+pub const TRANSIENT_MARKER: &str = "transient fault";
+
+/// What the plan decided for one execute call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Execute normally.
+    None,
+    /// Fail with a transient error (carries the call index for the
+    /// message, so two injections at different points stay
+    /// distinguishable in logs and traces).
+    Error(u64),
+    /// Sleep this many milliseconds before executing (latency spike).
+    Delay(u64),
+}
+
+/// A deterministic fault schedule. See the module docs for the spec
+/// syntax; `FaultSpec::default()` injects nothing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for the probabilistic draws.
+    pub seed: u64,
+    /// Per-call transient-error probability.
+    pub err: f64,
+    /// Per-call latency-spike probability.
+    pub slow: f64,
+    /// Latency-spike duration (ms).
+    pub slow_ms: u64,
+    /// Burst period: every `burst_every` calls, the first `burst_len`
+    /// error (0 disables bursts).
+    pub burst_every: u64,
+    /// Burst length within each period.
+    pub burst_len: u64,
+    /// Exact per-artifact call indices that error.
+    pub at: Vec<u64>,
+    /// Exact per-artifact call indices that spike.
+    pub slow_at: Vec<u64>,
+    /// Artifact-name prefix filter; `None` targets everything.
+    pub target: Option<String>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            seed: 0,
+            err: 0.0,
+            slow: 0.0,
+            slow_ms: 1,
+            burst_every: 0,
+            burst_len: 0,
+            at: Vec::new(),
+            slow_at: Vec::new(),
+            target: None,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse the comma-separated `key=value` syntax. An empty string is
+    /// the do-nothing default spec.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec: '{part}' is not key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let idx_list = |v: &str| -> Result<Vec<u64>> {
+                v.split('|')
+                    .filter(|x| !x.is_empty())
+                    .map(|x| {
+                        x.parse::<u64>()
+                            .map_err(|_| anyhow::anyhow!("fault spec: bad index '{x}' in {k}"))
+                    })
+                    .collect()
+            };
+            match k {
+                "seed" => spec.seed = v.parse()?,
+                "err" => spec.err = v.parse()?,
+                "slow" => spec.slow = v.parse()?,
+                "slow_ms" => spec.slow_ms = v.parse()?,
+                "burst" => {
+                    let (every, len) = v.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("fault spec: burst wants every:len, got '{v}'")
+                    })?;
+                    spec.burst_every = every.parse()?;
+                    spec.burst_len = len.parse()?;
+                }
+                "at" => spec.at = idx_list(v)?,
+                "slow_at" => spec.slow_at = idx_list(v)?,
+                "target" => spec.target = Some(v.to_string()),
+                other => bail!("fault spec: unknown key '{other}'"),
+            }
+        }
+        if !(0.0..=1.0).contains(&spec.err) || !(0.0..=1.0).contains(&spec.slow) {
+            bail!("fault spec: err/slow must be probabilities in [0, 1]");
+        }
+        Ok(spec)
+    }
+
+    /// Read [`FAULTS_ENV`]: `Ok(None)` when unset, an error when set but
+    /// malformed (a typo'd chaos schedule should fail loudly, not
+    /// silently inject nothing).
+    pub fn from_env() -> Result<Option<FaultSpec>> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(s) if !s.trim().is_empty() => FaultSpec::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// THE decision rule: a pure function of (spec, artifact, per-artifact
+    /// call index). Precedence: target filter, exact `at`/`slow_at`
+    /// indices, burst windows, then the seeded probabilistic draw.
+    pub fn decide(&self, artifact: &str, idx: u64) -> FaultAction {
+        if let Some(t) = &self.target {
+            if !artifact.starts_with(t.as_str()) {
+                return FaultAction::None;
+            }
+        }
+        if self.at.contains(&idx) {
+            return FaultAction::Error(idx);
+        }
+        if self.slow_at.contains(&idx) {
+            return FaultAction::Delay(self.slow_ms);
+        }
+        if self.burst_every > 0 && idx % self.burst_every < self.burst_len {
+            return FaultAction::Error(idx);
+        }
+        if self.err <= 0.0 && self.slow <= 0.0 {
+            return FaultAction::None;
+        }
+        // One uniform draw per call, seeded from (seed, artifact, idx)
+        // so the decision depends on nothing else (not call order across
+        // artifacts, not wall clock, not thread identity).
+        let mut h = fnv1a_update(FNV_OFFSET, &self.seed.to_le_bytes());
+        h = fnv1a_update(h, artifact.as_bytes());
+        h = fnv1a_update(h, &idx.to_le_bytes());
+        let u = Pcg32::new(h, self.seed).next_f64();
+        if u < self.err {
+            FaultAction::Error(idx)
+        } else if u < self.err + self.slow {
+            FaultAction::Delay(self.slow_ms)
+        } else {
+            FaultAction::None
+        }
+    }
+}
+
+/// A [`FaultSpec`] plus the per-artifact call counters that turn a call
+/// stream into indices. Counters use interior mutability because
+/// `ExecBackend::execute` takes `&self`; the backend lives on the
+/// single runtime owner thread, so `RefCell` (not a lock) is correct.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    calls: RefCell<BTreeMap<String, u64>>,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan { spec, calls: RefCell::new(BTreeMap::new()) }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Decide the fault action for the next call to `artifact`. The
+    /// per-artifact counter advances on every call — including filtered
+    /// ones — so adding a `target` filter never renumbers the schedule
+    /// of the artifacts it keeps.
+    pub fn next(&self, artifact: &str) -> FaultAction {
+        let mut calls = self.calls.borrow_mut();
+        let counter = calls.entry(artifact.to_string()).or_insert(0);
+        let idx = *counter;
+        *counter += 1;
+        self.spec.decide(artifact, idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_injects_nothing() {
+        let spec = FaultSpec::default();
+        for i in 0..200 {
+            assert_eq!(spec.decide("unet_full_b1", i), FaultAction::None);
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_every_key() {
+        let spec = FaultSpec::parse(
+            "seed=7, err=0.1, slow=0.05, slow_ms=2, burst=50:3, at=0|7, slow_at=3, target=unet",
+        )
+        .unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.err, 0.1);
+        assert_eq!(spec.slow, 0.05);
+        assert_eq!(spec.slow_ms, 2);
+        assert_eq!((spec.burst_every, spec.burst_len), (50, 3));
+        assert_eq!(spec.at, vec![0, 7]);
+        assert_eq!(spec.slow_at, vec![3]);
+        assert_eq!(spec.target.as_deref(), Some("unet"));
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultSpec::parse("err").is_err(), "not key=value");
+        assert!(FaultSpec::parse("zap=1").is_err(), "unknown key");
+        assert!(FaultSpec::parse("err=1.5").is_err(), "probability out of range");
+        assert!(FaultSpec::parse("burst=50").is_err(), "burst wants every:len");
+        assert!(FaultSpec::parse("at=0|x").is_err(), "bad index");
+    }
+
+    #[test]
+    fn decisions_are_a_pure_function_of_seed_artifact_index() {
+        let spec = FaultSpec::parse("seed=11,err=0.3,slow=0.2").unwrap();
+        for i in 0..100 {
+            assert_eq!(
+                spec.decide("unet_full_b2", i),
+                spec.decide("unet_full_b2", i),
+                "call {i} must replay identically"
+            );
+        }
+        // Different seeds give a different schedule somewhere.
+        let other = FaultSpec::parse("seed=12,err=0.3,slow=0.2").unwrap();
+        assert!(
+            (0..100).any(|i| spec.decide("unet_full_b2", i) != other.decide("unet_full_b2", i)),
+            "seed must matter"
+        );
+        // Different artifacts decorrelate too.
+        assert!(
+            (0..100).any(|i| spec.decide("unet_full_b1", i) != spec.decide("unet_full_b2", i)),
+            "artifact name must matter"
+        );
+    }
+
+    #[test]
+    fn error_rate_tracks_the_requested_probability() {
+        let spec = FaultSpec::parse("seed=3,err=0.2").unwrap();
+        let errors = (0..2000)
+            .filter(|&i| matches!(spec.decide("unet_full_b1", i), FaultAction::Error(_)))
+            .count();
+        let rate = errors as f64 / 2000.0;
+        assert!((0.15..0.25).contains(&rate), "rate {rate} far from err=0.2");
+    }
+
+    #[test]
+    fn exact_indices_bursts_and_targets_apply() {
+        let spec = FaultSpec::parse("at=2,slow_at=5,slow_ms=7,burst=10:2,target=unet").unwrap();
+        assert_eq!(spec.decide("unet_full_b1", 2), FaultAction::Error(2));
+        assert_eq!(spec.decide("unet_full_b1", 5), FaultAction::Delay(7));
+        // Burst: indices 10, 11 error; 12 does not (err=0 outside bursts).
+        assert_eq!(spec.decide("unet_full_b1", 10), FaultAction::Error(10));
+        assert_eq!(spec.decide("unet_full_b1", 11), FaultAction::Error(11));
+        assert_eq!(spec.decide("unet_full_b1", 12), FaultAction::None);
+        // The prefix filter shields everything else.
+        assert_eq!(spec.decide("vae_decoder_b1", 2), FaultAction::None);
+        assert_eq!(spec.decide("text_encoder_b1", 10), FaultAction::None);
+    }
+
+    #[test]
+    fn plan_counts_calls_per_artifact() {
+        let plan = FaultPlan::new(FaultSpec::parse("at=1").unwrap());
+        // Each artifact gets its own index stream: the second call to
+        // each (index 1) errors, independent of interleaving.
+        assert_eq!(plan.next("unet_full_b1"), FaultAction::None);
+        assert_eq!(plan.next("vae_decoder_b1"), FaultAction::None);
+        assert_eq!(plan.next("unet_full_b1"), FaultAction::Error(1));
+        assert_eq!(plan.next("vae_decoder_b1"), FaultAction::Error(1));
+        assert_eq!(plan.next("unet_full_b1"), FaultAction::None);
+    }
+}

@@ -13,6 +13,7 @@
 //! explicit flag > `SD_ACC_BACKEND` env > artifacts-present auto-detect.
 
 pub mod backend;
+pub mod faults;
 pub mod manifest;
 pub mod service;
 pub mod sim;
@@ -25,6 +26,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Context, Result};
 
 pub use backend::{BackendKind, ExecBackend};
+pub use faults::{FaultAction, FaultPlan, FaultSpec, FAULTS_ENV, TRANSIENT_MARKER};
 pub use manifest::{ArtifactMeta, Manifest, ModelMeta};
 pub use service::{RuntimeHandle, RuntimeService};
 pub use sim::SimBackend;

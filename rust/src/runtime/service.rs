@@ -25,6 +25,7 @@ use std::thread;
 use anyhow::{anyhow, Result};
 
 use super::backend::{BackendKind, ExecBackend};
+use super::faults::FaultSpec;
 use super::sim::SimBackend;
 use super::{Input, Manifest, Runtime, Tensor};
 
@@ -128,11 +129,28 @@ impl RuntimeService {
     }
 
     /// Start the owner thread over an explicit backend selection.
-    /// `Auto` is grounded against `dir` (see [`BackendKind::for_dir`]);
-    /// the backend itself is constructed *on* the owner thread, because
-    /// the xla client is `!Send`.
+    /// Consults `SD_ACC_FAULTS` for a chaos schedule (sim-only; see
+    /// [`RuntimeService::start_with_faults`]).
     pub fn start_with(kind: BackendKind, dir: &Path) -> Result<RuntimeService> {
+        Self::start_with_faults(kind, dir, FaultSpec::from_env()?)
+    }
+
+    /// Start the owner thread over an explicit backend selection and an
+    /// optional deterministic fault schedule. `Auto` is grounded against
+    /// `dir` (see [`BackendKind::for_dir`]); the backend itself is
+    /// constructed *on* the owner thread, because the xla client is
+    /// `!Send`. Fault injection is **sim-only**: attaching a schedule to
+    /// the xla backend is an error rather than a silent no-op, so a
+    /// chaos run can never quietly exercise nothing.
+    pub fn start_with_faults(
+        kind: BackendKind,
+        dir: &Path,
+        faults: Option<FaultSpec>,
+    ) -> Result<RuntimeService> {
         let kind = kind.for_dir(dir);
+        if faults.is_some() && kind != BackendKind::Sim {
+            anyhow::bail!("fault injection is sim-only (backend resolved to {})", kind.as_str());
+        }
         let (tx, rx) = mpsc::channel::<Cmd>();
         let dir = dir.to_path_buf();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<Arc<Manifest>>>();
@@ -143,9 +161,13 @@ impl RuntimeService {
                     BackendKind::Xla => {
                         Runtime::new(&dir).map(|rt| Box::new(rt) as Box<dyn ExecBackend>)
                     }
-                    BackendKind::Sim => {
-                        SimBackend::open(&dir).map(|s| Box::new(s) as Box<dyn ExecBackend>)
-                    }
+                    BackendKind::Sim => SimBackend::open(&dir).map(|s| {
+                        let s = match faults {
+                            Some(spec) => s.with_faults(spec),
+                            None => s,
+                        };
+                        Box::new(s) as Box<dyn ExecBackend>
+                    }),
                     BackendKind::Auto => unreachable!("for_dir grounds Auto"),
                 };
                 let backend = match built {
@@ -264,6 +286,26 @@ mod tests {
         assert!(sim.executes >= 1);
         assert!(sim.bytes_in >= (m.ctx_len as u64) * 4);
         assert!(sim.bytes_out >= (m.ctx_len * m.ctx_dim) as u64 * 4);
+    }
+
+    #[test]
+    fn faulted_service_injects_transient_errors_on_sim_only() {
+        use crate::runtime::{FaultSpec, TRANSIENT_MARKER};
+
+        let dir = no_artifacts_dir("faults");
+        let spec = FaultSpec::parse("at=0").unwrap();
+        let svc =
+            RuntimeService::start_with_faults(BackendKind::Sim, &dir, Some(spec.clone())).unwrap();
+        let h = svc.handle();
+        let m = h.manifest().model.clone();
+        let toks =
+            crate::runtime::TensorI32::new(vec![1, m.ctx_len], vec![1; m.ctx_len]).unwrap();
+        let e = h.execute("text_encoder_b1", &[Input::I32(toks.clone())]).unwrap_err();
+        assert!(e.to_string().contains(TRANSIENT_MARKER), "{e}");
+        // Call index 1 is clean under `at=0`.
+        h.execute("text_encoder_b1", &[Input::I32(toks)]).unwrap();
+        // Attaching a schedule to a non-sim backend is a loud error.
+        assert!(RuntimeService::start_with_faults(BackendKind::Xla, &dir, Some(spec)).is_err());
     }
 
     #[test]

@@ -48,6 +48,7 @@ use crate::scheduler::NoiseSchedule;
 use crate::util::rng::Pcg32;
 
 use super::backend::{check_inputs, BackendKind, ExecBackend};
+use super::faults::{FaultAction, FaultPlan, FaultSpec, TRANSIENT_MARKER};
 use super::manifest::{ArtifactMeta, Manifest, ModelMeta};
 use super::{Input, Tensor};
 
@@ -170,6 +171,12 @@ pub fn synthetic_manifest(dir: &Path) -> Manifest {
 /// The deterministic pure-Rust backend.
 pub struct SimBackend {
     manifest: Manifest,
+    /// Optional chaos schedule (see [`super::faults`]). Fault injection
+    /// is a **sim-only** capability by construction: only this backend
+    /// carries a plan, and it perturbs execution *after* the shared
+    /// shape/name validation — so injected errors are always the
+    /// transient kind, never confusable with a contract violation.
+    faults: Option<FaultPlan>,
 }
 
 impl SimBackend {
@@ -182,11 +189,21 @@ impl SimBackend {
         } else {
             synthetic_manifest(dir)
         };
-        Ok(SimBackend { manifest })
+        Ok(SimBackend { manifest, faults: None })
     }
 
     pub fn from_manifest(manifest: Manifest) -> SimBackend {
-        SimBackend { manifest }
+        SimBackend { manifest, faults: None }
+    }
+
+    /// Attach a deterministic fault schedule (chaos mode). Successful
+    /// executions stay bit-identical to a fault-free run — the plan only
+    /// decides *whether* a call errors or sleeps, never *what* it
+    /// computes — so healthy lanes under chaos still satisfy the
+    /// determinism rule.
+    pub fn with_faults(mut self, spec: FaultSpec) -> SimBackend {
+        self.faults = Some(FaultPlan::new(spec));
+        self
     }
 
     fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
@@ -298,6 +315,22 @@ impl ExecBackend for SimBackend {
     fn execute(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
         let meta = self.meta(name)?;
         check_inputs(meta, inputs)?;
+        // Fault injection sits after validation (shape/name errors are
+        // real contract violations and must keep their exact wording —
+        // they are never retryable) and before the kernels. The call
+        // counter only advances for well-formed calls, so a rejected
+        // request can never shift the chaos schedule.
+        if let Some(plan) = &self.faults {
+            match plan.next(name) {
+                FaultAction::Error(idx) => {
+                    bail!("{TRANSIENT_MARKER} injected: artifact {name} call {idx}")
+                }
+                FaultAction::Delay(ms) => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms))
+                }
+                FaultAction::None => {}
+            }
+        }
         let kind = parse_name(name)
             .ok_or_else(|| anyhow!("sim backend: unsupported artifact '{name}'"))?;
         let m = &self.manifest.model;
@@ -665,6 +698,42 @@ mod tests {
             e.to_string(),
             "artifact unet_full_b1 input 0: shape [1, 3, 3] != manifest [1, 256, 4]"
         );
+    }
+
+    #[test]
+    fn fault_plan_injects_replayably_and_leaves_survivors_bit_exact() {
+        let spec = FaultSpec::parse("seed=5,err=0.3").unwrap();
+        let run = || {
+            let s = SimBackend::open(Path::new("/nonexistent/sdacc-sim-test"))
+                .unwrap()
+                .with_faults(spec.clone());
+            let inputs = unet_inputs(&s, 1, 7);
+            (0..20)
+                .map(|_| s.execute("unet_full_b1", &inputs).map_err(|e| e.to_string()))
+                .collect::<Vec<_>>()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "chaos runs replay bit-identically from the same spec");
+        let errs = a.iter().filter(|r| r.is_err()).count();
+        assert!(errs > 0 && errs < 20, "err=0.3 over 20 calls injects some, not all: {errs}");
+        for e in a.iter().filter_map(|r| r.as_ref().err()) {
+            assert!(e.contains(TRANSIENT_MARKER), "injected errors carry the marker: {e}");
+        }
+        // A surviving call is bit-identical to the fault-free backend:
+        // injection decides whether, never what.
+        let clean = sim();
+        let inputs = unet_inputs(&clean, 1, 7);
+        let reference = clean.execute("unet_full_b1", &inputs).unwrap();
+        let ok = a.iter().find_map(|r| r.as_ref().ok()).expect("some call survived");
+        assert_eq!(ok[0].data(), reference[0].data(), "survivors are unperturbed");
+        // Shape errors surface before injection with their exact wording.
+        let chaotic = SimBackend::open(Path::new("/nonexistent/sdacc-sim-test"))
+            .unwrap()
+            .with_faults(FaultSpec::parse("err=1.0").unwrap());
+        let e = chaotic
+            .execute("unet_full_b1", &[Input::F32(Tensor::zeros(vec![1, 3, 3]))])
+            .unwrap_err();
+        assert_eq!(e.to_string(), "artifact unet_full_b1: expected 4 inputs, got 1");
     }
 
     #[test]

@@ -79,7 +79,7 @@ impl fmt::Display for Priority {
 }
 
 /// Per-submission scheduling options.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct SubmitOptions {
     pub priority: Priority,
     /// Total latency budget, measured from submission. A job whose
@@ -87,15 +87,32 @@ pub struct SubmitOptions {
     /// [`SdError::DeadlineExceeded`]; dispatch within a batch key is
     /// earliest-deadline-first.
     pub deadline: Option<Duration>,
+    /// Whether the server may rewrite this request to a cheaper PAS
+    /// plan / quant scheme under brownout (on by default). Callers who
+    /// need full quality no matter the load set this to `false`; the
+    /// request then competes for capacity as-is.
+    pub degradable: bool,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> SubmitOptions {
+        SubmitOptions { priority: Priority::default(), deadline: None, degradable: true }
+    }
 }
 
 impl SubmitOptions {
     pub fn with_priority(priority: Priority) -> SubmitOptions {
-        SubmitOptions { priority, deadline: None }
+        SubmitOptions { priority, ..SubmitOptions::default() }
     }
 
     pub fn with_deadline(deadline: Duration) -> SubmitOptions {
-        SubmitOptions { priority: Priority::default(), deadline: Some(deadline) }
+        SubmitOptions { deadline: Some(deadline), ..SubmitOptions::default() }
+    }
+
+    /// Opt this submission out of brownout degradation.
+    pub fn full_quality(mut self) -> SubmitOptions {
+        self.degradable = false;
+        self
     }
 }
 
@@ -299,6 +316,15 @@ mod tests {
         }
         assert_eq!(Priority::default(), Priority::Normal);
         assert_eq!(Priority::High.to_string(), "high");
+    }
+
+    #[test]
+    fn submit_options_default_degradable_and_opt_out() {
+        let opts = SubmitOptions::default();
+        assert!(opts.degradable, "brownout degradation is opt-out");
+        assert!(SubmitOptions::with_priority(Priority::High).degradable);
+        assert!(SubmitOptions::with_deadline(Duration::from_secs(1)).degradable);
+        assert!(!SubmitOptions::default().full_quality().degradable);
     }
 
     #[test]

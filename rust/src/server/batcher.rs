@@ -30,6 +30,12 @@ pub struct Batcher<P: BatchItem> {
     /// observed the drop — the server measures cancel-ack latency from
     /// the token's fire time to this timestamp.
     dropped: Vec<(DropReason, Instant, P)>,
+    /// Items backing off ([`BatchItem::ready_at`] in the future —
+    /// retry backoff): parked here so they neither flush early nor
+    /// count as drops, and re-admitted by the first flush pass at or
+    /// after their ready time (`flush_all` re-admits unconditionally —
+    /// a shutdown drain must not strand them).
+    held: Vec<P>,
 }
 
 /// Anything with a batching key. The key is a structured `Ord` type
@@ -55,6 +61,14 @@ pub trait BatchItem {
     /// being handed to a worker.
     fn cancelled(&self) -> bool {
         false
+    }
+
+    /// Earliest instant the item may be dispatched (`None`: immediately).
+    /// The server sets this on retried jobs to implement exponential
+    /// backoff without a timer wheel: the batcher's own flush cadence
+    /// re-examines held items every pass.
+    fn ready_at(&self) -> Option<Instant> {
+        None
     }
 }
 
@@ -104,7 +118,13 @@ impl<P: BatchItem> Batcher<P> {
     pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
         sizes.sort_unstable();
         assert!(!sizes.is_empty(), "need at least one batch size");
-        Batcher { sizes, max_wait, queues: BTreeMap::new(), dropped: Vec::new() }
+        Batcher {
+            sizes,
+            max_wait,
+            queues: BTreeMap::new(),
+            dropped: Vec::new(),
+            held: Vec::new(),
+        }
     }
 
     /// Enqueue, keeping the key's queue in EDF order.
@@ -115,8 +135,10 @@ impl<P: BatchItem> Batcher<P> {
         q.insert(pos, (Instant::now(), item));
     }
 
+    /// Queued plus held (backing-off) items: both hold admission slots,
+    /// so the depth gauges must see them.
     pub fn pending(&self) -> usize {
-        self.queues.values().map(Vec::len).sum()
+        self.queues.values().map(Vec::len).sum::<usize>() + self.held.len()
     }
 
     /// Queue depth per priority rank (High/Normal/Low), for the
@@ -128,6 +150,9 @@ impl<P: BatchItem> Batcher<P> {
                 out[p.priority().index()] += 1;
             }
         }
+        for p in &self.held {
+            out[p.priority().index()] += 1;
+        }
         out
     }
 
@@ -136,8 +161,11 @@ impl<P: BatchItem> Batcher<P> {
     }
 
     /// Remove cancelled and deadline-expired items into the dropped
-    /// list; they never reach a worker.
-    fn prune(&mut self, now: Instant) {
+    /// list (they never reach a worker). With `park`, backing-off items
+    /// (`ready_at` still in the future) move to `held` — a backoff is
+    /// not a drop, and it must not be flushed early either; the
+    /// shutdown drain passes `park = false` so everything dispatches.
+    fn prune(&mut self, now: Instant, park: bool) {
         for q in self.queues.values_mut() {
             let mut i = 0;
             while i < q.len() {
@@ -153,11 +181,30 @@ impl<P: BatchItem> Batcher<P> {
                         let (_, item) = q.remove(i);
                         self.dropped.push((r, now, item));
                     }
+                    None if park && q[i].1.ready_at().map_or(false, |t| t > now) => {
+                        let (_, item) = q.remove(i);
+                        self.held.push(item);
+                    }
                     None => i += 1,
                 }
             }
         }
         self.queues.retain(|_, q| !q.is_empty());
+    }
+
+    /// Re-admit held items whose backoff elapsed (all of them when
+    /// `all` — the shutdown drain). Re-admission goes through `push`,
+    /// so EDF ordering within the key is preserved.
+    fn release_held(&mut self, now: Instant, all: bool) {
+        let mut i = 0;
+        while i < self.held.len() {
+            if all || self.held[i].ready_at().map_or(true, |t| t <= now) {
+                let item = self.held.remove(i);
+                self.push(item);
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Take ownership of everything dropped since the last call, with
@@ -176,7 +223,8 @@ impl<P: BatchItem> Batcher<P> {
     /// high-priority — or long-starved — keys first. Cancelled/expired
     /// items are pruned first and never appear in a batch.
     pub fn flush_ready(&mut self, now: Instant) -> Vec<Vec<P>> {
-        self.prune(now);
+        self.release_held(now, false);
+        self.prune(now, true);
         let max_size = self.max_size();
         let max_wait = self.max_wait;
         // Rank every key: best effective rank among its items, then
@@ -234,7 +282,13 @@ impl<P: BatchItem> Batcher<P> {
     /// expired items are still pruned — shutdown must not hand them to
     /// a worker either.
     pub fn flush_all(&mut self) -> Vec<Vec<P>> {
-        self.prune(Instant::now());
+        let now = Instant::now();
+        // Unconditional re-admission: backing-off retries must drain at
+        // shutdown (early dispatch is harmless; stranding them is not).
+        // Cancelled/expired held items still fall to the prune, which
+        // runs un-parked here so nothing moves back to `held`.
+        self.release_held(now, true);
+        self.prune(now, false);
         let mut out = Vec::new();
         for (_, mut q) in std::mem::take(&mut self.queues) {
             while !q.is_empty() {
@@ -273,6 +327,7 @@ mod tests {
         priority: Priority,
         deadline: Option<Instant>,
         cancelled: bool,
+        ready: Option<Instant>,
     }
 
     impl BatchItem for Sched {
@@ -293,6 +348,10 @@ mod tests {
         fn cancelled(&self) -> bool {
             self.cancelled
         }
+
+        fn ready_at(&self) -> Option<Instant> {
+            self.ready
+        }
     }
 
     fn sched(key: &str, tag: u32) -> Sched {
@@ -302,6 +361,7 @@ mod tests {
             priority: Priority::Normal,
             deadline: None,
             cancelled: false,
+            ready: None,
         }
     }
 
@@ -444,6 +504,64 @@ mod tests {
         let out = b.flush_ready(now);
         let order: Vec<u32> = out.into_iter().flatten().map(|s| s.tag).collect();
         assert_eq!(order, vec![2, 3, 1], "dispatch order follows priority, not key order");
+    }
+
+    #[test]
+    fn backing_off_items_hold_until_ready_then_flush() {
+        let now = Instant::now();
+        let mut b = Batcher::new(vec![1, 2], Duration::from_millis(0));
+        let mut retry = sched("a", 1);
+        retry.ready = Some(now + Duration::from_millis(50));
+        b.push(retry);
+        b.push(sched("a", 2));
+        // Before the backoff elapses: only the fresh item flushes; the
+        // held one is neither dispatched nor counted as dropped, but it
+        // still holds queue depth (its admission slot is alive).
+        let out = b.flush_ready(now + Duration::from_millis(1));
+        let flushed: Vec<u32> = out.into_iter().flatten().map(|s| s.tag).collect();
+        assert_eq!(flushed, vec![2], "held item must not dispatch early");
+        assert!(b.take_dropped().is_empty(), "a backoff is not a drop");
+        assert_eq!(b.pending(), 1, "held items stay in the depth gauge");
+        assert_eq!(b.pending_by_priority(), [0, 1, 0]);
+        // After the backoff: re-admitted and flushed.
+        let out = b.flush_ready(now + Duration::from_millis(60));
+        let flushed: Vec<u32> = out.into_iter().flatten().map(|s| s.tag).collect();
+        assert_eq!(flushed, vec![1]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn held_items_cancelled_during_backoff_surface_as_drops() {
+        let now = Instant::now();
+        let mut b = Batcher::new(vec![1], Duration::from_millis(0));
+        let mut retry = sched("a", 1);
+        retry.ready = Some(now + Duration::from_millis(50));
+        b.push(retry);
+        assert!(b.flush_ready(now + Duration::from_millis(1)).is_empty());
+        // Cancel while parked: the next pass after re-admission prunes
+        // it into the dropped list — it must not dispatch.
+        b.held[0].cancelled = true;
+        let out = b.flush_ready(now + Duration::from_millis(60));
+        assert!(out.is_empty());
+        let dropped = b.take_dropped();
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].0, DropReason::Cancelled);
+    }
+
+    #[test]
+    fn flush_all_drains_held_items_regardless_of_backoff() {
+        let now = Instant::now();
+        let mut b = Batcher::new(vec![1], Duration::from_millis(0));
+        let mut retry = sched("a", 1);
+        retry.ready = Some(now + Duration::from_secs(3600));
+        b.push(retry);
+        assert!(b.flush_ready(now + Duration::from_millis(1)).is_empty());
+        assert_eq!(b.pending(), 1);
+        // Shutdown: the far-future backoff must not strand the item.
+        let out = b.flush_all();
+        let flushed: Vec<u32> = out.into_iter().flatten().map(|s| s.tag).collect();
+        assert_eq!(flushed, vec![1]);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

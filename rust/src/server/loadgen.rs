@@ -1,0 +1,402 @@
+//! Deterministic workload engine for chaos and load testing.
+//!
+//! A [`LoadSpec`] describes a synthetic arrival process — closed-loop,
+//! Poisson open-loop, or bursty open-loop — over a deterministic mix of
+//! prompts, seeds, step counts, priorities and quantisation schemes.
+//! [`run_load`] drives a [`Client`](super::Client) with it and returns a
+//! [`LoadReport`] of terminal outcomes.
+//!
+//! Everything is a pure function of the spec's `seed`: the i-th request's
+//! prompt, seed, steps, priority, quant choice and (for open-loop modes)
+//! its inter-arrival gap are all drawn from a private [`Pcg32`] stream.
+//! Two runs with the same spec submit byte-identical request sequences,
+//! which is what makes `sd-acc serve --chaos --load ...` replayable and
+//! lets the chaos integration tests assert exact ledger counts.
+//!
+//! Spec syntax (`--load <spec>`):
+//!
+//! ```text
+//! closed:n=24,seed=7,steps=3
+//! poisson:rate=200,n=40,seed=7,steps=3|5,quant=0.3
+//! bursty:rate=800,burst=12@6,n=36,seed=3,steps=3,cooldown=8
+//! ```
+//!
+//! * `n` — number of main-phase requests (default 16).
+//! * `seed` — workload RNG seed (default 0).
+//! * `rate` — open-loop mean arrival rate in requests/second.
+//! * `burst=SIZE@EVERY` — every `EVERY`-th arrival expands into `SIZE`
+//!   back-to-back submissions with no inter-arrival gap.
+//! * `steps` — `|`-separated step-count choices, drawn uniformly.
+//! * `quant` — probability in `[0, 1]` that a request asks for w8a8.
+//! * `cooldown` — closed-loop requests appended after the main phase
+//!   drains; under brownout these low-pressure submissions walk the
+//!   pressure EWMA back below the exit threshold (hysteretic recovery).
+
+use std::time::{Duration, Instant};
+
+use super::api::{Priority, SubmitOptions};
+use super::Client;
+use crate::coordinator::{GenRequest, SdError};
+use crate::quant::QuantScheme;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Submit, wait, submit: one request in flight at a time.
+    Closed,
+    /// Open-loop with exponential inter-arrival gaps at `rate` req/s.
+    Poisson { rate: f64 },
+    /// Poisson base process where every `every`-th arrival expands into
+    /// `size` back-to-back submissions.
+    Bursty { rate: f64, size: usize, every: usize },
+}
+
+/// Parsed `--load` specification. See the module docs for syntax.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadSpec {
+    pub arrival: Arrival,
+    /// Main-phase request count.
+    pub n: usize,
+    /// Workload RNG seed: fixes the entire request sequence.
+    pub seed: u64,
+    /// Step-count choices, drawn uniformly per request.
+    pub steps: Vec<usize>,
+    /// Probability that a request carries a w8a8 quant scheme.
+    pub quant_mix: f64,
+    /// Closed-loop requests appended after the main phase drains.
+    pub cooldown: usize,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec {
+            arrival: Arrival::Closed,
+            n: 16,
+            seed: 0,
+            steps: vec![3],
+            quant_mix: 0.0,
+            cooldown: 0,
+        }
+    }
+}
+
+impl LoadSpec {
+    /// Parse a `kind:key=value,...` spec string.
+    pub fn parse(text: &str) -> Result<LoadSpec, String> {
+        let text = text.trim();
+        let (kind, rest) = match text.split_once(':') {
+            Some((k, r)) => (k.trim(), r.trim()),
+            None => (text, ""),
+        };
+        let mut spec = LoadSpec::default();
+        let mut rate: Option<f64> = None;
+        let mut burst: Option<(usize, usize)> = None;
+        for part in rest.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("load spec: expected key=value, got '{part}'"))?;
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "n" => spec.n = parse_num(key, val)?,
+                "seed" => spec.seed = parse_num(key, val)?,
+                "cooldown" => spec.cooldown = parse_num(key, val)?,
+                "rate" => {
+                    let r: f64 = val
+                        .parse()
+                        .map_err(|_| format!("load spec: bad rate '{val}'"))?;
+                    if !(r.is_finite() && r > 0.0) {
+                        return Err(format!("load spec: rate must be positive, got '{val}'"));
+                    }
+                    rate = Some(r);
+                }
+                "burst" => {
+                    let (size, every) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("load spec: burst wants SIZE@EVERY, got '{val}'"))?;
+                    let size: usize = parse_num("burst size", size)?;
+                    let every: usize = parse_num("burst every", every)?;
+                    if size == 0 || every == 0 {
+                        return Err("load spec: burst size/every must be >= 1".into());
+                    }
+                    burst = Some((size, every));
+                }
+                "steps" => {
+                    let choices: Result<Vec<usize>, String> =
+                        val.split('|').map(|s| parse_num("steps", s.trim())).collect();
+                    let choices = choices?;
+                    if choices.is_empty() || choices.contains(&0) {
+                        return Err(format!("load spec: bad steps list '{val}'"));
+                    }
+                    spec.steps = choices;
+                }
+                "quant" => {
+                    let p: f64 = val
+                        .parse()
+                        .map_err(|_| format!("load spec: bad quant probability '{val}'"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("load spec: quant must be in [0,1], got '{val}'"));
+                    }
+                    spec.quant_mix = p;
+                }
+                other => return Err(format!("load spec: unknown key '{other}'")),
+            }
+        }
+        spec.arrival = match kind {
+            "closed" => Arrival::Closed,
+            "poisson" => Arrival::Poisson {
+                rate: rate.ok_or("load spec: poisson requires rate=")?,
+            },
+            "bursty" => {
+                let (size, every) = burst.ok_or("load spec: bursty requires burst=SIZE@EVERY")?;
+                Arrival::Bursty {
+                    rate: rate.ok_or("load spec: bursty requires rate=")?,
+                    size,
+                    every,
+                }
+            }
+            other => return Err(format!("load spec: unknown kind '{other}'")),
+        };
+        Ok(spec)
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, String> {
+    val.parse()
+        .map_err(|_| format!("load spec: bad {key} '{val}'"))
+}
+
+/// Terminal-outcome tally for one [`run_load`] invocation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoadReport {
+    /// Requests handed to `submit_with` (admitted or not).
+    pub submitted: u64,
+    /// Jobs that completed with a result.
+    pub ok: u64,
+    /// Jobs that failed with a runtime/validation error.
+    pub failed: u64,
+    /// Requests refused at admission (queue full or shed).
+    pub rejected: u64,
+    /// Jobs that ended cancelled.
+    pub cancelled: u64,
+    /// Jobs that ended with a deadline miss.
+    pub deadline_miss: u64,
+    /// Wall-clock seconds for the whole run (main phase + cooldown).
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    fn record(&mut self, outcome: &Result<(), SdError>) {
+        match outcome {
+            Ok(()) => self.ok += 1,
+            Err(SdError::Cancelled) => self.cancelled += 1,
+            Err(SdError::DeadlineExceeded) => self.deadline_miss += 1,
+            Err(_) => self.failed += 1,
+        }
+    }
+
+    /// Completed jobs per wall-clock second.
+    pub fn goodput(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.ok as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
+            ("deadline_miss", Json::Num(self.deadline_miss as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("goodput", Json::Num(self.goodput())),
+        ])
+    }
+}
+
+/// The i-th request of a workload: a pure function of `(spec.seed, i)`.
+///
+/// Public so chaos tests can regenerate the exact sequence a load run
+/// submitted (e.g. to replay one request solo for a reference output).
+pub fn request_at(spec: &LoadSpec, i: usize) -> (GenRequest, SubmitOptions) {
+    // A private stream per request index: draws for request i never
+    // shift when another request's parameter mix changes.
+    let mut rng = Pcg32::new(spec.seed, 0x10ad + i as u64);
+    let steps = *rng.choose(&spec.steps);
+    let mut b = GenRequest::builder(&format!("load prompt {i}"), spec.seed.wrapping_add(i as u64))
+        .steps(steps);
+    if rng.bernoulli(spec.quant_mix) {
+        b = b.quant(QuantScheme::w8a8());
+    }
+    // GenRequest::builder validates; the spec only produces valid
+    // combinations (steps >= 1), so this cannot fail.
+    let req = b.build().expect("loadgen produced an invalid request");
+    let u = rng.next_f64();
+    let priority = if u < 0.2 {
+        Priority::High
+    } else if u < 0.7 {
+        Priority::Normal
+    } else {
+        Priority::Low
+    };
+    (req, SubmitOptions { priority, ..SubmitOptions::default() })
+}
+
+/// Exponential inter-arrival gap before the i-th open-loop arrival.
+fn gap_at(spec: &LoadSpec, rate: f64, i: usize) -> Duration {
+    let mut rng = Pcg32::new(spec.seed, 0x9a9 + i as u64);
+    let u = rng.next_f64();
+    // Inverse-CDF sample; clamp away u == 1 so ln stays finite.
+    let secs = -(1.0 - u).max(f64::MIN_POSITIVE).ln() / rate;
+    Duration::from_secs_f64(secs.min(1.0))
+}
+
+/// Drive `client` with the workload described by `spec`.
+///
+/// Open-loop modes submit without waiting, sleeping the sampled gap
+/// between arrivals, then block on every outstanding handle. The
+/// `cooldown` tail always runs closed-loop. Rejections at admission
+/// (queue full, shed) are tallied, not retried — the server's own
+/// resilience layer handles retry for admitted work.
+pub fn run_load(client: &Client, spec: &LoadSpec) -> LoadReport {
+    let mut report = LoadReport::default();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut i = 0usize;
+    while i < spec.n {
+        let burst_len = match spec.arrival {
+            Arrival::Bursty { size, every, .. } if i % every == 0 => size,
+            _ => 1,
+        };
+        let burst_len = burst_len.min(spec.n - i);
+        for _ in 0..burst_len {
+            let (req, opts) = request_at(spec, i);
+            report.submitted += 1;
+            match client.submit_with(req, opts) {
+                Ok(handle) => match spec.arrival {
+                    Arrival::Closed => report.record(&handle.wait().map(|_| ())),
+                    _ => pending.push(handle),
+                },
+                Err(_) => report.rejected += 1,
+            }
+            i += 1;
+        }
+        match spec.arrival {
+            Arrival::Poisson { rate } | Arrival::Bursty { rate, .. } if i < spec.n => {
+                std::thread::sleep(gap_at(spec, rate, i));
+            }
+            _ => {}
+        }
+    }
+    for handle in pending {
+        report.record(&handle.wait().map(|_| ()));
+    }
+    // Closed-loop tail: low-pressure traffic that lets a browned-out
+    // server observe falling queue depth and disengage.
+    for j in 0..spec.cooldown {
+        let (req, opts) = request_at(spec, spec.n + j);
+        report.submitted += 1;
+        match client.submit_with(req, opts) {
+            Ok(handle) => report.record(&handle.wait().map(|_| ())),
+            Err(_) => report.rejected += 1,
+        }
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_each_arrival_kind() {
+        let c = LoadSpec::parse("closed:n=24,seed=7,steps=3").unwrap();
+        assert_eq!(c.arrival, Arrival::Closed);
+        assert_eq!((c.n, c.seed, c.steps.clone()), (24, 7, vec![3]));
+
+        let p = LoadSpec::parse("poisson:rate=200,n=40,seed=1,steps=3|5,quant=0.3").unwrap();
+        assert_eq!(p.arrival, Arrival::Poisson { rate: 200.0 });
+        assert_eq!(p.steps, vec![3, 5]);
+        assert!((p.quant_mix - 0.3).abs() < 1e-12);
+
+        let b = LoadSpec::parse("bursty:rate=800,burst=12@6,n=36,steps=3,cooldown=8").unwrap();
+        assert_eq!(
+            b.arrival,
+            Arrival::Bursty { rate: 800.0, size: 12, every: 6 }
+        );
+        assert_eq!(b.cooldown, 8);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "warp:n=3",                 // unknown kind
+            "poisson:n=4",              // missing rate
+            "poisson:rate=0,n=4",       // non-positive rate
+            "bursty:rate=10,n=4",       // missing burst
+            "bursty:rate=10,burst=3,n=4", // burst missing @
+            "closed:steps=0",           // zero steps
+            "closed:quant=1.5",         // probability out of range
+            "closed:frobnicate=1",      // unknown key
+            "closed:n",                 // not key=value
+        ] {
+            assert!(LoadSpec::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn request_sequence_is_deterministic_and_mixed() {
+        let spec = LoadSpec::parse("poisson:rate=100,n=64,seed=11,steps=3|5,quant=0.5").unwrap();
+        let mut prio = [0usize; 3];
+        let mut quant = 0usize;
+        for i in 0..spec.n {
+            let (a, oa) = request_at(&spec, i);
+            let (b, ob) = request_at(&spec, i);
+            // GenRequest has no PartialEq; the batch key covers every
+            // field except prompt/seed, which we compare directly.
+            assert_eq!(a.batch_key(), b.batch_key(), "request {i} not replayable");
+            assert_eq!((a.prompt.clone(), a.seed), (b.prompt, b.seed));
+            assert_eq!(oa.priority, ob.priority);
+            assert!(spec.steps.contains(&a.steps));
+            a.validate().unwrap();
+            prio[oa.priority.index()] += 1;
+            quant += a.quant.is_some() as usize;
+        }
+        // Every class of the mix shows up in 64 draws.
+        assert!(prio.iter().all(|&c| c > 0), "priority mix missing a class: {prio:?}");
+        assert!(quant > 0 && quant < spec.n, "quant mix degenerate: {quant}");
+    }
+
+    #[test]
+    fn arrival_gaps_are_deterministic_and_bounded() {
+        let spec = LoadSpec::parse("poisson:rate=200,n=8,seed=5").unwrap();
+        for i in 0..spec.n {
+            let a = gap_at(&spec, 200.0, i);
+            assert_eq!(a, gap_at(&spec, 200.0, i));
+            assert!(a <= Duration::from_secs(1));
+        }
+    }
+
+    #[test]
+    fn report_tallies_and_goodput() {
+        let mut r = LoadReport::default();
+        r.record(&Ok(()));
+        r.record(&Ok(()));
+        r.record(&Err(SdError::Cancelled));
+        r.record(&Err(SdError::DeadlineExceeded));
+        r.record(&Err(SdError::runtime("boom")));
+        r.wall_s = 2.0;
+        assert_eq!((r.ok, r.cancelled, r.deadline_miss, r.failed), (2, 1, 1, 1));
+        assert!((r.goodput() - 1.0).abs() < 1e-12);
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get_usize("ok"), Some(2));
+        assert_eq!(parsed.get_usize("failed"), Some(1));
+        assert!(parsed.get("goodput").is_some());
+    }
+}

@@ -59,6 +59,21 @@ pub struct Metrics {
     /// Per-priority results ledger: goodput, deadline misses,
     /// cancel-ack latency, rejects, full/partial step counts.
     ledger: Mutex<PriorityLedger>,
+    /// Resilience layer (`server::resilience`): transient-failure
+    /// re-dispatches into the batcher.
+    retries: AtomicU64,
+    /// Retried jobs that reached `Done` — the fault never surfaced.
+    retries_recovered: AtomicU64,
+    /// Straggler groups re-dispatched by the hedge monitor.
+    hedges: AtomicU64,
+    /// Low-priority submissions bounced by load shedding (these also
+    /// count in `rejected` — shedding is a *reason*, not a new outcome).
+    sheds: AtomicU64,
+    /// Brownout engage/disengage flips (hysteretic, so consecutive
+    /// transitions alternate).
+    brownout_transitions: AtomicU64,
+    /// Requests rewritten to their cheaper form at admission.
+    degraded: AtomicU64,
 }
 
 /// A point-in-time summary.
@@ -107,6 +122,19 @@ pub struct Summary {
     pub slo_relative_error: f64,
     /// Per-priority results ledger snapshot.
     pub ledger: PriorityLedger,
+    /// Transient-failure re-dispatches (resilience layer).
+    pub retries: u64,
+    /// Retried jobs that ultimately completed.
+    pub retries_recovered: u64,
+    /// Straggler groups re-dispatched once by the hedge monitor.
+    pub hedges: u64,
+    /// Low-priority submissions shed under pressure (subset of
+    /// `rejected`).
+    pub sheds: u64,
+    /// Brownout engage/disengage transitions.
+    pub brownout_transitions: u64,
+    /// Requests degraded to a cheaper plan/quant at admission.
+    pub degraded: u64,
 }
 
 impl Metrics {
@@ -193,6 +221,38 @@ impl Metrics {
         self.cache_evictions.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// One transient-failure re-dispatch into the batcher.
+    pub fn on_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A previously-retried job reached `Done`.
+    pub fn on_retry_recovered(&self) {
+        self.retries_recovered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One straggler group re-dispatched by the hedge monitor.
+    pub fn on_hedge(&self) {
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One Low-priority submission bounced by load shedding. Callers
+    /// pair this with [`Metrics::on_rejected`] — a shed *is* a
+    /// rejection, this counter just attributes the reason.
+    pub fn on_shed(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Brownout engaged or disengaged (one count per flip).
+    pub fn on_brownout_transition(&self) {
+        self.brownout_transitions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request rewritten to its degraded form at admission.
+    pub fn on_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Point-in-time summary over the individual counters.
     ///
     /// Consistency contract: every field is read with a separate
@@ -256,6 +316,12 @@ impl Metrics {
             windows,
             slo_relative_error: LogHistogram::relative_error_bound(),
             ledger: self.ledger.lock().unwrap().clone(),
+            retries: self.retries.load(Ordering::Relaxed),
+            retries_recovered: self.retries_recovered.load(Ordering::Relaxed),
+            hedges: self.hedges.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+            brownout_transitions: self.brownout_transitions.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
         }
     }
 }
@@ -316,6 +382,17 @@ impl Summary {
                 ]),
             ),
             ("ledger", self.ledger.to_json()),
+            (
+                "resilience",
+                Json::obj(vec![
+                    ("retries", Json::Num(self.retries as f64)),
+                    ("retries_recovered", Json::Num(self.retries_recovered as f64)),
+                    ("hedges", Json::Num(self.hedges as f64)),
+                    ("sheds", Json::Num(self.sheds as f64)),
+                    ("brownout_transitions", Json::Num(self.brownout_transitions as f64)),
+                    ("degraded", Json::Num(self.degraded as f64)),
+                ]),
+            ),
         ])
     }
 }
@@ -497,6 +574,36 @@ mod tests {
         assert_eq!(s.ledger.lane(Priority::Normal).steps_partial, 4);
         assert_eq!(s.ledger.lane(Priority::High).steps_full, 10);
         assert_eq!(s.ledger.lane(Priority::Low).steps_full, 0);
+    }
+
+    #[test]
+    fn resilience_counters_aggregate_and_export() {
+        let m = Metrics::default();
+        m.on_retry();
+        m.on_retry();
+        m.on_retry_recovered();
+        m.on_hedge();
+        m.on_shed();
+        m.on_rejected(Priority::Low); // a shed is also a rejection
+        m.on_brownout_transition();
+        m.on_brownout_transition();
+        m.on_degraded();
+        let s = m.summary();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.retries_recovered, 1);
+        assert_eq!(s.hedges, 1);
+        assert_eq!(s.sheds, 1);
+        assert_eq!(s.brownout_transitions, 2);
+        assert_eq!(s.degraded, 1);
+        assert_eq!(s.rejected, 1, "shed counts inside rejected, not beside it");
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        let r = parsed.get("resilience").unwrap();
+        assert_eq!(r.get_usize("retries"), Some(2));
+        assert_eq!(r.get_usize("retries_recovered"), Some(1));
+        assert_eq!(r.get_usize("hedges"), Some(1));
+        assert_eq!(r.get_usize("sheds"), Some(1));
+        assert_eq!(r.get_usize("brownout_transitions"), Some(2));
+        assert_eq!(r.get_usize("degraded"), Some(1));
     }
 
     #[test]

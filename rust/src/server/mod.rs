@@ -33,12 +33,27 @@
 //! *before* enqueueing: a repeated identical request streams
 //! `CacheHit -> Done` without touching the batcher or a worker, and
 //! hit/miss/eviction counters surface in [`metrics::Metrics`].
+//!
+//! Failure handling layers on top without changing any of the above
+//! defaults ([`resilience`]): transient-classified batch failures are
+//! split and retried solo with exponential backoff (re-entering the
+//! batcher, never re-batching with fresh work, bounded by a per-job
+//! attempt budget and the job's own deadline); straggling groups can be
+//! hedged once; Low-priority admissions are shed under sustained queue
+//! pressure; and brownout mode degrades admission-time requests to
+//! cheaper plans — always *before* cache keying, so degraded results
+//! never answer a full-quality lookup. Whatever combination of primary,
+//! retry and hedge attempts runs, a per-job claim flag guarantees the
+//! standing invariant: exactly one terminal event per submitted job.
 
 pub mod api;
 pub mod batcher;
+pub mod loadgen;
 pub mod metrics;
+pub mod resilience;
 
 pub use api::{CancelToken, JobEvent, JobHandle, JobId, Priority, SubmitOptions};
+pub use resilience::ResiliencePolicy;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -49,15 +64,22 @@ use anyhow::Result;
 
 use crate::cache::Cache;
 use crate::coordinator::{BatchKey, Coordinator, GenRequest, GenResult, SdError, StepObserver};
-use crate::obs::{Phase, SpanEvent, TraceScope, TraceSink};
+use crate::obs::{counters, Phase, SpanEvent, TraceScope, TraceSink};
 use crate::pas::plan::StepAction;
 use batcher::{BatchItem, Batcher, DropReason};
 use metrics::Metrics;
+use resilience::{backoff_for, should_retry, HedgeBoard, PressureState, ResiliencePolicy};
 
 /// A queued job: the request plus its event channel and control state.
 /// The [`JobId`] rides along so every pipeline stage (batcher drops,
 /// worker delivery, the coordinator loop below a [`TraceScope`]) can
 /// attribute trace spans to the job that caused them.
+///
+/// Clonable so a hedge twin can share the same event channel, cancel
+/// token and — crucially — the same `delivered` claim flag as its
+/// primary: whichever attempt claims first emits the job's single
+/// terminal event.
+#[derive(Clone)]
 struct Job {
     id: JobId,
     req: GenRequest,
@@ -66,6 +88,34 @@ struct Job {
     priority: Priority,
     cancel: CancelToken,
     events: mpsc::Sender<JobEvent>,
+    /// Completed re-dispatches so far (0 = first attempt).
+    attempt: u32,
+    /// Retry backoff: the batcher holds the job until this instant.
+    not_before: Option<Instant>,
+    /// Retried jobs run solo (unique batch key) — a poisoned lane must
+    /// not re-batch with fresh work and take it down again.
+    solo: bool,
+    /// Shadow copy dispatched by the hedge monitor; carries no admission
+    /// slot, emits no Scheduled/Step events, writes no cache entries,
+    /// and its failures vanish silently.
+    hedge: bool,
+    /// Terminal-claim flag shared by every attempt of this job.
+    delivered: Arc<AtomicBool>,
+}
+
+impl Job {
+    /// Claim the right to emit this job's terminal event. Exactly one
+    /// caller (primary, retry, hedge, or a batcher drop) wins.
+    fn claim_terminal(&self) -> bool {
+        !self.delivered.swap(true, Ordering::SeqCst)
+    }
+
+    /// The shadow copy registered on the hedge board.
+    fn hedge_twin(&self) -> Job {
+        let mut twin = self.clone();
+        twin.hedge = true;
+        twin
+    }
 }
 
 /// Record a lifecycle span when tracing is configured.
@@ -76,10 +126,13 @@ fn record_span(trace: Option<&Arc<TraceSink>>, ev: SpanEvent) {
 }
 
 impl BatchItem for Job {
-    type Key = BatchKey;
+    /// The request's batch key plus a solo discriminator: retried jobs
+    /// get a key private to their id (the `+ 1` keeps slot 0 for the
+    /// shared key space), so they can never re-batch with fresh work.
+    type Key = (BatchKey, u64);
 
-    fn key(&self) -> BatchKey {
-        self.req.batch_key()
+    fn key(&self) -> (BatchKey, u64) {
+        (self.req.batch_key(), if self.solo { self.id.0 + 1 } else { 0 })
     }
 
     fn priority(&self) -> Priority {
@@ -92,6 +145,10 @@ impl BatchItem for Job {
 
     fn cancelled(&self) -> bool {
         self.cancel.is_cancelled()
+    }
+
+    fn ready_at(&self) -> Option<Instant> {
+        self.not_before
     }
 }
 
@@ -113,6 +170,9 @@ pub struct ServerConfig {
     /// step spans plus cache/runtime spans attributed to the group's
     /// lead job.
     pub trace: Option<Arc<TraceSink>>,
+    /// Failure-handling knobs (retry / hedge / shed / brownout). The
+    /// default is inert beyond transient-retry classification.
+    pub resilience: ResiliencePolicy,
 }
 
 impl Default for ServerConfig {
@@ -123,6 +183,7 @@ impl Default for ServerConfig {
             cache: None,
             max_queue: 1024,
             trace: None,
+            resilience: ResiliencePolicy::default(),
         }
     }
 }
@@ -145,6 +206,10 @@ pub struct Client {
     max_queue: usize,
     next_id: Arc<AtomicU64>,
     trace: Option<Arc<TraceSink>>,
+    policy: ResiliencePolicy,
+    /// Smoothed queue-pressure tracker shared by every client clone;
+    /// drives load shedding and hysteretic brownout.
+    pressure: Arc<PressureState>,
 }
 
 impl Client {
@@ -165,6 +230,49 @@ impl Client {
     /// (`QueueFull` at capacity) and the job enters the batcher with
     /// `Queued` as its first event.
     pub fn submit_with(&self, req: GenRequest, opts: SubmitOptions) -> Result<JobHandle, SdError> {
+        // Pressure ladder, before anything else sees the request. Every
+        // admission feeds the EWMA (even with brownout off, so enabling
+        // it later starts warm); transitions are counted once per flip.
+        if self
+            .pressure
+            .observe(
+                self.depth.load(Ordering::SeqCst),
+                self.policy.brownout_enter,
+                self.policy.brownout_exit,
+            )
+            .is_some()
+        {
+            self.metrics.on_brownout_transition();
+            counters().brownout_transition();
+        }
+        // Load shedding: bounce Low-priority work early under sustained
+        // pressure — before it can cost a cache lookup or a queue slot
+        // that deadline-bearing traffic needs.
+        if let Some(limit) = self.policy.shed_low_depth {
+            if opts.priority == Priority::Low && self.pressure.smoothed() > limit as f64 {
+                self.metrics.on_shed();
+                counters().shed();
+                self.metrics.on_rejected(opts.priority);
+                return Err(SdError::QueueFull);
+            }
+        }
+        // Brownout: rewrite degradable requests to their cheaper form
+        // *before* plan resolution and the cache lookup below, so the
+        // degraded request carries its own batch and cache keys — a
+        // brownout result can never be stored or served under the
+        // full-quality key (standing invariant).
+        let req = if self.pressure.engaged() && opts.degradable {
+            match resilience::degrade_request(&req) {
+                Some(degraded) => {
+                    self.metrics.on_degraded();
+                    counters().degrade();
+                    degraded
+                }
+                None => req,
+            }
+        } else {
+            req
+        };
         // Validate after plan resolution: the steps/guidance checks are
         // plan-independent and Auto (the only plan that changes here)
         // is exempt from the executability check, so one pass suffices.
@@ -211,6 +319,11 @@ impl Client {
             priority: opts.priority,
             cancel,
             events: ev_tx.clone(),
+            attempt: 0,
+            not_before: None,
+            solo: false,
+            hedge: false,
+            delivered: Arc::new(AtomicBool::new(false)),
         };
         record_span(self.trace.as_ref(), SpanEvent::new(id.0, Phase::Queued));
         let _ = ev_tx.send(JobEvent::Queued);
@@ -254,7 +367,9 @@ impl StepObserver for BatchObserver<'_> {
     fn on_step(&self, i: usize, action: StepAction, ms: f64) {
         let now = Instant::now();
         for job in self.jobs {
-            if !job.cancel.is_cancelled() && !Self::expired(job, now) {
+            // Hedge lanes stay silent: the primary attempt owns the
+            // job's event stream unless the hedge wins the terminal.
+            if !job.hedge && !job.cancel.is_cancelled() && !Self::expired(job, now) {
                 let _ = job.events.send(JobEvent::Step { i, action, ms });
             }
         }
@@ -303,6 +418,12 @@ fn dispatch_pass(
 ) {
     for (reason, observed_at, job) in batcher.take_dropped() {
         depth.fetch_sub(1, Ordering::SeqCst);
+        // Retried jobs come back through the batcher with their claim
+        // flag still unset, so a drop here is their real terminal; the
+        // claim only loses if a hedge already delivered.
+        if !job.claim_terminal() {
+            continue;
+        }
         match reason {
             DropReason::Cancelled => {
                 // Cancel-ack latency: token fire -> the prune that
@@ -348,10 +469,16 @@ fn run_batcher(
         // so N queued submissions cost one ranking pass, not N.
         match rx.recv_timeout(Duration::from_millis(5)) {
             Ok(job) => {
-                metrics.on_enqueue();
+                // Retries (attempt > 0) re-enter here but were already
+                // counted enqueued on their first admission.
+                if job.attempt == 0 {
+                    metrics.on_enqueue();
+                }
                 batcher.push(job);
                 while let Ok(job) = rx.try_recv() {
-                    metrics.on_enqueue();
+                    if job.attempt == 0 {
+                        metrics.on_enqueue();
+                    }
                     batcher.push(job);
                 }
             }
@@ -370,7 +497,9 @@ fn run_batcher(
     // the stream closing, which `JobHandle::wait` surfaces as a typed
     // `SdError::Runtime("server shut down")`.
     while let Ok(job) = rx.try_recv() {
-        metrics.on_enqueue();
+        if job.attempt == 0 {
+            metrics.on_enqueue();
+        }
         batcher.push(job);
     }
     let rest = batcher.flush_all();
@@ -379,34 +508,60 @@ fn run_batcher(
     metrics.set_queue_depth_by_priority([0, 0, 0]);
 }
 
+/// Everything a worker needs to run batches: the shared execution state
+/// plus the resilience wiring — the policy, a clone of the submit
+/// sender for retry re-entry, and the hedge board (when hedging is on).
+struct WorkerCtx {
+    coord: Arc<Coordinator>,
+    metrics: Arc<Metrics>,
+    cache: Option<Arc<Cache>>,
+    depth: Arc<AtomicUsize>,
+    trace: Option<Arc<TraceSink>>,
+    policy: ResiliencePolicy,
+    retry_tx: mpsc::Sender<Job>,
+    hedges: Option<Arc<HedgeBoard<Vec<Job>>>>,
+}
+
 /// Execute one dequeued batch on a worker: filter cancelled/expired
 /// jobs (they never reach the generation loop), then run the survivors
 /// in compiled-size groups — each group gets its own observer, so
 /// every job sees exactly one `Step` event per denoising step and a
 /// group aborts mid-run when *its* lanes all cancel, independent of
-/// jobs executing in a different group. Every job's admission slot is
-/// released here, exactly once, after its terminal event.
-fn run_batch(
-    batch: Vec<Job>,
-    coord: &Coordinator,
-    metrics: &Metrics,
-    cache: Option<&Cache>,
-    depth: &AtomicUsize,
-    trace: Option<&Arc<TraceSink>>,
-) {
+/// jobs executing in a different group. Every non-hedge job's admission
+/// slot is released here, exactly once, after its terminal event —
+/// except jobs kept alive by a retry, which carry their slot back into
+/// the batcher. Hedge batches are shadows: no slots, no gauges.
+fn run_batch(batch: Vec<Job>, ctx: &WorkerCtx) {
+    let hedged = batch.first().map_or(false, |j| j.hedge);
     let now = Instant::now();
+    let trace = ctx.trace.as_ref();
     let mut remaining = Vec::with_capacity(batch.len());
     for job in batch {
         if job.cancel.is_cancelled() {
-            metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
-            record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
-            let _ = job.events.send(JobEvent::Cancelled);
-            depth.fetch_sub(1, Ordering::SeqCst);
+            if !job.hedge {
+                ctx.depth.fetch_sub(1, Ordering::SeqCst);
+            }
+            if job.claim_terminal() {
+                ctx.metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
+                record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
+                let _ = job.events.send(JobEvent::Cancelled);
+            }
         } else if job.deadline.map_or(false, |d| now >= d) {
-            metrics.on_deadline_miss(job.priority);
-            record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
-            let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
-            depth.fetch_sub(1, Ordering::SeqCst);
+            if !job.hedge {
+                ctx.depth.fetch_sub(1, Ordering::SeqCst);
+            }
+            if job.claim_terminal() {
+                ctx.metrics.on_deadline_miss(job.priority);
+                record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
+                let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
+            }
+        } else if job.delivered.load(Ordering::SeqCst) {
+            // Terminal already claimed (a hedge raced this attempt to
+            // completion while it sat in the queue): release the slot,
+            // run nothing.
+            if !job.hedge {
+                ctx.depth.fetch_sub(1, Ordering::SeqCst);
+            }
         } else {
             remaining.push(job);
         }
@@ -419,14 +574,18 @@ fn run_batch(
     // scoped to the group actually running. One chunk_sizes call plans
     // every group — the same policy (and the same typed error) the
     // coordinator itself uses, never a second copy of it.
-    let groups = match coord.chunk_sizes(remaining.len()) {
+    let groups = match ctx.coord.chunk_sizes(remaining.len()) {
         Ok(groups) => groups,
         Err(e) => {
             for job in remaining.drain(..) {
-                metrics.on_error();
-                record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
-                let _ = job.events.send(JobEvent::Failed(e.clone()));
-                depth.fetch_sub(1, Ordering::SeqCst);
+                if !job.hedge {
+                    ctx.depth.fetch_sub(1, Ordering::SeqCst);
+                }
+                if job.claim_terminal() {
+                    ctx.metrics.on_error();
+                    record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
+                    let _ = job.events.send(JobEvent::Failed(e.clone()));
+                }
             }
             return;
         }
@@ -436,16 +595,24 @@ fn run_batch(
     // releases whatever is left during a panic unwind — including the
     // slots of groups that never got to run — so a panic inside the
     // coordinator cannot leak admission slots and pin the server at
-    // QueueFull while it appears alive.
-    let mut slots = SlotGuard { depth, n: remaining.len() };
+    // QueueFull while it appears alive. Hedge batches hold no slots.
+    let mut slots = SlotGuard {
+        depth: &ctx.depth,
+        n: if hedged { 0 } else { remaining.len() },
+    };
     for take in groups {
         if remaining.is_empty() {
             break;
         }
         let group: Vec<Job> = remaining.drain(..take.min(remaining.len())).collect();
         let done = group.len();
-        run_group(group, coord, metrics, cache, trace);
-        slots.release(done);
+        let kept = run_group(group, ctx);
+        if !hedged {
+            // Retried jobs keep their admission slot until a later
+            // attempt (or a batcher drop) reaches their terminal.
+            slots.forget(kept);
+            slots.release(done - kept);
+        }
     }
 }
 
@@ -463,6 +630,12 @@ impl SlotGuard<'_> {
         self.depth.fetch_sub(n, Ordering::SeqCst);
         self.n -= n;
     }
+
+    /// Hand `n` slots over to a re-dispatched attempt without releasing
+    /// them: a retried job stays admitted until its real terminal.
+    fn forget(&mut self, n: usize) {
+        self.n -= n;
+    }
 }
 
 impl Drop for SlotGuard<'_> {
@@ -473,15 +646,30 @@ impl Drop for SlotGuard<'_> {
     }
 }
 
+/// Fail one lane (if its terminal is still unclaimed): mid-run
+/// step-budget expiry feeds the deadline-miss counter — the same one
+/// admission/dequeue-time expiry feeds — everything else is an error.
+fn fail_job(job: Job, e: &SdError, ctx: &WorkerCtx) {
+    if !job.claim_terminal() {
+        return;
+    }
+    if *e == SdError::DeadlineExceeded {
+        ctx.metrics.on_deadline_miss(job.priority);
+    } else {
+        ctx.metrics.on_error();
+    }
+    record_span(ctx.trace.as_ref(), SpanEvent::new(job.id.0, Phase::Failed));
+    let _ = job.events.send(JobEvent::Failed(e.clone()));
+}
+
 /// Run one compiled-size group to completion: `Scheduled`, one `Step`
-/// per denoising step, then exactly one terminal event per job.
-fn run_group(
-    batch: Vec<Job>,
-    coord: &Coordinator,
-    metrics: &Metrics,
-    cache: Option<&Cache>,
-    trace: Option<&Arc<TraceSink>>,
-) {
+/// per denoising step, then exactly one terminal event per job —
+/// arbitrated by the claim flag when retry or hedge attempts race.
+/// Returns the number of jobs *kept* (re-dispatched as retries); their
+/// admission slots travel with them instead of being released.
+fn run_group(batch: Vec<Job>, ctx: &WorkerCtx) -> usize {
+    let hedged = batch.first().map_or(false, |j| j.hedge);
+    let trace = ctx.trace.as_ref();
     let t0 = Instant::now();
     // Deadlines re-checked at group start, not just at batch dequeue:
     // earlier groups of the same dequeued batch may have consumed a
@@ -489,57 +677,83 @@ fn run_group(
     let mut group = Vec::with_capacity(batch.len());
     for job in batch {
         if job.deadline.map_or(false, |d| t0 >= d) {
-            metrics.on_deadline_miss(job.priority);
-            record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
-            let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
+            if job.claim_terminal() {
+                ctx.metrics.on_deadline_miss(job.priority);
+                record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
+                let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
+            }
         } else {
             group.push(job);
         }
     }
     if group.is_empty() {
-        return;
+        return 0;
     }
     let batch_size = group.len();
-    for job in &group {
-        record_span(
-            trace,
-            SpanEvent::new(job.id.0, Phase::Scheduled).with_batch(batch_size as u64),
-        );
-        let _ = job.events.send(JobEvent::Scheduled { batch_size });
+    if !hedged {
+        for job in &group {
+            record_span(
+                trace,
+                SpanEvent::new(job.id.0, Phase::Scheduled).with_batch(batch_size as u64),
+            );
+            let _ = job.events.send(JobEvent::Scheduled { batch_size });
+        }
     }
+    // Register a shadow copy of this group on the hedge board before
+    // executing; the monitor thread re-dispatches it once if we turn
+    // out to be a straggler, and the guard deregisters on every exit
+    // path. Hedge batches themselves never hedge again.
+    let _hedge_guard = match &ctx.hedges {
+        Some(board) if !hedged => {
+            let twin: Vec<Job> = group.iter().map(Job::hedge_twin).collect();
+            Some(board.register(twin, t0))
+        }
+        _ => None,
+    };
     let reqs: Vec<GenRequest> = group.iter().map(|j| j.req.clone()).collect();
     let queue_ms: Vec<f64> =
         group.iter().map(|j| j.enqueued.elapsed().as_secs_f64() * 1e3).collect();
     // Deep-layer attribution: the coordinator's step spans and the
     // cache/runtime spans below it record against the group's *lead*
     // job — lockstep lanes share the work, so the first job stands in
-    // as "the job that caused it".
-    let _scope = trace.map(|t| TraceScope::enter(Arc::clone(t), group[0].id.0));
+    // as "the job that caused it". Hedge runs stay out of the trace:
+    // the primary attempt owns the job's deep spans.
+    let _scope = if hedged {
+        None
+    } else {
+        ctx.trace.clone().map(|t| TraceScope::enter(t, group[0].id.0))
+    };
     // generate_many, not generate_batch: aged leftovers (and shutdown
     // drains) can flush at sizes below the smallest compiled artifact,
     // and generate_many pads those to a compiled size and slices the
     // results back.
     let obs = BatchObserver { jobs: &group };
-    match coord.generate_many_observed(&reqs, &obs) {
+    match ctx.coord.generate_many_observed(&reqs, &obs) {
         Ok(results) => {
             let batch_ms = t0.elapsed().as_secs_f64() * 1e3;
-            metrics.on_batch(batch_size);
-            // Populate the request cache (best-effort; a full disk must
-            // not fail the request).
-            if let Some(cache) = cache {
-                for (req, r) in reqs.iter().zip(&results) {
-                    if let Ok(evicted) = cache.put_result(req, r) {
-                        metrics.on_cache_evictions(evicted);
+            if !hedged {
+                ctx.metrics.on_batch(batch_size);
+                // Populate the request cache (best-effort; a full disk
+                // must not fail the request). Hedge runs never write:
+                // the primary attempt stores the canonical entry.
+                if let Some(cache) = ctx.cache.as_deref() {
+                    for (req, r) in reqs.iter().zip(&results) {
+                        if let Ok(evicted) = cache.put_result(req, r) {
+                            ctx.metrics.on_cache_evictions(evicted);
+                        }
                     }
                 }
             }
             let now = Instant::now();
             for ((job, r), q_ms) in group.into_iter().zip(results).zip(queue_ms) {
+                if !job.claim_terminal() {
+                    continue;
+                }
                 if job.cancel.is_cancelled() {
                     // Cancelled while batch mates kept the run alive:
                     // the caller asked out, so deliver Cancelled even
                     // though a latent exists.
-                    metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
+                    ctx.metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
                     record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
                     let _ = job.events.send(JobEvent::Cancelled);
                 } else if BatchObserver::expired(&job, now) {
@@ -547,50 +761,88 @@ fn run_group(
                     // mates kept the run alive: a deadline is a hard
                     // delivery bound, so the (valid, cached-above)
                     // latent is not delivered late.
-                    metrics.on_deadline_miss(job.priority);
+                    ctx.metrics.on_deadline_miss(job.priority);
                     record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
                     let _ = job.events.send(JobEvent::Failed(SdError::DeadlineExceeded));
                 } else {
-                    metrics.on_done(batch_ms + q_ms, job.priority);
-                    metrics.on_steps(job.priority, r.stats.full_steps(), r.stats.partial_steps());
+                    if job.attempt > 0 {
+                        // A transiently-failed job recovered by retry:
+                        // the user never saw the fault.
+                        ctx.metrics.on_retry_recovered();
+                        counters().retry_recovered();
+                    }
+                    ctx.metrics.on_done(batch_ms + q_ms, job.priority);
+                    ctx.metrics.on_steps(
+                        job.priority,
+                        r.stats.full_steps(),
+                        r.stats.partial_steps(),
+                    );
                     record_span(trace, SpanEvent::new(job.id.0, Phase::Done));
                     let _ = job.events.send(JobEvent::Done(r));
                 }
             }
+            0
         }
         Err(e) if e.is_cancelled() => {
             // Every lane's token fired; the observer aborted the run
             // before its final step.
             let now = Instant::now();
             for job in group {
-                metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
-                record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
-                let _ = job.events.send(JobEvent::Cancelled);
+                if job.claim_terminal() {
+                    ctx.metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
+                    record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
+                    let _ = job.events.send(JobEvent::Cancelled);
+                }
             }
+            0
         }
         Err(e) => {
             let now = Instant::now();
+            let mut kept = 0;
             for job in group {
                 if job.cancel.is_cancelled() {
                     // The lane had already asked out when a batch
                     // mate's failure aborted the run: it observes
                     // Cancelled, not the mate's error.
-                    metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
-                    record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
-                    let _ = job.events.send(JobEvent::Cancelled);
-                } else {
-                    // Mid-run step-budget expiry is a deadline miss in
-                    // the metrics, not a generic error — it feeds the
-                    // same counter as admission/dequeue-time expiry.
-                    if e == SdError::DeadlineExceeded {
-                        metrics.on_deadline_miss(job.priority);
-                    } else {
-                        metrics.on_error();
+                    if job.claim_terminal() {
+                        ctx.metrics.on_cancelled(job.priority, job.cancel.ack_ms(now));
+                        record_span(trace, SpanEvent::new(job.id.0, Phase::Cancelled));
+                        let _ = job.events.send(JobEvent::Cancelled);
                     }
-                    record_span(trace, SpanEvent::new(job.id.0, Phase::Failed));
-                    let _ = job.events.send(JobEvent::Failed(e.clone()));
+                    continue;
+                }
+                if job.hedge {
+                    // Hedge failures vanish silently: the primary
+                    // attempt (or its retries) owns failure delivery.
+                    continue;
+                }
+                if !job.delivered.load(Ordering::SeqCst)
+                    && should_retry(&e, job.attempt, &ctx.policy, job.deadline, now)
+                {
+                    // Split-and-retry: the lane re-enters the batcher
+                    // solo (unique batch key) after backing off, still
+                    // holding its admission slot, still bound by its
+                    // original deadline. Contract errors never get
+                    // here — `should_retry` is gated on the transient
+                    // classification.
+                    let mut job = job;
+                    job.attempt += 1;
+                    job.solo = true;
+                    job.not_before = Some(now + backoff_for(&ctx.policy, job.attempt));
+                    match ctx.retry_tx.send(job) {
+                        Ok(()) => {
+                            ctx.metrics.on_retry();
+                            counters().retry();
+                            kept += 1;
+                        }
+                        // Submit channel gone (shutdown): fail in place.
+                        Err(mpsc::SendError(job)) => fail_job(job, &e, ctx),
+                    }
+                } else {
+                    fail_job(job, &e, ctx);
                 }
             }
+            kept
         }
     }
 }
@@ -613,9 +865,35 @@ impl Server {
         let depth = Arc::new(AtomicUsize::new(0));
         let (work_tx, work_rx) = mpsc::channel::<Vec<Job>>();
         let work_rx = Arc::new(Mutex::new(work_rx));
+        let hedges: Option<Arc<HedgeBoard<Vec<Job>>>> =
+            cfg.resilience.hedge_after.map(|_| Arc::new(HedgeBoard::new()));
+
+        // Hedge monitor: re-dispatch straggling groups once. Holds its
+        // own work_tx clone and drops it on exit so the workers' recv
+        // still disconnects cleanly at shutdown.
+        let mut threads = Vec::new();
+        if let (Some(age), Some(board)) = (cfg.resilience.hedge_after, hedges.clone()) {
+            let work_tx = work_tx.clone();
+            let shutdown = Arc::clone(&shutdown);
+            let metrics = Arc::clone(&metrics);
+            threads.push(
+                thread::Builder::new()
+                    .name("sd-acc-hedge".into())
+                    .spawn(move || {
+                        while !shutdown.load(Ordering::Relaxed) {
+                            for twin in board.take_due(Instant::now(), age) {
+                                metrics.on_hedge();
+                                counters().hedge();
+                                let _ = work_tx.send(twin);
+                            }
+                            thread::sleep(Duration::from_millis(1));
+                        }
+                    })
+                    .expect("spawn hedge monitor"),
+            );
+        }
 
         // Batcher thread: drain queue, group, flush.
-        let mut threads = Vec::new();
         {
             let shutdown = Arc::clone(&shutdown);
             let metrics = Arc::clone(&metrics);
@@ -630,14 +908,22 @@ impl Server {
             );
         }
 
-        // Workers: run generation batches.
+        // Workers: run generation batches. Each carries a clone of the
+        // submit sender so retry-eligible failures can re-enter the
+        // batcher; the batcher itself exits via the shutdown flag, not
+        // channel disconnection, so these clones don't wedge shutdown.
         for i in 0..cfg.workers.max(1) {
             let work_rx = Arc::clone(&work_rx);
-            let coord = Arc::clone(&coord);
-            let metrics = Arc::clone(&metrics);
-            let cache = cfg.cache.clone();
-            let depth = Arc::clone(&depth);
-            let trace = cfg.trace.clone();
+            let ctx = WorkerCtx {
+                coord: Arc::clone(&coord),
+                metrics: Arc::clone(&metrics),
+                cache: cfg.cache.clone(),
+                depth: Arc::clone(&depth),
+                trace: cfg.trace.clone(),
+                policy: cfg.resilience.clone(),
+                retry_tx: tx.clone(),
+                hedges: hedges.clone(),
+            };
             threads.push(
                 thread::Builder::new()
                     .name(format!("sd-acc-gen-{i}"))
@@ -647,7 +933,7 @@ impl Server {
                             rx.recv()
                         };
                         let Ok(batch) = batch else { break };
-                        run_batch(batch, &coord, &metrics, cache.as_deref(), &depth, trace.as_ref());
+                        run_batch(batch, &ctx);
                     })
                     .expect("spawn worker"),
             );
@@ -662,6 +948,8 @@ impl Server {
             max_queue: cfg.max_queue,
             next_id: Arc::new(AtomicU64::new(0)),
             trace: cfg.trace.clone(),
+            policy: cfg.resilience.clone(),
+            pressure: Arc::new(PressureState::new()),
         };
         Server { client, shutdown, threads, metrics }
     }
@@ -703,6 +991,11 @@ mod tests {
             priority: Priority::Normal,
             cancel: CancelToken::new(),
             events: tx,
+            attempt: 0,
+            not_before: None,
+            solo: false,
+            hedge: false,
+            delivered: Arc::new(AtomicBool::new(false)),
         };
         (job, rx)
     }
@@ -851,6 +1144,51 @@ mod tests {
         jobs[1].cancel.cancel();
         assert!(!obs.deadline_exceeded());
         assert!(obs.should_cancel());
+    }
+
+    #[test]
+    fn solo_retries_never_rebatch_with_fresh_work() {
+        // Two jobs with identical requests (same batch key) would
+        // normally form one batch of 2; the solo discriminator a retry
+        // carries must keep them apart so a poisoned lane cannot take
+        // fresh work down with it.
+        let (a, _rx_a) = job("red circle x1 y1", 1);
+        let (mut b, _rx_b) = job("red circle x1 y1", 2);
+        b.solo = true;
+        let (batches, _, _) = pump(vec![a, b], Duration::from_millis(0));
+        assert_eq!(batches.len(), 2, "solo job dispatches alone");
+        assert!(batches.iter().all(|b| b.len() == 1));
+
+        // Without the solo flag the same pair batches together —
+        // guarding against the discriminator accidentally always-on.
+        let (a, _rx_a) = job("red circle x1 y1", 1);
+        let (b, _rx_b) = job("red circle x1 y1", 2);
+        let (batches, _, _) = pump(vec![a, b], Duration::from_millis(0));
+        assert_eq!(batches.iter().map(Vec::len).max(), Some(2));
+    }
+
+    #[test]
+    fn terminal_claim_is_exactly_once_across_hedge_twins() {
+        let (j, _rx) = job("x", 1);
+        let twin = j.hedge_twin();
+        assert!(twin.hedge && !j.hedge);
+        assert!(j.claim_terminal(), "first claimant wins");
+        assert!(!twin.claim_terminal(), "shared flag: the twin loses");
+        assert!(!j.claim_terminal(), "idempotent: no second terminal ever");
+    }
+
+    #[test]
+    fn dropped_jobs_with_claimed_terminals_stay_silent() {
+        // A retry dropped by the batcher after a hedge already delivered
+        // must release its slot without emitting a second terminal.
+        let (a, rx_a) = job("red circle x1 y1", 1);
+        a.cancel.cancel();
+        assert!(a.claim_terminal(), "simulate a hedge having delivered");
+        let (batches, metrics, depth) = pump(vec![a], Duration::from_millis(0));
+        assert!(batches.iter().all(Vec::is_empty) || batches.is_empty());
+        assert!(drain(&rx_a).is_empty(), "no duplicate terminal event");
+        assert_eq!(metrics.summary().cancellations, 0);
+        assert_eq!(depth.load(Ordering::SeqCst), 0, "slot still released");
     }
 
     #[test]

@@ -1,0 +1,412 @@
+//! Failure-hardened serving policy: retry, hedging, shedding, brownout.
+//!
+//! This module holds the *decisions*; `server::mod` holds the wiring.
+//! Four independent mechanisms, all off-by-default so a stock
+//! [`ServerConfig`](super::ServerConfig) behaves exactly as before:
+//!
+//! - **Retry** ([`should_retry`]): a batch that fails with a
+//!   *transient-classified* error ([`SdError::is_retryable`], i.e. a
+//!   `runtime::faults` injection or a real flaky executor) is split and
+//!   each lane re-enters the batcher solo, with exponential backoff and a
+//!   per-job attempt budget. Deterministic contract errors (shape
+//!   mismatches, invalid requests) are *never* re-dispatched.
+//! - **Hedging** ([`HedgeBoard`]): an in-flight group older than
+//!   `hedge_after` is re-dispatched once as a shadow batch; whichever
+//!   attempt finishes first claims the job's single terminal event and
+//!   the loser is dropped silently.
+//! - **Load shedding**: under sustained queue pressure, Low-priority
+//!   work is rejected at admission (`QueueFull`) before it can displace
+//!   deadline-bearing traffic.
+//! - **Brownout** ([`PressureState`], [`degrade_request`]): under the
+//!   same pressure signal, *degradable* requests are rewritten at
+//!   admission to a cheaper PAS plan / quant scheme. The rewrite happens
+//!   **before** cache lookup and enqueue, so degraded results key under
+//!   the degraded request — a brownout output can never satisfy a
+//!   full-quality cache lookup (standing invariant). Engagement is
+//!   hysteretic: enter at `brownout_enter`, leave at `brownout_exit`.
+//!
+//! Everything here is pure policy over observable state (queue depth,
+//! attempt counts, error classification) — no clocks are consulted except
+//! through the `Instant`s the server already carries, so chaos runs stay
+//! replayable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{GenRequest, SdError};
+use crate::pas::{PasConfig, SamplingPlan};
+use crate::quant::QuantScheme;
+
+// ------------------------------------------------------------------ policy
+
+/// Knobs for the server's failure-handling layer. The default is fully
+/// inert: no retries beyond classification, no hedging, no shedding, no
+/// brownout — existing deployments see zero behavior change.
+#[derive(Debug, Clone)]
+pub struct ResiliencePolicy {
+    /// Maximum re-dispatches per job after a transient failure (0
+    /// disables retry). Attempts beyond the budget fail to the caller.
+    pub retry_budget: u32,
+    /// Backoff before attempt `n` re-enters the batcher:
+    /// `backoff_base * 2^(n-1)`. Kept tiny by default — the batcher tick
+    /// is ~5ms, so the base mostly orders retries behind fresh work.
+    pub backoff_base: Duration,
+    /// Re-dispatch an in-flight group once after this long (None: off).
+    pub hedge_after: Option<Duration>,
+    /// Shed Low-priority admissions when smoothed queue depth exceeds
+    /// this (None: off).
+    pub shed_low_depth: Option<usize>,
+    /// Enter brownout when smoothed queue depth reaches this (None: off).
+    pub brownout_enter: Option<usize>,
+    /// Leave brownout once smoothed depth falls back to this.
+    pub brownout_exit: usize,
+}
+
+impl Default for ResiliencePolicy {
+    fn default() -> ResiliencePolicy {
+        ResiliencePolicy {
+            retry_budget: 3,
+            backoff_base: Duration::from_millis(1),
+            hedge_after: None,
+            shed_low_depth: None,
+            brownout_enter: None,
+            brownout_exit: 0,
+        }
+    }
+}
+
+/// Retry eligibility for one failed lane: the error must classify as
+/// transient, the attempt budget must have room, and the job's deadline
+/// (if any) must still be live — a retry that cannot finish in budget is
+/// a deadline miss, not a second chance.
+pub fn should_retry(
+    err: &SdError,
+    attempt: u32,
+    policy: &ResiliencePolicy,
+    deadline: Option<Instant>,
+    now: Instant,
+) -> bool {
+    err.is_retryable()
+        && attempt < policy.retry_budget
+        && deadline.map_or(true, |d| now < d)
+}
+
+/// Backoff delay before re-dispatching attempt `attempt` (1-based).
+pub fn backoff_for(policy: &ResiliencePolicy, attempt: u32) -> Duration {
+    policy.backoff_base * 2u32.saturating_pow(attempt.saturating_sub(1).min(16))
+}
+
+// ---------------------------------------------------------------- pressure
+
+/// What a [`PressureState::observe`] call decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    Engaged,
+    Disengaged,
+}
+
+/// Hysteretic queue-pressure tracker driving shedding and brownout.
+///
+/// Each admission feeds the instantaneous queue depth into an EWMA
+/// (alpha 0.5 — reactive but burst-tolerant); brownout engages when the
+/// smoothed depth reaches `enter` and disengages only once it falls to
+/// `exit`, so the system does not flap at the threshold.
+#[derive(Debug)]
+pub struct PressureState {
+    inner: Mutex<PressureInner>,
+}
+
+#[derive(Debug)]
+struct PressureInner {
+    ewma: f64,
+    engaged: bool,
+}
+
+impl PressureState {
+    pub fn new() -> PressureState {
+        PressureState { inner: Mutex::new(PressureInner { ewma: 0.0, engaged: false }) }
+    }
+
+    /// Fold one depth sample in; returns a transition when the engaged
+    /// state flips. `enter` of `None` keeps the tracker dormant (it
+    /// still smooths, so enabling brownout mid-run starts warm).
+    pub fn observe(
+        &self,
+        depth: usize,
+        enter: Option<usize>,
+        exit: usize,
+    ) -> Option<Transition> {
+        let mut st = self.inner.lock().unwrap();
+        st.ewma = 0.5 * st.ewma + 0.5 * depth as f64;
+        let Some(enter) = enter else { return None };
+        if !st.engaged && st.ewma >= enter as f64 {
+            st.engaged = true;
+            return Some(Transition::Engaged);
+        }
+        if st.engaged && st.ewma <= exit as f64 {
+            st.engaged = false;
+            return Some(Transition::Disengaged);
+        }
+        None
+    }
+
+    pub fn engaged(&self) -> bool {
+        self.inner.lock().unwrap().engaged
+    }
+
+    /// Smoothed depth (for shedding decisions and monitor output).
+    pub fn smoothed(&self) -> f64 {
+        self.inner.lock().unwrap().ewma
+    }
+}
+
+impl Default for PressureState {
+    fn default() -> PressureState {
+        PressureState::new()
+    }
+}
+
+// ---------------------------------------------------------------- brownout
+
+/// Rewrite a request into its brownout (degraded) form, or `None` when
+/// no cheaper valid variant exists. Applied at admission *before* plan
+/// resolution, cache lookup and enqueue, so the degraded request carries
+/// its own batch key and cache key end to end.
+///
+/// Degradations, both applied when available:
+/// - `Full`/`Auto` plans with enough steps switch to a sparse PAS config
+///   (front-loaded full steps, partial refinement) — fewer full U-Net
+///   invocations per image.
+/// - Unquantised requests pick up `w8a8` fake-quant — cheaper arithmetic
+///   under the paper's mixed-precision emulation.
+///
+/// The candidate is re-validated; anything invalid falls back to `None`
+/// rather than admitting a request that would fail downstream.
+pub fn degrade_request(req: &GenRequest) -> Option<GenRequest> {
+    let mut out = req.clone();
+    let mut changed = false;
+    if matches!(out.plan, SamplingPlan::Full | SamplingPlan::Auto) && out.steps >= 6 {
+        let t_sketch = (out.steps / 2).max(3);
+        out.plan = SamplingPlan::Pas(PasConfig {
+            t_sketch,
+            t_complete: 2.min(t_sketch),
+            t_sparse: 4,
+            l_sketch: 2,
+            l_refine: 1,
+        });
+        changed = true;
+    }
+    if out.quant.is_none() {
+        out.quant = Some(QuantScheme::w8a8());
+        changed = true;
+    }
+    if !changed || out.validate().is_err() {
+        return None;
+    }
+    Some(out)
+}
+
+// ----------------------------------------------------------------- hedging
+
+/// Registry of in-flight groups eligible for hedged re-dispatch.
+///
+/// `run_group` registers its group (as a pre-built shadow payload) just
+/// before executing and deregisters on completion via the RAII
+/// [`HedgeGuard`]. A monitor thread polls [`HedgeBoard::take_due`] and
+/// dispatches each payload at most once; the shared terminal-claim flag
+/// on the jobs themselves arbitrates which attempt delivers.
+///
+/// Generic over the payload so the policy layer stays decoupled from the
+/// server's `Job` type (and unit-testable without one).
+#[derive(Debug)]
+pub struct HedgeBoard<T> {
+    entries: Mutex<Vec<HedgeEntry<T>>>,
+    next_id: AtomicU64,
+}
+
+#[derive(Debug)]
+struct HedgeEntry<T> {
+    id: u64,
+    since: Instant,
+    dispatched: bool,
+    payload: T,
+}
+
+impl<T: Clone> HedgeBoard<T> {
+    pub fn new() -> HedgeBoard<T> {
+        HedgeBoard { entries: Mutex::new(Vec::new()), next_id: AtomicU64::new(1) }
+    }
+
+    /// Register an in-flight group; the returned guard deregisters it
+    /// when dropped (i.e. when the primary attempt finishes, either way).
+    pub fn register(self: &Arc<Self>, payload: T, since: Instant) -> HedgeGuard<T> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.entries.lock().unwrap().push(HedgeEntry {
+            id,
+            since,
+            dispatched: false,
+            payload,
+        });
+        HedgeGuard { board: Arc::clone(self), id }
+    }
+
+    /// Payloads in flight longer than `age` that have not been hedged
+    /// yet; marks them dispatched so each group hedges at most once.
+    pub fn take_due(&self, now: Instant, age: Duration) -> Vec<T> {
+        let mut entries = self.entries.lock().unwrap();
+        let mut due = Vec::new();
+        for e in entries.iter_mut() {
+            if !e.dispatched && now.duration_since(e.since) >= age {
+                e.dispatched = true;
+                due.push(e.payload.clone());
+            }
+        }
+        due
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    fn deregister(&self, id: u64) {
+        self.entries.lock().unwrap().retain(|e| e.id != id);
+    }
+}
+
+impl<T: Clone> Default for HedgeBoard<T> {
+    fn default() -> HedgeBoard<T> {
+        HedgeBoard::new()
+    }
+}
+
+/// RAII deregistration for one [`HedgeBoard`] entry.
+#[derive(Debug)]
+pub struct HedgeGuard<T> {
+    board: Arc<HedgeBoard<T>>,
+    id: u64,
+}
+
+impl<T> Drop for HedgeGuard<T> {
+    fn drop(&mut self) {
+        self.board.deregister(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenRequest;
+
+    #[test]
+    fn default_policy_is_inert_beyond_retry_classification() {
+        let p = ResiliencePolicy::default();
+        assert_eq!(p.retry_budget, 3);
+        assert!(p.hedge_after.is_none());
+        assert!(p.shed_low_depth.is_none());
+        assert!(p.brownout_enter.is_none());
+    }
+
+    #[test]
+    fn retry_gate_respects_class_budget_and_deadline() {
+        let p = ResiliencePolicy::default();
+        let now = Instant::now();
+        let transient = SdError::Runtime(format!(
+            "{} injected: artifact unet_full_b1 call 0",
+            crate::runtime::TRANSIENT_MARKER
+        ));
+        assert!(should_retry(&transient, 0, &p, None, now));
+        assert!(should_retry(&transient, 2, &p, None, now));
+        assert!(!should_retry(&transient, 3, &p, None, now), "budget exhausted");
+        // A contract error never retries no matter the budget.
+        let shape = SdError::Runtime(
+            "artifact unet_full_b1 input 0: shape [1, 3, 3] != manifest [1, 256, 4]".into(),
+        );
+        assert!(!should_retry(&shape, 0, &p, None, now));
+        // A dead deadline blocks retry even for transient errors.
+        let dead = now - Duration::from_millis(1);
+        assert!(!should_retry(&transient, 0, &p, Some(dead), now));
+        let live = now + Duration::from_secs(1);
+        assert!(should_retry(&transient, 0, &p, Some(live), now));
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt() {
+        let p = ResiliencePolicy { backoff_base: Duration::from_millis(2), ..Default::default() };
+        assert_eq!(backoff_for(&p, 1), Duration::from_millis(2));
+        assert_eq!(backoff_for(&p, 2), Duration::from_millis(4));
+        assert_eq!(backoff_for(&p, 3), Duration::from_millis(8));
+    }
+
+    #[test]
+    fn pressure_engages_and_disengages_with_hysteresis() {
+        let ps = PressureState::new();
+        // Dormant without an enter threshold.
+        assert_eq!(ps.observe(100, None, 0), None);
+        assert!(!ps.engaged());
+
+        let ps = PressureState::new();
+        // Ramp up: ewma crosses 4 -> engage exactly once.
+        let mut transitions = Vec::new();
+        for depth in [2, 6, 8, 8, 8] {
+            if let Some(t) = ps.observe(depth, Some(4), 1) {
+                transitions.push(t);
+            }
+        }
+        assert_eq!(transitions, vec![Transition::Engaged]);
+        assert!(ps.engaged());
+        // Depth between exit and enter: still engaged (hysteresis band).
+        assert_eq!(ps.observe(3, Some(4), 1), None);
+        assert!(ps.engaged());
+        // Drain to the exit threshold -> disengage exactly once.
+        let mut saw_exit = false;
+        for _ in 0..12 {
+            match ps.observe(0, Some(4), 1) {
+                Some(Transition::Disengaged) => saw_exit = true,
+                Some(Transition::Engaged) => panic!("re-engaged while draining"),
+                None => {}
+            }
+        }
+        assert!(saw_exit);
+        assert!(!ps.engaged());
+    }
+
+    #[test]
+    fn degrade_rewrites_plan_and_quant_and_stays_valid() {
+        let req = GenRequest::builder("brownout", 7).steps(10).build().unwrap();
+        let deg = degrade_request(&req).expect("degradable");
+        assert!(matches!(deg.plan, SamplingPlan::Pas(_)), "plan degraded to PAS");
+        assert!(deg.quant.is_some(), "picked up fake-quant");
+        assert!(deg.validate().is_ok());
+        // Batch/cache keys must differ so degraded results key separately.
+        assert_ne!(deg.batch_key(), req.batch_key());
+        // Degrading is idempotent-ish: the degraded form has nothing
+        // further to strip (plan already PAS, quant already set).
+        assert!(degrade_request(&deg).is_none());
+    }
+
+    #[test]
+    fn degrade_skips_requests_too_small_for_pas_but_still_quantises() {
+        let req = GenRequest::builder("tiny", 1).steps(3).build().unwrap();
+        let deg = degrade_request(&req).expect("quant-only degrade");
+        assert!(matches!(deg.plan, SamplingPlan::Full), "3 steps: plan untouched");
+        assert!(deg.quant.is_some());
+    }
+
+    #[test]
+    fn hedge_board_dispatches_once_and_guard_deregisters() {
+        let board: Arc<HedgeBoard<u32>> = Arc::new(HedgeBoard::new());
+        let t0 = Instant::now();
+        let guard = board.register(7, t0);
+        assert_eq!(board.in_flight(), 1);
+        // Too young: nothing due.
+        assert!(board.take_due(t0, Duration::from_millis(5)).is_empty());
+        // Old enough: dispatched exactly once.
+        let later = t0 + Duration::from_millis(10);
+        assert_eq!(board.take_due(later, Duration::from_millis(5)), vec![7]);
+        assert!(board.take_due(later, Duration::from_millis(5)).is_empty());
+        // Guard drop removes the entry.
+        drop(guard);
+        assert_eq!(board.in_flight(), 0);
+    }
+}

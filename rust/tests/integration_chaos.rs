@@ -1,0 +1,585 @@
+//! Integration: the chaos engine against the failure-hardened serving
+//! pipeline. Every test runs the deterministic `SimBackend` with an
+//! explicit [`FaultSpec`] attached via `start_with_faults` — the only
+//! path that arms injection — so the suite is hermetic: no artifacts,
+//! no environment variables, no skipping.
+//!
+//! What is pinned here:
+//! - **Replayability**: the same seed + fault schedule produces an
+//!   identical span structure, identical per-job event logs and an
+//!   identical priority ledger, run to run.
+//! - **Terminal discipline**: under a ≥20% transient-failure wave with
+//!   latency spikes, every job still delivers exactly one terminal
+//!   event, and ≥95% of transiently-failed jobs recover via retry.
+//! - **Classification**: injected faults are retryable; contract
+//!   errors (shape mismatches) never are.
+//! - **Lane isolation**: a fault that kills a batch re-dispatches the
+//!   survivors solo, and their latents stay bit-identical to an
+//!   uninjected run.
+//! - **Shedding / brownout / hedging**: the pressure ladder engages and
+//!   disengages hysteretically, and a brownout-degraded result is never
+//!   served under the full-quality cache key.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sd_acc::cache::StoreConfig;
+use sd_acc::coordinator::{Coordinator, GenRequest, SdError};
+use sd_acc::obs::trace::{structure_lines, DEFAULT_RING_CAP};
+use sd_acc::obs::TraceSink;
+use sd_acc::runtime::{
+    default_artifacts_dir, BackendKind, FaultSpec, RuntimeService, TRANSIENT_MARKER,
+};
+use sd_acc::server::resilience::{degrade_request, should_retry, ResiliencePolicy};
+use sd_acc::server::{JobEvent, Priority, Server, ServerConfig, SubmitOptions};
+
+/// A sim runtime with the given fault schedule armed. The service must
+/// outlive the coordinator (the handle is a channel into its thread),
+/// so both are returned. `None` only if the sim fails to start.
+fn chaos_stack(spec: &str) -> Option<(RuntimeService, Arc<Coordinator>)> {
+    let spec = FaultSpec::parse(spec).expect("fault spec parses");
+    match RuntimeService::start_with_faults(BackendKind::Sim, &default_artifacts_dir(), Some(spec))
+    {
+        Ok(svc) => {
+            let coord = Arc::new(Coordinator::new(svc.handle()));
+            Some((svc, coord))
+        }
+        Err(e) => {
+            eprintln!("sim backend failed to start: {e:#}");
+            None
+        }
+    }
+}
+
+/// An uninjected sim runtime — the bit-exact reference the isolation
+/// test compares against. Faults explicitly `None` (not `from_env`), so
+/// a stray `SD_ACC_FAULTS` in the test environment cannot leak in.
+fn clean_stack() -> Option<(RuntimeService, Arc<Coordinator>)> {
+    match RuntimeService::start_with_faults(BackendKind::Sim, &default_artifacts_dir(), None) {
+        Ok(svc) => {
+            let coord = Arc::new(Coordinator::new(svc.handle()));
+            Some((svc, coord))
+        }
+        Err(e) => {
+            eprintln!("sim backend failed to start: {e:#}");
+            None
+        }
+    }
+}
+
+fn req(prompt: &str, seed: u64, steps: usize) -> GenRequest {
+    let mut r = GenRequest::new(prompt, seed);
+    r.steps = steps;
+    r
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sdacc_ichaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn labels(events: &[JobEvent]) -> Vec<String> {
+    events.iter().map(|e| e.label().to_string()).collect()
+}
+
+fn scheduled_count(events: &[JobEvent]) -> usize {
+    events.iter().filter(|e| matches!(e, JobEvent::Scheduled { .. })).count()
+}
+
+// ------------------------------------------------------------- replayability
+
+/// Everything a chaos run can be fingerprinted by: trace structure,
+/// per-job event logs and outcomes, resilience counters, ledger lanes.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    structure: String,
+    event_labels: Vec<Vec<String>>,
+    outcomes: Vec<bool>,
+    enqueued: u64,
+    completed: u64,
+    errors: u64,
+    retries: u64,
+    retries_recovered: u64,
+    lanes: Vec<(u64, u64, u64, u64, u64, u64)>,
+}
+
+/// One closed-loop run against an exact-index fault schedule:
+/// `target=unet_full_b1,at=2|8|14` errors the 3rd U-Net call of jobs
+/// 0, 1 and 2 (3 full steps per solo attempt), whose solo retries land
+/// on clean indices — so exactly 3 retries, all recovered, every time.
+/// `slow_at=4` adds one deterministic latency spike for coverage.
+fn deterministic_run() -> Option<Fingerprint> {
+    let (_svc, coord) =
+        chaos_stack("target=unet_full_b1,at=2|8|14,slow_at=4,slow_ms=1,seed=7")?;
+    let sink = TraceSink::in_memory(DEFAULT_RING_CAP);
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(0),
+            trace: Some(Arc::clone(&sink)),
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let mut event_labels = Vec::new();
+    let mut outcomes = Vec::new();
+    for i in 0..6u64 {
+        let p = [Priority::High, Priority::Normal, Priority::Low][i as usize % 3];
+        let h = client
+            .submit_with(
+                req(&format!("replay {i}"), 4200 + i, 3),
+                SubmitOptions::with_priority(p),
+            )
+            .expect("admitted");
+        let (events, outcome) = h.wait_with_events();
+        event_labels.push(labels(&events));
+        outcomes.push(outcome.is_ok());
+    }
+    let s = server.metrics.summary();
+    let lanes = Priority::ALL
+        .iter()
+        .map(|&p| {
+            let l = s.ledger.lane(p);
+            (
+                l.completed,
+                l.deadline_misses,
+                l.cancellations,
+                l.rejected,
+                l.steps_full,
+                l.steps_partial,
+            )
+        })
+        .collect();
+    server.shutdown();
+    Some(Fingerprint {
+        structure: structure_lines(&sink.snapshot()),
+        event_labels,
+        outcomes,
+        enqueued: s.enqueued,
+        completed: s.completed,
+        errors: s.errors,
+        retries: s.retries,
+        retries_recovered: s.retries_recovered,
+        lanes,
+    })
+}
+
+#[test]
+fn same_fault_schedule_replays_bit_identically() {
+    let Some(a) = deterministic_run() else { return };
+    let Some(b) = deterministic_run() else { return };
+    // The schedule is exact-index, so the counts are known a priori —
+    // not merely equal across runs.
+    assert_eq!(a.enqueued, 6);
+    assert_eq!(a.completed, 6, "every job recovers: {a:?}");
+    assert_eq!(a.errors, 0);
+    assert_eq!(a.retries, 3, "jobs 0, 1 and 2 each retried once");
+    assert_eq!(a.retries_recovered, 3);
+    assert!(a.outcomes.iter().all(|ok| *ok));
+    for lane in &a.lanes {
+        assert_eq!(lane.0, 2, "two completions per priority lane");
+    }
+    // Replay: identical span structure, event logs, counters, ledger.
+    assert_eq!(a, b, "same seed + schedule must replay bit-identically");
+}
+
+// -------------------------------------------------------- transient wave
+
+#[test]
+fn transient_wave_recovers_with_one_terminal_per_job() {
+    // Probabilistic wave: with 4 faultable calls per attempt (text
+    // encoder + 3 U-Net steps), err=0.15 fails ~48% of first attempts —
+    // comfortably past the 20% bar — while a 12-retry budget makes a
+    // job exhausting it (~0.48^12) a non-event. The schedule is a pure
+    // function of (seed, artifact, index), so this is one fixed draw,
+    // not a flaky one.
+    let n = 30u64;
+    let Some((_svc, coord)) = chaos_stack("seed=11,err=0.15,slow=0.05,slow_ms=1") else {
+        return;
+    };
+    let sink = TraceSink::in_memory(DEFAULT_RING_CAP);
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(0),
+            trace: Some(Arc::clone(&sink)),
+            resilience: ResiliencePolicy {
+                retry_budget: 12,
+                backoff_base: Duration::from_micros(200),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let mut retried = 0u64;
+    let mut recovered = 0u64;
+    for i in 0..n {
+        let h = client.submit(req(&format!("wave {i}"), 8800 + i, 3)).expect("admitted");
+        let (events, outcome) = h.wait_with_events();
+        assert_eq!(
+            events.iter().filter(|e| e.is_terminal()).count(),
+            1,
+            "job {i}: exactly one terminal event"
+        );
+        assert!(events.last().unwrap().is_terminal());
+        if scheduled_count(&events) > 1 {
+            retried += 1;
+            if outcome.is_ok() {
+                recovered += 1;
+            }
+        }
+    }
+    let s = server.metrics.summary();
+    server.shutdown();
+
+    assert_eq!(s.enqueued, n);
+    assert_eq!(s.completed + s.errors, n, "terminal accounting under chaos");
+    assert!(
+        retried >= n / 5,
+        "expected a >=20% transient-failure wave, got {retried}/{n}"
+    );
+    assert!(
+        recovered * 100 >= retried * 95,
+        "expected >=95% of transiently-failed jobs to recover: {recovered}/{retried}"
+    );
+    // Delivery-side recovery counter agrees with the event-log view,
+    // and re-dispatches are at least one per retried job.
+    assert_eq!(s.retries_recovered, recovered);
+    assert!(s.retries >= retried);
+
+    // The trace ring agrees: one entry and one terminal span per job.
+    let counts = sink.lifecycle_counts();
+    assert_eq!(counts.enqueued, n);
+    assert_eq!(counts.done + counts.failed, n);
+    assert_eq!(counts.cancelled, 0);
+    let spans = sink.snapshot();
+    let mut jobs: Vec<u64> = spans.iter().map(|s| s.job).collect();
+    jobs.sort_unstable();
+    jobs.dedup();
+    assert_eq!(jobs.len(), n as usize);
+    for &job in &jobs {
+        let terminals =
+            spans.iter().filter(|s| s.job == job && s.phase.is_terminal()).count();
+        assert_eq!(terminals, 1, "job {job}: exactly one terminal span");
+    }
+}
+
+// ------------------------------------------------------- classification
+
+#[test]
+fn contract_errors_are_never_retried_transients_always_are() {
+    // Classification seam: the canonical backend contract error (shape
+    // mismatch wording from the runtime's input validation) must never
+    // classify as retryable, while an injected message always does.
+    let shape = SdError::Runtime(
+        "artifact unet_full_b1 input 0: shape [1, 3, 3] != manifest [1, 256, 4]".to_string(),
+    );
+    assert!(!shape.is_retryable(), "shape mismatches are permanent");
+    let injected =
+        SdError::Runtime(format!("{TRANSIENT_MARKER} injected: artifact unet_full_b1 call 7"));
+    assert!(injected.is_retryable());
+
+    let policy = ResiliencePolicy::default();
+    let now = Instant::now();
+    assert!(!should_retry(&shape, 0, &policy, None, now), "never re-dispatch a contract error");
+    assert!(should_retry(&injected, 0, &policy, None, now));
+    assert!(
+        !should_retry(&injected, policy.retry_budget, &policy, None, now),
+        "budget exhaustion ends retries"
+    );
+    assert!(
+        !should_retry(&injected, 0, &policy, Some(now - Duration::from_millis(1)), now),
+        "an elapsed deadline ends retries"
+    );
+
+    // End to end: with every call erroring, a job burns its whole
+    // budget and then fails to the caller with the transient error —
+    // deterministically (err=1.0 leaves nothing to the draw).
+    let Some((_svc, coord)) = chaos_stack("err=1.0") else { return };
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(0),
+            resilience: ResiliencePolicy {
+                retry_budget: 2,
+                backoff_base: Duration::from_micros(200),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let h = client.submit(req("doomed", 1, 3)).expect("admitted");
+    let (events, outcome) = h.wait_with_events();
+    let err = outcome.expect_err("every attempt fails");
+    match &err {
+        SdError::Runtime(msg) => {
+            assert!(msg.contains(TRANSIENT_MARKER), "surfaced error is the injected one: {msg}")
+        }
+        other => panic!("expected a runtime error, got {other:?}"),
+    }
+    assert_eq!(scheduled_count(&events), 3, "initial attempt + 2 budgeted retries");
+    let s = server.metrics.summary();
+    server.shutdown();
+    assert_eq!(s.retries, 2);
+    assert_eq!(s.retries_recovered, 0);
+    assert_eq!(s.errors, 1);
+    assert_eq!(s.completed, 0);
+}
+
+// ------------------------------------------------------- lane isolation
+
+#[test]
+fn healthy_lanes_survive_batch_mate_faults_bit_identically() {
+    // Reference: the same two requests, uninjected, solo.
+    let Some((_clean_svc, clean)) = clean_stack() else { return };
+    let a = req("lane alpha", 70_001, 4);
+    let b = req("lane beta", 70_002, 4);
+    let reference: Vec<Vec<f32>> = {
+        let server = Server::start(
+            Arc::clone(&clean),
+            ServerConfig {
+                workers: 1,
+                max_wait: Duration::from_millis(0),
+                ..Default::default()
+            },
+        );
+        let client = server.client();
+        let out = [&a, &b]
+            .iter()
+            .map(|r| {
+                client
+                    .submit((*r).clone())
+                    .expect("admitted")
+                    .wait()
+                    .expect("clean run ok")
+                    .latent
+                    .data()
+                    .to_vec()
+            })
+            .collect();
+        server.shutdown();
+        out
+    };
+
+    // Chaos: only the b2 (batched) U-Net artifact faults, and only its
+    // first call — the pair batches, the group fails once, and both
+    // lanes must come back solo on the clean b1 path.
+    let Some((_svc, coord)) = chaos_stack("target=unet_full_b2,at=0") else { return };
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            // Long fill window: both submissions arrive well inside it,
+            // and a full batch (2 is the largest compiled size) flushes
+            // immediately anyway.
+            max_wait: Duration::from_millis(400),
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let ha = client.submit(a).expect("admitted");
+    let hb = client.submit(b).expect("admitted");
+    let results: Vec<Vec<f32>> = [&ha, &hb]
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            let (events, outcome) = h.wait_with_events();
+            let sched: Vec<usize> = events
+                .iter()
+                .filter_map(|e| match e {
+                    JobEvent::Scheduled { batch_size } => Some(*batch_size),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(
+                sched,
+                vec![2, 1],
+                "lane {i}: batched attempt, then a solo retry"
+            );
+            outcome.expect("lane recovers").latent.data().to_vec()
+        })
+        .collect();
+    let s = server.metrics.summary();
+    server.shutdown();
+
+    assert_eq!(s.retries, 2, "both lanes of the failed group re-dispatch");
+    assert_eq!(s.retries_recovered, 2);
+    assert_eq!(s.completed, 2);
+    assert_eq!(s.errors, 0);
+    for (i, (got, want)) in results.iter().zip(&reference).enumerate() {
+        assert_eq!(
+            got, want,
+            "lane {i}: retried latent must be bit-identical to the uninjected run"
+        );
+    }
+}
+
+// ------------------------------------------------------------- shedding
+
+#[test]
+fn low_priority_sheds_under_pressure() {
+    let Some((_svc, coord)) = clean_stack() else { return };
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(0),
+            resilience: ResiliencePolicy {
+                shed_low_depth: Some(0),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    // Two in-flight jobs push the smoothed depth above the (zero)
+    // shedding threshold; the Low submission bounces before it can cost
+    // a queue slot, while Normal traffic is untouched.
+    let h1 = client.submit(req("pressure 1", 61, 16)).expect("admitted");
+    let h2 = client.submit(req("pressure 2", 62, 16)).expect("admitted");
+    let shed = client
+        .submit_with(req("best effort", 63, 16), SubmitOptions::with_priority(Priority::Low));
+    assert!(matches!(shed, Err(SdError::QueueFull)), "shed surfaces as QueueFull: {shed:?}");
+    h1.wait().expect("normal traffic unaffected");
+    h2.wait().expect("normal traffic unaffected");
+    let s = server.metrics.summary();
+    server.shutdown();
+    assert_eq!(s.sheds, 1);
+    assert_eq!(s.ledger.lane(Priority::Low).rejected, 1, "a shed is a Low-lane rejection");
+    assert_eq!(s.completed, 2);
+}
+
+// ------------------------------------------------------------- brownout
+
+#[test]
+fn brownout_engages_hysteretically_and_never_poisons_the_full_quality_cache() {
+    let Some((_svc, coord)) = clean_stack() else { return };
+    let dir = temp_dir("brownout");
+    let cache = Arc::new(coord.open_cache(StoreConfig::new(&dir)).expect("cache opens"));
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(0),
+            cache: Some(Arc::clone(&cache)),
+            resilience: ResiliencePolicy {
+                brownout_enter: Some(3),
+                brownout_exit: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+
+    // Burst: open-loop submissions race ahead of the single worker, the
+    // smoothed depth crosses `enter`, and later admissions degrade. The
+    // probe is submitted last — deepest into the burst — so it is the
+    // one whose cache placement the invariant check below relies on.
+    let probe = req("brownout probe", 9_999, 16);
+    let mut handles = Vec::new();
+    for i in 0..11u64 {
+        handles.push(client.submit(req(&format!("burst {i}"), 9_000 + i, 16)).expect("admitted"));
+    }
+    handles.push(client.submit(probe.clone()).expect("admitted"));
+    for h in &handles {
+        h.wait().expect("burst jobs complete (degraded or not)");
+    }
+    let mid = server.metrics.summary();
+    assert!(mid.brownout_transitions >= 1, "brownout engaged during the burst");
+    assert!(mid.degraded >= 1, "admissions under brownout were degraded");
+
+    // Cooldown: closed-loop traffic sees an empty queue, the EWMA
+    // decays through `exit`, and the mode disengages — exactly one
+    // engage and one disengage, no flapping at the threshold.
+    for i in 0..8u64 {
+        client
+            .submit(req(&format!("cooldown {i}"), 9_100 + i, 16))
+            .expect("admitted")
+            .wait()
+            .expect("cooldown ok");
+        // Let the worker's post-delivery depth decrement land before the
+        // next admission samples the queue, so the EWMA sees the drained
+        // queue rather than a one-job race.
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let after = server.metrics.summary();
+    assert_eq!(
+        after.brownout_transitions, 2,
+        "hysteresis: one engage, one disengage, no flapping"
+    );
+
+    // Standing invariant: the degraded probe result was cached under
+    // the degraded request's own key, never the full-quality key. The
+    // full-quality resubmission must therefore MISS and recompute...
+    let (events, outcome) = client.submit(probe.clone()).expect("admitted").wait_with_events();
+    outcome.expect("full-quality recompute ok");
+    assert!(
+        !labels(&events).iter().any(|l| l == "cache-hit"),
+        "brownout output must not satisfy the full-quality key: {:?}",
+        labels(&events)
+    );
+    // ...while the explicit degraded form HITS the entry the brownout
+    // run stored.
+    let degraded = degrade_request(&probe).expect("a 16-step Full request is degradable");
+    let (events, outcome) = client.submit(degraded).expect("admitted").wait_with_events();
+    outcome.expect("degraded form ok");
+    assert_eq!(
+        labels(&events).first().map(String::as_str),
+        Some("cache-hit"),
+        "the brownout-era result lives under the degraded key"
+    );
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -------------------------------------------------------------- hedging
+
+#[test]
+fn hedged_stragglers_deliver_exactly_one_terminal() {
+    // Only the solo U-Net path spikes, and only its first three calls —
+    // the primary attempt drags for >=180ms while the hedge twin
+    // (dispatched after 5ms) lands on clean indices and wins the
+    // terminal claim. The primary's late finish must stay silent.
+    let Some((_svc, coord)) = chaos_stack("target=unet_full_b1,slow_at=0|1|2,slow_ms=60") else {
+        return;
+    };
+    let server = Server::start(
+        Arc::clone(&coord),
+        ServerConfig {
+            workers: 2,
+            max_wait: Duration::from_millis(0),
+            resilience: ResiliencePolicy {
+                hedge_after: Some(Duration::from_millis(5)),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let client = server.client();
+    let started = Instant::now();
+    let h = client.submit(req("straggler", 77, 3)).expect("admitted");
+    let (events, outcome) = h.wait_with_events();
+    let waited = started.elapsed();
+    outcome.expect("the hedge delivers");
+    assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+    assert!(
+        waited < Duration::from_millis(150),
+        "the hedge should beat the >=180ms straggler, took {waited:?}"
+    );
+    // Joining the workers first makes the counter asserts race-free:
+    // the straggling primary has finished (silently) by now.
+    let metrics = Arc::clone(&server.metrics);
+    server.shutdown();
+    let s = metrics.summary();
+    assert_eq!(s.hedges, 1, "the board dispatches a straggler's twin at most once");
+    assert_eq!(s.completed, 1, "one terminal delivery despite two attempts");
+    assert_eq!(s.errors, 0);
+}

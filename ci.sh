@@ -116,6 +116,75 @@ echo "$chaos_out" | grep -qE "resilience: [1-9][0-9]* retries" \
 echo "$chaos_out" | grep -qE "[1-9][0-9]* brownout transitions" \
     || { echo "chaos serve lane: burst load never engaged brownout" >&2; exit 1; }
 
+echo "== wire serve lane =="
+# Two serve processes over loopback HTTP/SSE sharing one on-disk cache:
+# process A handles a mixed done+cancel workload via `sd-acc request`
+# (exactly one `terminal:` line per job, streamed `event:` frames);
+# process B, started afterwards on the same --cache-dir, must answer the
+# identical request with a cross-process `cache-hit` frame and the same
+# latent checksum. Both drain via `request --shutdown`.
+wire_tmp="$(mktemp -d "${TMPDIR:-/tmp}/sdacc_ci_wire.XXXXXX")"
+wire_a=""; wire_b=""
+trap 'kill $wire_a $wire_b 2>/dev/null || true; rm -rf "$wire_tmp"' EXIT
+sd="./target/release/sd-acc"
+wire_addr() { sed -n 's/^listening on //p' "$1" 2>/dev/null | head -n1 || true; }
+wait_addr() { # wait_addr <log> -> prints the bound address or nothing
+    for _ in $(seq 1 100); do
+        local a; a="$(wire_addr "$1")"
+        if [ -n "$a" ]; then echo "$a"; return 0; fi
+        sleep 0.1
+    done
+}
+
+"$sd" serve --backend sim --workers 1 --listen 127.0.0.1:0 \
+    --cache-dir "$wire_tmp/cache" > "$wire_tmp/a.log" 2>&1 &
+wire_a=$!
+addr_a="$(wait_addr "$wire_tmp/a.log")"
+[ -n "$addr_a" ] || { echo "wire lane: serve A never reported its address" >&2; cat "$wire_tmp/a.log" >&2; exit 1; }
+
+done_out="$("$sd" request --addr "$addr_a" \
+    --prompt "wire lane red circle x4 y4" --seed 11 --steps 3)"
+echo "$done_out" | grep -q '^event: ' \
+    || { echo "wire lane: no SSE event frames streamed" >&2; echo "$done_out" >&2; exit 1; }
+echo "$done_out" | grep -q '^terminal: done$' \
+    || { echo "wire lane: done job did not end in terminal: done" >&2; echo "$done_out" >&2; exit 1; }
+[ "$(echo "$done_out" | grep -c '^terminal: ')" = 1 ] \
+    || { echo "wire lane: expected exactly one terminal line for the done job" >&2; exit 1; }
+fnv_cold="$(echo "$done_out" | sed -n 's/^done: .*latent_fnv //p')"
+[ -n "$fnv_cold" ] || { echo "wire lane: done report carried no latent_fnv" >&2; exit 1; }
+
+# Cancel mid-stream: DELETE after two streamed events on a long job.
+cancel_out="$("$sd" request --addr "$addr_a" --prompt "wire lane cancel me" \
+    --seed 12 --steps 2000 --cancel-after-events 2)"
+echo "$cancel_out" | grep -q '^terminal: cancelled$' \
+    || { echo "wire lane: cancel job did not end in terminal: cancelled" >&2; echo "$cancel_out" >&2; exit 1; }
+[ "$(echo "$cancel_out" | grep -c '^terminal: ')" = 1 ] \
+    || { echo "wire lane: expected exactly one terminal line for the cancel job" >&2; exit 1; }
+
+"$sd" serve --backend sim --workers 1 --listen 127.0.0.1:0 \
+    --cache-dir "$wire_tmp/cache" > "$wire_tmp/b.log" 2>&1 &
+wire_b=$!
+addr_b="$(wait_addr "$wire_tmp/b.log")"
+[ -n "$addr_b" ] || { echo "wire lane: serve B never reported its address" >&2; cat "$wire_tmp/b.log" >&2; exit 1; }
+
+warm_out="$("$sd" request --addr "$addr_b" \
+    --prompt "wire lane red circle x4 y4" --seed 11 --steps 3)"
+echo "$warm_out" | grep -q '^event: cache-hit$' \
+    || { echo "wire lane: process B missed the cross-process cache hit" >&2; echo "$warm_out" >&2; exit 1; }
+fnv_warm="$(echo "$warm_out" | sed -n 's/^done: .*latent_fnv //p')"
+[ "$fnv_cold" = "$fnv_warm" ] \
+    || { echo "wire lane: cross-process hit checksum mismatch ('$fnv_cold' vs '$fnv_warm')" >&2; exit 1; }
+
+"$sd" request --addr "$addr_a" --shutdown > /dev/null
+"$sd" request --addr "$addr_b" --shutdown > /dev/null
+wait "$wire_a" "$wire_b"
+wire_a=""; wire_b=""
+grep -q '^wire drained: ' "$wire_tmp/a.log" \
+    || { echo "wire lane: serve A printed no drain report" >&2; cat "$wire_tmp/a.log" >&2; exit 1; }
+rm -rf "$wire_tmp"
+trap - EXIT
+echo "wire lane: done + cancel + cross-process cache hit verified"
+
 if [ "$bench_commit" = 1 ]; then
     echo "== obs bench (commit trajectory point) =="
     # Full measurement; validates schema + the allocs/step budget against

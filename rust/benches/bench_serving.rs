@@ -28,7 +28,10 @@
 //!    sim backend otherwise — this section always executes) — req/s,
 //!    p50/p95/p99, occupancy, measured warm-vs-cold hit latency
 //!    through the client path, plus submit->event->done latency and
-//!    time-to-cancel-ack through the `JobHandle` API.
+//!    time-to-cancel-ack through the `JobHandle` API, and the same
+//!    submit->stream->done round-trip over the loopback HTTP/SSE wire
+//!    tier (`net::WireServer` / `net::WireClient`) so the wire tax over
+//!    the in-process job API is a tracked number.
 //!
 //! `--smoke` (used by ci.sh) trims iteration counts, still enforces the
 //! warm >= 3x cold and event-overhead bands, and skips the repo-root
@@ -388,10 +391,15 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
     let n = if smoke { 4 } else { 16 };
     let steps = if smoke { 4 } else { 12 };
 
+    struct WireProbe {
+        round_trip_ms: f64,
+        frames: usize,
+    }
+
     // Drive the passes in a closure so the server is always shut down
     // cleanly afterwards, success or failure.
     #[allow(clippy::type_complexity)]
-    let drive = || -> anyhow::Result<(Vec<f64>, Vec<f64>, f64, f64, usize, f64)> {
+    let drive = || -> anyhow::Result<(Vec<f64>, Vec<f64>, f64, f64, usize, f64, WireProbe)> {
         // Cold pass: generate everything, measuring per-request wall time.
         let t0 = Instant::now();
         let mut lat_ms = Vec::with_capacity(n);
@@ -442,13 +450,37 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
         let _ = h.wait(); // Cancelled (or Done if it raced the flush)
         let cancel_ack_ms = t.elapsed().as_secs_f64() * 1e3;
 
-        Ok((lat_ms, warm_ms, wall_s, submit_done_ms, step_events, cancel_ack_ms))
+        // Wire tier: the same submit -> stream -> done round-trip over
+        // loopback HTTP/SSE, so the wire tax over the in-process job
+        // API above is a tracked number, not folklore.
+        let wire = sd_acc::net::WireServer::start(
+            client.clone(),
+            Arc::clone(&server.metrics),
+            "127.0.0.1:0",
+            2,
+        )?;
+        let body = Json::obj(vec![
+            ("prompt", Json::str("yellow circle x3 y11")),
+            ("seed", Json::num(9_000_003.0)),
+            ("steps", Json::num(steps as f64)),
+            ("sampler", Json::str("ddim")),
+        ]);
+        let wc = sd_acc::net::WireClient::new(wire.addr().to_string());
+        let t = Instant::now();
+        let (_id, frames) = wc.run(&body)?;
+        let round_trip_ms = t.elapsed().as_secs_f64() * 1e3;
+        let last = frames.last().map(|e| e.label.as_str()).unwrap_or("");
+        anyhow::ensure!(last == "done", "wire run must end in done (got {last:?})");
+        let probe = WireProbe { round_trip_ms, frames: frames.len() };
+        wire.shutdown();
+
+        Ok((lat_ms, warm_ms, wall_s, submit_done_ms, step_events, cancel_ack_ms, probe))
     };
     let driven = drive();
     let m = server.metrics.summary();
     server.shutdown();
     let _ = std::fs::remove_dir_all(&cache_dir);
-    let (lat_ms, warm_ms, wall_s, submit_done_ms, step_events, cancel_ack_ms) = driven?;
+    let (lat_ms, warm_ms, wall_s, submit_done_ms, step_events, cancel_ack_ms, wire) = driven?;
 
     let (p50, p95, p99) = (
         stats::percentile(&lat_ms, 50.0),
@@ -469,6 +501,10 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
          cancel ack {cancel_ack_ms:.1} ms | {} cancellations",
         m.cancellations,
     );
+    println!(
+        "wire tier: submit->stream->done {:.0} ms over loopback HTTP/SSE ({} frames)",
+        wire.round_trip_ms, wire.frames,
+    );
     Ok(Json::obj(vec![
         ("backend", Json::str(svc.backend().as_str())),
         ("requests", Json::num(n as f64)),
@@ -482,6 +518,8 @@ fn run_e2e_inner(smoke: bool, art_dir: &Path) -> anyhow::Result<Json> {
         ("submit_done_ms", Json::num(submit_done_ms)),
         ("step_events", Json::num(step_events as f64)),
         ("cancel_ack_ms", Json::num(cancel_ack_ms)),
+        ("wire_round_trip_ms", Json::num(wire.round_trip_ms)),
+        ("wire_frames", Json::num(wire.frames as f64)),
         ("mean_batch_size", Json::num(m.mean_batch_size)),
         ("cache_hits", Json::num(m.cache_hits as f64)),
         ("cache_misses", Json::num(m.cache_misses as f64)),

@@ -428,8 +428,15 @@ impl Cache {
         self.get_typed(request_key(self.key_hash, req))
     }
 
+    /// Request results flush the index eagerly (not after
+    /// `PERSIST_EVERY` buffered puts): a sibling `serve --listen`
+    /// process sharing this store directory must be able to hit this
+    /// entry as soon as the put returns — the cross-process warm-hit
+    /// guarantee the wire tier's CI lane asserts.
     pub fn put_result(&self, req: &GenRequest, result: &GenResult) -> Result<usize> {
-        self.put_typed(request_key(self.key_hash, req), result)
+        let evicted = self.put_typed(request_key(self.key_hash, req), result)?;
+        self.store.flush()?;
+        Ok(evicted)
     }
 }
 

@@ -29,11 +29,45 @@
 //!   are deleted during the scan.
 //!
 //! Neither path can make [`Store::open`] panic.
+//!
+//! ## Multi-process sharing (the lock protocol)
+//!
+//! N processes (e.g. several `sd-acc serve --listen` instances) may
+//! open one cache directory. Three mechanisms make that safe:
+//!
+//! 1. **Advisory index lock** (`<dir>/index.lock`): an `O_EXCL`
+//!    lockfile taken around every index load-merge-write sequence —
+//!    open, persist, gc, and the read-through reload. Acquisition
+//!    retries with a bounded backoff, breaks locks older than
+//!    [`LOCK_STALE`] (a crashed holder must not wedge the fleet), and
+//!    after [`LOCK_TIMEOUT`] proceeds unlocked — `write_atomic` still
+//!    guarantees an untorn file, the lock only guarantees no *lost*
+//!    foreign entries.
+//! 2. **Merge-on-commit**: before writing the index, the on-disk copy
+//!    is re-read under the lock and union-merged into memory. A
+//!    disk-only entry is adopted iff its payload file exists (payload
+//!    writes always precede index commits, so an existing payload is
+//!    ground truth; a missing one means *we* deleted the entry and the
+//!    disk copy predates our removal). Clocks merge by max.
+//! 3. **Read-through on miss**: a `get` that misses in memory stats
+//!    `index.json` (mtime + length) and, when it changed since our
+//!    last sync, reloads and merges under the lock before declaring
+//!    the miss — so an entry committed by a sibling process is served
+//!    without reopening the store.
+//!
+//! In front of the disk sits an optional process-wide [`MemTier`] — a
+//! bounded write-through LRU of payload bytes shared by every `Store`
+//! opened on the same canonical directory in this process. Payloads
+//! are content-addressed, so a stale tier entry can only ever hold the
+//! same bytes the disk held; the tier is invalidated wholesale on
+//! version-skew flush and `clear` (which the manifest-mismatch rule in
+//! `namespaces.rs` routes through).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime};
 
 use anyhow::{bail, Context, Result};
 
@@ -56,6 +90,18 @@ pub const DEFAULT_MAX_ENTRIES: usize = 65_536;
 /// path already tolerates.
 const PERSIST_EVERY: u32 = 16;
 
+/// Default byte cap for the shared in-memory payload tier; 0 disables.
+pub const DEFAULT_MEM_TIER_BYTES: u64 = 32 * 1024 * 1024;
+
+/// Backoff between lock-acquisition attempts.
+const LOCK_RETRY: Duration = Duration::from_millis(2);
+/// Give up acquiring after this long and proceed unlocked (the file
+/// write is still atomic; only merge freshness degrades).
+const LOCK_TIMEOUT: Duration = Duration::from_secs(2);
+/// A lockfile older than this belongs to a crashed holder: break it.
+/// Index writes hold the lock for one read-merge-write, far under this.
+const LOCK_STALE: Duration = Duration::from_secs(5);
+
 /// Store configuration (the `ServerConfig`/CLI cache knobs map to this).
 #[derive(Debug, Clone)]
 pub struct StoreConfig {
@@ -71,6 +117,11 @@ pub struct StoreConfig {
     /// `request` namespace, whose latents age out while calibration and
     /// plan artifacts persist.
     pub ttl_secs: BTreeMap<String, u64>,
+    /// Byte cap for the process-wide shared [`MemTier`] in front of the
+    /// disk store (0 disables it). Stores opened on the same canonical
+    /// directory share one tier regardless of their configured caps;
+    /// the first open fixes the tier's size.
+    pub mem_tier_bytes: u64,
 }
 
 impl StoreConfig {
@@ -80,7 +131,14 @@ impl StoreConfig {
             max_bytes: DEFAULT_MAX_BYTES,
             max_entries: DEFAULT_MAX_ENTRIES,
             ttl_secs: BTreeMap::new(),
+            mem_tier_bytes: DEFAULT_MEM_TIER_BYTES,
         }
+    }
+
+    /// Set the shared in-memory tier's byte cap (0 disables the tier).
+    pub fn with_mem_tier_bytes(mut self, mem_tier_bytes: u64) -> StoreConfig {
+        self.mem_tier_bytes = mem_tier_bytes;
+        self
     }
 
     pub fn with_max_bytes(mut self, max_bytes: u64) -> StoreConfig {
@@ -132,6 +190,10 @@ struct Inner {
     dirty: bool,
     /// Puts since the last index persist (see [`PERSIST_EVERY`]).
     pending_puts: u32,
+    /// `(mtime, len)` of `index.json` at our last load/merge/write —
+    /// the cheap change detector for foreign commits. `None` before
+    /// the first sync or when the file is absent.
+    disk_stamp: Option<(SystemTime, u64)>,
 }
 
 impl Inner {
@@ -142,6 +204,7 @@ impl Inner {
             meta: BTreeMap::new(),
             dirty: true,
             pending_puts: 0,
+            disk_stamp: None,
         }
     }
 }
@@ -180,10 +243,190 @@ pub struct GcReport {
     pub expired: usize,
 }
 
+// ------------------------------------------------------------- mem tier
+
+/// Process-wide shared in-memory payload tier: a bounded write-through
+/// LRU of raw payload bytes in front of the disk store. One instance
+/// exists per canonical cache directory per process (see
+/// [`mem_tier_for`]), so two `Store` handles — or two server clients —
+/// opened on the same directory serve each other's recent payloads
+/// without touching the filesystem.
+///
+/// Payloads are content-addressed by [`CacheKey`], so a tier entry can
+/// never disagree with what the disk held for that key; staleness after
+/// a foreign delete only re-serves bytes that were valid moments ago.
+/// Structural invalidation (version skew, manifest-mismatch `clear`)
+/// empties the tier wholesale.
+pub struct MemTier {
+    max_bytes: u64,
+    inner: Mutex<MemInner>,
+}
+
+#[derive(Default)]
+struct MemInner {
+    /// (namespace, key) -> (payload, last_used).
+    map: BTreeMap<(String, CacheKey), (Vec<u8>, u64)>,
+    bytes: u64,
+    clock: u64,
+    hits: u64,
+}
+
+impl MemTier {
+    fn new(max_bytes: u64) -> MemTier {
+        MemTier { max_bytes, inner: Mutex::new(MemInner::default()) }
+    }
+
+    fn get(&self, ns: &str, key: CacheKey) -> Option<Vec<u8>> {
+        let mut m = self.inner.lock().unwrap();
+        m.clock += 1;
+        let clock = m.clock;
+        let out = m.map.get_mut(&(ns.to_string(), key)).map(|(bytes, last_used)| {
+            *last_used = clock;
+            bytes.clone()
+        });
+        if out.is_some() {
+            m.hits += 1;
+        }
+        out
+    }
+
+    fn put(&self, ns: &str, key: CacheKey, payload: &[u8]) {
+        if payload.len() as u64 > self.max_bytes {
+            return; // a single oversized payload must not flush the tier
+        }
+        let mut m = self.inner.lock().unwrap();
+        m.clock += 1;
+        let clock = m.clock;
+        if let Some((old, _)) = m.map.insert(
+            (ns.to_string(), key),
+            (payload.to_vec(), clock),
+        ) {
+            m.bytes -= old.len() as u64;
+        }
+        m.bytes += payload.len() as u64;
+        while m.bytes > self.max_bytes {
+            let victim = m
+                .map
+                .iter()
+                .min_by_key(|(_, (_, last_used))| *last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some((bytes, _)) = m.map.remove(&k) {
+                        m.bytes -= bytes.len() as u64;
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn remove(&self, ns: &str, key: CacheKey) {
+        let mut m = self.inner.lock().unwrap();
+        if let Some((bytes, _)) = m.map.remove(&(ns.to_string(), key)) {
+            m.bytes -= bytes.len() as u64;
+        }
+    }
+
+    fn purge_namespace(&self, ns: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.map.retain(|(n, _), _| n.as_str() != ns);
+        m.bytes = m.map.values().map(|(b, _)| b.len() as u64).sum();
+    }
+
+    fn clear(&self) {
+        let mut m = self.inner.lock().unwrap();
+        m.map.clear();
+        m.bytes = 0;
+    }
+
+    /// `(entries, bytes, hits)` — observability/tests only.
+    pub fn stats(&self) -> (usize, u64, u64) {
+        let m = self.inner.lock().unwrap();
+        (m.map.len(), m.bytes, m.hits)
+    }
+}
+
+/// Per-process registry mapping canonical cache dirs to their shared
+/// [`MemTier`]. The first open of a directory fixes the tier size.
+fn mem_tier_for(dir: &Path, max_bytes: u64) -> Option<Arc<MemTier>> {
+    if max_bytes == 0 {
+        return None;
+    }
+    static REGISTRY: Mutex<BTreeMap<PathBuf, Arc<MemTier>>> = Mutex::new(BTreeMap::new());
+    let key = std::fs::canonicalize(dir).unwrap_or_else(|_| dir.to_path_buf());
+    let mut reg = REGISTRY.lock().unwrap();
+    Some(Arc::clone(
+        reg.entry(key).or_insert_with(|| Arc::new(MemTier::new(max_bytes))),
+    ))
+}
+
+// ------------------------------------------------------------ index lock
+
+/// Advisory cross-process lock over the index: an `O_EXCL` lockfile
+/// (`<dir>/index.lock`) holding the owner's pid. See the module docs
+/// for the protocol; acquisition breaks stale locks and, after
+/// [`LOCK_TIMEOUT`], degrades to unlocked operation rather than wedge
+/// the serving path.
+struct IndexLock {
+    path: PathBuf,
+    held: bool,
+}
+
+impl IndexLock {
+    fn acquire(dir: &Path) -> IndexLock {
+        let path = dir.join("index.lock");
+        let deadline = Instant::now() + LOCK_TIMEOUT;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    use std::io::Write;
+                    let _ = write!(f, "{}", std::process::id());
+                    return IndexLock { path, held: true };
+                }
+                Err(_) => {
+                    let stale = std::fs::metadata(&path)
+                        .ok()
+                        .and_then(|md| md.modified().ok())
+                        .and_then(|m| m.elapsed().ok())
+                        .map_or(false, |age| age > LOCK_STALE);
+                    if stale {
+                        // Remove-then-retry: only one of N waiters'
+                        // `create_new` calls can win afterwards.
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    if Instant::now() >= deadline {
+                        return IndexLock { path, held: false };
+                    }
+                    std::thread::sleep(LOCK_RETRY);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for IndexLock {
+    fn drop(&mut self) {
+        if self.held {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// `(mtime, len)` of a file — the cheap change detector behind the
+/// cross-process read-through. `None` when the file is absent.
+fn file_stamp(path: &Path) -> Option<(SystemTime, u64)> {
+    std::fs::metadata(path)
+        .ok()
+        .map(|m| (m.modified().unwrap_or(SystemTime::UNIX_EPOCH), m.len()))
+}
+
 /// Content-addressed persistent store with LRU + byte-cap eviction.
 pub struct Store {
     cfg: StoreConfig,
     inner: Mutex<Inner>,
+    mem: Option<Arc<MemTier>>,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -197,11 +440,23 @@ impl Store {
     pub fn open(cfg: StoreConfig) -> Result<Store> {
         std::fs::create_dir_all(&cfg.dir)
             .with_context(|| format!("creating cache dir {}", cfg.dir.display()))?;
-        let inner = match load_index(&index_path(&cfg.dir)) {
-            IndexState::Loaded(inner) => inner,
+        // After create_dir_all so the registry keys on the canonical path.
+        let mem = mem_tier_for(&cfg.dir, cfg.mem_tier_bytes);
+        let lock = IndexLock::acquire(&cfg.dir);
+        let idx = index_path(&cfg.dir);
+        let inner = match load_index(&idx) {
+            IndexState::Loaded(mut inner) => {
+                inner.disk_stamp = file_stamp(&idx);
+                inner
+            }
             IndexState::VersionSkew => {
                 for d in namespace_dirs(&cfg.dir) {
                     let _ = std::fs::remove_dir_all(&d);
+                }
+                // Old-generation payload bytes must not be served from
+                // memory either.
+                if let Some(m) = &mem {
+                    m.clear();
                 }
                 Inner::empty()
             }
@@ -210,6 +465,7 @@ impl Store {
         let store = Store {
             cfg,
             inner: Mutex::new(inner),
+            mem,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -217,11 +473,19 @@ impl Store {
         {
             // Re-enforce caps (the configured caps may have shrunk since
             // the index was written) and persist the recovered state.
+            // Still under the open-wide index lock, so use the
+            // non-acquiring persist.
             let mut inner = store.inner.lock().unwrap();
             store.evict_locked(&mut inner);
-            store.persist_locked(&mut inner)?;
+            store.persist_under_flock(&mut inner)?;
         }
+        drop(lock);
         Ok(store)
+    }
+
+    /// `(entries, bytes, hits)` of the shared in-memory tier, if enabled.
+    pub fn mem_tier_stats(&self) -> Option<(usize, u64, u64)> {
+        self.mem.as_ref().map(|m| m.stats())
     }
 
     pub fn config(&self) -> &StoreConfig {
@@ -249,6 +513,14 @@ impl Store {
     pub fn get(&self, ns: &str, key: CacheKey) -> Option<Vec<u8>> {
         let mut inner = self.inner.lock().unwrap();
         let map_key = (ns.to_string(), key);
+        if !inner.entries.contains_key(&map_key)
+            && file_stamp(&index_path(&self.cfg.dir)) != inner.disk_stamp
+        {
+            // Read-through: the on-disk index changed since our last
+            // sync, so a sibling process may have committed this entry.
+            let _lock = IndexLock::acquire(&self.cfg.dir);
+            self.merge_disk_locked(&mut inner);
+        }
         let expired = match inner.entries.get(&map_key) {
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -258,6 +530,7 @@ impl Store {
         };
         if expired {
             inner.entries.remove(&map_key);
+            self.mem_remove(ns, key);
             let _ = std::fs::remove_file(self.payload_path(ns, key));
             // Lazily persisted (unlike structural removals): expiry can
             // run on the request hot path, and a stale index entry whose
@@ -268,7 +541,19 @@ impl Store {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return None;
         }
-        match std::fs::read(self.payload_path(ns, key)) {
+        // Shared memory tier first (expiry above still gates it — the
+        // tier never resurrects an index-expired entry); fall back to
+        // the payload file and populate the tier on the way out.
+        let read = match self.mem.as_ref().and_then(|m| m.get(ns, key)) {
+            Some(bytes) => Ok(bytes),
+            None => std::fs::read(self.payload_path(ns, key)).map(|bytes| {
+                if let Some(m) = &self.mem {
+                    m.put(ns, key, &bytes);
+                }
+                bytes
+            }),
+        };
+        match read {
             Ok(bytes) => {
                 inner.clock += 1;
                 let clock = inner.clock;
@@ -282,6 +567,7 @@ impl Store {
             Err(_) => {
                 // Payload vanished underneath us: self-heal the index.
                 inner.entries.remove(&map_key);
+                self.mem_remove(ns, key);
                 inner.dirty = true;
                 let _ = self.persist_locked(&mut inner);
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -304,6 +590,9 @@ impl Store {
         std::fs::create_dir_all(parent)
             .with_context(|| format!("creating {}", parent.display()))?;
         write_atomic(&path, payload)?;
+        if let Some(m) = &self.mem {
+            m.put(ns, key, payload); // write-through
+        }
 
         inner.clock += 1;
         let clock = inner.clock;
@@ -327,6 +616,7 @@ impl Store {
     pub fn remove(&self, ns: &str, key: CacheKey) -> bool {
         let mut inner = self.inner.lock().unwrap();
         let existed = inner.entries.remove(&(ns.to_string(), key)).is_some();
+        self.mem_remove(ns, key);
         let _ = std::fs::remove_file(self.payload_path(ns, key));
         if existed {
             inner.dirty = true;
@@ -344,11 +634,17 @@ impl Store {
             Some(ns) => {
                 inner.entries.retain(|(n, _), _| n.as_str() != ns);
                 let _ = std::fs::remove_dir_all(self.cfg.dir.join(ns));
+                if let Some(m) = &self.mem {
+                    m.purge_namespace(ns);
+                }
             }
             None => {
                 inner.entries.clear();
                 for d in namespace_dirs(&self.cfg.dir) {
                     let _ = std::fs::remove_dir_all(d);
+                }
+                if let Some(m) = &self.mem {
+                    m.clear();
                 }
             }
         }
@@ -364,6 +660,13 @@ impl Store {
         let mut inner = self.inner.lock().unwrap();
         let mut report = GcReport::default();
 
+        // Hold the index lock across the whole pass: the merge below
+        // adopts sibling-committed entries so the orphan sweep cannot
+        // mistake their payloads for garbage, and no sibling can commit
+        // an index between our sweeps and our persist.
+        let _lock = IndexLock::acquire(&self.cfg.dir);
+        self.merge_disk_locked(&mut inner);
+
         // 0. Entries past their namespace TTL.
         let now = now_unix();
         let expired: Vec<(String, CacheKey)> = inner
@@ -375,6 +678,7 @@ impl Store {
         report.expired = expired.len();
         for (ns, key) in expired {
             let _ = std::fs::remove_file(self.payload_path(&ns, key));
+            self.mem_remove(&ns, key);
             inner.entries.remove(&(ns, key));
         }
 
@@ -387,12 +691,16 @@ impl Store {
             .collect();
         report.dropped_missing = missing.len();
         for k in missing {
+            self.mem_remove(&k.0, k.1);
             inner.entries.remove(&k);
         }
 
-        // 2. Files on disk that the index does not claim.
+        // 2. Files on disk that the index does not claim, plus stray
+        // temp files left by a writer that died mid-commit.
+        sweep_stray_tmps(&self.cfg.dir);
         for dir in namespace_dirs(&self.cfg.dir) {
             let ns = dir.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+            sweep_stray_tmps(&dir);
             for (path, key) in payload_files(&dir) {
                 if !inner.entries.contains_key(&(ns.clone(), key)) {
                     let _ = std::fs::remove_file(path);
@@ -405,7 +713,7 @@ impl Store {
         report.evicted = self.evict_locked(&mut inner);
 
         inner.dirty = true;
-        self.persist_locked(&mut inner)?;
+        self.persist_under_flock(&mut inner)?;
         Ok(report)
     }
 
@@ -471,6 +779,7 @@ impl Store {
         for &i in &plan {
             let (ns, key) = &keys[i];
             inner.entries.remove(&(ns.clone(), *key));
+            self.mem_remove(ns, *key);
             let _ = std::fs::remove_file(self.payload_path(ns, *key));
         }
         if !plan.is_empty() {
@@ -480,10 +789,66 @@ impl Store {
         plan.len()
     }
 
+    /// Drop a key from the shared memory tier, if the tier is enabled.
+    fn mem_remove(&self, ns: &str, key: CacheKey) {
+        if let Some(m) = &self.mem {
+            m.remove(ns, key);
+        }
+    }
+
+    /// Union-merge the on-disk index into memory. Caller must hold the
+    /// [`IndexLock`] (or be on a path where freshness loss is accepted).
+    /// See the module docs: disk-only entries are adopted iff their
+    /// payload file exists; clocks merge by max; our meta wins.
+    fn merge_disk_locked(&self, inner: &mut Inner) {
+        let path = index_path(&self.cfg.dir);
+        let stamp = file_stamp(&path);
+        if stamp == inner.disk_stamp {
+            return; // nothing foreign happened since our last sync
+        }
+        if let IndexState::Loaded(disk) = load_index(&path) {
+            inner.clock = inner.clock.max(disk.clock);
+            for (k, v) in disk.entries {
+                match inner.entries.get_mut(&k) {
+                    Some(ours) => {
+                        ours.last_used = ours.last_used.max(v.last_used);
+                    }
+                    None => {
+                        // Payload writes precede index commits, so an
+                        // existing payload marks a real foreign entry; a
+                        // missing one means *we* removed it and the disk
+                        // index predates that removal.
+                        if self.payload_path(&k.0, k.1).exists() {
+                            inner.entries.insert(k, v);
+                            inner.dirty = true;
+                        }
+                    }
+                }
+            }
+            for (k, v) in disk.meta {
+                inner.meta.entry(k).or_insert(v);
+            }
+        }
+        inner.disk_stamp = stamp;
+    }
+
+    /// Acquire the cross-process index lock, then merge + persist.
     fn persist_locked(&self, inner: &mut Inner) -> Result<()> {
         if !inner.dirty {
             return Ok(());
         }
+        let _lock = IndexLock::acquire(&self.cfg.dir);
+        self.persist_under_flock(inner)
+    }
+
+    /// Merge + persist for callers already holding the index lock
+    /// (`open`, `gc`). [`IndexLock`] is not re-entrant, so this must not
+    /// try to acquire it again.
+    fn persist_under_flock(&self, inner: &mut Inner) -> Result<()> {
+        if !inner.dirty {
+            return Ok(());
+        }
+        self.merge_disk_locked(inner);
         let entries = Json::Arr(
             inner
                 .entries
@@ -509,6 +874,7 @@ impl Store {
             ("entries", entries),
         ]);
         write_atomic(&index_path(&self.cfg.dir), index.to_string().as_bytes())?;
+        inner.disk_stamp = file_stamp(&index_path(&self.cfg.dir));
         inner.dirty = false;
         inner.pending_puts = 0;
         Ok(())
@@ -528,13 +894,36 @@ fn index_path(dir: &Path) -> PathBuf {
     dir.join("index.json")
 }
 
-/// Write-then-rename so readers never observe a torn file.
+/// Write-then-rename so readers never observe a torn file. The temp
+/// name carries pid + a process-local sequence number so concurrent
+/// writers (threads *or* sibling processes) never collide on it; a
+/// writer that dies mid-commit leaves a stray `*.tmp.*` that `gc`
+/// sweeps.
 fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
-    let tmp = path.with_extension("tmp");
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp.{}.{}", std::process::id(), n));
     std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
     std::fs::rename(&tmp, path)
         .with_context(|| format!("renaming {} into place", tmp.display()))?;
     Ok(())
+}
+
+/// Delete stray `*.tmp.*` files (dead writers' leftovers) directly
+/// inside `dir` — non-recursive; `gc` calls it per directory.
+fn sweep_stray_tmps(dir: &Path) {
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.is_file()
+                && p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map_or(false, |n| n.contains(".tmp."))
+            {
+                let _ = std::fs::remove_file(&p);
+            }
+        }
+    }
 }
 
 /// How an on-disk index read went.
@@ -597,6 +986,7 @@ fn load_index(path: &Path) -> IndexState {
         meta,
         dirty: false,
         pending_puts: 0,
+        disk_stamp: None,
     })
 }
 
@@ -635,7 +1025,7 @@ fn scan_payloads(dir: &Path) -> Inner {
             );
         }
     }
-    Inner { entries, clock, meta: BTreeMap::new(), dirty: true, pending_puts: 0 }
+    Inner { entries, clock, meta: BTreeMap::new(), dirty: true, pending_puts: 0, disk_stamp: None }
 }
 
 /// Delete pre-v3 `<hex>.json` payload files found during a scan — they
@@ -958,6 +1348,121 @@ mod tests {
         }
         let store = Store::open(StoreConfig::new(&dir)).unwrap();
         assert_eq!(store.meta("manifest_hash").as_deref(), Some("abc123"));
+    }
+
+    #[test]
+    fn index_lock_acquires_releases_and_degrades_on_foreign_hold() {
+        let dir = tmp_dir("lockrt");
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            let l = IndexLock::acquire(&dir);
+            assert!(l.held);
+            assert!(dir.join("index.lock").exists());
+        }
+        assert!(!dir.join("index.lock").exists(), "drop releases the lock");
+
+        // A fresh foreign lock (not stale yet) must not wedge us: after
+        // LOCK_TIMEOUT, acquisition degrades to unlocked operation and
+        // the foreign lockfile is left alone.
+        std::fs::write(dir.join("index.lock"), "424242").unwrap();
+        let l = IndexLock::acquire(&dir);
+        assert!(!l.held, "fresh foreign lock should degrade, not break");
+        drop(l);
+        assert!(dir.join("index.lock").exists(), "unheld guard must not remove a foreign lock");
+        assert_eq!(std::fs::read_to_string(dir.join("index.lock")).unwrap(), "424242");
+        let _ = std::fs::remove_file(dir.join("index.lock"));
+    }
+
+    #[test]
+    fn mem_tier_is_a_bounded_lru() {
+        let tier = MemTier::new(100);
+        tier.put("ns", CacheKey(1), &[1u8; 40]);
+        tier.put("ns", CacheKey(2), &[2u8; 40]);
+        // Touch 1 so 2 becomes the victim when 3 overflows the cap.
+        assert_eq!(tier.get("ns", CacheKey(1)).as_deref(), Some(&[1u8; 40][..]));
+        tier.put("ns", CacheKey(3), &[3u8; 40]);
+        assert!(tier.get("ns", CacheKey(1)).is_some());
+        assert!(tier.get("ns", CacheKey(2)).is_none(), "LRU victim evicted");
+        assert!(tier.get("ns", CacheKey(3)).is_some());
+        let (entries, bytes, _) = tier.stats();
+        assert_eq!(entries, 2);
+        assert!(bytes <= 100, "cap breached: {bytes}");
+        // An oversized payload is refused rather than flushing the tier.
+        tier.put("ns", CacheKey(4), &[4u8; 101]);
+        assert!(tier.get("ns", CacheKey(4)).is_none());
+        assert!(tier.get("ns", CacheKey(1)).is_some(), "tier survived oversize put");
+        // Replacement does not double-count bytes.
+        tier.put("ns", CacheKey(1), &[9u8; 10]);
+        let (_, bytes, _) = tier.stats();
+        assert!(bytes <= 100);
+    }
+
+    #[test]
+    fn mem_tier_serves_sibling_handles_from_memory() {
+        let dir = tmp_dir("memtier");
+        let a = Store::open(StoreConfig::new(&dir)).unwrap();
+        let b = Store::open(StoreConfig::new(&dir)).unwrap();
+        a.put("req", CacheKey(1), b"{\"v\":1}").unwrap();
+        a.flush().unwrap();
+        let (_, _, hits_before) = b.mem_tier_stats().unwrap();
+        // b never saw this put: the entry arrives via the read-through
+        // index merge and the bytes via the shared memory tier.
+        assert_eq!(b.get("req", CacheKey(1)).as_deref(), Some(&b"{\"v\":1}"[..]));
+        let (_, _, hits_after) = b.mem_tier_stats().unwrap();
+        assert!(hits_after > hits_before, "payload should come from the shared tier");
+    }
+
+    #[test]
+    fn mem_tier_disabled_with_zero_budget() {
+        let dir = tmp_dir("memoff");
+        let store = Store::open(StoreConfig::new(&dir).with_mem_tier_bytes(0)).unwrap();
+        assert!(store.mem_tier_stats().is_none());
+        store.put("req", CacheKey(1), b"{}").unwrap();
+        assert_eq!(store.get("req", CacheKey(1)).as_deref(), Some(&b"{}"[..]));
+    }
+
+    #[test]
+    fn sibling_commits_are_visible_and_deletes_are_not_resurrected() {
+        let dir = tmp_dir("sibling");
+        let a = Store::open(StoreConfig::new(&dir).with_mem_tier_bytes(0)).unwrap();
+        let b = Store::open(StoreConfig::new(&dir).with_mem_tier_bytes(0)).unwrap();
+
+        // Commit via a; b picks it up without reopening.
+        a.put("req", CacheKey(1), b"{\"a\":1}").unwrap();
+        a.flush().unwrap();
+        assert_eq!(b.get("req", CacheKey(1)).as_deref(), Some(&b"{\"a\":1}"[..]));
+
+        // And the reverse direction.
+        b.put("req", CacheKey(2), b"{\"b\":2}").unwrap();
+        b.flush().unwrap();
+        assert_eq!(a.get("req", CacheKey(2)).as_deref(), Some(&b"{\"b\":2}"[..]));
+
+        // a removes an entry; b's next flush must not resurrect it from
+        // its in-memory copy into a servable state (payload is gone, so
+        // any stale index entry self-heals to a miss).
+        a.remove("req", CacheKey(1));
+        b.flush().unwrap();
+        assert!(b.get("req", CacheKey(1)).is_none(), "deleted entry must stay deleted");
+        assert!(a.get("req", CacheKey(1)).is_none());
+
+        // A fresh handle sees exactly the surviving entry.
+        let c = Store::open(StoreConfig::new(&dir).with_mem_tier_bytes(0)).unwrap();
+        assert!(c.get("req", CacheKey(2)).is_some());
+        assert!(c.get("req", CacheKey(1)).is_none());
+    }
+
+    #[test]
+    fn gc_sweeps_stray_tmp_files() {
+        let dir = tmp_dir("tmpsweep");
+        let store = Store::open(StoreConfig::new(&dir)).unwrap();
+        store.put("req", CacheKey(1), b"{}").unwrap();
+        // A dead writer's leftovers, in the root and in a namespace dir.
+        std::fs::write(dir.join("index.tmp.999.0"), "{").unwrap();
+        std::fs::write(dir.join("req").join("dead.tmp.999.1"), "junk").unwrap();
+        store.gc().unwrap();
+        assert!(!dir.join("index.tmp.999.0").exists());
+        assert!(!dir.join("req").join("dead.tmp.999.1").exists());
+        assert!(store.get("req", CacheKey(1)).is_some(), "live entry untouched");
     }
 
     #[test]

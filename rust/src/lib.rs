@@ -192,11 +192,57 @@
 //! all track operand widths), fake-quant emulation on the serving path
 //! (requests carry an optional `QuantScheme` that participates in
 //! batching and cache keys), and a `sd-acc quant` CLI subcommand.
+//!
+//! ## Wire transport ([`net`])
+//!
+//! `sd-acc serve --listen <addr>` exposes the job API over hand-rolled
+//! HTTP/1.1 — `std::net::TcpListener` + the crate's own thread pool,
+//! zero new dependencies. Routes:
+//!
+//! | method + path              | behaviour                                    |
+//! |----------------------------|----------------------------------------------|
+//! | `POST /v1/jobs`            | submit (JSON body) -> `202 {"job": "<id>"}`  |
+//! | `GET /v1/jobs/<id>/events` | SSE job-event stream (chunked transfer)      |
+//! | `DELETE /v1/jobs/<id>`     | fire the job's cancel token                  |
+//! | `GET /healthz`             | liveness                                     |
+//! | `GET /metrics`             | metrics JSON (+ autoscale advice, wire gauge)|
+//! | `POST /admin/shutdown`     | graceful drain                               |
+//!
+//! Each [`JobEvent`](server::JobEvent) becomes one SSE frame
+//! `event: <label>\ndata: <json>\n\n` — the same label vocabulary, the
+//! same order and the same exactly-one-terminal guarantee as the
+//! in-process `JobHandle` stream (the `done` frame carries a result
+//! summary + FNV-1a latent checksum rather than the latent itself).
+//! Structured errors map deterministically: `InvalidRequest` 400,
+//! `QueueFull` 429, `Cancelled` 499, `DeadlineExceeded` 504, `Runtime`
+//! 500; oversized headers/bodies are bounded at the parser (431/413).
+//! A client that disconnects mid-stream cancels its job — no orphaned
+//! work, no leaked registry entry.
+//!
+//! N serve processes may share one `--cache` directory: the store
+//! serializes every index load-merge-write under an advisory
+//! `index.lock` file (stale locks broken, lock-free degradation after
+//! a bounded wait), commits are merge-on-write (disk-only entries are
+//! adopted only when their payload file exists), and misses re-read
+//! the index before being declared — so a second process's identical
+//! request is a cross-process `cache-hit`. A per-process in-memory
+//! LRU tier in front of the disk store makes repeated hits cheap. See
+//! `cache::store`'s "Multi-process sharing" docs for the protocol.
+//!
+//! Quickstart:
+//!
+//! ```text
+//! sd-acc serve --listen 127.0.0.1:8460 --cache /tmp/sd-cache &
+//! sd-acc request --addr 127.0.0.1:8460 --prompt "a red fox" --seed 7 --steps 8
+//! curl -N http://127.0.0.1:8460/v1/jobs/<id>/events   # raw SSE
+//! sd-acc request --addr 127.0.0.1:8460 --shutdown
+//! ```
 
 pub mod cache;
 pub mod coordinator;
 pub mod hwsim;
 pub mod models;
+pub mod net;
 pub mod obs;
 pub mod pas;
 pub mod quality;

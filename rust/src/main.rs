@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   generate   text-to-image via the PJRT runtime (original or PAS)
-//!   serve      drive a synthetic workload through the job-API server
+//!   serve      drive a synthetic workload through the job-API server,
+//!              or expose it over HTTP/1.1 + SSE with --listen
+//!   request    submit/stream/cancel a job against a --listen server
 //!   calibrate  measure shift scores, D*, outliers (Fig. 4 / Eq. 1-2)
 //!   simulate   run the accelerator performance model on a real SD arch
 //!   quant      mixed precision: calibrate | search | report
@@ -47,6 +49,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "generate" => cmd_generate(rest),
         "serve" => cmd_serve(rest),
+        "request" => cmd_request(rest),
         "calibrate" => cmd_calibrate(rest),
         "simulate" => cmd_simulate(rest),
         "quant" => cmd_quant(rest),
@@ -71,7 +74,7 @@ fn main() -> ExitCode {
 fn print_help() {
     println!(
         "sd-acc {} — SD-Acc reproduction (phase-aware sampling + HW co-design)\n\n\
-         usage: sd-acc <generate|serve|calibrate|simulate|quant|cache|trace|info> [options]\n\
+         usage: sd-acc <generate|serve|request|calibrate|simulate|quant|cache|trace|info> [options]\n\
          run a subcommand with --help for its options",
         sd_acc::util::VERSION
     );
@@ -372,6 +375,10 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "shed-low", help: "shed Low-priority work when smoothed queue depth exceeds N", takes_value: true, default: None },
         OptSpec { name: "brownout", help: "brownout thresholds ENTER:EXIT on smoothed queue depth", takes_value: true, default: None },
         OptSpec { name: "hedge-ms", help: "hedge straggler batches after N ms (0 = off)", takes_value: true, default: Some("0") },
+        OptSpec { name: "listen", help: "serve the job API over HTTP/1.1 + SSE on this address (e.g. 127.0.0.1:8460) instead of driving a synthetic workload", takes_value: true, default: None },
+        OptSpec { name: "http-threads", help: "wire connection threads (SSE streams hold one each)", takes_value: true, default: Some("8") },
+        OptSpec { name: "slo-p95", help: "arm autoscale advice: windowed p95 target in ms", takes_value: true, default: None },
+        OptSpec { name: "slo-miss-rate", help: "arm autoscale advice: windowed deadline-miss-rate target (0..1)", takes_value: true, default: None },
         OptSpec { name: "artifacts", help: "artifacts dir", takes_value: true, default: None },
         backend_opt(),
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
@@ -420,6 +427,33 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
     if hedge_ms > 0 {
         resilience.hedge_after = Some(Duration::from_millis(hedge_ms));
     }
+    // SLO autoscale advice: armed iff a target is given; either flag
+    // alone keeps the other at its policy default.
+    let scale_policy = {
+        use sd_acc::obs::slo::ScalePolicy;
+        let p95 = args.get_f64("slo-p95")?;
+        let miss = args.get_f64("slo-miss-rate")?;
+        if p95.is_some() || miss.is_some() {
+            let mut policy = ScalePolicy::default();
+            if let Some(v) = p95 {
+                policy.p95_target_ms = v;
+            }
+            if let Some(v) = miss {
+                policy.miss_rate_target = v;
+            }
+            Some(policy)
+        } else {
+            None
+        }
+    };
+    let listen = args.get("listen").map(str::to_string);
+    // Wire-served job ids are salted with the pid (high 32 bits) so N
+    // processes sharing one cache dir emit trace- and wire-distinct ids.
+    let job_id_base = if listen.is_some() {
+        obs::compose_job_id(std::process::id(), 0)
+    } else {
+        0
+    };
     let server = Server::start(
         Arc::new(coord),
         ServerConfig {
@@ -429,6 +463,8 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
             max_queue: args.get_usize("max-queue")?.unwrap(),
             trace: trace.as_ref().map(|(sink, _)| Arc::clone(sink)),
             resilience,
+            job_id_base,
+            scale_policy,
         },
     );
     let client = server.client();
@@ -462,7 +498,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
                     "[monitor] window p50 {:.0} ms p95 {:.0} ms ({} done in window) | \
                      +{} full / +{} partial steps, +{} decodes | \
                      totals: {} done, {} miss, {} cancel, {} reject, depth {} | \
-                     resilience: {} retries, {} hedges, {} sheds, {} brownouts",
+                     resilience: {} retries, {} hedges, {} sheds, {} brownouts | scale: {}",
                     s.windowed_p50_ms,
                     s.windowed_p95_ms,
                     s.windowed_count,
@@ -477,13 +513,51 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
                     s.retries,
                     s.hedges,
                     s.sheds,
-                    s.brownout_transitions
+                    s.brownout_transitions,
+                    s.scale_advice.map(|a| a.as_str()).unwrap_or("unarmed")
                 );
             }
         }))
     } else {
         None
     };
+
+    // --listen: expose the job API over the wire instead of driving a
+    // synthetic workload. Blocks until `POST /admin/shutdown` (e.g.
+    // `sd-acc request --addr <addr> --shutdown`), then drains.
+    if let Some(listen) = &listen {
+        use sd_acc::net::WireServer;
+        let threads = args.get_usize("http-threads")?.unwrap().max(1);
+        let wire = WireServer::start(client, Arc::clone(&server.metrics), listen, threads)
+            .map_err(|e| format!("{e:#}"))?;
+        // The CI wire lane polls for this exact line before submitting.
+        println!("listening on {}", wire.addr());
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        wire.wait();
+        if let Some(h) = monitor {
+            mon_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            let _ = h.join();
+        }
+        let m = server.metrics.summary();
+        println!("\n== serve report ==");
+        println!(
+            "wire drained: {} done, {} cancelled, {} deadline misses, {} rejected",
+            m.completed, m.cancellations, m.deadline_misses, m.rejected
+        );
+        if m.cache_hits + m.cache_misses > 0 {
+            println!(
+                "request cache: {} hits, {} misses, {} evictions",
+                m.cache_hits, m.cache_misses, m.cache_evictions
+            );
+        }
+        if let Some((sink, path)) = &trace {
+            sink.flush();
+            println!("trace: {} spans -> {}", sink.recorded(), path.display());
+        }
+        server.shutdown();
+        return Ok(());
+    }
 
     let t0 = Instant::now();
     let mut ok = 0usize;
@@ -666,6 +740,112 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         );
     }
     server.shutdown();
+    Ok(())
+}
+
+// ------------------------------------------------------------------ request
+
+/// Wire client for a `serve --listen` process: submit a job and stream
+/// its SSE events (`event: <label>` per frame, exactly one
+/// `terminal: <label>` at the end), or hit the control endpoints.
+fn cmd_request(raw: &[String]) -> Result<(), String> {
+    use sd_acc::net::WireClient;
+    use sd_acc::util::json::Json;
+
+    let spec = [
+        OptSpec { name: "addr", help: "server address, e.g. 127.0.0.1:8460", takes_value: true, default: None },
+        OptSpec { name: "prompt", help: "prompt text", takes_value: true, default: Some("a red fox") },
+        OptSpec { name: "seed", help: "generation seed", takes_value: true, default: Some("7") },
+        OptSpec { name: "steps", help: "denoising steps", takes_value: true, default: Some("8") },
+        OptSpec { name: "guidance", help: "classifier-free guidance scale", takes_value: true, default: Some("7.5") },
+        OptSpec { name: "sampler", help: "sampler: ddim | pndm", takes_value: true, default: Some("pndm") },
+        OptSpec { name: "plan", help: "sampling plan: full | auto | pas:<t_sparse>", takes_value: true, default: Some("full") },
+        OptSpec { name: "quant", help: "mixed-precision scheme label (e.g. w8a8)", takes_value: true, default: None },
+        OptSpec { name: "priority", help: "high | normal | low", takes_value: true, default: Some("normal") },
+        OptSpec { name: "deadline-ms", help: "deadline budget in ms (0 = none)", takes_value: true, default: Some("0") },
+        OptSpec { name: "full-quality", help: "opt out of brownout degradation", takes_value: false, default: None },
+        OptSpec { name: "cancel-after-events", help: "DELETE the job after N streamed events", takes_value: true, default: None },
+        OptSpec { name: "healthz", help: "just probe GET /healthz", takes_value: false, default: None },
+        OptSpec { name: "metrics", help: "just print GET /metrics JSON", takes_value: false, default: None },
+        OptSpec { name: "shutdown", help: "just POST /admin/shutdown (graceful drain)", takes_value: false, default: None },
+        OptSpec { name: "help", help: "show usage", takes_value: false, default: None },
+    ];
+    let args = Args::parse(raw, &spec)?;
+    if args.flag("help") {
+        print!("{}", usage("sd-acc request", "drive a serve --listen endpoint", &spec));
+        return Ok(());
+    }
+    let addr = args.get("addr").ok_or("--addr is required (see serve --listen)")?;
+    let client = WireClient::new(addr);
+
+    if args.flag("healthz") {
+        let ok = client.healthz().map_err(|e| format!("{e:#}"))?;
+        println!("healthz: {}", if ok { "ok" } else { "not ok" });
+        return Ok(());
+    }
+    if args.flag("metrics") {
+        let m = client.metrics().map_err(|e| format!("{e:#}"))?;
+        println!("{}", m.to_string());
+        return Ok(());
+    }
+    if args.flag("shutdown") {
+        client.shutdown().map_err(|e| format!("{e:#}"))?;
+        println!("shutdown: ok");
+        return Ok(());
+    }
+
+    let mut fields = vec![
+        ("prompt", Json::str(args.get("prompt").unwrap())),
+        ("seed", Json::num(args.get_u64("seed")?.unwrap() as f64)),
+        ("steps", Json::num(args.get_usize("steps")?.unwrap() as f64)),
+        ("guidance", Json::num(args.get_f64("guidance")?.unwrap())),
+        ("sampler", Json::str(args.get("sampler").unwrap())),
+        ("plan", Json::str(args.get("plan").unwrap())),
+        ("priority", Json::str(args.get("priority").unwrap())),
+    ];
+    if let Some(q) = args.get("quant") {
+        fields.push(("quant", Json::str(q)));
+    }
+    let deadline_ms = args.get_u64("deadline-ms")?.unwrap();
+    if deadline_ms > 0 {
+        fields.push(("deadline_ms", Json::num(deadline_ms as f64)));
+    }
+    if args.flag("full-quality") {
+        fields.push(("degradable", Json::Bool(false)));
+    }
+    let body = Json::obj(fields);
+
+    let id = client.submit(&body).map_err(|e| format!("{e:#}"))?;
+    println!("job: {id}");
+    let cancel_after = args.get_usize("cancel-after-events")?;
+    let mut seen = 0usize;
+    let events = client
+        .stream(id, |ev| {
+            println!("event: {}", ev.label);
+            seen += 1;
+            if cancel_after == Some(seen) {
+                // Cancellation races the running job by design; the
+                // stream still ends in exactly one terminal event.
+                if let Err(e) = client.cancel(id) {
+                    eprintln!("cancel failed: {e:#}");
+                }
+            }
+            true
+        })
+        .map_err(|e| format!("{e:#}"))?;
+    let last = events.last().filter(|e| e.is_terminal()).ok_or_else(|| {
+        format!("stream for job {id} ended without a terminal event ({} events)", events.len())
+    })?;
+    println!("terminal: {}", last.label);
+    if last.label == "done" {
+        println!(
+            "done: {} steps, {:.1} ms, mac x{:.2}, latent_fnv {}",
+            last.data.get_usize("steps").unwrap_or(0),
+            last.data.get_f64("total_ms").unwrap_or(0.0),
+            last.data.get_f64("mac_reduction").unwrap_or(0.0),
+            last.data.get_str("latent_fnv").unwrap_or("?"),
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,218 @@
+//! Blocking wire client for the job API — used by `sd-acc request`,
+//! the integration suite and `ci.sh`'s wire lane. One TCP connection
+//! per call (the server closes after every response), no dependencies
+//! beyond `std::net`.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::http::{self, ChunkedReader, PrefixedReader};
+
+/// How long connect / single-shot request-response calls may take. SSE
+/// streams are exempt: they block as long as the job runs.
+const CALL_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One wire event as observed by the client: the SSE `event:` label and
+/// the parsed `data:` object.
+#[derive(Debug, Clone)]
+pub struct WireEvent {
+    pub label: String,
+    pub data: Json,
+}
+
+impl WireEvent {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.label.as_str(), "done" | "failed" | "cancelled")
+    }
+}
+
+/// Blocking client bound to one server address.
+pub struct WireClient {
+    addr: String,
+}
+
+impl WireClient {
+    pub fn new(addr: impl Into<String>) -> WireClient {
+        WireClient { addr: addr.into() }
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting to {}", self.addr))?;
+        let _ = stream.set_read_timeout(Some(CALL_TIMEOUT));
+        Ok(stream)
+    }
+
+    fn write_request(
+        stream: &mut TcpStream,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<()> {
+        let body = body.map(|j| j.to_string()).unwrap_or_default();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: sd-acc\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+        Ok(())
+    }
+
+    /// One request-response call; returns `(status, parsed body)`.
+    /// Empty bodies parse as `Json::Null`.
+    pub fn call(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        let mut stream = self.connect()?;
+        Self::write_request(&mut stream, method, path, body)?;
+        let resp = http::read_response(&mut stream)
+            .with_context(|| format!("reading response for {method} {path}"))?;
+        let json = if resp.body.is_empty() {
+            Json::Null
+        } else {
+            let text = std::str::from_utf8(&resp.body).context("non-utf8 response body")?;
+            Json::parse(text).map_err(|e| anyhow::anyhow!("bad response json: {e}"))?
+        };
+        Ok((resp.status, json))
+    }
+
+    fn expect_ok(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
+        let (status, json) = self.call(method, path, body)?;
+        if !(200..300).contains(&status) {
+            let msg = json.get_str("error").unwrap_or("(no error body)");
+            bail!("{method} {path} -> {status}: {msg}");
+        }
+        Ok(json)
+    }
+
+    /// Submit a job; returns the server-assigned job id.
+    pub fn submit(&self, body: &Json) -> Result<u64> {
+        let json = self.expect_ok("POST", "/v1/jobs", Some(body))?;
+        let id = json
+            .get_str("job")
+            .context("submit response missing 'job'")?;
+        id.parse::<u64>()
+            .with_context(|| format!("non-numeric job id '{id}'"))
+    }
+
+    /// Stream a job's events, invoking `on_event` per frame. If the
+    /// callback returns `false` the connection is dropped mid-stream
+    /// (the server then cancels the job). Returns all events observed.
+    pub fn stream<F>(&self, id: u64, mut on_event: F) -> Result<Vec<WireEvent>>
+    where
+        F: FnMut(&WireEvent) -> bool,
+    {
+        let mut stream = self.connect()?;
+        // SSE streams last as long as the job; only connect/head reads
+        // keep the short timeout.
+        let path = format!("/v1/jobs/{id}/events");
+        Self::write_request(&mut stream, "GET", &path, None)?;
+        let (resp, leftover) = http::read_response_head(&mut stream)
+            .with_context(|| format!("reading SSE head for job {id}"))?;
+        if resp.status != 200 {
+            // Error responses are plain JSON with Content-Length.
+            bail!("GET {path} -> {}", resp.status);
+        }
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(600)));
+        let mut reader = ChunkedReader::new(PrefixedReader::new(leftover, &mut stream));
+        let mut events = Vec::new();
+        let mut label: Option<String> = None;
+        let mut data: Option<String> = None;
+        for line in read_lines(&mut reader) {
+            let line = line?;
+            if let Some(rest) = line.strip_prefix("event: ") {
+                label = Some(rest.to_string());
+            } else if let Some(rest) = line.strip_prefix("data: ") {
+                data = Some(rest.to_string());
+            } else if line.is_empty() {
+                if let (Some(l), Some(d)) = (label.take(), data.take()) {
+                    let parsed = Json::parse(&d)
+                        .map_err(|e| anyhow::anyhow!("bad event json: {e}"))?;
+                    let ev = WireEvent { label: l, data: parsed };
+                    let keep_going = on_event(&ev);
+                    let terminal = ev.is_terminal();
+                    events.push(ev);
+                    if terminal || !keep_going {
+                        return Ok(events);
+                    }
+                }
+            }
+        }
+        Ok(events)
+    }
+
+    /// Submit + stream to the terminal event in one call.
+    pub fn run(&self, body: &Json) -> Result<(u64, Vec<WireEvent>)> {
+        let id = self.submit(body)?;
+        let events = self.stream(id, |_| true)?;
+        Ok((id, events))
+    }
+
+    /// Fire a job's cancel token.
+    pub fn cancel(&self, id: u64) -> Result<()> {
+        self.expect_ok("DELETE", &format!("/v1/jobs/{id}"), None)?;
+        Ok(())
+    }
+
+    pub fn healthz(&self) -> Result<bool> {
+        let json = self.expect_ok("GET", "/healthz", None)?;
+        Ok(json.get("ok").and_then(Json::as_bool).unwrap_or(false))
+    }
+
+    pub fn metrics(&self) -> Result<Json> {
+        self.expect_ok("GET", "/metrics", None)
+    }
+
+    /// Ask the server to drain and stop accepting.
+    pub fn shutdown(&self) -> Result<()> {
+        self.expect_ok("POST", "/admin/shutdown", None)?;
+        Ok(())
+    }
+}
+
+/// Iterator over `\n`-terminated lines of a byte stream (strips a
+/// trailing `\r` if present — SSE frames here use bare `\n`).
+fn read_lines<R: std::io::Read>(r: &mut R) -> impl Iterator<Item = Result<String>> + '_ {
+    let mut done = false;
+    std::iter::from_fn(move || {
+        if done {
+            return None;
+        }
+        let mut line = Vec::new();
+        let mut byte = [0u8; 1];
+        loop {
+            match r.read(&mut byte) {
+                Ok(0) => {
+                    done = true;
+                    if line.is_empty() {
+                        return None;
+                    }
+                    break;
+                }
+                Ok(_) => {
+                    if byte[0] == b'\n' {
+                        break;
+                    }
+                    line.push(byte[0]);
+                }
+                Err(e) => {
+                    done = true;
+                    return Some(Err(e.into()));
+                }
+            }
+        }
+        if line.last() == Some(&b'\r') {
+            line.pop();
+        }
+        match String::from_utf8(line) {
+            Ok(s) => Some(Ok(s)),
+            Err(_) => Some(Err(anyhow::anyhow!("non-utf8 sse line"))),
+        }
+    })
+}

@@ -1,0 +1,543 @@
+//! Minimal HTTP/1.1 framing over blocking byte streams.
+//!
+//! Hand-rolled on purpose: the crate's no-new-dependencies rule means the
+//! wire tier gets exactly the subset of HTTP it needs and nothing more.
+//! One request per connection (`Connection: close` on every response), a
+//! bounded header block, a bounded `Content-Length` body, and chunked
+//! transfer encoding on the *response* side only (for SSE streams whose
+//! length is unknown). Anything outside that subset is a structured
+//! [`ParseError`] that maps to a deterministic 4xx — never a panic, never
+//! an unbounded buffer.
+//!
+//! Limits (`MAX_HEADER_BYTES`, `MAX_BODY_BYTES`) are enforced *while
+//! reading*, so a hostile peer cannot make the server allocate more than
+//! the cap plus one read chunk.
+
+use std::io::{self, Read, Write};
+
+/// Cap on the request line + header block, including the blank line.
+pub const MAX_HEADER_BYTES: usize = 8 * 1024;
+/// Cap on a request body (`Content-Length` larger than this is refused
+/// with `413` before any body byte is read).
+pub const MAX_BODY_BYTES: usize = 256 * 1024;
+
+/// Why a request (or response, client-side) could not be framed.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Header block exceeded [`MAX_HEADER_BYTES`] -> `431`.
+    HeaderTooLarge,
+    /// Declared `Content-Length` exceeded [`MAX_BODY_BYTES`] -> `413`.
+    BodyTooLarge(usize),
+    /// Anything structurally wrong with the framing -> `400`.
+    Malformed(&'static str),
+    /// Peer closed before a full message arrived.
+    ConnectionClosed,
+    /// Transport error mid-read.
+    Io(io::Error),
+}
+
+impl ParseError {
+    /// The response status a server should send for this parse failure
+    /// (0 when the connection is unusable and no response can be sent).
+    pub fn status(&self) -> u16 {
+        match self {
+            ParseError::HeaderTooLarge => 431,
+            ParseError::BodyTooLarge(_) => 413,
+            ParseError::Malformed(_) => 400,
+            ParseError::ConnectionClosed | ParseError::Io(_) => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::HeaderTooLarge => write!(f, "header block over {MAX_HEADER_BYTES} bytes"),
+            ParseError::BodyTooLarge(n) => {
+                write!(f, "body of {n} bytes over the {MAX_BODY_BYTES}-byte cap")
+            }
+            ParseError::Malformed(m) => write!(f, "malformed message: {m}"),
+            ParseError::ConnectionClosed => f.write_str("connection closed mid-message"),
+            ParseError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed request. Headers keep their wire order; lookup is
+/// case-insensitive via [`Request::header`].
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A parsed response (client side).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+// ---------------------------------------------------------------- reading
+
+/// Read until the `\r\n\r\n` header terminator, bounded by
+/// [`MAX_HEADER_BYTES`]. Returns `(head, leftover)` where `leftover` is
+/// whatever body bytes arrived in the same reads.
+fn read_head<R: Read>(r: &mut R) -> Result<(Vec<u8>, Vec<u8>), ParseError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    loop {
+        if let Some(end) = find_terminator(&buf) {
+            let leftover = buf.split_off(end + 4);
+            buf.truncate(end);
+            return Ok((buf, leftover));
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(ParseError::HeaderTooLarge);
+        }
+        let n = r.read(&mut chunk).map_err(ParseError::Io)?;
+        if n == 0 {
+            return if buf.is_empty() {
+                Err(ParseError::ConnectionClosed)
+            } else {
+                Err(ParseError::Malformed("eof inside header block"))
+            };
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+fn find_terminator(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_headers(lines: &[&str]) -> Result<Vec<(String, String)>, ParseError> {
+    let mut out = Vec::with_capacity(lines.len());
+    for line in lines {
+        let (k, v) = line
+            .split_once(':')
+            .ok_or(ParseError::Malformed("header line without ':'"))?;
+        if k.trim().is_empty() {
+            return Err(ParseError::Malformed("empty header name"));
+        }
+        out.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+fn read_exact_n<R: Read>(r: &mut R, mut leftover: Vec<u8>, n: usize) -> Result<Vec<u8>, ParseError> {
+    if leftover.len() >= n {
+        leftover.truncate(n);
+        return Ok(leftover);
+    }
+    let mut body = leftover;
+    body.reserve(n - body.len());
+    let mut chunk = [0u8; 4096];
+    while body.len() < n {
+        let want = (n - body.len()).min(chunk.len());
+        let got = r.read(&mut chunk[..want]).map_err(ParseError::Io)?;
+        if got == 0 {
+            return Err(ParseError::Malformed("eof inside declared body"));
+        }
+        body.extend_from_slice(&chunk[..got]);
+    }
+    Ok(body)
+}
+
+/// Parse one request from the stream, enforcing both byte caps.
+pub fn read_request<R: Read>(r: &mut R) -> Result<Request, ParseError> {
+    let (head, leftover) = read_head(r)?;
+    let head = String::from_utf8(head).map_err(|_| ParseError::Malformed("non-utf8 header"))?;
+    let mut lines = head.split("\r\n");
+    let start = lines.next().ok_or(ParseError::Malformed("empty request"))?;
+    let mut parts = start.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(ParseError::Malformed("bad request line"));
+    }
+    let headers = parse_headers(&lines.collect::<Vec<_>>())?;
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.parse::<usize>().map_err(|_| ParseError::Malformed("bad content-length")))
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > MAX_BODY_BYTES {
+        return Err(ParseError::BodyTooLarge(content_length));
+    }
+    let body = read_exact_n(r, leftover, content_length)?;
+    Ok(Request { method, path, headers, body })
+}
+
+/// Parse one response head; the body is handled by the caller (it may be
+/// `Content-Length`-delimited or chunked). Returns the response with an
+/// *empty* body plus the leftover bytes already read past the head.
+pub fn read_response_head<R: Read>(r: &mut R) -> Result<(Response, Vec<u8>), ParseError> {
+    let (head, leftover) = read_head(r)?;
+    let head = String::from_utf8(head).map_err(|_| ParseError::Malformed("non-utf8 header"))?;
+    let mut lines = head.split("\r\n");
+    let start = lines.next().ok_or(ParseError::Malformed("empty response"))?;
+    // "HTTP/1.1 200 OK"
+    let mut parts = start.splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    let status = parts
+        .next()
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or(ParseError::Malformed("bad status line"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(ParseError::Malformed("bad http version"));
+    }
+    let headers = parse_headers(&lines.collect::<Vec<_>>())?;
+    Ok((Response { status, headers, body: Vec::new() }, leftover))
+}
+
+/// Read a full (non-streaming) response: head, then either a
+/// `Content-Length` body or a complete chunked body.
+pub fn read_response<R: Read>(r: &mut R) -> Result<Response, ParseError> {
+    let (mut resp, leftover) = read_response_head(r)?;
+    let chunked = resp
+        .header("transfer-encoding")
+        .map(|v| v.eq_ignore_ascii_case("chunked"))
+        .unwrap_or(false);
+    if chunked {
+        let mut cr = ChunkedReader::new(PrefixedReader::new(leftover, r));
+        cr.read_to_end(&mut resp.body).map_err(ParseError::Io)?;
+    } else {
+        let n = resp
+            .header("content-length")
+            .map(|v| v.parse::<usize>().map_err(|_| ParseError::Malformed("bad content-length")))
+            .transpose()?
+            .unwrap_or(0);
+        if n > MAX_BODY_BYTES {
+            return Err(ParseError::BodyTooLarge(n));
+        }
+        resp.body = read_exact_n(r, leftover, n)?;
+    }
+    Ok(resp)
+}
+
+// ------------------------------------------------------------- composing
+
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        499 => "Client Closed Request",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete single-shot response (`Connection: close`).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_reason(status),
+        content_type,
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write the head of a chunked SSE response; follow with a
+/// [`ChunkedWriter`] over the same stream.
+pub fn write_sse_head<W: Write>(w: &mut W) -> io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+          Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// Chunked transfer encoder. Every `write_chunk` flushes, so SSE frames
+/// reach the peer promptly; `finish` writes the zero-length terminator.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    pub fn new(w: W) -> Self {
+        ChunkedWriter { w }
+    }
+
+    pub fn write_chunk(&mut self, bytes: &[u8]) -> io::Result<()> {
+        if bytes.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", bytes.len())?;
+        self.w.write_all(bytes)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    pub fn finish(&mut self) -> io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+// ------------------------------------------------------ streaming readers
+
+/// `Read` over a prefix buffer followed by an inner reader — used to
+/// hand bytes already pulled past a header block back to body decoding.
+pub struct PrefixedReader<'a, R: Read> {
+    prefix: Vec<u8>,
+    pos: usize,
+    inner: &'a mut R,
+}
+
+impl<'a, R: Read> PrefixedReader<'a, R> {
+    pub fn new(prefix: Vec<u8>, inner: &'a mut R) -> Self {
+        PrefixedReader { prefix, pos: 0, inner }
+    }
+}
+
+impl<R: Read> Read for PrefixedReader<'_, R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.pos < self.prefix.len() {
+            let n = (self.prefix.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.prefix[self.pos..self.pos + n]);
+            self.pos += n;
+            return Ok(n);
+        }
+        self.inner.read(buf)
+    }
+}
+
+/// Chunked transfer decoder: presents the de-chunked byte stream as a
+/// plain `Read`; returns EOF at the zero-length terminator chunk.
+pub struct ChunkedReader<R: Read> {
+    inner: R,
+    /// Bytes left in the current chunk; `None` means "read next size line".
+    remaining: Option<usize>,
+    done: bool,
+}
+
+impl<R: Read> ChunkedReader<R> {
+    pub fn new(inner: R) -> Self {
+        ChunkedReader { inner, remaining: None, done: false }
+    }
+
+    fn read_size_line(&mut self) -> io::Result<usize> {
+        // "<hex>\r\n" — read byte-by-byte; size lines are tiny.
+        let mut line = Vec::with_capacity(8);
+        let mut byte = [0u8; 1];
+        loop {
+            if self.inner.read(&mut byte)? == 0 {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in chunk size"));
+            }
+            if byte[0] == b'\n' {
+                break;
+            }
+            if byte[0] != b'\r' {
+                line.push(byte[0]);
+            }
+            if line.len() > 16 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "chunk size line too long"));
+            }
+        }
+        let s = std::str::from_utf8(&line)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-utf8 chunk size"))?;
+        usize::from_str_radix(s.trim(), 16)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad chunk size"))
+    }
+
+    fn skip_crlf(&mut self) -> io::Result<()> {
+        let mut two = [0u8; 2];
+        let mut got = 0;
+        while got < 2 {
+            let n = self.inner.read(&mut two[got..])?;
+            if n == 0 {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof after chunk"));
+            }
+            got += n;
+        }
+        Ok(())
+    }
+}
+
+impl<R: Read> Read for ChunkedReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.done || buf.is_empty() {
+            return Ok(0);
+        }
+        if self.remaining.is_none() {
+            let size = self.read_size_line()?;
+            if size == 0 {
+                // Consume the trailing CRLF after the terminator if present;
+                // tolerate eof (peers that close right after "0\r\n\r\n").
+                let _ = self.skip_crlf();
+                self.done = true;
+                return Ok(0);
+            }
+            self.remaining = Some(size);
+        }
+        let rem = self.remaining.unwrap();
+        let want = rem.min(buf.len());
+        let n = self.inner.read(&mut buf[..want])?;
+        if n == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof inside chunk"));
+        }
+        if rem - n == 0 {
+            self.remaining = None;
+            self.skip_crlf()?;
+        } else {
+            self.remaining = Some(rem - n);
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_simple_request_with_body() {
+        let raw = b"POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let req = read_request(&mut &raw[..]).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/jobs");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn request_without_body_and_no_content_length() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut &raw[..]).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413_before_reading_it() {
+        let raw = format!(
+            "POST /v1/jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let err = read_request(&mut raw.as_bytes()).unwrap_err();
+        assert!(matches!(err, ParseError::BodyTooLarge(_)), "{err:?}");
+        assert_eq!(err.status(), 413);
+    }
+
+    #[test]
+    fn oversized_header_block_is_431() {
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        while raw.len() <= MAX_HEADER_BYTES + 16 {
+            raw.push_str("X-Pad: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+        }
+        // No terminator: the cap trips while still reading headers.
+        let err = read_request(&mut raw.as_bytes()).unwrap_err();
+        assert!(matches!(err, ParseError::HeaderTooLarge), "{err:?}");
+        assert_eq!(err.status(), 431);
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for raw in [
+            &b"NOT-HTTP\r\n\r\n"[..],
+            &b"GET /x SPDY/9\r\n\r\n"[..],
+            &b"GET /x HTTP/1.1\r\nbroken-header-line\r\n\r\n"[..],
+        ] {
+            let err = read_request(&mut &raw[..]).unwrap_err();
+            assert!(matches!(err, ParseError::Malformed(_)), "{err:?}");
+            assert_eq!(err.status(), 400);
+        }
+    }
+
+    #[test]
+    fn truncated_body_reports_malformed_not_hang() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort";
+        let err = read_request(&mut &raw[..]).unwrap_err();
+        assert!(matches!(err, ParseError::Malformed(_)), "{err:?}");
+    }
+
+    #[test]
+    fn chunked_roundtrip_through_writer_and_reader() {
+        let mut wire = Vec::new();
+        {
+            let mut cw = ChunkedWriter::new(&mut wire);
+            cw.write_chunk(b"event: step\n").unwrap();
+            cw.write_chunk(b"data: {}\n\n").unwrap();
+            cw.write_chunk(b"").unwrap(); // no-op, must not terminate
+            cw.write_chunk(&vec![b'x'; 300]).unwrap(); // multi-hex-digit size
+            cw.finish().unwrap();
+        }
+        let mut out = Vec::new();
+        ChunkedReader::new(&wire[..]).read_to_end(&mut out).unwrap();
+        let mut expect = b"event: step\ndata: {}\n\n".to_vec();
+        expect.extend(std::iter::repeat(b'x').take(300));
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn response_roundtrip_content_length_and_chunked() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 202, "application/json", b"{\"ok\":true}").unwrap();
+        let resp = read_response(&mut &wire[..]).unwrap();
+        assert_eq!(resp.status, 202);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.body, b"{\"ok\":true}");
+
+        let mut wire = Vec::new();
+        write_sse_head(&mut wire).unwrap();
+        ChunkedWriter::new(&mut wire).write_chunk(b"event: done\n\n").unwrap();
+        ChunkedWriter::new(&mut wire).finish().unwrap();
+        let resp = read_response(&mut &wire[..]).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"event: done\n\n");
+    }
+
+    #[test]
+    fn prefixed_reader_serves_prefix_then_inner() {
+        let mut inner: &[u8] = b"world";
+        let mut pr = PrefixedReader::new(b"hello ".to_vec(), &mut inner);
+        let mut out = String::new();
+        pr.read_to_string(&mut out).unwrap();
+        assert_eq!(out, "hello world");
+    }
+}

@@ -1,0 +1,39 @@
+//! # Wire transport: hand-rolled HTTP/1.1 + SSE job streaming
+//!
+//! The network tier that turns the in-process job API (`server::Client`)
+//! into a served endpoint — built entirely on `std::net` and the
+//! crate's own [`ThreadPool`](crate::util::threadpool::ThreadPool),
+//! honouring the no-new-dependencies rule. Three layers:
+//!
+//! - [`http`] — bounded HTTP/1.1 framing: request parsing with hard
+//!   header (8 KiB -> `431`) and body (256 KiB -> `413`) caps, clean
+//!   `400` on malformed framing, response + chunked-transfer writers
+//!   and readers. One request per connection; every response closes.
+//! - [`proto`] — the JSON wire protocol: `GenRequest`/`SubmitOptions`
+//!   to/from wire JSON (validation delegates to `GenRequest::builder`,
+//!   so wire and in-process admission are byte-identical), `JobEvent`
+//!   SSE frames (`event: <label>\ndata: <json>\n\n`, same label
+//!   vocabulary as `JobEvent::label`), and the structured-error map
+//!   (`InvalidRequest` 400, `QueueFull` 429, `Cancelled` 499,
+//!   `DeadlineExceeded` 504, `Runtime` 500).
+//! - [`server`] / [`client`] — the accept loop + job registry
+//!   ([`WireServer`]) and the blocking client ([`WireClient`]) that
+//!   `sd-acc request`, the integration suite and `ci.sh` drive.
+//!
+//! The streamed event sequence for a job is the in-process
+//! `JobHandle` sequence, one SSE frame per event — same labels, same
+//! order, exactly one terminal (`done` / `failed` / `cancelled`) per
+//! job; `tests/integration_net.rs` pins the equivalence. A client that
+//! disconnects mid-stream cancels its job (the registry entry and the
+//! running work are both reclaimed). Multi-process serving shares one
+//! on-disk cache through the store's advisory lock protocol — see
+//! `cache::store`'s "Multi-process sharing" section; the second
+//! process's identical request is a cross-process `cache-hit`.
+
+pub mod client;
+pub mod http;
+pub mod proto;
+pub mod server;
+
+pub use client::{WireClient, WireEvent};
+pub use server::WireServer;

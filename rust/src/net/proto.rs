@@ -1,0 +1,427 @@
+//! Wire protocol: JSON forms for requests and job events, and the
+//! `SdError` -> HTTP status mapping.
+//!
+//! ## Request body (`POST /v1/jobs`)
+//!
+//! ```json
+//! {
+//!   "prompt": "a red fox",        // required
+//!   "seed": 42,                    // required
+//!   "steps": 20,                   // optional (GenRequest default)
+//!   "guidance": 7.5,               // optional
+//!   "sampler": "pndm",             // optional: "ddim" | "pndm"
+//!   "plan": "pas:5",               // optional: "full" | "auto" | "pas:<t_sparse>"
+//!   "quant": "w8a8",               // optional QuantScheme label
+//!   "priority": "normal",          // optional: "high" | "normal" | "low"
+//!   "deadline_ms": 2000,           // optional
+//!   "degradable": true             // optional (default true, as SubmitOptions)
+//! }
+//! ```
+//!
+//! Validation reuses `GenRequest::builder` exactly, so the wire tier can
+//! never admit a request the in-process API would reject — and the error
+//! strings match byte for byte.
+//!
+//! ## Event frames (`GET /v1/jobs/<id>/events`, SSE)
+//!
+//! Each [`JobEvent`] becomes one SSE frame `event: <label>\ndata:
+//! <json>\n\n` whose data object always repeats `"label"`. The `done`
+//! frame carries a *summary* of the result — `mac_reduction`,
+//! `total_ms`, `steps`, `latent_len` and an FNV-1a checksum of the
+//! latent bytes (`latent_fnv`, hex string) — not the latent tensor
+//! itself: wire consumers verify determinism by checksum, they do not
+//! re-decode latents. Job ids cross the wire as decimal *strings*
+//! (`compose_job_id` values can exceed 2^53, the exact-integer range of
+//! JSON numbers).
+//!
+//! ## Error mapping
+//!
+//! | `SdError`          | status |
+//! |--------------------|--------|
+//! | `InvalidRequest`   | 400    |
+//! | `QueueFull`        | 429    |
+//! | `Cancelled`        | 499    |
+//! | `DeadlineExceeded` | 504    |
+//! | `Runtime`          | 500    |
+
+use std::time::Duration;
+
+use crate::coordinator::{GenRequest, GenResult, SamplerKind, SdError};
+use crate::pas::plan::{PasConfig, SamplingPlan};
+use crate::quant::QuantScheme;
+use crate::server::{JobEvent, Priority, SubmitOptions};
+use crate::util::json::Json;
+
+/// HTTP status for a structured serving error.
+pub fn error_status(e: &SdError) -> u16 {
+    match e {
+        SdError::InvalidRequest(_) => 400,
+        SdError::QueueFull => 429,
+        SdError::Cancelled => 499,
+        SdError::DeadlineExceeded => 504,
+        SdError::Runtime(_) => 500,
+    }
+}
+
+/// JSON error body: `{"error": "<display>", "code": <status>}`.
+pub fn error_body(e: &SdError) -> Json {
+    Json::obj(vec![
+        ("error", Json::Str(e.to_string())),
+        ("code", Json::num(error_status(e) as f64)),
+    ])
+}
+
+/// FNV-1a over a byte slice — same constants as the cache key hasher.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Checksum of a result's latent: FNV-1a over the little-endian f32
+/// bits, so it is bit-exact across processes (NaN payloads included).
+pub fn latent_checksum(result: &GenResult) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in result.latent.data() {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+// ---------------------------------------------------------------- request
+
+/// Parse the `POST /v1/jobs` body into a validated request + options.
+pub fn request_from_json(j: &Json) -> Result<(GenRequest, SubmitOptions), SdError> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| SdError::invalid("request body must be a JSON object"))?;
+    let get = |name: &str| obj.iter().find(|(k, _)| k == name).map(|(_, v)| v);
+
+    let prompt = get("prompt")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| SdError::invalid("missing required string field 'prompt'"))?;
+    let seed = get("seed")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| SdError::invalid("missing required numeric field 'seed'"))? as u64;
+
+    let mut b = GenRequest::builder(prompt, seed);
+    if let Some(v) = get("steps") {
+        let steps = v
+            .as_usize()
+            .ok_or_else(|| SdError::invalid("'steps' must be a non-negative integer"))?;
+        b = b.steps(steps);
+    }
+    if let Some(v) = get("guidance") {
+        let g = v
+            .as_f64()
+            .ok_or_else(|| SdError::invalid("'guidance' must be a number"))?;
+        b = b.guidance(g as f32);
+    }
+    if let Some(v) = get("sampler") {
+        let s = v
+            .as_str()
+            .ok_or_else(|| SdError::invalid("'sampler' must be a string"))?;
+        b = b.sampler(s.parse::<SamplerKind>()?);
+    }
+    if let Some(v) = get("plan") {
+        let s = v
+            .as_str()
+            .ok_or_else(|| SdError::invalid("'plan' must be a string"))?;
+        b = b.plan(plan_from_str(s)?);
+    }
+    if let Some(v) = get("quant") {
+        if !matches!(v, Json::Null) {
+            let s = v
+                .as_str()
+                .ok_or_else(|| SdError::invalid("'quant' must be a string"))?;
+            let scheme = QuantScheme::parse(s)
+                .ok_or_else(|| SdError::invalid(format!("unknown quant scheme '{s}'")))?;
+            b = b.quant(scheme);
+        }
+    }
+    let req = b.build()?;
+
+    let mut opts = SubmitOptions::default();
+    if let Some(v) = get("priority") {
+        let s = v
+            .as_str()
+            .ok_or_else(|| SdError::invalid("'priority' must be a string"))?;
+        opts.priority = priority_from_str(s)?;
+    }
+    if let Some(v) = get("deadline_ms") {
+        let ms = v
+            .as_f64()
+            .ok_or_else(|| SdError::invalid("'deadline_ms' must be a number"))?;
+        if ms < 0.0 || !ms.is_finite() {
+            return Err(SdError::invalid("'deadline_ms' must be a finite non-negative number"));
+        }
+        opts.deadline = Some(Duration::from_millis(ms as u64));
+    }
+    if let Some(v) = get("degradable") {
+        opts.degradable = v
+            .as_bool()
+            .ok_or_else(|| SdError::invalid("'degradable' must be a boolean"))?;
+    }
+    Ok((req, opts))
+}
+
+/// Compose the wire body for a request + options (client side).
+pub fn request_to_json(req: &GenRequest, opts: &SubmitOptions) -> Json {
+    let mut fields = vec![
+        ("prompt", Json::str(&req.prompt)),
+        ("seed", Json::num(req.seed as f64)),
+        ("steps", Json::num(req.steps as f64)),
+        ("guidance", Json::num(req.guidance as f64)),
+        ("sampler", Json::str(req.sampler.as_str())),
+        ("plan", Json::Str(plan_to_string(&req.plan))),
+    ];
+    if let Some(q) = &req.quant {
+        fields.push(("quant", Json::Str(q.label())));
+    }
+    fields.push(("priority", Json::str(priority_str(opts.priority))));
+    if let Some(d) = opts.deadline {
+        fields.push(("deadline_ms", Json::num(d.as_millis() as f64)));
+    }
+    fields.push(("degradable", Json::Bool(opts.degradable)));
+    Json::obj(fields)
+}
+
+fn plan_from_str(s: &str) -> Result<SamplingPlan, SdError> {
+    if s == "full" {
+        return Ok(SamplingPlan::Full);
+    }
+    if s == "auto" {
+        return Ok(SamplingPlan::Auto);
+    }
+    if let Some(t) = s.strip_prefix("pas:") {
+        let t_sparse = t
+            .parse::<usize>()
+            .map_err(|_| SdError::invalid(format!("bad plan '{s}': expected pas:<t_sparse>")))?;
+        return Ok(SamplingPlan::Pas(PasConfig::pas25(t_sparse)));
+    }
+    Err(SdError::invalid(format!(
+        "unknown plan '{s}': expected full | auto | pas:<t_sparse>"
+    )))
+}
+
+fn plan_to_string(plan: &SamplingPlan) -> String {
+    match plan {
+        SamplingPlan::Full => "full".to_string(),
+        SamplingPlan::Auto => "auto".to_string(),
+        SamplingPlan::Pas(cfg) => format!("pas:{}", cfg.t_sparse),
+    }
+}
+
+fn priority_from_str(s: &str) -> Result<Priority, SdError> {
+    match s {
+        "high" => Ok(Priority::High),
+        "normal" => Ok(Priority::Normal),
+        "low" => Ok(Priority::Low),
+        other => Err(SdError::invalid(format!(
+            "unknown priority '{other}': expected high | normal | low"
+        ))),
+    }
+}
+
+fn priority_str(p: Priority) -> &'static str {
+    match p {
+        Priority::High => "high",
+        Priority::Normal => "normal",
+        Priority::Low => "low",
+    }
+}
+
+// ----------------------------------------------------------------- events
+
+/// The SSE `data:` object for one job event. The label field always
+/// matches the SSE `event:` line (and `JobEvent::label`).
+pub fn event_to_json(ev: &JobEvent) -> Json {
+    let label = ev.label();
+    match ev {
+        JobEvent::Queued | JobEvent::CacheHit | JobEvent::Cancelled => {
+            Json::obj(vec![("label", Json::str(label))])
+        }
+        JobEvent::Scheduled { batch_size } => Json::obj(vec![
+            ("label", Json::str(label)),
+            ("batch", Json::num(*batch_size as f64)),
+        ]),
+        JobEvent::Step { i, action, ms } => Json::obj(vec![
+            ("label", Json::str(label)),
+            ("i", Json::num(*i as f64)),
+            ("action", Json::str(action.label())),
+            ("ms", Json::num(*ms)),
+        ]),
+        JobEvent::Done(result) => Json::obj(vec![
+            ("label", Json::str(label)),
+            ("mac_reduction", Json::num(result.stats.mac_reduction)),
+            ("total_ms", Json::num(result.stats.total_ms)),
+            ("steps", Json::num(result.stats.actions.len() as f64)),
+            ("latent_len", Json::num(result.latent.len() as f64)),
+            ("latent_fnv", Json::Str(format!("{:016x}", latent_checksum(result)))),
+        ]),
+        JobEvent::Failed(e) => Json::obj(vec![
+            ("label", Json::str(label)),
+            ("error", Json::Str(e.to_string())),
+            ("code", Json::num(error_status(e) as f64)),
+        ]),
+    }
+}
+
+/// One SSE frame for an event: `event: <label>\ndata: <json>\n\n`.
+pub fn event_frame(ev: &JobEvent) -> String {
+    format!("event: {}\ndata: {}\n\n", ev.label(), event_to_json(ev).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GenStats;
+    use crate::pas::plan::StepAction;
+    use crate::runtime::Tensor;
+
+    fn wire(prompt: &str) -> Json {
+        Json::obj(vec![
+            ("prompt", Json::str(prompt)),
+            ("seed", Json::num(7.0)),
+            ("steps", Json::num(8.0)),
+            ("sampler", Json::str("ddim")),
+            ("plan", Json::str("pas:4")),
+            ("priority", Json::str("high")),
+            ("deadline_ms", Json::num(1500.0)),
+            ("degradable", Json::Bool(false)),
+        ])
+    }
+
+    #[test]
+    fn request_roundtrips_through_wire_json() {
+        let (req, opts) = request_from_json(&wire("fox")).unwrap();
+        assert_eq!(req.prompt, "fox");
+        assert_eq!(req.seed, 7);
+        assert_eq!(req.steps, 8);
+        assert_eq!(req.sampler, SamplerKind::Ddim);
+        assert!(matches!(req.plan, SamplingPlan::Pas(ref c) if c.t_sparse == 4));
+        assert_eq!(opts.priority, Priority::High);
+        assert_eq!(opts.deadline, Some(Duration::from_millis(1500)));
+        assert!(!opts.degradable);
+
+        // Compose -> parse is the identity on every wire-visible field.
+        let re = request_to_json(&req, &opts);
+        let (req2, opts2) = request_from_json(&re).unwrap();
+        assert_eq!(req.prompt, req2.prompt);
+        assert_eq!(req.seed, req2.seed);
+        assert_eq!(req.steps, req2.steps);
+        assert_eq!(req.guidance.to_bits(), req2.guidance.to_bits());
+        assert_eq!(req.sampler, req2.sampler);
+        assert_eq!(req.plan, req2.plan);
+        assert_eq!(req.quant, req2.quant);
+        assert_eq!(opts.priority, opts2.priority);
+        assert_eq!(opts.deadline, opts2.deadline);
+        assert_eq!(opts.degradable, opts2.degradable);
+    }
+
+    #[test]
+    fn invalid_wire_requests_map_to_invalid_request() {
+        let cases: Vec<Json> = vec![
+            Json::str("not an object"),
+            Json::obj(vec![("seed", Json::num(1.0))]), // no prompt
+            Json::obj(vec![("prompt", Json::str("x"))]), // no seed
+            Json::obj(vec![
+                ("prompt", Json::str("x")),
+                ("seed", Json::num(1.0)),
+                ("sampler", Json::str("euler")),
+            ]),
+            Json::obj(vec![
+                ("prompt", Json::str("x")),
+                ("seed", Json::num(1.0)),
+                ("plan", Json::str("pas")),
+            ]),
+            Json::obj(vec![
+                ("prompt", Json::str("x")),
+                ("seed", Json::num(1.0)),
+                ("priority", Json::str("urgent")),
+            ]),
+            Json::obj(vec![
+                ("prompt", Json::str("x")),
+                ("seed", Json::num(1.0)),
+                ("steps", Json::num(0.0)), // builder validation refuses
+            ]),
+        ];
+        for c in cases {
+            let e = request_from_json(&c).unwrap_err();
+            assert!(matches!(e, SdError::InvalidRequest(_)), "{c:?} -> {e}");
+            assert_eq!(error_status(&e), 400);
+        }
+    }
+
+    #[test]
+    fn error_statuses_cover_every_variant() {
+        assert_eq!(error_status(&SdError::invalid("x")), 400);
+        assert_eq!(error_status(&SdError::QueueFull), 429);
+        assert_eq!(error_status(&SdError::Cancelled), 499);
+        assert_eq!(error_status(&SdError::DeadlineExceeded), 504);
+        assert_eq!(error_status(&SdError::Runtime("boom".into())), 500);
+    }
+
+    #[test]
+    fn event_frames_carry_label_and_done_summary() {
+        let result = GenResult {
+            latent: Tensor::new(vec![2, 2], vec![0.25, -1.5, 3.75, 0.125]).unwrap(),
+            stats: GenStats {
+                actions: vec![StepAction::Full, StepAction::Partial(2)],
+                step_ms: vec![5.0, 2.5],
+                mac_reduction: 1.8,
+                total_ms: 7.5,
+            },
+        };
+        let frame = event_frame(&JobEvent::Done(result.clone()));
+        assert!(frame.starts_with("event: done\ndata: "), "{frame}");
+        assert!(frame.ends_with("\n\n"), "{frame:?}");
+        let data = Json::parse(frame["event: done\ndata: ".len()..].trim()).unwrap();
+        assert_eq!(data.get_str("label").unwrap(), "done");
+        assert_eq!(data.get_usize("latent_len").unwrap(), 4);
+        assert_eq!(data.get_usize("steps").unwrap(), 2);
+        let fnv = data.get_str("latent_fnv").unwrap();
+        assert_eq!(fnv.len(), 16);
+        assert_eq!(fnv, format!("{:016x}", latent_checksum(&result)));
+
+        let frame = event_frame(&JobEvent::Failed(SdError::QueueFull));
+        let data = Json::parse(frame["event: failed\ndata: ".len()..].trim()).unwrap();
+        assert_eq!(data.get_usize("code").unwrap(), 429);
+
+        for ev in [JobEvent::Queued, JobEvent::CacheHit, JobEvent::Cancelled] {
+            let data = event_to_json(&ev);
+            assert_eq!(data.get_str("label").unwrap(), ev.label());
+        }
+        let data = event_to_json(&JobEvent::Step {
+            i: 3,
+            action: StepAction::Partial(2),
+            ms: 1.25,
+        });
+        assert_eq!(data.get_str("action").unwrap(), "partial");
+        assert_eq!(data.get_usize("i").unwrap(), 3);
+    }
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a64(b"a"), fnv1a64(b"b"));
+        let a = GenResult {
+            latent: Tensor::new(vec![2], vec![1.0, 2.0]).unwrap(),
+            stats: GenStats {
+                actions: vec![],
+                step_ms: vec![],
+                mac_reduction: 1.0,
+                total_ms: 0.0,
+            },
+        };
+        let mut b = a.clone();
+        b.latent = Tensor::new(vec![2], vec![1.0, 2.5]).unwrap();
+        assert_ne!(latent_checksum(&a), latent_checksum(&b));
+    }
+}

@@ -1,0 +1,425 @@
+//! The wire server: a blocking `TcpListener` accept loop fanning
+//! connections out over the crate's own [`ThreadPool`], serving the
+//! job API over hand-rolled HTTP/1.1 (see [`super::http`]).
+//!
+//! ## Routes
+//!
+//! | method + path             | behaviour                                          |
+//! |---------------------------|----------------------------------------------------|
+//! | `POST /v1/jobs`           | submit; `202 {"job": "<id>"}` or mapped 4xx/5xx    |
+//! | `GET /v1/jobs/<id>/events`| SSE stream of the job's events (chunked)           |
+//! | `DELETE /v1/jobs/<id>`    | fire the job's cancel token; `200 {"ok":true}`     |
+//! | `GET /healthz`            | `200 {"ok":true}`                                  |
+//! | `GET /metrics`            | metrics JSON + `"wire"` section (open job count)   |
+//! | `POST /admin/shutdown`    | `200`, then stop accepting and drain               |
+//!
+//! ## Job registry and the no-leak rule
+//!
+//! `POST /v1/jobs` parks the submitted [`JobHandle`]'s receiver and
+//! cancel token in a registry keyed by job id. The event receiver is
+//! **take-once**: the first `GET .../events` claims it (a second
+//! concurrent streamer gets `409`), streams to the terminal event, and
+//! deregisters the job. If the client disconnects mid-stream, the
+//! handler fires the job's cancel token, drains the receiver to its
+//! terminal event (the standing exactly-one-terminal invariant holds
+//! server-side regardless of who is listening) and deregisters — a
+//! vanished client can never leak a registry entry or a running job.
+//! `DELETE` fires the cancel token but leaves deregistration to the
+//! streamer so the cancelled terminal is still observable.
+//!
+//! ## Graceful drain
+//!
+//! `POST /admin/shutdown` (or [`WireServer::shutdown`]) raises the stop
+//! flag and nudges the accept loop with a loopback connection. The
+//! accept loop exits, the connection pool drops — joining every
+//! in-flight handler, so open SSE streams finish their jobs — and then
+//! any still-registered jobs are cancelled and drained. The job
+//! `Server` underneath is owned by the caller and shut down after.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::SdError;
+use crate::server::metrics::Metrics;
+use crate::server::{CancelToken, Client, JobEvent};
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+use super::http::{self, ChunkedWriter, Request};
+use super::proto;
+
+/// How long a connection may take to deliver its request head + body.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+struct JobEntry {
+    /// Take-once: the first streamer claims it; `None` + registered
+    /// means "someone is streaming right now".
+    events: Option<Receiver<JobEvent>>,
+    cancel: CancelToken,
+}
+
+type Registry = Mutex<HashMap<u64, JobEntry>>;
+
+struct WireCtx {
+    client: Client,
+    metrics: Arc<Metrics>,
+    jobs: Registry,
+    stop: AtomicBool,
+}
+
+/// Handle to a running wire server. Dropping it does *not* stop the
+/// server; call [`WireServer::shutdown`] or let `POST /admin/shutdown`
+/// end [`WireServer::wait`].
+pub struct WireServer {
+    addr: SocketAddr,
+    ctx: Arc<WireCtx>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0`) and start serving the given
+    /// job client. `threads` bounds concurrent connections (SSE streams
+    /// hold a thread for their whole job).
+    pub fn start(
+        client: Client,
+        metrics: Arc<Metrics>,
+        listen: &str,
+        threads: usize,
+    ) -> Result<WireServer> {
+        let addr = listen
+            .to_socket_addrs()
+            .with_context(|| format!("bad listen address '{listen}'"))?
+            .next()
+            .with_context(|| format!("listen address '{listen}' resolved to nothing"))?;
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding wire listener on {addr}"))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let ctx = Arc::new(WireCtx {
+            client,
+            metrics,
+            jobs: Mutex::new(HashMap::new()),
+            stop: AtomicBool::new(false),
+        });
+
+        let accept_ctx = Arc::clone(&ctx);
+        let accept = thread::Builder::new()
+            .name("sd-acc-wire-accept".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(threads.max(1));
+                for stream in listener.incoming() {
+                    if accept_ctx.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let ctx = Arc::clone(&accept_ctx);
+                    pool.execute(move || handle_connection(stream, &ctx));
+                }
+                // Pool drop joins every in-flight handler (open SSE
+                // streams run their jobs to the terminal event).
+                drop(pool);
+                drain_registry(&accept_ctx);
+            })
+            .context("spawn wire accept thread")?;
+
+        Ok(WireServer { addr, ctx, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of jobs currently registered (submitted, terminal not yet
+    /// streamed to a client). Exposed in `/metrics` as `wire.jobs_open`.
+    pub fn jobs_open(&self) -> usize {
+        self.ctx.jobs.lock().unwrap().len()
+    }
+
+    /// Block until the accept loop exits (i.e. until
+    /// `POST /admin/shutdown` or [`WireServer::shutdown`] from another
+    /// thread).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, drain in-flight connections, join.
+    pub fn shutdown(mut self) {
+        self.ctx.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept() so it observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cancel and drain every still-registered job (shutdown path: clients
+/// that submitted but never streamed must not wedge the job server).
+fn drain_registry(ctx: &WireCtx) {
+    let entries: Vec<JobEntry> = {
+        let mut jobs = ctx.jobs.lock().unwrap();
+        jobs.drain().map(|(_, e)| e).collect()
+    };
+    for entry in entries {
+        entry.cancel.cancel();
+        if let Some(rx) = entry.events {
+            while let Ok(ev) = rx.recv() {
+                if ev.is_terminal() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ connection
+
+fn handle_connection(mut stream: TcpStream, ctx: &WireCtx) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let req = match http::read_request(&mut stream) {
+        Ok(req) => req,
+        Err(e) => {
+            let status = e.status();
+            if status != 0 {
+                respond_error_status(&mut stream, status, &e.to_string());
+            }
+            return;
+        }
+    };
+    route(&mut stream, &req, ctx);
+}
+
+fn respond_json(stream: &mut TcpStream, status: u16, body: &Json) {
+    let _ = http::write_response(stream, status, "application/json", body.to_string().as_bytes());
+}
+
+fn respond_error_status(stream: &mut TcpStream, status: u16, msg: &str) {
+    let body = Json::obj(vec![
+        ("error", Json::str(msg)),
+        ("code", Json::num(status as f64)),
+    ]);
+    respond_json(stream, status, &body);
+}
+
+fn respond_sd_error(stream: &mut TcpStream, e: &SdError) {
+    respond_json(stream, proto::error_status(e), &proto::error_body(e));
+}
+
+fn route(stream: &mut TcpStream, req: &Request, ctx: &WireCtx) {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("POST", ["v1", "jobs"]) => post_job(stream, req, ctx),
+        ("GET", ["v1", "jobs", id, "events"]) => match id.parse::<u64>() {
+            Ok(id) => stream_events(stream, id, ctx),
+            Err(_) => respond_error_status(stream, 404, "no such job"),
+        },
+        ("DELETE", ["v1", "jobs", id]) => match id.parse::<u64>() {
+            Ok(id) => delete_job(stream, id, ctx),
+            Err(_) => respond_error_status(stream, 404, "no such job"),
+        },
+        ("GET", ["healthz"]) => {
+            respond_json(stream, 200, &Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        ("GET", ["metrics"]) => get_metrics(stream, ctx),
+        ("POST", ["admin", "shutdown"]) => {
+            respond_json(stream, 200, &Json::obj(vec![("ok", Json::Bool(true))]));
+            ctx.stop.store(true, Ordering::SeqCst);
+            // Nudge accept() from here: the handler knows the listener
+            // is on our own local peer address's IP + server port.
+            if let Ok(local) = stream.local_addr() {
+                let _ = TcpStream::connect(local);
+            }
+        }
+        // Known paths with the wrong method get 405, the rest 404.
+        (_, ["v1", "jobs"]) | (_, ["healthz"]) | (_, ["metrics"]) | (_, ["admin", "shutdown"]) => {
+            respond_error_status(stream, 405, "method not allowed")
+        }
+        (_, ["v1", "jobs", _, "events"]) | (_, ["v1", "jobs", _]) => {
+            respond_error_status(stream, 405, "method not allowed")
+        }
+        _ => respond_error_status(stream, 404, "unknown route"),
+    }
+}
+
+// ---------------------------------------------------------------- routes
+
+fn post_job(stream: &mut TcpStream, req: &Request, ctx: &WireCtx) {
+    let body = match std::str::from_utf8(&req.body)
+        .map_err(|_| SdError::invalid("body is not utf-8"))
+        .and_then(|s| Json::parse(s).map_err(|e| SdError::invalid(format!("bad json: {e}"))))
+    {
+        Ok(j) => j,
+        Err(e) => return respond_sd_error(stream, &e),
+    };
+    let (gen_req, opts) = match proto::request_from_json(&body) {
+        Ok(v) => v,
+        Err(e) => return respond_sd_error(stream, &e),
+    };
+    match ctx.client.submit_with(gen_req, opts) {
+        Ok(handle) => {
+            let id = handle.id.0;
+            ctx.jobs.lock().unwrap().insert(
+                id,
+                JobEntry { events: Some(handle.events), cancel: handle.cancel },
+            );
+            respond_json(
+                stream,
+                202,
+                &Json::obj(vec![("job", Json::Str(id.to_string()))]),
+            );
+        }
+        Err(e) => respond_sd_error(stream, &e),
+    }
+}
+
+fn delete_job(stream: &mut TcpStream, id: u64, ctx: &WireCtx) {
+    let cancel = {
+        let jobs = ctx.jobs.lock().unwrap();
+        jobs.get(&id).map(|e| e.cancel.clone())
+    };
+    match cancel {
+        Some(cancel) => {
+            cancel.cancel();
+            respond_json(
+                stream,
+                200,
+                &Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("job", Json::Str(id.to_string())),
+                ]),
+            );
+        }
+        None => respond_error_status(stream, 404, "no such job"),
+    }
+}
+
+fn get_metrics(stream: &mut TcpStream, ctx: &WireCtx) {
+    let mut body = ctx.metrics.to_json();
+    let wire = Json::obj(vec![(
+        "jobs_open",
+        Json::num(ctx.jobs.lock().unwrap().len() as f64),
+    )]);
+    if let Json::Obj(fields) = &mut body {
+        fields.push(("wire".to_string(), wire));
+    }
+    respond_json(stream, 200, &body);
+}
+
+fn stream_events(stream: &mut TcpStream, id: u64, ctx: &WireCtx) {
+    // Claim the receiver (take-once).
+    enum Claim {
+        Missing,
+        Busy,
+        Got(Receiver<JobEvent>, CancelToken),
+    }
+    let claim = {
+        let mut jobs = ctx.jobs.lock().unwrap();
+        match jobs.get_mut(&id) {
+            None => Claim::Missing,
+            Some(entry) => match entry.events.take() {
+                None => Claim::Busy,
+                Some(rx) => Claim::Got(rx, entry.cancel.clone()),
+            },
+        }
+    };
+    let (rx, cancel) = match claim {
+        Claim::Missing => return respond_error_status(stream, 404, "no such job"),
+        Claim::Busy => {
+            return respond_error_status(stream, 409, "events already being streamed")
+        }
+        Claim::Got(rx, cancel) => (rx, cancel),
+    };
+
+    if http::write_sse_head(stream).is_err() {
+        abandon_stream(ctx, id, rx, &cancel);
+        return;
+    }
+    let mut cw = ChunkedWriter::new(&mut *stream);
+    loop {
+        match rx.recv() {
+            Ok(ev) => {
+                let terminal = ev.is_terminal();
+                let frame = proto::event_frame(&ev);
+                if cw.write_chunk(frame.as_bytes()).is_err() {
+                    // Client went away mid-stream: stop the job, drain
+                    // to the terminal, deregister. No leak, no orphan.
+                    abandon_stream(ctx, id, rx, &cancel);
+                    return;
+                }
+                if terminal {
+                    let _ = cw.finish();
+                    ctx.jobs.lock().unwrap().remove(&id);
+                    return;
+                }
+            }
+            // Sender dropped without a terminal: server shutting down.
+            Err(_) => {
+                let _ = cw.finish();
+                ctx.jobs.lock().unwrap().remove(&id);
+                return;
+            }
+        }
+    }
+}
+
+/// Mid-stream client loss: fire the cancel token, drain the receiver to
+/// its terminal event, and deregister the job.
+fn abandon_stream(ctx: &WireCtx, id: u64, rx: Receiver<JobEvent>, cancel: &CancelToken) {
+    cancel.cancel();
+    while let Ok(ev) = rx.recv() {
+        if ev.is_terminal() {
+            break;
+        }
+    }
+    ctx.jobs.lock().unwrap().remove(&id);
+}
+
+// A tiny smoke test lives here; the full black-box suite (error paths,
+// SSE vocabulary equivalence, disconnect semantics) is
+// `tests/integration_net.rs`.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn route_split_handles_ids_and_unknowns() {
+        // Pure routing-table sanity via the public surface: exercised
+        // end-to-end in integration_net; here just pin the path parse.
+        let path = "/v1/jobs/1234/events";
+        let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        assert_eq!(segs, ["v1", "jobs", "1234", "events"]);
+        assert_eq!("1234".parse::<u64>().unwrap(), 1234);
+    }
+
+    #[test]
+    fn healthz_answers_without_a_job_server() {
+        // WireServer only needs a Client for job routes; /healthz must
+        // not touch it — but Client cannot be built without a server,
+        // so this stays a raw-socket probe against a full stack in
+        // integration tests. Here: bind/shutdown lifecycle only.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let req = http::read_request(&mut s).unwrap();
+            assert_eq!(req.path, "/healthz");
+            http::write_response(&mut s, 200, "application/json", b"{\"ok\":true}").unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let mut out = Vec::new();
+        c.read_to_end(&mut out).unwrap();
+        assert!(String::from_utf8_lossy(&out).contains("200 OK"));
+        h.join().unwrap();
+    }
+}

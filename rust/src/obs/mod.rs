@@ -90,6 +90,6 @@ mod proptests;
 
 pub use counters::{counters, CountersSnapshot, ResilienceSnapshot};
 pub use trace::{
-    parse_jsonl_lossy, with_current, LifecycleCounts, Phase, SpanEvent, TraceScope, TraceSink,
-    TRACE_SCHEMA_VERSION,
+    compose_job_id, parse_jsonl_lossy, split_job_id, with_current, LifecycleCounts, Phase,
+    SpanEvent, TraceScope, TraceSink, TRACE_SCHEMA_VERSION,
 };

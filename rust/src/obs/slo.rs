@@ -202,12 +202,20 @@ pub const DEFAULT_WINDOW: Duration = Duration::from_secs(1);
 pub const DEFAULT_WINDOWS: usize = 64;
 
 /// Wall-clock front-end over [`WindowRing`]: maps `Instant::now()`
-/// elapsed-since-start onto window indices.
+/// elapsed-since-start onto window indices. Besides the latency ring it
+/// keeps two outcome rings (terminals / deadline misses) so the sliding
+/// deadline-miss *rate* is available to [`ScalePolicy`] — the recorded
+/// values there are ignored, only the windowed counts matter.
 #[derive(Debug)]
 pub struct SloTracker {
     start: Instant,
     window: Duration,
     ring: WindowRing,
+    /// One sample per terminal outcome (done / failed / cancelled /
+    /// deadline miss) — the miss-rate denominator.
+    terminals: WindowRing,
+    /// One sample per deadline miss — the miss-rate numerator.
+    misses: WindowRing,
 }
 
 impl Default for SloTracker {
@@ -222,6 +230,8 @@ impl SloTracker {
             start: Instant::now(),
             window: window.max(Duration::from_millis(1)),
             ring: WindowRing::new(windows),
+            terminals: WindowRing::new(windows),
+            misses: WindowRing::new(windows),
         }
     }
 
@@ -234,9 +244,24 @@ impl SloTracker {
         self.ring.record(i, ms);
     }
 
+    /// Record one terminal outcome into the miss-rate rings.
+    pub fn record_outcome(&mut self, missed_deadline: bool) {
+        let i = self.idx();
+        self.terminals.record(i, 0.0);
+        if missed_deadline {
+            self.misses.record(i, 0.0);
+        }
+    }
+
     /// Histogram over the sliding window ending now.
     pub fn windowed(&self) -> LogHistogram {
         self.ring.sliding(self.idx())
+    }
+
+    /// `(deadline misses, terminal outcomes)` inside the sliding window.
+    pub fn windowed_outcomes(&self) -> (u64, u64) {
+        let i = self.idx();
+        (self.misses.sliding(i).count(), self.terminals.sliding(i).count())
     }
 
     pub fn window_secs(&self) -> f64 {
@@ -245,6 +270,90 @@ impl SloTracker {
 
     pub fn windows(&self) -> usize {
         self.ring.windows()
+    }
+}
+
+// -------------------------------------------------------------- autoscale
+
+/// Autoscaling targets evaluated over the sliding SLO window. Like the
+/// rest of this module it is an *observer*: the advice stream is for an
+/// external scaler (or a human watching `serve --monitor`) — nothing in
+/// the serving path may branch on it (standing invariant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalePolicy {
+    /// Advise up when the windowed p95 exceeds this.
+    pub p95_target_ms: f64,
+    /// Advise up when the windowed deadline-miss rate exceeds this.
+    pub miss_rate_target: f64,
+    /// Minimum windowed samples before any non-[`ScaleAdvice::Hold`]
+    /// advice — a handful of requests after an idle gap must not flap
+    /// the fleet.
+    pub min_samples: u64,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> ScalePolicy {
+        ScalePolicy { p95_target_ms: 500.0, miss_rate_target: 0.05, min_samples: 16 }
+    }
+}
+
+/// What the policy recommends right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScaleAdvice {
+    /// Breach: add capacity.
+    Up,
+    /// Inside targets (or not enough samples to say).
+    #[default]
+    Hold,
+    /// Comfortably under targets: capacity can shrink.
+    Down,
+}
+
+impl ScaleAdvice {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScaleAdvice::Up => "up",
+            ScaleAdvice::Hold => "hold",
+            ScaleAdvice::Down => "down",
+        }
+    }
+}
+
+impl ScalePolicy {
+    /// Evaluate the windowed observations against the targets.
+    ///
+    /// `windowed_count` is the latency-sample count, `windowed_misses` /
+    /// `windowed_terminals` the outcome counts (a deadline-missed job
+    /// never records a latency, so miss pressure must be judged on its
+    /// own denominator — a fleet where *every* job misses still advises
+    /// up). `Down` needs clear margin on both axes (half the target),
+    /// so advice is hysteretic around the breach point rather than
+    /// oscillating on it.
+    pub fn advise(
+        &self,
+        windowed_p95_ms: f64,
+        windowed_count: u64,
+        windowed_misses: u64,
+        windowed_terminals: u64,
+    ) -> ScaleAdvice {
+        let miss_rate = if windowed_terminals == 0 {
+            0.0
+        } else {
+            windowed_misses as f64 / windowed_terminals as f64
+        };
+        if windowed_terminals >= self.min_samples && miss_rate > self.miss_rate_target {
+            return ScaleAdvice::Up;
+        }
+        if windowed_count >= self.min_samples && windowed_p95_ms > self.p95_target_ms {
+            return ScaleAdvice::Up;
+        }
+        if windowed_count >= self.min_samples
+            && windowed_p95_ms < 0.5 * self.p95_target_ms
+            && miss_rate <= 0.5 * self.miss_rate_target
+        {
+            return ScaleAdvice::Down;
+        }
+        ScaleAdvice::Hold
     }
 }
 
@@ -441,6 +550,43 @@ mod tests {
         let w = t.windowed();
         assert_eq!(w.count(), 50);
         assert!(w.percentile(50.0) > 0.0);
+    }
+
+    #[test]
+    fn slo_tracker_windowed_outcomes_count_misses_and_terminals() {
+        let mut t = SloTracker::new(Duration::from_secs(60), 8);
+        assert_eq!(t.windowed_outcomes(), (0, 0));
+        for i in 0..10 {
+            t.record_outcome(i % 5 == 0);
+        }
+        assert_eq!(t.windowed_outcomes(), (2, 10));
+    }
+
+    #[test]
+    fn scale_policy_advises_up_on_p95_breach_and_down_with_margin() {
+        let p = ScalePolicy { p95_target_ms: 100.0, miss_rate_target: 0.1, min_samples: 4 };
+        // Not enough samples: hold, even on a breach.
+        assert_eq!(p.advise(900.0, 3, 0, 3), ScaleAdvice::Hold);
+        // Latency breach with samples: up.
+        assert_eq!(p.advise(150.0, 10, 0, 10), ScaleAdvice::Up);
+        // Comfortably under both targets: down.
+        assert_eq!(p.advise(20.0, 10, 0, 10), ScaleAdvice::Down);
+        // Under the p95 target but not by the required margin: hold
+        // (hysteresis band between down-margin and the breach point).
+        assert_eq!(p.advise(80.0, 10, 0, 10), ScaleAdvice::Hold);
+    }
+
+    #[test]
+    fn scale_policy_judges_miss_pressure_on_its_own_denominator() {
+        let p = ScalePolicy { p95_target_ms: 100.0, miss_rate_target: 0.1, min_samples: 4 };
+        // Every job misses its deadline: no latency samples exist at
+        // all, yet the advice must still be up.
+        assert_eq!(p.advise(0.0, 0, 8, 8), ScaleAdvice::Up);
+        // Miss rate just under target with fast latencies: down needs
+        // the miss rate under *half* the target too.
+        assert_eq!(p.advise(20.0, 20, 1, 20), ScaleAdvice::Down); // 5% = half of 10%
+        assert_eq!(p.advise(20.0, 20, 2, 20), ScaleAdvice::Hold); // 10%: no down margin
+        assert_eq!(p.advise(20.0, 20, 3, 20), ScaleAdvice::Up); // 15% > target
     }
 
     #[test]

@@ -560,9 +560,44 @@ pub fn with_current<F: FnOnce(&TraceSink, u64)>(f: F) {
     }
 }
 
+// ------------------------------------------------- cross-process job ids
+
+/// Compose a fleet-unique job id from a 32-bit origin tag (the wire
+/// tier uses the server's process id) and a process-local counter.
+///
+/// Two `sd-acc serve --listen` processes sharing one cache directory
+/// each write their own JSONL trace; joining those traces on `job`
+/// only works if ids never collide across processes, so the listen
+/// path seeds its `ServerConfig::job_id_base` with
+/// `compose_job_id(pid, 0)` and local ids count up from there. The
+/// span *schema* is untouched — `job` stays one `u64` field — so
+/// `TRACE_SCHEMA_VERSION` does not move; readers that want the split
+/// call [`split_job_id`]. In-process servers keep base 0, where
+/// `compose_job_id(0, n) == n` reproduces the historical ids exactly.
+pub fn compose_job_id(origin: u32, local: u32) -> u64 {
+    ((origin as u64) << 32) | local as u64
+}
+
+/// Split a composed job id back into `(origin, local)`. For ids from
+/// base-0 (in-process) servers the origin is 0.
+pub fn split_job_id(job: u64) -> (u32, u32) {
+    ((job >> 32) as u32, job as u32)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn job_id_compose_split_round_trip() {
+        assert_eq!(compose_job_id(0, 7), 7, "base-0 ids are the historical ids");
+        assert_eq!(split_job_id(7), (0, 7));
+        let id = compose_job_id(0xdead_beef, 42);
+        assert_eq!(split_job_id(id), (0xdead_beef, 42));
+        // Distinct origins can never collide, whatever their counters.
+        assert_ne!(compose_job_id(1, 0), compose_job_id(2, 0));
+        assert_ne!(compose_job_id(1, u32::MAX), compose_job_id(2, 0));
+    }
 
     #[test]
     fn phase_labels_round_trip() {

@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::obs::reservoir::Reservoir;
-use crate::obs::slo::{LogHistogram, PriorityLedger, SloTracker};
+use crate::obs::slo::{LogHistogram, PriorityLedger, ScaleAdvice, ScalePolicy, SloTracker};
 use crate::server::api::Priority;
 use crate::util::json::Json;
 use crate::util::stats;
@@ -74,6 +74,21 @@ pub struct Metrics {
     brownout_transitions: AtomicU64,
     /// Requests rewritten to their cheaper form at admission.
     degraded: AtomicU64,
+    /// Autoscale advice state (`obs::slo::ScalePolicy`), re-evaluated on
+    /// every terminal outcome once a policy is armed. Unarmed (the
+    /// default) this costs one mutex lock per terminal and nothing else.
+    scale: Mutex<ScaleState>,
+}
+
+/// Advice state behind [`Metrics::set_scale_policy`]: the last advice
+/// plus transition counters (an "event" is a *change into* Up/Down, not
+/// every sample that repeats it — scalers want edges, not levels).
+#[derive(Default)]
+struct ScaleState {
+    policy: Option<ScalePolicy>,
+    last: ScaleAdvice,
+    up_events: u64,
+    down_events: u64,
 }
 
 /// A point-in-time summary.
@@ -135,6 +150,13 @@ pub struct Summary {
     pub brownout_transitions: u64,
     /// Requests degraded to a cheaper plan/quant at admission.
     pub degraded: u64,
+    /// Current autoscale advice; `None` when no [`ScalePolicy`] is
+    /// armed (the advice stream is an observer — standing invariant).
+    pub scale_advice: Option<ScaleAdvice>,
+    /// Transitions into `Up` advice since the policy was armed.
+    pub scale_up_events: u64,
+    /// Transitions into `Down` advice since the policy was armed.
+    pub scale_down_events: u64,
 }
 
 impl Metrics {
@@ -145,8 +167,48 @@ impl Metrics {
     pub fn on_done(&self, latency_ms: f64, priority: Priority) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latencies_ms.lock().unwrap().push(latency_ms);
-        self.slo.lock().unwrap().record(latency_ms);
+        {
+            let mut slo = self.slo.lock().unwrap();
+            slo.record(latency_ms);
+            slo.record_outcome(false);
+        }
         self.ledger.lock().unwrap().on_done(priority, latency_ms);
+        self.reassess_scale();
+    }
+
+    /// Arm (or replace) the autoscale policy; advice is re-evaluated on
+    /// every terminal outcome from then on and surfaced in
+    /// [`Summary::scale_advice`].
+    pub fn set_scale_policy(&self, policy: ScalePolicy) {
+        let mut st = self.scale.lock().unwrap();
+        st.policy = Some(policy);
+    }
+
+    /// Re-evaluate the armed policy against the sliding window,
+    /// counting transitions into Up/Down. Never holds the `scale` and
+    /// `slo` locks at the same time (summary takes them in the other
+    /// order).
+    fn reassess_scale(&self) {
+        let policy = match self.scale.lock().unwrap().policy.clone() {
+            Some(p) => p,
+            None => return,
+        };
+        let (p95, count, misses, terminals) = {
+            let slo = self.slo.lock().unwrap();
+            let w = slo.windowed();
+            let (m, t) = slo.windowed_outcomes();
+            (w.percentile(95.0), w.count(), m, t)
+        };
+        let advice = policy.advise(p95, count, misses, terminals);
+        let mut st = self.scale.lock().unwrap();
+        if advice != st.last {
+            match advice {
+                ScaleAdvice::Up => st.up_events += 1,
+                ScaleAdvice::Down => st.down_events += 1,
+                ScaleAdvice::Hold => {}
+            }
+            st.last = advice;
+        }
     }
 
     /// Exact latency samples currently held by the all-time reservoir
@@ -192,13 +254,17 @@ impl Metrics {
     /// `Cancelled` terminal — when the fire time is known.
     pub fn on_cancelled(&self, priority: Priority, ack_ms: Option<f64>) {
         self.cancellations.fetch_add(1, Ordering::Relaxed);
+        self.slo.lock().unwrap().record_outcome(false);
         self.ledger.lock().unwrap().on_cancelled(priority, ack_ms);
+        self.reassess_scale();
     }
 
     /// Job dropped because its deadline elapsed before a worker ran it.
     pub fn on_deadline_miss(&self, priority: Priority) {
         self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        self.slo.lock().unwrap().record_outcome(true);
         self.ledger.lock().unwrap().on_deadline_miss(priority);
+        self.reassess_scale();
     }
 
     /// Submission refused by bounded admission (queue at capacity).
@@ -274,6 +340,10 @@ impl Metrics {
             let slo = self.slo.lock().unwrap();
             (slo.windowed(), slo.window_secs(), slo.windows())
         };
+        let (scale_advice, scale_up_events, scale_down_events) = {
+            let st = self.scale.lock().unwrap();
+            (st.policy.as_ref().map(|_| st.last), st.up_events, st.down_events)
+        };
         Summary {
             enqueued: self.enqueued.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -322,6 +392,9 @@ impl Metrics {
             sheds: self.sheds.load(Ordering::Relaxed),
             brownout_transitions: self.brownout_transitions.load(Ordering::Relaxed),
             degraded: self.degraded.load(Ordering::Relaxed),
+            scale_advice,
+            scale_up_events,
+            scale_down_events,
         }
     }
 }
@@ -392,6 +465,17 @@ impl Summary {
                     ("brownout_transitions", Json::Num(self.brownout_transitions as f64)),
                     ("degraded", Json::Num(self.degraded as f64)),
                 ]),
+            ),
+            (
+                "autoscale",
+                match self.scale_advice {
+                    None => Json::Null,
+                    Some(advice) => Json::obj(vec![
+                        ("advice", Json::str(advice.as_str())),
+                        ("up_events", Json::Num(self.scale_up_events as f64)),
+                        ("down_events", Json::Num(self.scale_down_events as f64)),
+                    ]),
+                },
             ),
         ])
     }
@@ -604,6 +688,70 @@ mod tests {
         assert_eq!(r.get_usize("sheds"), Some(1));
         assert_eq!(r.get_usize("brownout_transitions"), Some(2));
         assert_eq!(r.get_usize("degraded"), Some(1));
+    }
+
+    #[test]
+    fn unarmed_metrics_report_no_autoscale_advice() {
+        let m = Metrics::default();
+        m.on_done(10.0, Priority::Normal);
+        let s = m.summary();
+        assert_eq!(s.scale_advice, None);
+        assert_eq!((s.scale_up_events, s.scale_down_events), (0, 0));
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("autoscale"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn armed_policy_advises_up_on_breach_and_counts_transitions_once() {
+        let m = Metrics::default();
+        m.set_scale_policy(ScalePolicy {
+            p95_target_ms: 50.0,
+            miss_rate_target: 0.5,
+            min_samples: 4,
+        });
+        for _ in 0..10 {
+            m.on_done(200.0, Priority::Normal); // p95 way over target
+        }
+        let s = m.summary();
+        assert_eq!(s.scale_advice, Some(ScaleAdvice::Up));
+        assert_eq!(s.scale_up_events, 1, "edge-triggered: one event for a held breach");
+        assert_eq!(s.scale_down_events, 0);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        let auto = parsed.get("autoscale").unwrap();
+        assert_eq!(auto.get_str("advice"), Some("up"));
+        assert_eq!(auto.get_usize("up_events"), Some(1));
+    }
+
+    #[test]
+    fn armed_policy_advises_down_when_comfortably_under_targets() {
+        let m = Metrics::default();
+        m.set_scale_policy(ScalePolicy {
+            p95_target_ms: 1000.0,
+            miss_rate_target: 0.5,
+            min_samples: 4,
+        });
+        for _ in 0..10 {
+            m.on_done(5.0, Priority::Normal);
+        }
+        let s = m.summary();
+        assert_eq!(s.scale_advice, Some(ScaleAdvice::Down));
+        assert_eq!(s.scale_down_events, 1);
+    }
+
+    #[test]
+    fn deadline_miss_pressure_advises_up_without_latency_samples() {
+        let m = Metrics::default();
+        m.set_scale_policy(ScalePolicy {
+            p95_target_ms: 1000.0,
+            miss_rate_target: 0.05,
+            min_samples: 4,
+        });
+        for _ in 0..8 {
+            m.on_deadline_miss(Priority::Normal); // no on_done at all
+        }
+        let s = m.summary();
+        assert_eq!(s.scale_advice, Some(ScaleAdvice::Up));
+        assert!(s.scale_up_events >= 1);
     }
 
     #[test]

@@ -64,6 +64,7 @@ use anyhow::Result;
 
 use crate::cache::Cache;
 use crate::coordinator::{BatchKey, Coordinator, GenRequest, GenResult, SdError, StepObserver};
+use crate::obs::slo::ScalePolicy;
 use crate::obs::{counters, Phase, SpanEvent, TraceScope, TraceSink};
 use crate::pas::plan::StepAction;
 use batcher::{BatchItem, Batcher, DropReason};
@@ -173,6 +174,16 @@ pub struct ServerConfig {
     /// Failure-handling knobs (retry / hedge / shed / brownout). The
     /// default is inert beyond transient-retry classification.
     pub resilience: ResiliencePolicy,
+    /// First [`JobId`] this server mints (ids count up from here). The
+    /// wire tier seeds it with `obs::compose_job_id(pid, 0)` so traces
+    /// from N serve processes sharing one cache stay joinable on the
+    /// `job` field without colliding; the default `0` reproduces the
+    /// historical in-process ids.
+    pub job_id_base: u64,
+    /// SLO autoscaling targets; `None` (the default) leaves the
+    /// advice surface unarmed. Purely an observer output — advice never
+    /// feeds back into admission or batching (standing invariant).
+    pub scale_policy: Option<ScalePolicy>,
 }
 
 impl Default for ServerConfig {
@@ -184,6 +195,8 @@ impl Default for ServerConfig {
             max_queue: 1024,
             trace: None,
             resilience: ResiliencePolicy::default(),
+            job_id_base: 0,
+            scale_policy: None,
         }
     }
 }
@@ -735,9 +748,14 @@ fn run_group(batch: Vec<Job>, ctx: &WorkerCtx) -> usize {
                 ctx.metrics.on_batch(batch_size);
                 // Populate the request cache (best-effort; a full disk
                 // must not fail the request). Hedge runs never write:
-                // the primary attempt stores the canonical entry.
+                // the primary attempt stores the canonical entry. Each
+                // put runs under the *owning* lane's trace scope, so
+                // `cache-write` spans carry that job's id — joinable
+                // across processes — instead of the group lead's.
                 if let Some(cache) = ctx.cache.as_deref() {
-                    for (req, r) in reqs.iter().zip(&results) {
+                    for ((job, req), r) in group.iter().zip(reqs.iter()).zip(&results) {
+                        let _lane_scope =
+                            ctx.trace.clone().map(|t| TraceScope::enter(t, job.id.0));
                         if let Ok(evicted) = cache.put_result(req, r) {
                             ctx.metrics.on_cache_evictions(evicted);
                         }
@@ -862,6 +880,9 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Job>();
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::default());
+        if let Some(policy) = cfg.scale_policy.clone() {
+            metrics.set_scale_policy(policy);
+        }
         let depth = Arc::new(AtomicUsize::new(0));
         let (work_tx, work_rx) = mpsc::channel::<Vec<Job>>();
         let work_rx = Arc::new(Mutex::new(work_rx));
@@ -946,7 +967,7 @@ impl Server {
             metrics: Arc::clone(&metrics),
             depth,
             max_queue: cfg.max_queue,
-            next_id: Arc::new(AtomicU64::new(0)),
+            next_id: Arc::new(AtomicU64::new(cfg.job_id_base)),
             trace: cfg.trace.clone(),
             policy: cfg.resilience.clone(),
             pressure: Arc::new(PressureState::new()),

@@ -217,6 +217,16 @@ fn write_escaped(s: &str, out: &mut String) {
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
             c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) > 0xffff => {
+                // JSON's \u escape is UTF-16, so astral code points
+                // travel as a surrogate pair. Raw UTF-8 would be legal
+                // JSON too, but escaping keeps every byte of a wire
+                // frame inside ASCII once the BMP text is (SSE `data:`
+                // lines must never contain a stray control byte).
+                let v = c as u32 - 0x1_0000;
+                out.push_str(&format!("\\u{:04x}", 0xd800 + (v >> 10)));
+                out.push_str(&format!("\\u{:04x}", 0xdc00 + (v & 0x3ff)));
+            }
             c => out.push(c),
         }
     }
@@ -350,19 +360,29 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
+                            let cp = self.hex4(self.i + 1)?;
+                            if (0xd800..=0xdbff).contains(&cp)
+                                && self.b.get(self.i + 5) == Some(&b'\\')
+                                && self.b.get(self.i + 6) == Some(&b'u')
+                                && self
+                                    .hex4(self.i + 7)
+                                    .map_or(false, |lo| (0xdc00..=0xdfff).contains(&lo))
+                            {
+                                // High + low surrogate pair: one astral
+                                // code point (what our writer emits for
+                                // anything past the BMP).
+                                let lo = self.hex4(self.i + 7)?;
+                                let c = 0x1_0000 + ((cp - 0xd800) << 10) + (lo - 0xdc00);
+                                out.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                self.i += 10;
+                            } else {
+                                // Lone surrogates have no scalar value:
+                                // decode as the replacement char (a
+                                // following non-pairing escape is
+                                // re-parsed on the next loop turn).
+                                out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                self.i += 4;
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs: only BMP escapes are produced
-                            // by our own writer; accept lone surrogates as
-                            // replacement chars.
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -378,6 +398,16 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits starting at byte `at` (the payload of a `\u`).
+    fn hex4(&self, at: usize) -> Result<u32, JsonError> {
+        if at + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[at..at + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
     }
 
     fn number(&mut self) -> Result<Json, JsonError> {
@@ -461,6 +491,76 @@ mod tests {
     fn unicode_roundtrip() {
         let v = Json::Str("héllo ☃ \u{1}".into());
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn astral_code_points_escape_as_surrogate_pairs() {
+        let v = Json::Str("\u{1f600}".into());
+        assert_eq!(v.to_string(), "\"\\ud83d\\ude00\"");
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        // Raw (unescaped) astral chars in the input parse too.
+        assert_eq!(Json::parse("\"\u{1f600}\"").unwrap(), v);
+        // Mixed with surrounding text and a second pair.
+        let v = Json::Str("a\u{1f680}b\u{10348}".into());
+        let text = v.to_string();
+        assert!(text.is_ascii(), "astral escapes keep the frame ASCII: {text}");
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn lone_surrogates_decode_as_replacement() {
+        assert_eq!(Json::parse("\"\\ud800\"").unwrap(), Json::Str("\u{fffd}".into()));
+        assert_eq!(Json::parse("\"\\udc00x\"").unwrap(), Json::Str("\u{fffd}x".into()));
+        // High surrogate followed by a non-pairing escape: only the
+        // high half is replaced, the next escape decodes normally.
+        assert_eq!(
+            Json::parse("\"\\ud800\\u0041\"").unwrap(),
+            Json::Str("\u{fffd}A".into())
+        );
+        // Truncated second escape is still a clean parse error shape,
+        // not a panic: "\ud800\u00" ends mid-escape.
+        assert!(Json::parse("\"\\ud800\\u00\"").is_err());
+    }
+
+    #[test]
+    fn control_chars_escape_and_roundtrip() {
+        let s: String = (1u8..0x20).map(|b| b as char).collect();
+        let v = Json::Str(s);
+        let text = v.to_string();
+        assert!(text.is_ascii());
+        assert!(!text.contains('\u{1}'), "control bytes never appear raw");
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    /// The wire-safety property: any `String` — control characters,
+    /// BMP, astral plane — serialises to JSON that parses back to the
+    /// identical string.
+    #[test]
+    fn string_escaping_roundtrip_property() {
+        use crate::testing::{check_no_shrink, gen_usize};
+        check_no_shrink(
+            "json-string-escape-roundtrip",
+            |rng| {
+                let len = gen_usize(rng, 0, 24);
+                (0..len)
+                    .map(|_| loop {
+                        // Mix plain ASCII, control chars, BMP and astral
+                        // code points; from_u32 rejects the surrogate gap.
+                        let cp = match gen_usize(rng, 0, 3) {
+                            0 => gen_usize(rng, 0x20, 0x7e) as u32,
+                            1 => gen_usize(rng, 0x00, 0x1f) as u32,
+                            2 => gen_usize(rng, 0x80, 0xffff) as u32,
+                            _ => gen_usize(rng, 0x1_0000, 0x10_ffff) as u32,
+                        };
+                        if let Some(c) = char::from_u32(cp) {
+                            break c;
+                        }
+                    })
+                    .collect::<String>()
+            },
+            |s| Json::parse(&Json::Str(s.clone()).to_string()).ok()
+                == Some(Json::Str(s.clone())),
+        );
     }
 
     #[test]

@@ -196,3 +196,85 @@ fn pre_v3_store_is_flushed_not_misread() {
     assert!(cache.get_result(&req).is_some());
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn two_handles_hammering_one_dir_never_tear_the_index() {
+    // Two `Store` handles on one directory stand in for two serve
+    // processes sharing a cache: same advisory-lock protocol, same
+    // merge-on-commit paths, and the shared in-process memory tier is
+    // disabled below so nothing can mask a disk-level loss. Four threads
+    // hammer put/get/gc/flush concurrently; afterwards the index must
+    // still parse, a fresh handle must open cleanly, and quiescent
+    // committed (put + flushed, no concurrent gc) sentinels must all
+    // survive. Entries whose put raced a sibling's gc may be orphan-
+    // swept before their index commit lands — the documented buffered-
+    // put hazard — so the hammer phase asserts liveness, not presence.
+    use std::sync::Arc;
+
+    let dir = tmp_dir("hammer");
+    // Tier disabled: all three handles live in one process, so the
+    // shared write-through memory tier would mask a lost disk commit.
+    let cfg = || StoreConfig::new(&dir).with_mem_tier_bytes(0);
+    let a = Arc::new(Store::open(cfg()).unwrap());
+    let b = Arc::new(Store::open(cfg()).unwrap());
+
+    let mut threads = Vec::new();
+    for (t, store) in [(0u64, &a), (1, &a), (2, &b), (3, &b)] {
+        let store = Arc::clone(store);
+        threads.push(std::thread::spawn(move || {
+            let payload = vec![t as u8 + 1; 96];
+            for n in 0..60u64 {
+                let key = sd_acc::cache::CacheKey(t * 10_000 + n);
+                store.put("request", key, &payload).expect("put never errors");
+                // Read-mix: our own earlier keys and a sibling range.
+                let probe = sd_acc::cache::CacheKey(((t + 2) % 4) * 10_000 + n / 2);
+                let _ = store.get("request", probe);
+                let _ = store.get("request", key);
+                if n % 20 == 19 {
+                    store.gc().expect("gc never errors");
+                }
+                if n % 10 == 9 {
+                    store.flush().expect("flush never errors");
+                }
+            }
+        }));
+    }
+    for th in threads {
+        th.join().expect("no hammer thread may panic");
+    }
+
+    // Quiescent commit: sentinels on both handles, flushed, then gc'd
+    // from both sides — gc must adopt the sibling's flushed entries via
+    // the disk merge, never sweep them.
+    let sentinel_payload = |i: u64| vec![0xA0u8 ^ i as u8; 48];
+    for i in 0..8u64 {
+        a.put("request", sd_acc::cache::CacheKey(900_000 + i), &sentinel_payload(i)).unwrap();
+        b.put("request", sd_acc::cache::CacheKey(910_000 + i), &sentinel_payload(i)).unwrap();
+    }
+    a.flush().unwrap();
+    b.flush().unwrap();
+    a.gc().unwrap();
+    b.gc().unwrap();
+
+    // The on-disk index is valid JSON (never torn by the concurrent
+    // load-merge-write traffic).
+    let raw = std::fs::read_to_string(dir.join("index.json")).expect("index exists");
+    sd_acc::util::json::Json::parse(&raw).expect("index parses as JSON");
+
+    // A fresh handle (third "process") sees every committed sentinel.
+    let c = Store::open(cfg()).unwrap();
+    for i in 0..8u64 {
+        assert_eq!(
+            c.get("request", sd_acc::cache::CacheKey(900_000 + i)).as_deref(),
+            Some(&sentinel_payload(i)[..]),
+            "sentinel committed through handle a lost (i={i})"
+        );
+        assert_eq!(
+            c.get("request", sd_acc::cache::CacheKey(910_000 + i)).as_deref(),
+            Some(&sentinel_payload(i)[..]),
+            "sentinel committed through handle b lost (i={i})"
+        );
+    }
+    assert!(c.stats().entries >= 16, "sentinels all indexed");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,331 @@
+//! Integration: the wire tier (`net`) end to end over real loopback
+//! sockets, on the deterministic sim backend — no artifacts required.
+//!
+//! What is pinned here:
+//! - **Stream equivalence**: the SSE label sequence for a job equals
+//!   the in-process `JobHandle` event sequence — same vocabulary, same
+//!   order, exactly one terminal frame.
+//! - **Error mapping**: oversized bodies (413), malformed JSON (400),
+//!   unknown routes (404), wrong methods (405), unknown jobs (404),
+//!   double-streaming (409) — all deterministic statuses, never hangs.
+//! - **Disconnect semantics**: a client that vanishes mid-stream fires
+//!   the job's cancel token and the registry drains to empty — no
+//!   leaked entries, no orphaned running jobs.
+//! - **Control plane**: `DELETE` cancels, `/healthz` and `/metrics`
+//!   answer, `/admin/shutdown` drains gracefully even with
+//!   submitted-but-never-streamed jobs parked in the registry.
+//! - **Cache visibility**: a repeated request against a cache-backed
+//!   server streams `cache-hit` and the same latent checksum.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sd_acc::cache::StoreConfig;
+use sd_acc::coordinator::Coordinator;
+use sd_acc::net::{WireClient, WireServer};
+use sd_acc::runtime::{default_artifacts_dir, BackendKind, RuntimeService};
+use sd_acc::server::{Server, ServerConfig};
+use sd_acc::util::json::Json;
+
+/// Sim runtime + job server + wire server on an ephemeral loopback
+/// port. `None` only if the sim backend fails to start (then the test
+/// skips, mirroring the other suites).
+fn wire_stack(cfg: ServerConfig) -> Option<(RuntimeService, Server, WireServer)> {
+    let svc = match RuntimeService::start_with_faults(BackendKind::Sim, &default_artifacts_dir(), None)
+    {
+        Ok(svc) => svc,
+        Err(e) => {
+            eprintln!("sim backend failed to start: {e:#}");
+            return None;
+        }
+    };
+    let coord = Arc::new(Coordinator::new(svc.handle()));
+    let server = Server::start(coord, cfg);
+    let wire = WireServer::start(
+        server.client(),
+        Arc::clone(&server.metrics),
+        "127.0.0.1:0",
+        4,
+    )
+    .expect("wire server binds loopback");
+    Some((svc, server, wire))
+}
+
+fn quick_cfg() -> ServerConfig {
+    ServerConfig { workers: 1, max_wait: Duration::from_millis(0), ..Default::default() }
+}
+
+fn body(prompt: &str, seed: u64, steps: usize) -> Json {
+    Json::obj(vec![
+        ("prompt", Json::str(prompt)),
+        ("seed", Json::num(seed as f64)),
+        ("steps", Json::num(steps as f64)),
+    ])
+}
+
+fn wait_until(timeout: Duration, mut pred: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if pred() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    pred()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sdacc_inet_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn wire_stream_matches_in_process_event_sequence() {
+    let Some((_svc, server, wire)) = wire_stack(quick_cfg()) else { return };
+    let client = WireClient::new(wire.addr().to_string());
+
+    // In-process reference: same request shape, collected from the
+    // JobHandle the wire tier wraps.
+    let req = sd_acc::coordinator::GenRequest::builder("blue circle x4 y5", 4242)
+        .steps(4)
+        .build()
+        .unwrap();
+    let handle = server.client().submit(req).unwrap();
+    let mut reference = Vec::new();
+    for ev in handle.events.iter() {
+        reference.push(ev.label().to_string());
+        if ev.is_terminal() {
+            break;
+        }
+    }
+
+    // Wire run of the identical request (no cache configured, so the
+    // repeat is a full re-generation with the same event shape).
+    let (_id, events) = client.run(&body("blue circle x4 y5", 4242, 4)).unwrap();
+    let wire_labels: Vec<String> = events.iter().map(|e| e.label.clone()).collect();
+
+    assert_eq!(
+        wire_labels, reference,
+        "SSE stream must carry the in-process event sequence verbatim"
+    );
+    assert_eq!(
+        events.iter().filter(|e| e.is_terminal()).count(),
+        1,
+        "exactly one terminal frame"
+    );
+    assert_eq!(events.last().unwrap().label, "done");
+    // The done frame carries the result summary, not the latent.
+    let done = &events.last().unwrap().data;
+    assert!(done.get_usize("latent_len").unwrap() > 0);
+    assert_eq!(done.get_str("latent_fnv").unwrap().len(), 16);
+    assert!(done.get("label").is_some() && done.get("mac_reduction").is_some());
+
+    assert_eq!(wire.jobs_open(), 0, "streamed-to-terminal jobs deregister");
+    wire.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn error_paths_have_deterministic_statuses() {
+    let Some((_svc, server, wire)) = wire_stack(quick_cfg()) else { return };
+    let addr = wire.addr();
+    let client = WireClient::new(addr.to_string());
+
+    let raw = |request: &str| -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        let _ = s.read_to_string(&mut out);
+        out
+    };
+
+    // Malformed JSON body -> 400 with a structured error.
+    let resp = raw("POST /v1/jobs HTTP/1.1\r\nContent-Length: 9\r\n\r\n{\"broken\"");
+    assert!(resp.starts_with("HTTP/1.1 400 "), "{resp}");
+    assert!(resp.contains("bad json"), "{resp}");
+
+    // Valid JSON, invalid request -> 400 with the builder's wording.
+    let (status, err) = client
+        .call(
+            "POST",
+            "/v1/jobs",
+            Some(&Json::obj(vec![
+                ("prompt", Json::str("x")),
+                ("seed", Json::num(1.0)),
+                ("steps", Json::num(0.0)),
+            ])),
+        )
+        .unwrap();
+    assert_eq!(status, 400);
+    assert!(err.get_str("error").unwrap().contains("steps must be >= 1"), "{err:?}");
+
+    // Oversized declared body -> 413 without reading it.
+    let resp = raw(&format!(
+        "POST /v1/jobs HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        10 * 1024 * 1024
+    ));
+    assert!(resp.starts_with("HTTP/1.1 413 "), "{resp}");
+
+    // Unknown route -> 404; known route, wrong method -> 405.
+    let (status, _) = client.call("GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client.call("PUT", "/v1/jobs", None).unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = client.call("GET", "/v1/jobs/999999/events", None).unwrap();
+    assert_eq!(status, 404, "unknown job id");
+    let (status, _) = client.call("DELETE", "/v1/jobs/999999", None).unwrap();
+    assert_eq!(status, 404);
+
+    // Double-stream: park a long job, claim its stream, then try again.
+    let id = client.submit(&body("red circle x2 y2", 777, 300)).unwrap();
+    let addr2 = addr;
+    let streamer = std::thread::spawn(move || {
+        let c = WireClient::new(addr2.to_string());
+        // Disconnect after the first frame; the server cancels the job.
+        let _ = c.stream(id, |_| false);
+    });
+    // While (or shortly after) the first claim holds, a second claim
+    // must see 409 or — once the abandoned job is reaped — 404; never a
+    // second live stream. Poll until the claim is visibly taken.
+    let saw = wait_until(Duration::from_secs(5), || {
+        let (status, _) = client.call("GET", &format!("/v1/jobs/{id}/events"), None).unwrap();
+        status == 409 || status == 404
+    });
+    assert!(saw, "second streamer must be refused");
+    streamer.join().unwrap();
+
+    assert!(
+        wait_until(Duration::from_secs(10), || wire.jobs_open() == 0),
+        "registry drains after refusals"
+    );
+    wire.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_the_job_and_leaks_nothing() {
+    let Some((_svc, server, wire)) = wire_stack(quick_cfg()) else { return };
+    let client = WireClient::new(wire.addr().to_string());
+
+    // Long enough that the disconnect lands mid-run.
+    let id = client.submit(&body("green stripe x3 y3", 909, 400)).unwrap();
+    let events = client
+        .stream(id, |ev| !matches!(ev.label.as_str(), "step"))
+        .unwrap();
+    // We hung up at the first step frame — no terminal was seen here.
+    assert!(events.iter().all(|e| !e.is_terminal()), "{events:?}");
+
+    // Server side: cancel fires, the job drains, the registry empties.
+    assert!(
+        wait_until(Duration::from_secs(10), || wire.jobs_open() == 0),
+        "abandoned stream must deregister its job"
+    );
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            server.metrics.summary().cancellations >= 1
+        }),
+        "disconnect must cancel the running job"
+    );
+    wire.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn delete_cancels_and_the_stream_ends_in_cancelled() {
+    let Some((_svc, server, wire)) = wire_stack(quick_cfg()) else { return };
+    let client = WireClient::new(wire.addr().to_string());
+
+    let id = client.submit(&body("red square x5 y5", 31337, 400)).unwrap();
+    client.cancel(id).unwrap();
+    let events = client.stream(id, |_| true).unwrap();
+    assert_eq!(events.iter().filter(|e| e.is_terminal()).count(), 1);
+    assert_eq!(
+        events.last().unwrap().label,
+        "cancelled",
+        "DELETE before/while running must terminate in `cancelled`: {events:?}"
+    );
+    assert_eq!(wire.jobs_open(), 0);
+    wire.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn control_plane_answers_and_shutdown_drains_parked_jobs() {
+    let Some((_svc, server, wire)) = wire_stack(quick_cfg()) else { return };
+    let client = WireClient::new(wire.addr().to_string());
+
+    assert!(client.healthz().unwrap());
+    let m = client.metrics().unwrap();
+    assert!(m.get("summary").is_some() || m.get("completed").is_some() || m.as_obj().is_some());
+    let wire_gauge = m.get("wire").expect("metrics carries the wire section");
+    assert_eq!(wire_gauge.get_usize("jobs_open").unwrap(), 0);
+
+    // Park two jobs nobody ever streams, then ask for graceful drain:
+    // the shutdown path must cancel + drain them rather than wedge.
+    let _a = client.submit(&body("red circle x9 y9", 5001, 300)).unwrap();
+    let _b = client.submit(&body("red circle x8 y8", 5002, 300)).unwrap();
+    client.shutdown().unwrap();
+    wire.wait(); // returns once the accept loop exits and handlers drain
+    server.shutdown(); // must not hang on orphaned jobs
+}
+
+#[test]
+fn repeated_wire_request_hits_the_cache_with_identical_checksum() {
+    let svc = match RuntimeService::start_with_faults(
+        BackendKind::Sim,
+        &default_artifacts_dir(),
+        None,
+    ) {
+        Ok(svc) => svc,
+        Err(e) => {
+            eprintln!("sim backend failed to start: {e:#}");
+            return;
+        }
+    };
+    let coord = Arc::new(Coordinator::new(svc.handle()));
+    let dir = temp_dir("wirehit");
+    let cache = Arc::new(coord.open_cache(StoreConfig::new(&dir)).unwrap());
+    let server = Server::start(
+        coord,
+        ServerConfig {
+            workers: 1,
+            max_wait: Duration::from_millis(0),
+            cache: Some(cache),
+            ..Default::default()
+        },
+    );
+    let wire = WireServer::start(
+        server.client(),
+        Arc::clone(&server.metrics),
+        "127.0.0.1:0",
+        4,
+    )
+    .unwrap();
+    let client = WireClient::new(wire.addr().to_string());
+
+    let (_, cold) = client.run(&body("magenta circle x6 y6", 606, 6)).unwrap();
+    assert_eq!(cold.last().unwrap().label, "done");
+    let cold_fnv = cold.last().unwrap().data.get_str("latent_fnv").unwrap().to_string();
+    assert!(cold.iter().all(|e| e.label != "cache-hit"));
+
+    let (_, warm) = client.run(&body("magenta circle x6 y6", 606, 6)).unwrap();
+    let warm_labels: Vec<&str> = warm.iter().map(|e| e.label.as_str()).collect();
+    assert!(
+        warm_labels.contains(&"cache-hit"),
+        "second identical request must stream cache-hit: {warm_labels:?}"
+    );
+    assert_eq!(warm.last().unwrap().label, "done");
+    assert_eq!(
+        warm.last().unwrap().data.get_str("latent_fnv").unwrap(),
+        cold_fnv,
+        "cache hit must serve the bit-identical latent"
+    );
+
+    wire.shutdown();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -75,6 +75,21 @@ macro_rules! bail {
     };
 }
 
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 /// Extension trait adding `.context(..)` / `.with_context(..)`.
 pub trait Context<T> {
     fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
@@ -115,6 +130,18 @@ mod tests {
         assert_eq!(e.to_string(), "bad value 42");
         assert_eq!(format!("{e:#}"), "bad value 42");
         assert_eq!(format!("{e:?}"), "bad value 42");
+    }
+
+    #[test]
+    fn ensure_returns_early_only_on_failure() {
+        fn check(v: u32) -> Result<u32> {
+            ensure!(v < 10, "value {v} out of range");
+            ensure!(v != 9);
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(12).unwrap_err().to_string(), "value 12 out of range");
+        assert_eq!(check(9).unwrap_err().to_string(), "condition failed: `v != 9`");
     }
 
     #[test]

@@ -3,9 +3,10 @@
 #
 # Usage: ./ci.sh [--no-clippy] [--no-fmt] [--bench-commit]
 #   SD_ACC_PROP_CASES=16 ./ci.sh     # trim property-test cases for speed
-#   ./ci.sh --bench-commit           # also refresh BENCH_obs.json and
-#                                    # BENCH_chaos.json (repo root) after
-#                                    # validating schemas and budgets
+#   ./ci.sh --bench-commit           # also refresh BENCH_obs.json,
+#                                    # BENCH_chaos.json and BENCH_policy.json
+#                                    # (repo root) after validating schemas
+#                                    # and budgets
 #
 # The crate builds fully offline: external deps are vendored under
 # rust/vendor (anyhow subset + backend-less xla stub), so no network or
@@ -91,6 +92,14 @@ echo "$analyze_out" | grep -q "where does a millisecond go" \
 echo "$analyze_out" | grep -q "(validated)" \
     || { echo "chrome export did not self-validate" >&2; exit 1; }
 rm -rf "$trace_tmp"
+
+echo "== policy bench (smoke) =="
+# Approximation-policy pass: on the sim backend, the cold-started
+# StabilityPolicy (no calibration.json anywhere) must skip at least as
+# many MACs as the calibrated 25-step PAS plan while staying inside its
+# latent-PSNR quality band against the shared full-trajectory
+# reference. Writes nothing; full mode refreshes BENCH_policy.json.
+cargo bench --bench bench_policy -- --smoke
 
 echo "== chaos bench (smoke) =="
 # Resilience pass: a seeded transient-fault wave (closed loop) must
@@ -185,6 +194,25 @@ rm -rf "$wire_tmp"
 trap - EXIT
 echo "wire lane: done + cancel + cross-process cache hit verified"
 
+echo "== policy serve lane =="
+# End-to-end CLI pass for the approximation-policy subsystem: a serve
+# run under `--policy stability` plus a load mix spanning two policies
+# must complete work under BOTH policy ids (the per-policy report
+# lines), and `sd-acc policy list` must print the full registry.
+policy_out="$(./target/release/sd-acc serve --backend sim --workers 2 \
+    --policy stability \
+    --load "closed:n=12,seed=5,steps=3,mix=pas*1+stability:90*1")"
+echo "$policy_out" | grep -qE '^policy pas: [1-9][0-9]* ok$' \
+    || { echo "policy lane: no completed work under the pas policy" >&2; echo "$policy_out" >&2; exit 1; }
+echo "$policy_out" | grep -qE '^policy stability:90: [1-9][0-9]* ok$' \
+    || { echo "policy lane: no completed work under the stability policy" >&2; echo "$policy_out" >&2; exit 1; }
+list_out="$(./target/release/sd-acc policy list)"
+for p in pas block-cache stability text-precision; do
+    echo "$list_out" | grep -q "$p" \
+        || { echo "policy lane: 'sd-acc policy list' missing '$p'" >&2; exit 1; }
+done
+echo "policy lane: per-policy goodput + registry listing verified"
+
 if [ "$bench_commit" = 1 ]; then
     echo "== obs bench (commit trajectory point) =="
     # Full measurement; validates schema + the allocs/step budget against
@@ -196,6 +224,10 @@ if [ "$bench_commit" = 1 ]; then
     echo "== chaos bench (commit trajectory point) =="
     # Same gates as the smoke lane, then rewrite BENCH_chaos.json.
     cargo bench --bench bench_chaos -- --commit
+
+    echo "== policy bench (commit trajectory point) =="
+    # Same gates as the smoke lane, then rewrite BENCH_policy.json.
+    cargo bench --bench bench_policy -- --commit
 fi
 
 if [ "$run_fmt" = 1 ]; then

@@ -1,0 +1,184 @@
+//! Approximation-policy bench: the deterministic sim-backed comparison
+//! behind the committed `BENCH_policy.json` trajectory (repo root).
+//!
+//! Three runs of the same 25-step prompt/seed on the sim backend:
+//!
+//! - **full** — all-full reference trajectory (quality anchor);
+//! - **pas** — the calibrated PAS plan (`t_sparse=4`), the paper's
+//!   default approximation and this bench's quality floor;
+//! - **stability** — `StabilityPolicy` running *cold* (no
+//!   calibration.json exists in the temp artifacts dir), the online
+//!   alternative the policy subsystem adds.
+//!
+//! Reported per run: MAC reduction vs all-full (from `GenStats`) and
+//! latent PSNR against the full reference (`quality::latent_psnr`).
+//!
+//! Modes (ci.sh):
+//!   `--smoke`  validate only: StabilityPolicy must skip at least as
+//!              many MACs as the PAS plan while landing inside the PAS
+//!              quality band (PSNR within 6 dB of the PAS run). No
+//!              file writes. This is the ISSUE acceptance criterion:
+//!              uncalibrated stability meets the PAS floor.
+//!   `--commit` everything `--smoke` checks, then rewrite
+//!              `BENCH_policy.json`.
+//!   default    measure and print, write nothing.
+//!
+//! Run: `cargo bench --bench bench_policy [-- --smoke | -- --commit]`
+
+use std::path::Path;
+
+use sd_acc::coordinator::{Coordinator, GenRequest, SamplerKind};
+use sd_acc::pas::plan::{PasConfig, SamplingPlan};
+use sd_acc::policy::PolicySpec;
+use sd_acc::quality;
+use sd_acc::runtime::{BackendKind, RuntimeService};
+use sd_acc::util::json::Json;
+
+/// Keys every BENCH_policy.json point must carry (schema validation).
+const REQUIRED_KEYS: [&str; 8] = [
+    "bench",
+    "steps",
+    "mac_reduction_pas",
+    "mac_reduction_stability",
+    "psnr_pas_db",
+    "psnr_stability_db",
+    "full_steps_stability",
+    "psnr_band_db",
+];
+
+/// Stability may trade at most this much latent PSNR against the
+/// calibrated PAS plan and still count as meeting the quality floor.
+const PSNR_BAND_DB: f64 = 6.0;
+
+const STEPS: usize = 25;
+
+struct Measured {
+    mac_pas: f64,
+    mac_stab: f64,
+    psnr_pas: f64,
+    psnr_stab: f64,
+    full_steps_stab: u64,
+}
+
+fn run_workload() -> anyhow::Result<Measured> {
+    let art_dir =
+        std::env::temp_dir().join(format!("sdacc_bench_policy_art_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&art_dir);
+    // Sim backend over an empty dir: deterministic, artifact-less, and
+    // provably calibration-free — the cold-start claim under test.
+    let svc = RuntimeService::start_with(BackendKind::Sim, &art_dir)?;
+    let coord = Coordinator::new(svc.handle());
+    anyhow::ensure!(
+        !art_dir.join("calibration.json").exists(),
+        "bench precondition: no calibration artifact"
+    );
+
+    let base = |plan: SamplingPlan, policy: PolicySpec| {
+        let mut r = GenRequest::new("red circle x4 y4 blue square x11 y11", 4242);
+        r.steps = STEPS;
+        r.sampler = SamplerKind::Ddim;
+        r.plan = plan;
+        r.policy = policy;
+        r
+    };
+    let full = coord.generate_one(&base(SamplingPlan::Full, PolicySpec::Pas))?;
+    let pas_cfg = PasConfig {
+        t_sketch: STEPS / 2,
+        t_complete: 3,
+        t_sparse: 4,
+        l_sketch: 2,
+        l_refine: 2,
+    };
+    let pas = coord.generate_one(&base(SamplingPlan::Pas(pas_cfg), PolicySpec::Pas))?;
+    let stab = coord.generate_one(&base(
+        SamplingPlan::Full,
+        PolicySpec::Stability { threshold_milli: 250 },
+    ))?;
+
+    let _ = std::fs::remove_dir_all(&art_dir);
+    Ok(Measured {
+        mac_pas: pas.stats.mac_reduction,
+        mac_stab: stab.stats.mac_reduction,
+        psnr_pas: quality::latent_psnr(&pas.latent, &full.latent),
+        psnr_stab: quality::latent_psnr(&stab.latent, &full.latent),
+        full_steps_stab: stab.stats.full_steps(),
+    })
+}
+
+/// Schema-validate a BENCH_policy.json document.
+fn validate(doc: &Json) -> Result<(), String> {
+    for k in REQUIRED_KEYS {
+        if doc.get(k).is_none() {
+            return Err(format!("BENCH_policy.json missing required key '{k}'"));
+        }
+    }
+    for k in ["mac_reduction_pas", "mac_reduction_stability"] {
+        let v = doc.get_f64(k).ok_or_else(|| format!("key '{k}' is not a number"))?;
+        if v <= 1.0 {
+            return Err(format!("key '{k}' must be > 1 — the plan skipped no work (got {v})"));
+        }
+    }
+    for k in ["psnr_pas_db", "psnr_stability_db"] {
+        let v = doc.get_f64(k).ok_or_else(|| format!("key '{k}' is not a number"))?;
+        if !v.is_finite() || v <= 0.0 {
+            return Err(format!("key '{k}' must be a positive finite dB value (got {v})"));
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let commit = std::env::args().any(|a| a == "--commit");
+
+    let m = run_workload().expect("policy workload");
+    println!(
+        "policy bench ({STEPS} steps, sim): pas mac x{:.2} psnr {:.1} dB | \
+         stability mac x{:.2} psnr {:.1} dB ({} full steps, uncalibrated)",
+        m.mac_pas, m.psnr_pas, m.mac_stab, m.psnr_stab, m.full_steps_stab
+    );
+
+    // The acceptance criterion: cold-started StabilityPolicy must be at
+    // least as cheap as the calibrated PAS plan AND land in its quality
+    // band against the shared full-trajectory reference.
+    assert!(
+        m.mac_stab >= m.mac_pas,
+        "stability must skip at least as many MACs as pas (x{:.3} < x{:.3})",
+        m.mac_stab,
+        m.mac_pas
+    );
+    assert!(
+        m.psnr_stab >= m.psnr_pas - PSNR_BAND_DB,
+        "stability quality {:.1} dB fell below the PAS floor {:.1} dB - {PSNR_BAND_DB} dB band",
+        m.psnr_stab,
+        m.psnr_pas
+    );
+    assert!(
+        (m.full_steps_stab as usize) < STEPS,
+        "stability never skipped a step"
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("policy_tradeoff")),
+        ("steps", Json::num(STEPS as f64)),
+        ("mac_reduction_pas", Json::num(m.mac_pas)),
+        ("mac_reduction_stability", Json::num(m.mac_stab)),
+        ("psnr_pas_db", Json::num(m.psnr_pas)),
+        ("psnr_stability_db", Json::num(m.psnr_stab)),
+        ("full_steps_stability", Json::num(m.full_steps_stab as f64)),
+        ("psnr_band_db", Json::num(PSNR_BAND_DB)),
+    ]);
+    validate(&doc).expect("fresh measurement must satisfy the BENCH_policy schema");
+
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_policy.json");
+    if let Some(prev) = std::fs::read_to_string(&out).ok().and_then(|s| Json::parse(&s).ok()) {
+        validate(&prev).expect("committed BENCH_policy.json must satisfy the schema");
+    }
+
+    if commit {
+        std::fs::write(&out, doc.to_string()).expect("write BENCH_policy.json");
+        println!("wrote {}", out.display());
+    } else if smoke {
+        println!("bench_policy --smoke: stability meets the PAS cost + quality floor uncalibrated");
+    }
+}

@@ -16,7 +16,11 @@ use std::fmt;
 ///     latent codec (`cache::binary`); payload files renamed `.bin`.
 ///     A store written by an older version is flushed clean on open —
 ///     never scanned in, since its payloads would be misread.
-pub const CACHE_VERSION: u32 = 3;
+/// v4: request keys hash the approximation-policy id (`crate::policy`
+///     seam) — results produced under different policies must never
+///     satisfy each other's lookups, and legacy digests retire via this
+///     bump rather than silently changing meaning.
+pub const CACHE_VERSION: u32 = 4;
 
 /// FNV-1a offset basis (the initial state for [`fnv1a_update`]).
 pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;

@@ -11,7 +11,7 @@
 //! - `quant`:   (manifest, steps, calibration prompts, guidance) —
 //!              activation-range profiles for mixed-precision search
 //! - `request`: (manifest, prompt, seed, steps, sampler, guidance, plan,
-//!              quant scheme)
+//!              quant scheme, approximation-policy id)
 //!
 //! Invalidation rule: a manifest-hash change on open flushes every
 //! namespace (the store records the hash it was populated under).
@@ -27,6 +27,7 @@ use crate::runtime::BackendKind;
 use crate::pas::calibrate::CalibrationReport;
 use crate::pas::plan::{PasConfig, SamplingPlan};
 use crate::pas::search::SearchConstraints;
+use crate::policy::PolicySpec;
 use crate::quant::calibrate::QuantProfile;
 use crate::quant::format::QuantScheme;
 
@@ -123,6 +124,14 @@ fn hash_quant(h: &mut KeyHasher, quant: &Option<QuantScheme>) {
     }
 }
 
+fn hash_policy(h: &mut KeyHasher, policy: &PolicySpec) {
+    // The label is the policy's stable identity, parameterization
+    // included — exactly the `policy_id()` string the built policy
+    // reports. Hashing it as one typed string field keeps the standing
+    // invariant: every policy id enters every request key.
+    h.str(&policy.label());
+}
+
 /// Quant-profile key: same cell shape as calibration reports.
 pub fn quant_key(
     manifest_hash: u64,
@@ -146,6 +155,10 @@ pub fn quant_key(
 /// stayed put (the stability property test below locks this in; if a
 /// variant's canonical bytes ever change, bump `CACHE_VERSION` so the
 /// flush-on-open rule retires old stores).
+///
+/// The approximation-policy id hashes last (cache format v4): results
+/// generated under different policies — including a brownout-degraded
+/// policy swap — can never satisfy each other's lookups.
 pub fn request_key(manifest_hash: u64, req: &GenRequest) -> CacheKey {
     let mut h = KeyHasher::new(NS_REQUEST);
     h.u64(manifest_hash)
@@ -156,6 +169,7 @@ pub fn request_key(manifest_hash: u64, req: &GenRequest) -> CacheKey {
         .f32(req.guidance);
     hash_plan(&mut h, &req.plan);
     hash_quant(&mut h, &req.quant);
+    hash_policy(&mut h, &req.policy);
     h.finish()
 }
 
@@ -477,11 +491,11 @@ mod tests {
 
     /// The acceptance property for the `String` -> `SamplerKind`
     /// migration: for every reachable request, the new enum-based key
-    /// equals the key the retired string field produced, byte for byte
-    /// — so every pre-migration request-cache entry still hits and
-    /// `CACHE_VERSION` did not need to move. The "legacy" derivation is
-    /// reproduced exactly as it was written: same namespace salt, same
-    /// field order, `.str(<sampler string>)` in the sampler slot.
+    /// equals the key a string sampler field would produce, byte for
+    /// byte. The "legacy" derivation mirrors the current field order
+    /// (policy axis included — the v4 policy field is orthogonal to the
+    /// sampler slot this property guards) with `.str(<sampler string>)`
+    /// in the sampler slot.
     #[test]
     fn request_key_digests_stable_across_sampler_enum_migration() {
         use crate::coordinator::SamplerKind;
@@ -498,6 +512,7 @@ mod tests {
                 .f32(req.guidance);
             hash_plan(&mut h, &req.plan);
             hash_quant(&mut h, &req.quant);
+            hash_policy(&mut h, &req.policy);
             h.finish()
         }
 
@@ -541,6 +556,14 @@ mod tests {
                     1 => Some(QuantScheme::w4a8()),
                     2 => Some(QuantScheme::fp16()),
                     _ => None,
+                };
+                req.policy = match gen_usize(rng, 0, 3) {
+                    0 => PolicySpec::BlockCache { budget: gen_usize(rng, 1, 8) },
+                    1 => PolicySpec::Stability {
+                        threshold_milli: gen_usize(rng, 1, 2000) as u32,
+                    },
+                    2 => PolicySpec::TextPrecision,
+                    _ => PolicySpec::Pas,
                 };
                 (rng.next_u64(), req)
             },
@@ -643,8 +666,34 @@ mod tests {
         assert_ne!(k_w8, k0, "quant scheme");
         r.quant = Some(QuantScheme::w4a8());
         assert_ne!(request_key(1, &r), k_w8, "different schemes differ");
+        let mut r = base.clone();
+        r.policy = PolicySpec::Stability { threshold_milli: 250 };
+        let k_stab = request_key(1, &r);
+        assert_ne!(k_stab, k0, "policy");
+        r.policy = PolicySpec::Stability { threshold_milli: 100 };
+        assert_ne!(request_key(1, &r), k_stab, "policy parameterizations differ");
         assert_ne!(request_key(2, &base), k0, "manifest hash");
         assert_eq!(request_key(1, &base.clone()), k0, "identical request hits");
+    }
+
+    /// Every registry policy (and the brownout-swap target) keys its
+    /// own cache cell: same request, different policy -> different
+    /// digest, and the default spec reproduces the bare-request key.
+    #[test]
+    fn request_key_isolates_every_policy() {
+        use std::collections::HashSet;
+        let base = GenRequest::new("red circle x4 y4", 42);
+        let mut keys = HashSet::new();
+        for spec in PolicySpec::all() {
+            let mut r = base.clone();
+            r.policy = spec;
+            assert!(keys.insert(request_key(1, &r)), "{} collided", spec.label());
+        }
+        assert_eq!(keys.len(), PolicySpec::all().len());
+        assert!(
+            keys.contains(&request_key(1, &base)),
+            "default Pas spec must key the same cell as an untouched request"
+        );
     }
 
     #[test]

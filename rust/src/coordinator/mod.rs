@@ -47,6 +47,7 @@ use crate::cache::{Cache, StoreConfig};
 use crate::models::inventory::sd_tiny;
 use crate::pas::cost::CostModel;
 use crate::pas::plan::{plan_is_executable, SamplingPlan, StepAction};
+use crate::policy::{update_trajectory, PolicySpec, StepDecision, TrajectoryStats};
 use crate::quant::format::{emulate_activations, QuantScheme};
 use crate::runtime::{BackendKind, Input, Runtime, RuntimeHandle, Tensor, TensorI32};
 use crate::scheduler::{Ddim, NoiseSchedule, Pndm, Sampler};
@@ -210,6 +211,13 @@ pub struct GenRequest {
     /// `Some` fake-quantises the U-Net output every step (deterministic
     /// reduced-precision emulation — the artifacts themselves stay fp32).
     pub quant: Option<QuantScheme>,
+    /// Approximation policy: how the denoising loop trades compute for
+    /// quality ([`crate::policy`]). The default `Pas` reproduces the
+    /// pre-policy-seam behaviour bit for bit; the spec participates in
+    /// `batch_key()` and the request-cache key, so results produced
+    /// under different policies can never batch together or satisfy
+    /// each other's cache lookups.
+    pub policy: PolicySpec,
 }
 
 impl GenRequest {
@@ -222,6 +230,7 @@ impl GenRequest {
             sampler: SamplerKind::Pndm,
             plan: SamplingPlan::Full,
             quant: None,
+            policy: PolicySpec::Pas,
         }
     }
 
@@ -272,6 +281,7 @@ impl GenRequest {
             plan: self.plan,
             guidance_bits: self.guidance.to_bits(),
             quant: self.quant,
+            policy: self.policy,
         }
     }
 }
@@ -309,6 +319,11 @@ impl GenRequestBuilder {
         self
     }
 
+    pub fn policy(mut self, policy: PolicySpec) -> Self {
+        self.req.policy = policy;
+        self
+    }
+
     pub fn build(self) -> Result<GenRequest, SdError> {
         self.req.validate()?;
         Ok(self.req)
@@ -331,6 +346,10 @@ pub struct BatchKey {
     pub plan: SamplingPlan,
     pub guidance_bits: u32,
     pub quant: Option<QuantScheme>,
+    /// Approximation policy: step schedules and online overrides are
+    /// batch-wide decisions, so requests under different policies can
+    /// never run lockstep.
+    pub policy: PolicySpec,
 }
 
 /// Per-request generation outcome.
@@ -553,7 +572,12 @@ impl Coordinator {
         reqs[0].validate_fields()?;
         let m = self.runtime.manifest().model.clone();
         let steps = reqs[0].steps;
-        let plan = reqs[0].plan.actions(steps);
+        // Approximation-policy seam: the policy owns the step schedule.
+        // The default `PasPolicy` returns `plan.actions(steps)` verbatim,
+        // so the legacy path is reproduced bit for bit.
+        let policy = reqs[0].policy.build();
+        let policy_id = policy.policy_id();
+        let plan = policy.plan(steps, &reqs[0].plan);
         if !plan_is_executable(&plan) {
             return Err(SdError::invalid(
                 "plan is not executable (partial step before any full step)",
@@ -583,9 +607,46 @@ impl Coordinator {
         // Feature caches per cut level (refreshed by full steps).
         let mut caches: Vec<Option<Arc<Tensor>>> = vec![None; max_cut + 1];
         let mut step_ms = Vec::with_capacity(steps);
+
+        // Per-lane activation precision: the request's explicit scheme
+        // wins; otherwise the policy may pick one from the lane's own
+        // prompt (text-conditioned precision). Lane-local on purpose —
+        // the request cache key promises the latent is a function of
+        // the request (prompt included) alone.
+        let lane_schemes: Vec<Option<QuantScheme>> =
+            reqs.iter().map(|r| r.quant.or_else(|| policy.quant_override(&r.prompt))).collect();
+
+        // Buffer pool for the per-step timestep literal: allocated once,
+        // refilled in place each step. The runtime thread drops its
+        // input handles before responding, so `Arc::make_mut` finds the
+        // buffer unique on every iteration and never copies.
+        let mut t_in =
+            Arc::new(Tensor::new(vec![b], vec![0.0f32; b]).map_err(SdError::runtime)?);
+
+        // Online-policy state: executed actions (may diverge from the
+        // plan via step-time overrides), and the latent-trajectory EWMA
+        // that feeds those decisions. The trajectory is only tracked
+        // when the policy asks for it, so plan-only policies pay zero
+        // extra clones per step.
+        let mut executed: Vec<StepAction> = Vec::with_capacity(steps);
+        let needs_traj = policy.needs_trajectory();
+        let mut traj = TrajectoryStats::default();
+        let mut prev_eps: Option<Tensor> = None;
         let t_start = Instant::now();
 
-        for (i, &action) in plan.iter().enumerate() {
+        for i in 0..plan.len() {
+            let mut action = plan[i];
+            // Step-time hook: an online policy may override the planned
+            // action from trajectory stability. Overrides are clamped to
+            // what is executable right now — Full always is; Partial(l)
+            // only when the cut is compiled and its cache is warm.
+            if let StepDecision::Override(o) = policy.on_step_decision(i, &traj) {
+                action = match o {
+                    StepAction::Full => StepAction::Full,
+                    StepAction::Partial(l) if l <= max_cut && caches[l].is_some() => o,
+                    StepAction::Partial(_) => action,
+                };
+            }
             // Mid-flight cancellation and deadline/step-budget
             // enforcement: checked once per denoising step, before the
             // expensive U-Net execution. Cancellation wins when both
@@ -597,7 +658,7 @@ impl Coordinator {
                 return Err(SdError::DeadlineExceeded);
             }
             let t0 = Instant::now();
-            let t_in = Tensor::new(vec![b], vec![ts[i] as f32; b]).map_err(SdError::runtime)?;
+            Arc::make_mut(&mut t_in).make_mut().fill(ts[i] as f32);
             let mut eps = match action {
                 StepAction::Full => {
                     let out = self
@@ -606,7 +667,7 @@ impl Coordinator {
                             &Runtime::unet_full(b),
                             &[
                                 Input::F32(latent.clone()),
-                                Input::F32(t_in),
+                                Input::F32Ref(Arc::clone(&t_in)),
                                 Input::F32Ref(Arc::clone(&ctx)),
                                 Input::F32Ref(Arc::clone(&g)),
                             ],
@@ -630,7 +691,7 @@ impl Coordinator {
                             &Runtime::unet_partial(l, b),
                             &[
                                 Input::F32(latent.clone()),
-                                Input::F32(t_in),
+                                Input::F32Ref(Arc::clone(&t_in)),
                                 Input::F32Ref(Arc::clone(&ctx)),
                                 Input::F32Ref(Arc::clone(&g)),
                                 Input::F32Ref(cache),
@@ -646,15 +707,42 @@ impl Coordinator {
             // output at the request's activation format, so the latent
             // trajectory reflects the reduced-precision datapath the
             // hwsim costing models (batch-compatible by BatchKey.quant).
-            // Each batch lane gets its own quantiser fit: the request
-            // cache key promises the latent is a function of the request
-            // alone, so a lane's scale must not depend on which other
-            // requests happened to share the batch.
-            if let Some(scheme) = reqs[0].quant {
+            // Each batch lane gets its own quantiser fit and its own
+            // scheme: the request cache key promises the latent is a
+            // function of the request alone, so neither a lane's scale
+            // nor its precision may depend on which other requests
+            // happened to share the batch.
+            if lane_schemes.iter().any(Option::is_some) {
                 let lane = eps.len() / b;
-                for chunk in eps.make_mut().chunks_mut(lane.max(1)) {
-                    emulate_activations(chunk, scheme.act);
+                for (chunk, scheme) in
+                    eps.make_mut().chunks_mut(lane.max(1)).zip(lane_schemes.iter())
+                {
+                    if let Some(scheme) = scheme {
+                        emulate_activations(chunk, scheme.act);
+                    }
                 }
+            }
+            // Trajectory stability: normalized mean-abs eps delta between
+            // consecutive steps, folded into an EWMA the policy's
+            // step-time hook reads. Tracked only on request.
+            if needs_traj {
+                let delta = match &prev_eps {
+                    Some(prev) => {
+                        let cur = eps.data();
+                        let old = prev.data();
+                        let n = cur.len().min(old.len());
+                        let mut num = 0.0f64;
+                        let mut den = 0.0f64;
+                        for k in 0..n {
+                            num += f64::from((cur[k] - old[k]).abs());
+                            den += f64::from(cur[k].abs());
+                        }
+                        num / (den + 1e-12)
+                    }
+                    None => 0.0,
+                };
+                update_trajectory(&mut traj, delta, matches!(action, StepAction::Full));
+                prev_eps = Some(eps.clone());
             }
             // Scheduler update, in place (same t for every batch lane).
             // The runtime dropped its input handles before responding, so
@@ -662,26 +750,33 @@ impl Coordinator {
             sampler.step_mut(i, latent.make_mut(), eps.data());
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             step_ms.push(ms);
+            executed.push(action);
             obs.on_step(i, action, ms);
-            // Observability: per-action counters always; a `step` span
+            // Observability: per-action counters always (bare labels —
+            // the full/partial classifier keys on them); a `step` span
             // when a TraceScope is active (attributed to the scope's
-            // job — for a batch, its lead job).
+            // job — for a batch, its lead job). Non-default policies
+            // qualify the span action as `<policy_id>:<action>` so a
+            // trace shows which policy made each step decision.
             crate::obs::counters().step(action.label());
             crate::obs::with_current(|sink, job| {
-                sink.record(
-                    crate::obs::SpanEvent::new(job, crate::obs::Phase::Step)
-                        .with_step(i as u64)
-                        .with_action(action.label())
-                        .with_dur_us((ms * 1e3) as u64),
-                );
+                let span = crate::obs::SpanEvent::new(job, crate::obs::Phase::Step)
+                    .with_step(i as u64)
+                    .with_dur_us((ms * 1e3) as u64);
+                let span = if reqs[0].policy == PolicySpec::Pas {
+                    span.with_action(action.label())
+                } else {
+                    span.with_action(&format!("{policy_id}:{}", action.label()))
+                };
+                sink.record(span);
             });
         }
 
         let total_ms = t_start.elapsed().as_secs_f64() * 1e3;
         let stats = GenStats {
-            actions: plan.clone(),
+            mac_reduction: self.cost_tiny.mac_reduction(&executed),
+            actions: executed,
             step_ms,
-            mac_reduction: self.cost_tiny.mac_reduction(&plan),
             total_ms,
         };
         Ok((0..b)
@@ -814,6 +909,19 @@ mod tests {
     }
 
     #[test]
+    fn batch_key_separates_policies() {
+        let a = GenRequest::new("x", 1);
+        let mut b = GenRequest::new("y", 2);
+        b.policy = PolicySpec::Stability { threshold_milli: 250 };
+        assert_ne!(a.batch_key(), b.batch_key(), "pas vs stability cannot lockstep");
+        let mut c = GenRequest::new("z", 3);
+        c.policy = PolicySpec::Stability { threshold_milli: 250 };
+        assert_eq!(b.batch_key(), c.batch_key(), "same policy batches");
+        c.policy = PolicySpec::Stability { threshold_milli: 100 };
+        assert_ne!(b.batch_key(), c.batch_key(), "parameterizations differ");
+    }
+
+    #[test]
     fn batch_key_is_a_real_map_key() {
         use std::collections::HashMap;
         let mut m: HashMap<BatchKey, usize> = HashMap::new();
@@ -835,6 +943,7 @@ mod tests {
         assert_eq!(r.sampler, SamplerKind::Pndm);
         assert!(matches!(r.plan, SamplingPlan::Full));
         assert_eq!(r.quant, None, "full precision unless asked");
+        assert_eq!(r.policy, PolicySpec::Pas, "legacy semantics unless asked");
     }
 
     #[test]
@@ -870,6 +979,7 @@ mod tests {
             .sampler(SamplerKind::Ddim)
             .plan(SamplingPlan::Pas(PasConfig::pas25(4)))
             .quant(QuantScheme::w8a8())
+            .policy(PolicySpec::BlockCache { budget: 3 })
             .build()
             .unwrap();
         assert_eq!(r.steps, 25);
@@ -877,6 +987,7 @@ mod tests {
         assert_eq!(r.guidance, 6.0);
         assert!(matches!(r.plan, SamplingPlan::Pas(_)));
         assert_eq!(r.quant, Some(QuantScheme::w8a8()));
+        assert_eq!(r.policy, PolicySpec::BlockCache { budget: 3 });
     }
 
     #[test]

@@ -182,6 +182,29 @@
 //! runs), shed/brownout hysteresis and the cache-key rule;
 //! `bench_chaos` emits `BENCH_chaos.json` via `ci.sh --bench-commit`.
 //!
+//! ## Approximation policies ([`policy`])
+//!
+//! The *how do we approximate* decision is a pluggable seam: requests
+//! carry a [`policy::PolicySpec`] (default `Pas`) that the coordinator
+//! builds into an object-safe [`policy::ApproxPolicy`] with a
+//! plan-time hook (per-step action schedule) and an optional step-time
+//! hook (online overrides from EWMA latent-trajectory deltas —
+//! computed only when the policy asks, so the default path stays
+//! allocation-identical). Four strategies ship behind it: `pas` (the
+//! calibrated phase-aware plan, bit-identical to the pre-seam path),
+//! `block-cache:<budget>` (per-block staleness budgets on the feature
+//! caches), `stability[:<milli>]` (SADA-style online skip decisions —
+//! no calibrate cold-start), and `text-precision` (per-prompt
+//! `QuantScheme` from prompt-class sensitivity). The policy's stable
+//! `policy_id()` enters the batch key and every request-cache key
+//! (`CACHE_VERSION` 4), step spans label non-default policies as
+//! `<policy_id>:<action>`, brownout degrades by swapping the default
+//! policy for the cheaper `stability` form under its own key, and
+//! `loadgen` can draw a per-request policy mix (`mix=` clause).
+//! Surfaces: `generate/serve/request --policy`, `sd-acc policy
+//! list|describe`, `bench_policy` (MAC-reduction >= PAS at the quality
+//! band, `BENCH_policy.json` via `ci.sh --bench-commit`).
+//!
 //! ## Mixed precision ([`quant`])
 //!
 //! The paper's third workload problem — diverse weight and activation
@@ -245,6 +268,7 @@ pub mod models;
 pub mod net;
 pub mod obs;
 pub mod pas;
+pub mod policy;
 pub mod quality;
 pub mod quant;
 pub mod runtime;

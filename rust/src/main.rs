@@ -8,6 +8,7 @@
 //!   calibrate  measure shift scores, D*, outliers (Fig. 4 / Eq. 1-2)
 //!   simulate   run the accelerator performance model on a real SD arch
 //!   quant      mixed precision: calibrate | search | report
+//!   policy     approximation-policy registry (list | describe)
 //!   cache      persistent cache maintenance (stats | gc | clear)
 //!   trace      summarise a span trace (JSONL) written by generate/serve
 //!   info       artifact + manifest summary
@@ -53,6 +54,7 @@ fn main() -> ExitCode {
         "calibrate" => cmd_calibrate(rest),
         "simulate" => cmd_simulate(rest),
         "quant" => cmd_quant(rest),
+        "policy" => cmd_policy(rest),
         "cache" => cmd_cache(rest),
         "trace" => cmd_trace(rest),
         "info" => cmd_info(rest),
@@ -74,7 +76,7 @@ fn main() -> ExitCode {
 fn print_help() {
     println!(
         "sd-acc {} — SD-Acc reproduction (phase-aware sampling + HW co-design)\n\n\
-         usage: sd-acc <generate|serve|request|calibrate|simulate|quant|cache|trace|info> [options]\n\
+         usage: sd-acc <generate|serve|request|calibrate|simulate|quant|policy|cache|trace|info> [options]\n\
          run a subcommand with --help for its options",
         sd_acc::util::VERSION
     );
@@ -215,6 +217,14 @@ fn parse_policy(name: &str) -> Result<Policy, String> {
     }
 }
 
+/// Parse an approximation-policy label (the `crate::policy` registry,
+/// distinct from the hwsim dataflow [`Policy`] above).
+fn parse_approx_policy(name: &str) -> Result<sd_acc::policy::PolicySpec, String> {
+    sd_acc::policy::PolicySpec::parse(name).ok_or_else(|| {
+        format!("unknown approximation policy '{name}' (see `sd-acc policy list`)")
+    })
+}
+
 fn fmt_bytes(b: u64) -> String {
     if b < 1024 {
         format!("{b} B")
@@ -241,6 +251,7 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "cache-dir", help: "persistent cache dir (enables the request cache)", takes_value: true, default: None },
         OptSpec { name: "auto", help: "resolve the best cached PAS plan (SamplingPlan::Auto)", takes_value: false, default: None },
         OptSpec { name: "quant", help: "mixed-precision scheme (fp16 | w8a8 | w4a8 | ...)", takes_value: true, default: None },
+        OptSpec { name: "policy", help: "approximation policy (see `sd-acc policy list`)", takes_value: true, default: None },
         OptSpec { name: "progress", help: "stream per-step progress while generating", takes_value: false, default: None },
         OptSpec { name: "trace", help: "record a span trace of this run (JSONL)", takes_value: false, default: None },
         OptSpec { name: "trace-out", help: "span trace path (implies --trace)", takes_value: true, default: Some("trace.jsonl") },
@@ -292,6 +303,9 @@ fn cmd_generate(raw: &[String]) -> Result<(), String> {
     if let Some(s) = args.get("quant") {
         req.quant =
             Some(QuantScheme::parse(s).ok_or_else(|| format!("unknown quant scheme '{s}'"))?);
+    }
+    if let Some(p) = args.get("policy") {
+        req.policy = parse_approx_policy(p)?;
     }
     let req = coord.resolve_plan(&req, cache.as_ref());
     // Fail typed and early: bad steps/guidance/plan never reach the loop.
@@ -372,6 +386,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "deadline-ms", help: "per-request deadline (0 = none)", takes_value: true, default: Some("0") },
         OptSpec { name: "chaos", help: "deterministic fault schedule, e.g. seed=7,err=0.10,slow=0.03 (sim only)", takes_value: true, default: None },
         OptSpec { name: "load", help: "workload spec: closed|poisson|bursty, e.g. bursty:rate=800,burst=12@6,n=36", takes_value: true, default: None },
+        OptSpec { name: "policy", help: "approximation policy for the workload (see `sd-acc policy list`)", takes_value: true, default: None },
         OptSpec { name: "shed-low", help: "shed Low-priority work when smoothed queue depth exceeds N", takes_value: true, default: None },
         OptSpec { name: "brownout", help: "brownout thresholds ENTER:EXIT on smoothed queue depth", takes_value: true, default: None },
         OptSpec { name: "hedge-ms", help: "hedge straggler batches after N ms (0 = off)", takes_value: true, default: Some("0") },
@@ -408,10 +423,20 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
     let n = args.get_usize("requests")?.unwrap();
     let steps = args.get_usize("steps")?.unwrap();
     let deadline_ms = args.get_u64("deadline-ms")?.unwrap();
-    let load = args
+    let mut load = args
         .get("load")
         .map(LoadSpec::parse)
         .transpose()?;
+    // `--policy` fixes the approximation policy for the whole workload:
+    // the synthetic loop applies it per request, and a `--load` spec
+    // gets it as a single-class policy axis — unless the spec's own
+    // `mix=` clause already chose policies (explicit mix wins).
+    let workload_policy = args.get("policy").map(parse_approx_policy).transpose()?;
+    if let (Some(spec), Some(policy)) = (load.as_mut(), workload_policy) {
+        if spec.mix.policies.is_empty() {
+            spec.mix.policies.push((policy, 1.0));
+        }
+    }
     let mut resilience = ResiliencePolicy::default();
     resilience.shed_low_depth = args.get_usize("shed-low")?;
     if let Some(b) = args.get("brownout") {
@@ -582,6 +607,11 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
             rep.deadline_miss,
             rep.goodput()
         );
+        // Per-policy goodput lines — the CI policy lane greps these for
+        // evidence that the requested mix actually completed work.
+        for (label, n) in &rep.ok_by_policy {
+            println!("policy {label}: {n} ok");
+        }
         load_report = Some(rep);
     } else {
         println!("submitting {n} requests ({steps} steps, priorities cycling high/normal/low)...");
@@ -597,6 +627,9 @@ fn cmd_serve(raw: &[String]) -> Result<(), String> {
             // *cross-key* dispatch order, so one shared key would never
             // exercise it (EDF within a key ignores priority).
             req.steps = steps + class;
+            if let Some(policy) = workload_policy {
+                req.policy = policy;
+            }
             let mut opts = SubmitOptions::with_priority(Priority::ALL[class]);
             if deadline_ms > 0 {
                 opts.deadline = Some(Duration::from_millis(deadline_ms));
@@ -761,6 +794,7 @@ fn cmd_request(raw: &[String]) -> Result<(), String> {
         OptSpec { name: "sampler", help: "sampler: ddim | pndm", takes_value: true, default: Some("pndm") },
         OptSpec { name: "plan", help: "sampling plan: full | auto | pas:<t_sparse>", takes_value: true, default: Some("full") },
         OptSpec { name: "quant", help: "mixed-precision scheme label (e.g. w8a8)", takes_value: true, default: None },
+        OptSpec { name: "policy", help: "approximation policy label (e.g. stability:250)", takes_value: true, default: None },
         OptSpec { name: "priority", help: "high | normal | low", takes_value: true, default: Some("normal") },
         OptSpec { name: "deadline-ms", help: "deadline budget in ms (0 = none)", takes_value: true, default: Some("0") },
         OptSpec { name: "full-quality", help: "opt out of brownout degradation", takes_value: false, default: None },
@@ -805,6 +839,11 @@ fn cmd_request(raw: &[String]) -> Result<(), String> {
     ];
     if let Some(q) = args.get("quant") {
         fields.push(("quant", Json::str(q)));
+    }
+    if let Some(p) = args.get("policy") {
+        // Validate locally for a friendly error; the server re-validates.
+        parse_approx_policy(p)?;
+        fields.push(("policy", Json::str(p)));
     }
     let deadline_ms = args.get_u64("deadline-ms")?.unwrap();
     if deadline_ms > 0 {
@@ -1024,6 +1063,62 @@ fn cmd_quant(raw: &[String]) -> Result<(), String> {
             );
         }
         other => return Err(format!("unknown quant action '{other}' (calibrate|search|report)")),
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- policy
+
+/// `sd-acc policy <list|describe> [name]`: inspect the approximation-
+/// policy registry (the `crate::policy` seam every cache key hashes).
+fn cmd_policy(raw: &[String]) -> Result<(), String> {
+    use sd_acc::policy::PolicySpec;
+    let opt_spec =
+        [OptSpec { name: "help", help: "show usage", takes_value: false, default: None }];
+    let args = Args::parse(raw, &opt_spec)?;
+    let action = args.positional().first().map(String::as_str).unwrap_or("list");
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "sd-acc policy <list|describe> [name]",
+                "approximation-policy registry",
+                &opt_spec
+            )
+        );
+        return Ok(());
+    }
+    match action {
+        "list" => {
+            let mut t = Table::new(&["policy", "online", "description"]);
+            for spec in PolicySpec::all() {
+                t.row(vec![
+                    spec.label(),
+                    if spec.online() { "yes".into() } else { "no".into() },
+                    spec.build().describe(),
+                ]);
+            }
+            t.print();
+            println!(
+                "parameterized forms accepted too, e.g. block-cache:5, stability:90; \
+                 the id is hashed into every batch/request cache key"
+            );
+        }
+        "describe" => {
+            let name = args
+                .positional()
+                .get(1)
+                .ok_or("policy describe needs a name (see `sd-acc policy list`)")?;
+            let spec = parse_approx_policy(name)?;
+            let p = spec.build();
+            println!("{}", p.policy_id());
+            println!("  {}", p.describe());
+            println!(
+                "  online (adapts to the measured eps trajectory): {}",
+                if spec.online() { "yes — served solo, never batched" } else { "no" }
+            );
+        }
+        other => return Err(format!("unknown policy action '{other}' (list|describe)")),
     }
     Ok(())
 }

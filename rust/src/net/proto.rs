@@ -12,6 +12,7 @@
 //!   "sampler": "pndm",             // optional: "ddim" | "pndm"
 //!   "plan": "pas:5",               // optional: "full" | "auto" | "pas:<t_sparse>"
 //!   "quant": "w8a8",               // optional QuantScheme label
+//!   "policy": "stability",         // optional PolicySpec label (default "pas")
 //!   "priority": "normal",          // optional: "high" | "normal" | "low"
 //!   "deadline_ms": 2000,           // optional
 //!   "degradable": true             // optional (default true, as SubmitOptions)
@@ -48,6 +49,7 @@ use std::time::Duration;
 
 use crate::coordinator::{GenRequest, GenResult, SamplerKind, SdError};
 use crate::pas::plan::{PasConfig, SamplingPlan};
+use crate::policy::PolicySpec;
 use crate::quant::QuantScheme;
 use crate::server::{JobEvent, Priority, SubmitOptions};
 use crate::util::json::Json;
@@ -145,6 +147,16 @@ pub fn request_from_json(j: &Json) -> Result<(GenRequest, SubmitOptions), SdErro
             b = b.quant(scheme);
         }
     }
+    if let Some(v) = get("policy") {
+        if !matches!(v, Json::Null) {
+            let s = v
+                .as_str()
+                .ok_or_else(|| SdError::invalid("'policy' must be a string"))?;
+            let spec = PolicySpec::parse(s)
+                .ok_or_else(|| SdError::invalid(format!("unknown policy '{s}'")))?;
+            b = b.policy(spec);
+        }
+    }
     let req = b.build()?;
 
     let mut opts = SubmitOptions::default();
@@ -183,6 +195,11 @@ pub fn request_to_json(req: &GenRequest, opts: &SubmitOptions) -> Json {
     ];
     if let Some(q) = &req.quant {
         fields.push(("quant", Json::Str(q.label())));
+    }
+    // Emitted only when non-default, so legacy wire bodies stay
+    // byte-identical for policy-less requests.
+    if req.policy != PolicySpec::default() {
+        fields.push(("policy", Json::Str(req.policy.label())));
     }
     fields.push(("priority", Json::str(priority_str(opts.priority))));
     if let Some(d) = opts.deadline {
@@ -292,6 +309,7 @@ mod tests {
             ("steps", Json::num(8.0)),
             ("sampler", Json::str("ddim")),
             ("plan", Json::str("pas:4")),
+            ("policy", Json::str("stability:90")),
             ("priority", Json::str("high")),
             ("deadline_ms", Json::num(1500.0)),
             ("degradable", Json::Bool(false)),
@@ -306,6 +324,7 @@ mod tests {
         assert_eq!(req.steps, 8);
         assert_eq!(req.sampler, SamplerKind::Ddim);
         assert!(matches!(req.plan, SamplingPlan::Pas(ref c) if c.t_sparse == 4));
+        assert_eq!(req.policy, PolicySpec::Stability { threshold_milli: 90 });
         assert_eq!(opts.priority, Priority::High);
         assert_eq!(opts.deadline, Some(Duration::from_millis(1500)));
         assert!(!opts.degradable);
@@ -320,9 +339,29 @@ mod tests {
         assert_eq!(req.sampler, req2.sampler);
         assert_eq!(req.plan, req2.plan);
         assert_eq!(req.quant, req2.quant);
+        assert_eq!(req.policy, req2.policy);
         assert_eq!(opts.priority, opts2.priority);
         assert_eq!(opts.deadline, opts2.deadline);
         assert_eq!(opts.degradable, opts2.degradable);
+    }
+
+    #[test]
+    fn default_policy_is_omitted_from_the_wire_body() {
+        // Legacy clients never sent a policy field; legacy bodies for
+        // default-policy requests must stay byte-identical.
+        let req = GenRequest::new("fox", 7);
+        let body = request_to_json(&req, &SubmitOptions::default());
+        assert!(body.get_str("policy").is_none(), "{body:?}");
+        let (req2, _) = request_from_json(&body).unwrap();
+        assert_eq!(req2.policy, PolicySpec::Pas);
+        // And an explicit null parses as the default, like quant.
+        let with_null = Json::obj(vec![
+            ("prompt", Json::str("fox")),
+            ("seed", Json::num(7.0)),
+            ("policy", Json::Null),
+        ]);
+        let (req3, _) = request_from_json(&with_null).unwrap();
+        assert_eq!(req3.policy, PolicySpec::Pas);
     }
 
     #[test]
@@ -340,6 +379,16 @@ mod tests {
                 ("prompt", Json::str("x")),
                 ("seed", Json::num(1.0)),
                 ("plan", Json::str("pas")),
+            ]),
+            Json::obj(vec![
+                ("prompt", Json::str("x")),
+                ("seed", Json::num(1.0)),
+                ("policy", Json::str("euler")),
+            ]),
+            Json::obj(vec![
+                ("prompt", Json::str("x")),
+                ("seed", Json::num(1.0)),
+                ("policy", Json::str("block-cache:0")),
             ]),
             Json::obj(vec![
                 ("prompt", Json::str("x")),

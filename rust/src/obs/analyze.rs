@@ -16,8 +16,9 @@
 //! |----------------|---------------------------------------------------|
 //! | `queue`        | entry span -> `scheduled` span                    |
 //! | `batch-form`   | `scheduled` -> start of the first work span       |
-//! | `step-full`    | `step` spans with `action = "full"`               |
-//! | `step-partial` | `step` spans with any other PAS action            |
+//! | `step-full`    | `step` spans whose action is `full` (possibly     |
+//! |                | policy-qualified, e.g. `stability:250:full`)      |
+//! | `step-partial` | `step` spans with any other action                |
 //! | `cache`        | `cache-lookup` spans                              |
 //! | `decode`       | `decode` spans                                    |
 //! | `other`        | remainder of the end-to-end range                 |
@@ -176,10 +177,16 @@ pub struct TraceAnalysis {
     pub incomplete_jobs: Vec<u64>,
 }
 
+/// A step span counts as full-depth if its action is `full`, bare or
+/// policy-qualified (`<policy_id>:full` under non-default policies).
+fn action_is_full(ev: &SpanEvent) -> bool {
+    ev.action.as_deref().is_some_and(|a| a == "full" || a.ends_with(":full"))
+}
+
 fn seg_index_for(ev: &SpanEvent) -> Option<usize> {
     match ev.phase {
         Phase::Step => {
-            if ev.action.as_deref() == Some("full") {
+            if action_is_full(ev) {
                 Some(2)
             } else {
                 Some(3)
@@ -262,7 +269,7 @@ fn analyze_job(job: u64, spans: &[&SpanEvent]) -> JobTimeline {
     for ev in spans {
         match ev.phase {
             Phase::Step => {
-                if ev.action.as_deref() == Some("full") {
+                if action_is_full(ev) {
                     t.steps_full += 1;
                 } else {
                     t.steps_partial += 1;

@@ -27,6 +27,12 @@
 //! | `failed`       | server terminal             | —                            |
 //! | `cancelled`    | server terminal             | —                            |
 //!
+//! The `step` span's `action` is `full`/`partial` under the default
+//! approximation policy and `<policy_id>:<action>` (e.g.
+//! `stability:250:partial`) under a non-default [`crate::policy`] — a
+//! vocabulary widening of the existing string field, not a schema
+//! change, so no [`TRACE_SCHEMA_VERSION`] bump.
+//!
 //! `queued` and `cache-hit` are *lifecycle entries*; `done`, `failed` and
 //! `cancelled` are *terminals*. The standing job-API invariant (exactly
 //! one terminal event per job) is mirrored here: a traced job records

@@ -118,7 +118,10 @@ pub struct SpanEvent {
     pub phase: Phase,
     /// Denoising step index (`step` spans).
     pub step: Option<u64>,
-    /// PAS action label, `"full"` or `"partial"` (`step` spans).
+    /// Step action label (`step` spans): `"full"` or `"partial"` under
+    /// the default policy, `"<policy_id>:full"` / `"<policy_id>:partial"`
+    /// under a non-default approximation policy (same field, wider
+    /// vocabulary — no schema bump).
     pub action: Option<String>,
     /// Cache namespace (`cache-lookup` / `cache-write` spans).
     pub namespace: Option<String>,

@@ -1,0 +1,648 @@
+//! Pluggable approximation policies: *how* a generation trades compute
+//! for quality, behind one object-safe seam.
+//!
+//! SD-Acc's phase-aware sampling is one point in a family of
+//! approximate-computation strategies — SADA-style online stability
+//! guidance decides skips from the latent trajectory instead of a
+//! calibrated plan, and block-level feature caching bounds reuse with
+//! per-block staleness budgets. This module turns the coordinator's
+//! hard-coded PAS reuse decision into a policy seam so those
+//! strategies compose with the request cache and give the traffic
+//! engine real quality-vs-latency levers.
+//!
+//! ## The seam
+//!
+//! [`PolicySpec`] is the *data* form a request carries
+//! (`GenRequest::policy`): small, `Copy`, totally ordered, hashable —
+//! it participates in `BatchKey` grouping and in the request-cache key
+//! derivation (`cache::namespaces::request_key` hashes
+//! [`PolicySpec::label`]; the `CACHE_VERSION` bump to 4 covers the
+//! digest change, per the standing invariant). [`PolicySpec::build`]
+//! instantiates the behaviour as a boxed [`ApproxPolicy`] once per
+//! batch inside the coordinator.
+//!
+//! [`ApproxPolicy`] has two hooks:
+//!
+//! * **plan-time** — [`ApproxPolicy::plan`] maps `(total_steps, base
+//!   SamplingPlan)` to the per-step action schedule. [`PasPolicy`]
+//!   returns `base.actions(total_steps)` verbatim, so the default
+//!   policy is bit-identical to the pre-refactor PAS path (parity is
+//!   pinned by tests here and in `tests/integration_policy.rs`).
+//! * **step-time** — [`ApproxPolicy::on_step_decision`] may override
+//!   the planned action from online [`TrajectoryStats`] (EWMA of the
+//!   normalized step-to-step eps delta). The coordinator clamps
+//!   overrides so they can never make a plan inexecutable: a `Partial`
+//!   override is honoured only when its feature cache is warm, and
+//!   trajectory stats are computed only when
+//!   [`ApproxPolicy::needs_trajectory`] is true — the default path
+//!   stays computation- and allocation-identical.
+//!
+//! `policy_id()` is the stable identity string (`== spec.label()`,
+//! pinned by a test below): it names the policy in step spans
+//! (`<policy_id>:<action>` for non-default policies), per-policy load
+//! reports, and — via the spec — every batch/request cache key, so
+//! results produced under different policies can never satisfy each
+//! other's lookups (the brownout rule from `server::resilience`
+//! generalizes: a degraded-policy result lives under its own policy
+//! id).
+//!
+//! ## Concrete policies
+//!
+//! | spec                | id                  | strategy |
+//! |---------------------|---------------------|----------|
+//! | `Pas` (default)     | `pas`               | calibrated phase-aware plan, verbatim |
+//! | `BlockCache{budget}`| `block-cache:<b>`   | base plan + per-block staleness budget: a feature cache older than `budget` steps forces a refresh |
+//! | `Stability{thresh}` | `stability:<t>`     | SADA-style: sparse static skeleton + online Full refresh when the eps trajectory destabilizes — no calibration needed |
+//! | `TextPrecision`     | `text-precision`    | per-prompt `QuantScheme` from prompt-class sensitivity |
+//!
+//! [`StabilityPolicy`] removes the calibrate cold-start: its skeleton
+//! (2 warmup Fulls, then a refresh every 5th step, `Partial(2)`
+//! otherwise) is chosen so that even with every rate-limited override
+//! firing (at most one forced Full per 4 steps), the executed schedule
+//! performs at most as many Full steps as `PasConfig::pas25(4)` at 25
+//! steps — MAC reduction >= the PAS reference *by construction*, which
+//! `bench_policy --smoke` asserts together with the quality band.
+
+use crate::pas::plan::{SamplingPlan, StepAction};
+use crate::quant::QuantScheme;
+
+/// Declarative policy choice carried by a `GenRequest`. Small and
+/// `Copy` so it rides through `BatchKey` and the wire protocol; the
+/// canonical string form is [`PolicySpec::label`] (also the cache-key
+/// bytes — changing any label requires a `CACHE_VERSION` bump, same
+/// rule as `SamplerKind::as_str`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PolicySpec {
+    /// Calibrated phase-aware sampling — the default; bit-identical to
+    /// the pre-policy-seam coordinator path.
+    Pas,
+    /// Block-level feature caching with a per-block staleness budget
+    /// (steps a cached block may be reused before a forced refresh).
+    BlockCache { budget: usize },
+    /// SADA-style online stability guidance; `threshold_milli` is the
+    /// EWMA instability threshold in thousandths (250 = 0.25).
+    Stability { threshold_milli: u32 },
+    /// Per-prompt precision selection from prompt-class sensitivity.
+    TextPrecision,
+}
+
+impl Default for PolicySpec {
+    fn default() -> Self {
+        PolicySpec::Pas
+    }
+}
+
+/// Default staleness budget for `block-cache` without a parameter.
+pub const DEFAULT_BLOCK_BUDGET: usize = 3;
+/// Default EWMA instability threshold (thousandths) for `stability`.
+pub const DEFAULT_STABILITY_MILLI: u32 = 250;
+
+impl PolicySpec {
+    /// Canonical identity string — the bytes hashed into batch and
+    /// request cache keys, and the name accepted by [`PolicySpec::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            PolicySpec::Pas => "pas".to_string(),
+            PolicySpec::BlockCache { budget } => format!("block-cache:{budget}"),
+            PolicySpec::Stability { threshold_milli } => format!("stability:{threshold_milli}"),
+            PolicySpec::TextPrecision => "text-precision".to_string(),
+        }
+    }
+
+    /// Parse a policy name as accepted by `--policy` and the wire
+    /// `"policy"` field: `pas` | `block-cache[:<budget>]` |
+    /// `stability[:<threshold_milli>]` | `text-precision`.
+    pub fn parse(s: &str) -> Option<PolicySpec> {
+        match s {
+            "pas" => return Some(PolicySpec::Pas),
+            "block-cache" => return Some(PolicySpec::BlockCache { budget: DEFAULT_BLOCK_BUDGET }),
+            "stability" => {
+                return Some(PolicySpec::Stability { threshold_milli: DEFAULT_STABILITY_MILLI })
+            }
+            "text-precision" => return Some(PolicySpec::TextPrecision),
+            _ => {}
+        }
+        if let Some(b) = s.strip_prefix("block-cache:") {
+            let budget = b.parse::<usize>().ok()?;
+            if budget == 0 {
+                return None;
+            }
+            return Some(PolicySpec::BlockCache { budget });
+        }
+        if let Some(t) = s.strip_prefix("stability:") {
+            return Some(PolicySpec::Stability { threshold_milli: t.parse::<u32>().ok()? });
+        }
+        None
+    }
+
+    /// Whether the built policy makes online step-time decisions from
+    /// the batch-wide eps trajectory (mirrors
+    /// [`ApproxPolicy::needs_trajectory`]; pinned equal by a test).
+    /// The server batches such requests solo: a trajectory computed
+    /// over a multi-lane batch would make a lane's latent depend on its
+    /// batch mates, breaking the request-cache promise that a result is
+    /// a function of the request alone.
+    pub fn online(&self) -> bool {
+        matches!(self, PolicySpec::Stability { .. })
+    }
+
+    /// Every policy family at its default parameterization — the
+    /// registry behind `sd-acc policy list|describe`.
+    pub fn all() -> Vec<PolicySpec> {
+        vec![
+            PolicySpec::Pas,
+            PolicySpec::BlockCache { budget: DEFAULT_BLOCK_BUDGET },
+            PolicySpec::Stability { threshold_milli: DEFAULT_STABILITY_MILLI },
+            PolicySpec::TextPrecision,
+        ]
+    }
+
+    /// Instantiate the behaviour. Cheap (no I/O, no calibration) — the
+    /// coordinator builds one per batch.
+    pub fn build(&self) -> Box<dyn ApproxPolicy> {
+        match *self {
+            PolicySpec::Pas => Box::new(PasPolicy),
+            PolicySpec::BlockCache { budget } => Box::new(BlockCachePolicy { budget }),
+            PolicySpec::Stability { threshold_milli } => {
+                Box::new(StabilityPolicy { threshold_milli })
+            }
+            PolicySpec::TextPrecision => Box::new(TextPrecisionPolicy),
+        }
+    }
+}
+
+/// Online trajectory statistics handed to step-time decisions. All
+/// quantities are pure functions of the eps tensors the loop already
+/// computes, so decisions are deterministic on the sim backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrajectoryStats {
+    /// EWMA (alpha 0.5) of `last_delta`; 0 before the second step.
+    pub ewma_delta: f64,
+    /// Normalized mean-abs eps change vs the previous step:
+    /// `mean|eps_i - eps_{i-1}| / (mean|eps_i| + 1e-12)`.
+    pub last_delta: f64,
+    /// Steps since the last executed `Full` (0 right after one).
+    pub steps_since_full: usize,
+}
+
+/// A step-time decision: keep the planned action, or override it.
+/// Overrides are clamped by the coordinator — `Partial(l)` is honoured
+/// only when the cut-`l` feature cache is warm and within the plan's
+/// sizing, so an override can never break plan executability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepDecision {
+    /// Execute the plan-time action unchanged.
+    Planned,
+    /// Replace the planned action for this step.
+    Override(StepAction),
+}
+
+/// The approximation-policy seam (object-safe: the coordinator holds a
+/// `Box<dyn ApproxPolicy>` built from the request's [`PolicySpec`]).
+pub trait ApproxPolicy: Send + Sync {
+    /// Stable identity — must equal the originating spec's `label()`
+    /// (pinned by `policy_id_matches_spec_label`): these bytes key
+    /// caches, label spans, and name per-policy report lines.
+    fn policy_id(&self) -> String;
+
+    /// Plan-time hook: the per-step action schedule for a run of
+    /// `total_steps`, given the request's declared `SamplingPlan`
+    /// (which calibrated policies consume and online policies may
+    /// ignore). Must return exactly `total_steps` actions forming an
+    /// executable schedule (`pas::plan::plan_is_executable`).
+    fn plan(&self, total_steps: usize, base: &SamplingPlan) -> Vec<StepAction>;
+
+    /// Step-time hook, consulted once per denoising step *only when*
+    /// [`ApproxPolicy::needs_trajectory`] is true. Default: keep the plan.
+    fn on_step_decision(&self, _i: usize, _stats: &TrajectoryStats) -> StepDecision {
+        StepDecision::Planned
+    }
+
+    /// Whether the coordinator should compute [`TrajectoryStats`] (an
+    /// extra eps clone + delta reduction per step). False keeps the
+    /// default path computation- and allocation-identical to the
+    /// pre-seam loop.
+    fn needs_trajectory(&self) -> bool {
+        false
+    }
+
+    /// Per-prompt precision override (text-conditioned policies). The
+    /// coordinator applies it only when the request carries no explicit
+    /// `QuantScheme` — a user choice always wins.
+    fn quant_override(&self, _prompt: &str) -> Option<QuantScheme> {
+        None
+    }
+
+    /// One-line human description for `sd-acc policy list|describe`.
+    fn describe(&self) -> String;
+}
+
+// ------------------------------------------------------------------- pas
+
+/// The calibrated phase-aware plan behind the trait — the default
+/// policy. `plan` is exactly `SamplingPlan::actions`, so outputs are
+/// bit-identical to the pre-refactor coordinator path.
+pub struct PasPolicy;
+
+impl ApproxPolicy for PasPolicy {
+    fn policy_id(&self) -> String {
+        PolicySpec::Pas.label()
+    }
+
+    fn plan(&self, total_steps: usize, base: &SamplingPlan) -> Vec<StepAction> {
+        base.actions(total_steps)
+    }
+
+    fn describe(&self) -> String {
+        "calibrated phase-aware sampling plan (SD-Acc §3); the default — \
+         bit-identical to the pre-policy-seam path"
+            .to_string()
+    }
+}
+
+// ----------------------------------------------------------- block-cache
+
+/// Block-level feature caching with per-block staleness budgets: the
+/// base plan's reuse (`Partial`) steps are honoured only while the
+/// feature cache they read is at most `budget` steps old; an older
+/// cache forces a `Full` refresh at that step. Layered on the existing
+/// feature-cache tensors — the budget only ever *adds* refreshes, so
+/// the schedule is executable whenever the base plan is.
+pub struct BlockCachePolicy {
+    pub budget: usize,
+}
+
+impl ApproxPolicy for BlockCachePolicy {
+    fn policy_id(&self) -> String {
+        PolicySpec::BlockCache { budget: self.budget }.label()
+    }
+
+    fn plan(&self, total_steps: usize, base: &SamplingPlan) -> Vec<StepAction> {
+        let mut actions = base.actions(total_steps);
+        let mut staleness = 0usize; // steps since the cached blocks were refreshed
+        for a in actions.iter_mut() {
+            match *a {
+                StepAction::Full => staleness = 0,
+                StepAction::Partial(_) => {
+                    if staleness >= self.budget.max(1) {
+                        *a = StepAction::Full;
+                        staleness = 0;
+                    } else {
+                        staleness += 1;
+                    }
+                }
+            }
+        }
+        actions
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "block-level feature caching: reuse cached blocks for at most {} \
+             consecutive steps before forcing a full refresh (staleness budget)",
+            self.budget
+        )
+    }
+}
+
+// ------------------------------------------------------------- stability
+
+/// How many steps a `Partial` streak may run before a stability
+/// override is allowed to force a refresh. Rate-limiting the override
+/// is what makes the MAC bound constructive: executed Fulls <=
+/// `STABILITY_WARMUP + total_steps / STABILITY_OVERRIDE_SPACING`.
+pub const STABILITY_OVERRIDE_SPACING: usize = 4;
+/// Static refresh period of the stability skeleton (sparser than
+/// `pas25(4)`'s `t_sparse = 4`, so the skeleton alone beats PAS MACs).
+pub const STABILITY_REFRESH: usize = 5;
+/// Leading Full steps (seed the feature caches + the eps trajectory).
+pub const STABILITY_WARMUP: usize = 2;
+
+/// SADA-style online stability guidance: a sparse static skeleton
+/// (works with zero calibration — no `calibration.json`, no calibrate
+/// cold-start) plus step-time `Full` refreshes whenever the EWMA of
+/// the normalized eps delta exceeds the threshold. Overrides are
+/// rate-limited to one per [`STABILITY_OVERRIDE_SPACING`] steps, so at
+/// 25 steps the executed schedule performs at most
+/// `2 + floor(23/4) = 7` Full steps — fewer than `pas25(4)`'s 9 at the
+/// same reuse level `l = 2`, i.e. MAC reduction >= the PAS reference
+/// by construction (asserted in `bench_policy --smoke`).
+pub struct StabilityPolicy {
+    /// EWMA instability threshold in thousandths (250 = 0.25).
+    pub threshold_milli: u32,
+}
+
+impl StabilityPolicy {
+    fn threshold(&self) -> f64 {
+        self.threshold_milli as f64 / 1000.0
+    }
+}
+
+impl ApproxPolicy for StabilityPolicy {
+    fn policy_id(&self) -> String {
+        PolicySpec::Stability { threshold_milli: self.threshold_milli }.label()
+    }
+
+    fn plan(&self, total_steps: usize, _base: &SamplingPlan) -> Vec<StepAction> {
+        (0..total_steps)
+            .map(|i| {
+                if i < STABILITY_WARMUP {
+                    StepAction::Full
+                } else if (i - STABILITY_WARMUP) % STABILITY_REFRESH == STABILITY_REFRESH - 1 {
+                    StepAction::Full
+                } else {
+                    StepAction::Partial(2)
+                }
+            })
+            .collect()
+    }
+
+    fn on_step_decision(&self, i: usize, stats: &TrajectoryStats) -> StepDecision {
+        // Warmup steps are already Full; past them, refresh when the
+        // trajectory destabilizes — but never more often than one
+        // forced Full per STABILITY_OVERRIDE_SPACING steps (the MAC
+        // bound depends on this cap, not on the threshold).
+        if i >= STABILITY_WARMUP
+            && stats.steps_since_full >= STABILITY_OVERRIDE_SPACING
+            && stats.ewma_delta > self.threshold()
+        {
+            StepDecision::Override(StepAction::Full)
+        } else {
+            StepDecision::Planned
+        }
+    }
+
+    fn needs_trajectory(&self) -> bool {
+        true
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "online stability guidance (SADA-style): {STABILITY_WARMUP} warmup full steps, \
+             static refresh every {STABILITY_REFRESH} steps, plus an EWMA-triggered full \
+             refresh (threshold {:.3}, at most one per {STABILITY_OVERRIDE_SPACING} steps) — \
+             no calibration required",
+            self.threshold()
+        )
+    }
+}
+
+// -------------------------------------------------------- text-precision
+
+/// Word count at or below which a prompt is classed insensitive
+/// (simple scenes tolerate aggressive activation quantization).
+const SIMPLE_PROMPT_WORDS: usize = 4;
+
+/// Per-prompt precision selection: prompt-class sensitivity decides the
+/// `QuantScheme` when the request doesn't pin one. The classifier is a
+/// deterministic function of the prompt text — short single-object
+/// prompts (<= 4 words) run `w8a8`, medium prompts `fp16`, long
+/// multi-object prompts (the sensitive class: many vocabulary tokens
+/// competing for layout) stay at full precision. Steps follow the
+/// request's declared plan unchanged.
+pub struct TextPrecisionPolicy;
+
+impl ApproxPolicy for TextPrecisionPolicy {
+    fn policy_id(&self) -> String {
+        PolicySpec::TextPrecision.label()
+    }
+
+    fn plan(&self, total_steps: usize, base: &SamplingPlan) -> Vec<StepAction> {
+        base.actions(total_steps)
+    }
+
+    fn quant_override(&self, prompt: &str) -> Option<QuantScheme> {
+        let words = prompt.split_whitespace().count();
+        if words <= SIMPLE_PROMPT_WORDS {
+            Some(QuantScheme::w8a8())
+        } else if words <= 2 * SIMPLE_PROMPT_WORDS {
+            Some(QuantScheme::fp16())
+        } else {
+            None // sensitive class: full precision
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "text-conditioned precision: prompts of <= {SIMPLE_PROMPT_WORDS} words run w8a8, \
+             <= {} words fp16, longer (sensitive) prompts full precision; \
+             an explicit --quant always wins",
+            2 * SIMPLE_PROMPT_WORDS
+        )
+    }
+}
+
+/// Fold a trajectory sample into the stats: `delta` is this step's
+/// normalized eps change, `was_full` whether the *executed* action was
+/// `Full`. Shared by the coordinator loop and the tests so both see
+/// the same EWMA.
+pub fn update_trajectory(stats: &mut TrajectoryStats, delta: f64, was_full: bool) {
+    stats.last_delta = delta;
+    stats.ewma_delta = if stats.ewma_delta == 0.0 { delta } else { 0.5 * stats.ewma_delta + 0.5 * delta };
+    stats.steps_since_full = if was_full { 0 } else { stats.steps_since_full + 1 };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pas::plan::{plan_is_executable, PasConfig};
+
+    fn fulls(actions: &[StepAction]) -> usize {
+        actions.iter().filter(|a| matches!(a, StepAction::Full)).count()
+    }
+
+    #[test]
+    fn policy_id_matches_spec_label() {
+        // The invariant every cache-key and report surface leans on:
+        // the built policy's id IS the spec's canonical label.
+        for spec in PolicySpec::all() {
+            assert_eq!(spec.build().policy_id(), spec.label());
+        }
+        let spec = PolicySpec::BlockCache { budget: 7 };
+        assert_eq!(spec.build().policy_id(), "block-cache:7");
+        let spec = PolicySpec::Stability { threshold_milli: 125 };
+        assert_eq!(spec.build().policy_id(), "stability:125");
+    }
+
+    #[test]
+    fn parse_roundtrips_every_label() {
+        for spec in PolicySpec::all() {
+            assert_eq!(PolicySpec::parse(&spec.label()), Some(spec));
+        }
+        assert_eq!(PolicySpec::parse("pas"), Some(PolicySpec::Pas));
+        assert_eq!(
+            PolicySpec::parse("block-cache"),
+            Some(PolicySpec::BlockCache { budget: DEFAULT_BLOCK_BUDGET })
+        );
+        assert_eq!(
+            PolicySpec::parse("stability"),
+            Some(PolicySpec::Stability { threshold_milli: DEFAULT_STABILITY_MILLI })
+        );
+        assert_eq!(
+            PolicySpec::parse("stability:90"),
+            Some(PolicySpec::Stability { threshold_milli: 90 })
+        );
+        assert_eq!(PolicySpec::parse("block-cache:0"), None, "zero budget never reuses validly");
+        assert_eq!(PolicySpec::parse("euler"), None);
+        assert_eq!(PolicySpec::parse("block-cache:x"), None);
+    }
+
+    #[test]
+    fn pas_policy_plan_is_bit_identical_to_sampling_plan_actions() {
+        // The parity property the default policy's cache semantics rest
+        // on: PasPolicy::plan == SamplingPlan::actions, action for
+        // action, across plan shapes and step counts.
+        let plans = [
+            SamplingPlan::Full,
+            SamplingPlan::Auto,
+            SamplingPlan::Pas(PasConfig::pas25(4)),
+            SamplingPlan::Pas(PasConfig::pas25(6)),
+            SamplingPlan::Pas(PasConfig {
+                t_sketch: 10,
+                t_complete: 2,
+                t_sparse: 3,
+                l_sketch: 2,
+                l_refine: 1,
+            }),
+        ];
+        let policy = PasPolicy;
+        for plan in &plans {
+            for steps in [1, 3, 8, 25, 50] {
+                assert_eq!(policy.plan(steps, plan), plan.actions(steps), "{plan:?} @ {steps}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_policies_skip_the_trajectory_machinery() {
+        // The default path must stay computation-identical: only the
+        // stability policy asks for per-step trajectory stats.
+        assert!(!PolicySpec::Pas.build().needs_trajectory());
+        assert!(!PolicySpec::BlockCache { budget: 3 }.build().needs_trajectory());
+        assert!(!PolicySpec::TextPrecision.build().needs_trajectory());
+        assert!(PolicySpec::Stability { threshold_milli: 250 }.build().needs_trajectory());
+        // The spec-level mirror the server's solo-batching rule reads
+        // must agree with the trait answer for every registry policy.
+        for spec in PolicySpec::all() {
+            assert_eq!(spec.online(), spec.build().needs_trajectory(), "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn block_cache_budget_bounds_staleness_and_stays_executable() {
+        let base = SamplingPlan::Pas(PasConfig::pas25(8));
+        for budget in 1..=6 {
+            let policy = BlockCachePolicy { budget };
+            let actions = policy.plan(25, &base);
+            assert_eq!(actions.len(), 25);
+            assert!(plan_is_executable(&actions));
+            // No Partial ever runs with a cache older than the budget.
+            let mut staleness = 0usize;
+            for a in &actions {
+                match a {
+                    StepAction::Full => staleness = 0,
+                    StepAction::Partial(_) => {
+                        assert!(staleness < budget, "stale reuse beyond budget {budget}");
+                        staleness += 1;
+                    }
+                }
+            }
+            // The budget only adds refreshes relative to the base plan.
+            assert!(fulls(&actions) >= fulls(&base.actions(25)));
+        }
+        // A generous budget reproduces the base plan exactly.
+        let lax = BlockCachePolicy { budget: 100 };
+        assert_eq!(lax.plan(25, &base), base.actions(25));
+    }
+
+    #[test]
+    fn stability_skeleton_is_executable_and_beats_pas_macs_even_fully_overridden() {
+        let policy = StabilityPolicy { threshold_milli: DEFAULT_STABILITY_MILLI };
+        for steps in [1, 2, 3, 7, 25, 50] {
+            let plan = policy.plan(steps, &SamplingPlan::Full);
+            assert_eq!(plan.len(), steps);
+            assert!(plan_is_executable(&plan), "{steps} steps");
+        }
+        // The constructive MAC bound at the bench's reference length:
+        // even if the override fires at every opportunity, executed
+        // Fulls stay below pas25(4)'s count at the same reuse level.
+        let steps = 25;
+        let pas_fulls = fulls(&SamplingPlan::Pas(PasConfig::pas25(4)).actions(steps));
+        let worst_case_fulls =
+            STABILITY_WARMUP + (steps - STABILITY_WARMUP) / STABILITY_OVERRIDE_SPACING;
+        assert!(
+            worst_case_fulls < pas_fulls,
+            "worst-case stability fulls {worst_case_fulls} must beat PAS {pas_fulls}"
+        );
+        // And the static skeleton alone is sparser still.
+        assert!(fulls(&policy.plan(steps, &SamplingPlan::Full)) < pas_fulls);
+    }
+
+    #[test]
+    fn stability_overrides_are_rate_limited_and_threshold_gated() {
+        let policy = StabilityPolicy { threshold_milli: 250 };
+        let unstable = TrajectoryStats {
+            ewma_delta: 1.0,
+            last_delta: 1.0,
+            steps_since_full: STABILITY_OVERRIDE_SPACING,
+        };
+        assert_eq!(
+            policy.on_step_decision(10, &unstable),
+            StepDecision::Override(StepAction::Full)
+        );
+        // Too soon after a Full: rate limit holds regardless of EWMA.
+        let recent = TrajectoryStats { steps_since_full: 1, ..unstable };
+        assert_eq!(policy.on_step_decision(10, &recent), StepDecision::Planned);
+        // Stable trajectory: no refresh.
+        let calm = TrajectoryStats { ewma_delta: 0.01, last_delta: 0.01, steps_since_full: 10 };
+        assert_eq!(policy.on_step_decision(10, &calm), StepDecision::Planned);
+        // Warmup steps are already Full — never overridden.
+        assert_eq!(policy.on_step_decision(0, &unstable), StepDecision::Planned);
+    }
+
+    #[test]
+    fn trajectory_update_tracks_ewma_and_full_distance() {
+        let mut s = TrajectoryStats::default();
+        update_trajectory(&mut s, 0.4, true);
+        assert_eq!(s.steps_since_full, 0);
+        assert!((s.ewma_delta - 0.4).abs() < 1e-12, "first sample seeds the EWMA");
+        update_trajectory(&mut s, 0.2, false);
+        assert_eq!(s.steps_since_full, 1);
+        assert!((s.ewma_delta - 0.3).abs() < 1e-12);
+        assert!((s.last_delta - 0.2).abs() < 1e-12);
+        update_trajectory(&mut s, 0.1, false);
+        assert_eq!(s.steps_since_full, 2);
+        assert!((s.ewma_delta - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn text_precision_classifies_prompts_deterministically() {
+        let policy = TextPrecisionPolicy;
+        // Simple single-object prompt: aggressive quantization.
+        assert_eq!(policy.quant_override("red circle x4 y4"), Some(QuantScheme::w8a8()));
+        // Medium prompt: fp16.
+        assert_eq!(
+            policy.quant_override("red circle x4 y4 blue square"),
+            Some(QuantScheme::fp16())
+        );
+        // Long multi-object prompt: sensitive, full precision.
+        assert_eq!(
+            policy.quant_override("red circle x4 y4 blue square x11 y11 green stripe x8 y8"),
+            None
+        );
+        // Plan passes through untouched.
+        let base = SamplingPlan::Pas(PasConfig::pas25(4));
+        assert_eq!(policy.plan(25, &base), base.actions(25));
+    }
+
+    #[test]
+    fn labels_are_distinct_across_the_registry_and_parameterizations() {
+        let mut labels: Vec<String> = PolicySpec::all().iter().map(PolicySpec::label).collect();
+        labels.push(PolicySpec::BlockCache { budget: 9 }.label());
+        labels.push(PolicySpec::Stability { threshold_milli: 9 }.label());
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len(), "labels must be collision-free: {labels:?}");
+    }
+}

@@ -88,9 +88,9 @@ pub struct SubmitOptions {
     /// earliest-deadline-first.
     pub deadline: Option<Duration>,
     /// Whether the server may rewrite this request to a cheaper PAS
-    /// plan / quant scheme under brownout (on by default). Callers who
-    /// need full quality no matter the load set this to `false`; the
-    /// request then competes for capacity as-is.
+    /// plan, quant scheme or approximation policy under brownout (on by
+    /// default). Callers who need full quality no matter the load set
+    /// this to `false`; the request then competes for capacity as-is.
     pub degradable: bool,
 }
 

@@ -28,6 +28,16 @@
 //!   back-to-back submissions with no inter-arrival gap.
 //! * `steps` — `|`-separated step-count choices, drawn uniformly.
 //! * `quant` — probability in `[0, 1]` that a request asks for w8a8.
+//! * `mix` — `+`-separated weighted choice tokens `name[*weight]`
+//!   (weight defaults to 1). Each token is classified by name into one
+//!   of three axes: sampler (`ddim`, `pndm`), quant scheme (`fp32`
+//!   meaning "no scheme", `fp16`, `w8a8`, `w4a8`) or approximation
+//!   policy (any `PolicySpec` label, e.g. `pas`, `stability:250`).
+//!   Every axis with at least one token gets one weighted draw per
+//!   request, appended *after* the legacy draws so specs without a
+//!   `mix=` clause replay byte-identical sequences. A quant axis
+//!   overrides the `quant=` bernoulli. Example:
+//!   `poisson:rate=200,n=40,mix=pas*3+stability+w8a8`.
 //! * `cooldown` — closed-loop requests appended after the main phase
 //!   drains; under brownout these low-pressure submissions walk the
 //!   pressure EWMA back below the exit threshold (hysteretic recovery).
@@ -36,7 +46,8 @@ use std::time::{Duration, Instant};
 
 use super::api::{Priority, SubmitOptions};
 use super::Client;
-use crate::coordinator::{GenRequest, SdError};
+use crate::coordinator::{GenRequest, SamplerKind, SdError};
+use crate::policy::PolicySpec;
 use crate::quant::QuantScheme;
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
@@ -65,8 +76,82 @@ pub struct LoadSpec {
     pub steps: Vec<usize>,
     /// Probability that a request carries a w8a8 quant scheme.
     pub quant_mix: f64,
+    /// Weighted sampler/quant/policy distributions (`mix=` clause).
+    pub mix: MixSpec,
     /// Closed-loop requests appended after the main phase drains.
     pub cooldown: usize,
+}
+
+/// Weighted per-axis choice distributions from the `mix=` clause. An
+/// empty axis keeps the legacy behaviour (no extra draw for it).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MixSpec {
+    /// Weighted sampler choices.
+    pub samplers: Vec<(SamplerKind, f64)>,
+    /// Weighted quant choices; `None` is the explicit "no scheme"
+    /// class (spelled `fp32` in the spec).
+    pub quants: Vec<(Option<QuantScheme>, f64)>,
+    /// Weighted approximation-policy choices.
+    pub policies: Vec<(PolicySpec, f64)>,
+}
+
+impl MixSpec {
+    pub fn is_empty(&self) -> bool {
+        self.samplers.is_empty() && self.quants.is_empty() && self.policies.is_empty()
+    }
+
+    /// Parse the `mix=` value: `name[*weight]` tokens joined by `+`
+    /// (`*` separates the weight because policy labels contain `:`).
+    fn parse(val: &str) -> Result<MixSpec, String> {
+        let mut mix = MixSpec::default();
+        for token in val.split('+').map(str::trim).filter(|t| !t.is_empty()) {
+            let (name, weight) = match token.rsplit_once('*') {
+                Some((n, w)) => {
+                    let w: f64 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("load spec: bad mix weight in '{token}'"))?;
+                    if !(w.is_finite() && w > 0.0) {
+                        return Err(format!("load spec: mix weight must be positive in '{token}'"));
+                    }
+                    (n.trim(), w)
+                }
+                None => (token, 1.0),
+            };
+            if let Ok(kind) = name.parse::<SamplerKind>() {
+                mix.samplers.push((kind, weight));
+            } else if name == "fp32" {
+                mix.quants.push((None, weight));
+            } else if let Some(scheme) = QuantScheme::parse(name) {
+                mix.quants.push((Some(scheme), weight));
+            } else if let Some(policy) = PolicySpec::parse(name) {
+                mix.policies.push((policy, weight));
+            } else {
+                return Err(format!(
+                    "load spec: unknown mix token '{name}' (expected a sampler, \
+                     quant scheme or policy name)"
+                ));
+            }
+        }
+        if mix.is_empty() {
+            return Err("load spec: mix= needs at least one token".into());
+        }
+        Ok(mix)
+    }
+}
+
+/// One weighted draw: total-weight inverse-CDF walk, deterministic for
+/// a given rng state and item list.
+fn weighted<'a, T>(rng: &mut Pcg32, items: &'a [(T, f64)]) -> &'a T {
+    let total: f64 = items.iter().map(|(_, w)| w).sum();
+    let mut u = rng.next_f64() * total;
+    for (v, w) in items {
+        u -= w;
+        if u <= 0.0 {
+            return v;
+        }
+    }
+    &items[items.len() - 1].0
 }
 
 impl Default for LoadSpec {
@@ -77,6 +162,7 @@ impl Default for LoadSpec {
             seed: 0,
             steps: vec![3],
             quant_mix: 0.0,
+            mix: MixSpec::default(),
             cooldown: 0,
         }
     }
@@ -140,6 +226,7 @@ impl LoadSpec {
                     }
                     spec.quant_mix = p;
                 }
+                "mix" => spec.mix = MixSpec::parse(val)?,
                 other => return Err(format!("load spec: unknown key '{other}'")),
             }
         }
@@ -182,14 +269,23 @@ pub struct LoadReport {
     pub cancelled: u64,
     /// Jobs that ended with a deadline miss.
     pub deadline_miss: u64,
+    /// Completed jobs per approximation-policy id, sorted by label —
+    /// the per-policy lines the serve report prints under a policy mix.
+    pub ok_by_policy: Vec<(String, u64)>,
     /// Wall-clock seconds for the whole run (main phase + cooldown).
     pub wall_s: f64,
 }
 
 impl LoadReport {
-    fn record(&mut self, outcome: &Result<(), SdError>) {
+    fn record(&mut self, policy_label: &str, outcome: &Result<(), SdError>) {
         match outcome {
-            Ok(()) => self.ok += 1,
+            Ok(()) => {
+                self.ok += 1;
+                match self.ok_by_policy.binary_search_by(|(l, _)| l.as_str().cmp(policy_label)) {
+                    Ok(i) => self.ok_by_policy[i].1 += 1,
+                    Err(i) => self.ok_by_policy.insert(i, (policy_label.to_string(), 1)),
+                }
+            }
             Err(SdError::Cancelled) => self.cancelled += 1,
             Err(SdError::DeadlineExceeded) => self.deadline_miss += 1,
             Err(_) => self.failed += 1,
@@ -213,6 +309,15 @@ impl LoadReport {
             ("rejected", Json::Num(self.rejected as f64)),
             ("cancelled", Json::Num(self.cancelled as f64)),
             ("deadline_miss", Json::Num(self.deadline_miss as f64)),
+            (
+                "ok_by_policy",
+                Json::obj(
+                    self.ok_by_policy
+                        .iter()
+                        .map(|(label, n)| (label.as_str(), Json::Num(*n as f64)))
+                        .collect(),
+                ),
+            ),
             ("wall_s", Json::Num(self.wall_s)),
             ("goodput", Json::Num(self.goodput())),
         ])
@@ -230,12 +335,11 @@ pub fn request_at(spec: &LoadSpec, i: usize) -> (GenRequest, SubmitOptions) {
     let steps = *rng.choose(&spec.steps);
     let mut b = GenRequest::builder(&format!("load prompt {i}"), spec.seed.wrapping_add(i as u64))
         .steps(steps);
-    if rng.bernoulli(spec.quant_mix) {
+    // The legacy bernoulli is always *drawn* (stream stability) but a
+    // quant axis in the mix clause overrides what it would have set.
+    if rng.bernoulli(spec.quant_mix) && spec.mix.quants.is_empty() {
         b = b.quant(QuantScheme::w8a8());
     }
-    // GenRequest::builder validates; the spec only produces valid
-    // combinations (steps >= 1), so this cannot fail.
-    let req = b.build().expect("loadgen produced an invalid request");
     let u = rng.next_f64();
     let priority = if u < 0.2 {
         Priority::High
@@ -244,6 +348,23 @@ pub fn request_at(spec: &LoadSpec, i: usize) -> (GenRequest, SubmitOptions) {
     } else {
         Priority::Low
     };
+    // Mix draws append strictly after the legacy draws (steps, quant
+    // bernoulli, priority): a spec without a mix= clause replays the
+    // exact pre-mix byte sequence.
+    if !spec.mix.samplers.is_empty() {
+        b = b.sampler(*weighted(&mut rng, &spec.mix.samplers));
+    }
+    if !spec.mix.quants.is_empty() {
+        if let Some(scheme) = *weighted(&mut rng, &spec.mix.quants) {
+            b = b.quant(scheme);
+        }
+    }
+    if !spec.mix.policies.is_empty() {
+        b = b.policy(*weighted(&mut rng, &spec.mix.policies));
+    }
+    // GenRequest::builder validates; the spec only produces valid
+    // combinations (steps >= 1), so this cannot fail.
+    let req = b.build().expect("loadgen produced an invalid request");
     (req, SubmitOptions { priority, ..SubmitOptions::default() })
 }
 
@@ -276,11 +397,12 @@ pub fn run_load(client: &Client, spec: &LoadSpec) -> LoadReport {
         let burst_len = burst_len.min(spec.n - i);
         for _ in 0..burst_len {
             let (req, opts) = request_at(spec, i);
+            let policy = req.policy.label();
             report.submitted += 1;
             match client.submit_with(req, opts) {
                 Ok(handle) => match spec.arrival {
-                    Arrival::Closed => report.record(&handle.wait().map(|_| ())),
-                    _ => pending.push(handle),
+                    Arrival::Closed => report.record(&policy, &handle.wait().map(|_| ())),
+                    _ => pending.push((policy, handle)),
                 },
                 Err(_) => report.rejected += 1,
             }
@@ -293,16 +415,17 @@ pub fn run_load(client: &Client, spec: &LoadSpec) -> LoadReport {
             _ => {}
         }
     }
-    for handle in pending {
-        report.record(&handle.wait().map(|_| ()));
+    for (policy, handle) in pending {
+        report.record(&policy, &handle.wait().map(|_| ()));
     }
     // Closed-loop tail: low-pressure traffic that lets a browned-out
     // server observe falling queue depth and disengage.
     for j in 0..spec.cooldown {
         let (req, opts) = request_at(spec, spec.n + j);
+        let policy = req.policy.label();
         report.submitted += 1;
         match client.submit_with(req, opts) {
-            Ok(handle) => report.record(&handle.wait().map(|_| ())),
+            Ok(handle) => report.record(&policy, &handle.wait().map(|_| ())),
             Err(_) => report.rejected += 1,
         }
     }
@@ -386,17 +509,106 @@ mod tests {
     #[test]
     fn report_tallies_and_goodput() {
         let mut r = LoadReport::default();
-        r.record(&Ok(()));
-        r.record(&Ok(()));
-        r.record(&Err(SdError::Cancelled));
-        r.record(&Err(SdError::DeadlineExceeded));
-        r.record(&Err(SdError::runtime("boom")));
+        r.record("pas", &Ok(()));
+        r.record("stability:500", &Ok(()));
+        r.record("pas", &Err(SdError::Cancelled));
+        r.record("pas", &Err(SdError::DeadlineExceeded));
+        r.record("pas", &Err(SdError::runtime("boom")));
+        r.record("pas", &Ok(()));
         r.wall_s = 2.0;
-        assert_eq!((r.ok, r.cancelled, r.deadline_miss, r.failed), (2, 1, 1, 1));
-        assert!((r.goodput() - 1.0).abs() < 1e-12);
+        assert_eq!((r.ok, r.cancelled, r.deadline_miss, r.failed), (3, 1, 1, 1));
+        // Sorted by label, only terminal-Ok outcomes counted.
+        assert_eq!(
+            r.ok_by_policy,
+            vec![("pas".to_string(), 2), ("stability:500".to_string(), 1)]
+        );
+        assert!((r.goodput() - 1.5).abs() < 1e-12);
         let parsed = Json::parse(&r.to_json().to_string()).unwrap();
-        assert_eq!(parsed.get_usize("ok"), Some(2));
+        assert_eq!(parsed.get_usize("ok"), Some(3));
         assert_eq!(parsed.get_usize("failed"), Some(1));
         assert!(parsed.get("goodput").is_some());
+        let by_policy = parsed.get("ok_by_policy").expect("ok_by_policy object");
+        assert_eq!(by_policy.get_usize("pas"), Some(2));
+        assert_eq!(by_policy.get_usize("stability:500"), Some(1));
+    }
+
+    #[test]
+    fn parse_accepts_mix_clause_on_every_axis() {
+        let spec =
+            LoadSpec::parse("poisson:rate=200,n=40,mix=pas*3+stability+w8a8+fp32*2+ddim").unwrap();
+        assert_eq!(spec.mix.samplers, vec![(SamplerKind::Ddim, 1.0)]);
+        assert_eq!(
+            spec.mix.quants,
+            vec![(Some(QuantScheme::w8a8()), 1.0), (None, 2.0)]
+        );
+        assert_eq!(
+            spec.mix.policies,
+            vec![
+                (PolicySpec::Pas, 3.0),
+                (
+                    PolicySpec::Stability { threshold_milli: crate::policy::DEFAULT_STABILITY_MILLI },
+                    1.0
+                ),
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_mix_clauses() {
+        for bad in [
+            "closed:mix=euler",          // unknown token on every axis
+            "closed:mix=pas*0",          // non-positive weight
+            "closed:mix=pas*nan",        // non-finite weight
+            "closed:mix=pas*x",          // unparseable weight
+            "closed:mix=",               // empty clause
+            "closed:mix=block-cache:0",  // valid-shaped but rejected policy parameterization
+        ] {
+            assert!(LoadSpec::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn mix_draws_are_deterministic_and_cover_every_class() {
+        let spec = LoadSpec::parse(
+            "closed:n=64,seed=9,steps=3,mix=pas*2+stability+block-cache+w8a8+fp32+ddim+pndm",
+        )
+        .unwrap();
+        let mut policies = std::collections::BTreeSet::new();
+        let mut samplers = std::collections::BTreeSet::new();
+        let mut quants = 0usize;
+        for i in 0..spec.n {
+            let (a, oa) = request_at(&spec, i);
+            let (b, ob) = request_at(&spec, i);
+            assert_eq!(a.batch_key(), b.batch_key(), "request {i} not replayable");
+            assert_eq!((a.prompt.clone(), a.seed), (b.prompt, b.seed));
+            assert_eq!(oa.priority, ob.priority);
+            policies.insert(a.policy.label());
+            samplers.insert(a.sampler);
+            quants += a.quant.is_some() as usize;
+            a.validate().unwrap();
+        }
+        assert_eq!(policies.len(), 3, "policy mix missing a class: {policies:?}");
+        assert_eq!(samplers.len(), 2, "sampler mix missing a class: {samplers:?}");
+        assert!(quants > 0 && quants < spec.n, "quant mix degenerate: {quants}");
+    }
+
+    #[test]
+    fn specs_without_mix_replay_the_pre_mix_sequence() {
+        // The mix draws append after the legacy draws, so a mix-free
+        // spec must produce the same requests the pre-mix engine did:
+        // default sampler, default policy, quant from the bernoulli.
+        let spec = LoadSpec::parse("poisson:rate=100,n=32,seed=11,steps=3|5,quant=0.5").unwrap();
+        for i in 0..spec.n {
+            let (req, _) = request_at(&spec, i);
+            assert_eq!(req.sampler, SamplerKind::default());
+            assert_eq!(req.policy, PolicySpec::Pas);
+        }
+        // And a quant axis overrides the bernoulli entirely.
+        let forced =
+            LoadSpec::parse("poisson:rate=100,n=32,seed=11,steps=3|5,quant=1.0,mix=fp32").unwrap();
+        for i in 0..forced.n {
+            let (req, _) = request_at(&forced, i);
+            assert_eq!(req.quant, None, "mix quant axis must override quant= at {i}");
+        }
     }
 }

@@ -41,8 +41,9 @@
 //! attempt budget and the job's own deadline); straggling groups can be
 //! hedged once; Low-priority admissions are shed under sustained queue
 //! pressure; and brownout mode degrades admission-time requests to
-//! cheaper plans — always *before* cache keying, so degraded results
-//! never answer a full-quality lookup. Whatever combination of primary,
+//! cheaper plans, quant schemes and approximation policies — always
+//! *before* cache keying, so degraded results never answer a
+//! full-quality lookup. Whatever combination of primary,
 //! retry and hedge attempts runs, a per-job claim flag guarantees the
 //! standing invariant: exactly one terminal event per submitted job.
 
@@ -130,10 +131,15 @@ impl BatchItem for Job {
     /// The request's batch key plus a solo discriminator: retried jobs
     /// get a key private to their id (the `+ 1` keeps slot 0 for the
     /// shared key space), so they can never re-batch with fresh work.
+    /// Online-policy jobs (trajectory-driven step decisions) are solo
+    /// too: a multi-lane trajectory would make one lane's latent depend
+    /// on its batch mates, breaking the request-cache promise that a
+    /// result is a function of the request alone.
     type Key = (BatchKey, u64);
 
     fn key(&self) -> (BatchKey, u64) {
-        (self.req.batch_key(), if self.solo { self.id.0 + 1 } else { 0 })
+        let solo = self.solo || self.req.policy.online();
+        (self.req.batch_key(), if solo { self.id.0 + 1 } else { 0 })
     }
 
     fn priority(&self) -> Priority {
@@ -1184,6 +1190,29 @@ mod tests {
         // guarding against the discriminator accidentally always-on.
         let (a, _rx_a) = job("red circle x1 y1", 1);
         let (b, _rx_b) = job("red circle x1 y1", 2);
+        let (batches, _, _) = pump(vec![a, b], Duration::from_millis(0));
+        assert_eq!(batches.iter().map(Vec::len).max(), Some(2));
+    }
+
+    #[test]
+    fn online_policy_jobs_dispatch_solo() {
+        // Trajectory-driven policies make batch-wide step decisions, so
+        // two identical stability requests must never share a batch —
+        // each lane's latent has to stay a function of its own request.
+        use crate::policy::PolicySpec;
+        let (mut a, _rx_a) = job("red circle x1 y1", 1);
+        let (mut b, _rx_b) = job("red circle x1 y1", 2);
+        a.req.policy = PolicySpec::Stability { threshold_milli: 250 };
+        b.req.policy = PolicySpec::Stability { threshold_milli: 250 };
+        let (batches, _, _) = pump(vec![a, b], Duration::from_millis(0));
+        assert_eq!(batches.len(), 2, "online-policy jobs run solo");
+        assert!(batches.iter().all(|b| b.len() == 1));
+
+        // Plan-only policies keep normal batching.
+        let (mut a, _rx_a) = job("red circle x1 y1", 1);
+        let (mut b, _rx_b) = job("red circle x1 y1", 2);
+        a.req.policy = PolicySpec::BlockCache { budget: 3 };
+        b.req.policy = PolicySpec::BlockCache { budget: 3 };
         let (batches, _, _) = pump(vec![a, b], Duration::from_millis(0));
         assert_eq!(batches.iter().map(Vec::len).max(), Some(2));
     }

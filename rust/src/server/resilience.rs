@@ -19,11 +19,14 @@
 //!   deadline-bearing traffic.
 //! - **Brownout** ([`PressureState`], [`degrade_request`]): under the
 //!   same pressure signal, *degradable* requests are rewritten at
-//!   admission to a cheaper PAS plan / quant scheme. The rewrite happens
-//!   **before** cache lookup and enqueue, so degraded results key under
-//!   the degraded request — a brownout output can never satisfy a
-//!   full-quality cache lookup (standing invariant). Engagement is
-//!   hysteretic: enter at `brownout_enter`, leave at `brownout_exit`.
+//!   admission to a cheaper PAS plan / quant scheme / approximation
+//!   policy (default-policy requests swap to the sparser online
+//!   stability policy, which keys under its own policy id). The rewrite
+//!   happens **before** cache lookup and enqueue, so degraded results
+//!   key under the degraded request — a brownout output can never
+//!   satisfy a full-quality cache lookup (standing invariant).
+//!   Engagement is hysteretic: enter at `brownout_enter`, leave at
+//!   `brownout_exit`.
 //!
 //! Everything here is pure policy over observable state (queue depth,
 //! attempt counts, error classification) — no clocks are consulted except
@@ -36,6 +39,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{GenRequest, SdError};
 use crate::pas::{PasConfig, SamplingPlan};
+use crate::policy::PolicySpec;
 use crate::quant::QuantScheme;
 
 // ------------------------------------------------------------------ policy
@@ -169,23 +173,37 @@ impl Default for PressureState {
 
 // ---------------------------------------------------------------- brownout
 
+/// Stability threshold (thousandths) used for brownout policy swaps —
+/// more lenient than the registry default, so browned-out runs rarely
+/// spend an override Full and stay close to the sparse static skeleton.
+pub const BROWNOUT_STABILITY_MILLI: u32 = 500;
+
 /// Rewrite a request into its brownout (degraded) form, or `None` when
 /// no cheaper valid variant exists. Applied at admission *before* plan
 /// resolution, cache lookup and enqueue, so the degraded request carries
 /// its own batch key and cache key end to end.
 ///
-/// Degradations, both applied when available:
+/// Degradations, all applied when available:
 /// - `Full`/`Auto` plans with enough steps switch to a sparse PAS config
 ///   (front-loaded full steps, partial refinement) — fewer full U-Net
 ///   invocations per image.
 /// - Unquantised requests pick up `w8a8` fake-quant — cheaper arithmetic
 ///   under the paper's mixed-precision emulation.
+/// - Default-policy requests swap to the online stability policy at a
+///   lenient threshold ([`BROWNOUT_STABILITY_MILLI`]) — a sparser step
+///   schedule than any calibrated plan, and the swapped spec keys the
+///   degraded result under its own policy id. Non-default policies are
+///   an explicit user choice and stay untouched.
 ///
 /// The candidate is re-validated; anything invalid falls back to `None`
 /// rather than admitting a request that would fail downstream.
 pub fn degrade_request(req: &GenRequest) -> Option<GenRequest> {
     let mut out = req.clone();
     let mut changed = false;
+    if out.policy == PolicySpec::Pas {
+        out.policy = PolicySpec::Stability { threshold_milli: BROWNOUT_STABILITY_MILLI };
+        changed = true;
+    }
     if matches!(out.plan, SamplingPlan::Full | SamplingPlan::Auto) && out.steps >= 6 {
         let t_sketch = (out.steps / 2).max(3);
         out.plan = SamplingPlan::Pas(PasConfig {
@@ -377,12 +395,27 @@ mod tests {
         let deg = degrade_request(&req).expect("degradable");
         assert!(matches!(deg.plan, SamplingPlan::Pas(_)), "plan degraded to PAS");
         assert!(deg.quant.is_some(), "picked up fake-quant");
+        assert_eq!(
+            deg.policy,
+            PolicySpec::Stability { threshold_milli: BROWNOUT_STABILITY_MILLI },
+            "default policy swapped to lenient stability"
+        );
         assert!(deg.validate().is_ok());
         // Batch/cache keys must differ so degraded results key separately.
         assert_ne!(deg.batch_key(), req.batch_key());
         // Degrading is idempotent-ish: the degraded form has nothing
-        // further to strip (plan already PAS, quant already set).
+        // further to strip (plan already PAS, quant already set, policy
+        // already non-default).
         assert!(degrade_request(&deg).is_none());
+    }
+
+    #[test]
+    fn degrade_leaves_explicit_policy_choices_alone() {
+        let mut req = GenRequest::builder("pinned", 7).steps(10).build().unwrap();
+        req.policy = PolicySpec::BlockCache { budget: 2 };
+        let deg = degrade_request(&req).expect("plan/quant still degradable");
+        assert_eq!(deg.policy, req.policy, "a user-chosen policy is never swapped");
+        assert!(deg.quant.is_some());
     }
 
     #[test]

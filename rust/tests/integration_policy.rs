@@ -1,0 +1,208 @@
+//! Integration: the approximation-policy seam (`sd_acc::policy`).
+//!
+//! All sim-backed (no artifacts needed). Covered here:
+//!
+//! - **PasPolicy parity**: the default policy replays the pre-seam
+//!   semantics — the executed action sequence IS `plan.actions(steps)`
+//!   verbatim, for Full and PAS plans, and runs are bit-reproducible.
+//! - **Per-policy reproducibility**: every registry policy generates
+//!   finite, bit-reproducible latents on the sim backend.
+//! - **Cross-policy cache isolation**: the same prompt/seed/plan under
+//!   two different policies never shares a request-cache entry.
+//! - **Brownout poisoning**: a brownout-degraded request (which swaps
+//!   in the lenient StabilityPolicy) caches under its own key and can
+//!   never satisfy the original full-quality lookup.
+//! - **No calibration cold-start**: StabilityPolicy generates against
+//!   a fresh artifacts dir with no calibration.json anywhere.
+
+use std::sync::OnceLock;
+
+use sd_acc::cache::StoreConfig;
+use sd_acc::coordinator::{Coordinator, GenRequest, SamplerKind};
+use sd_acc::pas::plan::{PasConfig, SamplingPlan, StepAction};
+use sd_acc::policy::PolicySpec;
+use sd_acc::runtime::{BackendKind, RuntimeService, Tensor};
+use sd_acc::server::resilience::{degrade_request, BROWNOUT_STABILITY_MILLI};
+
+static SIM: OnceLock<RuntimeService> = OnceLock::new();
+
+/// A sim-backed coordinator over a directory with no artifacts — and
+/// therefore no calibration.json: every policy here runs cold.
+fn sim_coord() -> Coordinator {
+    let svc = SIM.get_or_init(|| {
+        let dir = std::env::temp_dir().join("sdacc_policy_suite_no_artifacts");
+        let _ = std::fs::remove_dir_all(&dir);
+        RuntimeService::start_with(BackendKind::Sim, &dir).expect("sim backend starts")
+    });
+    Coordinator::new(svc.handle())
+}
+
+fn req(prompt: &str, seed: u64, steps: usize) -> GenRequest {
+    let mut r = GenRequest::new(prompt, seed);
+    r.steps = steps;
+    r.sampler = SamplerKind::Ddim;
+    r
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data().iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sdacc_itpolicy_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The acceptance criterion: the default `PasPolicy` is a transparent
+/// pass-through — the executed schedule is exactly `plan.actions(steps)`
+/// for both a Full and a PAS plan, and two runs agree bit for bit.
+#[test]
+fn pas_policy_replays_the_pre_seam_schedule_bit_for_bit() {
+    let coord = sim_coord();
+
+    let full = req("red circle x4 y4 blue square x11 y11", 4242, 8);
+    assert_eq!(full.policy, PolicySpec::Pas, "Pas is the default");
+    let a = coord.generate_one(&full).unwrap();
+    let b = coord.generate_one(&full).unwrap();
+    assert_eq!(a.stats.actions, full.plan.actions(full.steps), "Full plan executed verbatim");
+    assert_eq!(bits(&a.latent), bits(&b.latent), "default-policy runs are bit-reproducible");
+
+    let mut pas = req("green stripe x8 y8", 77, 12);
+    pas.plan = SamplingPlan::Pas(PasConfig {
+        t_sketch: 6,
+        t_complete: 3,
+        t_sparse: 4,
+        l_sketch: 2,
+        l_refine: 2,
+    });
+    let out = coord.generate_one(&pas).unwrap();
+    assert_eq!(
+        out.stats.actions,
+        pas.plan.actions(pas.steps),
+        "PasPolicy must not rewrite a PAS schedule"
+    );
+    assert!(out.stats.mac_reduction > 1.0, "PAS plan actually skipped work");
+    assert!(out.latent.data().iter().all(|x| x.is_finite()));
+}
+
+/// Every policy in the registry generates on the sim backend and is
+/// bit-reproducible — including the online StabilityPolicy, whose
+/// overrides are a pure function of the deterministic eps trajectory.
+#[test]
+fn every_registry_policy_is_bit_reproducible_on_sim() {
+    let coord = sim_coord();
+    for spec in PolicySpec::all() {
+        let mut r = req("yellow circle x12 y3", 900, 8);
+        r.policy = spec;
+        let a = coord.generate_one(&r).unwrap();
+        let b = coord.generate_one(&r).unwrap();
+        assert_eq!(
+            bits(&a.latent),
+            bits(&b.latent),
+            "policy {} not bit-reproducible",
+            spec.label()
+        );
+        assert!(
+            a.latent.data().iter().all(|x| x.is_finite()),
+            "policy {} produced non-finite latents",
+            spec.label()
+        );
+        assert_eq!(a.stats.actions.len(), r.steps, "one executed action per step");
+        assert!(
+            matches!(a.stats.actions[0], StepAction::Full),
+            "policy {} must open with a full step",
+            spec.label()
+        );
+    }
+}
+
+/// Two policies over the same prompt/seed/plan must address disjoint
+/// request-cache cells: a latent produced under one policy's
+/// approximations can never be served as another's.
+#[test]
+fn cross_policy_results_never_share_a_cache_entry() {
+    let coord = sim_coord();
+    let dir = tmp_dir("xpolicy");
+    let cache = coord.open_cache(StoreConfig::new(&dir)).unwrap();
+
+    let mut base = req("magenta circle x6 y6", 555, 8);
+    let mut stab = base.clone();
+    stab.policy = PolicySpec::Stability { threshold_milli: 250 };
+
+    let base_out = coord.generate_one(&base).unwrap();
+    cache.put_result(&base, &base_out).unwrap();
+    assert!(
+        cache.get_result(&stab).is_none(),
+        "a PasPolicy latent must not satisfy a StabilityPolicy lookup"
+    );
+
+    let stab_out = coord.generate_one(&stab).unwrap();
+    cache.put_result(&stab, &stab_out).unwrap();
+    // Both entries coexist; each lookup routes to its own policy's bits.
+    let hit_base = cache.get_result(&base).expect("pas entry still present");
+    let hit_stab = cache.get_result(&stab).expect("stability entry present");
+    assert_eq!(bits(&hit_base.latent), bits(&base_out.latent));
+    assert_eq!(bits(&hit_stab.latent), bits(&stab_out.latent));
+
+    // Parameterization is part of the identity too.
+    base.policy = PolicySpec::BlockCache { budget: 2 };
+    let b2 = base.clone();
+    base.policy = PolicySpec::BlockCache { budget: 5 };
+    assert!(cache.get_result(&b2).is_none() && cache.get_result(&base).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Brownout degrades a request *including* its policy (Pas -> lenient
+/// Stability), so the degraded result keys differently and the
+/// full-quality cell stays clean — the no-poisoning invariant.
+#[test]
+fn brownout_degraded_results_never_answer_the_full_quality_key() {
+    let coord = sim_coord();
+    let dir = tmp_dir("brownout");
+    let cache = coord.open_cache(StoreConfig::new(&dir)).unwrap();
+
+    let original = req("cyan square x2 y5", 1234, 16);
+    let degraded = degrade_request(&original).expect("a 16-step Full request is degradable");
+    assert_eq!(
+        degraded.policy,
+        PolicySpec::Stability { threshold_milli: BROWNOUT_STABILITY_MILLI },
+        "brownout swaps the default policy for the lenient stability one"
+    );
+
+    let deg_out = coord.generate_one(&degraded).unwrap();
+    cache.put_result(&degraded, &deg_out).unwrap();
+    assert!(
+        cache.get_result(&original).is_none(),
+        "degraded bits must never surface under the full-quality key"
+    );
+    assert!(cache.get_result(&degraded).is_some(), "degraded cell serves repeat brownout traffic");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// StabilityPolicy's whole point: it adapts online and needs no
+/// calibration artifact. The suite's artifacts dir doesn't even exist,
+/// so there is provably no calibration.json to read — and it still
+/// skips work relative to the all-full baseline.
+#[test]
+fn stability_policy_generates_cold_without_calibration() {
+    let coord = sim_coord();
+    let dir = std::env::temp_dir().join("sdacc_policy_suite_no_artifacts");
+    assert!(!dir.join("calibration.json").exists(), "suite precondition: no calibration file");
+
+    let mut r = req("red circle x4 y4", 31, 25);
+    r.policy = PolicySpec::Stability { threshold_milli: 250 };
+    let out = coord.generate_one(&r).unwrap();
+    assert!(out.latent.data().iter().all(|x| x.is_finite()));
+    assert!(
+        out.stats.mac_reduction > 1.0,
+        "stability guidance skipped work uncalibrated (mac x{:.2})",
+        out.stats.mac_reduction
+    );
+    assert!(
+        (out.stats.full_steps() as usize) < r.steps,
+        "some steps ran partial ({} full / {})",
+        out.stats.full_steps(),
+        r.steps
+    );
+}
